@@ -1,0 +1,71 @@
+//! Regenerates **Fig. 8**: perceived total throughput of the §4.2
+//! PIConGPU→GAPD pipeline for the three distribution strategies of §4.3
+//! over both transports:
+//!
+//!   (1) by hostname (Binpacking within the node),
+//!   (2) Binpacking only (topology-blind),
+//!   (3) dataset slicing into hyperslabs,
+//!
+//! each x {RDMA, sockets}, with sockets swept only to 256 nodes (as in
+//! the paper). Three repetitions per cell.
+
+use openpmd_stream::bench::fig8::{simulate, Fig8Params};
+use openpmd_stream::bench::Table;
+use openpmd_stream::cluster::network::TransportKind;
+use openpmd_stream::pipeline::metrics::OpKind;
+use openpmd_stream::util::bytes::fmt_rate;
+use openpmd_stream::util::stats;
+
+fn main() {
+    let strategies: [(&str, &str); 3] = [
+        ("hostname", "(1) by hostname"),
+        ("binpacking", "(2) binpacking"),
+        ("hyperslabs", "(3) hyperslabs"),
+    ];
+    let mut t = Table::new(
+        "Fig 8: perceived total throughput, strategies x transports \
+         (mean over 3 reps)",
+        &["nodes", "transport", "strategy", "throughput", "per-writer"],
+    );
+    for transport in [TransportKind::Rdma, TransportKind::Tcp] {
+        let sweep: &[usize] = match transport {
+            TransportKind::Rdma => &[64, 128, 256, 512],
+            TransportKind::Tcp => &[64, 128, 256], // paper stops at 256
+        };
+        for &nodes in sweep {
+            for (name, label) in strategies {
+                let mut rates = Vec::new();
+                let mut per_writer = Vec::new();
+                for rep in 0..3 {
+                    let run = simulate(&Fig8Params {
+                        nodes,
+                        transport,
+                        strategy: name.into(),
+                        steps: 4,
+                        seed: 3000 + rep,
+                        ..Default::default()
+                    });
+                    let rep =
+                        run.store_metrics.report(OpKind::Store, run.writers);
+                    rates.push(rep.aggregate_rate);
+                    per_writer.push(rep.mean_instance_rate);
+                }
+                t.row(vec![
+                    nodes.to_string(),
+                    transport.label().into(),
+                    label.into(),
+                    fmt_rate(stats::mean(&rates)),
+                    fmt_rate(stats::mean(&per_writer)),
+                ]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    t.save_csv("fig8_pipeline").ok();
+    println!(
+        "\npaper reference @512 nodes RDMA: (1) 4.93, (2) 1.35, \
+         (3) 5.12 TiB/s; @256 sockets: 995 / 15 / 985 GiB/s. Expected \
+         shape: (1) ~= (3) >> (2); RDMA >> sockets; sockets+binpacking \
+         collapses."
+    );
+}

@@ -1,0 +1,75 @@
+//! Regenerates **Fig. 9**: perceived data-loading times of the two
+//! best strategies — (1) by hostname and (3) hyperslabs — as boxplots,
+//! plus the binpacking worst-case scan the paper describes (the single
+//! exchange where Next-Fit sent ~2x the ideal volume to one reader).
+
+use openpmd_stream::bench::fig8::{simulate, Fig8Params};
+use openpmd_stream::bench::Table;
+use openpmd_stream::pipeline::metrics::OpKind;
+use openpmd_stream::util::stats::boxplot;
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 9: perceived data loading times [s], strategies (1) and (3), \
+         RDMA (3 reps pooled)",
+        &["nodes", "strategy", "n", "w-", "q1", "median", "q3", "w+",
+          "max", "outliers"],
+    );
+    for &nodes in &[64usize, 128, 256, 512] {
+        for (name, label) in [("hostname", "(1) by hostname"),
+                              ("hyperslabs", "(3) hyperslabs")] {
+            let mut times = Vec::new();
+            for rep in 0..3 {
+                let run = simulate(&Fig8Params {
+                    nodes,
+                    strategy: name.into(),
+                    steps: 4,
+                    seed: 4000 + rep,
+                    ..Default::default()
+                });
+                times.extend(run.load_metrics.durations(OpKind::Load));
+            }
+            let b = boxplot(&times);
+            t.row(vec![
+                nodes.to_string(),
+                label.into(),
+                b.n.to_string(),
+                format!("{:.2}", b.lower_whisker),
+                format!("{:.2}", b.q1),
+                format!("{:.2}", b.median),
+                format!("{:.2}", b.q3),
+                format!("{:.2}", b.upper_whisker),
+                format!("{:.2}", b.max),
+                b.outliers.len().to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    t.save_csv("fig9_loadtimes").ok();
+
+    // The binpacking worst case: scan seeds until a reader receives
+    // ~double the ideal amount in some exchange (paper: observed once at
+    // 512 nodes, skewing that scatter plot from ~5 to ~10 minutes).
+    println!("\nbinpacking worst-case scan (Next-Fit 2x bound):");
+    let mut found = 0;
+    for seed in 0..24u64 {
+        let run = simulate(&Fig8Params {
+            nodes: 64,
+            strategy: "binpacking".into(),
+            steps: 4,
+            seed: 5000 + seed,
+            ..Default::default()
+        });
+        found += run.worst_case_events;
+    }
+    println!(
+        "  {found} reader-exchanges received >=1.9x the ideal volume \
+         across 24 seeds x 4 exchanges — the worst-case behavior \"does \
+         in practice occur\" (SS 4.3), while staying rare."
+    );
+    println!(
+        "\npaper reference: medians ~0.9 s for both strategies at every \
+         scale; hostname-strategy outliers at 512 nodes all stem from one \
+         exchange with a doubled reader."
+    );
+}

@@ -1,0 +1,108 @@
+//! M3 (ours): measured L1/L2 hot-path cost through PJRT — per-batch
+//! latency and throughput of the three artifacts, plus the rust-fallback
+//! comparison (how much the XLA-compiled kernels buy on CPU).
+//!
+//! Skips gracefully when artifacts are absent (`make artifacts`).
+
+use std::time::Duration;
+
+use openpmd_stream::analysis::saxs::{SaxsAnalyzer, BATCH_ATOMS, N_Q};
+use openpmd_stream::bench::{bench_loop, Table};
+use openpmd_stream::runtime::Runtime;
+use openpmd_stream::util::rng::Rng;
+
+fn main() {
+    let rt = match Runtime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("micro_runtime: skipped ({e:#})");
+            return;
+        }
+    };
+    let mut rng = Rng::new(1);
+    let mut t = Table::new(
+        "M3: PJRT artifact hot-path cost (per batch)",
+        &["artifact", "batch", "time/iter", "throughput"],
+    );
+
+    // --- saxs: 4096 atoms x 512 q-vectors ------------------------------
+    {
+        let exec = rt.get("saxs").unwrap();
+        let pos: Vec<f32> =
+            (0..BATCH_ATOMS * 3).map(|_| rng.f32() * 64.0).collect();
+        let w: Vec<f32> = (0..BATCH_ATOMS).map(|_| rng.f32()).collect();
+        let q_t = SaxsAnalyzer::polar_q_grid(2.0, N_Q);
+        let r = bench_loop("saxs", 3, 10, Duration::from_secs(1), || {
+            std::hint::black_box(
+                exec.run_f32(&[&pos, &w, &q_t]).unwrap());
+        });
+        // Kinematic sum: ~2*N*Q (phase) + 2*2*N*Q (trig-ish) + 4*N*Q
+        let flops = 10.0 * BATCH_ATOMS as f64 * N_Q as f64;
+        t.row(vec![
+            "saxs (PJRT)".into(),
+            format!("{BATCH_ATOMS} atoms x {N_Q} q"),
+            openpmd_stream::util::fmt_duration(r.per_iter()),
+            format!("{:.2} GFLOP/s-equiv", flops / r.mean / 1e9),
+        ]);
+        // Fallback comparison at the same batch.
+        let mut a = SaxsAnalyzer::new(2.0, None).unwrap();
+        let r2 = bench_loop("saxs-fallback", 1, 3,
+                            Duration::from_millis(300), || {
+            a.consume(&pos, &w).unwrap();
+        });
+        t.row(vec![
+            "saxs (rust fallback)".into(),
+            format!("{BATCH_ATOMS} atoms x {N_Q} q"),
+            openpmd_stream::util::fmt_duration(r2.per_iter()),
+            format!("{:.1}x vs PJRT", r2.mean / r.mean),
+        ]);
+    }
+
+    // --- pic_step: 16384 particles -------------------------------------
+    {
+        let exec = rt.get("pic_step").unwrap();
+        let n = exec.meta.inputs[0][0] as usize;
+        let g = exec.meta.inputs[2][0] as usize;
+        let pos: Vec<f32> =
+            (0..n * 3).map(|_| rng.f32() * 64.0).collect();
+        let mom: Vec<f32> =
+            (0..n * 3).map(|_| rng.f32() - 0.5).collect();
+        let fields = vec![0.01f32; g * g * 3];
+        let r = bench_loop("pic_step", 3, 10, Duration::from_secs(1), || {
+            std::hint::black_box(
+                exec.run_f32(&[&pos, &mom, &fields, &fields]).unwrap());
+        });
+        t.row(vec![
+            "pic_step (PJRT)".into(),
+            format!("{n} particles"),
+            openpmd_stream::util::fmt_duration(r.per_iter()),
+            format!("{:.1} Mparticles/s", n as f64 / r.mean / 1e6),
+        ]);
+    }
+
+    // --- binning: 16384 samples ----------------------------------------
+    {
+        let exec = rt.get("binning").unwrap();
+        let n = exec.meta.inputs[0][0] as usize;
+        let mom: Vec<f32> =
+            (0..n * 3).map(|_| rng.f32() - 0.5).collect();
+        let w = vec![1.0f32; n];
+        let r = bench_loop("binning", 3, 10, Duration::from_secs(1), || {
+            std::hint::black_box(exec.run_f32(&[&mom, &w]).unwrap());
+        });
+        t.row(vec![
+            "binning (PJRT)".into(),
+            format!("{n} samples"),
+            openpmd_stream::util::fmt_duration(r.per_iter()),
+            format!("{:.1} Msamples/s", n as f64 / r.mean / 1e6),
+        ]);
+    }
+
+    print!("{}", t.render());
+    t.save_csv("micro_runtime").ok();
+    println!(
+        "\nNote: interpret-mode Pallas on CPU-PJRT measures the *path*, \
+         not TPU speed; DESIGN.md SS Perf holds the VMEM/MXU projection \
+         for real hardware."
+    );
+}

@@ -1,0 +1,56 @@
+//! Regenerates **Table 1**: system performance from OLCF Titan to
+//! Frontier, including the storage-requirement column (50 full-GPU-memory
+//! dumps) and the §1.1 derived quantities (per-GPU PFS share, growth
+//! factors).
+
+use openpmd_stream::bench::Table;
+use openpmd_stream::cluster::systems::{self, FRONTIER, SUMMIT, TITAN};
+use openpmd_stream::util::bytes::{MIB, PIB, TIB};
+
+fn main() {
+    let mut t = Table::new(
+        "Table 1: system performance, OLCF Titan -> Frontier",
+        &["system", "year", "compute [PFlop/s]", "PFS bw [TiB/s]",
+          "capacity [PiB]", "50-dump storage [PiB]",
+          "PFS share/GPU [MiB/s]"],
+    );
+    for s in systems::table1_systems() {
+        let (blo, bhi) = s.pfs_bandwidth;
+        let (clo, chi) = s.pfs_capacity;
+        t.row(vec![
+            s.name.into(),
+            s.year.to_string(),
+            format!("{}", s.compute_pflops),
+            if blo == bhi {
+                format!("{:.1}", blo / TIB as f64)
+            } else {
+                format!("{:.0}-{:.0}", blo / TIB as f64, bhi / TIB as f64)
+            },
+            if clo == chi {
+                format!("{:.0}", clo / PIB as f64)
+            } else {
+                format!("{:.0}-{:.0}", clo / PIB as f64, chi / PIB as f64)
+            },
+            format!("{:.1}",
+                    s.storage_requirement(50) as f64 / PIB as f64),
+            format!("{:.0}", s.pfs_share_per_gpu() / MIB as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("table1_systems").ok();
+
+    println!("\nSS 1.1 growth factors (paper: compute ~7.4x / >7.5x, \
+              bandwidth 2.5x / 2-4x):");
+    println!(
+        "  Titan->Summit:    compute {:.1}x, PFS bandwidth {:.1}x",
+        SUMMIT.compute_factor_over(&TITAN),
+        SUMMIT.bandwidth_factor_over(&TITAN).0
+    );
+    let (flo, fhi) = FRONTIER.bandwidth_factor_over(&SUMMIT);
+    println!(
+        "  Summit->Frontier: compute {:.1}x, PFS bandwidth {flo:.0}-{fhi:.0}x",
+        FRONTIER.compute_factor_over(&SUMMIT)
+    );
+    println!("\npaper-vs-ours: storage need Titan 5.3 / Summit 21.1 PiB; \
+              per-GPU share Titan 56 / Summit 95 MiB/s.");
+}

@@ -1,0 +1,105 @@
+//! Explore the §3 chunk-distribution strategies on synthetic chunk
+//! tables and see the locality / balancing / alignment trade-offs the
+//! paper discusses — without running any IO.
+//!
+//! ```bash
+//! cargo run --release --example distribution_playground \
+//!     [-- --nodes 8 --writers-per-node 3 --readers-per-node 3 \
+//!         --jitter 0.1]
+//! ```
+
+use anyhow::Result;
+
+use openpmd_stream::bench::Table;
+use openpmd_stream::cluster::topology::{ClusterLayout, Placement};
+use openpmd_stream::distribution::{
+    by_name, metrics, verify_complete, ChunkTable,
+};
+use openpmd_stream::openpmd::chunk::{Chunk, WrittenChunkInfo};
+use openpmd_stream::util::cli::Args;
+use openpmd_stream::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false)?;
+    let nodes: usize = args.get_parse_or("nodes", 8)?;
+    let wpn: usize = args.get_parse_or("writers-per-node", 3)?;
+    let rpn: usize = args.get_parse_or("readers-per-node", 3)?;
+    let jitter: f64 = args.get_parse_or("jitter", 0.10)?;
+    let chunk_elems: u64 = args.get_parse_or("chunk-elems", 1_000_000)?;
+
+    let cluster = ClusterLayout { nodes, gpus_per_node: wpn + rpn };
+    let placement = Placement::co_scheduled(cluster, wpn, rpn);
+    let readers = placement.reader_layout();
+
+    // Jittered contiguous chunk table, shuffled arrival order (as an
+    // ADIOS metadata table would be).
+    let mut rng = Rng::new(2021);
+    let mut chunks = Vec::new();
+    let mut off = 0u64;
+    for w in &placement.writers {
+        let size = (chunk_elems as f64
+            * (1.0 + jitter * (2.0 * rng.f64() - 1.0))) as u64;
+        chunks.push(WrittenChunkInfo::new(
+            Chunk::new(vec![off], vec![size]),
+            w.rank,
+            w.hostname.clone(),
+        ));
+        off += size;
+    }
+    rng.shuffle(&mut chunks);
+    let table = ChunkTable { dataset_extent: vec![off], chunks };
+
+    println!(
+        "{} writers on {} nodes -> {} readers ({} chunks, jitter +-{:.0}%)\n",
+        placement.writers.len(),
+        nodes,
+        readers.len(),
+        table.chunks.len(),
+        jitter * 100.0
+    );
+
+    let mut t = Table::new(
+        "distribution strategy properties (SS 3.1)",
+        &["strategy", "balance (max/ideal)", "locality", "alignment",
+          "mean partners", "max partners", "slices"],
+    );
+    for name in ["roundrobin", "hyperslabs", "binpacking", "hostname",
+                 "hostname:roundrobin:hyperslabs"] {
+        let strategy = by_name(name)?;
+        let assignment = strategy.distribute(&table, &readers);
+        verify_complete(&table, &assignment)
+            .map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+        let q = metrics::quality(&table, &readers, &assignment);
+        t.row(vec![
+            name.into(),
+            format!("{:.3}", q.balance_factor),
+            format!("{:>5.1}%", q.locality_fraction * 100.0),
+            format!("{:.3}", q.alignment),
+            format!("{:.2}", q.mean_partners),
+            format!("{}", q.max_partners),
+            format!("{}", assignment.total_slices()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nevery strategy passed the completeness check \
+              (each written element assigned exactly once).");
+
+    // The binpacking 2x guarantee, empirically.
+    let bp = by_name("binpacking")?.distribute(&table, &readers);
+    // The guarantee is against the *integral* ideal (ceil), which is
+    // what the Next-Fit bins are sized by.
+    let ideal = table.total_elements().div_ceil(readers.len() as u64);
+    let worst_load = readers
+        .ranks
+        .iter()
+        .map(|r| bp.elements_for(r.rank))
+        .max()
+        .unwrap();
+    println!(
+        "binpacking worst reader load: {:.3}x ideal \
+         (guarantee: <= 2.0x)",
+        worst_load as f64 / ideal as f64
+    );
+    assert!(worst_load <= 2 * ideal);
+    Ok(())
+}

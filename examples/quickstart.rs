@@ -1,0 +1,154 @@
+//! Quickstart: write and read an openPMD series, file-based and
+//! streaming, with the *same* application code — the paper's
+//! *reusability* property in ~100 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
+use openpmd_stream::adios::engine::{cast, Engine, StepStatus};
+use openpmd_stream::adios::sst::{
+    SstReader, SstReaderOptions, SstWriter, SstWriterOptions,
+};
+use openpmd_stream::openpmd::chunk::Chunk;
+use openpmd_stream::openpmd::record::ParticleSpecies;
+use openpmd_stream::openpmd::series::{Iteration, Series};
+
+/// Write three iterations of a tiny particle species through ANY engine
+/// — the code cannot tell whether it is writing a file or a stream.
+fn write_series(engine: &mut dyn Engine) -> Result<()> {
+    let mut series = Series::new("quickstart author",
+                                 "openpmd-stream quickstart");
+    let n = 256u64;
+    for step in 0..3u64 {
+        let mut it = Iteration::new(step as f64 * 0.05, 0.05);
+        let mut species = ParticleSpecies::pic_layout(n);
+        let chunk = Chunk::whole(vec![n]);
+        for record in ["position", "momentum"] {
+            let rec = species.records.get_mut(record).unwrap();
+            for comp in ["x", "y", "z"] {
+                let data: Vec<f32> = (0..n)
+                    .map(|i| (step * 1000 + i) as f32 * 0.001)
+                    .collect();
+                rec.component_mut(comp)
+                    .unwrap()
+                    .store_chunk(chunk.clone(), cast::f32_to_bytes(&data))
+                    .map_err(|e| anyhow::anyhow!(e))?;
+            }
+        }
+        species
+            .records
+            .get_mut("weighting")
+            .unwrap()
+            .components
+            .values_mut()
+            .next()
+            .unwrap()
+            .store_chunk(chunk.clone(),
+                         cast::f32_to_bytes(&vec![1.0; n as usize]))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        it.particles.insert("e".into(), species);
+        series.write_iteration(engine, step, &mut it)?;
+    }
+    engine.close()?;
+    Ok(())
+}
+
+/// Read a series back through ANY engine and summarize it.
+fn read_series(engine: &mut dyn Engine, label: &str) -> Result<()> {
+    loop {
+        let (status, parsed) = Series::read_iteration(engine)?;
+        match status {
+            StepStatus::Ok => {}
+            StepStatus::EndOfStream => break,
+            _ => continue,
+        }
+        let (index, it) = parsed.unwrap();
+        let species = &it.particles["e"];
+        let pos_x = openpmd_stream::openpmd::series::var_name(
+            index, "e", "position", "x");
+        let chunks = engine.available_chunks(&pos_x);
+        let n = species.records["position"].components["x"]
+            .dataset
+            .extent[0];
+        let data = cast::bytes_to_f32(
+            &engine.get(&pos_x, Chunk::whole(vec![n]))?);
+        println!(
+            "  [{label}] iteration {index}: t={:.3}, {} particles, \
+             {} written chunk(s), position/x[0..3] = {:?}",
+            it.time,
+            n,
+            chunks.len(),
+            &data[..3]
+        );
+        engine.end_step()?;
+    }
+    engine.close()?;
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    // --- File-based: BP engine ---------------------------------------
+    let path = std::env::temp_dir()
+        .join(format!("quickstart-{}.bp", std::process::id()));
+    println!("1. writing BP file {} ...", path.display());
+    let mut writer = BpWriter::create(&path, WriterCtx {
+        rank: 0,
+        hostname: "quickstart".into(),
+    })?;
+    write_series(&mut writer)?;
+    println!("2. reading it back ...");
+    let mut reader = BpReader::open(&path)?;
+    read_series(&mut reader, "bp")?;
+
+    // --- Streaming: SST engine, same functions -----------------------
+    println!("3. same code over an SST stream (writer thread + reader) ...");
+    let writer = SstWriter::open(SstWriterOptions {
+        listen: format!("quickstart-{}", std::process::id()),
+        // Block (not Discard): this demo wants every step delivered even
+        // if the reader subscribes late.
+        queue: openpmd_stream::adios::sst::QueueConfig {
+            policy: openpmd_stream::adios::sst::QueueFullPolicy::Block,
+            limit: 8,
+        },
+        ..Default::default()
+    })?;
+    let addr = writer.address();
+    let writer_thread = std::thread::spawn(move || -> Result<()> {
+        let mut writer = writer;
+        write_series(&mut writer)
+    });
+    let mut reader = SstReader::open(SstReaderOptions {
+        writers: vec![addr],
+        ..Default::default()
+    })?;
+    read_series(&mut reader, "sst")?;
+    writer_thread.join().unwrap()?;
+
+    // --- Conformance check -------------------------------------------
+    let mut reader = BpReader::open(&path)?;
+    let (_, parsed) = Series::read_iteration(&mut reader)?;
+    let (index, it) = parsed.unwrap();
+    let findings =
+        openpmd_stream::openpmd::validate::validate_iteration(index, &it);
+    println!(
+        "4. openPMD conformance: {} ({} findings)",
+        if openpmd_stream::openpmd::validate::is_conformant(&findings) {
+            "OK"
+        } else {
+            "FAILED"
+        },
+        findings.len()
+    );
+
+    std::fs::remove_file(&path).ok();
+    let _unused: openpmd_stream::adios::engine::Bytes =
+        Arc::new(Vec::new());
+    println!("quickstart done.");
+    Ok(())
+}

@@ -1,0 +1,296 @@
+//! END-TO-END driver (the §4.2 pipeline, all three layers composing):
+//!
+//! ```text
+//!   KhProducer ranks (L2/L1: pic_step artifact via PJRT)
+//!        | openPMD iterations over SST (L3, real engine, real threads)
+//!        v
+//!   chunk-distribution strategy (§3) decides who loads what
+//!        |
+//!        v
+//!   SaxsAnalyzer ranks (L2/L1: saxs artifact via PJRT)
+//!        -> accumulated I(q) scatter plot (CSV) + energy spectrum
+//! ```
+//!
+//! This is the workload the paper's §4.2 runs at 512 nodes with
+//! PIConGPU + GAPD; here it runs 2 producer + 2 analysis ranks with
+//! ~100k macroparticles, proving that artifacts, streaming engines,
+//! distribution strategies and analyses compose. The run is recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example simulation_analysis \
+//!     [-- --particles 100000 --outputs 4 --strategy hyperslabs \
+//!         --transport inproc --no-runtime]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use openpmd_stream::adios::engine::{cast, Engine, StepStatus};
+use openpmd_stream::adios::sst::{
+    QueueConfig, QueueFullPolicy, SstReader, SstReaderOptions, SstWriter,
+    SstWriterOptions, WriterGroup,
+};
+use openpmd_stream::analysis::{EnergySpectrum, SaxsAnalyzer};
+use openpmd_stream::distribution::{self, ChunkTable, ReaderLayout};
+use openpmd_stream::openpmd::series::{var_name, Series};
+use openpmd_stream::openpmd::record::SCALAR;
+use openpmd_stream::pipeline::metrics::{OpKind, PerceivedThroughput};
+use openpmd_stream::producer::KhProducer;
+use openpmd_stream::runtime::Runtime;
+use openpmd_stream::util::bytes::{fmt_bytes, fmt_rate};
+use openpmd_stream::util::cli::Args;
+
+const WRITERS: usize = 2;
+const READERS: usize = 2;
+
+fn main() -> Result<()> {
+    let t_start = Instant::now();
+    let args = Args::from_env(false)?;
+    let particles: usize = args.get_parse_or("particles", 100_000)?;
+    let outputs: u64 = args.get_parse_or("outputs", 4)?;
+    let period: u64 = args.get_parse_or("period", 5)?;
+    let strategy_name =
+        args.get_or("strategy", "hyperslabs").to_string();
+    let transport = args.get_or("transport", "inproc").to_string();
+
+    // PJRT executables are not Send (the xla crate uses Rc internally),
+    // so every thread loads its own Runtime — mirroring real deployments
+    // where each rank owns its PJRT client.
+    let use_runtime = !args.flag("no-runtime")
+        && match Runtime::load_default() {
+            Ok(rt) => {
+                println!("PJRT runtime up: artifacts {:?}", rt.names());
+                true
+            }
+            Err(e) => {
+                println!(
+                    "artifacts unavailable ({e:#}); using rust fallbacks"
+                );
+                false
+            }
+        };
+
+    println!(
+        "simulation_analysis: {WRITERS} KH producers x {particles} \
+         particles --SST({transport})--> {READERS} SAXS ranks, strategy \
+         {strategy_name}, {outputs} outputs every {period} PIC steps"
+    );
+
+    // --- SST writers, one per producer rank --------------------------
+    let group = WriterGroup::new();
+    let mut writers = Vec::new();
+    let mut addrs = Vec::new();
+    for rank in 0..WRITERS {
+        let w = SstWriter::open(SstWriterOptions {
+            listen: if transport == "inproc" {
+                format!("simana-{rank}-{}", std::process::id())
+            } else {
+                String::new()
+            },
+            transport: transport.clone(),
+            rank,
+            hostname: "node0000".into(),
+            queue: QueueConfig { policy: QueueFullPolicy::Block, limit: 2 },
+            group: Some(group.clone()),
+            ..Default::default()
+        })?;
+        addrs.push(w.address());
+        writers.push(w);
+    }
+
+    // --- Producer threads (L3 driving L2/L1 through PJRT) ------------
+    let per_rank = particles / WRITERS;
+    let producer_threads: Vec<_> = writers
+        .into_iter()
+        .enumerate()
+        .map(|(rank, mut engine)| {
+            std::thread::spawn(move || -> Result<f64> {
+                let runtime = if use_runtime {
+                    Some(Runtime::load_default()?)
+                } else {
+                    None
+                };
+                let mut producer = KhProducer::new(
+                    rank,
+                    "node0000",
+                    per_rank,
+                    (rank * per_rank) as u64,
+                    (per_rank * WRITERS) as u64,
+                    7,
+                    runtime.as_ref(),
+                )?;
+                let mut series =
+                    Series::new("simulation_analysis", "openpmd-stream");
+                let mut compute_s = 0.0;
+                for out in 0..outputs {
+                    let t0 = Instant::now();
+                    for _ in 0..period {
+                        producer.step()?;
+                    }
+                    compute_s += t0.elapsed().as_secs_f64();
+                    let status = producer.write_iteration(
+                        &mut series, &mut engine, out)?;
+                    if status != StepStatus::Ok {
+                        bail!("unexpected producer status {status:?}");
+                    }
+                }
+                engine.close()?;
+                Ok(compute_s)
+            })
+        })
+        .collect();
+
+    // --- Analysis threads (readers; distribution decides the loads) --
+    let reader_layout = ReaderLayout::local(READERS);
+    let analysis_threads: Vec<_> = (0..READERS)
+        .map(|rank| {
+            let addrs = addrs.clone();
+            let strategy_name = strategy_name.clone();
+            let layout = reader_layout.clone();
+            let transport = transport.clone();
+            // PJRT handles are not Send: return plain accumulators.
+            std::thread::spawn(move || -> Result<(
+                Vec<f64>,
+                u64,
+                Vec<f64>,
+                u64,
+                PerceivedThroughput,
+            )> {
+                let runtime = if use_runtime {
+                    Some(Runtime::load_default()?)
+                } else {
+                    None
+                };
+                let strategy = distribution::by_name(&strategy_name)?;
+                let mut reader = SstReader::open(SstReaderOptions {
+                    writers: addrs,
+                    transport,
+                    rank,
+                    hostname: "node0000".into(),
+                    begin_step_timeout: Duration::from_secs(120),
+                })?;
+                let mut saxs = SaxsAnalyzer::new(2.0, runtime.as_ref())?;
+                let mut spectrum =
+                    EnergySpectrum::new(runtime.as_ref())?;
+                let mut metrics = PerceivedThroughput::new();
+                let mut step_idx = 0u64;
+                loop {
+                    match reader.begin_step()? {
+                        StepStatus::Ok => {}
+                        StepStatus::EndOfStream => break,
+                        _ => continue,
+                    }
+                    // The §3 machinery: distribute this step's chunks.
+                    let vars = reader.available_variables();
+                    let Some(wvar) = vars
+                        .iter()
+                        .find(|v| v.name.ends_with("/weighting"))
+                    else {
+                        bail!("no weighting record in step");
+                    };
+                    let index = openpmd_stream::openpmd::series::
+                        parse_var_name(&wvar.name)?.index;
+                    let table = ChunkTable {
+                        dataset_extent: wvar.shape.clone(),
+                        chunks: reader.available_chunks(&wvar.name),
+                    };
+                    let assignment = strategy.distribute(&table, &layout);
+                    let mut pos = Vec::new();
+                    let mut mom = Vec::new();
+                    let mut wts = Vec::new();
+                    for slice in assignment.slices(rank) {
+                        let sel = slice.chunk.clone();
+                        let t = metrics.start(OpKind::Load, step_idx, rank);
+                        let mut bytes = 0u64;
+                        let mut cols = Vec::new();
+                        for record in ["position", "momentum"] {
+                            for comp in ["x", "y", "z"] {
+                                let name =
+                                    var_name(index, "e", record, comp);
+                                let data = reader.get(&name, sel.clone())?;
+                                bytes += data.len() as u64;
+                                cols.push(cast::bytes_to_f32(&data));
+                            }
+                        }
+                        let w = reader.get(
+                            &var_name(index, "e", "weighting", SCALAR),
+                            sel.clone(),
+                        )?;
+                        bytes += w.len() as u64;
+                        metrics.finish(t, bytes);
+                        let n = sel.num_elements() as usize;
+                        for i in 0..n {
+                            pos.extend_from_slice(&[
+                                cols[0][i], cols[1][i], cols[2][i],
+                            ]);
+                            mom.extend_from_slice(&[
+                                cols[3][i], cols[4][i], cols[5][i],
+                            ]);
+                        }
+                        wts.extend_from_slice(&cast::bytes_to_f32(&w));
+                    }
+                    // L1/L2 compute through PJRT.
+                    saxs.consume(&pos, &wts)?;
+                    spectrum.consume(&mom, &wts)?;
+                    reader.end_step()?;
+                    step_idx += 1;
+                }
+                reader.close()?;
+                Ok((
+                    saxs.pattern().to_vec(),
+                    saxs.atoms_seen,
+                    spectrum.spectrum().to_vec(),
+                    spectrum.samples_seen,
+                    metrics,
+                ))
+            })
+        })
+        .collect();
+
+    let mut compute_total = 0.0;
+    for t in producer_threads {
+        compute_total += t.join().unwrap()?;
+    }
+    let mut saxs = SaxsAnalyzer::new(2.0, None)?;
+    let mut spectrum = EnergySpectrum::new(None)?;
+    let mut metrics = PerceivedThroughput::new();
+    for t in analysis_threads {
+        let (pattern, atoms, bins, samples, m) = t.join().unwrap()?;
+        saxs.absorb_pattern(&pattern, atoms, 0);
+        spectrum.absorb_bins(&bins, samples);
+        metrics.absorb(m);
+    }
+
+    // --- Results -------------------------------------------------------
+    let loads = metrics.report(OpKind::Load, READERS);
+    let csv = "scatter_plot.csv";
+    saxs.write_csv(csv)?;
+    let expected =
+        (per_rank * WRITERS) as u64 * outputs;
+    println!("macroparticles analyzed:  {} (expected {expected})",
+             saxs.atoms_seen);
+    assert_eq!(saxs.atoms_seen, expected, "lost particles in the pipeline");
+    assert_eq!(spectrum.samples_seen, expected);
+    let total_w = spectrum.total_weight();
+    let rel = (total_w - expected as f64).abs() / (expected as f64);
+    assert!(rel < 1e-6, "weight not conserved: {total_w}");
+    println!("energy spectrum weight:   {total_w:.1} (conserved)");
+    println!("peak I(q):                {:.3e}",
+             saxs.pattern().iter().cloned().fold(0.0, f64::max));
+    println!("scatter plot:             {csv} ({} q-points)",
+             saxs.pattern().len());
+    println!("streamed:                 {} in {} load ops",
+             fmt_bytes(loads.total_bytes), loads.ops);
+    println!("perceived load rate:      {} per reader, {} aggregate",
+             fmt_rate(loads.mean_instance_rate),
+             fmt_rate(loads.aggregate_rate));
+    println!("load times:               {}", loads.times.render());
+    println!("producer compute total:   {compute_total:.2}s across \
+              {WRITERS} ranks");
+    println!("wall time:                {:.2}s", t_start.elapsed()
+             .as_secs_f64());
+    println!("simulation_analysis done (all three layers composed).");
+    Ok(())
+}

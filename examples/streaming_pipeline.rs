@@ -1,0 +1,163 @@
+//! The paper's §4.1 setup, for real (laptop scale): N producers stream
+//! to one `openpmd-pipe` per "node", which writes an aggregated BP file
+//! — streaming as asynchronous, node-aggregating IO (Fig. 5).
+//!
+//! Producers are synthetic (data shape of PIConGPU, no physics) so the
+//! example exercises the *IO* path at meaningful sizes. Every role runs
+//! on its own thread with its own engines; swap the transport to "tcp"
+//! and the roles can be separate processes.
+//!
+//! ```bash
+//! cargo run --release --example streaming_pipeline [-- --producers 6 \
+//!     --steps 5 --mib-per-producer 64 --transport inproc]
+//! ```
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
+use openpmd_stream::adios::engine::{Engine, StepStatus};
+use openpmd_stream::adios::sst::{
+    QueueConfig, QueueFullPolicy, SstReader, SstReaderOptions, SstWriter,
+    SstWriterOptions, WriterGroup,
+};
+use openpmd_stream::pipeline::metrics::OpKind;
+use openpmd_stream::pipeline::pipe::{run_pipe, PipeOptions};
+use openpmd_stream::producer::SyntheticProducer;
+use openpmd_stream::util::bytes::{fmt_bytes, fmt_rate, MIB};
+use openpmd_stream::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false)?;
+    let producers: usize = args.get_parse_or("producers", 6)?;
+    let steps: u64 = args.get_parse_or("steps", 5)?;
+    let mib: u64 = args.get_parse_or("mib-per-producer", 64)?;
+    let transport = args.get_or("transport", "inproc").to_string();
+    let compute_ms: u64 = args.get_parse_or("compute-ms", 150)?;
+    let bytes_per_producer = mib * MIB;
+
+    println!(
+        "streaming_pipeline: {producers} producers x {} x {steps} steps \
+         --SST({transport})--> openpmd-pipe --> BP file",
+        fmt_bytes(bytes_per_producer)
+    );
+
+    // --- Writers (one per producer rank, shared discard group) -------
+    let group = WriterGroup::new();
+    let mut writer_engines = Vec::new();
+    let mut addrs = Vec::new();
+    for rank in 0..producers {
+        let w = SstWriter::open(SstWriterOptions {
+            listen: if transport == "inproc" {
+                format!("pipe-demo-{rank}-{}", std::process::id())
+            } else {
+                String::new()
+            },
+            transport: transport.clone(),
+            rank,
+            hostname: "node0000".into(),
+            queue: QueueConfig { policy: QueueFullPolicy::Discard,
+                                 limit: 2 },
+            group: Some(group.clone()),
+            ..Default::default()
+        })?;
+        addrs.push(w.address());
+        writer_engines.push(w);
+    }
+
+    // --- The pipe (reader side of the stream, writer of the file) ----
+    let bp_path = std::env::temp_dir()
+        .join(format!("pipeline-{}.bp", std::process::id()));
+    let pipe_thread = {
+        let addrs = addrs.clone();
+        let bp_path = bp_path.clone();
+        let transport = transport.clone();
+        std::thread::spawn(move || -> Result<_> {
+            let mut input = SstReader::open(SstReaderOptions {
+                writers: addrs,
+                transport,
+                rank: 0,
+                hostname: "node0000".into(),
+                begin_step_timeout: Duration::from_secs(30),
+            })?;
+            let mut output = BpWriter::create(&bp_path, WriterCtx {
+                rank: 0,
+                hostname: "node0000".into(),
+            })?;
+            let report = run_pipe(&mut input, &mut output,
+                                  PipeOptions::solo())?;
+            Ok(report)
+        })
+    };
+
+    // --- Producers ----------------------------------------------------
+    let producer_threads: Vec<_> = writer_engines
+        .into_iter()
+        .enumerate()
+        .map(|(rank, mut engine)| {
+            let total_ranks = producers;
+            std::thread::spawn(move || -> Result<(u64, u64)> {
+                let mut p = SyntheticProducer::with_bytes_per_step(
+                    rank, mib * MIB, total_ranks, 42);
+                let mut written = 0;
+                let mut discarded = 0;
+                for _ in 0..steps {
+                    // Simulated compute phase between outputs — the
+                    // pacing that lets streaming IO hide behind it
+                    // (SS 4.1). Shrink --compute-ms to watch the
+                    // QueueFullPolicy start discarding.
+                    std::thread::sleep(Duration::from_millis(compute_ms));
+                    match p.write_step(&mut engine)? {
+                        StepStatus::Ok => written += 1,
+                        StepStatus::Discarded => discarded += 1,
+                        other => anyhow::bail!("unexpected {other:?}"),
+                    }
+                }
+                engine.close()?;
+                Ok((written, discarded))
+            })
+        })
+        .collect();
+
+    let mut written = 0;
+    let mut discarded = 0;
+    for t in producer_threads {
+        let (w, d) = t.join().unwrap()?;
+        written += w;
+        discarded += d;
+    }
+    let report = pipe_thread.join().unwrap()?;
+
+    // --- Report (the §4.1 metrics, measured not simulated) -----------
+    let loads = report.metrics.report(OpKind::Load, producers);
+    println!("producer steps written:   {written} (+{discarded} discarded)");
+    println!("pipe steps forwarded:     {}", report.steps);
+    println!("pipe bytes in -> out:     {} -> {}",
+             fmt_bytes(report.bytes_in), fmt_bytes(report.bytes_out));
+    println!("perceived load rate:      {} per instance, {} aggregate",
+             fmt_rate(loads.mean_instance_rate),
+             fmt_rate(loads.aggregate_rate));
+    println!("load times:               {}", loads.times.render());
+
+    // --- Verify the aggregated file -----------------------------------
+    let mut check = BpReader::open(&bp_path)?;
+    let mut file_steps = 0;
+    while check.begin_step()? == StepStatus::Ok {
+        let vars = check.available_variables();
+        assert_eq!(vars.len(), 7, "expected 7 particle components");
+        // Node-level aggregation: all producers' chunks in one file.
+        let chunks = check.available_chunks(&vars[0].name);
+        assert_eq!(chunks.len(), producers);
+        check.end_step()?;
+        file_steps += 1;
+    }
+    println!("aggregated BP file:       {} steps, {} ({})",
+             file_steps,
+             fmt_bytes(std::fs::metadata(&bp_path)?.len()),
+             bp_path.display());
+    assert_eq!(file_steps as u64, report.steps);
+    std::fs::remove_file(&bp_path).ok();
+    println!("streaming_pipeline done.");
+    Ok(())
+}

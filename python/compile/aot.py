@@ -1,0 +1,134 @@
+"""AOT lowering: jax/pallas -> HLO *text* artifacts for the rust runtime.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each entry point is lowered at the fixed shapes below; the rust runtime pads
+its batches to these shapes (weight-0 padding is exact for every entry
+point, see runtime/mod.rs).  A sidecar `meta.json` records the shapes so the
+coordinator can validate them at load time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed AOT shapes.  Multiples of the kernel tiles (256/512/1024).
+SAXS_ATOMS = 4096
+SAXS_Q = 512
+PIC_PARTICLES = 16384
+HIST_SAMPLES = 16384
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def saxs_entry():
+    fn = lambda pos, w, q_t: (model.saxs_pattern(pos, w, q_t),)
+    args = (
+        jax.ShapeDtypeStruct((SAXS_ATOMS, 3), F32),
+        jax.ShapeDtypeStruct((1, SAXS_ATOMS), F32),
+        jax.ShapeDtypeStruct((3, SAXS_Q), F32),
+    )
+    meta = {
+        "inputs": [list(a.shape) for a in args],
+        "outputs": [[SAXS_Q]],
+        "doc": "SAXS intensity I(q); inputs pos[N,3], w[1,N], q_t[3,Q]",
+    }
+    return fn, args, meta
+
+
+def pic_step_entry():
+    fn = lambda pos, mom, e, b: model.pic_step(pos, mom, e, b)
+    g = model.GRID
+    args = (
+        jax.ShapeDtypeStruct((PIC_PARTICLES, 3), F32),
+        jax.ShapeDtypeStruct((PIC_PARTICLES, 3), F32),
+        jax.ShapeDtypeStruct((g, g, 3), F32),
+        jax.ShapeDtypeStruct((g, g, 3), F32),
+    )
+    meta = {
+        "inputs": [list(a.shape) for a in args],
+        "outputs": [[PIC_PARTICLES, 3], [PIC_PARTICLES, 3]],
+        "doc": "PIC step; inputs pos, mom [N,3], e_grid, b_grid [G,G,3]",
+        "constants": {"dt": model.DT, "qm": model.QM, "box": list(model.BOX)},
+    }
+    return fn, args, meta
+
+
+def binning_entry():
+    fn = lambda mom, w: (model.energy_spectrum(mom, w),)
+    args = (
+        jax.ShapeDtypeStruct((HIST_SAMPLES, 3), F32),
+        jax.ShapeDtypeStruct((1, HIST_SAMPLES), F32),
+    )
+    meta = {
+        "inputs": [list(a.shape) for a in args],
+        "outputs": [[model.N_BINS]],
+        "doc": "energy spectrum; inputs mom[N,3], w[1,N]",
+        "constants": {"emin": model.E_MIN, "emax": model.E_MAX,
+                      "nbins": model.N_BINS},
+    }
+    return fn, args, meta
+
+
+ENTRIES = {
+    "saxs": saxs_entry,
+    "pic_step": pic_step_entry,
+    "binning": binning_entry,
+}
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", choices=sorted(ENTRIES), default=None)
+    opts = parser.parse_args()
+    os.makedirs(opts.out_dir, exist_ok=True)
+
+    meta_all = {}
+    for name, entry in sorted(ENTRIES.items()):
+        if opts.only and name != opts.only:
+            continue
+        fn, args, meta = entry()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(opts.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta_all[name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta_path = os.path.join(opts.out_dir, "meta.json")
+    existing = {}
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            existing = json.load(f)
+    existing.update(meta_all)
+    with open(meta_path, "w") as f:
+        json.dump(existing, f, indent=2, sort_keys=True)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

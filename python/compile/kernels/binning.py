@@ -1,0 +1,76 @@
+"""Pallas kernel: weighted 1-D histogram (the pipeline's "filter and bin").
+
+Figure 2 of the paper sketches an analysis stage that "might filter and bin"
+the particle stream.  This kernel implements the binning: a weighted
+histogram of per-particle energies with uniform bins.
+
+Hardware adaptation: scatter-add histograms (the CUDA idiom: atomicAdd into
+shared-memory bins) do not map onto the TPU.  The MXU formulation instead
+builds a one-hot matrix per atom tile and reduces it with a matmul:
+
+    idx[N]        = clip(floor((e - emin) / width))
+    onehot[N, B]  = (idx == iota(B))
+    hist[1, B]   += w[1, N_tile] @ onehot[N_tile, B]     (MXU)
+
+The atom grid dimension accumulates partial histograms into the single
+[1, B] output block, same reduction idiom as the SAXS kernel.  Out-of-range
+samples are clamped into the edge bins (preserves total weight; the L2 model
+widens the range so physical samples never clamp).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_SAMPLES = 1024
+
+
+def _hist_kernel(emin, width, nbins, e_ref, w_ref, hist_ref):
+    i = pl.program_id(0)
+    e = e_ref[...]                                            # [1, TILE]
+    idx = jnp.floor((e - emin) / width).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, nbins - 1)[0]                      # [TILE]
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, nbins), 1)[0]
+    onehot = (idx[:, None] == bins[None, :]).astype(jnp.float32)
+    part = jnp.dot(w_ref[...], onehot,
+                   preferred_element_type=jnp.float32)        # [1, B]
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = part
+
+    @pl.when(i != 0)
+    def _accum():
+        hist_ref[...] += part
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("emin", "emax", "nbins", "tile"))
+def weighted_histogram(e, w, *, emin, emax, nbins, tile=TILE_SAMPLES):
+    """Weighted histogram of ``e`` with ``nbins`` uniform bins.
+
+    Args:
+      e, w: [1, N] float32 values and weights; N multiple of ``tile``.
+      emin, emax, nbins: bin range/count, baked at lowering time.
+
+    Returns:
+      [nbins] float32 weighted counts.
+    """
+    n = e.shape[1]
+    assert n % tile == 0, (n, tile)
+    width = (float(emax) - float(emin)) / int(nbins)
+    kernel = functools.partial(_hist_kernel, float(emin), width, int(nbins))
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, nbins), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, nbins), jnp.float32),
+        interpret=True,
+    )(e, w)
+    return out[0]

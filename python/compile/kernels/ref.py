@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float32 tolerance (see python/tests/). They are also
+used by the L2 model tests to validate end-to-end lowering.
+
+Physics notes
+-------------
+``saxs_ref``
+    Kinematical small-angle X-ray scattering (the SAXS mode of GAPD,
+    E et al. 2018): the scattering amplitude at reciprocal-space vector q is
+    ``A(q) = sum_j w_j * exp(i q . r_j)`` and the recorded intensity is
+    ``I(q) = |A(q)|^2``.  ``w_j`` is the macroparticle weighting (used as a
+    constant atomic form factor — GAPD's f_j(q) tables collapse to a constant
+    in the SAXS regime).
+
+``boris_ref``
+    Non-relativistic Boris particle push (the PIConGPU particle hot loop,
+    simplified): half electric kick, magnetic rotation, half electric kick,
+    then a position update with periodic wrapping.
+
+``hist_ref``
+    Weighted 1-D histogram with uniform bins over [emin, emax) — the
+    "filter and bin" analysis stage of the paper's Fig. 2 pipeline.
+"""
+
+import jax.numpy as jnp
+
+
+def saxs_ref(pos, w, q_t):
+    """Reference SAXS intensity.
+
+    Args:
+      pos:  [N, 3] float32 particle positions.
+      w:    [1, N] float32 macroparticle weights (constant form factors).
+      q_t:  [3, Q] float32 transposed reciprocal-space vectors.
+
+    Returns:
+      [Q] float32 intensities I(q) = Re^2 + Im^2.
+    """
+    phase = pos @ q_t                      # [N, Q]
+    re = w @ jnp.cos(phase)                # [1, Q]
+    im = w @ jnp.sin(phase)                # [1, Q]
+    return (re * re + im * im)[0]
+
+
+def boris_ref(pos, mom, e_f, b_f, dt, qm, box):
+    """Reference Boris push.
+
+    Args:
+      pos:  [N, 3] positions.
+      mom:  [N, 3] momenta (mass folded into qm; v = mom for m = 1).
+      e_f:  [N, 3] electric field gathered at particle positions.
+      b_f:  [N, 3] magnetic field gathered at particle positions.
+      dt:   scalar time step (python float, baked at trace time).
+      qm:   scalar charge-to-mass ratio.
+      box:  [3] periodic box lengths.
+
+    Returns:
+      (pos', mom') tuple, same shapes.
+    """
+    h = 0.5 * qm * dt
+    v_minus = mom + h * e_f
+    t = h * b_f
+    t2 = jnp.sum(t * t, axis=-1, keepdims=True)
+    s = 2.0 * t / (1.0 + t2)
+    v_prime = v_minus + jnp.cross(v_minus, t)
+    v_plus = v_minus + jnp.cross(v_prime, s)
+    mom_new = v_plus + h * e_f
+    pos_new = pos + dt * mom_new
+    pos_new = pos_new - jnp.floor(pos_new / box) * box
+    return pos_new, mom_new
+
+
+def hist_ref(e, w, emin, emax, nbins):
+    """Reference weighted histogram with uniform binning.
+
+    Args:
+      e:     [1, N] sample values (e.g. particle kinetic energies).
+      w:     [1, N] sample weights.
+      emin, emax: bin range (python floats, baked at trace time).
+      nbins: number of bins (python int).
+
+    Returns:
+      [nbins] float32 weighted counts.  Out-of-range samples are clamped
+      into the first/last bin (matches the kernel; simpler than dropping
+      on TPU and preserves total weight).
+    """
+    width = (emax - emin) / nbins
+    idx = jnp.floor((e - emin) / width).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, nbins - 1)                       # [1, N]
+    onehot = (idx[0][:, None] == jnp.arange(nbins)[None, :]).astype(e.dtype)
+    return (w @ onehot)[0]

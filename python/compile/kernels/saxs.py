@@ -1,0 +1,124 @@
+"""Pallas kernel: kinematical SAXS scattering amplitude (GAPD hot spot).
+
+This is the compute hot path of the paper's second benchmark (Sec. 4.2): the
+GAPD diffraction code consumes particle positions streamed from PIConGPU and
+computes a small-angle X-ray scattering pattern.
+
+Hardware adaptation (CUDA -> TPU, see DESIGN.md "Hardware adaptation"):
+GAPD assigns q-space pixels to CUDA threads and loops over atoms per thread.
+On TPU we instead phrase the kinematic sum as matrix products so the MXU
+systolic array does the heavy lifting:
+
+    phase[N, Q] = pos[N, 3] @ q_t[3, Q]          (MXU)
+    re[1, Q]    = w[1, N] @ cos(phase)           (VPU trig + MXU reduce)
+    im[1, Q]    = w[1, N] @ sin(phase)
+
+The kernel tiles atoms (grid dim 1, innermost) and q-vectors (grid dim 0);
+each (atom-tile, q-tile) block holds a [TA, TQ] phase tile in VMEM and
+accumulates partial re/im sums into the [1, TQ] output block.  The atom grid
+dimension performs the accumulation: at atom-tile 0 the output block is
+initialised, afterwards it is added to — this is the canonical Pallas
+reduction idiom, and it expresses the HBM<->VMEM schedule that the CUDA code
+expressed with its thread-block loop.
+
+VMEM budget per block (TA=256, TQ=512, f32): pos 3 KiB + q_t 6 KiB
++ phase/cos/sin 3 x 512 KiB + w 1 KiB + out 2 x 2 KiB ~= 1.6 MiB, comfortably
+double-bufferable within 16 MiB VMEM.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO which both jax-CPU (tests)
+and the rust PJRT client (runtime) execute.  Real-TPU numbers are estimated
+in DESIGN.md instead of measured.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  TA is the atom-tile (rows of the phase matrix), TQ the
+# q-tile (columns).  Multiples of the (8, 128) f32 TPU tile so a real Mosaic
+# lowering would not pad.
+TILE_ATOMS = 256
+TILE_Q = 512
+
+
+def _saxs_kernel(pos_ref, w_ref, qt_ref, re_ref, im_ref):
+    """One (q-tile, atom-tile) block of the kinematic sum."""
+    atom_tile = pl.program_id(1)
+
+    phase = jnp.dot(pos_ref[...], qt_ref[...],
+                    preferred_element_type=jnp.float32)      # [TA, TQ]
+    w = w_ref[...]                                           # [1, TA]
+    re_part = jnp.dot(w, jnp.cos(phase),
+                      preferred_element_type=jnp.float32)    # [1, TQ]
+    im_part = jnp.dot(w, jnp.sin(phase),
+                      preferred_element_type=jnp.float32)
+
+    @pl.when(atom_tile == 0)
+    def _init():
+        re_ref[...] = re_part
+        im_ref[...] = im_part
+
+    @pl.when(atom_tile != 0)
+    def _accum():
+        re_ref[...] += re_part
+        im_ref[...] += im_part
+
+
+@functools.partial(jax.jit, static_argnames=("tile_atoms", "tile_q"))
+def saxs_amplitude(pos, w, q_t, *, tile_atoms=TILE_ATOMS, tile_q=TILE_Q):
+    """Scattering amplitude via the Pallas kernel.
+
+    Args:
+      pos: [N, 3] positions; N must be a multiple of ``tile_atoms``
+           (use :func:`saxs_intensity` for automatic padding).
+      w:   [1, N] weights.
+      q_t: [3, Q] transposed q-vectors; Q multiple of ``tile_q``.
+
+    Returns:
+      (re, im): two [1, Q] arrays with the real/imaginary amplitude parts.
+    """
+    n, q = pos.shape[0], q_t.shape[1]
+    assert n % tile_atoms == 0, (n, tile_atoms)
+    assert q % tile_q == 0, (q, tile_q)
+    grid = (q // tile_q, n // tile_atoms)  # atom tile innermost => reduction
+
+    return pl.pallas_call(
+        _saxs_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_atoms, 3), lambda j, i: (i, 0)),
+            pl.BlockSpec((1, tile_atoms), lambda j, i: (0, i)),
+            pl.BlockSpec((3, tile_q), lambda j, i: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_q), lambda j, i: (0, j)),
+            pl.BlockSpec((1, tile_q), lambda j, i: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, q), jnp.float32),
+            jax.ShapeDtypeStruct((1, q), jnp.float32),
+        ],
+        interpret=True,
+    )(pos, w, q_t)
+
+
+def saxs_intensity(pos, w, q_t, *, tile_atoms=TILE_ATOMS, tile_q=TILE_Q):
+    """I(q) = |A(q)|^2 with automatic padding to tile multiples.
+
+    Padding atoms with weight zero leaves the amplitude unchanged; padded
+    q-columns are computed and then sliced away.
+    """
+    n, q = pos.shape[0], q_t.shape[1]
+    n_pad = (-n) % tile_atoms
+    q_pad = (-q) % tile_q
+    if n_pad:
+        pos = jnp.concatenate([pos, jnp.zeros((n_pad, 3), pos.dtype)], axis=0)
+        w = jnp.concatenate([w, jnp.zeros((1, n_pad), w.dtype)], axis=1)
+    if q_pad:
+        q_t = jnp.concatenate([q_t, jnp.zeros((3, q_pad), q_t.dtype)], axis=1)
+    re, im = saxs_amplitude(pos, w, q_t, tile_atoms=tile_atoms, tile_q=tile_q)
+    intensity = (re * re + im * im)[0]
+    return intensity[:q]

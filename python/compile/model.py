@@ -1,0 +1,131 @@
+"""L2 — the jax compute graphs of both pipeline endpoints.
+
+The paper's pipeline is  PIConGPU (producer)  --SST-->  GAPD (consumer).
+This module defines the producer's per-step compute (`pic_step`), the
+consumer's diffraction compute (`saxs`), and the auxiliary binning analysis
+(`energy_spectrum`), each calling its L1 Pallas kernel so that kernel and
+surrounding graph lower into a single fused HLO module.
+
+Everything here is build-time only: `aot.py` lowers these functions once to
+HLO text under artifacts/, and the rust coordinator executes the artifacts
+through PJRT.  No python on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import binning, pic_push, saxs
+
+# ---------------------------------------------------------------------------
+# Producer: Kelvin-Helmholtz-flavoured particle-in-cell step
+# ---------------------------------------------------------------------------
+
+# Baked simulation constants (see DESIGN.md: scalars are closed over at
+# lowering time; the coordinator never feeds scalars on the hot path).
+DT = 0.05
+QM = -1.0                    # electron-like charge/mass ratio
+BOX = (64.0, 64.0, 64.0)     # periodic box, matches GRID cells of size 1.0
+GRID = 64                    # field grid is GRID x GRID over the x-y plane
+
+
+def gather_fields(pos, grid_f, box=BOX):
+    """Bilinear, periodic gather of a [G, G, 3] x-y field at positions.
+
+    PIConGPU gathers E/B at particle positions with (higher-order) shape
+    functions; bilinear is the order-1 member of that family and exercises
+    the same memory pattern.  The z coordinate does not index the field
+    (fields are uniform along z) — this keeps the artifact small while
+    preserving a genuinely position-dependent force.
+    """
+    g = grid_f.shape[0]
+    u = pos[:, 0] / box[0] * g
+    v = pos[:, 1] / box[1] * g
+    u0 = jnp.floor(u).astype(jnp.int32)
+    v0 = jnp.floor(v).astype(jnp.int32)
+    fu = (u - u0)[:, None]
+    fv = (v - v0)[:, None]
+    u0 = jnp.mod(u0, g)
+    v0 = jnp.mod(v0, g)
+    u1 = jnp.mod(u0 + 1, g)
+    v1 = jnp.mod(v0 + 1, g)
+    f00 = grid_f[u0, v0]
+    f01 = grid_f[u0, v1]
+    f10 = grid_f[u1, v0]
+    f11 = grid_f[u1, v1]
+    return ((1 - fu) * (1 - fv) * f00 + (1 - fu) * fv * f01
+            + fu * (1 - fv) * f10 + fu * fv * f11)
+
+
+def pic_step(pos, mom, e_grid, b_grid):
+    """One particle-in-cell step: gather fields, Boris push, periodic wrap.
+
+    Args:
+      pos, mom: [N, 3] float32 particle state.
+      e_grid, b_grid: [GRID, GRID, 3] float32 fields on the x-y plane.
+
+    Returns:
+      (pos', mom') — [N, 3] float32 each.
+    """
+    e_f = gather_fields(pos, e_grid)
+    b_f = gather_fields(pos, b_grid)
+    return pic_push.boris_push(pos, mom, e_f, b_f, dt=DT, qm=QM, box=BOX)
+
+
+# ---------------------------------------------------------------------------
+# Consumer: GAPD-style kinematical SAXS pattern
+# ---------------------------------------------------------------------------
+
+def saxs_pattern(pos, w, q_t):
+    """SAXS intensity I(q) for pre-padded shapes (AOT entry point).
+
+    Args:
+      pos: [N, 3] positions, N a multiple of the atom tile.
+      w:   [1, N] weights.
+      q_t: [3, Q] transposed q-vectors, Q a multiple of the q tile.
+
+    Returns:
+      [Q] float32 intensity.
+    """
+    re, im = saxs.saxs_amplitude(pos, w, q_t)
+    return (re * re + im * im)[0]
+
+
+def make_q_grid(q_max, n_q):
+    """A polar q-space detector grid in the x-y scattering plane.
+
+    GAPD supports arbitrary plane detector geometries; for the SAXS
+    benchmark a log-radial x azimuthal grid is the conventional choice.
+    Returns q_t with shape [3, n_q].
+    """
+    n_r = max(1, n_q // 32)
+    n_phi = n_q // n_r
+    r = jnp.geomspace(q_max / 100.0, q_max, n_r)
+    phi = jnp.linspace(0.0, 2.0 * jnp.pi, n_phi, endpoint=False)
+    qx = (r[:, None] * jnp.cos(phi)[None, :]).reshape(-1)
+    qy = (r[:, None] * jnp.sin(phi)[None, :]).reshape(-1)
+    qz = jnp.zeros_like(qx)
+    return jnp.stack([qx, qy, qz], axis=0)[:, :n_q]
+
+
+# ---------------------------------------------------------------------------
+# Analysis: particle energy spectrum (filter + bin)
+# ---------------------------------------------------------------------------
+
+E_MIN = 0.0
+E_MAX = 8.0
+N_BINS = 256
+
+
+def energy_spectrum(mom, w):
+    """Weighted kinetic-energy histogram of the particle stream.
+
+    Args:
+      mom: [N, 3] momenta.
+      w:   [1, N] weights.
+
+    Returns:
+      [N_BINS] float32 spectrum over [E_MIN, E_MAX).
+    """
+    e = 0.5 * jnp.sum(mom * mom, axis=1)[None, :]            # [1, N]
+    return binning.weighted_histogram(
+        e, w, emin=E_MIN, emax=E_MAX, nbins=N_BINS)

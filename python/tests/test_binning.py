@@ -1,0 +1,69 @@
+"""Histogram Pallas kernel vs oracle + conservation properties."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import binning, ref
+
+
+def _samples(rng, n, lo=0.0, hi=8.0):
+    e = jnp.asarray(rng.uniform(lo, hi, size=(1, n)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 3.0, size=(1, n)), jnp.float32)
+    return e, w
+
+
+def test_kernel_matches_ref():
+    rng = np.random.default_rng(0)
+    e, w = _samples(rng, 4096)
+    got = binning.weighted_histogram(e, w, emin=0.0, emax=8.0, nbins=256)
+    want = ref.hist_ref(e, w, 0.0, 8.0, 256)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_total_weight_conserved():
+    rng = np.random.default_rng(1)
+    e, w = _samples(rng, 2048, lo=-5.0, hi=20.0)  # includes out-of-range
+    got = binning.weighted_histogram(e, w, emin=0.0, emax=8.0, nbins=64)
+    np.testing.assert_allclose(jnp.sum(got), jnp.sum(w), rtol=1e-5)
+
+
+def test_single_bin_concentration():
+    e = jnp.full((1, 1024), 3.0, jnp.float32)
+    w = jnp.ones((1, 1024), jnp.float32)
+    got = binning.weighted_histogram(e, w, emin=0.0, emax=8.0, nbins=8)
+    want = jnp.zeros(8).at[3].set(1024.0)
+    np.testing.assert_allclose(got, want)
+
+
+def test_clamping_edges():
+    e = jnp.asarray([[-100.0] * 512 + [100.0] * 512], jnp.float32)
+    w = jnp.ones((1, 1024), jnp.float32)
+    got = binning.weighted_histogram(e, w, emin=0.0, emax=1.0, nbins=16)
+    assert float(got[0]) == 512.0
+    assert float(got[15]) == 512.0
+    assert float(jnp.sum(got[1:15])) == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    nbins=st.sampled_from([16, 64, 128, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_vs_ref(tiles, nbins, seed):
+    rng = np.random.default_rng(seed)
+    e, w = _samples(rng, tiles * 1024, lo=-1.0, hi=9.0)
+    got = binning.weighted_histogram(e, w, emin=0.0, emax=8.0, nbins=nbins)
+    want = ref.hist_ref(e, w, 0.0, 8.0, nbins)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_model_energy_spectrum():
+    rng = np.random.default_rng(2)
+    mom = jnp.asarray(rng.normal(0, 1, size=(2048, 3)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=(1, 2048)), jnp.float32)
+    got = model.energy_spectrum(mom, w)
+    assert got.shape == (model.N_BINS,)
+    np.testing.assert_allclose(jnp.sum(got), jnp.sum(w), rtol=1e-5)

@@ -1,0 +1,108 @@
+"""Boris-push Pallas kernel + L2 pic_step vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import pic_push, ref
+
+BOX = (64.0, 64.0, 64.0)
+
+
+def _state(rng, n):
+    pos = jnp.asarray(rng.uniform(0, 64.0, size=(n, 3)), jnp.float32)
+    mom = jnp.asarray(rng.normal(0, 1.0, size=(n, 3)), jnp.float32)
+    e_f = jnp.asarray(rng.normal(0, 0.1, size=(n, 3)), jnp.float32)
+    b_f = jnp.asarray(rng.normal(0, 0.1, size=(n, 3)), jnp.float32)
+    return pos, mom, e_f, b_f
+
+
+def test_kernel_matches_ref():
+    rng = np.random.default_rng(0)
+    pos, mom, e_f, b_f = _state(rng, 2048)
+    got_p, got_m = pic_push.boris_push(pos, mom, e_f, b_f,
+                                       dt=0.05, qm=-1.0, box=BOX)
+    want_p, want_m = ref.boris_ref(pos, mom, e_f, b_f, 0.05, -1.0,
+                                   jnp.asarray(BOX))
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-5, atol=1e-5)
+
+
+def test_pure_magnetic_rotation_conserves_energy():
+    """With E = 0 the Boris rotation conserves |p| exactly (up to fp)."""
+    rng = np.random.default_rng(1)
+    pos, mom, _, _ = _state(rng, 1024)
+    b_f = jnp.tile(jnp.asarray([[0.0, 0.0, 2.0]], jnp.float32), (1024, 1))
+    e_f = jnp.zeros((1024, 3), jnp.float32)
+    _, mom2 = pic_push.boris_push(pos, mom, e_f, b_f,
+                                  dt=0.1, qm=-1.0, box=BOX)
+    np.testing.assert_allclose(
+        jnp.sum(mom2 * mom2, axis=1), jnp.sum(mom * mom, axis=1),
+        rtol=1e-5)
+
+
+def test_positions_stay_in_box():
+    rng = np.random.default_rng(2)
+    pos, mom, e_f, b_f = _state(rng, 1024)
+    mom = mom * 100.0  # huge velocities to force wrapping
+    pos2, _ = pic_push.boris_push(pos, mom, e_f, b_f,
+                                  dt=0.05, qm=-1.0, box=BOX)
+    assert bool(jnp.all(pos2 >= 0.0))
+    assert bool(jnp.all(pos2 < jnp.asarray(BOX)))
+
+
+def test_zero_fields_free_streaming():
+    rng = np.random.default_rng(3)
+    pos, mom, _, _ = _state(rng, 1024)
+    z = jnp.zeros((1024, 3), jnp.float32)
+    pos2, mom2 = pic_push.boris_push(pos, mom, z, z,
+                                     dt=0.05, qm=-1.0, box=BOX)
+    np.testing.assert_allclose(mom2, mom, rtol=1e-6)
+    want = pos + 0.05 * mom
+    want = want - jnp.floor(want / jnp.asarray(BOX)) * jnp.asarray(BOX)
+    np.testing.assert_allclose(pos2, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    dt=st.floats(min_value=1e-3, max_value=0.2),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_kernel_vs_ref(tiles, dt, seed):
+    rng = np.random.default_rng(seed)
+    n = tiles * 1024
+    pos, mom, e_f, b_f = _state(rng, n)
+    got_p, got_m = pic_push.boris_push(pos, mom, e_f, b_f,
+                                       dt=dt, qm=-1.0, box=BOX)
+    want_p, want_m = ref.boris_ref(pos, mom, e_f, b_f, dt, -1.0,
+                                   jnp.asarray(BOX))
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-4, atol=1e-4)
+
+
+def test_model_pic_step_shapes_and_wrap():
+    rng = np.random.default_rng(4)
+    n = 2048
+    pos = jnp.asarray(rng.uniform(0, 64.0, size=(n, 3)), jnp.float32)
+    mom = jnp.asarray(rng.normal(0, 1, size=(n, 3)), jnp.float32)
+    g = model.GRID
+    e_grid = jnp.asarray(rng.normal(0, 0.1, size=(g, g, 3)), jnp.float32)
+    b_grid = jnp.asarray(rng.normal(0, 0.1, size=(g, g, 3)), jnp.float32)
+    pos2, mom2 = model.pic_step(pos, mom, e_grid, b_grid)
+    assert pos2.shape == (n, 3) and mom2.shape == (n, 3)
+    assert bool(jnp.all(pos2 >= 0)) and bool(jnp.all(pos2 < 64.0))
+
+
+def test_gather_fields_constant_field():
+    """Gathering a constant field returns that constant everywhere."""
+    rng = np.random.default_rng(5)
+    pos = jnp.asarray(rng.uniform(0, 64.0, size=(256, 3)), jnp.float32)
+    g = model.GRID
+    const = jnp.tile(jnp.asarray([[1.0, -2.0, 3.0]], jnp.float32),
+                     (g * g, 1)).reshape(g, g, 3)
+    got = model.gather_fields(pos, const)
+    np.testing.assert_allclose(
+        got, jnp.tile(jnp.asarray([[1.0, -2.0, 3.0]]), (256, 1)),
+        rtol=1e-5, atol=1e-5)

@@ -1,0 +1,105 @@
+"""SAXS Pallas kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, saxs
+
+
+def _random_case(rng, n, q, scale=1.0):
+    pos = jnp.asarray(rng.uniform(0.0, 64.0, size=(n, 3)), jnp.float32) * scale
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=(1, n)), jnp.float32)
+    q_t = jnp.asarray(rng.normal(0.0, 0.3, size=(3, q)), jnp.float32)
+    return pos, w, q_t
+
+
+def test_amplitude_matches_ref_exact_tiles():
+    rng = np.random.default_rng(0)
+    pos, w, q_t = _random_case(rng, 512, 1024)
+    re, im = saxs.saxs_amplitude(pos, w, q_t)
+    phase = pos @ q_t
+    np.testing.assert_allclose(re, w @ jnp.cos(phase), rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(im, w @ jnp.sin(phase), rtol=2e-4, atol=2e-3)
+
+
+def test_intensity_matches_ref():
+    rng = np.random.default_rng(1)
+    pos, w, q_t = _random_case(rng, 512, 512)
+    got = saxs.saxs_intensity(pos, w, q_t)
+    want = ref.saxs_ref(pos, w, q_t)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-1)
+
+
+def test_intensity_padding_is_exact():
+    """Ragged N/Q must give identical results to an un-tiled reference."""
+    rng = np.random.default_rng(2)
+    pos, w, q_t = _random_case(rng, 300, 77)
+    got = saxs.saxs_intensity(pos, w, q_t)
+    want = ref.saxs_ref(pos, w, q_t)
+    assert got.shape == (77,)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-1)
+
+
+def test_zero_q_gives_total_weight_squared():
+    """I(q=0) = (sum w)^2 — a physics sanity invariant."""
+    rng = np.random.default_rng(3)
+    pos, w, _ = _random_case(rng, 256, 8)
+    q_t = jnp.zeros((3, 8), jnp.float32)
+    got = saxs.saxs_intensity(pos, w, q_t)
+    total = float(jnp.sum(w)) ** 2
+    np.testing.assert_allclose(got, jnp.full((8,), total), rtol=1e-5)
+
+
+def test_single_atom_unit_intensity():
+    """One atom of weight 1 scatters |e^{iq.r}|^2 = 1 at every q."""
+    pos = jnp.asarray([[1.0, 2.0, 3.0]], jnp.float32)
+    w = jnp.ones((1, 1), jnp.float32)
+    q_t = jnp.asarray(np.random.default_rng(4).normal(size=(3, 16)),
+                      jnp.float32)
+    got = saxs.saxs_intensity(pos, w, q_t)
+    np.testing.assert_allclose(got, jnp.ones((16,)), rtol=1e-5, atol=1e-5)
+
+
+def test_translation_invariance():
+    """|A(q)|^2 is invariant under rigid translation of all atoms."""
+    rng = np.random.default_rng(5)
+    pos, w, q_t = _random_case(rng, 128, 32)
+    base = saxs.saxs_intensity(pos, w, q_t)
+    shifted = saxs.saxs_intensity(pos + jnp.asarray([1.5, -2.0, 0.25]), w, q_t)
+    np.testing.assert_allclose(base, shifted, rtol=5e-3, atol=5e-1)
+
+
+def test_custom_tiles():
+    rng = np.random.default_rng(6)
+    pos, w, q_t = _random_case(rng, 256, 256)
+    a = saxs.saxs_intensity(pos, w, q_t, tile_atoms=64, tile_q=128)
+    b = ref.saxs_ref(pos, w, q_t)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=400),
+    q=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_shapes(n, q, seed):
+    """Property sweep over ragged shapes: kernel == oracle."""
+    rng = np.random.default_rng(seed)
+    pos, w, q_t = _random_case(rng, n, q)
+    got = saxs.saxs_intensity(pos, w, q_t, tile_atoms=64, tile_q=128)
+    want = ref.saxs_ref(pos, w, q_t)
+    np.testing.assert_allclose(got, want, rtol=2e-3,
+                               atol=1e-3 * max(1.0, float(n)) ** 2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_dtype_roundtrip(dtype):
+    rng = np.random.default_rng(7)
+    pos, w, q_t = _random_case(rng, 64, 64)
+    got = saxs.saxs_intensity(pos.astype(dtype), w.astype(dtype),
+                              q_t.astype(dtype))
+    assert got.dtype == jnp.float32

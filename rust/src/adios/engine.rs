@@ -1,0 +1,246 @@
+//! The step-oriented engine abstraction.
+//!
+//! Mirrors the ADIOS2 programming model the paper relies on: an engine is
+//! opened in write or read mode; IO happens in *steps* (here: one openPMD
+//! iteration per step); within a step the writer `put`s chunks of named
+//! variables and attributes, the reader inspects available variables /
+//! chunks and `get`s selections. `begin_step` on the read side reports
+//! whether a step is available, and on the write side may *discard* the
+//! step under backpressure (SST's `QueueFullPolicy=Discard`, the mechanism
+//! behind the paper's "outputs are dropped as soon as the IO time cannot
+//! be hidden" behaviour).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
+use crate::openpmd::types::Datatype;
+use crate::openpmd::Attribute;
+
+/// Reference-counted, immutable data buffer.
+///
+/// Chunk payloads are handed between pipeline stages as `Bytes`; the
+/// in-process transport forwards the `Arc` itself (zero-copy — the
+/// property RDMA buys on real fabric).
+pub type Bytes = Arc<Vec<u8>>;
+
+/// Open mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Write,
+    Read,
+}
+
+/// Result of `begin_step`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepStatus {
+    /// Step is open; proceed with put/get.
+    Ok,
+    /// (read) No step available yet — poll again later.
+    NotReady,
+    /// (write, Discard policy) Writer queue full: the step was discarded
+    /// before any data movement; the producer continues unblocked.
+    Discarded,
+    /// Stream ended: writer closed (read) / engine closed (write).
+    EndOfStream,
+}
+
+/// Variable declaration for `put`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VarDecl {
+    pub name: String,
+    pub dtype: Datatype,
+    /// Global dataset extent.
+    pub shape: Vec<u64>,
+}
+
+impl VarDecl {
+    pub fn new(name: impl Into<String>, dtype: Datatype,
+               shape: Vec<u64>) -> Self {
+        VarDecl { name: name.into(), dtype, shape }
+    }
+}
+
+/// Variable metadata visible on the read side.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VarInfo {
+    pub name: String,
+    pub dtype: Datatype,
+    pub shape: Vec<u64>,
+}
+
+/// The engine trait. One instance per parallel rank and stream.
+///
+/// Engines are `Send` so ranks can run on their own threads; they are not
+/// `Sync` — concurrency between ranks, not within one.
+pub trait Engine: Send {
+    /// Engine family name, e.g. `"bp"`, `"sst"`, `"json"`.
+    fn engine_type(&self) -> &'static str;
+
+    fn mode(&self) -> Mode;
+
+    /// Open the next step.
+    fn begin_step(&mut self) -> Result<StepStatus>;
+
+    /// (write) Declare-and-write one chunk of a variable.
+    fn put(&mut self, var: &VarDecl, chunk: Chunk, data: Bytes) -> Result<()>;
+
+    /// (write) Attach an attribute to the current step.
+    fn put_attribute(&mut self, name: &str, value: Attribute) -> Result<()>;
+
+    /// (read) Variables visible in the current step.
+    fn available_variables(&self) -> Vec<VarInfo>;
+
+    /// (read) Chunk table of a variable in the current step — the input to
+    /// the §3 distribution strategies.
+    fn available_chunks(&self, var: &str) -> Vec<WrittenChunkInfo>;
+
+    /// (read) Attributes of the current step.
+    fn attribute(&self, name: &str) -> Option<Attribute>;
+
+    /// (read) All attribute names in the current step.
+    fn attribute_names(&self) -> Vec<String>;
+
+    /// (read) Load a selection. Blocking; returns densely packed bytes in
+    /// row-major order of the selection.
+    fn get(&mut self, var: &str, selection: Chunk) -> Result<Bytes>;
+
+    /// Close the current step. On the write side this *publishes* the step
+    /// (file flush / stream delivery).
+    fn end_step(&mut self) -> Result<()>;
+
+    /// Close the engine (writer: signals end-of-stream to readers).
+    fn close(&mut self) -> Result<()>;
+}
+
+/// Runtime-selectable engine kind — the *flexibility* property: which
+/// backend moves the bytes is a config value, not code.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// BP file engine; value = number of writer ranks per aggregate file.
+    Bp { aggregation: usize },
+    /// SST staging engine over the named transport ("inproc" | "tcp").
+    Sst { transport: String },
+    /// Serial JSON files.
+    Json,
+}
+
+impl EngineKind {
+    /// Parse `"bp"`, `"bp:6"`, `"sst"`, `"sst:tcp"`, `"json"`.
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        let (kind, arg) = match s.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (s, None),
+        };
+        Ok(match kind.to_ascii_lowercase().as_str() {
+            "bp" => EngineKind::Bp {
+                aggregation: arg.map(|a| a.parse()).transpose()?.unwrap_or(1),
+            },
+            "sst" => EngineKind::Sst {
+                transport: arg.unwrap_or("inproc").to_string(),
+            },
+            "json" => EngineKind::Json,
+            other => anyhow::bail!("unknown engine kind {other:?}"),
+        })
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineKind::Bp { aggregation } => write!(f, "bp:{aggregation}"),
+            EngineKind::Sst { transport } => write!(f, "sst:{transport}"),
+            EngineKind::Json => write!(f, "json"),
+        }
+    }
+}
+
+/// Helpers to view/copy typed slices as bytes (little-endian, host order —
+/// the formats are not portable across endianness, as with real BP files
+/// written without conversion).
+pub mod cast {
+    use super::Bytes;
+    use std::sync::Arc;
+
+    pub fn f32_to_bytes(xs: &[f32]) -> Bytes {
+        let mut v = Vec::with_capacity(xs.len() * 4);
+        for x in xs {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        Arc::new(v)
+    }
+
+    pub fn bytes_to_f32(b: &[u8]) -> Vec<f32> {
+        assert_eq!(b.len() % 4, 0);
+        b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn f64_to_bytes(xs: &[f64]) -> Bytes {
+        let mut v = Vec::with_capacity(xs.len() * 8);
+        for x in xs {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        Arc::new(v)
+    }
+
+    pub fn bytes_to_f64(b: &[u8]) -> Vec<f64> {
+        assert_eq!(b.len() % 8, 0);
+        b.chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    pub fn u64_to_bytes(xs: &[u64]) -> Bytes {
+        let mut v = Vec::with_capacity(xs.len() * 8);
+        for x in xs {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        Arc::new(v)
+    }
+
+    pub fn bytes_to_u64(b: &[u8]) -> Vec<u64> {
+        assert_eq!(b.len() % 8, 0);
+        b.chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parsing() {
+        assert_eq!(EngineKind::parse("bp").unwrap(),
+                   EngineKind::Bp { aggregation: 1 });
+        assert_eq!(EngineKind::parse("bp:6").unwrap(),
+                   EngineKind::Bp { aggregation: 6 });
+        assert_eq!(EngineKind::parse("sst").unwrap(),
+                   EngineKind::Sst { transport: "inproc".into() });
+        assert_eq!(EngineKind::parse("sst:tcp").unwrap(),
+                   EngineKind::Sst { transport: "tcp".into() });
+        assert_eq!(EngineKind::parse("json").unwrap(), EngineKind::Json);
+        assert!(EngineKind::parse("hdf5").is_err());
+    }
+
+    #[test]
+    fn engine_kind_display_round_trips() {
+        for s in ["bp:6", "sst:tcp", "json"] {
+            assert_eq!(EngineKind::parse(s).unwrap().to_string(), s);
+        }
+    }
+
+    #[test]
+    fn cast_round_trips() {
+        let xs = vec![1.0f32, -2.5, 3.25];
+        assert_eq!(cast::bytes_to_f32(&cast::f32_to_bytes(&xs)), xs);
+        let ys = vec![1.0f64, -2.5];
+        assert_eq!(cast::bytes_to_f64(&cast::f64_to_bytes(&ys)), ys);
+        let zs = vec![7u64, 8, 9];
+        assert_eq!(cast::bytes_to_u64(&cast::u64_to_bytes(&zs)), zs);
+    }
+}

@@ -1,0 +1,552 @@
+//! Serial JSON backend (S6): the prototyping engine at the bottom of the
+//! paper's Fig. 3 stack ("a serial JSON backend serves for prototyping
+//! and learning purposes").
+//!
+//! One file per step, `step-<N>.json` in a directory, data inline as
+//! number arrays. Slow and verbose by design — its value is that a human
+//! can `cat` a step and see the full self-describing structure.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{Bytes, Engine, Mode, StepStatus, VarDecl, VarInfo};
+use super::region;
+use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
+use crate::openpmd::types::Datatype;
+use crate::openpmd::Attribute;
+use crate::util::json::{parse, Json};
+
+/// Encode a payload as a JSON number array for its dtype.
+fn data_to_json(dtype: Datatype, data: &[u8]) -> Json {
+    let mut arr = Vec::new();
+    match dtype {
+        Datatype::F32 => {
+            for c in data.chunks_exact(4) {
+                arr.push(Json::Num(
+                    f32::from_le_bytes(c.try_into().unwrap()) as f64
+                ));
+            }
+        }
+        Datatype::F64 => {
+            for c in data.chunks_exact(8) {
+                arr.push(Json::Num(f64::from_le_bytes(c.try_into().unwrap())));
+            }
+        }
+        Datatype::I32 => {
+            for c in data.chunks_exact(4) {
+                arr.push(Json::Num(
+                    i32::from_le_bytes(c.try_into().unwrap()) as f64
+                ));
+            }
+        }
+        Datatype::I64 => {
+            for c in data.chunks_exact(8) {
+                arr.push(Json::Num(
+                    i64::from_le_bytes(c.try_into().unwrap()) as f64
+                ));
+            }
+        }
+        Datatype::U32 => {
+            for c in data.chunks_exact(4) {
+                arr.push(Json::Num(
+                    u32::from_le_bytes(c.try_into().unwrap()) as f64
+                ));
+            }
+        }
+        Datatype::U64 => {
+            for c in data.chunks_exact(8) {
+                arr.push(Json::Num(
+                    u64::from_le_bytes(c.try_into().unwrap()) as f64
+                ));
+            }
+        }
+        Datatype::U8 => {
+            for b in data {
+                arr.push(Json::Num(*b as f64));
+            }
+        }
+    }
+    Json::Arr(arr)
+}
+
+fn json_to_data(dtype: Datatype, arr: &[Json]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(arr.len() * dtype.size());
+    for v in arr {
+        let x = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("non-numeric data entry"))?;
+        match dtype {
+            Datatype::F32 => out.extend_from_slice(&(x as f32).to_le_bytes()),
+            Datatype::F64 => out.extend_from_slice(&x.to_le_bytes()),
+            Datatype::I32 => out.extend_from_slice(&(x as i32).to_le_bytes()),
+            Datatype::I64 => out.extend_from_slice(&(x as i64).to_le_bytes()),
+            Datatype::U32 => out.extend_from_slice(&(x as u32).to_le_bytes()),
+            Datatype::U64 => out.extend_from_slice(&(x as u64).to_le_bytes()),
+            Datatype::U8 => out.push(x as u8),
+        }
+    }
+    Ok(out)
+}
+
+fn attr_to_json(a: &Attribute) -> Json {
+    match a {
+        Attribute::Str(s) => Json::Str(s.clone()),
+        Attribute::F64(x) => Json::Num(*x),
+        Attribute::I64(x) => Json::Num(*x as f64),
+        Attribute::U64(x) => Json::Num(*x as f64),
+        Attribute::Bool(b) => Json::Bool(*b),
+        Attribute::VecF64(v) => {
+            Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
+        }
+        Attribute::VecU64(v) => {
+            Json::Arr(v.iter().map(|x| Json::Num(*x as f64)).collect())
+        }
+        Attribute::VecStr(v) => {
+            Json::Arr(v.iter().map(|s| Json::Str(s.clone())).collect())
+        }
+    }
+}
+
+fn json_to_attr(j: &Json) -> Attribute {
+    match j {
+        Json::Str(s) => Attribute::Str(s.clone()),
+        Json::Num(x) => Attribute::F64(*x),
+        Json::Bool(b) => Attribute::Bool(*b),
+        Json::Arr(v) if v.iter().all(|x| matches!(x, Json::Str(_))) => {
+            Attribute::VecStr(
+                v.iter().map(|x| x.as_str().unwrap().to_string()).collect(),
+            )
+        }
+        Json::Arr(v) => Attribute::VecF64(
+            v.iter().map(|x| x.as_f64().unwrap_or(f64::NAN)).collect(),
+        ),
+        _ => Attribute::Str(j.to_string()),
+    }
+}
+
+// ======================================================================
+
+/// Writer: one pretty-printed JSON file per step.
+pub struct JsonWriter {
+    dir: PathBuf,
+    rank: usize,
+    hostname: String,
+    step: u64,
+    current: Option<(BTreeMap<String, Attribute>,
+                     BTreeMap<String, (VarDecl, Vec<(Chunk, Bytes)>)>)>,
+}
+
+impl JsonWriter {
+    pub fn create(dir: impl AsRef<Path>, rank: usize,
+                  hostname: &str) -> Result<JsonWriter> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        Ok(JsonWriter {
+            dir,
+            rank,
+            hostname: hostname.to_string(),
+            step: 0,
+            current: None,
+        })
+    }
+}
+
+impl Engine for JsonWriter {
+    fn engine_type(&self) -> &'static str {
+        "json"
+    }
+
+    fn mode(&self) -> Mode {
+        Mode::Write
+    }
+
+    fn begin_step(&mut self) -> Result<StepStatus> {
+        if self.current.is_some() {
+            bail!("begin_step while a step is open");
+        }
+        self.current = Some((BTreeMap::new(), BTreeMap::new()));
+        Ok(StepStatus::Ok)
+    }
+
+    fn put(&mut self, var: &VarDecl, chunk: Chunk, data: Bytes) -> Result<()> {
+        let (_, vars) = self
+            .current
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("put outside step"))?;
+        let expect = chunk.num_elements() as usize * var.dtype.size();
+        if data.len() != expect {
+            bail!("payload size mismatch for {}", var.name);
+        }
+        vars.entry(var.name.clone())
+            .or_insert_with(|| (var.clone(), Vec::new()))
+            .1
+            .push((chunk, data));
+        Ok(())
+    }
+
+    fn put_attribute(&mut self, name: &str, value: Attribute) -> Result<()> {
+        let (attrs, _) = self
+            .current
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("put_attribute outside step"))?;
+        attrs.insert(name.to_string(), value);
+        Ok(())
+    }
+
+    fn available_variables(&self) -> Vec<VarInfo> {
+        Vec::new()
+    }
+
+    fn available_chunks(&self, _var: &str) -> Vec<WrittenChunkInfo> {
+        Vec::new()
+    }
+
+    fn attribute(&self, _name: &str) -> Option<Attribute> {
+        None
+    }
+
+    fn attribute_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    fn get(&mut self, _var: &str, _sel: Chunk) -> Result<Bytes> {
+        bail!("get on a write-mode JSON engine")
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        let (attrs, vars) = self
+            .current
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("end_step without begin_step"))?;
+        let mut attr_obj = BTreeMap::new();
+        for (k, v) in &attrs {
+            attr_obj.insert(k.clone(), attr_to_json(v));
+        }
+        let mut var_obj = BTreeMap::new();
+        for (name, (decl, chunks)) in &vars {
+            let mut chunk_arr = Vec::new();
+            for (chunk, data) in chunks {
+                let mut c = BTreeMap::new();
+                c.insert(
+                    "offset".into(),
+                    Json::Arr(chunk.offset.iter()
+                              .map(|x| Json::Num(*x as f64)).collect()),
+                );
+                c.insert(
+                    "extent".into(),
+                    Json::Arr(chunk.extent.iter()
+                              .map(|x| Json::Num(*x as f64)).collect()),
+                );
+                c.insert("sourceRank".into(),
+                         Json::Num(self.rank as f64));
+                c.insert("hostname".into(),
+                         Json::Str(self.hostname.clone()));
+                c.insert("data".into(), data_to_json(decl.dtype, data));
+                chunk_arr.push(Json::Obj(c));
+            }
+            let mut v = BTreeMap::new();
+            v.insert("dtype".into(),
+                     Json::Str(decl.dtype.name().to_string()));
+            v.insert(
+                "shape".into(),
+                Json::Arr(decl.shape.iter()
+                          .map(|x| Json::Num(*x as f64)).collect()),
+            );
+            v.insert("chunks".into(), Json::Arr(chunk_arr));
+            var_obj.insert(name.clone(), Json::Obj(v));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("step".into(), Json::Num(self.step as f64));
+        doc.insert("attributes".into(), Json::Obj(attr_obj));
+        doc.insert("variables".into(), Json::Obj(var_obj));
+        let path = self.dir.join(format!("step-{}.json", self.step));
+        std::fs::write(&path, Json::Obj(doc).to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        self.step += 1;
+        Ok(())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        if self.current.is_some() {
+            self.end_step()?;
+        }
+        Ok(())
+    }
+}
+
+// ======================================================================
+
+/// Reader: consumes `step-N.json` files in order.
+pub struct JsonReader {
+    dir: PathBuf,
+    step: u64,
+    current: Option<Json>,
+}
+
+impl JsonReader {
+    pub fn open(dir: impl AsRef<Path>) -> Result<JsonReader> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            bail!("{} is not a directory", dir.display());
+        }
+        Ok(JsonReader { dir, step: 0, current: None })
+    }
+
+    fn var(&self, name: &str) -> Option<&Json> {
+        self.current.as_ref()?.get("variables")?.get(name)
+    }
+}
+
+fn parse_dtype(s: &str) -> Result<Datatype> {
+    Ok(match s {
+        "f32" => Datatype::F32,
+        "f64" => Datatype::F64,
+        "i32" => Datatype::I32,
+        "i64" => Datatype::I64,
+        "u32" => Datatype::U32,
+        "u64" => Datatype::U64,
+        "u8" => Datatype::U8,
+        other => bail!("unknown dtype {other:?}"),
+    })
+}
+
+impl Engine for JsonReader {
+    fn engine_type(&self) -> &'static str {
+        "json"
+    }
+
+    fn mode(&self) -> Mode {
+        Mode::Read
+    }
+
+    fn begin_step(&mut self) -> Result<StepStatus> {
+        if self.current.is_some() {
+            bail!("begin_step while a step is open");
+        }
+        let path = self.dir.join(format!("step-{}.json", self.step));
+        if !path.exists() {
+            return Ok(StepStatus::EndOfStream);
+        }
+        let text = std::fs::read_to_string(&path)?;
+        self.current =
+            Some(parse(&text).map_err(|e| anyhow::anyhow!(e))?);
+        Ok(StepStatus::Ok)
+    }
+
+    fn put(&mut self, _var: &VarDecl, _chunk: Chunk, _data: Bytes)
+        -> Result<()>
+    {
+        bail!("put on a read-mode JSON engine")
+    }
+
+    fn put_attribute(&mut self, _name: &str, _value: Attribute) -> Result<()> {
+        bail!("put_attribute on a read-mode JSON engine")
+    }
+
+    fn available_variables(&self) -> Vec<VarInfo> {
+        let mut out = Vec::new();
+        if let Some(vars) = self
+            .current
+            .as_ref()
+            .and_then(|c| c.get("variables"))
+            .and_then(|v| v.as_obj())
+        {
+            for (name, v) in vars {
+                let dtype = v
+                    .get("dtype")
+                    .and_then(|d| d.as_str())
+                    .and_then(|s| parse_dtype(s).ok());
+                let shape = v.get("shape").and_then(|s| s.as_u64_vec());
+                if let (Some(dtype), Some(shape)) = (dtype, shape) {
+                    out.push(VarInfo { name: name.clone(), dtype, shape });
+                }
+            }
+        }
+        out
+    }
+
+    fn available_chunks(&self, var: &str) -> Vec<WrittenChunkInfo> {
+        let mut out = Vec::new();
+        if let Some(chunks) = self
+            .var(var)
+            .and_then(|v| v.get("chunks"))
+            .and_then(|c| c.as_arr())
+        {
+            for c in chunks {
+                let offset = c.get("offset").and_then(|o| o.as_u64_vec());
+                let extent = c.get("extent").and_then(|e| e.as_u64_vec());
+                let rank = c
+                    .get("sourceRank")
+                    .and_then(|r| r.as_u64())
+                    .unwrap_or(0) as usize;
+                let hostname = c
+                    .get("hostname")
+                    .and_then(|h| h.as_str())
+                    .unwrap_or("")
+                    .to_string();
+                if let (Some(offset), Some(extent)) = (offset, extent) {
+                    out.push(WrittenChunkInfo {
+                        chunk: Chunk { offset, extent },
+                        source_rank: rank,
+                        hostname,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    fn attribute(&self, name: &str) -> Option<Attribute> {
+        self.current
+            .as_ref()?
+            .get("attributes")?
+            .get(name)
+            .map(json_to_attr)
+    }
+
+    fn attribute_names(&self) -> Vec<String> {
+        self.current
+            .as_ref()
+            .and_then(|c| c.get("attributes"))
+            .and_then(|a| a.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    fn get(&mut self, var: &str, selection: Chunk) -> Result<Bytes> {
+        let info = self
+            .available_variables()
+            .into_iter()
+            .find(|v| v.name == var)
+            .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))?;
+        let elem = info.dtype.size();
+        let chunks = self
+            .var(var)
+            .and_then(|v| v.get("chunks"))
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("no chunks for {var:?}"))?;
+        let mut out = vec![0u8; selection.num_elements() as usize * elem];
+        let mut covered = 0u64;
+        for c in chunks {
+            let offset = c
+                .get("offset")
+                .and_then(|o| o.as_u64_vec())
+                .ok_or_else(|| anyhow::anyhow!("chunk missing offset"))?;
+            let extent = c
+                .get("extent")
+                .and_then(|e| e.as_u64_vec())
+                .ok_or_else(|| anyhow::anyhow!("chunk missing extent"))?;
+            let chunk = Chunk { offset, extent };
+            if chunk.intersect(&selection).is_none() {
+                continue;
+            }
+            let arr = c
+                .get("data")
+                .and_then(|d| d.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("chunk missing data"))?;
+            let data = json_to_data(info.dtype, arr)?;
+            covered += region::copy_region(
+                &chunk, &data, &selection, &mut out, elem,
+            );
+        }
+        if covered < selection.num_elements() {
+            bail!("selection only partially covered");
+        }
+        Ok(Arc::new(out))
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        if self.current.take().is_none() {
+            bail!("end_step without begin_step");
+        }
+        self.step += 1;
+        Ok(())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        self.current = None;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::engine::cast;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "openpmd-stream-json-{name}-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let dir = tmp_dir("rt");
+        let mut w = JsonWriter::create(&dir, 2, "nodeA").unwrap();
+        w.begin_step().unwrap();
+        w.put_attribute("/data/0/time", Attribute::F64(0.5)).unwrap();
+        w.put_attribute("labels",
+                        Attribute::VecStr(vec!["x".into(), "y".into()]))
+            .unwrap();
+        let var = VarDecl::new("/data/0/particles/e/weighting",
+                               Datatype::F32, vec![6]);
+        w.put(&var, Chunk::new(vec![0], vec![3]),
+              cast::f32_to_bytes(&[1.0, 2.0, 3.0]))
+            .unwrap();
+        w.put(&var, Chunk::new(vec![3], vec![3]),
+              cast::f32_to_bytes(&[4.0, 5.0, 6.0]))
+            .unwrap();
+        w.end_step().unwrap();
+        w.close().unwrap();
+
+        let mut r = JsonReader::open(&dir).unwrap();
+        assert_eq!(r.begin_step().unwrap(), StepStatus::Ok);
+        assert_eq!(r.attribute("/data/0/time").unwrap().as_f64(), Some(0.5));
+        let vars = r.available_variables();
+        assert_eq!(vars.len(), 1);
+        assert_eq!(vars[0].dtype, Datatype::F32);
+        let chunks = r.available_chunks(&vars[0].name);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0].hostname, "nodeA");
+        assert_eq!(chunks[0].source_rank, 2);
+        let data = r.get(&vars[0].name, Chunk::new(vec![1], vec![4])).unwrap();
+        assert_eq!(cast::bytes_to_f32(&data), vec![2.0, 3.0, 4.0, 5.0]);
+        r.end_step().unwrap();
+        assert_eq!(r.begin_step().unwrap(), StepStatus::EndOfStream);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_is_human_readable() {
+        let dir = tmp_dir("human");
+        let mut w = JsonWriter::create(&dir, 0, "h").unwrap();
+        w.begin_step().unwrap();
+        let var = VarDecl::new("/x", Datatype::U8, vec![2]);
+        w.put(&var, Chunk::new(vec![0], vec![2]), Arc::new(vec![7, 9]))
+            .unwrap();
+        w.end_step().unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("step-0.json")).unwrap();
+        assert!(text.contains("\"variables\""));
+        assert!(text.contains("\"/x\""));
+        assert!(text.contains('\n')); // pretty-printed
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_dir_is_end_of_stream() {
+        let dir = tmp_dir("empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut r = JsonReader::open(&dir).unwrap();
+        assert_eq!(r.begin_step().unwrap(), StepStatus::EndOfStream);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,30 @@
+//! The adaptable IO layer (S2–S6): one step-oriented engine API,
+//! interchangeable backends, runtime selection — the ADIOS2 role in the
+//! paper's software stack (Fig. 3).
+//!
+//! Backends:
+//!
+//! * [`bp`] — the **BP** binary-pack *file* engine: persistent storage with
+//!   node-level aggregation (one file per aggregator), the paper's
+//!   "BP-only" baseline.
+//! * [`sst`] — the **SST** *staging* engine: publish/subscribe loose
+//!   coupling entirely in memory/network, bypassing the filesystem; the
+//!   paper's focus. Rides on a pluggable [`transport`].
+//! * [`json`] — a serial JSON backend for prototyping and debugging
+//!   (bottom of Fig. 3), trading performance for `cat`-ability.
+//!
+//! The *reusability* property (§2.1): application code is written against
+//! [`Engine`] + [`EngineKind`] and switches between file IO and streaming
+//! by changing a runtime parameter, not code.
+
+pub mod engine;
+pub mod bp;
+pub mod json;
+pub mod region;
+pub mod sst;
+pub mod transport;
+pub mod wire;
+
+pub use engine::{
+    Bytes, Engine, EngineKind, Mode, StepStatus, VarDecl, VarInfo,
+};

@@ -1,0 +1,198 @@
+//! Dense n-dimensional region copies.
+//!
+//! Engines store chunk payloads densely in row-major order of the chunk's
+//! own extent. Serving a `get(selection)` means copying the intersection
+//! of each stored chunk into the right place of the selection's dense
+//! buffer — the *alignment* property of §3.1 exists precisely because
+//! this re-assembly is work that perfectly aligned reads avoid.
+
+use crate::openpmd::chunk::Chunk;
+
+/// Row-major strides (in elements) for an extent.
+pub fn strides(extent: &[u64]) -> Vec<u64> {
+    let nd = extent.len();
+    let mut s = vec![1u64; nd];
+    for d in (0..nd.saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * extent[d + 1];
+    }
+    s
+}
+
+/// Linear element index of `point` (absolute coords) within `chunk`.
+fn linear_index(chunk: &Chunk, point: &[u64], strides: &[u64]) -> u64 {
+    let mut idx = 0;
+    for d in 0..point.len() {
+        idx += (point[d] - chunk.offset[d]) * strides[d];
+    }
+    idx
+}
+
+/// Copy the intersection of `src_chunk` (backed by `src`, dense row-major)
+/// and `dst_chunk` (backed by `dst`) from `src` into `dst`.
+///
+/// `elem` is the element size in bytes. Returns the number of elements
+/// copied (0 if disjoint).
+pub fn copy_region(
+    src_chunk: &Chunk,
+    src: &[u8],
+    dst_chunk: &Chunk,
+    dst: &mut [u8],
+    elem: usize,
+) -> u64 {
+    let inter = match src_chunk.intersect(dst_chunk) {
+        Some(i) => i,
+        None => return 0,
+    };
+    let nd = inter.ndim();
+    debug_assert_eq!(src.len() as u64,
+                     src_chunk.num_elements() * elem as u64);
+    debug_assert_eq!(dst.len() as u64,
+                     dst_chunk.num_elements() * elem as u64);
+
+    let s_str = strides(&src_chunk.extent);
+    let d_str = strides(&dst_chunk.extent);
+
+    if nd == 0 {
+        dst[..elem].copy_from_slice(&src[..elem]);
+        return 1;
+    }
+
+    // Iterate over all "rows" of the intersection: the innermost dimension
+    // is contiguous in both buffers, so each row is one memcpy.
+    let row_len = inter.extent[nd - 1];
+    let row_bytes = row_len as usize * elem;
+    let outer_dims = &inter.extent[..nd - 1];
+    let n_rows: u64 = outer_dims.iter().product();
+
+    let mut point = inter.offset.clone();
+    let mut copied = 0u64;
+    for _ in 0..n_rows.max(1) {
+        let s_idx = linear_index(src_chunk, &point, &s_str) as usize * elem;
+        let d_idx = linear_index(dst_chunk, &point, &d_str) as usize * elem;
+        dst[d_idx..d_idx + row_bytes]
+            .copy_from_slice(&src[s_idx..s_idx + row_bytes]);
+        copied += row_len;
+        // Advance the outer index (odometer), innermost-first.
+        for d in (0..nd - 1).rev() {
+            point[d] += 1;
+            if point[d] < inter.offset[d] + inter.extent[d] {
+                break;
+            }
+            point[d] = inter.offset[d];
+        }
+    }
+    copied
+}
+
+/// Extract a selection from a single chunk into a fresh dense buffer.
+/// Panics if the chunk does not fully contain the selection.
+pub fn extract(
+    src_chunk: &Chunk,
+    src: &[u8],
+    selection: &Chunk,
+    elem: usize,
+) -> Vec<u8> {
+    assert!(src_chunk.contains(selection),
+            "extract: {selection:?} not contained in {src_chunk:?}");
+    let mut out = vec![0u8; selection.num_elements() as usize * elem];
+    let copied = copy_region(src_chunk, src, selection, &mut out, elem);
+    debug_assert_eq!(copied, selection.num_elements());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill_pattern(chunk: &Chunk) -> Vec<u8> {
+        // Element value = its absolute odometer coordinate hash, 4 bytes.
+        let n = chunk.num_elements() as usize;
+        let st = strides(&chunk.extent);
+        let mut out = vec![0u8; n * 4];
+        let nd = chunk.ndim();
+        for lin in 0..n as u64 {
+            // Decompose lin into absolute coords.
+            let mut rem = lin;
+            let mut key = 0u64;
+            for d in 0..nd {
+                let coord = chunk.offset[d] + rem / st[d];
+                rem %= st[d];
+                key = key.wrapping_mul(1000003).wrapping_add(coord);
+            }
+            out[lin as usize * 4..lin as usize * 4 + 4]
+                .copy_from_slice(&(key as u32).to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides(&[4, 5, 6]), vec![30, 6, 1]);
+        assert_eq!(strides(&[7]), vec![1]);
+        assert_eq!(strides(&[]), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn one_dim_copy() {
+        let src_c = Chunk::new(vec![10], vec![20]);
+        let src = fill_pattern(&src_c);
+        let dst_c = Chunk::new(vec![0], vec![15]);
+        let mut dst = vec![0u8; 15 * 4];
+        let copied = copy_region(&src_c, &src, &dst_c, &mut dst, 4);
+        assert_eq!(copied, 5); // overlap [10, 15)
+        // dst elements 10..15 must equal src elements 0..5
+        assert_eq!(&dst[40..60], &src[0..20]);
+        assert!(dst[..40].iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn two_dim_extraction_matches_pattern() {
+        let src_c = Chunk::new(vec![2, 3], vec![8, 9]);
+        let src = fill_pattern(&src_c);
+        let sel = Chunk::new(vec![4, 5], vec![3, 4]);
+        let got = extract(&src_c, &src, &sel, 4);
+        let want = fill_pattern(&sel);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn three_dim_reassembly_from_parts() {
+        // Dataset [4, 4, 4] split into two chunks along dim 0;
+        // a selection spanning both must reassemble exactly.
+        let a = Chunk::new(vec![0, 0, 0], vec![2, 4, 4]);
+        let b = Chunk::new(vec![2, 0, 0], vec![2, 4, 4]);
+        let sel = Chunk::new(vec![1, 1, 0], vec![2, 2, 4]);
+        let mut dst = vec![0u8; sel.num_elements() as usize * 4];
+        let c1 = copy_region(&a, &fill_pattern(&a), &sel, &mut dst, 4);
+        let c2 = copy_region(&b, &fill_pattern(&b), &sel, &mut dst, 4);
+        assert_eq!(c1 + c2, sel.num_elements());
+        assert_eq!(dst, fill_pattern(&sel));
+    }
+
+    #[test]
+    fn disjoint_copies_nothing() {
+        let a = Chunk::new(vec![0], vec![4]);
+        let b = Chunk::new(vec![4], vec![4]);
+        let src = fill_pattern(&a);
+        let mut dst = vec![0xFFu8; 16];
+        assert_eq!(copy_region(&a, &src, &b, &mut dst, 4), 0);
+        assert!(dst.iter().all(|&x| x == 0xFF));
+    }
+
+    #[test]
+    fn identical_chunks_full_copy() {
+        let c = Chunk::new(vec![5, 5], vec![3, 3]);
+        let src = fill_pattern(&c);
+        let mut dst = vec![0u8; src.len()];
+        assert_eq!(copy_region(&c, &src, &c, &mut dst, 4), 9);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    #[should_panic]
+    fn extract_requires_containment() {
+        let c = Chunk::new(vec![0], vec![4]);
+        let sel = Chunk::new(vec![2], vec![4]);
+        extract(&c, &vec![0u8; 16], &sel, 4);
+    }
+}

@@ -1,0 +1,80 @@
+//! SST — the sustainable staging transport (S4): streaming loose coupling.
+//!
+//! The engine the paper is about. A writer publishes steps into an
+//! in-memory staging queue; readers subscribe dynamically and pull the
+//! chunks they were assigned by a distribution strategy. Key semantics
+//! reproduced from ADIOS2 SST:
+//!
+//! * **publish/subscribe**: any number of readers can register while the
+//!   stream runs; each reader sees every published step (from its join
+//!   time onward).
+//! * **per-pair connections**: communication happens only between writer
+//!   and reader instances that actually exchange data; a reader that
+//!   requests nothing from a writer costs that writer nothing but the
+//!   announcement.
+//! * **`QueueFullPolicy`** (§4.1, footnote 12): when the staging queue is
+//!   full because readers lag, `Discard` drops the *new* step before any
+//!   data movement — the producer is never blocked and "IO granularity is
+//!   automatically reduced"; `Block` applies backpressure instead.
+//! * **queue retirement**: a step leaves the queue when every subscribed
+//!   reader has called `end_step` on it.
+//!
+//! Writers of one parallel application can share a [`WriterGroup`] so the
+//! discard decision is collective (the role MPI plays in ADIOS2) — without
+//! it, writer ranks could discard different steps and readers would have
+//! to skip unaligned steps.
+
+mod reader;
+mod writer;
+
+pub use reader::{SstReader, SstReaderOptions};
+pub use writer::{SstWriter, SstWriterOptions, WriterGroup};
+
+use std::collections::BTreeMap;
+
+use super::engine::Bytes;
+use super::wire::StepMeta;
+use crate::openpmd::chunk::Chunk;
+
+/// Queue-full behaviour (ADIOS2 `QueueFullPolicy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueFullPolicy {
+    /// Drop the new step; producer continues (paper's choice).
+    Discard,
+    /// Block the producer until the queue drains.
+    Block,
+}
+
+/// Staging queue configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueConfig {
+    pub policy: QueueFullPolicy,
+    /// Max steps staged and not yet retired ("QueueLimit").
+    pub limit: usize,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        QueueConfig { policy: QueueFullPolicy::Discard, limit: 2 }
+    }
+}
+
+/// Counters exposed by both engine sides, used by the pipeline metrics.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SstStats {
+    pub steps_published: u64,
+    pub steps_discarded: u64,
+    pub steps_consumed: u64,
+    pub bytes_put: u64,
+    pub bytes_served: u64,
+    pub bytes_got: u64,
+    pub chunk_requests: u64,
+}
+
+/// One step staged at the writer: metadata + payloads keyed by variable.
+#[derive(Debug, Default)]
+pub(crate) struct StagedStep {
+    pub meta: StepMeta,
+    /// var name -> list of (chunk, payload) from this writer.
+    pub data: BTreeMap<String, Vec<(Chunk, Bytes)>>,
+}

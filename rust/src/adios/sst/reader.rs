@@ -1,0 +1,442 @@
+//! SST reader: subscribes to one or more writer ranks, merges their step
+//! announcements, and pulls assigned chunks.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::adios::engine::{
+    Bytes, Engine, Mode, StepStatus, VarDecl, VarInfo,
+};
+use crate::adios::region;
+use crate::adios::transport::{self, Conn, Recv};
+use crate::adios::wire::{Msg, StepMeta};
+use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
+use crate::openpmd::Attribute;
+
+use super::SstStats;
+
+/// Options for opening a reader.
+#[derive(Clone)]
+pub struct SstReaderOptions {
+    /// Addresses of all writer ranks of the producing application.
+    pub writers: Vec<String>,
+    /// Transport name ("inproc" | "tcp").
+    pub transport: String,
+    /// This reader's parallel rank within the consuming application.
+    pub rank: usize,
+    pub hostname: String,
+    /// How long `begin_step` waits before reporting `NotReady`.
+    pub begin_step_timeout: Duration,
+}
+
+impl Default for SstReaderOptions {
+    fn default() -> Self {
+        SstReaderOptions {
+            writers: Vec::new(),
+            transport: "inproc".into(),
+            rank: 0,
+            hostname: "localhost".into(),
+            begin_step_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+struct WriterConn {
+    conn: Box<dyn Conn>,
+    writer_rank: usize,
+    #[allow(dead_code)]
+    hostname: String,
+    /// Announces received but not yet consumed, in step order. Several
+    /// can pile up while `get` is draining a slow step.
+    pending: VecDeque<(u64, StepMeta)>,
+    closed: bool,
+}
+
+/// Current merged step on the reader.
+struct CurrentStep {
+    step: u64,
+    /// Writer connection index by writer rank (chunks carry ranks).
+    metas: Vec<StepMeta>,
+}
+
+/// The reader engine.
+pub struct SstReader {
+    opts: SstReaderOptions,
+    writers: Vec<WriterConn>,
+    current: Option<CurrentStep>,
+    stats: SstStats,
+    next_req_id: u64,
+    /// Steps skipped during announce reconciliation (writers discarded
+    /// non-collectively).
+    pub steps_skipped: u64,
+}
+
+impl SstReader {
+    /// Connect to all writer ranks and handshake.
+    pub fn open(opts: SstReaderOptions) -> Result<SstReader> {
+        let transport = transport::by_name(&opts.transport)?;
+        let mut writers = Vec::with_capacity(opts.writers.len());
+        for addr in &opts.writers {
+            let mut conn = transport
+                .dial(addr)
+                .with_context(|| format!("dialing writer at {addr}"))?;
+            conn.send(Msg::Hello {
+                reader_rank: opts.rank,
+                hostname: opts.hostname.clone(),
+            })?;
+            let (writer_rank, hostname) =
+                match conn.recv_timeout(Duration::from_secs(10))? {
+                    Recv::Msg(Msg::HelloAck { writer_rank, hostname }) => {
+                        (writer_rank, hostname)
+                    }
+                    _ => bail!("no HelloAck from {addr}"),
+                };
+            writers.push(WriterConn {
+                conn,
+                writer_rank,
+                hostname,
+                pending: VecDeque::new(),
+                closed: false,
+            });
+        }
+        Ok(SstReader {
+            opts,
+            writers,
+            current: None,
+            stats: SstStats::default(),
+            next_req_id: 1,
+            steps_skipped: 0,
+        })
+    }
+
+    pub fn stats(&self) -> SstStats {
+        self.stats
+    }
+
+    /// Pump one writer connection until it has an announce (>= `min_step`)
+    /// or closes. Returns false on timeout.
+    fn pump_announce(
+        w: &mut WriterConn,
+        min_step: u64,
+        deadline: std::time::Instant,
+    ) -> Result<bool> {
+        loop {
+            if let Some((s, _)) = w.pending.front() {
+                if *s >= min_step {
+                    return Ok(true);
+                }
+                // Stale announce below the reconciliation target: drop it.
+                w.pending.pop_front();
+                continue;
+            }
+            if w.closed {
+                return Ok(true);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(false);
+            }
+            match w.conn.recv_timeout(deadline - now)? {
+                Recv::Msg(Msg::StepAnnounce { step, meta }) => {
+                    w.pending.push_back((step, meta));
+                }
+                Recv::Msg(Msg::CloseStream) => {
+                    w.closed = true;
+                }
+                Recv::Msg(_) => {
+                    // Stray data from a previous step: ignore.
+                }
+                Recv::TimedOut => return Ok(false),
+                Recv::Closed => {
+                    w.closed = true;
+                }
+            }
+        }
+    }
+
+    /// Merged chunk list of a variable in the current step.
+    fn merged_chunks(&self, var: &str) -> Vec<WrittenChunkInfo> {
+        let mut out = Vec::new();
+        if let Some(cur) = &self.current {
+            for meta in &cur.metas {
+                for v in &meta.vars {
+                    if v.name == var {
+                        out.extend(v.chunks.iter().cloned());
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Engine for SstReader {
+    fn engine_type(&self) -> &'static str {
+        "sst"
+    }
+
+    fn mode(&self) -> Mode {
+        Mode::Read
+    }
+
+    /// Wait for the next step announced by *all* writers.
+    ///
+    /// Writers using a shared [`super::WriterGroup`] publish identical
+    /// step sequences; without one, writers may discard different steps
+    /// and the reader reconciles by advancing to the highest commonly
+    /// announced step, counting skips in `steps_skipped`.
+    fn begin_step(&mut self) -> Result<StepStatus> {
+        if self.current.is_some() {
+            bail!("begin_step while a step is open");
+        }
+        if self.writers.is_empty() {
+            return Ok(StepStatus::EndOfStream);
+        }
+        let deadline =
+            std::time::Instant::now() + self.opts.begin_step_timeout;
+        let mut target = 0u64;
+        // Reconcile until every live writer has announced `target`.
+        loop {
+            let mut all_ready = true;
+            let mut any_live = false;
+            for w in self.writers.iter_mut() {
+                if !Self::pump_announce(w, target, deadline)? {
+                    return Ok(StepStatus::NotReady);
+                }
+                if w.closed && w.pending.is_empty() {
+                    continue;
+                }
+                any_live = true;
+                let (s, _) = w.pending.front().unwrap();
+                if *s > target {
+                    self.steps_skipped += target.abs_diff(*s).min(1);
+                    target = *s;
+                    all_ready = false;
+                }
+            }
+            if !any_live {
+                return Ok(StepStatus::EndOfStream);
+            }
+            if all_ready {
+                break;
+            }
+        }
+        // Consume the pending announces.
+        let mut metas = Vec::new();
+        for w in self.writers.iter_mut() {
+            if let Some((s, meta)) = w.pending.pop_front() {
+                debug_assert_eq!(s, target);
+                metas.push(meta);
+            }
+        }
+        self.stats.steps_consumed += 1;
+        self.current = Some(CurrentStep { step: target, metas });
+        Ok(StepStatus::Ok)
+    }
+
+    fn put(&mut self, _var: &VarDecl, _chunk: Chunk, _data: Bytes)
+        -> Result<()>
+    {
+        bail!("put on a read-mode SST engine")
+    }
+
+    fn put_attribute(&mut self, _name: &str, _value: Attribute) -> Result<()> {
+        bail!("put_attribute on a read-mode SST engine")
+    }
+
+    fn available_variables(&self) -> Vec<VarInfo> {
+        let mut seen = BTreeMap::new();
+        if let Some(cur) = &self.current {
+            for meta in &cur.metas {
+                for v in &meta.vars {
+                    seen.entry(v.name.clone()).or_insert_with(|| VarInfo {
+                        name: v.name.clone(),
+                        dtype: v.dtype,
+                        shape: v.shape.clone(),
+                    });
+                }
+            }
+        }
+        seen.into_values().collect()
+    }
+
+    fn available_chunks(&self, var: &str) -> Vec<WrittenChunkInfo> {
+        self.merged_chunks(var)
+    }
+
+    fn attribute(&self, name: &str) -> Option<Attribute> {
+        let cur = self.current.as_ref()?;
+        cur.metas
+            .iter()
+            .find_map(|m| m.attributes.get(name).cloned())
+    }
+
+    fn attribute_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .current
+            .iter()
+            .flat_map(|c| c.metas.iter())
+            .flat_map(|m| m.attributes.keys().cloned())
+            .collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Load a selection, assembling it from per-writer requests.
+    ///
+    /// One request is issued per (writer chunk ∩ selection); requests to
+    /// different writers are pipelined (all sent before any response is
+    /// awaited). Only writers owning intersecting chunks are contacted —
+    /// the paper's "connections only between instances that exchange
+    /// data".
+    fn get(&mut self, var: &str, selection: Chunk) -> Result<Bytes> {
+        let cur = self
+            .current
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("get outside step"))?;
+        let step = cur.step;
+        let dtype = self
+            .available_variables()
+            .into_iter()
+            .find(|v| v.name == var)
+            .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))?
+            .dtype;
+        let elem = dtype.size();
+        let chunks = self.merged_chunks(var);
+
+        // Plan: per writer rank, the intersections to request.
+        let mut plan: BTreeMap<usize, Vec<Chunk>> = BTreeMap::new();
+        for info in &chunks {
+            if let Some(inter) = info.chunk.intersect(&selection) {
+                plan.entry(info.source_rank).or_default().push(inter);
+            }
+        }
+        let total_planned: u64 =
+            plan.values().flatten().map(|c| c.num_elements()).sum();
+        if total_planned < selection.num_elements() {
+            bail!(
+                "selection {:?}+{:?} of {var:?} not fully covered by \
+                 announced chunks ({total_planned}/{})",
+                selection.offset,
+                selection.extent,
+                selection.num_elements()
+            );
+        }
+
+        // Fast path: selection exactly matches a single written chunk of a
+        // single writer — one request, zero reassembly (the *alignment*
+        // property in action).
+        let mut out: Vec<u8> = Vec::new();
+        let mut assembled = false;
+
+        // Send all requests first (pipelining across writers)...
+        let mut outstanding: Vec<(usize, u64, Chunk)> = Vec::new();
+        for (writer_rank, sels) in &plan {
+            let widx = self
+                .writers
+                .iter()
+                .position(|w| w.writer_rank == *writer_rank)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("no connection to writer {writer_rank}")
+                })?;
+            for sel in sels {
+                let req_id = self.next_req_id;
+                self.next_req_id += 1;
+                self.writers[widx].conn.send(Msg::ChunkRequest {
+                    req_id,
+                    step,
+                    var: var.to_string(),
+                    sel: sel.clone(),
+                })?;
+                self.stats.chunk_requests += 1;
+                outstanding.push((widx, req_id, sel.clone()));
+            }
+        }
+
+        let single = outstanding.len() == 1
+            && outstanding[0].2 == selection;
+        if !single {
+            out = vec![0u8; selection.num_elements() as usize * elem];
+        }
+
+        // ... then collect responses (per-connection FIFO order).
+        for (widx, req_id, sub_sel) in outstanding {
+            let data = loop {
+                match self.writers[widx].conn.recv()? {
+                    Recv::Msg(Msg::ChunkData { req_id: r, data })
+                        if r == req_id =>
+                    {
+                        break data
+                    }
+                    Recv::Msg(Msg::ChunkError { req_id: r, error })
+                        if r == req_id =>
+                    {
+                        bail!("writer {} failed request: {error}",
+                              self.writers[widx].writer_rank)
+                    }
+                    Recv::Msg(Msg::StepAnnounce { step, meta }) => {
+                        // Next steps arriving while we read this one.
+                        self.writers[widx].pending.push_back((step, meta));
+                    }
+                    Recv::Msg(Msg::CloseStream) => {
+                        self.writers[widx].closed = true;
+                    }
+                    Recv::Msg(_) => {}
+                    Recv::TimedOut => {}
+                    Recv::Closed => bail!(
+                        "writer {} vanished mid-request",
+                        self.writers[widx].writer_rank
+                    ),
+                }
+            };
+            self.stats.bytes_got += data.len() as u64;
+            if single {
+                return Ok(data);
+            }
+            let copied = region::copy_region(
+                &sub_sel, &data, &selection, &mut out, elem,
+            );
+            debug_assert_eq!(copied, sub_sel.num_elements());
+            assembled = true;
+        }
+        debug_assert!(assembled || selection.num_elements() == 0);
+        Ok(Arc::new(out))
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        let cur = self
+            .current
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("end_step without begin_step"))?;
+        for w in self.writers.iter_mut() {
+            if !w.closed {
+                let _ = w.conn.send(Msg::StepDone { step: cur.step });
+            }
+        }
+        Ok(())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        if self.current.is_some() {
+            self.end_step()?;
+        }
+        for w in self.writers.iter_mut() {
+            if !w.closed {
+                let _ = w.conn.send(Msg::ReaderBye);
+                w.closed = true;
+            }
+        }
+        self.writers.clear();
+        Ok(())
+    }
+}
+
+impl Drop for SstReader {
+    fn drop(&mut self) {
+        let _ = self.close();
+    }
+}

@@ -1,0 +1,613 @@
+//! SST writer: stages steps in memory and serves chunk requests.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::adios::engine::{
+    Bytes, Engine, Mode, StepStatus, VarDecl, VarInfo,
+};
+use crate::adios::region;
+use crate::adios::transport::{self, ConnTx, Recv};
+use crate::adios::wire::{Msg, VarMeta};
+use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
+use crate::openpmd::Attribute;
+
+use super::{QueueConfig, QueueFullPolicy, SstStats, StagedStep};
+
+/// Options for opening a writer.
+#[derive(Clone)]
+pub struct SstWriterOptions {
+    /// Listen hint: `inproc://name` or `tcp://host:port` (port 0 ok).
+    pub listen: String,
+    /// Transport name: `"inproc"` or `"tcp"`.
+    pub transport: String,
+    /// This writer's parallel rank within the producing application.
+    pub rank: usize,
+    /// Hostname used for topology-aware distribution.
+    pub hostname: String,
+    pub queue: QueueConfig,
+    /// Optional collective-discard group shared by all writer ranks of one
+    /// application (the MPI analog).
+    pub group: Option<Arc<WriterGroup>>,
+    /// How long `close` lingers for readers to subscribe and drain the
+    /// staged steps before tearing the stream down. Readers that arrive
+    /// within the linger still see every staged step.
+    pub close_linger: Duration,
+}
+
+impl Default for SstWriterOptions {
+    fn default() -> Self {
+        SstWriterOptions {
+            listen: String::new(),
+            transport: "inproc".into(),
+            rank: 0,
+            hostname: "localhost".into(),
+            queue: QueueConfig::default(),
+            group: None,
+            close_linger: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Collective discard decisions across the writer ranks of one
+/// application: the first rank to reach a step index decides (based on its
+/// own queue occupancy) and the others follow, so all ranks publish the
+/// same step sequence.
+#[derive(Debug, Default)]
+pub struct WriterGroup {
+    decisions: Mutex<HashMap<u64, bool>>,
+}
+
+impl WriterGroup {
+    pub fn new() -> Arc<WriterGroup> {
+        Arc::new(WriterGroup::default())
+    }
+
+    /// Returns `true` if step `step` should be kept (published).
+    fn decide(&self, step: u64, keep_if_first: impl FnOnce() -> bool) -> bool {
+        let mut d = self.decisions.lock().unwrap();
+        *d.entry(step).or_insert_with(keep_if_first)
+    }
+}
+
+struct ReaderPeer {
+    tx: Mutex<Box<dyn ConnTx>>,
+    /// Highest step this reader has fully consumed (StepDone).
+    done: AtomicU64,
+    alive: AtomicBool,
+    /// Reader rank (diagnostics).
+    #[allow(dead_code)]
+    rank: usize,
+}
+
+#[derive(Default)]
+struct Shared {
+    /// step -> staged payloads+meta, in publish order.
+    published: BTreeMap<u64, Arc<StagedStep>>,
+    readers: Vec<Arc<ReaderPeer>>,
+    stats: SstStats,
+    closed: bool,
+    /// At least one reader completed the handshake at some point.
+    ever_had_reader: bool,
+}
+
+/// The writer engine. One instance per producing rank and stream.
+pub struct SstWriter {
+    opts: SstWriterOptions,
+    address: String,
+    shared: Arc<Mutex<Shared>>,
+    /// Signalled when a step retires or a reader joins/leaves.
+    retire_cv: Arc<Condvar>,
+    accept_thread: Option<JoinHandle<()>>,
+    service_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    stop: Arc<AtomicBool>,
+    /// Step being built between begin_step/end_step.
+    current: Option<StagedStep>,
+    next_step: u64,
+    /// True if begin_step returned Discarded for the current step.
+    discarding: bool,
+}
+
+impl SstWriter {
+    /// Open the stream and start accepting readers.
+    pub fn open(opts: SstWriterOptions) -> Result<SstWriter> {
+        let transport = transport::by_name(&opts.transport)?;
+        let mut listener = transport.listen(&opts.listen)?;
+        let address = listener.address();
+        let shared = Arc::new(Mutex::new(Shared::default()));
+        let retire_cv = Arc::new(Condvar::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let service_threads = Arc::new(Mutex::new(Vec::new()));
+
+        let accept_thread = {
+            let shared = shared.clone();
+            let stop = stop.clone();
+            let cv = retire_cv.clone();
+            let threads = service_threads.clone();
+            let writer_rank = opts.rank;
+            let hostname = opts.hostname.clone();
+            std::thread::Builder::new()
+                .name(format!("sst-accept-{}", opts.rank))
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match listener.accept_timeout(Duration::from_millis(50))
+                        {
+                            Ok(Some(conn)) => {
+                                if let Err(e) = serve_reader(
+                                    conn, &shared, &cv, &threads,
+                                    writer_rank, &hostname, &stop,
+                                ) {
+                                    crate::warn_log!(
+                                        "sst-writer",
+                                        "reader handshake failed: {e:#}"
+                                    );
+                                }
+                            }
+                            Ok(None) => {}
+                            Err(e) => {
+                                crate::warn_log!("sst-writer",
+                                                 "accept error: {e:#}");
+                                break;
+                            }
+                        }
+                    }
+                })?
+        };
+
+        Ok(SstWriter {
+            opts,
+            address,
+            shared,
+            retire_cv,
+            accept_thread: Some(accept_thread),
+            service_threads,
+            stop,
+            current: None,
+            next_step: 0,
+            discarding: false,
+        })
+    }
+
+    /// The resolved address readers should dial.
+    pub fn address(&self) -> String {
+        self.address.clone()
+    }
+
+    pub fn stats(&self) -> SstStats {
+        self.shared.lock().unwrap().stats
+    }
+
+    /// Number of currently subscribed readers.
+    pub fn reader_count(&self) -> usize {
+        self.shared
+            .lock()
+            .unwrap()
+            .readers
+            .iter()
+            .filter(|r| r.alive.load(Ordering::Relaxed))
+            .count()
+    }
+
+    /// Queue occupancy check + retirement: drop steps every live reader
+    /// has consumed. Called with the lock held.
+    fn retire_locked(shared: &mut Shared) {
+        let live: Vec<&Arc<ReaderPeer>> = shared
+            .readers
+            .iter()
+            .filter(|r| r.alive.load(Ordering::Relaxed))
+            .collect();
+        if live.is_empty() {
+            return;
+        }
+        let min_done = live
+            .iter()
+            .map(|r| r.done.load(Ordering::Relaxed))
+            .min()
+            .unwrap_or(0);
+        // done stores step+1 so that 0 means "nothing consumed".
+        let retained: Vec<u64> = shared
+            .published
+            .keys()
+            .copied()
+            .filter(|&s| s < min_done)
+            .collect();
+        for s in retained {
+            shared.published.remove(&s);
+        }
+    }
+
+    fn queue_has_room(&self) -> bool {
+        let mut shared = self.shared.lock().unwrap();
+        Self::retire_locked(&mut shared);
+        shared.published.len() < self.opts.queue.limit
+    }
+}
+
+/// Per-reader service: handshake, then answer requests until the reader
+/// leaves. The rx half blocks in its own thread; the tx half lives in the
+/// peer table so `end_step` can push announcements.
+fn serve_reader(
+    conn: Box<dyn transport::Conn>,
+    shared: &Arc<Mutex<Shared>>,
+    cv: &Arc<Condvar>,
+    threads: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    writer_rank: usize,
+    hostname: &str,
+    stop: &Arc<AtomicBool>,
+) -> Result<()> {
+    let mut conn = conn;
+    // Handshake happens synchronously on the accept thread.
+    let hello = match conn.recv_timeout(Duration::from_secs(10))? {
+        Recv::Msg(Msg::Hello { reader_rank, .. }) => reader_rank,
+        other => bail!(
+            "expected Hello, got {:?}",
+            std::mem::discriminant(&match other {
+                Recv::Msg(m) => m,
+                _ => Msg::CloseStream,
+            })
+        ),
+    };
+    conn.send(Msg::HelloAck { writer_rank, hostname: hostname.into() })?;
+    let (tx, mut rx) = conn.split()?;
+
+    let peer = Arc::new(ReaderPeer {
+        tx: Mutex::new(tx),
+        done: AtomicU64::new(0),
+        alive: AtomicBool::new(true),
+        rank: hello,
+    });
+
+    // Late joiners see the currently staged steps.
+    {
+        let shared_l = shared.lock().unwrap();
+        let mut tx = peer.tx.lock().unwrap();
+        for (step, staged) in &shared_l.published {
+            tx.send(Msg::StepAnnounce { step: *step,
+                                        meta: staged.meta.clone() })?;
+        }
+        if shared_l.closed {
+            tx.send(Msg::CloseStream)?;
+        }
+    }
+    {
+        let mut sh = shared.lock().unwrap();
+        sh.readers.push(peer.clone());
+        sh.ever_had_reader = true;
+    }
+    cv.notify_all();
+
+    let shared = shared.clone();
+    let cv = cv.clone();
+    let stop = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("sst-serve-r{hello}"))
+        .spawn(move || {
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(Recv::Msg(Msg::ChunkRequest {
+                        req_id, step, var, sel,
+                    })) => {
+                        let reply = {
+                            let mut sh = shared.lock().unwrap();
+                            sh.stats.chunk_requests += 1;
+                            match serve_request(&sh, step, &var, &sel) {
+                                Ok(data) => {
+                                    sh.stats.bytes_served += data.len() as u64;
+                                    Msg::ChunkData { req_id, data }
+                                }
+                                Err(e) => Msg::ChunkError {
+                                    req_id,
+                                    error: format!("{e:#}"),
+                                },
+                            }
+                        };
+                        if peer.tx.lock().unwrap().send(reply).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(Recv::Msg(Msg::StepDone { step })) => {
+                        // done holds step+1 (see retire_locked).
+                        peer.done.fetch_max(step + 1, Ordering::Relaxed);
+                        let mut sh = shared.lock().unwrap();
+                        SstWriter::retire_locked(&mut sh);
+                        drop(sh);
+                        cv.notify_all();
+                    }
+                    Ok(Recv::Msg(Msg::ReaderBye)) | Ok(Recv::Closed) => break,
+                    Ok(Recv::TimedOut) => {}
+                    Ok(Recv::Msg(other)) => {
+                        crate::warn_log!(
+                            "sst-writer",
+                            "unexpected message from reader: tag-ish {:?}",
+                            std::mem::discriminant(&other)
+                        );
+                    }
+                    Err(e) => {
+                        crate::warn_log!("sst-writer", "recv error: {e:#}");
+                        break;
+                    }
+                }
+            }
+            peer.alive.store(false, Ordering::Relaxed);
+            let mut sh = shared.lock().unwrap();
+            SstWriter::retire_locked(&mut sh);
+            drop(sh);
+            cv.notify_all();
+        })?;
+    threads.lock().unwrap().push(handle);
+    Ok(())
+}
+
+/// Extract `sel` of `var` from a staged step (lock held by caller).
+fn serve_request(
+    shared: &Shared,
+    step: u64,
+    var: &str,
+    sel: &Chunk,
+) -> Result<Bytes> {
+    let staged = shared
+        .published
+        .get(&step)
+        .ok_or_else(|| anyhow::anyhow!("step {step} not staged (retired?)"))?;
+    let chunks = staged
+        .data
+        .get(var)
+        .ok_or_else(|| anyhow::anyhow!("no such variable {var:?}"))?;
+    let dtype = staged
+        .meta
+        .vars
+        .iter()
+        .find(|v| v.name == var)
+        .map(|v| v.dtype)
+        .ok_or_else(|| anyhow::anyhow!("no metadata for {var:?}"))?;
+    let elem = dtype.size();
+    // Fast path: a single stored chunk fully contains the selection and
+    // *is* the selection -> hand back the Arc without copying.
+    for (chunk, data) in chunks {
+        if chunk == sel {
+            return Ok(data.clone());
+        }
+    }
+    let mut out = vec![0u8; sel.num_elements() as usize * elem];
+    let mut covered = 0u64;
+    for (chunk, data) in chunks {
+        covered += region::copy_region(chunk, data, sel, &mut out, elem);
+    }
+    if covered < sel.num_elements() {
+        bail!(
+            "selection {:?}+{:?} of {var:?} only partially present at this \
+             writer ({covered}/{} elements)",
+            sel.offset,
+            sel.extent,
+            sel.num_elements()
+        );
+    }
+    Ok(Arc::new(out))
+}
+
+impl Engine for SstWriter {
+    fn engine_type(&self) -> &'static str {
+        "sst"
+    }
+
+    fn mode(&self) -> Mode {
+        Mode::Write
+    }
+
+    fn begin_step(&mut self) -> Result<StepStatus> {
+        if self.current.is_some() {
+            bail!("begin_step while a step is open");
+        }
+        let step = self.next_step;
+        let has_room = self.queue_has_room();
+        let keep = match (&self.opts.group, self.opts.queue.policy) {
+            (Some(group), QueueFullPolicy::Discard) => {
+                group.decide(step, || has_room)
+            }
+            (None, QueueFullPolicy::Discard) => has_room,
+            (_, QueueFullPolicy::Block) => {
+                // Block until the queue drains.
+                let mut sh = self.shared.lock().unwrap();
+                loop {
+                    Self::retire_locked(&mut sh);
+                    if sh.published.len() < self.opts.queue.limit {
+                        break;
+                    }
+                    let (guard, timeout) = self
+                        .retire_cv
+                        .wait_timeout(sh, Duration::from_millis(200))
+                        .unwrap();
+                    sh = guard;
+                    if timeout.timed_out() && sh.closed {
+                        bail!("writer closed while blocked on full queue");
+                    }
+                }
+                true
+            }
+        };
+        if !keep {
+            self.next_step += 1;
+            self.discarding = true;
+            self.shared.lock().unwrap().stats.steps_discarded += 1;
+            return Ok(StepStatus::Discarded);
+        }
+        self.discarding = false;
+        self.current = Some(StagedStep::default());
+        Ok(StepStatus::Ok)
+    }
+
+    fn put(&mut self, var: &VarDecl, chunk: Chunk, data: Bytes) -> Result<()> {
+        let staged = self
+            .current
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("put outside step"))?;
+        let expect = chunk.num_elements() as usize * var.dtype.size();
+        if data.len() != expect {
+            bail!(
+                "put {}: payload {} bytes, chunk needs {expect}",
+                var.name,
+                data.len()
+            );
+        }
+        let info = WrittenChunkInfo::new(
+            chunk.clone(),
+            self.opts.rank,
+            self.opts.hostname.clone(),
+        );
+        match staged.meta.vars.iter_mut().find(|v| v.name == var.name) {
+            Some(vm) => {
+                if vm.dtype != var.dtype || vm.shape != var.shape {
+                    bail!("conflicting redeclaration of {}", var.name);
+                }
+                vm.chunks.push(info);
+            }
+            None => staged.meta.vars.push(VarMeta {
+                name: var.name.clone(),
+                dtype: var.dtype,
+                shape: var.shape.clone(),
+                chunks: vec![info],
+            }),
+        }
+        self.shared.lock().unwrap().stats.bytes_put += data.len() as u64;
+        staged
+            .data
+            .entry(var.name.clone())
+            .or_default()
+            .push((chunk, data));
+        Ok(())
+    }
+
+    fn put_attribute(&mut self, name: &str, value: Attribute) -> Result<()> {
+        let staged = self
+            .current
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("put_attribute outside step"))?;
+        staged.meta.attributes.insert(name.to_string(), value);
+        Ok(())
+    }
+
+    fn available_variables(&self) -> Vec<VarInfo> {
+        Vec::new() // write side
+    }
+
+    fn available_chunks(&self, _var: &str) -> Vec<WrittenChunkInfo> {
+        Vec::new()
+    }
+
+    fn attribute(&self, _name: &str) -> Option<Attribute> {
+        None
+    }
+
+    fn attribute_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    fn get(&mut self, _var: &str, _sel: Chunk) -> Result<Bytes> {
+        bail!("get on a write-mode SST engine")
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        if self.discarding {
+            self.discarding = false;
+            return Ok(());
+        }
+        let staged = self
+            .current
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("end_step without begin_step"))?;
+        let step = self.next_step;
+        self.next_step += 1;
+        let staged = Arc::new(staged);
+        let mut sh = self.shared.lock().unwrap();
+        sh.stats.steps_published += 1;
+        sh.published.insert(step, staged.clone());
+        for r in sh.readers.iter() {
+            if r.alive.load(Ordering::Relaxed) {
+                let ok = r
+                    .tx
+                    .lock()
+                    .unwrap()
+                    .send(Msg::StepAnnounce {
+                        step,
+                        meta: staged.meta.clone(),
+                    })
+                    .is_ok();
+                if !ok {
+                    r.alive.store(false, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        if self.current.is_some() {
+            self.end_step()?;
+        }
+        {
+            let mut sh = self.shared.lock().unwrap();
+            if sh.closed {
+                return Ok(());
+            }
+            sh.closed = true;
+            for r in sh.readers.iter() {
+                if r.alive.load(Ordering::Relaxed) {
+                    let _ = r.tx.lock().unwrap().send(Msg::CloseStream);
+                }
+            }
+        }
+        // Linger so that (a) readers that already subscribed can finish
+        // draining the staged steps, and (b) readers whose handshake is
+        // still in flight are not stranded mid-connect.
+        let deadline = std::time::Instant::now() + self.opts.close_linger;
+        loop {
+            let mut sh = self.shared.lock().unwrap();
+            Self::retire_locked(&mut sh);
+            if sh.published.is_empty() {
+                break;
+            }
+            let live_readers = sh
+                .readers
+                .iter()
+                .any(|r| r.alive.load(Ordering::Relaxed));
+            if !live_readers && sh.ever_had_reader {
+                // All subscribers consumed what they wanted and left.
+                break;
+            }
+            let (guard, _) = self
+                .retire_cv
+                .wait_timeout(sh, Duration::from_millis(50))
+                .unwrap();
+            drop(guard);
+            if std::time::Instant::now() > deadline {
+                crate::warn_log!("sst-writer",
+                                 "close linger expired with steps staged");
+                break;
+            }
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        let threads: Vec<_> =
+            std::mem::take(&mut *self.service_threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for SstWriter {
+    fn drop(&mut self) {
+        let _ = self.close();
+    }
+}

@@ -1,0 +1,628 @@
+//! Data transports under the SST engine (S5).
+//!
+//! SST picks its data plane at runtime (§2.3): on Summit the paper uses the
+//! libfabric **RDMA** transport, with **TCP sockets** as the fallback
+//! (evaluated in Fig. 8 as "WAN"). This build has no Infiniband, so:
+//!
+//! * [`InProcTransport`] — the RDMA *functional* analog: connections are
+//!   in-memory channels; `Bytes` payloads are passed as `Arc`s without any
+//!   copy or serialization, which is precisely the property RDMA buys on
+//!   real fabric (the performance analog is modeled in
+//!   [`crate::cluster::network`]).
+//! * [`TcpTransport`] — real network sockets with the wire framing from
+//!   [`super::wire`]; usable across processes and hosts.
+//!
+//! Addresses: `inproc://name` and `tcp://host:port` (port 0 = ephemeral).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+use once_cell::sync::Lazy;
+
+use super::wire::{decode_msg, encode_msg, Msg};
+
+/// Receive outcome for the non-blocking path.
+pub enum Recv {
+    Msg(Msg),
+    TimedOut,
+    Closed,
+}
+
+/// A bidirectional, message-oriented connection.
+pub trait Conn: Send {
+    fn send(&mut self, msg: Msg) -> Result<()>;
+    /// Blocking receive. `Recv::Closed` when the peer is gone.
+    fn recv(&mut self) -> Result<Recv>;
+    /// Receive with timeout.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Recv>;
+    /// Human-readable peer description for diagnostics.
+    fn peer(&self) -> String;
+    /// Split into independently-owned send/receive halves, so a service
+    /// thread can block on `recv` while another thread pushes
+    /// announcements — the SST writer needs this.
+    fn split(self: Box<Self>) -> Result<(Box<dyn ConnTx>, Box<dyn ConnRx>)>;
+}
+
+/// Send half of a split connection.
+pub trait ConnTx: Send {
+    fn send(&mut self, msg: Msg) -> Result<()>;
+}
+
+/// Receive half of a split connection.
+pub trait ConnRx: Send {
+    fn recv(&mut self) -> Result<Recv>;
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Recv>;
+}
+
+/// A listening endpoint accepting connections.
+pub trait Listener: Send {
+    /// The address readers should dial (resolved, e.g. with a real port).
+    fn address(&self) -> String;
+    /// Accept the next connection, with timeout.
+    fn accept_timeout(&mut self, timeout: Duration)
+        -> Result<Option<Box<dyn Conn>>>;
+}
+
+/// Transport factory: create listeners and dial addresses.
+pub trait Transport: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn listen(&self, hint: &str) -> Result<Box<dyn Listener>>;
+    fn dial(&self, address: &str) -> Result<Box<dyn Conn>>;
+}
+
+/// Resolve a transport by name ("inproc" | "tcp").
+pub fn by_name(name: &str) -> Result<Arc<dyn Transport>> {
+    Ok(match name {
+        "inproc" => Arc::new(InProcTransport),
+        "tcp" => Arc::new(TcpTransport),
+        other => bail!("unknown transport {other:?}"),
+    })
+}
+
+// ======================================================================
+// In-process transport
+// ======================================================================
+
+/// Pair of unbounded channels. `Bytes` inside `Msg` travel by `Arc` —
+/// zero-copy hand-off between threads.
+struct InProcConn {
+    tx: Sender<Msg>,
+    rx: Receiver<Msg>,
+    peer: String,
+}
+
+impl Conn for InProcConn {
+    fn send(&mut self, msg: Msg) -> Result<()> {
+        self.tx
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("inproc peer {} gone", self.peer))
+    }
+
+    fn recv(&mut self) -> Result<Recv> {
+        match self.rx.recv() {
+            Ok(m) => Ok(Recv::Msg(m)),
+            Err(_) => Ok(Recv::Closed),
+        }
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Recv> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(m) => Ok(Recv::Msg(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(Recv::TimedOut),
+            Err(RecvTimeoutError::Disconnected) => Ok(Recv::Closed),
+        }
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn ConnTx>, Box<dyn ConnRx>)> {
+        Ok((
+            Box::new(InProcTx { tx: self.tx, peer: self.peer.clone() }),
+            Box::new(InProcRx { rx: self.rx }),
+        ))
+    }
+}
+
+struct InProcTx {
+    tx: Sender<Msg>,
+    peer: String,
+}
+
+impl ConnTx for InProcTx {
+    fn send(&mut self, msg: Msg) -> Result<()> {
+        self.tx
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("inproc peer {} gone", self.peer))
+    }
+}
+
+struct InProcRx {
+    rx: Receiver<Msg>,
+}
+
+impl ConnRx for InProcRx {
+    fn recv(&mut self) -> Result<Recv> {
+        match self.rx.recv() {
+            Ok(m) => Ok(Recv::Msg(m)),
+            Err(_) => Ok(Recv::Closed),
+        }
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Recv> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(m) => Ok(Recv::Msg(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(Recv::TimedOut),
+            Err(RecvTimeoutError::Disconnected) => Ok(Recv::Closed),
+        }
+    }
+}
+
+/// Global registry of in-process listening endpoints.
+static INPROC_REGISTRY: Lazy<Mutex<HashMap<String,
+    SyncSender<Box<dyn Conn>>>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+
+struct InProcListener {
+    address: String,
+    incoming: Receiver<Box<dyn Conn>>,
+}
+
+impl Listener for InProcListener {
+    fn address(&self) -> String {
+        self.address.clone()
+    }
+
+    fn accept_timeout(&mut self, timeout: Duration)
+        -> Result<Option<Box<dyn Conn>>>
+    {
+        match self.incoming.recv_timeout(timeout) {
+            Ok(c) => Ok(Some(c)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("inproc listener channel closed")
+            }
+        }
+    }
+}
+
+impl Drop for InProcListener {
+    fn drop(&mut self) {
+        INPROC_REGISTRY.lock().unwrap().remove(&self.address);
+    }
+}
+
+/// The in-process transport (see module docs).
+pub struct InProcTransport;
+
+impl Transport for InProcTransport {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn listen(&self, hint: &str) -> Result<Box<dyn Listener>> {
+        let address = if hint.starts_with("inproc://") {
+            hint.to_string()
+        } else {
+            format!("inproc://{hint}")
+        };
+        let (tx, rx) = mpsc::sync_channel(64);
+        let mut reg = INPROC_REGISTRY.lock().unwrap();
+        if reg.contains_key(&address) {
+            bail!("inproc address {address:?} already in use");
+        }
+        reg.insert(address.clone(), tx);
+        Ok(Box::new(InProcListener { address, incoming: rx }))
+    }
+
+    fn dial(&self, address: &str) -> Result<Box<dyn Conn>> {
+        let acceptor = {
+            let reg = INPROC_REGISTRY.lock().unwrap();
+            reg.get(address)
+                .cloned()
+                .with_context(|| format!("no inproc listener at {address:?}"))?
+        };
+        let (tx_a, rx_b) = mpsc::channel();
+        let (tx_b, rx_a) = mpsc::channel();
+        let ours = InProcConn {
+            tx: tx_a,
+            rx: rx_a,
+            peer: address.to_string(),
+        };
+        let theirs = InProcConn {
+            tx: tx_b,
+            rx: rx_b,
+            peer: format!("{address}#client"),
+        };
+        acceptor
+            .send(Box::new(theirs))
+            .map_err(|_| anyhow::anyhow!("listener at {address:?} gone"))?;
+        Ok(Box::new(ours))
+    }
+}
+
+// ======================================================================
+// TCP transport
+// ======================================================================
+
+/// Length-framed messages over a TCP stream.
+struct TcpConn {
+    stream: TcpStream,
+    peer: String,
+    /// Reusable receive buffer — the hot path does not allocate per frame
+    /// beyond the payload itself.
+    buf: Vec<u8>,
+}
+
+/// Enlarge kernel socket buffers: bulk scientific payloads want MiBs of
+/// in-flight data, not the distro default.
+fn set_socket_buffers(stream: &TcpStream, bytes: i32) {
+    use std::os::unix::io::AsRawFd;
+    let fd = stream.as_raw_fd();
+    unsafe {
+        for opt in [libc::SO_SNDBUF, libc::SO_RCVBUF] {
+            libc::setsockopt(
+                fd,
+                libc::SOL_SOCKET,
+                opt,
+                &bytes as *const i32 as *const libc::c_void,
+                std::mem::size_of::<i32>() as libc::socklen_t,
+            );
+        }
+    }
+}
+
+impl TcpConn {
+    fn new(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true).ok();
+        set_socket_buffers(&stream, 4 << 20);
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".into());
+        Ok(TcpConn { stream, peer, buf: Vec::new() })
+    }
+}
+
+fn tcp_write_frame(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
+    // Fast path for the data plane: stream the payload directly from its
+    // Arc instead of copying it into an encode buffer first. The wire
+    // format is identical to encode_msg's (tag, req_id, len, bytes).
+    if let Msg::ChunkData { req_id, data } = msg {
+        let mut header = [0u8; 8 + 1 + 8 + 8];
+        let body_len = (1 + 8 + 8 + data.len()) as u64;
+        header[..8].copy_from_slice(&body_len.to_le_bytes());
+        header[8] = 5; // ChunkData tag
+        header[9..17].copy_from_slice(&req_id.to_le_bytes());
+        header[17..25].copy_from_slice(&(data.len() as u64).to_le_bytes());
+        stream.write_all(&header)?;
+        stream.write_all(data)?;
+        return Ok(());
+    }
+    let body = encode_msg(msg);
+    let len = (body.len() as u64).to_le_bytes();
+    stream.write_all(&len)?;
+    stream.write_all(&body)?;
+    Ok(())
+}
+
+fn tcp_read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Recv> {
+    let mut len_buf = [0u8; 8];
+    match stream.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Ok(Recv::Closed)
+        }
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            return Ok(Recv::TimedOut)
+        }
+        Err(e)
+            if e.kind() == std::io::ErrorKind::ConnectionReset
+                || e.kind() == std::io::ErrorKind::BrokenPipe =>
+        {
+            return Ok(Recv::Closed)
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let len = u64::from_le_bytes(len_buf) as usize;
+    if len > 1 << 34 {
+        bail!("implausible frame length {len}");
+    }
+    // After the header arrives, finish the frame even if a read timeout is
+    // set: a partial frame would corrupt the stream.
+    stream.set_read_timeout(None)?;
+
+    // Fast path for the data plane: route the payload straight into its
+    // own allocation — no intermediate frame buffer, no zero-fill, no
+    // decode copy. (Read the 1-byte tag first to dispatch.)
+    let mut tag = [0u8; 1];
+    stream.read_exact(&mut tag)?;
+    if tag[0] == 5 && len >= 17 {
+        let mut head = [0u8; 16];
+        stream.read_exact(&mut head)?;
+        let req_id = u64::from_le_bytes(head[..8].try_into().unwrap());
+        let data_len =
+            u64::from_le_bytes(head[8..].try_into().unwrap()) as usize;
+        if data_len != len - 17 {
+            bail!("ChunkData length mismatch: {data_len} vs {}", len - 17);
+        }
+        let mut data = Vec::with_capacity(data_len);
+        let read = stream.take(data_len as u64).read_to_end(&mut data)?;
+        if read != data_len {
+            return Ok(Recv::Closed);
+        }
+        return Ok(Recv::Msg(Msg::ChunkData {
+            req_id,
+            data: std::sync::Arc::new(data),
+        }));
+    }
+    buf.clear();
+    buf.reserve(len);
+    buf.push(tag[0]);
+    buf.resize(len, 0);
+    stream.read_exact(&mut buf[1..])?;
+    Ok(Recv::Msg(decode_msg(buf)?))
+}
+
+impl Conn for TcpConn {
+    fn send(&mut self, msg: Msg) -> Result<()> {
+        tcp_write_frame(&mut self.stream, &msg)
+    }
+
+    fn recv(&mut self) -> Result<Recv> {
+        self.stream.set_read_timeout(None)?;
+        let mut buf = std::mem::take(&mut self.buf);
+        let r = tcp_read_frame(&mut self.stream, &mut buf);
+        self.buf = buf;
+        r
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Recv> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        let mut buf = std::mem::take(&mut self.buf);
+        let r = tcp_read_frame(&mut self.stream, &mut buf);
+        self.buf = buf;
+        self.stream.set_read_timeout(None).ok();
+        r
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn ConnTx>, Box<dyn ConnRx>)> {
+        let tx_stream = self.stream.try_clone()?;
+        Ok((
+            Box::new(TcpTx { stream: tx_stream }),
+            Box::new(TcpRx { stream: self.stream, buf: self.buf }),
+        ))
+    }
+}
+
+struct TcpTx {
+    stream: TcpStream,
+}
+
+impl ConnTx for TcpTx {
+    fn send(&mut self, msg: Msg) -> Result<()> {
+        tcp_write_frame(&mut self.stream, &msg)
+    }
+}
+
+struct TcpRx {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl ConnRx for TcpRx {
+    fn recv(&mut self) -> Result<Recv> {
+        self.stream.set_read_timeout(None)?;
+        let mut buf = std::mem::take(&mut self.buf);
+        let r = tcp_read_frame(&mut self.stream, &mut buf);
+        self.buf = buf;
+        r
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Recv> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        let mut buf = std::mem::take(&mut self.buf);
+        let r = tcp_read_frame(&mut self.stream, &mut buf);
+        self.buf = buf;
+        self.stream.set_read_timeout(None).ok();
+        r
+    }
+}
+
+struct TcpListenerWrap {
+    listener: TcpListener,
+    address: String,
+}
+
+impl Listener for TcpListenerWrap {
+    fn address(&self) -> String {
+        self.address.clone()
+    }
+
+    fn accept_timeout(&mut self, timeout: Duration)
+        -> Result<Option<Box<dyn Conn>>>
+    {
+        self.listener.set_nonblocking(true)?;
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    return Ok(Some(Box::new(TcpConn::new(stream)?)));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if std::time::Instant::now() >= deadline {
+                        return Ok(None);
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+/// The TCP sockets transport (the paper's "WAN" data plane).
+pub struct TcpTransport;
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn listen(&self, hint: &str) -> Result<Box<dyn Listener>> {
+        let bind = hint
+            .strip_prefix("tcp://")
+            .unwrap_or(if hint.is_empty() { "127.0.0.1:0" } else { hint });
+        let bind = if bind.contains(':') {
+            bind.to_string()
+        } else {
+            "127.0.0.1:0".to_string()
+        };
+        let listener = TcpListener::bind(&bind)
+            .with_context(|| format!("binding {bind:?}"))?;
+        let address = format!("tcp://{}", listener.local_addr()?);
+        Ok(Box::new(TcpListenerWrap { listener, address }))
+    }
+
+    fn dial(&self, address: &str) -> Result<Box<dyn Conn>> {
+        let addr = address
+            .strip_prefix("tcp://")
+            .context("tcp address must start with tcp://")?;
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting {addr:?}"))?;
+        Ok(Box::new(TcpConn::new(stream)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ping_pong(transport: &dyn Transport, hint: &str) {
+        let mut listener = transport.listen(hint).unwrap();
+        let addr = listener.address();
+        let t = std::thread::spawn({
+            let transport_name = transport.name().to_string();
+            move || {
+                let transport = by_name(&transport_name).unwrap();
+                let mut c = transport.dial(&addr).unwrap();
+                c.send(Msg::Hello { reader_rank: 1, hostname: "h1".into() })
+                    .unwrap();
+                match c.recv().unwrap() {
+                    Recv::Msg(Msg::HelloAck { writer_rank, .. }) => {
+                        assert_eq!(writer_rank, 0)
+                    }
+                    other => panic!("wrong reply: {:?}",
+                                    matches!(other, Recv::Closed)),
+                }
+            }
+        });
+        let mut server = listener
+            .accept_timeout(Duration::from_secs(5))
+            .unwrap()
+            .expect("no connection");
+        match server.recv().unwrap() {
+            Recv::Msg(Msg::Hello { reader_rank, hostname }) => {
+                assert_eq!(reader_rank, 1);
+                assert_eq!(hostname, "h1");
+            }
+            _ => panic!("expected Hello"),
+        }
+        server
+            .send(Msg::HelloAck { writer_rank: 0, hostname: "h0".into() })
+            .unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn inproc_ping_pong() {
+        ping_pong(&InProcTransport, "test-ping");
+    }
+
+    #[test]
+    fn tcp_ping_pong() {
+        ping_pong(&TcpTransport, "127.0.0.1:0");
+    }
+
+    #[test]
+    fn inproc_dial_unknown_fails() {
+        assert!(InProcTransport.dial("inproc://nope").is_err());
+    }
+
+    #[test]
+    fn inproc_duplicate_listen_fails() {
+        let _l = InProcTransport.listen("dup").unwrap();
+        assert!(InProcTransport.listen("dup").is_err());
+    }
+
+    #[test]
+    fn inproc_address_freed_on_drop() {
+        {
+            let _l = InProcTransport.listen("transient").unwrap();
+        }
+        let _l2 = InProcTransport.listen("transient").unwrap();
+    }
+
+    #[test]
+    fn accept_timeout_returns_none() {
+        let mut l = TcpTransport.listen("127.0.0.1:0").unwrap();
+        assert!(l
+            .accept_timeout(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let mut l = InProcTransport.listen("timeout-test").unwrap();
+        let addr = l.address();
+        let _client = InProcTransport.dial(&addr).unwrap();
+        let mut server = l
+            .accept_timeout(Duration::from_secs(1))
+            .unwrap()
+            .unwrap();
+        match server.recv_timeout(Duration::from_millis(20)).unwrap() {
+            Recv::TimedOut => {}
+            _ => panic!("expected timeout"),
+        }
+    }
+
+    #[test]
+    fn large_payload_over_tcp() {
+        let mut l = TcpTransport.listen("127.0.0.1:0").unwrap();
+        let addr = l.address();
+        let payload = Arc::new((0..2_000_000u32)
+            .flat_map(|x| x.to_le_bytes())
+            .collect::<Vec<u8>>());
+        let p2 = payload.clone();
+        let t = std::thread::spawn(move || {
+            let mut c = TcpTransport.dial(&addr).unwrap();
+            c.send(Msg::ChunkData { req_id: 7, data: p2 }).unwrap();
+        });
+        let mut server = l
+            .accept_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+        match server.recv().unwrap() {
+            Recv::Msg(Msg::ChunkData { req_id, data }) => {
+                assert_eq!(req_id, 7);
+                assert_eq!(*data, *payload);
+            }
+            _ => panic!("expected ChunkData"),
+        }
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,393 @@
+//! SST wire protocol: message types and their binary encoding.
+//!
+//! The same `Msg` enum flows over every transport. The in-process
+//! transport passes it by value (`Bytes` payloads are `Arc`s — zero-copy,
+//! the RDMA analogy); the TCP transport encodes it with the framing in
+//! this module. The BP file engine reuses [`StepMeta`]'s encoding for its
+//! per-step metadata blocks, so there is exactly one serialization of
+//! variable/chunk metadata in the codebase.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::engine::Bytes;
+use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
+use crate::openpmd::types::Datatype;
+use crate::openpmd::Attribute;
+
+/// Per-variable metadata within a step announcement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VarMeta {
+    pub name: String,
+    pub dtype: Datatype,
+    pub shape: Vec<u64>,
+    /// Chunks contributed by the announcing writer rank.
+    pub chunks: Vec<WrittenChunkInfo>,
+}
+
+/// Metadata of one published step from one writer rank.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepMeta {
+    pub attributes: BTreeMap<String, Attribute>,
+    pub vars: Vec<VarMeta>,
+}
+
+/// Protocol messages.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// Reader -> writer: subscribe to the stream.
+    Hello { reader_rank: usize, hostname: String },
+    /// Writer -> reader: identify.
+    HelloAck { writer_rank: usize, hostname: String },
+    /// Writer -> reader: a step is available.
+    StepAnnounce { step: u64, meta: StepMeta },
+    /// Reader -> writer: request a region of a variable.
+    ChunkRequest { req_id: u64, step: u64, var: String, sel: Chunk },
+    /// Writer -> reader: requested data (dense row-major for `sel`).
+    ChunkData { req_id: u64, data: Bytes },
+    /// Writer -> reader: request failed.
+    ChunkError { req_id: u64, error: String },
+    /// Reader -> writer: finished reading a step (lets the writer
+    /// retire it from the staging queue).
+    StepDone { step: u64 },
+    /// Writer -> reader: stream ends; no more steps.
+    CloseStream,
+    /// Reader -> writer: unsubscribe.
+    ReaderBye,
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::HelloAck { .. } => 2,
+            Msg::StepAnnounce { .. } => 3,
+            Msg::ChunkRequest { .. } => 4,
+            Msg::ChunkData { .. } => 5,
+            Msg::ChunkError { .. } => 6,
+            Msg::StepDone { .. } => 7,
+            Msg::CloseStream => 8,
+            Msg::ReaderBye => 9,
+        }
+    }
+}
+
+// -- primitive encoders ------------------------------------------------
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_vec_u64(out: &mut Vec<u8>, v: &[u64]) {
+    put_u64(out, v.len() as u64);
+    for x in v {
+        put_u64(out, *x);
+    }
+}
+
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("wire decode overrun: need {n} at {} of {}", self.pos,
+                  self.buf.len());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u64()? as usize;
+        if n > 1 << 24 {
+            bail!("implausible string length {n}");
+        }
+        Ok(String::from_utf8_lossy(self.take(n)?).into_owned())
+    }
+
+    pub fn vec_u64(&mut self) -> Result<Vec<u64>> {
+        let n = self.u64()? as usize;
+        if n > 64 {
+            bail!("implausible dimensionality {n}");
+        }
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+}
+
+fn put_chunk(out: &mut Vec<u8>, c: &Chunk) {
+    put_vec_u64(out, &c.offset);
+    put_vec_u64(out, &c.extent);
+}
+
+fn get_chunk(r: &mut Reader) -> Result<Chunk> {
+    let offset = r.vec_u64()?;
+    let extent = r.vec_u64()?;
+    if offset.len() != extent.len() {
+        bail!("chunk rank mismatch {} vs {}", offset.len(), extent.len());
+    }
+    Ok(Chunk { offset, extent })
+}
+
+// -- StepMeta ----------------------------------------------------------
+
+impl StepMeta {
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.attributes.len() as u64);
+        for (k, v) in &self.attributes {
+            put_str(out, k);
+            v.encode(out);
+        }
+        put_u64(out, self.vars.len() as u64);
+        for v in &self.vars {
+            put_str(out, &v.name);
+            out.push(v.dtype.tag());
+            put_vec_u64(out, &v.shape);
+            put_u64(out, v.chunks.len() as u64);
+            for ci in &v.chunks {
+                put_chunk(out, &ci.chunk);
+                put_u64(out, ci.source_rank as u64);
+                put_str(out, &ci.hostname);
+            }
+        }
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<StepMeta> {
+        let n_attr = r.u64()? as usize;
+        let mut attributes = BTreeMap::new();
+        for _ in 0..n_attr {
+            let k = r.str()?;
+            let mut pos = r.pos;
+            let v = Attribute::decode(r.buf, &mut pos)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            r.pos = pos;
+            attributes.insert(k, v);
+        }
+        let n_vars = r.u64()? as usize;
+        if n_vars > 1 << 20 {
+            bail!("implausible variable count {n_vars}");
+        }
+        let mut vars = Vec::with_capacity(n_vars);
+        for _ in 0..n_vars {
+            let name = r.str()?;
+            let dtype = Datatype::from_tag(r.u8()?)
+                .ok_or_else(|| anyhow::anyhow!("bad dtype tag"))?;
+            let shape = r.vec_u64()?;
+            let n_chunks = r.u64()? as usize;
+            if n_chunks > 1 << 24 {
+                bail!("implausible chunk count {n_chunks}");
+            }
+            let mut chunks = Vec::with_capacity(n_chunks);
+            for _ in 0..n_chunks {
+                let chunk = get_chunk(r)?;
+                let source_rank = r.u64()? as usize;
+                let hostname = r.str()?;
+                chunks.push(WrittenChunkInfo { chunk, source_rank, hostname });
+            }
+            vars.push(VarMeta { name, dtype, shape, chunks });
+        }
+        Ok(StepMeta { attributes, vars })
+    }
+}
+
+// -- Msg framing ---------------------------------------------------------
+
+/// Encode a message body (without the outer length frame).
+pub fn encode_msg(msg: &Msg) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.push(msg.tag());
+    match msg {
+        Msg::Hello { reader_rank, hostname } => {
+            put_u64(&mut out, *reader_rank as u64);
+            put_str(&mut out, hostname);
+        }
+        Msg::HelloAck { writer_rank, hostname } => {
+            put_u64(&mut out, *writer_rank as u64);
+            put_str(&mut out, hostname);
+        }
+        Msg::StepAnnounce { step, meta } => {
+            put_u64(&mut out, *step);
+            meta.encode(&mut out);
+        }
+        Msg::ChunkRequest { req_id, step, var, sel } => {
+            put_u64(&mut out, *req_id);
+            put_u64(&mut out, *step);
+            put_str(&mut out, var);
+            put_chunk(&mut out, sel);
+        }
+        Msg::ChunkData { req_id, data } => {
+            put_u64(&mut out, *req_id);
+            put_u64(&mut out, data.len() as u64);
+            out.extend_from_slice(data);
+        }
+        Msg::ChunkError { req_id, error } => {
+            put_u64(&mut out, *req_id);
+            put_str(&mut out, error);
+        }
+        Msg::StepDone { step } => put_u64(&mut out, *step),
+        Msg::CloseStream | Msg::ReaderBye => {}
+    }
+    out
+}
+
+/// Decode a message body produced by [`encode_msg`].
+pub fn decode_msg(buf: &[u8]) -> Result<Msg> {
+    let mut r = Reader::new(buf);
+    let tag = r.u8()?;
+    let msg = match tag {
+        1 => Msg::Hello { reader_rank: r.u64()? as usize, hostname: r.str()? },
+        2 => Msg::HelloAck {
+            writer_rank: r.u64()? as usize,
+            hostname: r.str()?,
+        },
+        3 => Msg::StepAnnounce { step: r.u64()?, meta: StepMeta::decode(&mut r)? },
+        4 => Msg::ChunkRequest {
+            req_id: r.u64()?,
+            step: r.u64()?,
+            var: r.str()?,
+            sel: get_chunk(&mut r)?,
+        },
+        5 => Msg::ChunkData {
+            req_id: r.u64()?,
+            data: std::sync::Arc::new(r.bytes()?),
+        },
+        6 => Msg::ChunkError { req_id: r.u64()?, error: r.str()? },
+        7 => Msg::StepDone { step: r.u64()? },
+        8 => Msg::CloseStream,
+        9 => Msg::ReaderBye,
+        other => bail!("unknown message tag {other}"),
+    };
+    if r.remaining() != 0 {
+        bail!("trailing {} bytes after message tag {tag}", r.remaining());
+    }
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn round_trip(msg: Msg) -> Msg {
+        decode_msg(&encode_msg(&msg)).unwrap()
+    }
+
+    fn sample_meta() -> StepMeta {
+        let mut attributes = BTreeMap::new();
+        attributes.insert("openPMD".into(), Attribute::Str("1.1.0".into()));
+        attributes.insert("/data/3/time".into(), Attribute::F64(1.5));
+        StepMeta {
+            attributes,
+            vars: vec![VarMeta {
+                name: "/data/3/particles/e/position/x".into(),
+                dtype: Datatype::F32,
+                shape: vec![1000],
+                chunks: vec![WrittenChunkInfo::new(
+                    Chunk::new(vec![0], vec![500]),
+                    2,
+                    "node07",
+                )],
+            }],
+        }
+    }
+
+    #[test]
+    fn step_announce_round_trips() {
+        match round_trip(Msg::StepAnnounce { step: 3, meta: sample_meta() }) {
+            Msg::StepAnnounce { step, meta } => {
+                assert_eq!(step, 3);
+                assert_eq!(meta, sample_meta());
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunk_request_round_trips() {
+        match round_trip(Msg::ChunkRequest {
+            req_id: 9,
+            step: 1,
+            var: "v".into(),
+            sel: Chunk::new(vec![5, 0], vec![10, 3]),
+        }) {
+            Msg::ChunkRequest { req_id, step, var, sel } => {
+                assert_eq!((req_id, step, var.as_str()), (9, 1, "v"));
+                assert_eq!(sel, Chunk::new(vec![5, 0], vec![10, 3]));
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunk_data_round_trips() {
+        let data = Arc::new(vec![1u8, 2, 3, 4, 5]);
+        match round_trip(Msg::ChunkData { req_id: 1, data: data.clone() }) {
+            Msg::ChunkData { req_id, data: d } => {
+                assert_eq!(req_id, 1);
+                assert_eq!(*d, *data);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_messages_round_trip() {
+        assert!(matches!(round_trip(Msg::CloseStream), Msg::CloseStream));
+        assert!(matches!(round_trip(Msg::ReaderBye), Msg::ReaderBye));
+        assert!(matches!(round_trip(Msg::StepDone { step: 7 }),
+                         Msg::StepDone { step: 7 }));
+        assert!(matches!(
+            round_trip(Msg::Hello { reader_rank: 4, hostname: "h".into() }),
+            Msg::Hello { reader_rank: 4, .. }
+        ));
+    }
+
+    #[test]
+    fn corrupt_buffers_are_errors_not_panics() {
+        let mut buf = encode_msg(&Msg::StepAnnounce {
+            step: 3,
+            meta: sample_meta(),
+        });
+        buf.truncate(buf.len() / 2);
+        assert!(decode_msg(&buf).is_err());
+        assert!(decode_msg(&[42]).is_err());
+        assert!(decode_msg(&[]).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut buf = encode_msg(&Msg::CloseStream);
+        buf.push(0);
+        assert!(decode_msg(&buf).is_err());
+    }
+}

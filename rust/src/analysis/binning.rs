@@ -1,0 +1,176 @@
+//! Energy-spectrum binning: the "filter and bin" analysis of Fig. 2.
+//!
+//! Computes a weighted kinetic-energy histogram of the particle stream
+//! via the `binning` artifact (Pallas one-hot matmul histogram), with a
+//! pure-rust fallback. Constants mirror python/compile/model.py.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::{Exec, Runtime};
+
+pub const E_MIN: f32 = 0.0;
+pub const E_MAX: f32 = 8.0;
+pub const N_BINS: usize = 256;
+/// Batch size baked into the artifact (aot.py HIST_SAMPLES).
+pub const BATCH: usize = 16384;
+
+/// Accumulating energy-spectrum analyzer.
+pub struct EnergySpectrum {
+    exec: Option<Arc<Exec>>,
+    bins: Vec<f64>,
+    pub samples_seen: u64,
+}
+
+impl EnergySpectrum {
+    pub fn new(runtime: Option<&Runtime>) -> Result<Self> {
+        let exec = match runtime {
+            Some(rt) => Some(rt.get("binning")?),
+            None => None,
+        };
+        Ok(EnergySpectrum {
+            exec,
+            bins: vec![0.0; N_BINS],
+            samples_seen: 0,
+        })
+    }
+
+    /// Feed momenta (interleaved [n,3]) and weights (n).
+    pub fn consume(&mut self, mom: &[f32], w: &[f32]) -> Result<()> {
+        assert_eq!(mom.len(), w.len() * 3);
+        let n = w.len();
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(BATCH);
+            match self.exec.clone() {
+                Some(exec) => self.batch_pjrt(
+                    &exec,
+                    &mom[i * 3..(i + take) * 3],
+                    &w[i..i + take],
+                )?,
+                None => self.batch_fallback(
+                    &mom[i * 3..(i + take) * 3],
+                    &w[i..i + take],
+                ),
+            }
+            self.samples_seen += take as u64;
+            i += take;
+        }
+        Ok(())
+    }
+
+    fn batch_pjrt(&mut self, exec: &Exec, mom: &[f32], w: &[f32])
+        -> Result<()>
+    {
+        let take = w.len();
+        let mut mom_b = vec![0.0f32; BATCH * 3];
+        let mut w_b = vec![0.0f32; BATCH];
+        mom_b[..take * 3].copy_from_slice(mom);
+        w_b[..take].copy_from_slice(w);
+        let out = exec.run_f32(&[&mom_b, &w_b])?;
+        for (acc, v) in self.bins.iter_mut().zip(&out[0]) {
+            *acc += *v as f64;
+        }
+        // Zero-weight padding lands in bin 0 with weight 0: no effect.
+        Ok(())
+    }
+
+    fn batch_fallback(&mut self, mom: &[f32], w: &[f32]) {
+        let width = (E_MAX - E_MIN) / N_BINS as f32;
+        for (j, &wj) in w.iter().enumerate() {
+            let e = 0.5
+                * (mom[j * 3].powi(2)
+                    + mom[j * 3 + 1].powi(2)
+                    + mom[j * 3 + 2].powi(2));
+            let idx = (((e - E_MIN) / width).floor() as i64)
+                .clamp(0, N_BINS as i64 - 1) as usize;
+            self.bins[idx] += wj as f64;
+        }
+    }
+
+    pub fn spectrum(&self) -> &[f64] {
+        &self.bins
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.bins.iter().sum()
+    }
+
+    pub fn merge(&mut self, other: &EnergySpectrum) {
+        self.absorb_bins(other.spectrum(), other.samples_seen);
+    }
+
+    /// Merge raw accumulated bins (from a worker that cannot move its
+    /// PJRT handles across threads).
+    pub fn absorb_bins(&mut self, bins: &[f64], samples: u64) {
+        assert_eq!(bins.len(), self.bins.len());
+        for (a, b) in self.bins.iter_mut().zip(bins) {
+            *a += *b;
+        }
+        self.samples_seen += samples;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn total_weight_conserved_fallback() {
+        let mut rng = Rng::new(0);
+        let n = 1000;
+        let mom: Vec<f32> =
+            (0..n * 3).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..n).map(|_| 0.5 + rng.f32()).collect();
+        let mut s = EnergySpectrum::new(None).unwrap();
+        s.consume(&mom, &w).unwrap();
+        let want: f64 = w.iter().map(|&x| x as f64).sum();
+        assert!((s.total_weight() - want).abs() < 1e-3);
+        assert_eq!(s.samples_seen, n as u64);
+    }
+
+    #[test]
+    fn cold_particles_in_first_bin() {
+        let mut s = EnergySpectrum::new(None).unwrap();
+        s.consume(&[0.0; 30], &[1.0; 10]).unwrap();
+        assert_eq!(s.spectrum()[0], 10.0);
+        assert_eq!(s.total_weight(), 10.0);
+    }
+
+    #[test]
+    fn artifact_matches_fallback() {
+        let dir = crate::runtime::Runtime::default_dir();
+        if !dir.join("meta.json").exists() {
+            return;
+        }
+        let rt = crate::runtime::Runtime::load(dir).unwrap();
+        let mut rng = Rng::new(5);
+        let n = 2000;
+        let mom: Vec<f32> =
+            (0..n * 3).map(|_| rng.normal() as f32 * 1.5).collect();
+        let w: Vec<f32> = (0..n).map(|_| 0.5 + rng.f32()).collect();
+        let mut a = EnergySpectrum::new(Some(&rt)).unwrap();
+        a.consume(&mom, &w).unwrap();
+        let mut b = EnergySpectrum::new(None).unwrap();
+        b.consume(&mom, &w).unwrap();
+        for (i, (x, y)) in
+            a.spectrum().iter().zip(b.spectrum()).enumerate()
+        {
+            assert!((x - y).abs() < 1e-2 * y.abs().max(1.0),
+                    "bin {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = EnergySpectrum::new(None).unwrap();
+        a.consume(&[0.0; 3], &[2.0]).unwrap();
+        let mut b = EnergySpectrum::new(None).unwrap();
+        b.consume(&[0.0; 3], &[3.0]).unwrap();
+        a.merge(&b);
+        assert_eq!(a.spectrum()[0], 5.0);
+        assert_eq!(a.samples_seen, 2);
+    }
+}

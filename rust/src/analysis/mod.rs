@@ -1,0 +1,14 @@
+//! Analysis consumers (S13): the GAPD stand-in and the binning stage.
+//!
+//! * [`saxs`] — the paper's §4.2 consumer: kinematical small-angle X-ray
+//!   scattering over the particle stream, computed by the `saxs`
+//!   artifact (L1 Pallas kernel on the MXU-shaped formulation), with a
+//!   pure-rust oracle fallback.
+//! * [`binning`] — the "filter and bin" stage of Fig. 2: a weighted
+//!   kinetic-energy spectrum via the `binning` artifact.
+
+pub mod binning;
+pub mod saxs;
+
+pub use binning::EnergySpectrum;
+pub use saxs::SaxsAnalyzer;

@@ -1,0 +1,22 @@
+//! Benchmark harness (S18): simulated paper experiments + formatting +
+//! a criterion-substitute timing loop (criterion is unavailable
+//! offline; `benches/*.rs` are plain `harness = false` mains built on
+//! this module).
+//!
+//! * [`fig6`] — §4.1 asynchronous-IO pipeline simulation (BP-only vs
+//!   SST+BP), regenerating Fig. 6, Fig. 7 and the dump-count / IO-share
+//!   numbers quoted in the text.
+//! * [`fig8`] — §4.2/4.3 simulation–analysis pipeline simulation
+//!   (distribution strategies × transports), regenerating Fig. 8 and
+//!   Fig. 9. Uses the *real* distribution strategies to plan the
+//!   simulated flows.
+//! * [`table`] — ASCII tables and CSV emission for the bench outputs.
+//! * [`timing`] — measured (not simulated) micro-bench loop.
+
+pub mod fig6;
+pub mod fig8;
+pub mod table;
+pub mod timing;
+
+pub use table::Table;
+pub use timing::{bench_loop, BenchResult};

@@ -1,0 +1,120 @@
+//! Measured micro-benchmark loop (criterion substitute).
+//!
+//! Warms up, then runs timed samples until both a minimum sample count
+//! and a minimum measuring time are reached; reports mean/median/p95 and
+//! ops/s. Deliberately simple: no outlier rejection beyond the median,
+//! no statistical tests — the numbers feed EXPERIMENTS.md §Perf tables,
+//! not regressions dashboards.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{boxplot, BoxPlot};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    /// Per-iteration seconds.
+    pub stats: BoxPlot,
+    pub mean: f64,
+}
+
+impl BenchResult {
+    pub fn per_iter(&self) -> Duration {
+        Duration::from_secs_f64(self.mean)
+    }
+
+    /// Iterations per second.
+    pub fn rate(&self) -> f64 {
+        if self.mean > 0.0 { 1.0 / self.mean } else { f64::INFINITY }
+    }
+
+    /// Render one line: `name  median  mean  p-ish  rate`.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter (median {:>12}, n={})",
+            self.name,
+            crate::util::fmt_duration(Duration::from_secs_f64(self.mean)),
+            crate::util::fmt_duration(Duration::from_secs_f64(
+                self.stats.median
+            )),
+            self.samples
+        )
+    }
+
+    /// Throughput line for byte-moving benches.
+    pub fn render_bytes(&self, bytes_per_iter: u64) -> String {
+        let rate = bytes_per_iter as f64 / self.mean;
+        format!(
+            "{:<44} {:>14} ({:>12}/iter, n={})",
+            self.name,
+            crate::util::bytes::fmt_rate(rate),
+            crate::util::fmt_duration(Duration::from_secs_f64(self.mean)),
+            self.samples
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed iterations, then at least
+/// `min_samples` timed ones and at least `min_time` of total measurement.
+pub fn bench_loop(
+    name: &str,
+    warmup: usize,
+    min_samples: usize,
+    min_time: Duration,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(min_samples * 2);
+    let started = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= min_samples && started.elapsed() >= min_time {
+            break;
+        }
+        if samples.len() >= 1_000_000 {
+            break; // guard against being handed a no-op
+        }
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        samples: samples.len(),
+        stats: boxplot(&samples),
+        mean,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let r = bench_loop(
+            "sleep-2ms",
+            1,
+            5,
+            Duration::from_millis(1),
+            || std::thread::sleep(Duration::from_millis(2)),
+        );
+        assert!(r.mean >= 0.002, "{}", r.mean);
+        assert!(r.mean < 0.05, "{}", r.mean);
+        assert!(r.samples >= 5);
+        assert!(r.rate() < 500.0);
+    }
+
+    #[test]
+    fn render_contains_name() {
+        let r = bench_loop("nm", 0, 3, Duration::ZERO, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.render().contains("nm"));
+        assert!(r.render_bytes(1024).contains("/s"));
+    }
+}

@@ -1,0 +1,34 @@
+//! The simulated Summit substrate (S8–S10).
+//!
+//! The paper's evaluation ran on OLCF Summit (4608 nodes, 6 V100 per
+//! node, dual-EDR Infiniband, 2.5 TiB/s Alpine GPFS). This environment
+//! has none of that, so — per the substitution rule in DESIGN.md §5 —
+//! the scale benchmarks run against a calibrated model:
+//!
+//! * [`systems`] — the Table 1 system inventory (Titan/Summit/Frontier)
+//!   and the storage-requirement arithmetic.
+//! * [`topology`] — nodes, GPUs, rank placement for writer/reader
+//!   applications (the `jsrun` role of §4.2).
+//! * [`network`] — fabric/PFS rate models with the calibration constants
+//!   and their provenance (each one traces back to a number in the
+//!   paper or the Summit system docs).
+//! * [`des`] — a max–min fair-share ("water-filling") fluid flow
+//!   simulator: transfers are flows over shared resources; event times
+//!   fall out of progressive-filling rate allocation.
+//!
+//! What the model *does* capture: bandwidth ceilings (NIC, PFS
+//! aggregate, per-node injection), sharing/contention, per-message
+//! transport overheads (RDMA vs sockets), straggler tails, and the
+//! backpressure semantics of the SST queue. What it does *not* capture:
+//! routing detail of the fat tree, MPI collective interference, GPFS
+//! metadata storms. The paper's Figs. 6–9 are dominated by the former
+//! group, which is why the shapes reproduce (EXPERIMENTS.md).
+
+pub mod des;
+pub mod network;
+pub mod systems;
+pub mod topology;
+
+pub use des::{FlowId, ResourceId, Sim};
+pub use network::{FabricModel, TransportKind};
+pub use topology::{ClusterLayout, Placement};

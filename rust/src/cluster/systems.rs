@@ -1,0 +1,139 @@
+//! System inventory behind Table 1: OLCF Titan → Summit → Frontier,
+//! and the storage-requirement arithmetic the table's last column shows.
+
+use crate::util::bytes::{GIB, PIB, TIB};
+
+/// One HPC system's headline numbers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemSpec {
+    pub name: &'static str,
+    pub year: u32,
+    /// Peak compute in PFlop/s.
+    pub compute_pflops: f64,
+    /// Parallel-filesystem aggregate bandwidth in bytes/s.
+    /// For planned systems a (min, max) range.
+    pub pfs_bandwidth: (f64, f64),
+    /// PFS capacity in bytes (min, max).
+    pub pfs_capacity: (f64, f64),
+    pub nodes: u64,
+    pub gpus_per_node: u64,
+    /// GPU memory per device, bytes.
+    pub gpu_mem: u64,
+}
+
+/// OLCF Titan (2013): Tesla K20X, Atlas Lustre.
+pub const TITAN: SystemSpec = SystemSpec {
+    name: "Titan",
+    year: 2013,
+    compute_pflops: 27.0,
+    pfs_bandwidth: (1.0 * TIB as f64, 1.0 * TIB as f64),
+    pfs_capacity: (27.0 * PIB as f64, 27.0 * PIB as f64),
+    nodes: 18_688,
+    gpus_per_node: 1,
+    gpu_mem: 6 * GIB,
+};
+
+/// OLCF Summit (2018): 6x Tesla V100 (16 GiB HBM2), Alpine GPFS.
+pub const SUMMIT: SystemSpec = SystemSpec {
+    name: "Summit",
+    year: 2018,
+    compute_pflops: 200.0,
+    pfs_bandwidth: (2.5 * TIB as f64, 2.5 * TIB as f64),
+    pfs_capacity: (250.0 * PIB as f64, 250.0 * PIB as f64),
+    nodes: 4_608,
+    gpus_per_node: 6,
+    gpu_mem: 16 * GIB,
+};
+
+/// OLCF Frontier (planned 2021 at the time of the paper): ranges as the
+/// paper quotes them.
+pub const FRONTIER: SystemSpec = SystemSpec {
+    name: "Frontier",
+    year: 2021,
+    compute_pflops: 1_500.0,
+    pfs_bandwidth: (5.0 * TIB as f64, 10.0 * TIB as f64),
+    pfs_capacity: (500.0 * PIB as f64, 1000.0 * PIB as f64),
+    nodes: 9_408,
+    gpus_per_node: 4,
+    // MI250X: 128 GiB per module; the paper's 80-100 PiB storage-need
+    // column implies ~ 1.6-2.0 PiB of aggregate GPU memory.
+    gpu_mem: 128 * GIB,
+};
+
+impl SystemSpec {
+    /// Aggregate GPU memory of the whole machine, bytes.
+    pub fn total_gpu_memory(&self) -> u64 {
+        self.nodes * self.gpus_per_node * self.gpu_mem
+    }
+
+    /// Table 1, last column: storage needed by a full-scale run that
+    /// dumps all GPU memory `dumps` times.
+    pub fn storage_requirement(&self, dumps: u64) -> u64 {
+        self.total_gpu_memory() * dumps
+    }
+
+    /// §1.1: theoretical max PFS throughput per GPU at full scale —
+    /// 56 MB/s on Titan, ~95 MB/s on Summit.
+    pub fn pfs_share_per_gpu(&self) -> f64 {
+        self.pfs_bandwidth.0 / (self.nodes * self.gpus_per_node) as f64
+    }
+
+    /// Compute-to-bandwidth growth factors between systems (§1.1's
+    /// argument that storage scaling falls behind compute scaling).
+    pub fn compute_factor_over(&self, other: &SystemSpec) -> f64 {
+        self.compute_pflops / other.compute_pflops
+    }
+
+    pub fn bandwidth_factor_over(&self, other: &SystemSpec) -> (f64, f64) {
+        (
+            self.pfs_bandwidth.0 / other.pfs_bandwidth.1,
+            self.pfs_bandwidth.1 / other.pfs_bandwidth.0,
+        )
+    }
+}
+
+/// All three systems, Table 1 order.
+pub fn table1_systems() -> [&'static SystemSpec; 3] {
+    [&TITAN, &SUMMIT, &FRONTIER]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summit_storage_requirement_matches_paper() {
+        // Paper: 21.1 PiB for 50 dumps of all GPU memory.
+        let req = SUMMIT.storage_requirement(50) as f64 / PIB as f64;
+        assert!((req - 21.1).abs() < 0.3, "got {req} PiB");
+    }
+
+    #[test]
+    fn titan_storage_requirement_matches_paper() {
+        // Paper: 5.3 PiB.
+        let req = TITAN.storage_requirement(50) as f64 / PIB as f64;
+        assert!((req - 5.3).abs() < 0.2, "got {req} PiB");
+    }
+
+    #[test]
+    fn per_gpu_pfs_share_matches_paper() {
+        // Paper §1.1: 56 MB/s on Titan, 95 MB/s on Summit.
+        let titan = TITAN.pfs_share_per_gpu() / (1 << 20) as f64;
+        assert!((titan - 56.0).abs() < 6.0, "titan {titan} MiB/s");
+        let summit = SUMMIT.pfs_share_per_gpu() / (1 << 20) as f64;
+        assert!((summit - 95.0).abs() < 6.0, "summit {summit} MiB/s");
+    }
+
+    #[test]
+    fn growth_factors_match_paper() {
+        // Compute: ~7.4x Titan->Summit, >7.5x Summit->Frontier.
+        let c1 = SUMMIT.compute_factor_over(&TITAN);
+        assert!((c1 - 7.4).abs() < 0.1, "{c1}");
+        assert!(FRONTIER.compute_factor_over(&SUMMIT) >= 7.5);
+        // Bandwidth: only 2.5x Titan->Summit, 2-4x Summit->Frontier.
+        let (blo, bhi) = SUMMIT.bandwidth_factor_over(&TITAN);
+        assert!((blo - 2.5).abs() < 0.01 && (bhi - 2.5).abs() < 0.01);
+        let (flo, fhi) = FRONTIER.bandwidth_factor_over(&SUMMIT);
+        assert!(flo >= 2.0 && fhi <= 4.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Node topology and rank placement: the `jsrun` role.
+//!
+//! §4.2: "The Summit compute system hosts six GPUs per node, and the
+//! surveyed setup shares them equally between simulation and analysis" —
+//! placement is a *scheduling* decision the loose-coupling approach makes
+//! tunable without code changes (the §4.3 GPU-share experiment).
+
+use crate::distribution::{ReaderLayout, ReaderRank};
+
+/// The simulated cluster: `nodes` identical nodes with `gpus_per_node`
+/// GPUs each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClusterLayout {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl ClusterLayout {
+    pub fn summit(nodes: usize) -> Self {
+        ClusterLayout { nodes, gpus_per_node: 6 }
+    }
+
+    pub fn hostname(&self, node: usize) -> String {
+        format!("node{node:04}")
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+}
+
+/// A placed rank of either application.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlacedRank {
+    pub rank: usize,
+    pub node: usize,
+    /// GPU slot within the node.
+    pub slot: usize,
+    pub hostname: String,
+}
+
+/// Writer/reader rank placement over a cluster.
+#[derive(Clone, Debug, Default)]
+pub struct Placement {
+    pub writers: Vec<PlacedRank>,
+    pub readers: Vec<PlacedRank>,
+}
+
+impl Placement {
+    /// Co-scheduled placement (§4.2): every node runs `writers_per_node`
+    /// writer ranks on its first GPUs and `readers_per_node` reader ranks
+    /// on the remaining ones. Panics if the node is oversubscribed.
+    pub fn co_scheduled(
+        cluster: ClusterLayout,
+        writers_per_node: usize,
+        readers_per_node: usize,
+    ) -> Placement {
+        assert!(
+            writers_per_node + readers_per_node <= cluster.gpus_per_node,
+            "{} + {} ranks > {} GPUs per node",
+            writers_per_node,
+            readers_per_node,
+            cluster.gpus_per_node
+        );
+        let mut p = Placement::default();
+        for node in 0..cluster.nodes {
+            let hostname = cluster.hostname(node);
+            for slot in 0..writers_per_node {
+                p.writers.push(PlacedRank {
+                    rank: node * writers_per_node + slot,
+                    node,
+                    slot,
+                    hostname: hostname.clone(),
+                });
+            }
+            for r in 0..readers_per_node {
+                p.readers.push(PlacedRank {
+                    rank: node * readers_per_node + r,
+                    node,
+                    slot: writers_per_node + r,
+                    hostname: hostname.clone(),
+                });
+            }
+        }
+        p
+    }
+
+    /// Disjoint placement: writers on the first `writer_nodes`, readers
+    /// on the rest. Used to exercise the by-hostname fallback path.
+    pub fn disjoint(
+        cluster: ClusterLayout,
+        writer_nodes: usize,
+        ranks_per_node: usize,
+    ) -> Placement {
+        assert!(writer_nodes <= cluster.nodes);
+        assert!(ranks_per_node <= cluster.gpus_per_node);
+        let mut p = Placement::default();
+        for node in 0..writer_nodes {
+            for slot in 0..ranks_per_node {
+                p.writers.push(PlacedRank {
+                    rank: node * ranks_per_node + slot,
+                    node,
+                    slot,
+                    hostname: cluster.hostname(node),
+                });
+            }
+        }
+        for (i, node) in (writer_nodes..cluster.nodes).enumerate() {
+            for slot in 0..ranks_per_node {
+                p.readers.push(PlacedRank {
+                    rank: i * ranks_per_node + slot,
+                    node,
+                    slot,
+                    hostname: cluster.hostname(node),
+                });
+            }
+        }
+        p
+    }
+
+    /// The reader side as a distribution-layer [`ReaderLayout`].
+    pub fn reader_layout(&self) -> ReaderLayout {
+        ReaderLayout {
+            ranks: self
+                .readers
+                .iter()
+                .map(|r| ReaderRank {
+                    rank: r.rank,
+                    hostname: r.hostname.clone(),
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn co_scheduled_3_plus_3() {
+        let p = Placement::co_scheduled(ClusterLayout::summit(4), 3, 3);
+        assert_eq!(p.writers.len(), 12);
+        assert_eq!(p.readers.len(), 12);
+        // Writer 7 = node 2, slot 1; reader 7 = node 2, slot 3+1.
+        assert_eq!(p.writers[7].node, 2);
+        assert_eq!(p.writers[7].slot, 1);
+        assert_eq!(p.readers[7].slot, 4);
+        assert_eq!(p.writers[7].hostname, p.readers[7].hostname);
+    }
+
+    #[test]
+    fn gpu_share_shift_1_plus_5() {
+        // §4.3: "Dedicating five GPUs on a node to GAPD and only one to
+        // PIConGPU".
+        let p = Placement::co_scheduled(ClusterLayout::summit(2), 1, 5);
+        assert_eq!(p.writers.len(), 2);
+        assert_eq!(p.readers.len(), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversubscription_panics() {
+        Placement::co_scheduled(ClusterLayout::summit(1), 4, 3);
+    }
+
+    #[test]
+    fn disjoint_nodes_have_no_overlap() {
+        let p = Placement::disjoint(ClusterLayout::summit(6), 4, 6);
+        assert_eq!(p.writers.len(), 24);
+        assert_eq!(p.readers.len(), 12);
+        let wh: std::collections::BTreeSet<_> =
+            p.writers.iter().map(|w| &w.hostname).collect();
+        let rh: std::collections::BTreeSet<_> =
+            p.readers.iter().map(|r| &r.hostname).collect();
+        assert!(wh.is_disjoint(&rh));
+    }
+
+    #[test]
+    fn reader_layout_conversion() {
+        let p = Placement::co_scheduled(ClusterLayout::summit(2), 3, 3);
+        let l = p.reader_layout();
+        assert_eq!(l.len(), 6);
+        assert_eq!(l.ranks[4].hostname, "node0001");
+    }
+}

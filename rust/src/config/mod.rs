@@ -1,0 +1,13 @@
+//! Configuration system (S15): a TOML-subset parser plus typed schemas
+//! for pipelines and benchmarks.
+//!
+//! The paper's *flexibility* criterion: "optimization for system
+//! specifics should be exposed through runtime configuration". Engine
+//! kind, transport, queue policy, distribution strategy and node layout
+//! are all config values here — application code never changes.
+
+mod parser;
+mod schema;
+
+pub use parser::{parse_config, ConfigValue, ParseError};
+pub use schema::{BenchmarkConfig, PipelineConfig, StageConfig};

@@ -1,0 +1,292 @@
+//! TOML-subset parser.
+//!
+//! Supported: `[section]` / `[section.sub]` headers, `key = value` with
+//! strings, integers, floats, booleans, and homogeneous inline arrays;
+//! `#` comments. Unsupported (by design): dotted keys, arrays of tables,
+//! multi-line strings, dates. Errors carry line numbers.
+
+use std::collections::BTreeMap;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<ConfigValue>),
+}
+
+impl ConfigValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ConfigValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            ConfigValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            ConfigValue::Float(f) => Some(*f),
+            ConfigValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            ConfigValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[ConfigValue]> {
+        match self {
+            ConfigValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with location.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("config parse error at line {line}: {message}")]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+fn err(line: usize, message: impl Into<String>) -> ParseError {
+    ParseError { line, message: message.into() }
+}
+
+/// Parse a config document into `section.key -> value` (keys in the
+/// top-level section have no prefix).
+pub fn parse_config(input: &str)
+    -> Result<BTreeMap<String, ConfigValue>, ParseError>
+{
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (idx, raw) in input.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            if !name.chars().all(|c| {
+                c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.'
+            }) {
+                return Err(err(lineno, format!("bad section name {name:?}")));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| err(lineno, "expected key = value"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(value.trim(), lineno)?;
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        if out.contains_key(&full_key) {
+            return Err(err(lineno, format!("duplicate key {full_key:?}")));
+        }
+        out.insert(full_key, value);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<ConfigValue, ParseError> {
+    if s.is_empty() {
+        return Err(err(line, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(line, "embedded quote in string (unsupported)"));
+        }
+        return Ok(ConfigValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(ConfigValue::Array(Vec::new()));
+        }
+        let items = split_array_items(inner, line)?;
+        let parsed: Result<Vec<_>, _> = items
+            .into_iter()
+            .map(|item| parse_value(item.trim(), line))
+            .collect();
+        return Ok(ConfigValue::Array(parsed?));
+    }
+    match s {
+        "true" => return Ok(ConfigValue::Bool(true)),
+        "false" => return Ok(ConfigValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(ConfigValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(ConfigValue::Float(f));
+    }
+    Err(err(line, format!("cannot parse value {s:?}")))
+}
+
+/// Split a flat array body on commas that are not inside strings.
+fn split_array_items(s: &str, line: usize)
+    -> Result<Vec<&str>, ParseError>
+{
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    let mut depth = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err(err(line, "unterminated string in array"));
+    }
+    items.push(&s[start..]);
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sectioned() {
+        let doc = r#"
+            # pipeline definition
+            name = "kh-pipeline"   # inline comment
+            nodes = 64
+
+            [sst]
+            transport = "tcp"
+            queue_limit = 2
+            discard = true
+
+            [producer.species]
+            weights = [1.0, 2.0, 3.5]
+            labels = ["x", "y"]
+        "#;
+        let c = parse_config(doc).unwrap();
+        assert_eq!(c["name"].as_str(), Some("kh-pipeline"));
+        assert_eq!(c["nodes"].as_int(), Some(64));
+        assert_eq!(c["sst.transport"].as_str(), Some("tcp"));
+        assert_eq!(c["sst.discard"].as_bool(), Some(true));
+        assert_eq!(
+            c["producer.species.weights"].as_array().unwrap().len(),
+            3
+        );
+        assert_eq!(
+            c["producer.species.labels"].as_array().unwrap()[1].as_str(),
+            Some("y")
+        );
+    }
+
+    #[test]
+    fn numbers_and_underscores() {
+        let c = parse_config("big = 1_000_000\npi = 3.14\nneg = -7").unwrap();
+        assert_eq!(c["big"].as_int(), Some(1_000_000));
+        assert_eq!(c["pi"].as_float(), Some(3.14));
+        assert_eq!(c["neg"].as_int(), Some(-7));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let c = parse_config("x = 5").unwrap();
+        assert_eq!(c["x"].as_float(), Some(5.0));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = parse_config(r##"tag = "a#b""##).unwrap();
+        assert_eq!(c["tag"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn error_line_numbers() {
+        let e = parse_config("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse_config("x = \"unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse_config("a = 1\na = 2").is_err());
+        // Same key in different sections is fine.
+        assert!(parse_config("[s1]\na = 1\n[s2]\na = 2").is_ok());
+    }
+
+    #[test]
+    fn empty_array_and_nested_rejected_gracefully() {
+        let c = parse_config("xs = []").unwrap();
+        assert_eq!(c["xs"].as_array().unwrap().len(), 0);
+        let c = parse_config("xs = [[1, 2], [3]]").unwrap();
+        let outer = c["xs"].as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn bad_sections_rejected() {
+        assert!(parse_config("[unclosed").is_err());
+        assert!(parse_config("[]").is_err());
+        assert!(parse_config("[has space]").is_err());
+    }
+}

@@ -1,0 +1,300 @@
+//! Typed configuration schemas, populated from [`super::parse_config`]
+//! documents (or built programmatically by the examples/benches).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::parser::ConfigValue;
+use crate::adios::EngineKind;
+use crate::adios::sst::{QueueConfig, QueueFullPolicy};
+
+/// One stage of a loosely-coupled pipeline (Fig. 2): a producer, an
+/// adaptor (`openpmd-pipe`), an analysis, or a sink.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageConfig {
+    pub name: String,
+    /// `"producer" | "pipe" | "analysis" | "file-sink"`.
+    pub kind: String,
+    /// Engine on the *input* side (readers); producers have none.
+    pub input: Option<EngineKind>,
+    /// Engine on the *output* side (writers); sinks may write files.
+    pub output: Option<EngineKind>,
+    /// Parallel instances per node.
+    pub instances_per_node: usize,
+}
+
+/// A full pipeline description.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub name: String,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub stages: Vec<StageConfig>,
+    pub queue: QueueConfig,
+    /// Chunk-distribution strategy name (resolved by
+    /// `distribution::by_name`).
+    pub strategy: String,
+    /// Simulation steps between output attempts (paper: 100 / 2000 / 400).
+    pub output_period: usize,
+    /// Bytes produced per writer rank per output step.
+    pub bytes_per_rank: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            name: "pipeline".into(),
+            nodes: 1,
+            gpus_per_node: 6,
+            stages: Vec::new(),
+            queue: QueueConfig::default(),
+            strategy: "hyperslabs".into(),
+            output_period: 100,
+            bytes_per_rank: 0,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Build from a parsed config map.
+    pub fn from_map(map: &BTreeMap<String, ConfigValue>) -> Result<Self> {
+        let mut cfg = PipelineConfig::default();
+        if let Some(v) = map.get("name") {
+            cfg.name = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("name must be a string"))?
+                .to_string();
+        }
+        if let Some(v) = map.get("nodes") {
+            cfg.nodes = v
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("nodes must be a non-negative integer"))?;
+        }
+        if let Some(v) = map.get("gpus_per_node") {
+            cfg.gpus_per_node = v
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("gpus_per_node must be an integer"))?;
+        }
+        if let Some(v) = map.get("strategy") {
+            cfg.strategy = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("strategy must be a string"))?
+                .to_string();
+        }
+        if let Some(v) = map.get("output_period") {
+            cfg.output_period = v
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("output_period must be an integer"))?;
+        }
+        if let Some(v) = map.get("bytes_per_rank") {
+            cfg.bytes_per_rank = match v {
+                ConfigValue::Int(i) if *i >= 0 => *i as u64,
+                ConfigValue::Str(s) => crate::util::bytes::parse_bytes(s)
+                    .map_err(|e| anyhow::anyhow!(e))?,
+                _ => bail!("bytes_per_rank must be an integer or size string"),
+            };
+        }
+        if let Some(v) = map.get("queue.policy") {
+            cfg.queue.policy = match v.as_str() {
+                Some("discard") => QueueFullPolicy::Discard,
+                Some("block") => QueueFullPolicy::Block,
+                other => bail!("queue.policy must be discard|block, got {other:?}"),
+            };
+        }
+        if let Some(v) = map.get("queue.limit") {
+            cfg.queue.limit = v
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("queue.limit must be an integer"))?;
+        }
+        // Stages: stage.<n>.* keys, n = 0, 1, 2, ...
+        let mut stage_idx = 0usize;
+        loop {
+            let prefix = format!("stage.{stage_idx}.");
+            let keys: Vec<&String> =
+                map.keys().filter(|k| k.starts_with(&prefix)).collect();
+            if keys.is_empty() {
+                break;
+            }
+            let get_str = |field: &str| -> Option<&str> {
+                map.get(&format!("{prefix}{field}"))
+                    .and_then(|v| v.as_str())
+            };
+            let kind = get_str("kind")
+                .ok_or_else(|| anyhow::anyhow!("stage {stage_idx} missing kind"))?
+                .to_string();
+            let stage = StageConfig {
+                name: get_str("name")
+                    .unwrap_or(kind.as_str())
+                    .to_string(),
+                kind,
+                input: get_str("input")
+                    .map(EngineKind::parse)
+                    .transpose()?,
+                output: get_str("output")
+                    .map(EngineKind::parse)
+                    .transpose()?,
+                instances_per_node: map
+                    .get(&format!("{prefix}instances_per_node"))
+                    .map(|v| {
+                        v.as_usize().ok_or_else(|| {
+                            anyhow::anyhow!("instances_per_node must be an integer")
+                        })
+                    })
+                    .transpose()?
+                    .unwrap_or(1),
+            };
+            cfg.stages.push(stage);
+            stage_idx += 1;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Structural validation.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 {
+            bail!("pipeline needs at least one node");
+        }
+        if self.gpus_per_node == 0 {
+            bail!("gpus_per_node must be positive");
+        }
+        if self.queue.limit == 0 {
+            bail!("queue.limit must be positive");
+        }
+        let per_node: usize = self
+            .stages
+            .iter()
+            .filter(|s| s.kind == "producer" || s.kind == "analysis")
+            .map(|s| s.instances_per_node)
+            .sum();
+        if per_node > self.gpus_per_node {
+            bail!(
+                "stages place {per_node} GPU ranks per node but nodes have \
+                 {} GPUs",
+                self.gpus_per_node
+            );
+        }
+        for s in &self.stages {
+            match s.kind.as_str() {
+                "producer" => {
+                    if s.output.is_none() {
+                        bail!("producer stage {} needs an output engine",
+                              s.name);
+                    }
+                }
+                "pipe" | "analysis" => {
+                    if s.input.is_none() {
+                        bail!("{} stage {} needs an input engine",
+                              s.kind, s.name);
+                    }
+                }
+                "file-sink" => {}
+                other => bail!("unknown stage kind {other:?}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parameters of one simulated benchmark run (Figs. 6–9).
+#[derive(Clone, Debug)]
+pub struct BenchmarkConfig {
+    pub nodes: Vec<usize>,
+    pub repetitions: usize,
+    pub duration_s: f64,
+    pub seed: u64,
+}
+
+impl Default for BenchmarkConfig {
+    fn default() -> Self {
+        BenchmarkConfig {
+            nodes: vec![64, 128, 256, 512],
+            repetitions: 3,
+            duration_s: 900.0, // the paper's 15 minutes
+            seed: 0x06e6_50d5_7ea4_2021, // "openPMD-stream 2021"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_config;
+
+    fn sample() -> BTreeMap<String, ConfigValue> {
+        parse_config(
+            r#"
+            name = "sst-bp"
+            nodes = 4
+            gpus_per_node = 6
+            strategy = "hostname"
+            output_period = 100
+            bytes_per_rank = "9.14 GiB"
+
+            [queue]
+            policy = "discard"
+            limit = 2
+
+            [stage.0]
+            kind = "producer"
+            name = "picongpu"
+            output = "sst:inproc"
+            instances_per_node = 6
+
+            [stage.1]
+            kind = "pipe"
+            name = "openpmd-pipe"
+            input = "sst:inproc"
+            output = "bp:1"
+            instances_per_node = 1
+            "#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn full_pipeline_parses() {
+        let cfg = PipelineConfig::from_map(&sample()).unwrap();
+        assert_eq!(cfg.name, "sst-bp");
+        assert_eq!(cfg.nodes, 4);
+        assert_eq!(cfg.stages.len(), 2);
+        assert_eq!(cfg.stages[0].instances_per_node, 6);
+        assert_eq!(cfg.stages[1].output,
+                   Some(EngineKind::Bp { aggregation: 1 }));
+        assert_eq!(cfg.queue.policy, QueueFullPolicy::Discard);
+        assert_eq!(cfg.bytes_per_rank,
+                   crate::util::bytes::parse_bytes("9.14 GiB").unwrap());
+    }
+
+    #[test]
+    fn oversubscribed_gpus_rejected() {
+        let mut map = sample();
+        map.insert("stage.0.instances_per_node".into(),
+                   ConfigValue::Int(7));
+        assert!(PipelineConfig::from_map(&map).is_err());
+    }
+
+    #[test]
+    fn producer_without_output_rejected() {
+        let mut map = sample();
+        map.remove("stage.0.output");
+        assert!(PipelineConfig::from_map(&map).is_err());
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        let mut map = sample();
+        map.insert("queue.policy".into(),
+                   ConfigValue::Str("yolo".into()));
+        assert!(PipelineConfig::from_map(&map).is_err());
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let b = BenchmarkConfig::default();
+        assert_eq!(b.nodes, vec![64, 128, 256, 512]);
+        assert_eq!(b.repetitions, 3);
+        assert_eq!(b.duration_s, 900.0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Distribution by hostname (§3.2, fourth algorithm; Fig. 4).
+//!
+//! Two phases:
+//!
+//! 1. **sort by node**: chunks written on a host that also runs readers
+//!    are distributed *within that host* by a secondary strategy — all
+//!    communication stays on-node;
+//! 2. **fallback**: chunks from hosts without readers are distributed
+//!    over *all* readers by a fallback strategy, ensuring completeness.
+//!
+//! The algorithm thereby "dynamically adapts to job scheduling" (§3.2):
+//! co-scheduled writers and readers (the paper's 3+3 GPUs per node) get
+//! perfect locality; disjoint scheduling automatically degrades to the
+//! fallback. The hostname can stand for any topology layer (CPU socket,
+//! host cohort) — here it is the literal hostname, as in the paper.
+
+use std::collections::BTreeMap;
+
+use super::{
+    Assignment, ChunkTable, ReaderLayout, ReaderRank, Strategy,
+};
+
+/// See module docs.
+pub struct ByHostname {
+    secondary: Box<dyn Strategy>,
+    fallback: Box<dyn Strategy>,
+}
+
+impl ByHostname {
+    pub fn new(secondary: Box<dyn Strategy>, fallback: Box<dyn Strategy>)
+        -> Self
+    {
+        ByHostname { secondary, fallback }
+    }
+
+    /// Paper configuration (1): Binpacking within the node, Binpacking
+    /// as fallback.
+    pub fn paper_default() -> Self {
+        ByHostname::new(
+            Box::new(super::Binpacking),
+            Box::new(super::Binpacking),
+        )
+    }
+}
+
+impl Strategy for ByHostname {
+    fn name(&self) -> &'static str {
+        "hostname"
+    }
+
+    fn distribute(&self, table: &ChunkTable, readers: &ReaderLayout)
+        -> Assignment
+    {
+        let mut out = Assignment::default();
+        if readers.is_empty() {
+            return out;
+        }
+
+        // Readers per host.
+        let mut readers_by_host: BTreeMap<&str, Vec<ReaderRank>> =
+            BTreeMap::new();
+        for r in &readers.ranks {
+            readers_by_host
+                .entry(r.hostname.as_str())
+                .or_default()
+                .push(r.clone());
+        }
+
+        // Phase 1: split the chunk table by writer host.
+        let mut local_tables: BTreeMap<&str, ChunkTable> = BTreeMap::new();
+        let mut leftover = ChunkTable {
+            dataset_extent: table.dataset_extent.clone(),
+            chunks: Vec::new(),
+        };
+        for info in &table.chunks {
+            if readers_by_host.contains_key(info.hostname.as_str()) {
+                local_tables
+                    .entry(info.hostname.as_str())
+                    .or_insert_with(|| ChunkTable {
+                        dataset_extent: table.dataset_extent.clone(),
+                        chunks: Vec::new(),
+                    })
+                    .chunks
+                    .push(info.clone());
+            } else {
+                leftover.chunks.push(info.clone());
+            }
+        }
+
+        // Per-host secondary distribution.
+        for (host, local_table) in &local_tables {
+            let local_readers = ReaderLayout {
+                ranks: readers_by_host[host].clone(),
+            };
+            let local = self.secondary.distribute(local_table,
+                                                  &local_readers);
+            for (reader, slices) in local.per_reader {
+                out.per_reader.entry(reader).or_default().extend(slices);
+            }
+        }
+
+        // Phase 2: fallback for hosts without readers.
+        if !leftover.chunks.is_empty() {
+            let fb = self.fallback.distribute(&leftover, readers);
+            for (reader, slices) in fb.per_reader {
+                out.per_reader.entry(reader).or_default().extend(slices);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::verify_complete;
+    use super::*;
+    use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
+
+    fn co_scheduled_table(nodes: usize, writers_per_node: usize,
+                          chunk: u64) -> ChunkTable {
+        // Writers on node0000..node000N, matching ReaderLayout::nodes.
+        let mut chunks = Vec::new();
+        let mut off = 0;
+        for node in 0..nodes {
+            for w in 0..writers_per_node {
+                chunks.push(WrittenChunkInfo::new(
+                    Chunk::new(vec![off], vec![chunk]),
+                    node * writers_per_node + w,
+                    format!("node{node:04}"),
+                ));
+                off += chunk;
+            }
+        }
+        ChunkTable { dataset_extent: vec![off], chunks }
+    }
+
+    #[test]
+    fn co_scheduled_communication_stays_local() {
+        // 3 writers + 3 readers per node (the paper's §4.2 layout).
+        let table = co_scheduled_table(4, 3, 100);
+        let readers = ReaderLayout::nodes(4, 3);
+        let a = ByHostname::paper_default().distribute(&table, &readers);
+        verify_complete(&table, &a).unwrap();
+        // Every slice must be served by a writer on the reader's host.
+        for (reader, slices) in &a.per_reader {
+            let reader_host = &readers
+                .ranks
+                .iter()
+                .find(|r| r.rank == *reader)
+                .unwrap()
+                .hostname;
+            for s in slices {
+                assert_eq!(&s.source_host, reader_host,
+                           "off-node slice for reader {reader}");
+            }
+        }
+    }
+
+    #[test]
+    fn writer_only_nodes_use_fallback() {
+        // Writers on 4 nodes, readers only on the first 2.
+        let table = co_scheduled_table(4, 2, 50);
+        let readers = ReaderLayout::nodes(2, 2);
+        let a = ByHostname::paper_default().distribute(&table, &readers);
+        verify_complete(&table, &a).unwrap();
+        // All data still assigned, some of it off-node.
+        let off_node: u64 = a
+            .per_reader
+            .iter()
+            .flat_map(|(reader, slices)| {
+                let host = readers
+                    .ranks
+                    .iter()
+                    .find(|r| r.rank == *reader)
+                    .unwrap()
+                    .hostname
+                    .clone();
+                slices
+                    .iter()
+                    .filter(move |s| s.source_host != host)
+                    .map(|s| s.chunk.num_elements())
+            })
+            .sum();
+        assert_eq!(off_node, 2 * 2 * 50); // exactly the two readerless nodes
+    }
+
+    #[test]
+    fn no_readers_anywhere_local_to_writers_falls_back_entirely() {
+        // Readers on a disjoint set of hosts.
+        let table = co_scheduled_table(2, 2, 10);
+        let readers = ReaderLayout {
+            ranks: (0..3)
+                .map(|rank| ReaderRank {
+                    rank,
+                    hostname: format!("other{rank}"),
+                })
+                .collect(),
+        };
+        let a = ByHostname::paper_default().distribute(&table, &readers);
+        verify_complete(&table, &a).unwrap();
+    }
+
+    #[test]
+    fn respects_secondary_strategy_choice() {
+        let table = co_scheduled_table(1, 4, 25);
+        let readers = ReaderLayout::nodes(1, 2);
+        let strat = ByHostname::new(
+            Box::new(super::super::RoundRobin),
+            Box::new(super::super::Hyperslabs),
+        );
+        let a = strat.distribute(&table, &readers);
+        verify_complete(&table, &a).unwrap();
+        // Round-robin within the node: 2 chunks each, unsplit.
+        assert_eq!(a.slices(0).len(), 2);
+        assert_eq!(a.slices(1).len(), 2);
+    }
+
+    #[test]
+    fn empty_table() {
+        let table = ChunkTable { dataset_extent: vec![0], chunks: vec![] };
+        let a = ByHostname::paper_default()
+            .distribute(&table, &ReaderLayout::local(2));
+        assert_eq!(a.total_slices(), 0);
+    }
+}

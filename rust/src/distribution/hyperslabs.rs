@@ -1,0 +1,159 @@
+//! Dataset-slicing distribution (§3.2, second algorithm).
+//!
+//! Pre-assigns contiguous hyperslabs of the dataset — cut along the
+//! slowest dimension — to reader ranks, then intersects the written
+//! chunks with each rank's slab. Optimizes *balancing* (slabs are equal
+//! to within one row); *locality* falls out when the producer's rank
+//! order correlates with the problem domain (true for PIConGPU without
+//! load balancing, §4.3), and *alignment* is partially kept because only
+//! `n_readers - 1` cuts are introduced.
+
+use super::{Assignment, ChunkSlice, ChunkTable, ReaderLayout, Strategy};
+use crate::openpmd::chunk::Chunk;
+
+/// See module docs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Hyperslabs;
+
+impl Hyperslabs {
+    /// The slab (offset, extent) along dim 0 for reader index `i` of `n`,
+    /// over a dataset of `rows` rows: balanced to within one row.
+    pub fn slab(rows: u64, n: u64, i: u64) -> (u64, u64) {
+        let base = rows / n;
+        let rem = rows % n;
+        // First `rem` readers get one extra row.
+        let start = i * base + i.min(rem);
+        let len = base + u64::from(i < rem);
+        (start, len)
+    }
+}
+
+impl Strategy for Hyperslabs {
+    fn name(&self) -> &'static str {
+        "hyperslabs"
+    }
+
+    fn distribute(&self, table: &ChunkTable, readers: &ReaderLayout)
+        -> Assignment
+    {
+        let mut out = Assignment::default();
+        let n = readers.len() as u64;
+        if n == 0 || table.dataset_extent.is_empty() {
+            return out;
+        }
+        let rows = table.dataset_extent[0];
+        for (i, reader) in readers.ranks.iter().enumerate() {
+            let (start, len) = Self::slab(rows, n, i as u64);
+            if len == 0 {
+                continue;
+            }
+            let mut slab_off = vec![0u64; table.dataset_extent.len()];
+            slab_off[0] = start;
+            let mut slab_ext = table.dataset_extent.clone();
+            slab_ext[0] = len;
+            let slab = Chunk::new(slab_off, slab_ext);
+            for info in &table.chunks {
+                if let Some(inter) = info.chunk.intersect(&slab) {
+                    out.per_reader
+                        .entry(reader.rank)
+                        .or_default()
+                        .push(ChunkSlice::with_chunk(info, inter));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::table_1d;
+    use super::super::verify_complete;
+    use super::*;
+
+    #[test]
+    fn slabs_partition_rows() {
+        for rows in [0u64, 1, 7, 100, 101, 4096] {
+            for n in [1u64, 2, 3, 7, 64] {
+                let mut next = 0;
+                let mut total = 0;
+                for i in 0..n {
+                    let (start, len) = Hyperslabs::slab(rows, n, i);
+                    assert_eq!(start, next, "rows={rows} n={n} i={i}");
+                    next = start + len;
+                    total += len;
+                }
+                assert_eq!(total, rows);
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_to_one_row() {
+        let (_, a) = (0, Hyperslabs::slab(103, 4, 0).1);
+        let (_, b) = (0, Hyperslabs::slab(103, 4, 3).1);
+        assert!(a - b <= 1);
+    }
+
+    #[test]
+    fn complete_and_balanced_on_uniform_chunks() {
+        let table = table_1d(&[
+            (100, 0, "a"), (100, 1, "a"), (100, 2, "b"), (100, 3, "b"),
+        ]);
+        let readers = ReaderLayout::local(4);
+        let a = Hyperslabs.distribute(&table, &readers);
+        verify_complete(&table, &a).unwrap();
+        for r in 0..4 {
+            assert_eq!(a.elements_for(r), 100);
+        }
+        // Aligned case: cuts coincide with chunk boundaries -> 1 slice
+        // per reader.
+        assert_eq!(a.total_slices(), 4);
+    }
+
+    #[test]
+    fn misaligned_cuts_split_chunks() {
+        let table = table_1d(&[(10, 0, "a"), (10, 1, "a")]);
+        let a = Hyperslabs.distribute(&table, &ReaderLayout::local(3));
+        verify_complete(&table, &a).unwrap();
+        // 20 rows over 3 readers: 7, 7, 6.
+        assert_eq!(a.elements_for(0), 7);
+        assert_eq!(a.elements_for(1), 7);
+        assert_eq!(a.elements_for(2), 6);
+        // Reader 1's slab [7, 14) spans the chunk boundary at 10.
+        assert_eq!(a.slices(1).len(), 2);
+    }
+
+    #[test]
+    fn two_dim_slices_along_first_dim() {
+        use crate::openpmd::chunk::WrittenChunkInfo;
+        let table = ChunkTable {
+            dataset_extent: vec![8, 16],
+            chunks: vec![
+                WrittenChunkInfo::new(
+                    Chunk::new(vec![0, 0], vec![4, 16]), 0, "a"),
+                WrittenChunkInfo::new(
+                    Chunk::new(vec![4, 0], vec![4, 16]), 1, "a"),
+            ],
+        };
+        let a = Hyperslabs.distribute(&table, &ReaderLayout::local(2));
+        verify_complete(&table, &a).unwrap();
+        assert_eq!(a.elements_for(0), 64);
+        assert_eq!(a.elements_for(1), 64);
+        // Full rows: the second dimension is never cut.
+        for slices in a.per_reader.values() {
+            for s in slices {
+                assert_eq!(s.chunk.extent[1], 16);
+            }
+        }
+    }
+
+    #[test]
+    fn more_readers_than_rows() {
+        let table = table_1d(&[(3, 0, "a")]);
+        let a = Hyperslabs.distribute(&table, &ReaderLayout::local(5));
+        verify_complete(&table, &a).unwrap();
+        let nonempty = (0..5).filter(|r| a.elements_for(*r) > 0).count();
+        assert_eq!(nonempty, 3);
+    }
+}

@@ -1,0 +1,178 @@
+//! Assignment quality metrics: quantifying §3.1's properties for any
+//! assignment, used by the ablation bench (`micro_distribution`) and the
+//! DES cost model.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{Assignment, ChunkTable, ReaderLayout};
+
+/// Quality report for one assignment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Quality {
+    /// max over readers of (assigned / ideal); 1.0 = perfectly balanced.
+    /// The binpacking guarantee bounds this by 2.0.
+    pub balance_factor: f64,
+    /// Fraction of assigned elements whose writer is on the reader's host
+    /// (1.0 = all communication node-local).
+    pub locality_fraction: f64,
+    /// Written chunks per assigned slice (≤ 1.0; 1.0 = no chunk was
+    /// split). The paper's *alignment*.
+    pub alignment: f64,
+    /// Mean number of distinct writer partners per (non-idle) reader —
+    /// the "number of communication partners" §4.3 identifies as the
+    /// driver of strategy (2)'s poor performance.
+    pub mean_partners: f64,
+    /// Max writer partners over readers.
+    pub max_partners: usize,
+}
+
+/// Compute the [`Quality`] of `assignment` for `table` and `readers`.
+pub fn quality(
+    table: &ChunkTable,
+    readers: &ReaderLayout,
+    assignment: &Assignment,
+) -> Quality {
+    let n = readers.len().max(1) as f64;
+    let total: u64 = table.total_elements();
+    let ideal = (total as f64 / n).max(1.0);
+
+    let host_of: BTreeMap<usize, &str> = readers
+        .ranks
+        .iter()
+        .map(|r| (r.rank, r.hostname.as_str()))
+        .collect();
+
+    let mut max_load = 0u64;
+    let mut local_elems = 0u64;
+    let mut partner_counts = Vec::new();
+    for (reader, slices) in &assignment.per_reader {
+        let load: u64 = slices.iter().map(|s| s.chunk.num_elements()).sum();
+        max_load = max_load.max(load);
+        let host = host_of.get(reader).copied().unwrap_or("");
+        local_elems += slices
+            .iter()
+            .filter(|s| s.source_host == host)
+            .map(|s| s.chunk.num_elements())
+            .sum::<u64>();
+        let partners: BTreeSet<usize> =
+            slices.iter().map(|s| s.source_rank).collect();
+        if !slices.is_empty() {
+            partner_counts.push(partners.len());
+        }
+    }
+
+    let slices = assignment.total_slices();
+    Quality {
+        balance_factor: if total == 0 {
+            1.0
+        } else {
+            max_load as f64 / ideal
+        },
+        locality_fraction: if total == 0 {
+            1.0
+        } else {
+            local_elems as f64 / total as f64
+        },
+        alignment: if slices == 0 {
+            1.0
+        } else {
+            table.chunks.len() as f64 / slices as f64
+        },
+        mean_partners: if partner_counts.is_empty() {
+            0.0
+        } else {
+            partner_counts.iter().sum::<usize>() as f64
+                / partner_counts.len() as f64
+        },
+        max_partners: partner_counts.into_iter().max().unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::table_1d;
+    use super::super::{
+        Binpacking, ByHostname, Hyperslabs, ReaderLayout, RoundRobin,
+        Strategy,
+    };
+    use super::*;
+    use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
+
+    fn node_table(nodes: usize, per_node: usize, size: u64) -> ChunkTable {
+        let mut chunks = Vec::new();
+        let mut off = 0;
+        for node in 0..nodes {
+            for w in 0..per_node {
+                chunks.push(WrittenChunkInfo::new(
+                    Chunk::new(vec![off], vec![size]),
+                    node * per_node + w,
+                    format!("node{node:04}"),
+                ));
+                off += size;
+            }
+        }
+        ChunkTable { dataset_extent: vec![off], chunks }
+    }
+
+    #[test]
+    fn perfect_case_metrics() {
+        let table = node_table(2, 2, 100);
+        let readers = ReaderLayout::nodes(2, 2);
+        let a = ByHostname::paper_default().distribute(&table, &readers);
+        let q = quality(&table, &readers, &a);
+        assert!((q.balance_factor - 1.0).abs() < 1e-9, "{q:?}");
+        assert_eq!(q.locality_fraction, 1.0);
+        assert_eq!(q.alignment, 1.0);
+        assert_eq!(q.max_partners, 1);
+    }
+
+    #[test]
+    fn round_robin_alignment_one_but_poor_balance() {
+        let table = table_1d(&[(1000, 0, "a"), (10, 1, "a"), (10, 2, "a")]);
+        let readers = ReaderLayout::local(3);
+        let a = RoundRobin.distribute(&table, &readers);
+        let q = quality(&table, &readers, &a);
+        assert_eq!(q.alignment, 1.0);
+        assert!(q.balance_factor > 2.0, "{q:?}");
+    }
+
+    #[test]
+    fn hyperslabs_balance_near_one() {
+        let table = node_table(4, 2, 128);
+        let readers = ReaderLayout::nodes(4, 2);
+        let a = Hyperslabs.distribute(&table, &readers);
+        let q = quality(&table, &readers, &a);
+        assert!(q.balance_factor <= 1.01, "{q:?}");
+    }
+
+    #[test]
+    fn binpacking_ignores_topology_many_partners() {
+        // With chunk sizes misaligned to the ideal, binpacking crosses
+        // node boundaries; by-hostname does not.
+        let mut table = node_table(8, 3, 97);
+        // Perturb sizes so bins straddle nodes.
+        for (i, c) in table.chunks.iter_mut().enumerate() {
+            c.chunk.extent[0] = 60 + ((i * 37) % 80) as u64;
+        }
+        let readers = ReaderLayout::nodes(8, 3);
+        let bp = quality(&table, &readers,
+                         &Binpacking.distribute(&table, &readers));
+        let bh = quality(
+            &table,
+            &readers,
+            &ByHostname::paper_default().distribute(&table, &readers),
+        );
+        assert_eq!(bh.locality_fraction, 1.0);
+        assert!(bp.locality_fraction < 1.0, "{bp:?}");
+    }
+
+    #[test]
+    fn empty_assignment_quality_is_neutral() {
+        let table = ChunkTable { dataset_extent: vec![0], chunks: vec![] };
+        let readers = ReaderLayout::local(2);
+        let q = quality(&table, &readers, &Default::default());
+        assert_eq!(q.balance_factor, 1.0);
+        assert_eq!(q.locality_fraction, 1.0);
+        assert_eq!(q.max_partners, 0);
+    }
+}

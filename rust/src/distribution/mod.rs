@@ -1,0 +1,298 @@
+//! Chunk-distribution strategies (S7) — the paper's §3 contribution.
+//!
+//! A writing application produces n-dimensional chunks that differ in
+//! problem-domain location (offset/extent) and compute-domain location
+//! (rank, hostname). The reading application's ranks must decide who loads
+//! what. §3.1 names the properties a good distribution has:
+//!
+//! * **locality** — few, topologically-close communication partners;
+//! * **balancing** — even data volume per reader;
+//! * **alignment** — loaded chunks coincide with written chunks;
+//! * **read constraints** — domain-imposed (out of scope here, §3.2).
+//!
+//! Each strategy in this module guarantees a *complete* distribution
+//! (every written byte is assigned to exactly one reader) and trades the
+//! properties differently; [`metrics`] quantifies the trade for any
+//! assignment, and the property tests in `tests/` verify the guarantees.
+
+pub mod binpacking;
+pub mod by_hostname;
+pub mod hyperslabs;
+pub mod metrics;
+pub mod round_robin;
+
+pub use binpacking::Binpacking;
+pub use by_hostname::ByHostname;
+pub use hyperslabs::Hyperslabs;
+pub use round_robin::RoundRobin;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
+
+/// A reader rank with its placement in the system topology.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReaderRank {
+    pub rank: usize,
+    pub hostname: String,
+}
+
+/// The reading application's parallel layout.
+#[derive(Clone, Debug, Default)]
+pub struct ReaderLayout {
+    pub ranks: Vec<ReaderRank>,
+}
+
+impl ReaderLayout {
+    /// `n` readers all on one host (the degenerate single-node case).
+    pub fn local(n: usize) -> Self {
+        ReaderLayout {
+            ranks: (0..n)
+                .map(|rank| ReaderRank { rank, hostname: "localhost".into() })
+                .collect(),
+        }
+    }
+
+    /// `per_node` readers on each of `nodes` hosts named `node<i>`,
+    /// ranks numbered node-major (like `jsrun` round-robin placement).
+    pub fn nodes(nodes: usize, per_node: usize) -> Self {
+        let mut ranks = Vec::with_capacity(nodes * per_node);
+        for node in 0..nodes {
+            for slot in 0..per_node {
+                ranks.push(ReaderRank {
+                    rank: node * per_node + slot,
+                    hostname: format!("node{node:04}"),
+                });
+            }
+        }
+        ReaderLayout { ranks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranks.is_empty()
+    }
+}
+
+/// The distribution problem input: one variable's written chunks + the
+/// dataset extent they tile.
+#[derive(Clone, Debug)]
+pub struct ChunkTable {
+    pub dataset_extent: Vec<u64>,
+    pub chunks: Vec<WrittenChunkInfo>,
+}
+
+impl ChunkTable {
+    pub fn total_elements(&self) -> u64 {
+        self.chunks.iter().map(|c| c.chunk.num_elements()).sum()
+    }
+}
+
+/// One piece of work for a reader: load `chunk` (possibly a sub-chunk of
+/// a written chunk), remembering where the bytes live.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkSlice {
+    pub chunk: Chunk,
+    /// Writer rank holding the data.
+    pub source_rank: usize,
+    /// Writer hostname (for locality accounting).
+    pub source_host: String,
+}
+
+impl ChunkSlice {
+    pub fn of(info: &WrittenChunkInfo) -> Self {
+        ChunkSlice {
+            chunk: info.chunk.clone(),
+            source_rank: info.source_rank,
+            source_host: info.hostname.clone(),
+        }
+    }
+
+    pub fn with_chunk(info: &WrittenChunkInfo, chunk: Chunk) -> Self {
+        ChunkSlice {
+            chunk,
+            source_rank: info.source_rank,
+            source_host: info.hostname.clone(),
+        }
+    }
+}
+
+/// The distribution result: reader rank -> slices to load.
+#[derive(Clone, Debug, Default)]
+pub struct Assignment {
+    pub per_reader: BTreeMap<usize, Vec<ChunkSlice>>,
+}
+
+impl Assignment {
+    pub fn slices(&self, reader: usize) -> &[ChunkSlice] {
+        self.per_reader
+            .get(&reader)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    pub fn elements_for(&self, reader: usize) -> u64 {
+        self.slices(reader)
+            .iter()
+            .map(|s| s.chunk.num_elements())
+            .sum()
+    }
+
+    pub fn total_elements(&self) -> u64 {
+        self.per_reader.keys().map(|r| self.elements_for(*r)).sum()
+    }
+
+    pub fn total_slices(&self) -> usize {
+        self.per_reader.values().map(|v| v.len()).sum()
+    }
+
+    fn push(&mut self, reader: usize, slice: ChunkSlice) {
+        if slice.chunk.num_elements() > 0 {
+            self.per_reader.entry(reader).or_default().push(slice);
+        }
+    }
+}
+
+/// A chunk-distribution strategy.
+pub trait Strategy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Compute a complete assignment of `table` over `readers`.
+    fn distribute(&self, table: &ChunkTable, readers: &ReaderLayout)
+        -> Assignment;
+}
+
+/// Resolve a strategy by config name. `"hostname"` takes optional
+/// secondary/fallback suffixes: `"hostname:binpacking:hyperslabs"`.
+pub fn by_name(name: &str) -> Result<Box<dyn Strategy>> {
+    let mut parts = name.split(':');
+    let head = parts.next().unwrap_or("");
+    Ok(match head {
+        "roundrobin" | "round-robin" => Box::new(RoundRobin),
+        "hyperslabs" | "slicing" => Box::new(Hyperslabs),
+        "binpacking" => Box::new(Binpacking),
+        "hostname" | "by-hostname" => {
+            let secondary = parts.next().unwrap_or("binpacking");
+            let fallback = parts.next().unwrap_or("binpacking");
+            Box::new(ByHostname::new(by_name(secondary)?, by_name(fallback)?))
+        }
+        other => bail!("unknown distribution strategy {other:?}"),
+    })
+}
+
+/// Verify that `assignment` is a complete, non-overlapping distribution
+/// of `table` (every written element assigned exactly once). Returns a
+/// description of the first violation.
+pub fn verify_complete(table: &ChunkTable, assignment: &Assignment)
+    -> Result<(), String>
+{
+    let want: u64 = table.total_elements();
+    let got: u64 = assignment.total_elements();
+    if want != got {
+        return Err(format!(
+            "assigned {got} elements, table has {want}"
+        ));
+    }
+    // Each written chunk must be exactly tiled by the slices that
+    // intersect it.
+    for info in &table.chunks {
+        let mut covered = 0u64;
+        let mut pieces: Vec<&Chunk> = Vec::new();
+        for slices in assignment.per_reader.values() {
+            for s in slices {
+                if s.source_rank != info.source_rank {
+                    continue;
+                }
+                if let Some(inter) = s.chunk.intersect(&info.chunk) {
+                    // A slice must not extend outside the chunk it came
+                    // from if it names this source rank... it may though
+                    // (two chunks from one rank). Count the overlap only.
+                    covered += inter.num_elements();
+                    pieces.push(&s.chunk);
+                }
+            }
+        }
+        if covered < info.chunk.num_elements() {
+            return Err(format!(
+                "chunk {:?}+{:?} (rank {}) covered {covered}/{} elements",
+                info.chunk.offset,
+                info.chunk.extent,
+                info.source_rank,
+                info.chunk.num_elements()
+            ));
+        }
+        if covered > info.chunk.num_elements() {
+            return Err(format!(
+                "chunk {:?}+{:?} (rank {}) over-covered: {covered}/{}",
+                info.chunk.offset,
+                info.chunk.extent,
+                info.source_rank,
+                info.chunk.num_elements()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn table_1d(sizes: &[(u64, usize, &str)]) -> ChunkTable {
+        // sizes: (extent, source_rank, hostname), laid out contiguously.
+        let mut chunks = Vec::new();
+        let mut off = 0u64;
+        for (n, rank, host) in sizes {
+            chunks.push(WrittenChunkInfo::new(
+                Chunk::new(vec![off], vec![*n]),
+                *rank,
+                *host,
+            ));
+            off += n;
+        }
+        ChunkTable { dataset_extent: vec![off], chunks }
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        for n in ["roundrobin", "hyperslabs", "binpacking", "hostname",
+                  "hostname:roundrobin:hyperslabs"] {
+            assert!(by_name(n).is_ok(), "{n}");
+        }
+        assert!(by_name("quantum").is_err());
+    }
+
+    #[test]
+    fn verify_catches_gaps_and_overlaps() {
+        let table = table_1d(&[(10, 0, "a")]);
+        // Gap: only 5 of 10 assigned.
+        let mut a = Assignment::default();
+        a.push(0, ChunkSlice::with_chunk(&table.chunks[0],
+                                         Chunk::new(vec![0], vec![5])));
+        assert!(verify_complete(&table, &a).is_err());
+        // Overlap: 15 of 10.
+        let mut b = Assignment::default();
+        b.push(0, ChunkSlice::of(&table.chunks[0]));
+        b.push(1, ChunkSlice::with_chunk(&table.chunks[0],
+                                         Chunk::new(vec![0], vec![5])));
+        assert!(verify_complete(&table, &b).is_err());
+        // Exact.
+        let mut c = Assignment::default();
+        c.push(0, ChunkSlice::of(&table.chunks[0]));
+        assert!(verify_complete(&table, &c).is_ok());
+    }
+
+    #[test]
+    fn layouts() {
+        let l = ReaderLayout::nodes(2, 3);
+        assert_eq!(l.len(), 6);
+        assert_eq!(l.ranks[4].hostname, "node0001");
+        assert_eq!(l.ranks[4].rank, 4);
+        assert_eq!(ReaderLayout::local(2).ranks[1].hostname, "localhost");
+    }
+}

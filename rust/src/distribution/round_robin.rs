@@ -1,0 +1,96 @@
+//! Round-Robin distribution (§3.2, first algorithm).
+//!
+//! Deals whole written chunks to readers cyclically. Optimizes only the
+//! *alignment* property (chunks are never split), fully forgoing
+//! *locality* and *balancing* — per the paper, "interesting only in
+//! situations where its effects can be fully controlled by other means",
+//! e.g. when the producer emits uniform chunks and reader count divides
+//! writer count.
+
+use super::{Assignment, ChunkSlice, ChunkTable, ReaderLayout, Strategy};
+
+/// See module docs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundRobin;
+
+impl Strategy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "roundrobin"
+    }
+
+    fn distribute(&self, table: &ChunkTable, readers: &ReaderLayout)
+        -> Assignment
+    {
+        let mut out = Assignment::default();
+        if readers.is_empty() {
+            return out;
+        }
+        for (i, info) in table.chunks.iter().enumerate() {
+            let reader = readers.ranks[i % readers.len()].rank;
+            out.per_reader
+                .entry(reader)
+                .or_default()
+                .push(ChunkSlice::of(info));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::table_1d;
+    use super::super::verify_complete;
+    use super::*;
+
+    #[test]
+    fn deals_cyclically_and_completely() {
+        let table = table_1d(&[
+            (10, 0, "a"), (10, 1, "a"), (10, 2, "b"), (10, 3, "b"),
+            (10, 4, "c"),
+        ]);
+        let readers = ReaderLayout::local(2);
+        let a = RoundRobin.distribute(&table, &readers);
+        verify_complete(&table, &a).unwrap();
+        assert_eq!(a.slices(0).len(), 3); // chunks 0, 2, 4
+        assert_eq!(a.slices(1).len(), 2); // chunks 1, 3
+    }
+
+    #[test]
+    fn never_splits_chunks_perfect_alignment() {
+        let table = table_1d(&[(7, 0, "a"), (13, 1, "a"), (29, 2, "b")]);
+        let a = RoundRobin.distribute(&table, &ReaderLayout::local(2));
+        for slices in a.per_reader.values() {
+            for s in slices {
+                assert!(table
+                    .chunks
+                    .iter()
+                    .any(|c| c.chunk == s.chunk && c.source_rank
+                         == s.source_rank));
+            }
+        }
+    }
+
+    #[test]
+    fn imbalance_with_uneven_chunks() {
+        // One huge chunk lands on reader 0: balancing is forgone.
+        let table = table_1d(&[(1000, 0, "a"), (1, 1, "a")]);
+        let a = RoundRobin.distribute(&table, &ReaderLayout::local(2));
+        assert_eq!(a.elements_for(0), 1000);
+        assert_eq!(a.elements_for(1), 1);
+    }
+
+    #[test]
+    fn empty_readers_yield_empty_assignment() {
+        let table = table_1d(&[(4, 0, "a")]);
+        let a = RoundRobin.distribute(&table, &ReaderLayout::default());
+        assert_eq!(a.total_slices(), 0);
+    }
+
+    #[test]
+    fn more_readers_than_chunks() {
+        let table = table_1d(&[(4, 0, "a"), (4, 1, "a")]);
+        let a = RoundRobin.distribute(&table, &ReaderLayout::local(5));
+        verify_complete(&table, &a).unwrap();
+        assert!(a.slices(2).is_empty());
+    }
+}

@@ -1,0 +1,54 @@
+//! # openpmd-stream
+//!
+//! A reproduction of *"Transitioning from file-based HPC workflows to
+//! streaming data pipelines with openPMD and ADIOS2"* (Poeschel et al.,
+//! CS.DC 2021) as a production-shaped Rust + JAX + Pallas three-layer stack.
+//!
+//! The crate provides, bottom-up:
+//!
+//! * [`openpmd`] — the openPMD data model: self-describing particle–mesh
+//!   series (iterations, meshes, particle species, records, attributes,
+//!   unit metadata) independent of any concrete IO backend.
+//! * [`adios`] — the ADIOS2-like adaptable IO layer: one step-oriented
+//!   [`adios::Engine`] API with interchangeable backends — the BP
+//!   binary-pack file engine with node-level aggregation, the SST
+//!   streaming/staging engine (publish/subscribe loose coupling) over
+//!   pluggable data transports (in-process "RDMA"-analog, TCP sockets),
+//!   and a serial JSON backend for prototyping.
+//! * [`distribution`] — the paper's §3 contribution: chunk-distribution
+//!   strategies (round-robin, hyperslab slicing, binpacking, two-phase
+//!   by-hostname) plus quality metrics (locality / balance / alignment).
+//! * [`cluster`] — the simulated Summit substrate: node topology, fabric
+//!   and parallel-filesystem models, and a max–min fair-share
+//!   discrete-event simulator that regenerates the paper's 512-node
+//!   figures on a laptop.
+//! * [`pipeline`] — the L3 orchestrator: pipeline stages, the
+//!   `openpmd-pipe` adaptor, backpressure/queue policies and metrics.
+//! * [`producer`] / [`analysis`] — the two pipeline endpoints: a
+//!   PIConGPU-like Kelvin–Helmholtz particle producer and a GAPD-like
+//!   SAXS diffraction consumer, both executing AOT-lowered JAX/Pallas
+//!   artifacts through [`runtime`] (PJRT); python never runs at runtime.
+//! * [`util`], [`config`], [`testing`], [`bench`] — support substrates
+//!   built from scratch (no network access in this environment): CLI
+//!   parsing, statistics, deterministic RNG, a TOML-subset config
+//!   format, a mini property-testing framework, and a bench harness.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod adios;
+pub mod analysis;
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod distribution;
+pub mod openpmd;
+pub mod pipeline;
+pub mod producer;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+pub use adios::{Engine, EngineKind, Mode, StepStatus};
+pub use distribution::{Assignment, ChunkTable, Strategy};
+pub use openpmd::Series;

@@ -1,0 +1,341 @@
+//! `openpmd-stream` — the launcher.
+//!
+//! Subcommands:
+//!
+//! * `pipe`      — run the `openpmd-pipe` adaptor (the paper's §4.1
+//!                 tool): any engine in, any engine out.
+//! * `produce`   — run the Kelvin–Helmholtz producer, writing openPMD
+//!                 steps to a BP file, JSON dir or SST stream.
+//! * `analyze`   — run the SAXS consumer over a BP file.
+//! * `validate`  — check a BP file for openPMD conformance.
+//! * `info`      — dump variables/attributes/chunks of a BP file.
+//! * `systems`   — print the Table 1 system comparison.
+//!
+//! The end-to-end streaming setups live in `examples/` (multi-threaded
+//! in one process so they are runnable without a job scheduler); this
+//! binary provides the single-role building blocks that `examples/`
+//! compose, usable across real processes via the TCP transport.
+
+use anyhow::{bail, Context, Result};
+
+use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
+use openpmd_stream::adios::engine::{cast, Engine, StepStatus};
+use openpmd_stream::adios::json::JsonWriter;
+use openpmd_stream::adios::sst::{SstReader, SstReaderOptions, SstWriter,
+                                 SstWriterOptions};
+use openpmd_stream::analysis::SaxsAnalyzer;
+use openpmd_stream::bench::Table;
+use openpmd_stream::cluster::systems;
+use openpmd_stream::openpmd::chunk::Chunk;
+use openpmd_stream::openpmd::series::Series;
+use openpmd_stream::openpmd::validate;
+use openpmd_stream::pipeline::pipe::{run_pipe, PipeOptions};
+use openpmd_stream::producer::KhProducer;
+use openpmd_stream::runtime::Runtime;
+use openpmd_stream::util::bytes::fmt_bytes;
+use openpmd_stream::util::cli::{render_help, Args, OptSpec};
+
+fn main() {
+    openpmd_stream::util::logging::init_from_env();
+    let args = match Args::from_env(true) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("pipe") => cmd_pipe(&args),
+        Some("produce") => cmd_produce(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("info") => cmd_info(&args),
+        Some("systems") => cmd_systems(),
+        Some("help") | None => {
+            print!("{}", help());
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n\n{}", help());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn help() -> String {
+    render_help(
+        "openpmd-stream",
+        "streaming data pipelines with openPMD + ADIOS2 (paper reproduction)",
+        "openpmd-stream <pipe|produce|analyze|validate|info|systems> [OPTIONS]",
+        &[
+            OptSpec { name: "in", value_name: Some("PATH|sst://ADDR"),
+                      default: None, help: "input (BP file or SST address)" },
+            OptSpec { name: "out", value_name: Some("PATH"),
+                      default: None, help: "output (BP file, JSON dir, or SST listen addr)" },
+            OptSpec { name: "engine", value_name: Some("bp|json|sst[:tcp]"),
+                      default: Some("bp"), help: "output engine kind" },
+            OptSpec { name: "steps", value_name: Some("N"),
+                      default: Some("10"), help: "steps to produce/process" },
+            OptSpec { name: "period", value_name: Some("N"),
+                      default: Some("10"), help: "sim steps between outputs" },
+            OptSpec { name: "particles", value_name: Some("N"),
+                      default: Some("100000"), help: "particles (produce)" },
+            OptSpec { name: "no-runtime", value_name: None, default: None,
+                      help: "skip PJRT artifacts (pure-rust fallback)" },
+            OptSpec { name: "q-max", value_name: Some("Q"),
+                      default: Some("2.0"), help: "max |q| (analyze)" },
+            OptSpec { name: "csv", value_name: Some("PATH"),
+                      default: Some("scatter.csv"),
+                      help: "scatter-plot output (analyze)" },
+        ],
+    )
+}
+
+fn cmd_pipe(args: &Args) -> Result<()> {
+    args.reject_unknown(&["in", "out", "engine", "steps"])?;
+    let input = args.get("in").context("--in required")?;
+    let output = args.get("out").context("--out required")?;
+    let mut reader: Box<dyn Engine> = if let Some(addr) =
+        input.strip_prefix("sst+")
+    {
+        Box::new(SstReader::open(SstReaderOptions {
+            writers: vec![addr.to_string()],
+            transport: if addr.starts_with("tcp://") {
+                "tcp".into()
+            } else {
+                "inproc".into()
+            },
+            ..Default::default()
+        })?)
+    } else {
+        Box::new(BpReader::open(input)?)
+    };
+    let engine = args.get_or("engine", "bp");
+    let mut writer: Box<dyn Engine> = match engine {
+        "bp" => Box::new(BpWriter::create(output, WriterCtx::default())?),
+        "json" => Box::new(JsonWriter::create(output, 0, "localhost")?),
+        other => bail!("pipe output engine must be bp|json, got {other}"),
+    };
+    let mut opts = PipeOptions::solo();
+    opts.max_steps = args.get_parse::<u64>("steps")?;
+    let report = run_pipe(reader.as_mut(), writer.as_mut(), opts)?;
+    println!(
+        "piped {} steps, {} in, {} out, {} chunks",
+        report.steps,
+        fmt_bytes(report.bytes_in),
+        fmt_bytes(report.bytes_out),
+        report.chunks
+    );
+    Ok(())
+}
+
+fn cmd_produce(args: &Args) -> Result<()> {
+    args.reject_unknown(&["out", "engine", "steps", "particles",
+                          "no-runtime", "period"])?;
+    let out = args.get("out").context("--out required")?;
+    let steps: u64 = args.get_parse_or("steps", 10)?;
+    let period: u64 = args.get_parse_or("period", 10)?;
+    let n: usize = args.get_parse_or("particles", 100_000)?;
+    let runtime = if args.flag("no-runtime") {
+        None
+    } else {
+        Some(Runtime::load_default().context(
+            "loading artifacts (use --no-runtime for the rust fallback)",
+        )?)
+    };
+    let mut producer = KhProducer::new(
+        0, "localhost", n, 0, n as u64, 42, runtime.as_ref())?;
+    let engine_kind = args.get_or("engine", "bp");
+    let mut engine: Box<dyn Engine> = match engine_kind {
+        "bp" => Box::new(BpWriter::create(out, WriterCtx::default())?),
+        "json" => Box::new(JsonWriter::create(out, 0, "localhost")?),
+        "sst" | "sst:tcp" => Box::new(SstWriter::open(SstWriterOptions {
+            listen: out.to_string(),
+            transport: if engine_kind.ends_with("tcp") {
+                "tcp".into()
+            } else {
+                "inproc".into()
+            },
+            ..Default::default()
+        })?),
+        other => bail!("unknown engine {other}"),
+    };
+    let mut series = Series::new("openpmd-stream", "openpmd-stream produce");
+    let t0 = std::time::Instant::now();
+    for out_step in 0..steps {
+        for _ in 0..period {
+            producer.step()?;
+        }
+        let status =
+            producer.write_iteration(&mut series, engine.as_mut(), out_step)?;
+        println!(
+            "iteration {out_step}: sim step {} t={:.2}s status {status:?}",
+            producer.steps_taken(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    engine.close()?;
+    println!(
+        "produced {steps} iterations of {n} particles ({} each)",
+        fmt_bytes(n as u64 * 7 * 4)
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    args.reject_unknown(&["in", "q-max", "csv", "no-runtime", "steps"])?;
+    let input = args.get("in").context("--in required")?;
+    let q_max: f32 = args.get_parse_or("q-max", 2.0)?;
+    let csv = args.get_or("csv", "scatter.csv");
+    let runtime = if args.flag("no-runtime") {
+        None
+    } else {
+        Some(Runtime::load_default()?)
+    };
+    let mut reader = BpReader::open(input)?;
+    let mut analyzer = SaxsAnalyzer::new(q_max, runtime.as_ref())?;
+    let max_steps = args.get_parse::<u64>("steps")?.unwrap_or(u64::MAX);
+    let mut steps = 0;
+    while steps < max_steps {
+        match reader.begin_step()? {
+            StepStatus::Ok => {}
+            _ => break,
+        }
+        // Find the particle position/weighting variables of this step.
+        let vars = reader.available_variables();
+        let find = |suffix: &str| {
+            vars.iter().find(|v| v.name.ends_with(suffix)).cloned()
+        };
+        let (Some(px), Some(py), Some(pz), Some(w)) = (
+            find("/position/x"),
+            find("/position/y"),
+            find("/position/z"),
+            find("/weighting"),
+        ) else {
+            bail!("step lacks e/position + weighting records");
+        };
+        let n = px.shape[0];
+        let sel = Chunk::whole(vec![n]);
+        let x = cast::bytes_to_f32(&reader.get(&px.name, sel.clone())?);
+        let y = cast::bytes_to_f32(&reader.get(&py.name, sel.clone())?);
+        let z = cast::bytes_to_f32(&reader.get(&pz.name, sel.clone())?);
+        let wv = cast::bytes_to_f32(&reader.get(&w.name, sel)?);
+        let mut pos = Vec::with_capacity(x.len() * 3);
+        for i in 0..x.len() {
+            pos.extend_from_slice(&[x[i], y[i], z[i]]);
+        }
+        analyzer.consume(&pos, &wv)?;
+        reader.end_step()?;
+        steps += 1;
+    }
+    analyzer.write_csv(csv)?;
+    println!(
+        "analyzed {steps} steps, {} macroparticles -> {csv}",
+        analyzer.atoms_seen
+    );
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    args.reject_unknown(&["in"])?;
+    let input = args.get("in").context("--in required")?;
+    let mut reader = BpReader::open(input)?;
+    let mut all_ok = true;
+    let mut steps = 0;
+    loop {
+        let (status, parsed) = Series::read_iteration(&mut reader)?;
+        if status != StepStatus::Ok {
+            break;
+        }
+        let (index, iteration) = parsed.unwrap();
+        let findings = validate::validate_iteration(index, &iteration);
+        for f in &findings {
+            println!("{:?} {}: {}", f.severity, f.path, f.message);
+        }
+        all_ok &= validate::is_conformant(&findings);
+        reader.end_step()?;
+        steps += 1;
+    }
+    println!(
+        "{steps} iterations checked: {}",
+        if all_ok { "conformant" } else { "NON-CONFORMANT" }
+    );
+    if !all_ok {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.reject_unknown(&["in"])?;
+    let input = args.get("in").context("--in required")?;
+    let mut reader = BpReader::open(input)?;
+    let mut step = 0;
+    while reader.begin_step()? == StepStatus::Ok {
+        println!("step {step}:");
+        for name in reader.attribute_names() {
+            if let Some(v) = reader.attribute(&name) {
+                println!("  attr {name} = {v}");
+            }
+        }
+        for v in reader.available_variables() {
+            let chunks = reader.available_chunks(&v.name);
+            println!(
+                "  var {} {} shape {:?} ({} chunks)",
+                v.name,
+                v.dtype.name(),
+                v.shape,
+                chunks.len()
+            );
+            for c in chunks.iter().take(4) {
+                println!(
+                    "      chunk @{:?}+{:?} rank {} host {}",
+                    c.chunk.offset, c.chunk.extent, c.source_rank,
+                    c.hostname
+                );
+            }
+            if chunks.len() > 4 {
+                println!("      ... {} more", chunks.len() - 4);
+            }
+        }
+        reader.end_step()?;
+        step += 1;
+    }
+    Ok(())
+}
+
+fn cmd_systems() -> Result<()> {
+    let mut t = Table::new(
+        "Table 1: system performance, OLCF Titan to Frontier",
+        &["system", "compute [PFlop/s]", "PFS bw [TiB/s]",
+          "capacity [PiB]", "50-dump storage need [PiB]"],
+    );
+    for s in systems::table1_systems() {
+        let (blo, bhi) = s.pfs_bandwidth;
+        let (clo, chi) = s.pfs_capacity;
+        let tib = |x: f64| x / (1u64 << 40) as f64;
+        let pib = |x: f64| x / (1u64 << 50) as f64;
+        t.row(vec![
+            s.name.into(),
+            format!("{}", s.compute_pflops),
+            if blo == bhi {
+                format!("{:.1}", tib(blo))
+            } else {
+                format!("{:.0}-{:.0}", tib(blo), tib(bhi))
+            },
+            if clo == chi {
+                format!("{:.0}", pib(clo))
+            } else {
+                format!("{:.0}-{:.0}", pib(clo), pib(chi))
+            },
+            format!("{:.1}", s.storage_requirement(50) as f64
+                    / (1u64 << 50) as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

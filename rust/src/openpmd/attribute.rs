@@ -1,0 +1,250 @@
+//! Attributes: typed metadata values attached to the series, iterations,
+//! records and components. Self-describing output means the meaning of the
+//! raw arrays travels with them — this is the carrier.
+
+use std::fmt;
+
+/// A typed attribute value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Attribute {
+    Str(String),
+    F64(f64),
+    I64(i64),
+    U64(u64),
+    Bool(bool),
+    VecF64(Vec<f64>),
+    VecU64(Vec<u64>),
+    VecStr(Vec<String>),
+}
+
+impl Attribute {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Attribute::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Attribute::F64(x) => Some(*x),
+            Attribute::I64(x) => Some(*x as f64),
+            Attribute::U64(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Attribute::U64(x) => Some(*x),
+            Attribute::I64(x) if *x >= 0 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Attribute::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_vec_f64(&self) -> Option<&[f64]> {
+        match self {
+            Attribute::VecF64(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Stable type tag for the wire + file formats.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Attribute::Str(_) => 0,
+            Attribute::F64(_) => 1,
+            Attribute::I64(_) => 2,
+            Attribute::U64(_) => 3,
+            Attribute::Bool(_) => 4,
+            Attribute::VecF64(_) => 5,
+            Attribute::VecU64(_) => 6,
+            Attribute::VecStr(_) => 7,
+        }
+    }
+
+    /// Serialize into `out` (length-prefixed little-endian encoding).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.push(self.tag());
+        match self {
+            Attribute::Str(s) => {
+                out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                out.extend_from_slice(s.as_bytes());
+            }
+            Attribute::F64(x) => out.extend_from_slice(&x.to_le_bytes()),
+            Attribute::I64(x) => out.extend_from_slice(&x.to_le_bytes()),
+            Attribute::U64(x) => out.extend_from_slice(&x.to_le_bytes()),
+            Attribute::Bool(b) => out.push(*b as u8),
+            Attribute::VecF64(v) => {
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Attribute::VecU64(v) => {
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Attribute::VecStr(v) => {
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for s in v {
+                    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                    out.extend_from_slice(s.as_bytes());
+                }
+            }
+        }
+    }
+
+    /// Decode from `buf` starting at `*pos`; advances `*pos`.
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Result<Attribute, String> {
+        fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize)
+            -> Result<&'a [u8], String>
+        {
+            if *pos + n > buf.len() {
+                return Err(format!(
+                    "attribute decode overrun at {} + {n} > {}", *pos, buf.len()
+                ));
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        }
+        fn u32_at(buf: &[u8], pos: &mut usize) -> Result<u32, String> {
+            Ok(u32::from_le_bytes(take(buf, pos, 4)?.try_into().unwrap()))
+        }
+        let tag = take(buf, pos, 1)?[0];
+        Ok(match tag {
+            0 => {
+                let n = u32_at(buf, pos)? as usize;
+                let s = take(buf, pos, n)?;
+                Attribute::Str(String::from_utf8_lossy(s).into_owned())
+            }
+            1 => Attribute::F64(f64::from_le_bytes(
+                take(buf, pos, 8)?.try_into().unwrap(),
+            )),
+            2 => Attribute::I64(i64::from_le_bytes(
+                take(buf, pos, 8)?.try_into().unwrap(),
+            )),
+            3 => Attribute::U64(u64::from_le_bytes(
+                take(buf, pos, 8)?.try_into().unwrap(),
+            )),
+            4 => Attribute::Bool(take(buf, pos, 1)?[0] != 0),
+            5 => {
+                let n = u32_at(buf, pos)? as usize;
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(f64::from_le_bytes(
+                        take(buf, pos, 8)?.try_into().unwrap(),
+                    ));
+                }
+                Attribute::VecF64(v)
+            }
+            6 => {
+                let n = u32_at(buf, pos)? as usize;
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(u64::from_le_bytes(
+                        take(buf, pos, 8)?.try_into().unwrap(),
+                    ));
+                }
+                Attribute::VecU64(v)
+            }
+            7 => {
+                let n = u32_at(buf, pos)? as usize;
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let m = u32_at(buf, pos)? as usize;
+                    let s = take(buf, pos, m)?;
+                    v.push(String::from_utf8_lossy(s).into_owned());
+                }
+                Attribute::VecStr(v)
+            }
+            other => return Err(format!("unknown attribute tag {other}")),
+        })
+    }
+}
+
+impl fmt::Display for Attribute {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Attribute::Str(s) => write!(f, "{s:?}"),
+            Attribute::F64(x) => write!(f, "{x}"),
+            Attribute::I64(x) => write!(f, "{x}"),
+            Attribute::U64(x) => write!(f, "{x}"),
+            Attribute::Bool(b) => write!(f, "{b}"),
+            Attribute::VecF64(v) => write!(f, "{v:?}"),
+            Attribute::VecU64(v) => write!(f, "{v:?}"),
+            Attribute::VecStr(v) => write!(f, "{v:?}"),
+        }
+    }
+}
+
+impl From<&str> for Attribute {
+    fn from(s: &str) -> Self {
+        Attribute::Str(s.to_string())
+    }
+}
+
+impl From<f64> for Attribute {
+    fn from(x: f64) -> Self {
+        Attribute::F64(x)
+    }
+}
+
+impl From<u64> for Attribute {
+    fn from(x: u64) -> Self {
+        Attribute::U64(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(a: Attribute) {
+        let mut buf = Vec::new();
+        a.encode(&mut buf);
+        let mut pos = 0;
+        let b = Attribute::decode(&buf, &mut pos).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn all_variants_round_trip() {
+        round_trip(Attribute::Str("openPMD".into()));
+        round_trip(Attribute::F64(1.5e-18));
+        round_trip(Attribute::I64(-42));
+        round_trip(Attribute::U64(u64::MAX));
+        round_trip(Attribute::Bool(true));
+        round_trip(Attribute::VecF64(vec![1.0, 0.0, -1.0]));
+        round_trip(Attribute::VecU64(vec![64, 64, 64]));
+        round_trip(Attribute::VecStr(vec!["x".into(), "y".into()]));
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let mut buf = Vec::new();
+        Attribute::Str("hello".into()).encode(&mut buf);
+        buf.truncate(buf.len() - 2);
+        let mut pos = 0;
+        assert!(Attribute::decode(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn numeric_coercions() {
+        assert_eq!(Attribute::I64(5).as_f64(), Some(5.0));
+        assert_eq!(Attribute::I64(5).as_u64(), Some(5));
+        assert_eq!(Attribute::I64(-5).as_u64(), None);
+        assert_eq!(Attribute::Str("x".into()).as_f64(), None);
+    }
+}

@@ -1,0 +1,182 @@
+//! Chunks: the unit of parallel IO and of the §3 distribution problem.
+//!
+//! A writer rank contributes one or more n-dimensional sub-blocks of each
+//! dataset; ADIOS-style backends keep data organized *as written*, so the
+//! set of written chunks — with their origin rank and hostname — is exactly
+//! the input to the chunk-distribution strategies.
+
+use super::types::{Extent, Offset};
+
+/// An n-dimensional sub-block of a dataset: `offset .. offset + extent`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Chunk {
+    pub offset: Offset,
+    pub extent: Extent,
+}
+
+impl Chunk {
+    pub fn new(offset: impl Into<Offset>, extent: impl Into<Extent>) -> Self {
+        let c = Chunk { offset: offset.into(), extent: extent.into() };
+        debug_assert_eq!(c.offset.len(), c.extent.len());
+        c
+    }
+
+    /// Whole-dataset chunk.
+    pub fn whole(extent: impl Into<Extent>) -> Self {
+        let extent = extent.into();
+        Chunk { offset: vec![0; extent.len()], extent }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.offset.len()
+    }
+
+    /// Number of elements.
+    pub fn num_elements(&self) -> u64 {
+        self.extent.iter().product()
+    }
+
+    /// Exclusive upper corner.
+    pub fn end(&self) -> Offset {
+        self.offset
+            .iter()
+            .zip(&self.extent)
+            .map(|(o, e)| o + e)
+            .collect()
+    }
+
+    /// Intersection with another chunk, if non-empty.
+    pub fn intersect(&self, other: &Chunk) -> Option<Chunk> {
+        debug_assert_eq!(self.ndim(), other.ndim());
+        let mut offset = Vec::with_capacity(self.ndim());
+        let mut extent = Vec::with_capacity(self.ndim());
+        for d in 0..self.ndim() {
+            let lo = self.offset[d].max(other.offset[d]);
+            let hi = (self.offset[d] + self.extent[d])
+                .min(other.offset[d] + other.extent[d]);
+            if hi <= lo {
+                return None;
+            }
+            offset.push(lo);
+            extent.push(hi - lo);
+        }
+        Some(Chunk { offset, extent })
+    }
+
+    /// Does this chunk fully contain `other`?
+    pub fn contains(&self, other: &Chunk) -> bool {
+        (0..self.ndim()).all(|d| {
+            other.offset[d] >= self.offset[d]
+                && other.offset[d] + other.extent[d]
+                    <= self.offset[d] + self.extent[d]
+        })
+    }
+
+    /// Split along dimension `dim` at absolute coordinate `at`
+    /// (must lie strictly inside). Returns (lower, upper).
+    pub fn split_at(&self, dim: usize, at: u64) -> (Chunk, Chunk) {
+        assert!(at > self.offset[dim] && at < self.offset[dim] + self.extent[dim],
+                "split coordinate {at} outside chunk interior");
+        let mut lo = self.clone();
+        let mut hi = self.clone();
+        lo.extent[dim] = at - self.offset[dim];
+        hi.offset[dim] = at;
+        hi.extent[dim] = self.offset[dim] + self.extent[dim] - at;
+        (lo, hi)
+    }
+
+    /// Slice off a prefix of `n` elements measured in *flattened row-major
+    /// elements along the slowest (first) dimension*, i.e. whole hyperplanes.
+    /// Used by the binpacking strategy which never cuts inner dimensions.
+    /// Returns `None` if `n` does not correspond to a whole number of
+    /// hyperplanes or is out of range.
+    pub fn split_rows(&self, rows: u64) -> Option<(Chunk, Chunk)> {
+        if self.ndim() == 0 || rows == 0 || rows >= self.extent[0] {
+            return None;
+        }
+        Some(self.split_at(0, self.offset[0] + rows))
+    }
+}
+
+/// A written chunk plus its origin in the compute topology — the
+/// information the SST reader side gets from the writer's metadata and
+/// feeds to the distribution strategies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WrittenChunkInfo {
+    pub chunk: Chunk,
+    /// Writer MPI-style rank that produced the chunk.
+    pub source_rank: usize,
+    /// Hostname of the producing rank (topology layer for §3.2's
+    /// distribution-by-hostname).
+    pub hostname: String,
+}
+
+impl WrittenChunkInfo {
+    pub fn new(chunk: Chunk, source_rank: usize, hostname: impl Into<String>)
+        -> Self
+    {
+        WrittenChunkInfo { chunk, source_rank, hostname: hostname.into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intersect_overlapping() {
+        let a = Chunk::new(vec![0, 0], vec![10, 10]);
+        let b = Chunk::new(vec![5, 5], vec![10, 10]);
+        let i = a.intersect(&b).unwrap();
+        assert_eq!(i, Chunk::new(vec![5, 5], vec![5, 5]));
+    }
+
+    #[test]
+    fn intersect_disjoint_is_none() {
+        let a = Chunk::new(vec![0], vec![5]);
+        let b = Chunk::new(vec![5], vec![5]);
+        assert!(a.intersect(&b).is_none());
+    }
+
+    #[test]
+    fn intersect_is_commutative() {
+        let a = Chunk::new(vec![2, 0], vec![8, 4]);
+        let b = Chunk::new(vec![0, 1], vec![5, 9]);
+        assert_eq!(a.intersect(&b), b.intersect(&a));
+    }
+
+    #[test]
+    fn contains_and_whole() {
+        let w = Chunk::whole(vec![16, 16]);
+        let inner = Chunk::new(vec![3, 4], vec![2, 2]);
+        assert!(w.contains(&inner));
+        assert!(!inner.contains(&w));
+        assert!(w.contains(&w));
+    }
+
+    #[test]
+    fn split_preserves_volume_and_disjointness() {
+        let c = Chunk::new(vec![4, 0], vec![10, 6]);
+        let (lo, hi) = c.split_at(0, 7);
+        assert_eq!(lo.num_elements() + hi.num_elements(), c.num_elements());
+        assert!(lo.intersect(&hi).is_none());
+        assert_eq!(lo.end()[0], hi.offset[0]);
+    }
+
+    #[test]
+    fn split_rows_edge_cases() {
+        let c = Chunk::new(vec![0, 0], vec![4, 8]);
+        assert!(c.split_rows(0).is_none());
+        assert!(c.split_rows(4).is_none());
+        let (lo, hi) = c.split_rows(1).unwrap();
+        assert_eq!(lo.extent, vec![1, 8]);
+        assert_eq!(hi.extent, vec![3, 8]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_outside_panics() {
+        let c = Chunk::new(vec![0], vec![4]);
+        c.split_at(0, 4);
+    }
+}

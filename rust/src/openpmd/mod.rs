@@ -1,0 +1,39 @@
+//! The openPMD data model (S1): scientifically self-describing
+//! particle–mesh data, independent of any IO backend.
+//!
+//! openPMD (the *Open Standard for Particle-Mesh Data*, Huebl et al. 2015)
+//! standardizes how simulation output is organized and annotated so that
+//! analysis, coupling and visualization codes can interpret data without
+//! code-specific knowledge — the paper's *expressiveness* criterion
+//! (§2.1). This module implements the hierarchy
+//!
+//! ```text
+//! Series
+//! └── Iteration (one per simulation output step; == one engine step)
+//!     ├── Mesh*             (n-dim field records, e.g. E, B)
+//!     │   └── RecordComponent*   (x, y, z or scalar)
+//!     └── ParticleSpecies*  (e.g. electrons)
+//!         └── Record*       (position, momentum, weighting, ...)
+//!             └── RecordComponent*
+//! ```
+//!
+//! plus standardized attributes (units, axis labels, time metadata) and the
+//! chunk table ([`chunk::WrittenChunkInfo`]) that the §3 distribution
+//! strategies operate on.
+//!
+//! The mapping onto a concrete backend goes through [`crate::adios`]: one
+//! iteration is one engine *step*; record components become variables named
+//! by [`series::var_name`]; attributes are flushed with each step.
+
+pub mod attribute;
+pub mod chunk;
+pub mod record;
+pub mod series;
+pub mod types;
+pub mod validate;
+
+pub use attribute::Attribute;
+pub use chunk::{Chunk, WrittenChunkInfo};
+pub use record::{Mesh, ParticleSpecies, Record, RecordComponent};
+pub use series::{Iteration, Series, var_name};
+pub use types::{Datatype, Extent, Offset, UnitDimension};

@@ -1,0 +1,320 @@
+//! Records, record components, meshes and particle species.
+//!
+//! A *record* is one physical quantity (position, E-field, weighting); its
+//! *components* are the scalar arrays (x/y/z, or a single scalar
+//! component). Meshes are records with grid metadata; particle species
+//! group per-particle records.
+
+use std::collections::BTreeMap;
+
+use super::attribute::Attribute;
+use super::chunk::Chunk;
+use super::types::{byte_size, Datatype, Extent, UnitDimension};
+use crate::adios::Bytes;
+
+/// Name used for the single component of scalar records.
+pub const SCALAR: &str = "\u{b}_scalar";
+
+/// Dataset declaration: element type + global extent.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dataset {
+    pub dtype: Datatype,
+    pub extent: Extent,
+}
+
+impl Dataset {
+    pub fn new(dtype: Datatype, extent: impl Into<Extent>) -> Self {
+        Dataset { dtype, extent: extent.into() }
+    }
+}
+
+/// One scalar array of a record, plus staged chunk writes.
+#[derive(Clone, Debug)]
+pub struct RecordComponent {
+    pub dataset: Dataset,
+    /// Conversion factor to SI — `unitSI` in the standard.
+    pub unit_si: f64,
+    pub attributes: BTreeMap<String, Attribute>,
+    /// Writes staged by `store_chunk`, consumed at flush time.
+    pending: Vec<(Chunk, Bytes)>,
+}
+
+impl RecordComponent {
+    pub fn new(dataset: Dataset) -> Self {
+        RecordComponent {
+            dataset,
+            unit_si: 1.0,
+            attributes: BTreeMap::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    pub fn with_unit_si(mut self, unit_si: f64) -> Self {
+        self.unit_si = unit_si;
+        self
+    }
+
+    /// Stage a chunk write. Validates bounds and byte length.
+    pub fn store_chunk(&mut self, chunk: Chunk, data: Bytes)
+        -> Result<(), String>
+    {
+        if chunk.ndim() != self.dataset.extent.len() {
+            return Err(format!(
+                "chunk rank {} != dataset rank {}",
+                chunk.ndim(),
+                self.dataset.extent.len()
+            ));
+        }
+        for d in 0..chunk.ndim() {
+            if chunk.offset[d] + chunk.extent[d] > self.dataset.extent[d] {
+                return Err(format!(
+                    "chunk {:?}+{:?} exceeds dataset extent {:?} in dim {d}",
+                    chunk.offset, chunk.extent, self.dataset.extent
+                ));
+            }
+        }
+        let want = byte_size(self.dataset.dtype, &chunk.extent) as usize;
+        if data.len() != want {
+            return Err(format!(
+                "chunk payload is {} bytes, extent {:?} x {} needs {want}",
+                data.len(),
+                chunk.extent,
+                self.dataset.dtype.name()
+            ));
+        }
+        self.pending.push((chunk, data));
+        Ok(())
+    }
+
+    /// Drain staged writes (called by the series flush).
+    pub fn take_pending(&mut self) -> Vec<(Chunk, Bytes)> {
+        std::mem::take(&mut self.pending)
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+/// A named physical quantity with one or more components.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub components: BTreeMap<String, RecordComponent>,
+    pub unit_dimension: UnitDimension,
+    /// openPMD `timeOffset` (in-step offset for staggered quantities).
+    pub time_offset: f64,
+}
+
+impl Record {
+    pub fn new(unit_dimension: UnitDimension) -> Self {
+        Record {
+            components: BTreeMap::new(),
+            unit_dimension,
+            time_offset: 0.0,
+        }
+    }
+
+    /// Vector record with the given component names and a shared dataset.
+    pub fn vector(
+        unit_dimension: UnitDimension,
+        components: &[&str],
+        dataset: Dataset,
+    ) -> Self {
+        let mut r = Record::new(unit_dimension);
+        for c in components {
+            r.components
+                .insert(c.to_string(), RecordComponent::new(dataset.clone()));
+        }
+        r
+    }
+
+    /// Scalar record (single `SCALAR` component).
+    pub fn scalar(unit_dimension: UnitDimension, dataset: Dataset) -> Self {
+        let mut r = Record::new(unit_dimension);
+        r.components
+            .insert(SCALAR.to_string(), RecordComponent::new(dataset));
+        r
+    }
+
+    pub fn component_mut(&mut self, name: &str)
+        -> Option<&mut RecordComponent>
+    {
+        self.components.get_mut(name)
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.components.len() == 1 && self.components.contains_key(SCALAR)
+    }
+}
+
+/// Mesh geometry as standardized by openPMD.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Geometry {
+    Cartesian,
+    Cylindrical,
+}
+
+impl Geometry {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Geometry::Cartesian => "cartesian",
+            Geometry::Cylindrical => "cylindrical",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Geometry> {
+        match s {
+            "cartesian" => Some(Geometry::Cartesian),
+            "cylindrical" => Some(Geometry::Cylindrical),
+            _ => None,
+        }
+    }
+}
+
+/// A mesh record: field data on a structured grid.
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    pub record: Record,
+    pub geometry: Geometry,
+    pub axis_labels: Vec<String>,
+    pub grid_spacing: Vec<f64>,
+    pub grid_global_offset: Vec<f64>,
+    pub grid_unit_si: f64,
+}
+
+impl Mesh {
+    pub fn cartesian(record: Record, axis_labels: &[&str],
+                     grid_spacing: Vec<f64>) -> Self {
+        let n = axis_labels.len();
+        Mesh {
+            record,
+            geometry: Geometry::Cartesian,
+            axis_labels: axis_labels.iter().map(|s| s.to_string()).collect(),
+            grid_spacing,
+            grid_global_offset: vec![0.0; n],
+            grid_unit_si: 1.0,
+        }
+    }
+}
+
+/// A particle species: a named group of per-particle records.
+#[derive(Clone, Debug, Default)]
+pub struct ParticleSpecies {
+    pub records: BTreeMap<String, Record>,
+    pub attributes: BTreeMap<String, Attribute>,
+}
+
+impl ParticleSpecies {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Convenience: the canonical PIC species layout used by the producer —
+    /// `position` (x,y,z), `momentum` (x,y,z), scalar `weighting`, all f32
+    /// with `n` global particles.
+    pub fn pic_layout(n: u64) -> Self {
+        let ds = Dataset::new(Datatype::F32, vec![n]);
+        let mut s = ParticleSpecies::new();
+        s.records.insert(
+            "position".into(),
+            Record::vector(UnitDimension::length(), &["x", "y", "z"],
+                           ds.clone()),
+        );
+        s.records.insert(
+            "momentum".into(),
+            Record::vector(UnitDimension::momentum(), &["x", "y", "z"],
+                           ds.clone()),
+        );
+        s.records.insert(
+            "weighting".into(),
+            Record::scalar(UnitDimension::NONE, ds),
+        );
+        s
+    }
+
+    /// Total bytes across all staged component writes.
+    pub fn pending_bytes(&self) -> u64 {
+        self.records
+            .values()
+            .flat_map(|r| r.components.values())
+            .map(|c| {
+                c.pending
+                    .iter()
+                    .map(|(ch, _)| byte_size(c.dataset.dtype, &ch.extent))
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn bytes(n: usize) -> Bytes {
+        Arc::new(vec![0u8; n])
+    }
+
+    #[test]
+    fn store_chunk_validates_length() {
+        let mut c = RecordComponent::new(
+            Dataset::new(Datatype::F32, vec![100]));
+        assert!(c.store_chunk(Chunk::new(vec![0], vec![10]),
+                              bytes(40)).is_ok());
+        assert!(c.store_chunk(Chunk::new(vec![0], vec![10]),
+                              bytes(39)).is_err());
+    }
+
+    #[test]
+    fn store_chunk_validates_bounds_and_rank() {
+        let mut c = RecordComponent::new(
+            Dataset::new(Datatype::F32, vec![100]));
+        assert!(c.store_chunk(Chunk::new(vec![95], vec![10]),
+                              bytes(40)).is_err());
+        assert!(c.store_chunk(Chunk::new(vec![0, 0], vec![5, 2]),
+                              bytes(40)).is_err());
+    }
+
+    #[test]
+    fn take_pending_drains() {
+        let mut c = RecordComponent::new(
+            Dataset::new(Datatype::F32, vec![8]));
+        c.store_chunk(Chunk::new(vec![0], vec![8]), bytes(32)).unwrap();
+        assert_eq!(c.pending_len(), 1);
+        assert_eq!(c.take_pending().len(), 1);
+        assert_eq!(c.pending_len(), 0);
+    }
+
+    #[test]
+    fn pic_layout_shape() {
+        let s = ParticleSpecies::pic_layout(1000);
+        assert_eq!(s.records.len(), 3);
+        assert_eq!(s.records["position"].components.len(), 3);
+        assert!(s.records["weighting"].is_scalar());
+        assert_eq!(
+            s.records["momentum"].components["x"].dataset.extent,
+            vec![1000]
+        );
+    }
+
+    #[test]
+    fn species_pending_bytes() {
+        let mut s = ParticleSpecies::pic_layout(64);
+        s.records
+            .get_mut("position")
+            .unwrap()
+            .component_mut("x")
+            .unwrap()
+            .store_chunk(Chunk::new(vec![0], vec![64]), bytes(256))
+            .unwrap();
+        assert_eq!(s.pending_bytes(), 256);
+    }
+
+    #[test]
+    fn geometry_round_trip() {
+        assert_eq!(Geometry::parse("cartesian"), Some(Geometry::Cartesian));
+        assert_eq!(Geometry::parse("weird"), None);
+        assert_eq!(Geometry::Cylindrical.as_str(), "cylindrical");
+    }
+}

@@ -1,0 +1,433 @@
+//! The series: root object of the openPMD hierarchy, and the mapping of
+//! that hierarchy onto step-oriented engines.
+//!
+//! One openPMD *iteration* maps to one engine *step* (the streaming-
+//! friendly encoding: iterations must be consumable one at a time without
+//! random access, because a stream cannot seek). Record components map to
+//! variables named by [`var_name`]; all metadata travels as step
+//! attributes. A `Series` can be flushed to any [`Engine`] — file, stream
+//! or JSON — unchanged, which is exactly the paper's *reusability*
+//! property: upgrading a file-based IO routine to streaming is a runtime
+//! engine switch.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::attribute::Attribute;
+use super::record::{
+    Dataset, Geometry, Mesh, ParticleSpecies, Record, RecordComponent, SCALAR,
+};
+use super::types::{Datatype, UnitDimension};
+use crate::adios::{Engine, StepStatus, VarDecl};
+
+/// One output step of the simulation.
+#[derive(Clone, Debug, Default)]
+pub struct Iteration {
+    pub time: f64,
+    pub dt: f64,
+    pub time_unit_si: f64,
+    pub meshes: BTreeMap<String, Mesh>,
+    pub particles: BTreeMap<String, ParticleSpecies>,
+}
+
+impl Iteration {
+    pub fn new(time: f64, dt: f64) -> Self {
+        Iteration { time, dt, time_unit_si: 1.0, ..Default::default() }
+    }
+}
+
+/// Root object: standard metadata + helpers to move iterations through
+/// engines.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub attributes: BTreeMap<String, Attribute>,
+    /// Whether the series-level attributes were already published
+    /// (they are sent with the first step only).
+    base_flushed: bool,
+}
+
+pub const OPENPMD_VERSION: &str = "1.1.0";
+pub const BASE_PATH: &str = "/data/%T/";
+pub const MESHES_PATH: &str = "meshes/";
+pub const PARTICLES_PATH: &str = "particles/";
+
+impl Series {
+    pub fn new(author: &str, software: &str) -> Self {
+        let mut attributes = BTreeMap::new();
+        attributes.insert("openPMD".into(),
+                          Attribute::Str(OPENPMD_VERSION.into()));
+        attributes.insert("openPMDextension".into(), Attribute::U64(0));
+        attributes.insert("basePath".into(), Attribute::Str(BASE_PATH.into()));
+        attributes.insert("meshesPath".into(),
+                          Attribute::Str(MESHES_PATH.into()));
+        attributes.insert("particlesPath".into(),
+                          Attribute::Str(PARTICLES_PATH.into()));
+        attributes.insert("iterationEncoding".into(),
+                          Attribute::Str("variableBased".into()));
+        attributes.insert("iterationFormat".into(),
+                          Attribute::Str("/data/%T/".into()));
+        attributes.insert("author".into(), Attribute::Str(author.into()));
+        attributes.insert("software".into(), Attribute::Str(software.into()));
+        Series { attributes, base_flushed: false }
+    }
+
+    /// Flush one iteration as one engine step. Consumes the staged chunk
+    /// writes of every record component.
+    ///
+    /// Returns the step status: on [`StepStatus::Discarded`] (SST
+    /// backpressure) nothing was sent and pending data is dropped —
+    /// mirroring ADIOS2, where a discarded step's puts never happen.
+    pub fn write_iteration(
+        &mut self,
+        engine: &mut dyn Engine,
+        index: u64,
+        iteration: &mut Iteration,
+    ) -> Result<StepStatus> {
+        let status = engine.begin_step()?;
+        match status {
+            StepStatus::Ok => {}
+            StepStatus::Discarded => {
+                // Drop staged data, producer moves on.
+                for mesh in iteration.meshes.values_mut() {
+                    for c in mesh.record.components.values_mut() {
+                        c.take_pending();
+                    }
+                }
+                for sp in iteration.particles.values_mut() {
+                    for r in sp.records.values_mut() {
+                        for c in r.components.values_mut() {
+                            c.take_pending();
+                        }
+                    }
+                }
+                return Ok(status);
+            }
+            other => bail!("begin_step on writer returned {other:?}"),
+        }
+
+        if !self.base_flushed {
+            for (k, v) in &self.attributes {
+                engine.put_attribute(k, v.clone())?;
+            }
+            self.base_flushed = true;
+        }
+
+        let prefix = format!("/data/{index}");
+        engine.put_attribute(&format!("{prefix}/time"),
+                             Attribute::F64(iteration.time))?;
+        engine.put_attribute(&format!("{prefix}/dt"),
+                             Attribute::F64(iteration.dt))?;
+        engine.put_attribute(&format!("{prefix}/timeUnitSI"),
+                             Attribute::F64(iteration.time_unit_si))?;
+
+        for (mname, mesh) in iteration.meshes.iter_mut() {
+            let mpath = format!("{prefix}/meshes/{mname}");
+            engine.put_attribute(&format!("{mpath}/geometry"),
+                                 Attribute::Str(mesh.geometry.as_str().into()))?;
+            engine.put_attribute(&format!("{mpath}/axisLabels"),
+                                 Attribute::VecStr(mesh.axis_labels.clone()))?;
+            engine.put_attribute(&format!("{mpath}/gridSpacing"),
+                                 Attribute::VecF64(mesh.grid_spacing.clone()))?;
+            engine.put_attribute(
+                &format!("{mpath}/gridGlobalOffset"),
+                Attribute::VecF64(mesh.grid_global_offset.clone()))?;
+            engine.put_attribute(&format!("{mpath}/gridUnitSI"),
+                                 Attribute::F64(mesh.grid_unit_si))?;
+            flush_record(engine, &mpath, &mut mesh.record)?;
+        }
+
+        for (sname, species) in iteration.particles.iter_mut() {
+            let spath = format!("{prefix}/particles/{sname}");
+            for (k, v) in &species.attributes {
+                engine.put_attribute(&format!("{spath}/{k}"), v.clone())?;
+            }
+            for (rname, record) in species.records.iter_mut() {
+                let rpath = format!("{spath}/{rname}");
+                flush_record(engine, &rpath, record)?;
+            }
+        }
+
+        engine.end_step()?;
+        Ok(StepStatus::Ok)
+    }
+
+    /// Read the next step from an engine, reconstructing the iteration
+    /// structure (metadata + dataset declarations; payloads are loaded
+    /// separately via `Engine::get`, after chunk distribution).
+    ///
+    /// `Ok(None)` means no step is ready / stream ended — inspect
+    /// the returned status.
+    pub fn read_iteration(
+        engine: &mut dyn Engine,
+    ) -> Result<(StepStatus, Option<(u64, Iteration)>)> {
+        let status = engine.begin_step()?;
+        if status != StepStatus::Ok {
+            return Ok((status, None));
+        }
+        let mut index: Option<u64> = None;
+        let mut it = Iteration::default();
+
+        // Pass 1: variables -> structure.
+        for v in engine.available_variables() {
+            let parsed = parse_var_name(&v.name)
+                .with_context(|| format!("unparseable variable {}", v.name))?;
+            index = Some(parsed.index);
+            let ds = Dataset::new(v.dtype, v.shape.clone());
+            match parsed.location {
+                Location::Mesh { mesh, component } => {
+                    let m = it.meshes.entry(mesh).or_insert_with(|| {
+                        Mesh::cartesian(Record::new(UnitDimension::NONE),
+                                        &[], vec![])
+                    });
+                    m.record
+                        .components
+                        .insert(component, RecordComponent::new(ds));
+                }
+                Location::Particle { species, record, component } => {
+                    let sp = it
+                        .particles
+                        .entry(species)
+                        .or_insert_with(ParticleSpecies::new);
+                    let r = sp
+                        .records
+                        .entry(record)
+                        .or_insert_with(|| Record::new(UnitDimension::NONE));
+                    r.components.insert(component, RecordComponent::new(ds));
+                }
+            }
+        }
+
+        let index = match index {
+            Some(i) => i,
+            None => bail!("step contains no openPMD variables"),
+        };
+
+        // Pass 2: attributes -> metadata.
+        let prefix = format!("/data/{index}");
+        if let Some(a) = engine.attribute(&format!("{prefix}/time")) {
+            it.time = a.as_f64().unwrap_or(0.0);
+        }
+        if let Some(a) = engine.attribute(&format!("{prefix}/dt")) {
+            it.dt = a.as_f64().unwrap_or(0.0);
+        }
+        if let Some(a) = engine.attribute(&format!("{prefix}/timeUnitSI")) {
+            it.time_unit_si = a.as_f64().unwrap_or(1.0);
+        }
+        for (mname, mesh) in it.meshes.iter_mut() {
+            let mpath = format!("{prefix}/meshes/{mname}");
+            if let Some(a) = engine.attribute(&format!("{mpath}/geometry")) {
+                if let Some(g) = a.as_str().and_then(Geometry::parse) {
+                    mesh.geometry = g;
+                }
+            }
+            if let Some(Attribute::VecStr(v)) =
+                engine.attribute(&format!("{mpath}/axisLabels"))
+            {
+                mesh.axis_labels = v;
+            }
+            if let Some(Attribute::VecF64(v)) =
+                engine.attribute(&format!("{mpath}/gridSpacing"))
+            {
+                mesh.grid_spacing = v;
+            }
+            for (cname, comp) in mesh.record.components.iter_mut() {
+                let cpath = component_path(&mpath, cname);
+                if let Some(a) = engine.attribute(&format!("{cpath}/unitSI")) {
+                    comp.unit_si = a.as_f64().unwrap_or(1.0);
+                }
+            }
+        }
+        for (sname, species) in it.particles.iter_mut() {
+            let spath = format!("{prefix}/particles/{sname}");
+            for (rname, record) in species.records.iter_mut() {
+                let rpath = format!("{spath}/{rname}");
+                if let Some(Attribute::VecF64(v)) =
+                    engine.attribute(&format!("{rpath}/unitDimension"))
+                {
+                    if v.len() == 7 {
+                        let mut dims = [0.0; 7];
+                        dims.copy_from_slice(&v);
+                        record.unit_dimension = UnitDimension(dims);
+                    }
+                }
+                for (cname, comp) in record.components.iter_mut() {
+                    let cpath = component_path(&rpath, cname);
+                    if let Some(a) =
+                        engine.attribute(&format!("{cpath}/unitSI"))
+                    {
+                        comp.unit_si = a.as_f64().unwrap_or(1.0);
+                    }
+                }
+            }
+        }
+
+        Ok((StepStatus::Ok, Some((index, it))))
+    }
+}
+
+fn component_path(record_path: &str, component: &str) -> String {
+    if component == SCALAR {
+        record_path.to_string()
+    } else {
+        format!("{record_path}/{component}")
+    }
+}
+
+fn flush_record(
+    engine: &mut dyn Engine,
+    rpath: &str,
+    record: &mut Record,
+) -> Result<()> {
+    engine.put_attribute(
+        &format!("{rpath}/unitDimension"),
+        Attribute::VecF64(record.unit_dimension.0.to_vec()),
+    )?;
+    engine.put_attribute(&format!("{rpath}/timeOffset"),
+                         Attribute::F64(record.time_offset))?;
+    for (cname, comp) in record.components.iter_mut() {
+        let cpath = component_path(rpath, cname);
+        engine.put_attribute(&format!("{cpath}/unitSI"),
+                             Attribute::F64(comp.unit_si))?;
+        let decl = VarDecl::new(cpath.clone(), comp.dataset.dtype,
+                                comp.dataset.extent.clone());
+        for (chunk, data) in comp.take_pending() {
+            engine.put(&decl, chunk, data)?;
+        }
+    }
+    Ok(())
+}
+
+/// Construct a variable name for a particle record component.
+pub fn var_name(
+    index: u64,
+    species: &str,
+    record: &str,
+    component: &str,
+) -> String {
+    component_path(
+        &format!("/data/{index}/particles/{species}/{record}"),
+        component,
+    )
+}
+
+/// Construct a variable name for a mesh component.
+pub fn mesh_var_name(index: u64, mesh: &str, component: &str) -> String {
+    component_path(&format!("/data/{index}/meshes/{mesh}"), component)
+}
+
+/// Parsed variable location.
+#[derive(Debug, PartialEq)]
+pub struct ParsedVar {
+    pub index: u64,
+    pub location: Location,
+}
+
+#[derive(Debug, PartialEq)]
+pub enum Location {
+    Mesh { mesh: String, component: String },
+    Particle { species: String, record: String, component: String },
+}
+
+/// Parse `/data/{i}/meshes/E/x`, `/data/{i}/particles/e/position/x`,
+/// `/data/{i}/particles/e/weighting` (scalar) etc.
+pub fn parse_var_name(name: &str) -> Result<ParsedVar> {
+    let parts: Vec<&str> = name.split('/').collect();
+    // ["", "data", idx, kind, ...]
+    if parts.len() < 5 || !parts[0].is_empty() || parts[1] != "data" {
+        bail!("not an openPMD variable path: {name:?}");
+    }
+    let index: u64 = parts[2]
+        .parse()
+        .with_context(|| format!("bad iteration index in {name:?}"))?;
+    let location = match (parts[3], &parts[4..]) {
+        ("meshes", [mesh]) => Location::Mesh {
+            mesh: mesh.to_string(),
+            component: SCALAR.to_string(),
+        },
+        ("meshes", [mesh, comp]) => Location::Mesh {
+            mesh: mesh.to_string(),
+            component: comp.to_string(),
+        },
+        ("particles", [species, record]) => Location::Particle {
+            species: species.to_string(),
+            record: record.to_string(),
+            component: SCALAR.to_string(),
+        },
+        ("particles", [species, record, comp]) => Location::Particle {
+            species: species.to_string(),
+            record: record.to_string(),
+            component: comp.to_string(),
+        },
+        _ => bail!("unrecognized openPMD path shape: {name:?}"),
+    };
+    Ok(ParsedVar { index, location })
+}
+
+/// Expand an openPMD dataset declaration helper: f32 1-D particle dataset.
+pub fn particle_dataset(n: u64) -> Dataset {
+    Dataset::new(Datatype::F32, vec![n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn var_names_round_trip_through_parser() {
+        let n = var_name(5, "e", "position", "x");
+        assert_eq!(n, "/data/5/particles/e/position/x");
+        let p = parse_var_name(&n).unwrap();
+        assert_eq!(p.index, 5);
+        assert_eq!(
+            p.location,
+            Location::Particle {
+                species: "e".into(),
+                record: "position".into(),
+                component: "x".into()
+            }
+        );
+    }
+
+    #[test]
+    fn scalar_record_has_short_path() {
+        let n = var_name(0, "e", "weighting", SCALAR);
+        assert_eq!(n, "/data/0/particles/e/weighting");
+        let p = parse_var_name(&n).unwrap();
+        assert_eq!(
+            p.location,
+            Location::Particle {
+                species: "e".into(),
+                record: "weighting".into(),
+                component: SCALAR.into()
+            }
+        );
+    }
+
+    #[test]
+    fn mesh_names_parse() {
+        let n = mesh_var_name(3, "E", "y");
+        let p = parse_var_name(&n).unwrap();
+        assert_eq!(p.index, 3);
+        assert_eq!(
+            p.location,
+            Location::Mesh { mesh: "E".into(), component: "y".into() }
+        );
+    }
+
+    #[test]
+    fn junk_paths_rejected() {
+        assert!(parse_var_name("/other/5/particles/e/p/x").is_err());
+        assert!(parse_var_name("/data/notanum/particles/e/p/x").is_err());
+        assert!(parse_var_name("bare").is_err());
+        assert!(parse_var_name("/data/1/meshes").is_err());
+    }
+
+    #[test]
+    fn series_has_standard_attributes() {
+        let s = Series::new("CASUS", "openpmd-stream 0.1");
+        assert_eq!(s.attributes["openPMD"].as_str(), Some("1.1.0"));
+        assert_eq!(s.attributes["basePath"].as_str(), Some("/data/%T/"));
+        assert_eq!(s.attributes["meshesPath"].as_str(), Some("meshes/"));
+    }
+}

@@ -1,0 +1,156 @@
+//! Core scalar types of the data model.
+
+/// Global dataset extent (size per dimension).
+pub type Extent = Vec<u64>;
+/// Offset of a chunk within a dataset.
+pub type Offset = Vec<u64>;
+
+/// Element datatypes supported by the IO layer.
+///
+/// The set mirrors what the paper's workloads actually move (f32/f64
+/// particle data, integer ids); extending it is additive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Datatype {
+    F32,
+    F64,
+    I32,
+    I64,
+    U32,
+    U64,
+    U8,
+}
+
+impl Datatype {
+    /// Size of one element in bytes.
+    pub fn size(self) -> usize {
+        match self {
+            Datatype::F32 | Datatype::I32 | Datatype::U32 => 4,
+            Datatype::F64 | Datatype::I64 | Datatype::U64 => 8,
+            Datatype::U8 => 1,
+        }
+    }
+
+    /// Stable tag used by the wire + file formats.
+    pub fn tag(self) -> u8 {
+        match self {
+            Datatype::F32 => 0,
+            Datatype::F64 => 1,
+            Datatype::I32 => 2,
+            Datatype::I64 => 3,
+            Datatype::U32 => 4,
+            Datatype::U64 => 5,
+            Datatype::U8 => 6,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<Datatype> {
+        Some(match tag {
+            0 => Datatype::F32,
+            1 => Datatype::F64,
+            2 => Datatype::I32,
+            3 => Datatype::I64,
+            4 => Datatype::U32,
+            5 => Datatype::U64,
+            6 => Datatype::U8,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Datatype::F32 => "f32",
+            Datatype::F64 => "f64",
+            Datatype::I32 => "i32",
+            Datatype::I64 => "i64",
+            Datatype::U32 => "u32",
+            Datatype::U64 => "u64",
+            Datatype::U8 => "u8",
+        }
+    }
+}
+
+/// Powers of the seven SI base units: (L, M, T, I, Θ, N, J).
+///
+/// openPMD attaches `unitDimension` to every record so downstream tools can
+/// convert units without domain knowledge — part of the FAIR/self-
+/// description story (§2.1 *expressiveness*).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UnitDimension(pub [f64; 7]);
+
+impl UnitDimension {
+    pub const NONE: UnitDimension = UnitDimension([0.0; 7]);
+
+    /// Length (metres).
+    pub fn length() -> Self {
+        UnitDimension([1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0])
+    }
+
+    /// Momentum (kg·m/s).
+    pub fn momentum() -> Self {
+        UnitDimension([1.0, 1.0, -1.0, 0.0, 0.0, 0.0, 0.0])
+    }
+
+    /// Electric field (V/m = kg·m·A⁻¹·s⁻³).
+    pub fn electric_field() -> Self {
+        UnitDimension([1.0, 1.0, -3.0, -1.0, 0.0, 0.0, 0.0])
+    }
+
+    /// Magnetic field (T = kg·A⁻¹·s⁻²).
+    pub fn magnetic_field() -> Self {
+        UnitDimension([0.0, 1.0, -2.0, -1.0, 0.0, 0.0, 0.0])
+    }
+
+    /// Multiply two dimensions (add exponents).
+    pub fn mul(self, other: UnitDimension) -> UnitDimension {
+        let mut out = [0.0; 7];
+        for i in 0..7 {
+            out[i] = self.0[i] + other.0[i];
+        }
+        UnitDimension(out)
+    }
+}
+
+/// Number of elements spanned by an extent.
+pub fn num_elements(extent: &[u64]) -> u64 {
+    extent.iter().product()
+}
+
+/// Byte size of a dense chunk of `extent` elements of `dtype`.
+pub fn byte_size(dtype: Datatype, extent: &[u64]) -> u64 {
+    num_elements(extent) * dtype.size() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn datatype_tags_round_trip() {
+        for dt in [Datatype::F32, Datatype::F64, Datatype::I32, Datatype::I64,
+                   Datatype::U32, Datatype::U64, Datatype::U8] {
+            assert_eq!(Datatype::from_tag(dt.tag()), Some(dt));
+        }
+        assert_eq!(Datatype::from_tag(99), None);
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(Datatype::F32.size(), 4);
+        assert_eq!(Datatype::U64.size(), 8);
+        assert_eq!(Datatype::U8.size(), 1);
+    }
+
+    #[test]
+    fn unit_dimension_algebra() {
+        let vel = UnitDimension([1.0, 0.0, -1.0, 0.0, 0.0, 0.0, 0.0]);
+        let mass = UnitDimension([0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(mass.mul(vel), UnitDimension::momentum());
+    }
+
+    #[test]
+    fn extent_math() {
+        assert_eq!(num_elements(&[4, 5, 6]), 120);
+        assert_eq!(byte_size(Datatype::F64, &[10, 10]), 800);
+        assert_eq!(num_elements(&[]), 1); // scalar
+    }
+}

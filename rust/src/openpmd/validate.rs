@@ -1,0 +1,262 @@
+//! Standard-conformance checking.
+//!
+//! openPMD is a *standard*, so a reproduction should be able to say
+//! whether a series conforms. This validator covers the structural rules
+//! that matter for the pipelines in this repo: required series attributes,
+//! unit metadata on records, consistent component extents, mesh axis
+//! metadata matching dimensionality.
+
+use super::record::{Mesh, ParticleSpecies};
+use super::series::{Iteration, Series};
+
+/// A single validation finding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    /// Hierarchy path the finding refers to.
+    pub path: String,
+    pub message: String,
+    pub severity: Severity,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// Violates the standard.
+    Error,
+    /// Legal but suspicious (e.g. unitSI of 0).
+    Warning,
+}
+
+/// Validate series-level attributes.
+pub fn validate_series(series: &Series) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for required in ["openPMD", "basePath", "iterationEncoding"] {
+        if !series.attributes.contains_key(required) {
+            out.push(Finding {
+                path: "/".into(),
+                message: format!("missing required attribute {required:?}"),
+                severity: Severity::Error,
+            });
+        }
+    }
+    if let Some(v) = series.attributes.get("openPMD") {
+        match v.as_str() {
+            Some(s) if s.starts_with("1.") || s.starts_with("2.") => {}
+            _ => out.push(Finding {
+                path: "/".into(),
+                message: format!("unsupported openPMD version {v}"),
+                severity: Severity::Error,
+            }),
+        }
+    }
+    if let Some(v) = series.attributes.get("basePath") {
+        if v.as_str() != Some("/data/%T/") {
+            out.push(Finding {
+                path: "/".into(),
+                message: "basePath must be \"/data/%T/\" (fixed by the standard)"
+                    .into(),
+                severity: Severity::Error,
+            });
+        }
+    }
+    out
+}
+
+/// Validate one iteration's structure.
+pub fn validate_iteration(index: u64, it: &Iteration) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let prefix = format!("/data/{index}");
+    if it.dt < 0.0 {
+        out.push(Finding {
+            path: prefix.clone(),
+            message: format!("negative dt {}", it.dt),
+            severity: Severity::Error,
+        });
+    }
+    for (name, mesh) in &it.meshes {
+        out.extend(validate_mesh(&format!("{prefix}/meshes/{name}"), mesh));
+    }
+    for (name, sp) in &it.particles {
+        out.extend(validate_species(
+            &format!("{prefix}/particles/{name}"), sp));
+    }
+    out
+}
+
+fn validate_mesh(path: &str, mesh: &Mesh) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let ndim = mesh
+        .record
+        .components
+        .values()
+        .next()
+        .map(|c| c.dataset.extent.len());
+    if let Some(ndim) = ndim {
+        if mesh.axis_labels.len() != ndim {
+            out.push(Finding {
+                path: path.into(),
+                message: format!(
+                    "axisLabels has {} entries for {ndim}-D mesh",
+                    mesh.axis_labels.len()
+                ),
+                severity: Severity::Error,
+            });
+        }
+        if mesh.grid_spacing.len() != ndim {
+            out.push(Finding {
+                path: path.into(),
+                message: format!(
+                    "gridSpacing has {} entries for {ndim}-D mesh",
+                    mesh.grid_spacing.len()
+                ),
+                severity: Severity::Error,
+            });
+        }
+    }
+    out.extend(validate_component_extents(path, &mesh.record.components));
+    out
+}
+
+fn validate_species(path: &str, sp: &ParticleSpecies) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // All records of a species must describe the same number of particles.
+    let mut sizes: Vec<(String, u64)> = Vec::new();
+    for (rname, r) in &sp.records {
+        for (cname, c) in &r.components {
+            let n: u64 = c.dataset.extent.iter().product();
+            sizes.push((format!("{rname}/{cname}"), n));
+        }
+        out.extend(validate_component_extents(
+            &format!("{path}/{rname}"), &r.components));
+    }
+    if let Some((_, first)) = sizes.first() {
+        for (who, n) in &sizes {
+            if n != first {
+                out.push(Finding {
+                    path: format!("{path}/{who}"),
+                    message: format!(
+                        "record component has {n} particles, species has {first}"
+                    ),
+                    severity: Severity::Error,
+                });
+            }
+        }
+    }
+    for (rname, r) in &sp.records {
+        for (cname, c) in &r.components {
+            if c.unit_si == 0.0 {
+                out.push(Finding {
+                    path: format!("{path}/{rname}/{cname}"),
+                    message: "unitSI is 0 (degenerate unit conversion)".into(),
+                    severity: Severity::Warning,
+                });
+            }
+        }
+    }
+    out
+}
+
+fn validate_component_extents(
+    path: &str,
+    comps: &std::collections::BTreeMap<String,
+        super::record::RecordComponent>,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut extents = comps.values().map(|c| &c.dataset.extent);
+    if let Some(first) = extents.next() {
+        if comps.values().any(|c| &c.dataset.extent != first) {
+            out.push(Finding {
+                path: path.into(),
+                message: "components of one record have differing extents"
+                    .into(),
+                severity: Severity::Error,
+            });
+        }
+    }
+    out
+}
+
+/// True if no `Error`-severity findings are present.
+pub fn is_conformant(findings: &[Finding]) -> bool {
+    findings.iter().all(|f| f.severity != Severity::Error)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::openpmd::record::{Dataset, Record};
+    use crate::openpmd::types::{Datatype, UnitDimension};
+    use crate::openpmd::Attribute;
+
+    #[test]
+    fn fresh_series_is_conformant() {
+        let s = Series::new("a", "b");
+        let f = validate_series(&s);
+        assert!(is_conformant(&f), "{f:?}");
+    }
+
+    #[test]
+    fn missing_version_is_error() {
+        let mut s = Series::new("a", "b");
+        s.attributes.remove("openPMD");
+        assert!(!is_conformant(&validate_series(&s)));
+    }
+
+    #[test]
+    fn wrong_base_path_is_error() {
+        let mut s = Series::new("a", "b");
+        s.attributes
+            .insert("basePath".into(), Attribute::Str("/other/".into()));
+        assert!(!is_conformant(&validate_series(&s)));
+    }
+
+    #[test]
+    fn pic_layout_iteration_is_conformant() {
+        let mut it = Iteration::new(0.0, 0.05);
+        it.particles.insert("e".into(), ParticleSpecies::pic_layout(100));
+        assert!(is_conformant(&validate_iteration(0, &it)));
+    }
+
+    #[test]
+    fn mismatched_species_sizes_flagged() {
+        let mut sp = ParticleSpecies::pic_layout(100);
+        sp.records.insert(
+            "extra".into(),
+            Record::scalar(UnitDimension::NONE,
+                           Dataset::new(Datatype::F32, vec![5])),
+        );
+        let mut it = Iteration::new(0.0, 0.05);
+        it.particles.insert("e".into(), sp);
+        let f = validate_iteration(0, &it);
+        assert!(!is_conformant(&f), "{f:?}");
+    }
+
+    #[test]
+    fn bad_axis_labels_flagged() {
+        let ds = Dataset::new(Datatype::F32, vec![8, 8]);
+        let rec = Record::vector(UnitDimension::electric_field(),
+                                 &["x"], ds);
+        let mesh = Mesh::cartesian(rec, &["x"], vec![1.0]); // 1 label, 2-D
+        let mut it = Iteration::new(0.0, 0.1);
+        it.meshes.insert("E".into(), mesh);
+        let f = validate_iteration(0, &it);
+        assert!(!is_conformant(&f), "{f:?}");
+    }
+
+    #[test]
+    fn zero_unit_si_is_warning_not_error() {
+        let mut sp = ParticleSpecies::pic_layout(10);
+        sp.records
+            .get_mut("weighting")
+            .unwrap()
+            .components
+            .values_mut()
+            .next()
+            .unwrap()
+            .unit_si = 0.0;
+        let mut it = Iteration::new(0.0, 0.05);
+        it.particles.insert("e".into(), sp);
+        let f = validate_iteration(0, &it);
+        assert!(is_conformant(&f)); // warning only
+        assert!(!f.is_empty());
+    }
+}

@@ -1,0 +1,264 @@
+//! Perceived-throughput accounting, matching the paper's definitions.
+//!
+//! §4.1: "the perceived throughput which we define through dividing the
+//! amount of data to be stored/sent by the time from starting the
+//! operation to its completion. Unlike the raw throughput, this includes
+//! latency time needed for communication and synchronization. [...] The
+//! throughput is computed by average over each single data dump and over
+//! each parallel instance, scaled to the total amount of written data."
+
+use std::time::Instant;
+
+use crate::util::stats::{boxplot, BoxPlot};
+
+/// What kind of IO operation a sample describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Producer-side store (file write or stream send).
+    Store,
+    /// Consumer-side load (file read or stream receive).
+    Load,
+}
+
+/// One timed IO operation of one parallel instance.
+#[derive(Clone, Copy, Debug)]
+pub struct OpSample {
+    pub kind: OpKind,
+    pub bytes: u64,
+    pub seconds: f64,
+    /// Dump/step index the op belonged to.
+    pub step: u64,
+    /// Parallel instance that performed it.
+    pub instance: usize,
+}
+
+/// Collector for op samples; one per benchmark run (merge across
+/// instances with [`PerceivedThroughput::absorb`]).
+#[derive(Clone, Debug, Default)]
+pub struct PerceivedThroughput {
+    samples: Vec<OpSample>,
+}
+
+/// An in-flight operation timer.
+pub struct OpTimer {
+    kind: OpKind,
+    step: u64,
+    instance: usize,
+    started: Instant,
+}
+
+impl PerceivedThroughput {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start timing an operation (wall clock).
+    pub fn start(&self, kind: OpKind, step: u64, instance: usize) -> OpTimer {
+        OpTimer { kind, step, instance, started: Instant::now() }
+    }
+
+    /// Finish a timed operation.
+    pub fn finish(&mut self, timer: OpTimer, bytes: u64) {
+        self.record(OpSample {
+            kind: timer.kind,
+            bytes,
+            seconds: timer.started.elapsed().as_secs_f64().max(1e-9),
+            step: timer.step,
+            instance: timer.instance,
+        });
+    }
+
+    /// Record a sample with an externally-measured duration (used by the
+    /// simulated benchmarks, where time is simulation time).
+    pub fn record(&mut self, sample: OpSample) {
+        self.samples.push(sample);
+    }
+
+    pub fn record_sim(
+        &mut self,
+        kind: OpKind,
+        bytes: u64,
+        seconds: f64,
+        step: u64,
+        instance: usize,
+    ) {
+        self.record(OpSample { kind, bytes, seconds, step, instance });
+    }
+
+    /// Merge another collector (e.g. from another instance thread).
+    pub fn absorb(&mut self, other: PerceivedThroughput) {
+        self.samples.extend(other.samples);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// The paper's aggregate: mean per-op perceived rate x number of
+    /// parallel instances ("scaled to the total amount of written data").
+    pub fn report(&self, kind: OpKind, instances: usize) -> ThroughputReport {
+        let ops: Vec<&OpSample> =
+            self.samples.iter().filter(|s| s.kind == kind).collect();
+        if ops.is_empty() {
+            return ThroughputReport::default();
+        }
+        let rates: Vec<f64> =
+            ops.iter().map(|s| s.bytes as f64 / s.seconds).collect();
+        let times: Vec<f64> = ops.iter().map(|s| s.seconds).collect();
+        let total_bytes: u64 = ops.iter().map(|s| s.bytes).sum();
+        let mean_rate = rates.iter().sum::<f64>() / rates.len() as f64;
+        ThroughputReport {
+            total_bytes,
+            ops: ops.len(),
+            mean_instance_rate: mean_rate,
+            aggregate_rate: mean_rate * instances as f64,
+            times: boxplot(&times),
+        }
+    }
+
+    /// Number of distinct steps with at least one sample of `kind`.
+    pub fn steps_seen(&self, kind: OpKind) -> usize {
+        let mut steps: Vec<u64> = self
+            .samples
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.step)
+            .collect();
+        steps.sort_unstable();
+        steps.dedup();
+        steps.len()
+    }
+
+    /// All operation durations of a kind (for boxplot figures).
+    pub fn durations(&self, kind: OpKind) -> Vec<f64> {
+        self.samples
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.seconds)
+            .collect()
+    }
+}
+
+/// Aggregated throughput numbers.
+#[derive(Clone, Debug)]
+pub struct ThroughputReport {
+    pub total_bytes: u64,
+    pub ops: usize,
+    /// Mean per-instance perceived rate, bytes/s.
+    pub mean_instance_rate: f64,
+    /// Scaled to all instances — the figure the paper plots.
+    pub aggregate_rate: f64,
+    /// Distribution of operation times (Fig. 7 / Fig. 9 boxplots).
+    pub times: BoxPlot,
+}
+
+impl Default for ThroughputReport {
+    fn default() -> Self {
+        ThroughputReport {
+            total_bytes: 0,
+            ops: 0,
+            mean_instance_rate: 0.0,
+            aggregate_rate: 0.0,
+            times: boxplot(&[0.0]),
+        }
+    }
+}
+
+/// Fraction-of-runtime accounting (the §4.1 "portion of the simulation
+/// time that the IO plugin requires").
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IoShare {
+    pub compute_seconds: f64,
+    pub raw_io_seconds: f64,
+    /// IO including host-side preparation/reorganization.
+    pub io_plugin_seconds: f64,
+}
+
+impl IoShare {
+    pub fn raw_fraction(&self) -> f64 {
+        let t = self.compute_seconds + self.io_plugin_seconds;
+        if t <= 0.0 { 0.0 } else { self.raw_io_seconds / t }
+    }
+
+    pub fn plugin_fraction(&self) -> f64 {
+        let t = self.compute_seconds + self.io_plugin_seconds;
+        if t <= 0.0 { 0.0 } else { self.io_plugin_seconds / t }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn report_math() {
+        let mut m = PerceivedThroughput::new();
+        // Two instances, two dumps each, 100 bytes per op.
+        m.record_sim(OpKind::Store, 100, 1.0, 0, 0);
+        m.record_sim(OpKind::Store, 100, 2.0, 0, 1);
+        m.record_sim(OpKind::Store, 100, 1.0, 1, 0);
+        m.record_sim(OpKind::Store, 100, 2.0, 1, 1);
+        let r = m.report(OpKind::Store, 2);
+        assert_eq!(r.total_bytes, 400);
+        assert_eq!(r.ops, 4);
+        // Rates: 100, 50, 100, 50 -> mean 75; aggregate 150.
+        assert!((r.mean_instance_rate - 75.0).abs() < 1e-9);
+        assert!((r.aggregate_rate - 150.0).abs() < 1e-9);
+        assert_eq!(m.steps_seen(OpKind::Store), 2);
+    }
+
+    #[test]
+    fn kinds_are_separate() {
+        let mut m = PerceivedThroughput::new();
+        m.record_sim(OpKind::Store, 10, 1.0, 0, 0);
+        m.record_sim(OpKind::Load, 99, 1.0, 0, 0);
+        assert_eq!(m.report(OpKind::Store, 1).total_bytes, 10);
+        assert_eq!(m.report(OpKind::Load, 1).total_bytes, 99);
+    }
+
+    #[test]
+    fn timer_measures_wall_clock() {
+        let mut m = PerceivedThroughput::new();
+        let t = m.start(OpKind::Load, 3, 1);
+        std::thread::sleep(Duration::from_millis(15));
+        m.finish(t, 1000);
+        let r = m.report(OpKind::Load, 1);
+        assert!(r.times.median >= 0.014, "{}", r.times.median);
+        assert!(r.times.median < 1.0);
+    }
+
+    #[test]
+    fn absorb_merges() {
+        let mut a = PerceivedThroughput::new();
+        a.record_sim(OpKind::Store, 1, 1.0, 0, 0);
+        let mut b = PerceivedThroughput::new();
+        b.record_sim(OpKind::Store, 2, 1.0, 1, 1);
+        a.absorb(b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.steps_seen(OpKind::Store), 2);
+    }
+
+    #[test]
+    fn io_share_fractions() {
+        let s = IoShare {
+            compute_seconds: 46.0,
+            raw_io_seconds: 44.0,
+            io_plugin_seconds: 54.0,
+        };
+        assert!((s.plugin_fraction() - 0.54).abs() < 1e-9);
+        assert!((s.raw_fraction() - 0.44).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_report_is_zero() {
+        let m = PerceivedThroughput::new();
+        let r = m.report(OpKind::Store, 8);
+        assert_eq!(r.ops, 0);
+        assert_eq!(r.aggregate_rate, 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! The L3 pipeline orchestrator (S11): loosely-coupled stages, the
+//! `openpmd-pipe` adaptor, and perceived-throughput metrics.
+//!
+//! A pipeline (Fig. 2) is a set of independent applications cooperating
+//! by data exchange: producer → (pipe/analysis/aggregation)* → sink. The
+//! orchestrator runs each stage instance on its own thread with its own
+//! engines — deliberately *processes-in-miniature*: no shared state
+//! besides the transport, exactly like the separate MPI contexts of the
+//! paper (and the TCP transport genuinely crosses process boundaries).
+
+pub mod metrics;
+pub mod pipe;
+
+pub use metrics::{OpKind, PerceivedThroughput, ThroughputReport};
+pub use pipe::{run_pipe, PipeOptions, PipeReport};

@@ -1,0 +1,282 @@
+//! `openpmd-pipe` (§4.1): the generic stream adaptor.
+//!
+//! "An openPMD-api based script that redirects any openPMD data from
+//! source to sink" — the identity transformation that turns streaming
+//! into asynchronous, node-aggregated file IO (SST+BP), converts between
+//! backends, or multiplexes a stream. This is the paper's POSIX-`tee`/
+//! `pipe` analogy, and the basis of its first benchmark.
+//!
+//! The pipe is engine-agnostic on both sides: any read-mode [`Engine`]
+//! in, any write-mode [`Engine`] out. Chunks pass through as written
+//! (perfect *alignment*); with multiple pipe instances, a distribution
+//! strategy decides which instance forwards which chunk.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::adios::engine::{Engine, StepStatus, VarDecl};
+use crate::distribution::{ChunkTable, ReaderLayout, Strategy};
+use crate::openpmd::chunk::Chunk;
+
+use super::metrics::{OpKind, PerceivedThroughput};
+
+/// Pipe configuration.
+pub struct PipeOptions {
+    /// This pipe instance's rank and the total instance count (a pipe
+    /// may be parallel, like any other stage).
+    pub rank: usize,
+    pub instances: usize,
+    /// Distribution strategy for selecting chunks when parallel
+    /// (ignored for a single instance, which forwards everything).
+    pub strategy: Box<dyn Strategy>,
+    /// Reader layout of the pipe stage (for topology-aware strategies).
+    pub layout: ReaderLayout,
+    /// Stop after this many steps (None = until end of stream).
+    pub max_steps: Option<u64>,
+    /// Give up if no step arrives for this long.
+    pub idle_timeout: Duration,
+}
+
+impl PipeOptions {
+    /// Single-instance pipe forwarding everything.
+    pub fn solo() -> PipeOptions {
+        PipeOptions {
+            rank: 0,
+            instances: 1,
+            strategy: Box::new(crate::distribution::RoundRobin),
+            layout: ReaderLayout::local(1),
+            max_steps: None,
+            idle_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// What the pipe did.
+#[derive(Debug, Default)]
+pub struct PipeReport {
+    pub steps: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub chunks: u64,
+    /// Load/store timing samples (perceived throughput accounting).
+    pub metrics: PerceivedThroughput,
+}
+
+/// Run the pipe until end-of-stream (or `max_steps`). The heart of the
+/// paper's first benchmark: `input` is typically an SST reader fed by
+/// the producers on this node; `output` a BP writer — giving streaming-
+/// based asynchronous IO with node-level aggregation "for free".
+pub fn run_pipe(
+    input: &mut dyn Engine,
+    output: &mut dyn Engine,
+    opts: PipeOptions,
+) -> Result<PipeReport> {
+    let mut report = PipeReport::default();
+    let deadline_budget = opts.idle_timeout;
+    let mut idle_since = std::time::Instant::now();
+
+    loop {
+        if let Some(max) = opts.max_steps {
+            if report.steps >= max {
+                break;
+            }
+        }
+        match input.begin_step()? {
+            StepStatus::Ok => {}
+            StepStatus::NotReady => {
+                if idle_since.elapsed() > deadline_budget {
+                    bail!("pipe idle for {deadline_budget:?}, giving up");
+                }
+                continue;
+            }
+            StepStatus::EndOfStream => break,
+            StepStatus::Discarded => continue,
+        }
+        idle_since = std::time::Instant::now();
+
+        let step = report.steps;
+        let out_status = output.begin_step()?;
+        if out_status == StepStatus::Discarded {
+            // Downstream backpressure: consume & drop this step.
+            input.end_step()?;
+            report.steps += 1;
+            continue;
+        }
+
+        // Forward attributes.
+        for name in input.attribute_names() {
+            if let Some(v) = input.attribute(&name) {
+                output.put_attribute(&name, v)?;
+            }
+        }
+
+        // Forward variables chunk-by-chunk, as written.
+        for var in input.available_variables() {
+            let chunks = input.available_chunks(&var.name);
+            let table = ChunkTable {
+                dataset_extent: var.shape.clone(),
+                chunks,
+            };
+            let decl =
+                VarDecl::new(var.name.clone(), var.dtype, var.shape.clone());
+            let mine: Vec<Chunk> = if opts.instances <= 1 {
+                table.chunks.iter().map(|c| c.chunk.clone()).collect()
+            } else {
+                let assignment =
+                    opts.strategy.distribute(&table, &opts.layout);
+                assignment
+                    .slices(opts.rank)
+                    .iter()
+                    .map(|s| s.chunk.clone())
+                    .collect()
+            };
+            for chunk in mine {
+                let t = report.metrics.start(OpKind::Load, step, opts.rank);
+                let data = input.get(&var.name, chunk.clone())?;
+                report.metrics.finish(t, data.len() as u64);
+                report.bytes_in += data.len() as u64;
+
+                let t = report.metrics.start(OpKind::Store, step, opts.rank);
+                let len = data.len() as u64;
+                output.put(&decl, chunk, data)?;
+                report.metrics.finish(t, len);
+                report.bytes_out += len;
+                report.chunks += 1;
+            }
+        }
+
+        input.end_step()?;
+        // The Store timing above measures `put` (buffering); the actual
+        // publish/flush happens here and is charged to a whole-step
+        // sample so file engines' write cost is visible.
+        let t = report.metrics.start(OpKind::Store, step, opts.rank);
+        output.end_step()?;
+        report.metrics.finish(t, 0);
+        report.steps += 1;
+    }
+    output.close()?;
+    input.close()?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::bp::{BpReader, BpWriter, WriterCtx};
+    use crate::adios::engine::cast;
+    use crate::adios::json::JsonWriter;
+    use crate::openpmd::types::Datatype;
+    use crate::openpmd::Attribute;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("opmd-pipe-{name}-{}", std::process::id()))
+    }
+
+    fn make_bp(path: &PathBuf, steps: u64) {
+        let mut w = BpWriter::create(path, WriterCtx {
+            rank: 1,
+            hostname: "src".into(),
+        })
+        .unwrap();
+        let var = VarDecl::new("/data/0/particles/e/weighting",
+                               Datatype::F32, vec![8]);
+        for s in 0..steps {
+            w.begin_step().unwrap();
+            w.put_attribute("/data/0/time", Attribute::F64(s as f64))
+                .unwrap();
+            let xs: Vec<f32> = (0..8).map(|i| (s * 8 + i) as f32).collect();
+            w.put(&var, Chunk::whole(vec![8]), cast::f32_to_bytes(&xs))
+                .unwrap();
+            w.end_step().unwrap();
+        }
+        w.close().unwrap();
+    }
+
+    #[test]
+    fn bp_to_bp_identity() {
+        let src = tmp("src.bp");
+        let dst = tmp("dst.bp");
+        make_bp(&src, 3);
+        let mut input = BpReader::open(&src).unwrap();
+        let mut output =
+            BpWriter::create(&dst, WriterCtx::default()).unwrap();
+        let report =
+            run_pipe(&mut input, &mut output, PipeOptions::solo()).unwrap();
+        assert_eq!(report.steps, 3);
+        assert_eq!(report.bytes_in, 3 * 8 * 4);
+        assert_eq!(report.bytes_in, report.bytes_out);
+
+        // Verify the copy's content.
+        let mut check = BpReader::open(&dst).unwrap();
+        for s in 0..3u64 {
+            assert_eq!(check.begin_step().unwrap(), StepStatus::Ok);
+            assert_eq!(
+                check.attribute("/data/0/time").unwrap().as_f64(),
+                Some(s as f64)
+            );
+            let data = check
+                .get("/data/0/particles/e/weighting", Chunk::whole(vec![8]))
+                .unwrap();
+            assert_eq!(cast::bytes_to_f32(&data)[0], (s * 8) as f32);
+            check.end_step().unwrap();
+        }
+        assert_eq!(check.begin_step().unwrap(), StepStatus::EndOfStream);
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+    }
+
+    #[test]
+    fn bp_to_json_backend_conversion() {
+        // The pipe as a format converter (one of the §4.1 enabled
+        // workflows).
+        let src = tmp("conv.bp");
+        let dstdir = tmp("conv-json");
+        make_bp(&src, 2);
+        let mut input = BpReader::open(&src).unwrap();
+        let mut output = JsonWriter::create(&dstdir, 0, "h").unwrap();
+        let report =
+            run_pipe(&mut input, &mut output, PipeOptions::solo()).unwrap();
+        assert_eq!(report.steps, 2);
+        assert!(dstdir.join("step-0.json").exists());
+        assert!(dstdir.join("step-1.json").exists());
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_dir_all(&dstdir).ok();
+    }
+
+    #[test]
+    fn max_steps_truncates() {
+        let src = tmp("trunc.bp");
+        let dst = tmp("trunc-out.bp");
+        make_bp(&src, 5);
+        let mut input = BpReader::open(&src).unwrap();
+        let mut output =
+            BpWriter::create(&dst, WriterCtx::default()).unwrap();
+        let mut opts = PipeOptions::solo();
+        opts.max_steps = Some(2);
+        let report = run_pipe(&mut input, &mut output, opts).unwrap();
+        assert_eq!(report.steps, 2);
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+    }
+
+    #[test]
+    fn metrics_capture_loads_and_stores() {
+        let src = tmp("metrics.bp");
+        let dst = tmp("metrics-out.bp");
+        make_bp(&src, 4);
+        let mut input = BpReader::open(&src).unwrap();
+        let mut output =
+            BpWriter::create(&dst, WriterCtx::default()).unwrap();
+        let report =
+            run_pipe(&mut input, &mut output, PipeOptions::solo()).unwrap();
+        let loads = report.metrics.report(OpKind::Load, 1);
+        assert_eq!(loads.ops, 4);
+        assert_eq!(loads.total_bytes, 4 * 32);
+        assert!(loads.mean_instance_rate > 0.0);
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+    }
+}

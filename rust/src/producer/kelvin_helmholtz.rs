@@ -1,0 +1,404 @@
+//! Kelvin–Helmholtz particle producer.
+//!
+//! PIConGPU's flagship weak-scaling case (Bussmann et al. 2013) is a
+//! relativistic Kelvin–Helmholtz instability. This producer initializes
+//! the classic KH setup — two counter-streaming shear layers with a
+//! seeded velocity perturbation in a periodic box — and advances it with
+//! the `pic_step` artifact (bilinear field gather + Boris push, lowered
+//! from JAX/Pallas; see `python/compile/`).
+//!
+//! The physics constants (`DT`, `QM`, `BOX`, `GRID`) are baked into the
+//! artifact at lowering time; the same values are mirrored here for the
+//! pure-rust fallback, and a test asserts artifact ↔ fallback agreement
+//! so the two can never drift apart silently.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::adios::engine::{cast, Engine, StepStatus};
+use crate::openpmd::chunk::Chunk;
+use crate::openpmd::record::ParticleSpecies;
+use crate::openpmd::series::{Iteration, Series};
+use crate::runtime::{Exec, Runtime};
+use crate::util::rng::Rng;
+
+/// Mirrors python/compile/model.py — keep in sync (tested).
+pub const DT: f32 = 0.05;
+pub const QM: f32 = -1.0;
+pub const BOX: [f32; 3] = [64.0, 64.0, 64.0];
+pub const GRID: usize = 64;
+/// Artifact batch size (python/compile/aot.py PIC_PARTICLES).
+pub const BATCH: usize = 16384;
+
+/// The producer state of one parallel rank.
+pub struct KhProducer {
+    /// Particles on this rank.
+    pub n: usize,
+    /// Interleaved [n, 3] row-major.
+    pub pos: Vec<f32>,
+    pub mom: Vec<f32>,
+    pub weights: Vec<f32>,
+    e_grid: Vec<f32>,
+    b_grid: Vec<f32>,
+    exec: Option<Arc<Exec>>,
+    pub rank: usize,
+    pub hostname: String,
+    /// This rank's offset in the global particle index space.
+    pub global_offset: u64,
+    /// Global particle count across all ranks.
+    pub global_n: u64,
+    step_count: u64,
+}
+
+impl KhProducer {
+    /// Initialize the KH state. `runtime` enables the PJRT path; without
+    /// it the pure-rust fallback is used (identical math).
+    pub fn new(
+        rank: usize,
+        hostname: &str,
+        n: usize,
+        global_offset: u64,
+        global_n: u64,
+        seed: u64,
+        runtime: Option<&Runtime>,
+    ) -> Result<KhProducer> {
+        let mut rng = Rng::new(seed ^ (rank as u64).wrapping_mul(0x9E37));
+        let mut pos = Vec::with_capacity(n * 3);
+        let mut mom = Vec::with_capacity(n * 3);
+        let weights = vec![1.0f32; n];
+        for _ in 0..n {
+            let x = rng.f32() * BOX[0];
+            let y = rng.f32() * BOX[1];
+            let z = rng.f32() * BOX[2];
+            pos.extend_from_slice(&[x, y, z]);
+            // Shear flow: +vx in the middle band, -vx outside, plus a
+            // seeded sinusoidal vy perturbation (KH trigger) and thermal
+            // jitter.
+            let dir = if y > BOX[1] * 0.25 && y < BOX[1] * 0.75 {
+                1.0
+            } else {
+                -1.0
+            };
+            let vx = dir * 0.5 + 0.02 * rng.normal() as f32;
+            let vy = 0.05
+                * (2.0 * std::f32::consts::PI * x / BOX[0] * 4.0).sin()
+                + 0.02 * rng.normal() as f32;
+            let vz = 0.02 * rng.normal() as f32;
+            mom.extend_from_slice(&[vx, vy, vz]);
+        }
+        // Static fields: uniform B_z plus a weak sinusoidal E pattern on
+        // the grid (PIConGPU's self-consistent field solve is out of
+        // scope — the IO system cannot tell, see DESIGN.md §5).
+        let g = GRID;
+        let mut e_grid = vec![0.0f32; g * g * 3];
+        let mut b_grid = vec![0.0f32; g * g * 3];
+        for i in 0..g {
+            for j in 0..g {
+                let idx = (i * g + j) * 3;
+                let x = i as f32 / g as f32;
+                let y = j as f32 / g as f32;
+                e_grid[idx] =
+                    0.05 * (2.0 * std::f32::consts::PI * y).sin();
+                e_grid[idx + 1] =
+                    0.05 * (2.0 * std::f32::consts::PI * x).cos();
+                b_grid[idx + 2] = 0.2;
+            }
+        }
+        let exec = match runtime {
+            Some(rt) => Some(rt.get("pic_step")?),
+            None => None,
+        };
+        Ok(KhProducer {
+            n,
+            pos,
+            mom,
+            weights,
+            e_grid,
+            b_grid,
+            exec,
+            rank,
+            hostname: hostname.to_string(),
+            global_offset,
+            global_n,
+            step_count: 0,
+        })
+    }
+
+    /// Advance one PIC step (through PJRT when available).
+    pub fn step(&mut self) -> Result<()> {
+        if let Some(exec) = self.exec.clone() {
+            self.step_pjrt(&exec)?;
+        } else {
+            self.step_fallback();
+        }
+        self.step_count += 1;
+        Ok(())
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.step_count
+    }
+
+    /// PJRT path: run the artifact in `BATCH`-sized slices, padding the
+    /// tail with particles parked at the origin with zero momentum
+    /// (their outputs are discarded).
+    fn step_pjrt(&mut self, exec: &Exec) -> Result<()> {
+        let mut i = 0;
+        while i < self.n {
+            let take = (self.n - i).min(BATCH);
+            let mut pos_b = vec![0.0f32; BATCH * 3];
+            let mut mom_b = vec![0.0f32; BATCH * 3];
+            pos_b[..take * 3]
+                .copy_from_slice(&self.pos[i * 3..(i + take) * 3]);
+            mom_b[..take * 3]
+                .copy_from_slice(&self.mom[i * 3..(i + take) * 3]);
+            let out = exec.run_f32(&[
+                &pos_b,
+                &mom_b,
+                &self.e_grid,
+                &self.b_grid,
+            ])?;
+            self.pos[i * 3..(i + take) * 3]
+                .copy_from_slice(&out[0][..take * 3]);
+            self.mom[i * 3..(i + take) * 3]
+                .copy_from_slice(&out[1][..take * 3]);
+            i += take;
+        }
+        Ok(())
+    }
+
+    /// Pure-rust fallback, bit-for-bit the same math as model.py.
+    fn step_fallback(&mut self) {
+        for p in 0..self.n {
+            let (e_f, b_f) = (
+                gather(&self.e_grid, &self.pos[p * 3..p * 3 + 3]),
+                gather(&self.b_grid, &self.pos[p * 3..p * 3 + 3]),
+            );
+            let m = &mut self.mom[p * 3..p * 3 + 3];
+            let h = 0.5 * QM * DT;
+            let vm = [m[0] + h * e_f[0], m[1] + h * e_f[1],
+                      m[2] + h * e_f[2]];
+            let t = [h * b_f[0], h * b_f[1], h * b_f[2]];
+            let t2 = t[0] * t[0] + t[1] * t[1] + t[2] * t[2];
+            let s = [2.0 * t[0] / (1.0 + t2), 2.0 * t[1] / (1.0 + t2),
+                     2.0 * t[2] / (1.0 + t2)];
+            let vp = [
+                vm[0] + vm[1] * t[2] - vm[2] * t[1],
+                vm[1] + vm[2] * t[0] - vm[0] * t[2],
+                vm[2] + vm[0] * t[1] - vm[1] * t[0],
+            ];
+            let vpl = [
+                vm[0] + vp[1] * s[2] - vp[2] * s[1],
+                vm[1] + vp[2] * s[0] - vp[0] * s[2],
+                vm[2] + vp[0] * s[1] - vp[1] * s[0],
+            ];
+            m[0] = vpl[0] + h * e_f[0];
+            m[1] = vpl[1] + h * e_f[1];
+            m[2] = vpl[2] + h * e_f[2];
+            for d in 0..3 {
+                let x = self.pos[p * 3 + d] + DT * m[d];
+                self.pos[p * 3 + d] = x - (x / BOX[d]).floor() * BOX[d];
+            }
+        }
+    }
+
+    /// Column `d` (0=x, 1=y, 2=z) of an interleaved [n,3] buffer.
+    fn column(buf: &[f32], d: usize) -> Vec<f32> {
+        buf.chunks_exact(3).map(|r| r[d]).collect()
+    }
+
+    /// Emit the current state as one openPMD iteration through `engine`.
+    /// Mirrors PIConGPU's openPMD plugin: species "e" with position,
+    /// momentum, weighting; one chunk per rank at this rank's offset.
+    pub fn write_iteration(
+        &self,
+        series: &mut Series,
+        engine: &mut dyn Engine,
+        index: u64,
+    ) -> Result<StepStatus> {
+        let mut it = Iteration::new(self.step_count as f64 * DT as f64,
+                                    DT as f64);
+        let mut species = ParticleSpecies::pic_layout(self.global_n);
+        let my_chunk = Chunk::new(vec![self.global_offset],
+                                  vec![self.n as u64]);
+        for (record, data) in [
+            ("position", &self.pos),
+            ("momentum", &self.mom),
+        ] {
+            let rec = species.records.get_mut(record).unwrap();
+            for (d, comp) in ["x", "y", "z"].iter().enumerate() {
+                rec.component_mut(comp)
+                    .unwrap()
+                    .store_chunk(
+                        my_chunk.clone(),
+                        cast::f32_to_bytes(&Self::column(data, d)),
+                    )
+                    .map_err(|e| anyhow::anyhow!(e))?;
+            }
+        }
+        species
+            .records
+            .get_mut("weighting")
+            .unwrap()
+            .components
+            .values_mut()
+            .next()
+            .unwrap()
+            .store_chunk(my_chunk, cast::f32_to_bytes(&self.weights))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        it.particles.insert("e".into(), species);
+        series.write_iteration(engine, index, &mut it)
+    }
+
+    /// Total kinetic energy (diagnostic; conserved without E-fields).
+    pub fn kinetic_energy(&self) -> f64 {
+        self.mom
+            .chunks_exact(3)
+            .map(|m| {
+                0.5 * (m[0] * m[0] + m[1] * m[1] + m[2] * m[2]) as f64
+            })
+            .sum()
+    }
+}
+
+/// Bilinear periodic gather on the [GRID, GRID, 3] x-y field —
+/// the rust mirror of model.py's `gather_fields`.
+fn gather(grid: &[f32], pos: &[f32]) -> [f32; 3] {
+    let g = GRID;
+    let u = pos[0] / BOX[0] * g as f32;
+    let v = pos[1] / BOX[1] * g as f32;
+    let u0f = u.floor();
+    let v0f = v.floor();
+    let fu = u - u0f;
+    let fv = v - v0f;
+    let u0 = (u0f as i64).rem_euclid(g as i64) as usize;
+    let v0 = (v0f as i64).rem_euclid(g as i64) as usize;
+    let u1 = (u0 + 1) % g;
+    let v1 = (v0 + 1) % g;
+    let at = |i: usize, j: usize, d: usize| grid[(i * g + j) * 3 + d];
+    let mut out = [0.0f32; 3];
+    for (d, o) in out.iter_mut().enumerate() {
+        *o = (1.0 - fu) * (1.0 - fv) * at(u0, v0, d)
+            + (1.0 - fu) * fv * at(u0, v1, d)
+            + fu * (1.0 - fv) * at(u1, v0, d)
+            + fu * fv * at(u1, v1, d);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn producer(n: usize) -> KhProducer {
+        KhProducer::new(0, "test", n, 0, n as u64, 42, None).unwrap()
+    }
+
+    #[test]
+    fn initial_state_is_in_box_with_shear() {
+        let p = producer(1000);
+        assert!(p.pos.iter().enumerate().all(|(i, &x)| {
+            x >= 0.0 && x < BOX[i % 3]
+        }));
+        // Mean |vx| must reflect the +-0.5 shear.
+        let mean_abs_vx: f32 = p
+            .mom
+            .chunks_exact(3)
+            .map(|m| m[0].abs())
+            .sum::<f32>()
+            / 1000.0;
+        assert!((mean_abs_vx - 0.5).abs() < 0.05, "{mean_abs_vx}");
+    }
+
+    #[test]
+    fn fallback_step_keeps_particles_in_box() {
+        let mut p = producer(500);
+        for _ in 0..20 {
+            p.step().unwrap();
+        }
+        assert_eq!(p.steps_taken(), 20);
+        assert!(p.pos.iter().enumerate().all(|(i, &x)| {
+            x >= 0.0 && x < BOX[i % 3]
+        }));
+    }
+
+    #[test]
+    fn pure_magnetic_fallback_conserves_energy() {
+        let mut p = producer(200);
+        p.e_grid.iter_mut().for_each(|x| *x = 0.0);
+        let e0 = p.kinetic_energy();
+        for _ in 0..50 {
+            p.step().unwrap();
+        }
+        let e1 = p.kinetic_energy();
+        assert!((e1 - e0).abs() / e0 < 1e-4, "{e0} -> {e1}");
+    }
+
+    #[test]
+    fn artifact_and_fallback_agree() {
+        // The critical cross-layer test: PJRT artifact == rust fallback.
+        let dir = Runtime::default_dir();
+        if !dir.join("meta.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let rt = Runtime::load(dir).unwrap();
+        let mut a =
+            KhProducer::new(0, "t", 300, 0, 300, 7, Some(&rt)).unwrap();
+        let mut b = KhProducer::new(0, "t", 300, 0, 300, 7, None).unwrap();
+        assert_eq!(a.pos, b.pos);
+        for _ in 0..5 {
+            a.step().unwrap();
+            b.step().unwrap();
+        }
+        for (x, y) in a.pos.iter().zip(&b.pos) {
+            assert!((x - y).abs() < 2e-3, "pos {x} vs {y}");
+        }
+        for (x, y) in a.mom.iter().zip(&b.mom) {
+            assert!((x - y).abs() < 2e-3, "mom {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn writes_valid_openpmd_iteration() {
+        use crate::adios::bp::{BpReader, BpWriter, WriterCtx};
+        let path = std::env::temp_dir()
+            .join(format!("kh-write-{}.bp", std::process::id()));
+        let p = producer(128);
+        let mut series = Series::new("test", "openpmd-stream");
+        let mut w = BpWriter::create(&path, WriterCtx {
+            rank: 0,
+            hostname: "test".into(),
+        })
+        .unwrap();
+        p.write_iteration(&mut series, &mut w, 0).unwrap();
+        w.close().unwrap();
+
+        let mut r = BpReader::open(&path).unwrap();
+        let (status, parsed) = Series::read_iteration(&mut r).unwrap();
+        assert_eq!(status, StepStatus::Ok);
+        let (idx, it) = parsed.unwrap();
+        assert_eq!(idx, 0);
+        let sp = &it.particles["e"];
+        assert_eq!(sp.records.len(), 3);
+        assert_eq!(
+            sp.records["position"].components["x"].dataset.extent,
+            vec![128]
+        );
+        // Validator agrees.
+        let findings =
+            crate::openpmd::validate::validate_iteration(0, &it);
+        assert!(crate::openpmd::validate::is_conformant(&findings),
+                "{findings:?}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn gather_constant_field() {
+        let grid = vec![2.0f32; GRID * GRID * 3];
+        let got = gather(&grid, &[13.7, 44.1, 0.0]);
+        for d in 0..3 {
+            assert!((got[d] - 2.0).abs() < 1e-6);
+        }
+    }
+}

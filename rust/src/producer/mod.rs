@@ -1,0 +1,17 @@
+//! Data producers (S12): the PIConGPU stand-ins.
+//!
+//! * [`kelvin_helmholtz`] — a real (small) particle-in-cell producer: a
+//!   Kelvin–Helmholtz shear-flow particle population evolved by the
+//!   AOT-compiled `pic_step` artifact (L1 Pallas Boris push inside),
+//!   with a bit-compatible pure-rust fallback for artifact-less builds.
+//!   Emits openPMD iterations exactly like PIConGPU's openPMD plugin.
+//! * [`synthetic`] — a data-shape-only producer for IO benchmarks:
+//!   emits correctly structured particle records of arbitrary size
+//!   without computing physics (the IO layer cannot tell the
+//!   difference, which is the point).
+
+pub mod kelvin_helmholtz;
+pub mod synthetic;
+
+pub use kelvin_helmholtz::KhProducer;
+pub use synthetic::SyntheticProducer;

@@ -1,0 +1,171 @@
+//! Synthetic producer: the data *shape* of PIConGPU without the physics.
+//!
+//! IO benchmarks (micro_transport, the real-engine parts of the
+//! examples) need realistic openPMD step structure at arbitrary sizes
+//! without paying for particle pushes. The synthetic producer emits the
+//! same species layout (`position`/`momentum`/`weighting`, one chunk per
+//! rank) with deterministic pseudo-random payloads, generated at memory
+//! bandwidth.
+
+use anyhow::Result;
+
+use crate::adios::engine::{Bytes, Engine, StepStatus, VarDecl};
+use crate::openpmd::chunk::Chunk;
+use crate::openpmd::series::var_name;
+use crate::openpmd::types::Datatype;
+use crate::openpmd::record::SCALAR;
+use crate::openpmd::Attribute;
+use crate::util::rng::Rng;
+
+/// Synthetic producer for one rank.
+pub struct SyntheticProducer {
+    pub rank: usize,
+    /// Particles this rank contributes per step.
+    pub n: usize,
+    pub global_offset: u64,
+    pub global_n: u64,
+    rng: Rng,
+    step: u64,
+    /// Reused payload buffer (regenerated per step, allocated once).
+    payload: Vec<f32>,
+}
+
+impl SyntheticProducer {
+    pub fn new(rank: usize, n: usize, global_offset: u64, global_n: u64,
+               seed: u64) -> Self {
+        SyntheticProducer {
+            rank,
+            n,
+            global_offset,
+            global_n,
+            rng: Rng::new(seed ^ rank as u64),
+            step: 0,
+            payload: vec![0.0; n],
+        }
+    }
+
+    /// Producer sized by bytes per step (7 f32 components per particle:
+    /// 3 position + 3 momentum + 1 weighting).
+    pub fn with_bytes_per_step(rank: usize, bytes: u64, ranks: usize,
+                               seed: u64) -> Self {
+        let n = (bytes / (7 * 4)).max(1) as usize;
+        let global_n = (n * ranks) as u64;
+        Self::new(rank, n, (rank * n) as u64, global_n, seed)
+    }
+
+    /// Bytes this producer writes per step.
+    pub fn bytes_per_step(&self) -> u64 {
+        self.n as u64 * 7 * 4
+    }
+
+    fn fill(&mut self, scale: f32) -> Bytes {
+        for x in self.payload.iter_mut() {
+            *x = self.rng.f32() * scale;
+        }
+        let mut out = Vec::with_capacity(self.payload.len() * 4);
+        for v in &self.payload {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        std::sync::Arc::new(out)
+    }
+
+    /// Write one step of openPMD-shaped particle data.
+    /// Returns the step status from the engine (discards propagate).
+    pub fn write_step(&mut self, engine: &mut dyn Engine)
+        -> Result<StepStatus>
+    {
+        match engine.begin_step()? {
+            StepStatus::Ok => {}
+            other => {
+                if other == StepStatus::Discarded {
+                    self.step += 1;
+                }
+                return Ok(other);
+            }
+        }
+        let idx = self.step;
+        engine.put_attribute(
+            &format!("/data/{idx}/time"),
+            Attribute::F64(idx as f64),
+        )?;
+        let chunk = Chunk::new(vec![self.global_offset],
+                               vec![self.n as u64]);
+        for record in ["position", "momentum"] {
+            for comp in ["x", "y", "z"] {
+                let decl = VarDecl::new(
+                    var_name(idx, "e", record, comp),
+                    Datatype::F32,
+                    vec![self.global_n],
+                );
+                let data = self.fill(64.0);
+                engine.put(&decl, chunk.clone(), data)?;
+            }
+        }
+        let decl = VarDecl::new(
+            var_name(idx, "e", "weighting", SCALAR),
+            Datatype::F32,
+            vec![self.global_n],
+        );
+        let data = self.fill(1.0);
+        engine.put(&decl, chunk, data)?;
+        engine.end_step()?;
+        self.step += 1;
+        Ok(StepStatus::Ok)
+    }
+
+    pub fn steps_written(&self) -> u64 {
+        self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::bp::{BpReader, BpWriter, WriterCtx};
+
+    #[test]
+    fn produces_seven_components_with_right_sizes() {
+        let path = std::env::temp_dir()
+            .join(format!("synth-{}.bp", std::process::id()));
+        let mut p = SyntheticProducer::new(0, 100, 0, 100, 1);
+        assert_eq!(p.bytes_per_step(), 100 * 28);
+        let mut w =
+            BpWriter::create(&path, WriterCtx::default()).unwrap();
+        p.write_step(&mut w).unwrap();
+        w.close().unwrap();
+
+        let mut r = BpReader::open(&path).unwrap();
+        r.begin_step().unwrap();
+        let vars = r.available_variables();
+        assert_eq!(vars.len(), 7);
+        assert!(vars.iter().all(|v| v.shape == vec![100]));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sizing_by_bytes() {
+        let p = SyntheticProducer::with_bytes_per_step(0, 28_000, 4, 2);
+        assert_eq!(p.n, 1000);
+        assert_eq!(p.global_n, 4000);
+        assert_eq!(p.bytes_per_step(), 28_000);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let path1 = std::env::temp_dir()
+            .join(format!("synth-d1-{}.bp", std::process::id()));
+        let path2 = std::env::temp_dir()
+            .join(format!("synth-d2-{}.bp", std::process::id()));
+        for p in [&path1, &path2] {
+            let mut prod = SyntheticProducer::new(3, 50, 0, 50, 99);
+            let mut w =
+                BpWriter::create(p, WriterCtx::default()).unwrap();
+            prod.write_step(&mut w).unwrap();
+            w.close().unwrap();
+        }
+        assert_eq!(std::fs::read(&path1).unwrap(),
+                   std::fs::read(&path2).unwrap());
+        std::fs::remove_file(&path1).ok();
+        std::fs::remove_file(&path2).ok();
+    }
+}

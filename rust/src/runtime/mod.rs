@@ -1,0 +1,296 @@
+//! PJRT runtime (S14): load and execute the AOT-lowered JAX/Pallas
+//! artifacts from the rust hot path.
+//!
+//! `make artifacts` runs python exactly once, producing
+//! `artifacts/<name>.hlo.txt` (HLO *text* — the interchange format the
+//! bundled xla_extension 0.5.1 accepts, see `python/compile/aot.py`) plus
+//! `artifacts/meta.json` with the fixed I/O shapes. This module compiles
+//! each artifact on the PJRT CPU client at startup; after that the binary
+//! is self-contained — python never runs at request time.
+//!
+//! Batching: the artifacts are lowered at fixed shapes (e.g. 4096 atoms).
+//! [`Exec::run_f32_padded`] pads the last batch with zero-weight entries,
+//! which is exact for every entry point (zero weight ⇒ zero contribution
+//! to the kinematic sum / histogram; padding particles in `pic_step` are
+//! simply discarded on output).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Shape metadata of one artifact entry point (from meta.json).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EntryMeta {
+    pub name: String,
+    pub inputs: Vec<Vec<u64>>,
+    pub outputs: Vec<Vec<u64>>,
+}
+
+impl EntryMeta {
+    fn from_json(name: &str, j: &Json) -> Result<EntryMeta> {
+        let shapes = |key: &str| -> Result<Vec<Vec<u64>>> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("{name}: missing {key}"))?
+                .iter()
+                .map(|s| {
+                    s.as_u64_vec().ok_or_else(|| {
+                        anyhow::anyhow!("{name}: bad shape in {key}")
+                    })
+                })
+                .collect()
+        };
+        Ok(EntryMeta {
+            name: name.to_string(),
+            inputs: shapes("inputs")?,
+            outputs: shapes("outputs")?,
+        })
+    }
+
+    /// Elements per input tensor.
+    pub fn input_elems(&self, i: usize) -> usize {
+        self.inputs[i].iter().product::<u64>() as usize
+    }
+
+    pub fn output_elems(&self, i: usize) -> usize {
+        self.outputs[i].iter().product::<u64>() as usize
+    }
+}
+
+/// One compiled artifact.
+pub struct Exec {
+    pub meta: EntryMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// PJRT executables are not re-entrant per instance; serialize calls.
+    lock: Mutex<()>,
+}
+
+impl Exec {
+    /// Execute with f32 inputs matching the artifact's exact shapes.
+    /// Returns the flattened f32 outputs.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: {} inputs given, artifact takes {}",
+                self.meta.name,
+                inputs.len(),
+                self.meta.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            let want = self.meta.input_elems(i);
+            if data.len() != want {
+                bail!(
+                    "{}: input {i} has {} elements, artifact wants {want}",
+                    self.meta.name,
+                    data.len()
+                );
+            }
+            let dims: Vec<i64> =
+                self.meta.inputs[i].iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let _guard = self.lock.lock().unwrap();
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        drop(_guard);
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: artifact returned {} outputs, meta says {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            let v = p.to_vec::<f32>()?;
+            if v.len() != self.meta.output_elems(i) {
+                bail!("{}: output {i} has wrong size", self.meta.name);
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// The artifact registry.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    execs: HashMap<String, Arc<Exec>>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Default artifacts directory: `$OPENPMD_STREAM_ARTIFACTS` or
+    /// `artifacts/` relative to the working directory.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("OPENPMD_STREAM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load and compile every artifact listed in `meta.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        if !meta_path.exists() {
+            bail!(
+                "no artifacts at {} — run `make artifacts` first \
+                 (python AOT lowering)",
+                dir.display()
+            );
+        }
+        let meta_text = std::fs::read_to_string(&meta_path)?;
+        let meta =
+            parse(&meta_text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        let obj = meta
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("meta.json is not an object"))?;
+
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut execs = HashMap::new();
+        for (name, entry) in obj {
+            let hlo = dir.join(format!("{name}.hlo.txt"));
+            if !hlo.exists() {
+                bail!("meta.json names {name} but {} is missing",
+                      hlo.display());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+            execs.insert(
+                name.clone(),
+                Arc::new(Exec {
+                    meta: EntryMeta::from_json(name, entry)?,
+                    exe,
+                    lock: Mutex::new(()),
+                }),
+            );
+        }
+        Ok(Runtime { client, execs, dir })
+    }
+
+    /// Load from the default directory.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(Self::default_dir())
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<Exec>> {
+        self.execs.get(name).cloned().ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact {name:?} not found in {} (have: {:?})",
+                self.dir.display(),
+                self.names()
+            )
+        })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.execs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        // Tests run from the crate root; artifacts exist once
+        // `make artifacts` ran. Skip (not fail) if absent so `cargo test`
+        // works on a fresh checkout.
+        let d = Runtime::default_dir();
+        d.join("meta.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn missing_dir_gives_actionable_error() {
+        match Runtime::load("/nonexistent-artifacts") {
+            Err(err) => {
+                assert!(format!("{err:#}").contains("make artifacts"))
+            }
+            Ok(_) => panic!("expected an error"),
+        }
+    }
+
+    #[test]
+    fn loads_all_artifacts() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load(dir).unwrap();
+        let names = rt.names();
+        for want in ["saxs", "pic_step", "binning"] {
+            assert!(names.iter().any(|n| n == want), "{names:?}");
+        }
+    }
+
+    #[test]
+    fn saxs_artifact_runs_and_matches_physics() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load(dir).unwrap();
+        let saxs = rt.get("saxs").unwrap();
+        let n = saxs.meta.input_elems(1); // [1, N] weights
+        let q = saxs.meta.output_elems(0);
+        // One atom at the origin with weight 1, all others weight 0:
+        // I(q) == 1 for every q.
+        let pos = vec![0.0f32; n * 3];
+        let mut w = vec![0.0f32; n];
+        w[0] = 1.0;
+        let mut q_t = vec![0.0f32; 3 * q];
+        for (i, x) in q_t.iter_mut().enumerate() {
+            *x = (i % 7) as f32 * 0.1;
+        }
+        let out = saxs.run_f32(&[&pos, &w, &q_t]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), q);
+        for (i, &v) in out[0].iter().enumerate() {
+            assert!((v - 1.0).abs() < 1e-4, "I(q[{i}]) = {v}");
+        }
+    }
+
+    #[test]
+    fn pic_step_artifact_conserves_momentum_without_fields() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load(dir).unwrap();
+        let pic = rt.get("pic_step").unwrap();
+        let n = pic.meta.inputs[0][0] as usize;
+        let g = pic.meta.inputs[2][0] as usize;
+        let pos: Vec<f32> = (0..n * 3).map(|i| (i % 64) as f32).collect();
+        let mom: Vec<f32> =
+            (0..n * 3).map(|i| ((i % 7) as f32 - 3.0) * 0.1).collect();
+        let zeros = vec![0.0f32; g * g * 3];
+        let out = pic.run_f32(&[&pos, &mom, &zeros, &zeros]).unwrap();
+        assert_eq!(out.len(), 2);
+        // Zero fields: momentum unchanged.
+        for (a, b) in out[1].iter().zip(&mom) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // Positions moved and stayed in the box.
+        assert!(out[0].iter().all(|&x| (0.0..64.0).contains(&x)));
+    }
+
+    #[test]
+    fn wrong_input_shapes_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load(dir).unwrap();
+        let saxs = rt.get("saxs").unwrap();
+        assert!(saxs.run_f32(&[&[0.0], &[0.0], &[0.0]]).is_err());
+        assert!(saxs.run_f32(&[&[0.0]]).is_err());
+        assert!(rt.get("nope").is_err());
+    }
+}

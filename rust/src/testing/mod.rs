@@ -1,0 +1,243 @@
+//! Mini property-testing framework (S17).
+//!
+//! proptest is not available offline, so the invariant tests for the
+//! distribution strategies use this: deterministic seeded generation, a
+//! configurable case count, and greedy input shrinking on failure. The
+//! API is intentionally tiny — `check(cases, gen, prop)`.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Max shrink attempts after a failure.
+    pub shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 200, seed: 0xC0FFEE, shrink_steps: 2000 }
+    }
+}
+
+/// Outcome of a property over one input.
+pub type PropResult = Result<(), String>;
+
+/// A value generator plus a shrinker.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller inputs, most aggressive first. Default: none.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `config.cases` generated inputs; panic with the
+/// (shrunk) counterexample on failure.
+pub fn check_with<G: Gen>(
+    config: Config,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> PropResult,
+) {
+    let mut rng = Rng::new(config.seed);
+    for case in 0..config.cases {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink greedily: take the first failing candidate, repeat.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = config.shrink_steps;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&best) {
+                    budget = budget.saturating_sub(1);
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed at case {case} (seed {:#x}):\n  {}\n  \
+                 counterexample: {:?}",
+                config.seed, best_msg, best
+            );
+        }
+    }
+}
+
+/// [`check_with`] under the default config.
+pub fn check<G: Gen>(gen: &G, prop: impl Fn(&G::Value) -> PropResult) {
+    check_with(Config::default(), gen, prop)
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+// ----------------------------------------------------------------------
+// Stock generators
+// ----------------------------------------------------------------------
+
+/// Uniform usize in [lo, hi]; shrinks toward lo.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.range(self.0, self.1 + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        // Geometric ladder from lo toward v (most aggressive first), so a
+        // greedy first-failure walk converges to the boundary in
+        // O(log^2) steps instead of descending linearly.
+        let mut out = Vec::new();
+        if *v <= self.0 {
+            return out;
+        }
+        out.push(self.0);
+        let k = *v - self.0;
+        let mut step = k / 2;
+        while step > 0 {
+            out.push(v - step);
+            step /= 2;
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Pair of independent generators; shrinks each side.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        for a in self.0.shrink(&v.0) {
+            out.push((a, v.1.clone()));
+        }
+        for b in self.1.shrink(&v.1) {
+            out.push((v.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// Vec of values with random length in [0, max_len]; shrinks by halving
+/// and element-dropping.
+pub struct VecOf<G> {
+    pub item: G,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = rng.range(0, self.max_len + 1);
+        (0..n).map(|_| self.item.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.is_empty() {
+            return out;
+        }
+        out.push(v[..v.len() / 2].to_vec());
+        if v.len() > 1 {
+            out.push(v[1..].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        // Shrink one element.
+        for (i, item) in v.iter().enumerate().take(4) {
+            for s in self.item.shrink(item) {
+                let mut copy = v.clone();
+                copy[i] = s;
+                out.push(copy);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(&UsizeRange(1, 100), |&x| {
+            prop_assert!(x >= 1 && x <= 100, "range violated: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample")]
+    fn failing_property_panics_with_counterexample() {
+        check(&UsizeRange(0, 1000), |&x| {
+            prop_assert!(x < 500, "too big: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrinking_reaches_minimal_case() {
+        // Capture the panic message and verify the counterexample is the
+        // boundary value 500, not an arbitrary large one.
+        let result = std::panic::catch_unwind(|| {
+            check(&UsizeRange(0, 100_000), |&x| {
+                prop_assert!(x < 500, "too big: {x}");
+                Ok(())
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("counterexample: 500"), "msg: {msg}");
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        check(&VecOf { item: UsizeRange(5, 9), max_len: 13 }, |v| {
+            prop_assert!(v.len() <= 13, "len {}", v.len());
+            prop_assert!(v.iter().all(|&x| (5..=9).contains(&x)),
+                         "range violated: {v:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let mut got = Vec::new();
+            let mut rng = Rng::new(seed);
+            let g = UsizeRange(0, 1 << 20);
+            for _ in 0..20 {
+                got.push(g.generate(&mut rng));
+            }
+            got
+        };
+        assert_eq!(collect(42), collect(42));
+        assert_ne!(collect(42), collect(43));
+    }
+}

@@ -1,0 +1,102 @@
+//! Byte-size parsing and formatting (binary units, as used throughout the
+//! paper: GiB, TiB). Also rate formatting for throughput tables.
+
+/// Binary unit constants.
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+pub const TIB: u64 = 1 << 40;
+pub const PIB: u64 = 1 << 50;
+
+/// Format a byte count with binary units, e.g. `9.14 GiB`.
+pub fn fmt_bytes(bytes: u64) -> String {
+    fmt_bytes_f(bytes as f64)
+}
+
+/// Float variant (for averaged values).
+pub fn fmt_bytes_f(bytes: f64) -> String {
+    let abs = bytes.abs();
+    if abs >= PIB as f64 {
+        format!("{:.2} PiB", bytes / PIB as f64)
+    } else if abs >= TIB as f64 {
+        format!("{:.2} TiB", bytes / TIB as f64)
+    } else if abs >= GIB as f64 {
+        format!("{:.2} GiB", bytes / GIB as f64)
+    } else if abs >= MIB as f64 {
+        format!("{:.2} MiB", bytes / MIB as f64)
+    } else if abs >= KIB as f64 {
+        format!("{:.2} KiB", bytes / KIB as f64)
+    } else {
+        format!("{} B", bytes as i64)
+    }
+}
+
+/// Format a rate in bytes/second, e.g. `4.15 TiB/s`.
+pub fn fmt_rate(bytes_per_s: f64) -> String {
+    format!("{}/s", fmt_bytes_f(bytes_per_s))
+}
+
+/// Parse a human byte size: `"9.14GiB"`, `"512 MiB"`, `"1024"` (bytes),
+/// `"2.5 TiB"`. Case-insensitive; accepts decimal (`GB`) as binary for
+/// convenience since the paper uses binary units throughout.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    let split = t
+        .find(|c: char| c.is_ascii_alphabetic())
+        .unwrap_or(t.len());
+    let (num, unit) = t.split_at(split);
+    let value: f64 = num
+        .trim()
+        .parse()
+        .map_err(|e| format!("bad byte size {s:?}: {e}"))?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => KIB,
+        "m" | "mb" | "mib" => MIB,
+        "g" | "gb" | "gib" => GIB,
+        "t" | "tb" | "tib" => TIB,
+        "p" | "pb" | "pib" => PIB,
+        other => return Err(format!("unknown byte unit {other:?} in {s:?}")),
+    };
+    if value < 0.0 {
+        return Err(format!("negative byte size {s:?}"));
+    }
+    Ok((value * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_round_trip_magnitudes() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2 * KIB), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * MIB), "3.00 MiB");
+        assert_eq!(fmt_bytes(9 * GIB + 143 * MIB), "9.14 GiB");
+        assert_eq!(fmt_bytes(2 * TIB + TIB / 2), "2.50 TiB");
+        assert_eq!(fmt_bytes(250 * PIB), "250.00 PiB");
+    }
+
+    #[test]
+    fn parses_units() {
+        assert_eq!(parse_bytes("1024").unwrap(), 1024);
+        assert_eq!(parse_bytes("2 KiB").unwrap(), 2048);
+        assert_eq!(parse_bytes("9.14GiB").unwrap(),
+                   (9.14 * GIB as f64).round() as u64);
+        assert_eq!(parse_bytes("2.5 tib").unwrap(),
+                   (2.5 * TIB as f64).round() as u64);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_bytes("lots").is_err());
+        assert!(parse_bytes("12 XiB").is_err());
+        assert!(parse_bytes("-3 GiB").is_err());
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(fmt_rate(4.15 * TIB as f64), "4.15 TiB/s");
+    }
+}

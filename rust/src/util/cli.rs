@@ -1,0 +1,236 @@
+//! Hand-rolled command-line parsing (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`,
+//! positional arguments, typed accessors with defaults, and an
+//! auto-generated `--help`. Enough for a launcher, deliberately not more.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative option specification for help text + validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub value_name: Option<&'static str>,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// A parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub program: String,
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// Parse error with a user-facing message.
+#[derive(Debug, thiserror::Error)]
+#[error("{0}")]
+pub struct CliError(pub String);
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding or including argv[0],
+    /// controlled by `has_program`).
+    pub fn parse_from<I, S>(args: I, has_subcommand: bool) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut it = args.into_iter().map(Into::into).peekable();
+        let program = it.next().unwrap_or_else(|| "openpmd-stream".into());
+        let mut out = Args { program, ..Default::default() };
+        if has_subcommand {
+            if let Some(next) = it.peek() {
+                if !next.starts_with('-') {
+                    out.subcommand = it.next();
+                }
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional.
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if arg.starts_with('-') && arg.len() > 1 {
+                return Err(CliError(format!(
+                    "short options are not supported: {arg:?}"
+                )));
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process command line.
+    pub fn from_env(has_subcommand: bool) -> Result<Args, CliError> {
+        Args::parse_from(std::env::args(), has_subcommand)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+    ) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|e| {
+                CliError(format!("invalid value for --{name}: {v:?} ({e})"))
+            }),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    /// Error on unknown options (call after all accesses are declared).
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<(), CliError> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                return Err(CliError(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Render a help screen from option specs.
+pub fn render_help(
+    program: &str,
+    about: &str,
+    usage: &str,
+    opts: &[OptSpec],
+) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{program} — {about}\n");
+    let _ = writeln!(s, "USAGE:\n    {usage}\n");
+    if !opts.is_empty() {
+        let _ = writeln!(s, "OPTIONS:");
+        for o in opts {
+            let left = match o.value_name {
+                Some(v) => format!("--{} <{}>", o.name, v),
+                None => format!("--{}", o.name),
+            };
+            let default = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "    {left:<28} {}{default}", o.help);
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], sub: bool) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()), sub).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags_positional() {
+        let a = parse(
+            &["prog", "bench", "--nodes", "512", "--verbose",
+              "--out=x.csv", "input.bp"],
+            true,
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get("nodes"), Some("512"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["input.bp"]);
+    }
+
+    #[test]
+    fn typed_access_and_defaults() {
+        let a = parse(&["prog", "--nodes", "64"], false);
+        assert_eq!(a.get_parse_or("nodes", 8usize).unwrap(), 64);
+        assert_eq!(a.get_parse_or("gpus", 6usize).unwrap(), 6);
+        assert!(a.get_parse::<usize>("missing").unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_typed_value_is_an_error() {
+        let a = parse(&["prog", "--nodes", "lots"], false);
+        assert!(a.get_parse::<usize>("nodes").is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse(&["prog", "--", "--not-an-option"], false);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["prog", "--fast"], false);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn unknown_rejection() {
+        let a = parse(&["prog", "--typo", "1"], false);
+        assert!(a.reject_unknown(&["nodes"]).is_err());
+        assert!(a.reject_unknown(&["typo"]).is_ok());
+    }
+
+    #[test]
+    fn short_options_rejected() {
+        assert!(Args::parse_from(
+            ["prog", "-n"].iter().map(|s| s.to_string()), false).is_err());
+    }
+
+    #[test]
+    fn help_rendering_contains_options() {
+        let h = render_help(
+            "openpmd-stream",
+            "streaming pipelines",
+            "openpmd-stream bench [OPTIONS]",
+            &[OptSpec { name: "nodes", value_name: Some("N"),
+                        default: Some("64"), help: "node count" }],
+        );
+        assert!(h.contains("--nodes <N>"));
+        assert!(h.contains("[default: 64]"));
+    }
+}

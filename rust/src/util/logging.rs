@@ -1,0 +1,140 @@
+//! Minimal leveled logger writing to stderr.
+//!
+//! The `log` facade crate is vendored but no logger implementation is, so
+//! the coordinator ships its own: a global level filter, per-component
+//! prefixes and elapsed-time stamps. Deliberately tiny — it exists so the
+//! SST wire protocol and the DES can be traced when debugging, not to be a
+//! logging framework.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+/// Severity levels, ascending.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Trace => "TRACE",
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO",
+            Level::Warn => "WARN",
+            Level::Error => "ERROR",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "trace" => Some(Level::Trace),
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+/// Set the global level. Also reads `OPENPMD_STREAM_LOG` at first use via
+/// [`init_from_env`].
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current global level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Trace,
+        1 => Level::Debug,
+        2 => Level::Info,
+        3 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+/// Initialise from the `OPENPMD_STREAM_LOG` environment variable.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("OPENPMD_STREAM_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+}
+
+/// Core log call; prefer the macros.
+pub fn log(lvl: Level, component: &str, msg: std::fmt::Arguments<'_>) {
+    if lvl >= level() {
+        let t = START.elapsed().as_secs_f64();
+        eprintln!("[{t:>10.4}s {:<5} {component}] {msg}", lvl.as_str());
+    }
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Trace,
+                                   $component, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug,
+                                   $component, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info,
+                                   $component, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn,
+                                   $component, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error,
+                                   $component, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn levels_are_ordered() {
+        assert!(Level::Trace < Level::Debug);
+        assert!(Level::Warn < Level::Error);
+    }
+}

@@ -1,0 +1,43 @@
+//! Support substrates: RNG, statistics, CLI parsing, byte formatting,
+//! logging. All hand-built — the build environment is offline, so the
+//! usual crates (rand, clap, criterion) are not available.
+
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+
+/// Monotonic wall-clock helper used by metrics and benches.
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+/// Format a `Duration` human-readably (`1.23 s`, `45.6 ms`, `789 µs`).
+pub fn fmt_duration(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{:.2} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1} µs", s * 1e6)
+    } else {
+        format!("{} ns", d.as_nanos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn durations_format_by_magnitude() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00 s");
+        assert_eq!(fmt_duration(Duration::from_millis(12)), "12.00 ms");
+        assert_eq!(fmt_duration(Duration::from_micros(7)), "7.0 µs");
+        assert_eq!(fmt_duration(Duration::from_nanos(42)), "42 ns");
+    }
+}

@@ -1,0 +1,221 @@
+//! Descriptive statistics for the benchmark harness: quantiles, boxplot
+//! summaries with the paper's whisker convention (Fig. 7/9: whiskers at the
+//! furthest sample within 1.5·IQR of the quartiles, everything beyond is an
+//! outlier), and streaming mean/min/max accumulators.
+
+/// Five-number boxplot summary plus outliers, matching the paper's figures.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BoxPlot {
+    pub min: f64,
+    pub lower_whisker: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub upper_whisker: f64,
+    pub max: f64,
+    /// Samples outside the whiskers, ascending.
+    pub outliers: Vec<f64>,
+    pub n: usize,
+}
+
+/// Linear-interpolation quantile (type 7, the numpy default).
+/// `xs` must be sorted ascending and non-empty.
+pub fn quantile_sorted(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (xs.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        xs[lo]
+    } else {
+        let frac = pos - lo as f64;
+        xs[lo] * (1.0 - frac) + xs[hi] * frac
+    }
+}
+
+/// Compute a [`BoxPlot`] from unsorted samples.
+pub fn boxplot(samples: &[f64]) -> BoxPlot {
+    assert!(!samples.is_empty(), "boxplot of empty slice");
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+    let q1 = quantile_sorted(&xs, 0.25);
+    let median = quantile_sorted(&xs, 0.50);
+    let q3 = quantile_sorted(&xs, 0.75);
+    let iqr = q3 - q1;
+    let lo_fence = q1 - 1.5 * iqr;
+    let hi_fence = q3 + 1.5 * iqr;
+    // Whisker = furthest sample still inside the fence (paper's convention).
+    let lower_whisker = *xs.iter().find(|&&x| x >= lo_fence).unwrap_or(&xs[0]);
+    let upper_whisker = *xs
+        .iter()
+        .rev()
+        .find(|&&x| x <= hi_fence)
+        .unwrap_or(xs.last().unwrap());
+    let outliers = xs
+        .iter()
+        .copied()
+        .filter(|&x| x < lower_whisker || x > upper_whisker)
+        .collect();
+    BoxPlot {
+        min: xs[0],
+        lower_whisker,
+        q1,
+        median,
+        q3,
+        upper_whisker,
+        max: *xs.last().unwrap(),
+        outliers,
+        n: xs.len(),
+    }
+}
+
+impl BoxPlot {
+    /// One-line rendering used by the bench tables.
+    pub fn render(&self) -> String {
+        format!(
+            "n={:<5} min={:<8.3} w-={:<8.3} q1={:<8.3} med={:<8.3} q3={:<8.3} w+={:<8.3} max={:<8.3} outliers={}",
+            self.n,
+            self.min,
+            self.lower_whisker,
+            self.q1,
+            self.median,
+            self.q3,
+            self.upper_whisker,
+            self.max,
+            self.outliers.len()
+        )
+    }
+}
+
+/// Streaming summary accumulator (no allocation per sample).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: usize,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, sum: 0.0, sum_sq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.sum / self.n as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        ((self.sum_sq / self.n as f64 - m * m).max(0.0)).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+}
+
+/// Mean of a slice; NaN if empty.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Median of an unsorted slice.
+pub fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, 0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_match_numpy_type7() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(quantile_sorted(&xs, 1.0), 4.0);
+        assert_eq!(quantile_sorted(&xs, 0.5), 2.5);
+        assert!((quantile_sorted(&xs, 0.25) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boxplot_without_outliers() {
+        let xs: Vec<f64> = (1..=11).map(|i| i as f64).collect();
+        let b = boxplot(&xs);
+        assert_eq!(b.median, 6.0);
+        assert_eq!(b.q1, 3.5);
+        assert_eq!(b.q3, 8.5);
+        assert_eq!(b.lower_whisker, 1.0);
+        assert_eq!(b.upper_whisker, 11.0);
+        assert!(b.outliers.is_empty());
+    }
+
+    #[test]
+    fn boxplot_flags_outliers_beyond_1p5_iqr() {
+        let mut xs: Vec<f64> = (1..=11).map(|i| i as f64).collect();
+        xs.push(100.0);
+        let b = boxplot(&xs);
+        assert_eq!(b.outliers, vec![100.0]);
+        assert!(b.upper_whisker <= 11.0);
+        assert_eq!(b.max, 100.0);
+    }
+
+    #[test]
+    fn boxplot_single_sample() {
+        let b = boxplot(&[5.0]);
+        assert_eq!(b.median, 5.0);
+        assert_eq!(b.min, 5.0);
+        assert_eq!(b.max, 5.0);
+        assert!(b.outliers.is_empty());
+    }
+
+    #[test]
+    fn summary_mean_std() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert_eq!(s.mean(), 5.0);
+        assert!((s.std() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.n(), 8);
+    }
+
+    #[test]
+    fn median_of_even_and_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+}

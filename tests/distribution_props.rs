@@ -1,0 +1,285 @@
+//! Property-based tests for the §3 distribution strategies, using the
+//! in-repo mini property-testing framework (proptest is unavailable
+//! offline). Invariants:
+//!
+//! * completeness — every written element is assigned exactly once
+//!   (all strategies, any input);
+//! * binpacking — no reader exceeds 2x the ideal volume;
+//! * hyperslabs — per-reader volume within one row of ideal;
+//! * round-robin — slices are exactly the written chunks;
+//! * by-hostname — co-scheduled layouts yield 100% locality.
+
+use openpmd_stream::distribution::{
+    by_name, metrics, verify_complete, Binpacking, ByHostname, ChunkTable,
+    Hyperslabs, ReaderLayout, RoundRobin, Strategy,
+};
+use openpmd_stream::openpmd::chunk::{Chunk, WrittenChunkInfo};
+use openpmd_stream::prop_assert;
+use openpmd_stream::testing::{check_with, Config, Gen};
+use openpmd_stream::util::rng::Rng;
+
+/// A random distribution problem: chunk table + reader layout.
+#[derive(Clone, Debug)]
+struct Problem {
+    table: ChunkTable,
+    readers: ReaderLayout,
+    /// True when writers and readers share hostnames node-for-node.
+    co_scheduled: bool,
+}
+
+struct ProblemGen {
+    max_nodes: usize,
+    max_writers_per_node: usize,
+    max_chunk: u64,
+}
+
+impl Gen for ProblemGen {
+    type Value = Problem;
+
+    fn generate(&self, rng: &mut Rng) -> Problem {
+        let nodes = rng.range(1, self.max_nodes + 1);
+        let writers_per_node = rng.range(1, self.max_writers_per_node + 1);
+        let co_scheduled = rng.chance(0.5);
+        let readers_per_node = rng.range(1, 4);
+
+        let mut chunks = Vec::new();
+        let mut off = 0u64;
+        for node in 0..nodes {
+            for w in 0..writers_per_node {
+                // Some writers contribute several chunks, some none.
+                let n_chunks = rng.range(0, 3);
+                for _ in 0..n_chunks {
+                    let size = rng.below(self.max_chunk) + 1;
+                    chunks.push(WrittenChunkInfo::new(
+                        Chunk::new(vec![off], vec![size]),
+                        node * writers_per_node + w,
+                        format!("node{node:04}"),
+                    ));
+                    off += size;
+                }
+            }
+        }
+        let readers = if co_scheduled {
+            ReaderLayout::nodes(nodes, readers_per_node)
+        } else {
+            // Readers on a disjoint or partially overlapping node set.
+            let reader_nodes = rng.range(1, nodes + 2);
+            let mut l = ReaderLayout::nodes(reader_nodes, readers_per_node);
+            if rng.chance(0.5) {
+                for r in l.ranks.iter_mut() {
+                    r.hostname = format!("other-{}", r.hostname);
+                }
+            }
+            l
+        };
+        Problem {
+            table: ChunkTable { dataset_extent: vec![off], chunks },
+            readers,
+            co_scheduled,
+        }
+    }
+
+    fn shrink(&self, p: &Problem) -> Vec<Problem> {
+        let mut out = Vec::new();
+        // Fewer chunks.
+        if !p.table.chunks.is_empty() {
+            for cut in [p.table.chunks.len() / 2, p.table.chunks.len() - 1] {
+                let mut q = p.clone();
+                q.table.chunks.truncate(cut);
+                q.table.dataset_extent = vec![q
+                    .table
+                    .chunks
+                    .iter()
+                    .map(|c| c.chunk.offset[0] + c.chunk.extent[0])
+                    .max()
+                    .unwrap_or(0)];
+                out.push(q);
+            }
+        }
+        // Fewer readers.
+        if p.readers.ranks.len() > 1 {
+            let mut q = p.clone();
+            q.readers.ranks.truncate(p.readers.ranks.len() / 2);
+            out.push(q);
+        }
+        out
+    }
+}
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0x5EED_2021, shrink_steps: 500 }
+}
+
+fn gen() -> ProblemGen {
+    ProblemGen { max_nodes: 6, max_writers_per_node: 4, max_chunk: 1000 }
+}
+
+fn all_strategies() -> Vec<Box<dyn Strategy>> {
+    vec![
+        Box::new(RoundRobin),
+        Box::new(Hyperslabs),
+        Box::new(Binpacking),
+        Box::new(ByHostname::paper_default()),
+        by_name("hostname:roundrobin:hyperslabs").unwrap(),
+    ]
+}
+
+#[test]
+fn all_strategies_are_complete() {
+    check_with(cfg(150), &gen(), |p| {
+        for strat in all_strategies() {
+            let a = strat.distribute(&p.table, &p.readers);
+            if let Err(e) = verify_complete(&p.table, &a) {
+                return Err(format!("{}: {e}", strat.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn binpacking_never_exceeds_double_ideal() {
+    check_with(cfg(150), &gen(), |p| {
+        if p.readers.is_empty() || p.table.chunks.is_empty() {
+            return Ok(());
+        }
+        let a = Binpacking.distribute(&p.table, &p.readers);
+        let ideal = p
+            .table
+            .total_elements()
+            .div_ceil(p.readers.len() as u64);
+        for r in &p.readers.ranks {
+            let load = a.elements_for(r.rank);
+            prop_assert!(
+                load <= 2 * ideal,
+                "reader {} got {load}, ideal {ideal}",
+                r.rank
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hyperslabs_balance_within_one_row_equivalent() {
+    check_with(cfg(150), &gen(), |p| {
+        if p.readers.is_empty() {
+            return Ok(());
+        }
+        let a = Hyperslabs.distribute(&p.table, &p.readers);
+        let rows = p.table.dataset_extent[0];
+        let n = p.readers.len() as u64;
+        // Every reader's *slab* is balanced; its assigned volume is the
+        // slab intersected with written chunks, which here tile the slab
+        // fully, so volumes differ by at most one row-equivalent.
+        let max = p
+            .readers
+            .ranks
+            .iter()
+            .map(|r| a.elements_for(r.rank))
+            .max()
+            .unwrap();
+        let min = p
+            .readers
+            .ranks
+            .iter()
+            .map(|r| a.elements_for(r.rank))
+            .min()
+            .unwrap();
+        let row_equiv = rows.div_ceil(n.max(1)) + 1;
+        prop_assert!(
+            max - min <= row_equiv,
+            "imbalance {max}-{min} > {row_equiv}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn round_robin_preserves_written_chunks_exactly() {
+    check_with(cfg(150), &gen(), |p| {
+        if p.readers.is_empty() {
+            return Ok(());
+        }
+        let a = RoundRobin.distribute(&p.table, &p.readers);
+        let assigned = a.total_slices();
+        prop_assert!(
+            assigned == p.table.chunks.len(),
+            "{assigned} slices for {} chunks",
+            p.table.chunks.len()
+        );
+        for slices in a.per_reader.values() {
+            for s in slices {
+                prop_assert!(
+                    p.table.chunks.iter().any(|c| c.chunk == s.chunk
+                        && c.source_rank == s.source_rank),
+                    "slice {:?} is not a written chunk",
+                    s.chunk
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn by_hostname_is_fully_local_when_co_scheduled() {
+    check_with(cfg(150), &gen(), |p| {
+        if !p.co_scheduled || p.table.chunks.is_empty() {
+            return Ok(());
+        }
+        let a = ByHostname::paper_default().distribute(&p.table, &p.readers);
+        let q = metrics::quality(&p.table, &p.readers, &a);
+        prop_assert!(
+            (q.locality_fraction - 1.0).abs() < 1e-12,
+            "locality {} < 1 on co-scheduled layout",
+            q.locality_fraction
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn slices_stay_within_their_source_chunks() {
+    // No strategy may fabricate data: every slice must be contained in a
+    // written chunk of the same source rank.
+    check_with(cfg(100), &gen(), |p| {
+        for strat in all_strategies() {
+            let a = strat.distribute(&p.table, &p.readers);
+            for slices in a.per_reader.values() {
+                for s in slices {
+                    let ok = p.table.chunks.iter().any(|c| {
+                        c.source_rank == s.source_rank
+                            && c.chunk.contains(&s.chunk)
+                    });
+                    prop_assert!(
+                        ok,
+                        "{}: slice {:?} (rank {}) outside written chunks",
+                        strat.name(),
+                        s.chunk,
+                        s.source_rank
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn assignments_are_deterministic() {
+    check_with(cfg(50), &gen(), |p| {
+        for strat in all_strategies() {
+            let a = strat.distribute(&p.table, &p.readers);
+            let b = strat.distribute(&p.table, &p.readers);
+            for r in &p.readers.ranks {
+                prop_assert!(
+                    a.slices(r.rank) == b.slices(r.rank),
+                    "{} is nondeterministic",
+                    strat.name()
+                );
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,428 @@
+//! Integration tests for the SST staging engine: writer/reader pairs over
+//! both transports, queue policies, multi-writer streams, openPMD series
+//! round trips, and failure injection.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use openpmd_stream::adios::engine::{cast, Engine, StepStatus, VarDecl};
+use openpmd_stream::adios::sst::{
+    QueueConfig, QueueFullPolicy, SstReader, SstReaderOptions, SstWriter,
+    SstWriterOptions, WriterGroup,
+};
+use openpmd_stream::openpmd::chunk::Chunk;
+use openpmd_stream::openpmd::types::Datatype;
+use openpmd_stream::openpmd::Attribute;
+
+fn writer_opts(transport: &str, rank: usize, host: &str)
+    -> SstWriterOptions
+{
+    SstWriterOptions {
+        listen: String::new(), // auto
+        transport: transport.into(),
+        rank,
+        hostname: host.into(),
+        queue: QueueConfig { policy: QueueFullPolicy::Block, limit: 4 },
+        group: None,
+        ..Default::default()
+    }
+}
+
+fn reader_opts(transport: &str, writers: Vec<String>) -> SstReaderOptions {
+    SstReaderOptions {
+        writers,
+        transport: transport.into(),
+        rank: 0,
+        hostname: "localhost".into(),
+        begin_step_timeout: Duration::from_secs(20),
+    }
+}
+
+/// One writer, one reader, N steps with data verification.
+fn single_pair_round_trip(transport: &str) {
+    let mut opts = writer_opts(transport, 0, "nodeA");
+    opts.listen = if transport == "inproc" {
+        format!("pair-rt-{}", std::process::id())
+    } else {
+        String::new()
+    };
+    let mut writer = SstWriter::open(opts).unwrap();
+    let addr = writer.address();
+    let transport_owned = transport.to_string();
+
+    let reader_thread = std::thread::spawn(move || {
+        let mut reader =
+            SstReader::open(reader_opts(&transport_owned, vec![addr]))
+                .unwrap();
+        let mut sums = Vec::new();
+        loop {
+            match reader.begin_step().unwrap() {
+                StepStatus::Ok => {}
+                StepStatus::EndOfStream => break,
+                StepStatus::NotReady => continue,
+                other => panic!("unexpected {other:?}"),
+            }
+            let vars = reader.available_variables();
+            assert_eq!(vars.len(), 1);
+            assert_eq!(
+                reader.attribute("/series/author").unwrap().as_str(),
+                Some("tester")
+            );
+            let chunks = reader.available_chunks(&vars[0].name);
+            assert_eq!(chunks.len(), 1);
+            assert_eq!(chunks[0].hostname, "nodeA");
+            let data = reader
+                .get(&vars[0].name, Chunk::whole(vars[0].shape.clone()))
+                .unwrap();
+            sums.push(cast::bytes_to_f32(&data).iter().sum::<f32>());
+            reader.end_step().unwrap();
+        }
+        reader.close().unwrap();
+        sums
+    });
+
+    let var = VarDecl::new("/data/x", Datatype::F32, vec![64]);
+    let mut want = Vec::new();
+    for step in 0..5 {
+        assert_eq!(writer.begin_step().unwrap(), StepStatus::Ok);
+        writer
+            .put_attribute("/series/author", Attribute::Str("tester".into()))
+            .unwrap();
+        let xs: Vec<f32> = (0..64).map(|i| (step * 64 + i) as f32).collect();
+        want.push(xs.iter().sum::<f32>());
+        writer
+            .put(&var, Chunk::whole(vec![64]), cast::f32_to_bytes(&xs))
+            .unwrap();
+        writer.end_step().unwrap();
+    }
+    writer.close().unwrap();
+    let got = reader_thread.join().unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn inproc_round_trip() {
+    single_pair_round_trip("inproc");
+}
+
+#[test]
+fn tcp_round_trip() {
+    single_pair_round_trip("tcp");
+}
+
+#[test]
+fn discard_policy_drops_steps_when_reader_lags() {
+    let mut opts = writer_opts("inproc", 0, "n0");
+    opts.listen = format!("discard-{}", std::process::id());
+    opts.queue = QueueConfig { policy: QueueFullPolicy::Discard, limit: 1 };
+    let mut writer = SstWriter::open(opts).unwrap();
+    let addr = writer.address();
+
+    let reader_thread = std::thread::spawn(move || {
+        let mut reader =
+            SstReader::open(reader_opts("inproc", vec![addr])).unwrap();
+        let mut consumed = Vec::new();
+        loop {
+            match reader.begin_step().unwrap() {
+                StepStatus::Ok => {}
+                StepStatus::EndOfStream => break,
+                _ => continue,
+            }
+            // Slow reader: writer will fill its queue and discard.
+            std::thread::sleep(Duration::from_millis(60));
+            let v = reader.available_variables();
+            let data =
+                reader.get(&v[0].name, Chunk::whole(v[0].shape.clone()))
+                    .unwrap();
+            consumed.push(cast::bytes_to_f32(&data)[0]);
+            reader.end_step().unwrap();
+        }
+        consumed
+    });
+
+    // Give the reader a moment to subscribe, then produce fast.
+    std::thread::sleep(Duration::from_millis(100));
+    let var = VarDecl::new("/x", Datatype::F32, vec![4]);
+    let total_steps = 30u64;
+    for step in 0..total_steps {
+        match writer.begin_step().unwrap() {
+            StepStatus::Ok => {
+                let xs = vec![step as f32; 4];
+                writer
+                    .put(&var, Chunk::whole(vec![4]), cast::f32_to_bytes(&xs))
+                    .unwrap();
+                writer.end_step().unwrap();
+            }
+            StepStatus::Discarded => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = writer.stats();
+    writer.close().unwrap();
+    let consumed = reader_thread.join().unwrap();
+
+    assert!(stats.steps_discarded > 0,
+            "expected discards, got {stats:?}");
+    assert_eq!(
+        stats.steps_published + stats.steps_discarded,
+        total_steps
+    );
+    // The reader saw exactly the published steps, in order.
+    assert_eq!(consumed.len() as u64, stats.steps_published);
+    let mut sorted = consumed.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(consumed, sorted, "steps out of order: {consumed:?}");
+}
+
+#[test]
+fn block_policy_never_discards() {
+    let mut opts = writer_opts("inproc", 0, "n0");
+    opts.listen = format!("block-{}", std::process::id());
+    opts.queue = QueueConfig { policy: QueueFullPolicy::Block, limit: 1 };
+    let mut writer = SstWriter::open(opts).unwrap();
+    let addr = writer.address();
+
+    let reader_thread = std::thread::spawn(move || {
+        let mut reader =
+            SstReader::open(reader_opts("inproc", vec![addr])).unwrap();
+        let mut n = 0;
+        loop {
+            match reader.begin_step().unwrap() {
+                StepStatus::Ok => {}
+                StepStatus::EndOfStream => break,
+                _ => continue,
+            }
+            std::thread::sleep(Duration::from_millis(20));
+            reader.end_step().unwrap();
+            n += 1;
+        }
+        n
+    });
+
+    std::thread::sleep(Duration::from_millis(50));
+    let var = VarDecl::new("/x", Datatype::F32, vec![2]);
+    for step in 0..10 {
+        assert_eq!(writer.begin_step().unwrap(), StepStatus::Ok,
+                   "blocked writer must not discard (step {step})");
+        writer
+            .put(&var, Chunk::whole(vec![2]),
+                 cast::f32_to_bytes(&[step as f32, 0.0]))
+            .unwrap();
+        writer.end_step().unwrap();
+    }
+    let stats = writer.stats();
+    writer.close().unwrap();
+    let n = reader_thread.join().unwrap();
+    assert_eq!(stats.steps_discarded, 0);
+    assert_eq!(n, 10);
+}
+
+/// Three writers (one "application") with a shared WriterGroup, two
+/// readers using hyperslab-style selections.
+#[test]
+fn multi_writer_multi_reader_hyperslabs() {
+    let group = WriterGroup::new();
+    let n_writers = 3usize;
+    let per_writer = 32u64;
+    let total = n_writers as u64 * per_writer;
+
+    let mut writers = Vec::new();
+    let mut addrs = Vec::new();
+    for rank in 0..n_writers {
+        let mut opts = writer_opts("inproc", rank, &format!("host{rank}"));
+        opts.listen =
+            format!("mwmr-{}-{}", rank, std::process::id());
+        opts.group = Some(group.clone());
+        let w = SstWriter::open(opts).unwrap();
+        addrs.push(w.address());
+        writers.push(w);
+    }
+
+    let mut reader_threads = Vec::new();
+    for r in 0..2usize {
+        let addrs = addrs.clone();
+        reader_threads.push(std::thread::spawn(move || {
+            let mut opts = reader_opts("inproc", addrs);
+            opts.rank = r;
+            let mut reader = SstReader::open(opts).unwrap();
+            let mut seen = Vec::new();
+            loop {
+                match reader.begin_step().unwrap() {
+                    StepStatus::Ok => {}
+                    StepStatus::EndOfStream => break,
+                    _ => continue,
+                }
+                // Reader r loads its half of the dataset (spans writers).
+                let half = total / 2;
+                let sel = Chunk::new(vec![r as u64 * half], vec![half]);
+                let data = reader.get("/data/0/x", sel).unwrap();
+                seen.push(cast::bytes_to_f32(&data));
+                reader.end_step().unwrap();
+            }
+            reader.close().unwrap();
+            seen
+        }));
+    }
+
+    // Each writer rank writes its contiguous part [rank*32, (rank+1)*32).
+    let var = VarDecl::new("/data/0/x", Datatype::F32, vec![total]);
+    for step in 0..3 {
+        for (rank, w) in writers.iter_mut().enumerate() {
+            assert_eq!(w.begin_step().unwrap(), StepStatus::Ok);
+            let off = rank as u64 * per_writer;
+            let xs: Vec<f32> = (0..per_writer)
+                .map(|i| (step * 1000 + off + i) as f32)
+                .collect();
+            w.put(&var, Chunk::new(vec![off], vec![per_writer]),
+                  cast::f32_to_bytes(&xs))
+                .unwrap();
+            w.end_step().unwrap();
+        }
+    }
+    for w in writers.iter_mut() {
+        w.close().unwrap();
+    }
+
+    for (r, t) in reader_threads.into_iter().enumerate() {
+        let seen = t.join().unwrap();
+        assert_eq!(seen.len(), 3, "reader {r} missed steps");
+        for (step, data) in seen.iter().enumerate() {
+            let half = (total / 2) as usize;
+            assert_eq!(data.len(), half);
+            for (i, &x) in data.iter().enumerate() {
+                let global = r * half + i;
+                assert_eq!(x, (step * 1000 + global) as f32,
+                           "reader {r} step {step} elem {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn late_joining_reader_sees_staged_steps() {
+    let mut opts = writer_opts("inproc", 0, "n0");
+    opts.listen = format!("late-{}", std::process::id());
+    opts.queue = QueueConfig { policy: QueueFullPolicy::Block, limit: 8 };
+    let mut writer = SstWriter::open(opts).unwrap();
+    let addr = writer.address();
+
+    // Publish 3 steps before any reader exists.
+    let var = VarDecl::new("/x", Datatype::F32, vec![2]);
+    for step in 0..3 {
+        writer.begin_step().unwrap();
+        writer
+            .put(&var, Chunk::whole(vec![2]),
+                 cast::f32_to_bytes(&[step as f32, 1.0]))
+            .unwrap();
+        writer.end_step().unwrap();
+    }
+
+    // Now subscribe: the backlog must be announced.
+    let mut reader =
+        SstReader::open(reader_opts("inproc", vec![addr])).unwrap();
+    let mut got = Vec::new();
+    for _ in 0..3 {
+        assert_eq!(reader.begin_step().unwrap(), StepStatus::Ok);
+        let data = reader.get("/x", Chunk::whole(vec![2])).unwrap();
+        got.push(cast::bytes_to_f32(&data)[0]);
+        reader.end_step().unwrap();
+    }
+    assert_eq!(got, vec![0.0, 1.0, 2.0]);
+    reader.close().unwrap();
+    writer.close().unwrap();
+}
+
+#[test]
+fn reader_crash_does_not_wedge_writer() {
+    let mut opts = writer_opts("inproc", 0, "n0");
+    opts.listen = format!("crash-{}", std::process::id());
+    opts.queue = QueueConfig { policy: QueueFullPolicy::Discard, limit: 2 };
+    // The leaked reader never drains; keep the close linger short so the
+    // test (and real crashed-reader scenarios) cannot hang.
+    opts.close_linger = Duration::from_millis(300);
+    let mut writer = SstWriter::open(opts).unwrap();
+    let addr = writer.address();
+
+    // Reader connects, consumes one step, then vanishes without Bye.
+    {
+        let mut reader =
+            SstReader::open(reader_opts("inproc", vec![addr])).unwrap();
+        let var = VarDecl::new("/x", Datatype::F32, vec![1]);
+        writer.begin_step().unwrap();
+        writer
+            .put(&var, Chunk::whole(vec![1]), cast::f32_to_bytes(&[7.0]))
+            .unwrap();
+        writer.end_step().unwrap();
+        assert_eq!(reader.begin_step().unwrap(), StepStatus::Ok);
+        std::mem::forget(reader); // simulated crash: no Bye, no end_step
+    }
+    // Writer keeps going; close() must not hang forever.
+    let var = VarDecl::new("/x", Datatype::F32, vec![1]);
+    for _ in 0..4 {
+        if writer.begin_step().unwrap() == StepStatus::Ok {
+            writer
+                .put(&var, Chunk::whole(vec![1]),
+                     cast::f32_to_bytes(&[0.0]))
+                .unwrap();
+            writer.end_step().unwrap();
+        }
+    }
+    // NOTE: the leaked in-proc reader keeps its channel alive, so the
+    // writer sees an unresponsive (not dead) peer — exactly the lagging-
+    // reader case, which Discard handles by dropping steps.
+    let stats = writer.stats();
+    assert!(stats.steps_published >= 1);
+}
+
+#[test]
+fn get_error_for_unknown_variable() {
+    let mut opts = writer_opts("inproc", 0, "n0");
+    opts.listen = format!("unkvar-{}", std::process::id());
+    let mut writer = SstWriter::open(opts).unwrap();
+    let addr = writer.address();
+    let mut reader =
+        SstReader::open(reader_opts("inproc", vec![addr])).unwrap();
+    let var = VarDecl::new("/x", Datatype::F32, vec![2]);
+    writer.begin_step().unwrap();
+    writer
+        .put(&var, Chunk::whole(vec![2]), cast::f32_to_bytes(&[1.0, 2.0]))
+        .unwrap();
+    writer.end_step().unwrap();
+    assert_eq!(reader.begin_step().unwrap(), StepStatus::Ok);
+    assert!(reader.get("/nope", Chunk::whole(vec![2])).is_err());
+    // The engine is still usable afterwards.
+    let ok = reader.get("/x", Chunk::whole(vec![2])).unwrap();
+    assert_eq!(cast::bytes_to_f32(&ok), vec![1.0, 2.0]);
+    reader.end_step().unwrap();
+    reader.close().unwrap();
+    writer.close().unwrap();
+}
+
+#[test]
+fn zero_copy_on_aligned_inproc_reads() {
+    // An exact-chunk read over inproc must return the writer's buffer
+    // (same allocation), not a copy — the RDMA-analog property.
+    let mut opts = writer_opts("inproc", 0, "n0");
+    opts.listen = format!("zc-{}", std::process::id());
+    let mut writer = SstWriter::open(opts).unwrap();
+    let addr = writer.address();
+    let mut reader =
+        SstReader::open(reader_opts("inproc", vec![addr])).unwrap();
+
+    let var = VarDecl::new("/x", Datatype::F32, vec![8]);
+    let payload = cast::f32_to_bytes(&[0.0; 8]);
+    let payload_ptr = payload.as_ptr();
+    writer.begin_step().unwrap();
+    writer.put(&var, Chunk::whole(vec![8]), payload).unwrap();
+    writer.end_step().unwrap();
+
+    assert_eq!(reader.begin_step().unwrap(), StepStatus::Ok);
+    let got = reader.get("/x", Chunk::whole(vec![8])).unwrap();
+    assert!(Arc::ptr_eq(&got, &Arc::new(Vec::new())) == false);
+    assert_eq!(got.as_ptr(), payload_ptr,
+               "aligned inproc read copied the payload");
+    reader.end_step().unwrap();
+    reader.close().unwrap();
+    writer.close().unwrap();
+}
