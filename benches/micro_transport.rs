@@ -64,6 +64,14 @@ fn sst_throughput(transport: &str, chunk_mib: u64) -> f64 {
             reader.end_step().unwrap();
         }
         let secs = t0.elapsed().as_secs_f64();
+        let stats = reader.stats();
+        // Two-phase batching contract: one wire data message per step —
+        // the aligned whole-chunk read of each step travels as exactly
+        // one GetBatchReply.
+        assert_eq!(stats.data_messages, stats.steps_consumed,
+                   "expected one batched payload per step: {stats:?}");
+        assert_eq!(stats.batch_requests, stats.steps_consumed,
+                   "expected one batched request per step: {stats:?}");
         reader.close().unwrap();
         total as f64 / secs
     });

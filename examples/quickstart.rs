@@ -76,8 +76,11 @@ fn read_series(engine: &mut dyn Engine, label: &str) -> Result<()> {
         let n = species.records["position"].components["x"]
             .dataset
             .extent[0];
-        let data = cast::bytes_to_f32(
-            &engine.get(&pos_x, Chunk::whole(vec![n]))?);
+        // Two-phase read: defer, perform, take. (`engine.get(..)` is the
+        // eager shorthand for exactly this sequence.)
+        let handle = engine.get_deferred(&pos_x, Chunk::whole(vec![n]))?;
+        engine.perform_gets()?;
+        let data = cast::bytes_to_f32(&engine.take_get(handle)?)?;
         println!(
             "  [{label}] iteration {index}: t={:.3}, {} particles, \
              {} written chunk(s), position/x[0..3] = {:?}",

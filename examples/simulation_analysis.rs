@@ -203,21 +203,31 @@ fn main() -> Result<()> {
                     for slice in assignment.slices(rank) {
                         let sel = slice.chunk.clone();
                         let t = metrics.start(OpKind::Load, step_idx, rank);
-                        let mut bytes = 0u64;
-                        let mut cols = Vec::new();
+                        // Two-phase: defer all seven component loads,
+                        // perform them as ONE batched exchange per
+                        // owning writer, then redeem.
+                        let mut handles = Vec::new();
                         for record in ["position", "momentum"] {
                             for comp in ["x", "y", "z"] {
                                 let name =
                                     var_name(index, "e", record, comp);
-                                let data = reader.get(&name, sel.clone())?;
-                                bytes += data.len() as u64;
-                                cols.push(cast::bytes_to_f32(&data));
+                                handles.push(reader.get_deferred(
+                                    &name, sel.clone())?);
                             }
                         }
-                        let w = reader.get(
+                        let hw = reader.get_deferred(
                             &var_name(index, "e", "weighting", SCALAR),
                             sel.clone(),
                         )?;
+                        reader.perform_gets()?;
+                        let mut bytes = 0u64;
+                        let mut cols = Vec::new();
+                        for h in handles {
+                            let data = reader.take_get(h)?;
+                            bytes += data.len() as u64;
+                            cols.push(cast::bytes_to_f32(&data)?);
+                        }
+                        let w = reader.take_get(hw)?;
                         bytes += w.len() as u64;
                         metrics.finish(t, bytes);
                         let n = sel.num_elements() as usize;
@@ -229,7 +239,7 @@ fn main() -> Result<()> {
                                 cols[3][i], cols[4][i], cols[5][i],
                             ]);
                         }
-                        wts.extend_from_slice(&cast::bytes_to_f32(&w));
+                        wts.extend_from_slice(&cast::bytes_to_f32(&w)?);
                     }
                     // L1/L2 compute through PJRT.
                     saxs.consume(&pos, &wts)?;

@@ -25,7 +25,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use super::engine::{Bytes, Engine, Mode, StepStatus, VarDecl, VarInfo};
+use super::engine::{
+    Bytes, Engine, GetHandle, GetQueue, Mode, PutQueue, StepStatus,
+    VarDecl, VarHandle, VarInfo,
+};
 use super::region;
 use super::wire::{Reader as WireReader, StepMeta, VarMeta};
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
@@ -61,6 +64,8 @@ pub struct BpWriter {
     ctx: WriterCtx,
     step: u64,
     current: Option<(StepMeta, Vec<(String, Chunk, Bytes)>)>,
+    /// Variable registry + deferred-put queue (two-phase API).
+    puts: PutQueue,
     pub bytes_written: u64,
 }
 
@@ -83,6 +88,7 @@ impl BpWriter {
             ctx,
             step: 0,
             current: None,
+            puts: PutQueue::default(),
             bytes_written: MAGIC.len() as u64,
         })
     }
@@ -109,28 +115,53 @@ impl Engine for BpWriter {
         Ok(StepStatus::Ok)
     }
 
-    fn put(&mut self, var: &VarDecl, chunk: Chunk, data: Bytes) -> Result<()> {
+    fn define_variable(&mut self, decl: &VarDecl) -> Result<VarHandle> {
+        self.puts.define(decl)
+    }
+
+    fn put_deferred(&mut self, var: &VarHandle, chunk: Chunk, data: Bytes)
+        -> Result<()>
+    {
+        if self.current.is_none() {
+            bail!("put outside step");
+        }
+        self.puts.enqueue(var, chunk, data)
+    }
+
+    fn put_span(&mut self, var: &VarHandle, chunk: Chunk)
+        -> Result<&mut [u8]>
+    {
+        if self.current.is_none() {
+            bail!("put_span outside step");
+        }
+        self.puts.span(var, chunk)
+    }
+
+    fn perform_puts(&mut self) -> Result<()> {
+        let pending = self.puts.drain();
+        if pending.is_empty() {
+            return Ok(());
+        }
         let (meta, payloads) = self
             .current
             .as_mut()
-            .ok_or_else(|| anyhow::anyhow!("put outside step"))?;
-        let expect = chunk.num_elements() as usize * var.dtype.size();
-        if data.len() != expect {
-            bail!("put {}: payload {} bytes, chunk needs {expect}",
-                  var.name, data.len());
+            .ok_or_else(|| anyhow::anyhow!("perform_puts outside step"))?;
+        for p in pending {
+            let info = WrittenChunkInfo::new(p.chunk.clone(),
+                                             self.ctx.rank,
+                                             self.ctx.hostname.clone());
+            match meta.vars.iter_mut().find(|v| v.name == p.var.name()) {
+                Some(vm) => vm.chunks.push(info),
+                None => meta.vars.push(VarMeta {
+                    name: p.var.name().to_string(),
+                    dtype: p.var.dtype(),
+                    shape: p.var.shape().to_vec(),
+                    chunks: vec![info],
+                }),
+            }
+            payloads.push((p.var.name().to_string(), p.chunk,
+                           p.data.into_bytes()));
         }
-        let info = WrittenChunkInfo::new(chunk.clone(), self.ctx.rank,
-                                         self.ctx.hostname.clone());
-        match meta.vars.iter_mut().find(|v| v.name == var.name) {
-            Some(vm) => vm.chunks.push(info),
-            None => meta.vars.push(VarMeta {
-                name: var.name.clone(),
-                dtype: var.dtype,
-                shape: var.shape.clone(),
-                chunks: vec![info],
-            }),
-        }
-        payloads.push((var.name.clone(), chunk, data));
         Ok(())
     }
 
@@ -159,11 +190,22 @@ impl Engine for BpWriter {
         Vec::new()
     }
 
-    fn get(&mut self, _var: &str, _sel: Chunk) -> Result<Bytes> {
+    fn get_deferred(&mut self, _var: &str, _selection: Chunk)
+        -> Result<GetHandle>
+    {
         bail!("get on a write-mode BP engine")
     }
 
+    fn perform_gets(&mut self) -> Result<()> {
+        bail!("perform_gets on a write-mode BP engine")
+    }
+
+    fn take_get(&mut self, _handle: GetHandle) -> Result<Bytes> {
+        bail!("take_get on a write-mode BP engine")
+    }
+
     fn end_step(&mut self) -> Result<()> {
+        self.perform_puts()?;
         let (meta, payloads) = self
             .current
             .take()
@@ -234,6 +276,8 @@ pub struct BpReader {
     meta: Option<(u64, StepMeta)>,
     /// var -> payload records of the current step.
     index: BTreeMap<String, Vec<PayloadIndex>>,
+    /// Deferred-get queue (two-phase API).
+    gets: GetQueue,
     open_step: bool,
 }
 
@@ -253,6 +297,7 @@ impl BpReader {
             file,
             meta: None,
             index: BTreeMap::new(),
+            gets: GetQueue::default(),
             open_step: false,
         })
     }
@@ -340,10 +385,23 @@ impl Engine for BpReader {
         Ok(StepStatus::Ok)
     }
 
-    fn put(&mut self, _var: &VarDecl, _chunk: Chunk, _data: Bytes)
-        -> Result<()>
-    {
+    fn define_variable(&mut self, _decl: &VarDecl) -> Result<VarHandle> {
+        bail!("define_variable on a read-mode BP engine")
+    }
+
+    fn put_deferred(&mut self, _var: &VarHandle, _chunk: Chunk,
+                    _data: Bytes) -> Result<()> {
         bail!("put on a read-mode BP engine")
+    }
+
+    fn put_span(&mut self, _var: &VarHandle, _chunk: Chunk)
+        -> Result<&mut [u8]>
+    {
+        bail!("put_span on a read-mode BP engine")
+    }
+
+    fn perform_puts(&mut self) -> Result<()> {
+        bail!("perform_puts on a read-mode BP engine")
     }
 
     fn put_attribute(&mut self, _name: &str, _value: Attribute) -> Result<()> {
@@ -391,71 +449,64 @@ impl Engine for BpReader {
             .unwrap_or_default()
     }
 
-    fn get(&mut self, var: &str, selection: Chunk) -> Result<Bytes> {
+    fn get_deferred(&mut self, var: &str, selection: Chunk)
+        -> Result<GetHandle>
+    {
         if !self.open_step {
             bail!("get outside step");
         }
-        let dtype = self
-            .available_variables()
-            .into_iter()
-            .find(|v| v.name == var)
-            .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))?
-            .dtype;
-        let elem = dtype.size();
-        let records: Vec<(Chunk, u64, u64)> = self
-            .index
-            .get(var)
-            .ok_or_else(|| anyhow::anyhow!("no payloads for {var:?}"))?
-            .iter()
-            .map(|p| (p.chunk.clone(), p.file_offset, p.len))
-            .collect();
+        if !self.index.contains_key(var) {
+            // Distinguish unknown vs data-less variables, as eager get
+            // did.
+            if !self.available_variables().iter().any(|v| v.name == var) {
+                bail!("unknown variable {var:?}");
+            }
+            bail!("no payloads for {var:?}");
+        }
+        Ok(self.gets.defer(var, selection))
+    }
 
-        // Fast path: the selection IS a written chunk (perfect alignment,
-        // the property §3.1 rewards) — one contiguous read, zero copies.
-        for (chunk, file_offset, len) in &records {
-            if *chunk == selection {
-                self.file.seek(SeekFrom::Start(*file_offset))?;
-                let mut data = Vec::with_capacity(*len as usize);
-                let read = (&mut self.file)
-                    .take(*len)
-                    .read_to_end(&mut data)?;
-                if read as u64 != *len {
-                    bail!("short read for {var:?}");
-                }
-                return Ok(Arc::new(data));
-            }
+    fn perform_gets(&mut self) -> Result<()> {
+        let mut pending = self.gets.drain_pending();
+        if pending.is_empty() {
+            return Ok(());
         }
+        if !self.open_step {
+            bail!("perform_gets outside step");
+        }
+        // Batched file IO: serve the batch in ascending file-offset
+        // order so a deferred batch turns into one forward sweep over
+        // the step's payload region instead of random seeks.
+        let first_offset = |g: &super::engine::DeferredGet| {
+            self.index
+                .get(&g.var)
+                .into_iter()
+                .flatten()
+                .filter(|p| p.chunk.intersect(&g.selection).is_some())
+                .map(|p| p.file_offset)
+                .min()
+                .unwrap_or(u64::MAX)
+        };
+        pending.sort_by_key(first_offset);
+        for g in pending {
+            let data = self.fetch(&g.var, &g.selection)?;
+            self.gets.complete(g.handle, data);
+        }
+        Ok(())
+    }
 
-        let mut out = vec![0u8; selection.num_elements() as usize * elem];
-        let mut covered = 0u64;
-        for (chunk, file_offset, len) in records {
-            if chunk.intersect(&selection).is_none() {
-                continue;
-            }
-            self.file.seek(SeekFrom::Start(file_offset))?;
-            let mut data = Vec::with_capacity(len as usize);
-            let read =
-                (&mut self.file).take(len).read_to_end(&mut data)?;
-            if read as u64 != len {
-                bail!("short read for {var:?}");
-            }
-            covered +=
-                region::copy_region(&chunk, &data, &selection, &mut out, elem);
-        }
-        if covered < selection.num_elements() {
-            bail!(
-                "selection of {var:?} only partially covered \
-                 ({covered}/{} elements)",
-                selection.num_elements()
-            );
-        }
-        Ok(Arc::new(out))
+    fn take_get(&mut self, handle: GetHandle) -> Result<Bytes> {
+        self.gets.take(handle)
     }
 
     fn end_step(&mut self) -> Result<()> {
         if !self.open_step {
             bail!("end_step without begin_step");
         }
+        // Deferred gets that were never performed are dropped: their
+        // handles die with the step, so fetching them here would read
+        // bytes nobody can redeem.
+        self.gets.reset();
         // Position the cursor after the last payload of this step: get()
         // may have seeked around. The payload index knows the end.
         let end = self
@@ -474,15 +525,75 @@ impl Engine for BpReader {
     }
 
     fn close(&mut self) -> Result<()> {
+        self.gets.reset();
         self.open_step = false;
         Ok(())
     }
 }
 
-/// Current step index (reader side).
+/// Current step index (reader side) + internal batch servicing.
 impl BpReader {
     pub fn current_step(&self) -> Option<u64> {
         self.meta.as_ref().map(|(s, _)| *s)
+    }
+
+    /// Load one selection from the current step's payload records.
+    fn fetch(&mut self, var: &str, selection: &Chunk) -> Result<Bytes> {
+        let dtype = self
+            .meta
+            .as_ref()
+            .and_then(|(_, m)| m.vars.iter().find(|v| v.name == var))
+            .map(|v| v.dtype)
+            .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))?;
+        let elem = dtype.size();
+        let records: Vec<(Chunk, u64, u64)> = self
+            .index
+            .get(var)
+            .ok_or_else(|| anyhow::anyhow!("no payloads for {var:?}"))?
+            .iter()
+            .map(|p| (p.chunk.clone(), p.file_offset, p.len))
+            .collect();
+
+        // Fast path: the selection IS a written chunk (perfect alignment,
+        // the property §3.1 rewards) — one contiguous read, zero copies.
+        for (chunk, file_offset, len) in &records {
+            if chunk == selection {
+                self.file.seek(SeekFrom::Start(*file_offset))?;
+                let mut data = Vec::with_capacity(*len as usize);
+                let read = (&mut self.file)
+                    .take(*len)
+                    .read_to_end(&mut data)?;
+                if read as u64 != *len {
+                    bail!("short read for {var:?}");
+                }
+                return Ok(Arc::new(data));
+            }
+        }
+
+        let mut out = vec![0u8; selection.num_elements() as usize * elem];
+        let mut covered = 0u64;
+        for (chunk, file_offset, len) in records {
+            if chunk.intersect(selection).is_none() {
+                continue;
+            }
+            self.file.seek(SeekFrom::Start(file_offset))?;
+            let mut data = Vec::with_capacity(len as usize);
+            let read =
+                (&mut self.file).take(len).read_to_end(&mut data)?;
+            if read as u64 != len {
+                bail!("short read for {var:?}");
+            }
+            covered += region::copy_region(&chunk, &data, selection,
+                                           &mut out, elem);
+        }
+        if covered < selection.num_elements() {
+            bail!(
+                "selection of {var:?} only partially covered \
+                 ({covered}/{} elements)",
+                selection.num_elements()
+            );
+        }
+        Ok(Arc::new(out))
     }
 }
 
@@ -543,7 +654,7 @@ mod tests {
             let all = r.get("/data/x", Chunk::whole(vec![8])).unwrap();
             let want: Vec<f32> =
                 (0..8).map(|i| (step * 10 + i) as f32).collect();
-            assert_eq!(cast::bytes_to_f32(&all), want);
+            assert_eq!(cast::bytes_to_f32(&all).unwrap(), want);
             r.end_step().unwrap();
         }
         assert_eq!(r.begin_step().unwrap(), StepStatus::EndOfStream);
@@ -557,7 +668,8 @@ mod tests {
         let mut r = BpReader::open(&path).unwrap();
         r.begin_step().unwrap();
         let sel = Chunk::new(vec![2], vec![4]); // spans both written chunks
-        let got = cast::bytes_to_f32(&r.get("/data/x", sel).unwrap());
+        let got =
+            cast::bytes_to_f32(&r.get("/data/x", sel).unwrap()).unwrap();
         assert_eq!(got, vec![2.0, 3.0, 4.0, 5.0]);
         r.end_step().unwrap();
         std::fs::remove_file(&path).ok();

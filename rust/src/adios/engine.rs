@@ -1,18 +1,41 @@
-//! The step-oriented engine abstraction.
+//! The step-oriented engine abstraction — **v2: two-phase, handle-based**.
 //!
-//! Mirrors the ADIOS2 programming model the paper relies on: an engine is
-//! opened in write or read mode; IO happens in *steps* (here: one openPMD
-//! iteration per step); within a step the writer `put`s chunks of named
-//! variables and attributes, the reader inspects available variables /
-//! chunks and `get`s selections. `begin_step` on the read side reports
-//! whether a step is available, and on the write side may *discard* the
-//! step under backpressure (SST's `QueueFullPolicy=Discard`, the mechanism
-//! behind the paper's "outputs are dropped as soon as the IO time cannot
-//! be hidden" behaviour).
+//! Mirrors the ADIOS2 programming model the paper's performance story
+//! rests on. An engine is opened in write or read mode; IO happens in
+//! *steps* (here: one openPMD iteration per step). Within a step the API
+//! is *deferred and batched*, exactly like ADIOS2's `Put(..., Mode::
+//! Deferred)` / `Get(...)` + `PerformPuts` / `PerformGets` + `Span`:
+//!
+//! * **Write side.** [`Engine::define_variable`] validates a [`VarDecl`]
+//!   once and returns a typed [`VarHandle`]; [`Engine::put_deferred`]
+//!   only *enqueues* a chunk write (the payload `Arc` is captured, not
+//!   copied); [`Engine::put_span`] hands out a mutable slice of the
+//!   engine's own staging buffer so producers serialize **directly into
+//!   the engine** (zero-copy on the in-process "RDMA" transport);
+//!   [`Engine::perform_puts`] executes the whole batch. `end_step`
+//!   implies a final `perform_puts` and *publishes* the step.
+//! * **Read side.** [`Engine::get_deferred`] enqueues a selection and
+//!   returns a [`GetHandle`]; [`Engine::perform_gets`] executes the whole
+//!   batch — over SST this sends **one** wire request per writer for the
+//!   entire batch instead of one per chunk — and [`Engine::take_get`]
+//!   yields the densely packed bytes.
+//! * **Backpressure.** `begin_step` on the write side may *discard* the
+//!   step (SST's `QueueFullPolicy=Discard`, the mechanism behind the
+//!   paper's "outputs are dropped as soon as the IO time cannot be
+//!   hidden"). A discarded step's deferred queue is dropped wholesale at
+//!   `end_step`/`perform_puts` — the producer is never blocked and no
+//!   data moves.
+//!
+//! The eager v1 entry points [`Engine::put`] and [`Engine::get`] survive
+//! as provided methods expressed in terms of the deferred core
+//! (`defer` + immediate `perform`), so eager and batched paths are
+//! byte-identical by construction — the engine-conformance suite in
+//! `testing/` asserts this for every backend.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::types::Datatype;
@@ -46,7 +69,7 @@ pub enum StepStatus {
     EndOfStream,
 }
 
-/// Variable declaration for `put`.
+/// Variable declaration passed to [`Engine::define_variable`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct VarDecl {
     pub name: String,
@@ -61,6 +84,67 @@ impl VarDecl {
         VarDecl { name: name.into(), dtype, shape }
     }
 }
+
+/// Typed, validated variable handle returned by
+/// [`Engine::define_variable`]. Cheap to clone (the name and shape are
+/// shared), checked once at definition time instead of on every put.
+#[derive(Clone, Debug)]
+pub struct VarHandle {
+    id: u32,
+    name: Arc<str>,
+    dtype: Datatype,
+    shape: Arc<[u64]>,
+}
+
+impl PartialEq for VarHandle {
+    fn eq(&self, other: &Self) -> bool {
+        self.id == other.id && self.name == other.name
+    }
+}
+
+impl VarHandle {
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn dtype(&self) -> Datatype {
+        self.dtype
+    }
+
+    pub fn shape(&self) -> &[u64] {
+        &self.shape
+    }
+
+    /// Validate `chunk` against this variable (rank, bounds) and return
+    /// the dense payload size in bytes.
+    pub fn chunk_bytes(&self, chunk: &Chunk) -> Result<usize> {
+        if chunk.ndim() != self.shape.len() {
+            bail!(
+                "{}: chunk rank {} != dataset rank {}",
+                self.name, chunk.ndim(), self.shape.len()
+            );
+        }
+        for d in 0..chunk.ndim() {
+            if chunk.offset[d] + chunk.extent[d] > self.shape[d] {
+                bail!(
+                    "{}: chunk {:?}+{:?} exceeds dataset extent {:?} \
+                     in dim {d}",
+                    self.name, chunk.offset, chunk.extent, self.shape
+                );
+            }
+        }
+        Ok(chunk.num_elements() as usize * self.dtype.size())
+    }
+}
+
+/// Handle for a deferred read, redeemed via [`Engine::take_get`] after
+/// [`Engine::perform_gets`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GetHandle(pub(crate) u64);
 
 /// Variable metadata visible on the read side.
 #[derive(Clone, Debug, PartialEq)]
@@ -83,11 +167,36 @@ pub trait Engine: Send {
     /// Open the next step.
     fn begin_step(&mut self) -> Result<StepStatus>;
 
-    /// (write) Declare-and-write one chunk of a variable.
-    fn put(&mut self, var: &VarDecl, chunk: Chunk, data: Bytes) -> Result<()>;
+    // ---- write side: two-phase --------------------------------------
+
+    /// (write) Declare a variable once, validating the declaration and
+    /// returning a typed handle. Redefining with an identical declaration
+    /// returns the same handle; a conflicting redefinition is an error.
+    /// May be called outside a step.
+    fn define_variable(&mut self, decl: &VarDecl) -> Result<VarHandle>;
+
+    /// (write) Enqueue one chunk write. The payload is captured by `Arc`
+    /// — no copy, no IO. Nothing moves until [`Engine::perform_puts`] or
+    /// `end_step`.
+    fn put_deferred(&mut self, var: &VarHandle, chunk: Chunk, data: Bytes)
+        -> Result<()>;
+
+    /// (write) Reserve a staging span for one chunk and return it for
+    /// in-place serialization — ADIOS2's `Span`: the producer writes
+    /// directly into the engine's staging buffer, which the in-process
+    /// transport later hands to readers without any further copy.
+    /// The span is valid until the next call on this engine.
+    fn put_span(&mut self, var: &VarHandle, chunk: Chunk)
+        -> Result<&mut [u8]>;
+
+    /// (write) Execute every enqueued put as one batch. On a discarded
+    /// step this drops the queue instead.
+    fn perform_puts(&mut self) -> Result<()>;
 
     /// (write) Attach an attribute to the current step.
     fn put_attribute(&mut self, name: &str, value: Attribute) -> Result<()>;
+
+    // ---- read side --------------------------------------------------
 
     /// (read) Variables visible in the current step.
     fn available_variables(&self) -> Vec<VarInfo>;
@@ -102,17 +211,284 @@ pub trait Engine: Send {
     /// (read) All attribute names in the current step.
     fn attribute_names(&self) -> Vec<String>;
 
-    /// (read) Load a selection. Blocking; returns densely packed bytes in
-    /// row-major order of the selection.
-    fn get(&mut self, var: &str, selection: Chunk) -> Result<Bytes>;
+    /// (read) Enqueue a selection load. Nothing moves until
+    /// [`Engine::perform_gets`].
+    fn get_deferred(&mut self, var: &str, selection: Chunk)
+        -> Result<GetHandle>;
 
-    /// Close the current step. On the write side this *publishes* the step
-    /// (file flush / stream delivery).
+    /// (read) Execute every enqueued get as one batch. Over SST this
+    /// contacts each owning writer exactly once for the whole batch.
+    fn perform_gets(&mut self) -> Result<()>;
+
+    /// (read) Redeem a performed get: densely packed bytes in row-major
+    /// order of the selection. Each handle can be taken once.
+    fn take_get(&mut self, handle: GetHandle) -> Result<Bytes>;
+
+    // ---- step / lifecycle -------------------------------------------
+
+    /// Close the current step. On the write side this implies a final
+    /// `perform_puts` and then *publishes* the step (file flush /
+    /// stream delivery). On the read side, deferred gets that were
+    /// never performed are dropped — their handles die with the step,
+    /// so there is nobody left to redeem a late fetch.
     fn end_step(&mut self) -> Result<()>;
 
     /// Close the engine (writer: signals end-of-stream to readers).
     fn close(&mut self) -> Result<()>;
+
+    // ---- eager v1 conveniences, built on the deferred core ----------
+
+    /// (write) Declare-and-write one chunk immediately: `define` +
+    /// `put_deferred` + `perform_puts`. Byte-identical to the deferred
+    /// path by construction.
+    fn put(&mut self, var: &VarDecl, chunk: Chunk, data: Bytes)
+        -> Result<()>
+    {
+        let handle = self.define_variable(var)?;
+        self.put_deferred(&handle, chunk, data)?;
+        self.perform_puts()
+    }
+
+    /// (read) Load a selection immediately: `get_deferred` +
+    /// `perform_gets` + `take_get`.
+    fn get(&mut self, var: &str, selection: Chunk) -> Result<Bytes> {
+        let handle = self.get_deferred(var, selection)?;
+        self.perform_gets()?;
+        self.take_get(handle)
+    }
 }
+
+// ======================================================================
+// Deferred-queue machinery shared by the backends
+// ======================================================================
+
+/// Payload of a pending put: either a caller-owned `Arc` (from
+/// `put_deferred`) or an engine-owned staging buffer (from `put_span`).
+#[derive(Debug)]
+pub enum PutPayload {
+    Shared(Bytes),
+    Owned(Vec<u8>),
+}
+
+impl PutPayload {
+    pub fn len(&self) -> usize {
+        match self {
+            PutPayload::Shared(b) => b.len(),
+            PutPayload::Owned(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Convert into `Bytes` without copying: an owned staging buffer is
+    /// wrapped in a fresh `Arc`.
+    pub fn into_bytes(self) -> Bytes {
+        match self {
+            PutPayload::Shared(b) => b,
+            PutPayload::Owned(v) => Arc::new(v),
+        }
+    }
+}
+
+/// One enqueued chunk write.
+#[derive(Debug)]
+pub struct PendingPut {
+    pub var: VarHandle,
+    pub chunk: Chunk,
+    pub data: PutPayload,
+}
+
+/// Write-side deferred machinery: the variable registry (engine
+/// lifetime) plus the pending-put queue (one step). Backends embed this
+/// and drain it in their `perform_puts`.
+///
+/// The registry retains one entry per distinct variable name for the
+/// engine's lifetime — matching ADIOS2, where defined variables live as
+/// long as the IO object. Under openPMD's per-iteration naming
+/// (`/data/{i}/...`) that is a handful of small entries per step;
+/// streams with very many steps that need a hard bound should reuse
+/// names (variable-based iteration encoding) or recreate the engine.
+#[derive(Debug, Default)]
+pub struct PutQueue {
+    vars: Vec<VarHandle>,
+    by_name: BTreeMap<String, u32>,
+    pending: Vec<PendingPut>,
+}
+
+impl PutQueue {
+    /// Validate a declaration once and hand out (or re-hand-out) its
+    /// typed handle.
+    pub fn define(&mut self, decl: &VarDecl) -> Result<VarHandle> {
+        if decl.name.is_empty() {
+            bail!("variable name must not be empty");
+        }
+        if decl.shape.len() > 64 {
+            bail!("variable {}: implausible rank {}", decl.name,
+                  decl.shape.len());
+        }
+        if let Some(&id) = self.by_name.get(&decl.name) {
+            let existing = &self.vars[id as usize];
+            if existing.dtype != decl.dtype
+                || existing.shape.as_ref() != decl.shape.as_slice()
+            {
+                bail!("conflicting redeclaration of {}", decl.name);
+            }
+            return Ok(existing.clone());
+        }
+        let id = self.vars.len() as u32;
+        let handle = VarHandle {
+            id,
+            name: Arc::from(decl.name.as_str()),
+            dtype: decl.dtype,
+            shape: Arc::from(decl.shape.as_slice()),
+        };
+        self.vars.push(handle.clone());
+        self.by_name.insert(decl.name.clone(), id);
+        Ok(handle)
+    }
+
+    /// Check a handle actually came from this engine's registry —
+    /// name, dtype AND shape must match, so a stale handle from another
+    /// engine cannot smuggle in the wrong bounds.
+    fn check_handle(&self, var: &VarHandle) -> Result<()> {
+        let known = self
+            .vars
+            .get(var.id as usize)
+            .map(|v| {
+                v.name == var.name
+                    && v.dtype == var.dtype
+                    && v.shape == var.shape
+            })
+            .unwrap_or(false);
+        if !known {
+            bail!("unknown variable handle {:?} (wrong engine?)", var.name);
+        }
+        Ok(())
+    }
+
+    /// Enqueue a shared-payload put, validating chunk and byte length.
+    pub fn enqueue(&mut self, var: &VarHandle, chunk: Chunk, data: Bytes)
+        -> Result<()>
+    {
+        self.check_handle(var)?;
+        let expect = var.chunk_bytes(&chunk)?;
+        if data.len() != expect {
+            bail!(
+                "put {}: payload {} bytes, chunk needs {expect}",
+                var.name, data.len()
+            );
+        }
+        self.pending.push(PendingPut {
+            var: var.clone(),
+            chunk,
+            data: PutPayload::Shared(data),
+        });
+        Ok(())
+    }
+
+    /// Enqueue an engine-owned staging buffer and return it for in-place
+    /// serialization.
+    pub fn span(&mut self, var: &VarHandle, chunk: Chunk)
+        -> Result<&mut [u8]>
+    {
+        self.check_handle(var)?;
+        let len = var.chunk_bytes(&chunk)?;
+        self.pending.push(PendingPut {
+            var: var.clone(),
+            chunk,
+            data: PutPayload::Owned(vec![0u8; len]),
+        });
+        match &mut self.pending.last_mut().unwrap().data {
+            PutPayload::Owned(buf) => Ok(buf.as_mut_slice()),
+            PutPayload::Shared(_) => unreachable!(),
+        }
+    }
+
+    /// Drain the queue for execution.
+    pub fn drain(&mut self) -> Vec<PendingPut> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Drop the queue (discarded step). Returns how many puts were
+    /// dropped.
+    pub fn discard(&mut self) -> usize {
+        let n = self.pending.len();
+        self.pending.clear();
+        n
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+/// One enqueued read.
+#[derive(Clone, Debug)]
+pub struct DeferredGet {
+    pub handle: GetHandle,
+    pub var: String,
+    pub selection: Chunk,
+}
+
+/// Read-side deferred machinery: the pending-get queue plus the results
+/// of the last `perform_gets`. Backends embed this.
+#[derive(Debug, Default)]
+pub struct GetQueue {
+    next_id: u64,
+    pending: Vec<DeferredGet>,
+    ready: BTreeMap<u64, Bytes>,
+}
+
+impl GetQueue {
+    pub fn defer(&mut self, var: &str, selection: Chunk) -> GetHandle {
+        let handle = GetHandle(self.next_id);
+        self.next_id += 1;
+        self.pending.push(DeferredGet {
+            handle,
+            var: var.to_string(),
+            selection,
+        });
+        handle
+    }
+
+    pub fn has_pending(&self) -> bool {
+        !self.pending.is_empty()
+    }
+
+    /// Drain enqueued gets for execution.
+    pub fn drain_pending(&mut self) -> Vec<DeferredGet> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Record a performed get's result.
+    pub fn complete(&mut self, handle: GetHandle, data: Bytes) {
+        self.ready.insert(handle.0, data);
+    }
+
+    /// Redeem a performed get (once).
+    pub fn take(&mut self, handle: GetHandle) -> Result<Bytes> {
+        if self.pending.iter().any(|g| g.handle == handle) {
+            bail!("get handle not performed yet — call perform_gets first");
+        }
+        self.ready
+            .remove(&handle.0)
+            .ok_or_else(|| anyhow::anyhow!(
+                "unknown or already-taken get handle (or the step ended)"
+            ))
+    }
+
+    /// Forget deferred and unredeemed gets (step boundary).
+    pub fn reset(&mut self) {
+        self.pending.clear();
+        self.ready.clear();
+    }
+}
+
+// ======================================================================
+// Engine selection
+// ======================================================================
 
 /// Runtime-selectable engine kind — the *flexibility* property: which
 /// backend moves the bytes is a config value, not code.
@@ -128,18 +504,31 @@ pub enum EngineKind {
 
 impl EngineKind {
     /// Parse `"bp"`, `"bp:6"`, `"sst"`, `"sst:tcp"`, `"json"`.
+    ///
+    /// Rejects degenerate configurations: `bp:0` (zero aggregation would
+    /// make node-level file aggregation divide-by-zero downstream) and
+    /// `sst:` (an empty transport name can never resolve).
     pub fn parse(s: &str) -> Result<EngineKind> {
         let (kind, arg) = match s.split_once(':') {
             Some((k, a)) => (k, Some(a)),
             None => (s, None),
         };
         Ok(match kind.to_ascii_lowercase().as_str() {
-            "bp" => EngineKind::Bp {
-                aggregation: arg.map(|a| a.parse()).transpose()?.unwrap_or(1),
-            },
-            "sst" => EngineKind::Sst {
-                transport: arg.unwrap_or("inproc").to_string(),
-            },
+            "bp" => {
+                let aggregation =
+                    arg.map(|a| a.parse()).transpose()?.unwrap_or(1);
+                if aggregation == 0 {
+                    bail!("bp aggregation must be >= 1 (got bp:0)");
+                }
+                EngineKind::Bp { aggregation }
+            }
+            "sst" => {
+                let transport = arg.unwrap_or("inproc");
+                if transport.is_empty() {
+                    bail!("sst transport name must not be empty (got \"sst:\")");
+                }
+                EngineKind::Sst { transport: transport.to_string() }
+            }
             "json" => EngineKind::Json,
             other => anyhow::bail!("unknown engine kind {other:?}"),
         })
@@ -159,53 +548,47 @@ impl std::fmt::Display for EngineKind {
 /// Helpers to view/copy typed slices as bytes (little-endian, host order —
 /// the formats are not portable across endianness, as with real BP files
 /// written without conversion).
+///
+/// One macro generates the pairs for every element type; the
+/// bytes-to-values direction returns `Result` instead of panicking on
+/// misaligned byte lengths.
 pub mod cast {
     use super::Bytes;
+    use anyhow::Result;
     use std::sync::Arc;
 
-    pub fn f32_to_bytes(xs: &[f32]) -> Bytes {
-        let mut v = Vec::with_capacity(xs.len() * 4);
-        for x in xs {
-            v.extend_from_slice(&x.to_le_bytes());
-        }
-        Arc::new(v)
+    macro_rules! impl_cast {
+        ($($ty:ty => $to:ident, $from:ident);+ $(;)?) => {$(
+            pub fn $to(xs: &[$ty]) -> Bytes {
+                let mut v = Vec::with_capacity(std::mem::size_of_val(xs));
+                for x in xs {
+                    v.extend_from_slice(&x.to_le_bytes());
+                }
+                Arc::new(v)
+            }
+
+            pub fn $from(b: &[u8]) -> Result<Vec<$ty>> {
+                const WIDTH: usize = std::mem::size_of::<$ty>();
+                if b.len() % WIDTH != 0 {
+                    anyhow::bail!(
+                        "{}: {} bytes is not a multiple of the element \
+                         width {}",
+                        stringify!($from), b.len(), WIDTH
+                    );
+                }
+                Ok(b.chunks_exact(WIDTH)
+                    .map(|c| <$ty>::from_le_bytes(c.try_into().unwrap()))
+                    .collect())
+            }
+        )+};
     }
 
-    pub fn bytes_to_f32(b: &[u8]) -> Vec<f32> {
-        assert_eq!(b.len() % 4, 0);
-        b.chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect()
-    }
-
-    pub fn f64_to_bytes(xs: &[f64]) -> Bytes {
-        let mut v = Vec::with_capacity(xs.len() * 8);
-        for x in xs {
-            v.extend_from_slice(&x.to_le_bytes());
-        }
-        Arc::new(v)
-    }
-
-    pub fn bytes_to_f64(b: &[u8]) -> Vec<f64> {
-        assert_eq!(b.len() % 8, 0);
-        b.chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-            .collect()
-    }
-
-    pub fn u64_to_bytes(xs: &[u64]) -> Bytes {
-        let mut v = Vec::with_capacity(xs.len() * 8);
-        for x in xs {
-            v.extend_from_slice(&x.to_le_bytes());
-        }
-        Arc::new(v)
-    }
-
-    pub fn bytes_to_u64(b: &[u8]) -> Vec<u64> {
-        assert_eq!(b.len() % 8, 0);
-        b.chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-            .collect()
+    impl_cast! {
+        f32 => f32_to_bytes, bytes_to_f32;
+        f64 => f64_to_bytes, bytes_to_f64;
+        u32 => u32_to_bytes, bytes_to_u32;
+        u64 => u64_to_bytes, bytes_to_u64;
+        i64 => i64_to_bytes, bytes_to_i64;
     }
 }
 
@@ -228,6 +611,17 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_engine_kinds_rejected() {
+        // bp:0 would make node-level aggregation divide by zero.
+        assert!(EngineKind::parse("bp:0").is_err());
+        // Empty SST transport names can never resolve.
+        assert!(EngineKind::parse("sst:").is_err());
+        // Garbage aggregation counts are parse errors, not panics.
+        assert!(EngineKind::parse("bp:many").is_err());
+        assert!(EngineKind::parse("bp:-1").is_err());
+    }
+
+    #[test]
     fn engine_kind_display_round_trips() {
         for s in ["bp:6", "sst:tcp", "json"] {
             assert_eq!(EngineKind::parse(s).unwrap().to_string(), s);
@@ -235,12 +629,118 @@ mod tests {
     }
 
     #[test]
+    fn valid_kinds_survive_display_parse_display() {
+        for s in ["bp", "bp:12", "sst", "sst:inproc", "sst:tcp", "json"] {
+            let kind = EngineKind::parse(s).unwrap();
+            let rendered = kind.to_string();
+            assert_eq!(EngineKind::parse(&rendered).unwrap(), kind,
+                       "{s} -> {rendered} did not round-trip");
+        }
+    }
+
+    #[test]
     fn cast_round_trips() {
         let xs = vec![1.0f32, -2.5, 3.25];
-        assert_eq!(cast::bytes_to_f32(&cast::f32_to_bytes(&xs)), xs);
+        assert_eq!(cast::bytes_to_f32(&cast::f32_to_bytes(&xs)).unwrap(),
+                   xs);
         let ys = vec![1.0f64, -2.5];
-        assert_eq!(cast::bytes_to_f64(&cast::f64_to_bytes(&ys)), ys);
+        assert_eq!(cast::bytes_to_f64(&cast::f64_to_bytes(&ys)).unwrap(),
+                   ys);
         let zs = vec![7u64, 8, 9];
-        assert_eq!(cast::bytes_to_u64(&cast::u64_to_bytes(&zs)), zs);
+        assert_eq!(cast::bytes_to_u64(&cast::u64_to_bytes(&zs)).unwrap(),
+                   zs);
+        let us = vec![1u32, 2];
+        assert_eq!(cast::bytes_to_u32(&cast::u32_to_bytes(&us)).unwrap(),
+                   us);
+        let is = vec![-3i64, 4];
+        assert_eq!(cast::bytes_to_i64(&cast::i64_to_bytes(&is)).unwrap(),
+                   is);
+    }
+
+    #[test]
+    fn cast_misaligned_lengths_are_errors_not_panics() {
+        assert!(cast::bytes_to_f32(&[0u8; 5]).is_err());
+        assert!(cast::bytes_to_f64(&[0u8; 4]).is_err());
+        assert!(cast::bytes_to_u64(&[0u8; 9]).is_err());
+        assert!(cast::bytes_to_u32(&[0u8; 3]).is_err());
+        assert!(cast::bytes_to_i64(&[0u8; 1]).is_err());
+    }
+
+    #[test]
+    fn put_queue_validates_once_per_definition() {
+        let mut q = PutQueue::default();
+        let decl = VarDecl::new("/x", Datatype::F32, vec![8]);
+        let h1 = q.define(&decl).unwrap();
+        let h2 = q.define(&decl).unwrap();
+        assert_eq!(h1, h2);
+        // Conflicting redefinition.
+        let bad = VarDecl::new("/x", Datatype::F64, vec![8]);
+        assert!(q.define(&bad).is_err());
+        let bad2 = VarDecl::new("/x", Datatype::F32, vec![9]);
+        assert!(q.define(&bad2).is_err());
+    }
+
+    #[test]
+    fn put_queue_rejects_bad_chunks() {
+        let mut q = PutQueue::default();
+        let h = q
+            .define(&VarDecl::new("/x", Datatype::F32, vec![8]))
+            .unwrap();
+        // Wrong byte count.
+        assert!(q
+            .enqueue(&h, Chunk::new(vec![0], vec![4]),
+                     Arc::new(vec![0u8; 15]))
+            .is_err());
+        // Out of bounds.
+        assert!(q
+            .enqueue(&h, Chunk::new(vec![6], vec![4]),
+                     Arc::new(vec![0u8; 16]))
+            .is_err());
+        // Wrong rank.
+        assert!(q
+            .enqueue(&h, Chunk::new(vec![0, 0], vec![2, 2]),
+                     Arc::new(vec![0u8; 16]))
+            .is_err());
+        // Valid.
+        assert!(q
+            .enqueue(&h, Chunk::new(vec![4], vec![4]),
+                     Arc::new(vec![0u8; 16]))
+            .is_ok());
+        assert_eq!(q.pending_len(), 1);
+    }
+
+    #[test]
+    fn put_queue_span_is_writable_and_drains() {
+        let mut q = PutQueue::default();
+        let h = q
+            .define(&VarDecl::new("/x", Datatype::U64, vec![4]))
+            .unwrap();
+        {
+            let span = q.span(&h, Chunk::whole(vec![4])).unwrap();
+            assert_eq!(span.len(), 32);
+            span[0] = 7;
+        }
+        let drained = q.drain();
+        assert_eq!(drained.len(), 1);
+        let bytes = match drained.into_iter().next().unwrap().data {
+            PutPayload::Owned(v) => v,
+            _ => panic!("span must be engine-owned"),
+        };
+        assert_eq!(bytes[0], 7);
+        assert_eq!(q.pending_len(), 0);
+    }
+
+    #[test]
+    fn get_queue_lifecycle() {
+        let mut q = GetQueue::default();
+        let h = q.defer("/x", Chunk::whole(vec![4]));
+        // Not performed yet.
+        assert!(q.take(h).is_err());
+        let pending = q.drain_pending();
+        assert_eq!(pending.len(), 1);
+        q.complete(h, Arc::new(vec![1, 2, 3]));
+        assert_eq!(*q.take(h).unwrap(), vec![1, 2, 3]);
+        // Double-take fails.
+        assert!(q.take(h).is_err());
     }
 }

@@ -12,7 +12,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use super::engine::{Bytes, Engine, Mode, StepStatus, VarDecl, VarInfo};
+use super::engine::{
+    Bytes, Engine, GetHandle, GetQueue, Mode, PutQueue, StepStatus,
+    VarDecl, VarHandle, VarInfo,
+};
 use super::region;
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::types::Datatype;
@@ -136,7 +139,9 @@ pub struct JsonWriter {
     hostname: String,
     step: u64,
     current: Option<(BTreeMap<String, Attribute>,
-                     BTreeMap<String, (VarDecl, Vec<(Chunk, Bytes)>)>)>,
+                     BTreeMap<String, (VarHandle, Vec<(Chunk, Bytes)>)>)>,
+    /// Variable registry + deferred-put queue (two-phase API).
+    puts: PutQueue,
 }
 
 impl JsonWriter {
@@ -151,6 +156,7 @@ impl JsonWriter {
             hostname: hostname.to_string(),
             step: 0,
             current: None,
+            puts: PutQueue::default(),
         })
     }
 }
@@ -172,19 +178,43 @@ impl Engine for JsonWriter {
         Ok(StepStatus::Ok)
     }
 
-    fn put(&mut self, var: &VarDecl, chunk: Chunk, data: Bytes) -> Result<()> {
+    fn define_variable(&mut self, decl: &VarDecl) -> Result<VarHandle> {
+        self.puts.define(decl)
+    }
+
+    fn put_deferred(&mut self, var: &VarHandle, chunk: Chunk, data: Bytes)
+        -> Result<()>
+    {
+        if self.current.is_none() {
+            bail!("put outside step");
+        }
+        self.puts.enqueue(var, chunk, data)
+    }
+
+    fn put_span(&mut self, var: &VarHandle, chunk: Chunk)
+        -> Result<&mut [u8]>
+    {
+        if self.current.is_none() {
+            bail!("put_span outside step");
+        }
+        self.puts.span(var, chunk)
+    }
+
+    fn perform_puts(&mut self) -> Result<()> {
+        let pending = self.puts.drain();
+        if pending.is_empty() {
+            return Ok(());
+        }
         let (_, vars) = self
             .current
             .as_mut()
-            .ok_or_else(|| anyhow::anyhow!("put outside step"))?;
-        let expect = chunk.num_elements() as usize * var.dtype.size();
-        if data.len() != expect {
-            bail!("payload size mismatch for {}", var.name);
+            .ok_or_else(|| anyhow::anyhow!("perform_puts outside step"))?;
+        for p in pending {
+            vars.entry(p.var.name().to_string())
+                .or_insert_with(|| (p.var.clone(), Vec::new()))
+                .1
+                .push((p.chunk, p.data.into_bytes()));
         }
-        vars.entry(var.name.clone())
-            .or_insert_with(|| (var.clone(), Vec::new()))
-            .1
-            .push((chunk, data));
         Ok(())
     }
 
@@ -213,11 +243,22 @@ impl Engine for JsonWriter {
         Vec::new()
     }
 
-    fn get(&mut self, _var: &str, _sel: Chunk) -> Result<Bytes> {
+    fn get_deferred(&mut self, _var: &str, _selection: Chunk)
+        -> Result<GetHandle>
+    {
         bail!("get on a write-mode JSON engine")
     }
 
+    fn perform_gets(&mut self) -> Result<()> {
+        bail!("perform_gets on a write-mode JSON engine")
+    }
+
+    fn take_get(&mut self, _handle: GetHandle) -> Result<Bytes> {
+        bail!("take_get on a write-mode JSON engine")
+    }
+
     fn end_step(&mut self) -> Result<()> {
+        self.perform_puts()?;
         let (attrs, vars) = self
             .current
             .take()
@@ -227,7 +268,7 @@ impl Engine for JsonWriter {
             attr_obj.insert(k.clone(), attr_to_json(v));
         }
         let mut var_obj = BTreeMap::new();
-        for (name, (decl, chunks)) in &vars {
+        for (name, (handle, chunks)) in &vars {
             let mut chunk_arr = Vec::new();
             for (chunk, data) in chunks {
                 let mut c = BTreeMap::new();
@@ -245,15 +286,15 @@ impl Engine for JsonWriter {
                          Json::Num(self.rank as f64));
                 c.insert("hostname".into(),
                          Json::Str(self.hostname.clone()));
-                c.insert("data".into(), data_to_json(decl.dtype, data));
+                c.insert("data".into(), data_to_json(handle.dtype(), data));
                 chunk_arr.push(Json::Obj(c));
             }
             let mut v = BTreeMap::new();
             v.insert("dtype".into(),
-                     Json::Str(decl.dtype.name().to_string()));
+                     Json::Str(handle.dtype().name().to_string()));
             v.insert(
                 "shape".into(),
-                Json::Arr(decl.shape.iter()
+                Json::Arr(handle.shape().iter()
                           .map(|x| Json::Num(*x as f64)).collect()),
             );
             v.insert("chunks".into(), Json::Arr(chunk_arr));
@@ -285,6 +326,8 @@ pub struct JsonReader {
     dir: PathBuf,
     step: u64,
     current: Option<Json>,
+    /// Deferred-get queue (two-phase API).
+    gets: GetQueue,
 }
 
 impl JsonReader {
@@ -293,7 +336,12 @@ impl JsonReader {
         if !dir.is_dir() {
             bail!("{} is not a directory", dir.display());
         }
-        Ok(JsonReader { dir, step: 0, current: None })
+        Ok(JsonReader {
+            dir,
+            step: 0,
+            current: None,
+            gets: GetQueue::default(),
+        })
     }
 
     fn var(&self, name: &str) -> Option<&Json> {
@@ -337,10 +385,23 @@ impl Engine for JsonReader {
         Ok(StepStatus::Ok)
     }
 
-    fn put(&mut self, _var: &VarDecl, _chunk: Chunk, _data: Bytes)
-        -> Result<()>
-    {
+    fn define_variable(&mut self, _decl: &VarDecl) -> Result<VarHandle> {
+        bail!("define_variable on a read-mode JSON engine")
+    }
+
+    fn put_deferred(&mut self, _var: &VarHandle, _chunk: Chunk,
+                    _data: Bytes) -> Result<()> {
         bail!("put on a read-mode JSON engine")
+    }
+
+    fn put_span(&mut self, _var: &VarHandle, _chunk: Chunk)
+        -> Result<&mut [u8]>
+    {
+        bail!("put_span on a read-mode JSON engine")
+    }
+
+    fn perform_puts(&mut self) -> Result<()> {
+        bail!("perform_puts on a read-mode JSON engine")
     }
 
     fn put_attribute(&mut self, _name: &str, _value: Attribute) -> Result<()> {
@@ -417,7 +478,52 @@ impl Engine for JsonReader {
             .unwrap_or_default()
     }
 
-    fn get(&mut self, var: &str, selection: Chunk) -> Result<Bytes> {
+    fn get_deferred(&mut self, var: &str, selection: Chunk)
+        -> Result<GetHandle>
+    {
+        if self.current.is_none() {
+            bail!("get outside step");
+        }
+        if !self.available_variables().iter().any(|v| v.name == var) {
+            bail!("unknown variable {var:?}");
+        }
+        Ok(self.gets.defer(var, selection))
+    }
+
+    fn perform_gets(&mut self) -> Result<()> {
+        let pending = self.gets.drain_pending();
+        for g in pending {
+            let data = self.fetch(&g.var, &g.selection)?;
+            self.gets.complete(g.handle, data);
+        }
+        Ok(())
+    }
+
+    fn take_get(&mut self, handle: GetHandle) -> Result<Bytes> {
+        self.gets.take(handle)
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        // Deferred gets that were never performed are dropped: their
+        // handles die with the step.
+        self.gets.reset();
+        if self.current.take().is_none() {
+            bail!("end_step without begin_step");
+        }
+        self.step += 1;
+        Ok(())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        self.gets.reset();
+        self.current = None;
+        Ok(())
+    }
+}
+
+impl JsonReader {
+    /// Load one selection from the current step document.
+    fn fetch(&self, var: &str, selection: &Chunk) -> Result<Bytes> {
         let info = self
             .available_variables()
             .into_iter()
@@ -441,7 +547,7 @@ impl Engine for JsonReader {
                 .and_then(|e| e.as_u64_vec())
                 .ok_or_else(|| anyhow::anyhow!("chunk missing extent"))?;
             let chunk = Chunk { offset, extent };
-            if chunk.intersect(&selection).is_none() {
+            if chunk.intersect(selection).is_none() {
                 continue;
             }
             let arr = c
@@ -450,26 +556,13 @@ impl Engine for JsonReader {
                 .ok_or_else(|| anyhow::anyhow!("chunk missing data"))?;
             let data = json_to_data(info.dtype, arr)?;
             covered += region::copy_region(
-                &chunk, &data, &selection, &mut out, elem,
+                &chunk, &data, selection, &mut out, elem,
             );
         }
         if covered < selection.num_elements() {
             bail!("selection only partially covered");
         }
         Ok(Arc::new(out))
-    }
-
-    fn end_step(&mut self) -> Result<()> {
-        if self.current.take().is_none() {
-            bail!("end_step without begin_step");
-        }
-        self.step += 1;
-        Ok(())
-    }
-
-    fn close(&mut self) -> Result<()> {
-        self.current = None;
-        Ok(())
     }
 }
 
@@ -518,7 +611,8 @@ mod tests {
         assert_eq!(chunks[0].hostname, "nodeA");
         assert_eq!(chunks[0].source_rank, 2);
         let data = r.get(&vars[0].name, Chunk::new(vec![1], vec![4])).unwrap();
-        assert_eq!(cast::bytes_to_f32(&data), vec![2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(cast::bytes_to_f32(&data).unwrap(),
+                   vec![2.0, 3.0, 4.0, 5.0]);
         r.end_step().unwrap();
         assert_eq!(r.begin_step().unwrap(), StepStatus::EndOfStream);
         std::fs::remove_dir_all(&dir).ok();

@@ -26,5 +26,6 @@ pub mod transport;
 pub mod wire;
 
 pub use engine::{
-    Bytes, Engine, EngineKind, Mode, StepStatus, VarDecl, VarInfo,
+    Bytes, Engine, EngineKind, GetHandle, Mode, StepStatus, VarDecl,
+    VarHandle, VarInfo,
 };

@@ -68,7 +68,15 @@ pub struct SstStats {
     pub bytes_put: u64,
     pub bytes_served: u64,
     pub bytes_got: u64,
+    /// Individual selections requested/served (batch items).
     pub chunk_requests: u64,
+    /// Batched wire round trips: `GetBatch` requests sent (reader) /
+    /// served (writer). With the two-phase API this is one per writer
+    /// pair per step, however many chunks the step carries — the
+    /// "one wire message per step" property the benches assert.
+    pub batch_requests: u64,
+    /// Batched data replies received (reader) / sent (writer).
+    pub data_messages: u64,
 }
 
 /// One step staged at the writer: metadata + payloads keyed by variable.

@@ -1,5 +1,12 @@
 //! SST reader: subscribes to one or more writer ranks, merges their step
 //! announcements, and pulls assigned chunks.
+//!
+//! Two-phase read side: `get_deferred` enqueues selections;
+//! `perform_gets` plans the whole batch against the step's merged chunk
+//! table and contacts each owning writer **once** — one `GetBatch`
+//! request, one `GetBatchReply` — however many selections the batch
+//! carries. Exact-chunk selections over the in-process transport come
+//! back as the writer's own `Arc` (zero-copy, the RDMA analogy).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
@@ -8,11 +15,12 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::adios::engine::{
-    Bytes, Engine, Mode, StepStatus, VarDecl, VarInfo,
+    Bytes, DeferredGet, Engine, GetHandle, GetQueue, Mode, StepStatus,
+    VarHandle, VarDecl, VarInfo,
 };
 use crate::adios::region;
 use crate::adios::transport::{self, Conn, Recv};
-use crate::adios::wire::{Msg, StepMeta};
+use crate::adios::wire::{GetItem, GetReply, Msg, StepMeta};
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::Attribute;
 
@@ -69,6 +77,8 @@ pub struct SstReader {
     current: Option<CurrentStep>,
     stats: SstStats,
     next_req_id: u64,
+    /// Deferred-get queue (two-phase API).
+    gets: GetQueue,
     /// Steps skipped during announce reconciliation (writers discarded
     /// non-collectively).
     pub steps_skipped: u64,
@@ -108,6 +118,7 @@ impl SstReader {
             current: None,
             stats: SstStats::default(),
             next_req_id: 1,
+            gets: GetQueue::default(),
             steps_skipped: 0,
         })
     }
@@ -170,6 +181,46 @@ impl SstReader {
             }
         }
         out
+    }
+
+    /// Element size of a variable in the current step.
+    fn elem_size(&self, var: &str) -> Result<usize> {
+        self.current
+            .iter()
+            .flat_map(|c| c.metas.iter())
+            .flat_map(|m| m.vars.iter())
+            .find(|v| v.name == var)
+            .map(|v| v.dtype.size())
+            .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))
+    }
+
+    /// Receive one batched reply from writer `widx`, pumping other
+    /// traffic (step announces, close notices) into the pending queues.
+    fn recv_batch_reply(&mut self, widx: usize, req_id: u64)
+        -> Result<Vec<GetReply>>
+    {
+        loop {
+            match self.writers[widx].conn.recv()? {
+                Recv::Msg(Msg::GetBatchReply { req_id: r, items })
+                    if r == req_id =>
+                {
+                    return Ok(items)
+                }
+                Recv::Msg(Msg::StepAnnounce { step, meta }) => {
+                    // Next steps arriving while we read this one.
+                    self.writers[widx].pending.push_back((step, meta));
+                }
+                Recv::Msg(Msg::CloseStream) => {
+                    self.writers[widx].closed = true;
+                }
+                Recv::Msg(_) => {}
+                Recv::TimedOut => {}
+                Recv::Closed => bail!(
+                    "writer {} vanished mid-request",
+                    self.writers[widx].writer_rank
+                ),
+            }
+        }
     }
 }
 
@@ -237,10 +288,23 @@ impl Engine for SstReader {
         Ok(StepStatus::Ok)
     }
 
-    fn put(&mut self, _var: &VarDecl, _chunk: Chunk, _data: Bytes)
-        -> Result<()>
-    {
+    fn define_variable(&mut self, _decl: &VarDecl) -> Result<VarHandle> {
+        bail!("define_variable on a read-mode SST engine")
+    }
+
+    fn put_deferred(&mut self, _var: &VarHandle, _chunk: Chunk,
+                    _data: Bytes) -> Result<()> {
         bail!("put on a read-mode SST engine")
+    }
+
+    fn put_span(&mut self, _var: &VarHandle, _chunk: Chunk)
+        -> Result<&mut [u8]>
+    {
+        bail!("put_span on a read-mode SST engine")
+    }
+
+    fn perform_puts(&mut self) -> Result<()> {
+        bail!("perform_puts on a read-mode SST engine")
     }
 
     fn put_attribute(&mut self, _name: &str, _value: Attribute) -> Result<()> {
@@ -286,128 +350,179 @@ impl Engine for SstReader {
         names
     }
 
-    /// Load a selection, assembling it from per-writer requests.
-    ///
-    /// One request is issued per (writer chunk ∩ selection); requests to
-    /// different writers are pipelined (all sent before any response is
-    /// awaited). Only writers owning intersecting chunks are contacted —
-    /// the paper's "connections only between instances that exchange
-    /// data".
-    fn get(&mut self, var: &str, selection: Chunk) -> Result<Bytes> {
-        let cur = self
-            .current
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("get outside step"))?;
-        let step = cur.step;
-        let dtype = self
-            .available_variables()
-            .into_iter()
-            .find(|v| v.name == var)
-            .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))?
-            .dtype;
-        let elem = dtype.size();
-        let chunks = self.merged_chunks(var);
-
-        // Plan: per writer rank, the intersections to request.
-        let mut plan: BTreeMap<usize, Vec<Chunk>> = BTreeMap::new();
-        for info in &chunks {
-            if let Some(inter) = info.chunk.intersect(&selection) {
-                plan.entry(info.source_rank).or_default().push(inter);
-            }
+    /// Enqueue a selection load. Coverage is validated up front so a
+    /// selection no announced chunk can satisfy fails fast, before any
+    /// wire traffic.
+    fn get_deferred(&mut self, var: &str, selection: Chunk)
+        -> Result<GetHandle>
+    {
+        if self.current.is_none() {
+            bail!("get outside step");
         }
-        let total_planned: u64 =
-            plan.values().flatten().map(|c| c.num_elements()).sum();
-        if total_planned < selection.num_elements() {
+        self.elem_size(var)?; // unknown-variable check
+        let covered: u64 = self
+            .merged_chunks(var)
+            .iter()
+            .filter_map(|info| info.chunk.intersect(&selection))
+            .map(|c| c.num_elements())
+            .sum();
+        if covered < selection.num_elements() {
             bail!(
                 "selection {:?}+{:?} of {var:?} not fully covered by \
-                 announced chunks ({total_planned}/{})",
+                 announced chunks ({covered}/{})",
                 selection.offset,
                 selection.extent,
                 selection.num_elements()
             );
         }
+        Ok(self.gets.defer(var, selection))
+    }
 
-        // Fast path: selection exactly matches a single written chunk of a
-        // single writer — one request, zero reassembly (the *alignment*
-        // property in action).
-        let mut out: Vec<u8> = Vec::new();
-        let mut assembled = false;
+    /// Execute the whole deferred batch: one `GetBatch` request per
+    /// owning writer for *all* batched selections, then one reply per
+    /// writer, then reassembly. Only writers owning intersecting chunks
+    /// are contacted — the paper's "connections only between instances
+    /// that exchange data".
+    fn perform_gets(&mut self) -> Result<()> {
+        let pending: Vec<DeferredGet> = self.gets.drain_pending();
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let step = self
+            .current
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("perform_gets outside step"))?
+            .step;
 
-        // Send all requests first (pipelining across writers)...
-        let mut outstanding: Vec<(usize, u64, Chunk)> = Vec::new();
-        for (writer_rank, sels) in &plan {
+        // Plan: for every deferred get, the (writer, intersection)
+        // parts; grouped per writer into one batched request.
+        struct Part {
+            get_idx: usize,
+            sel: Chunk,
+        }
+        let mut per_writer: BTreeMap<usize, Vec<Part>> = BTreeMap::new();
+        let mut elem = Vec::with_capacity(pending.len());
+        let mut part_count = vec![0usize; pending.len()];
+        for (gi, g) in pending.iter().enumerate() {
+            elem.push(self.elem_size(&g.var)?);
+            let mut covered = 0u64;
+            for info in &self.merged_chunks(&g.var) {
+                if let Some(inter) = info.chunk.intersect(&g.selection) {
+                    covered += inter.num_elements();
+                    part_count[gi] += 1;
+                    per_writer
+                        .entry(info.source_rank)
+                        .or_default()
+                        .push(Part { get_idx: gi, sel: inter });
+                }
+            }
+            if covered < g.selection.num_elements() {
+                bail!(
+                    "selection {:?}+{:?} of {:?} not fully covered by \
+                     announced chunks ({covered}/{})",
+                    g.selection.offset,
+                    g.selection.extent,
+                    g.var,
+                    g.selection.num_elements()
+                );
+            }
+        }
+
+        // Send one batched request per writer (pipelined: all requests
+        // go out before any reply is awaited).
+        let mut sent: Vec<(usize, u64, Vec<Part>)> = Vec::new();
+        for (writer_rank, parts) in per_writer {
             let widx = self
                 .writers
                 .iter()
-                .position(|w| w.writer_rank == *writer_rank)
+                .position(|w| w.writer_rank == writer_rank)
                 .ok_or_else(|| {
                     anyhow::anyhow!("no connection to writer {writer_rank}")
                 })?;
-            for sel in sels {
-                let req_id = self.next_req_id;
-                self.next_req_id += 1;
-                self.writers[widx].conn.send(Msg::ChunkRequest {
-                    req_id,
-                    step,
-                    var: var.to_string(),
-                    sel: sel.clone(),
-                })?;
-                self.stats.chunk_requests += 1;
-                outstanding.push((widx, req_id, sel.clone()));
+            let req_id = self.next_req_id;
+            self.next_req_id += 1;
+            let items: Vec<GetItem> = parts
+                .iter()
+                .map(|p| GetItem {
+                    var: pending[p.get_idx].var.clone(),
+                    sel: p.sel.clone(),
+                })
+                .collect();
+            self.stats.chunk_requests += items.len() as u64;
+            self.stats.batch_requests += 1;
+            self.writers[widx]
+                .conn
+                .send(Msg::GetBatch { req_id, step, items })?;
+            sent.push((widx, req_id, parts));
+        }
+
+        // Collect one reply per writer and assemble. A get whose single
+        // part IS its selection passes the writer's Arc through
+        // untouched (zero-copy on inproc).
+        let mut passthrough: Vec<Option<Bytes>> = vec![None; pending.len()];
+        let mut buffers: Vec<Option<Vec<u8>>> = Vec::new();
+        buffers.resize_with(pending.len(), || None);
+        for (widx, req_id, parts) in sent {
+            let replies = self.recv_batch_reply(widx, req_id)?;
+            self.stats.data_messages += 1;
+            if replies.len() != parts.len() {
+                bail!(
+                    "writer {} replied {} items to a {}-item batch",
+                    self.writers[widx].writer_rank,
+                    replies.len(),
+                    parts.len()
+                );
             }
-        }
-
-        let single = outstanding.len() == 1
-            && outstanding[0].2 == selection;
-        if !single {
-            out = vec![0u8; selection.num_elements() as usize * elem];
-        }
-
-        // ... then collect responses (per-connection FIFO order).
-        for (widx, req_id, sub_sel) in outstanding {
-            let data = loop {
-                match self.writers[widx].conn.recv()? {
-                    Recv::Msg(Msg::ChunkData { req_id: r, data })
-                        if r == req_id =>
-                    {
-                        break data
-                    }
-                    Recv::Msg(Msg::ChunkError { req_id: r, error })
-                        if r == req_id =>
-                    {
-                        bail!("writer {} failed request: {error}",
-                              self.writers[widx].writer_rank)
-                    }
-                    Recv::Msg(Msg::StepAnnounce { step, meta }) => {
-                        // Next steps arriving while we read this one.
-                        self.writers[widx].pending.push_back((step, meta));
-                    }
-                    Recv::Msg(Msg::CloseStream) => {
-                        self.writers[widx].closed = true;
-                    }
-                    Recv::Msg(_) => {}
-                    Recv::TimedOut => {}
-                    Recv::Closed => bail!(
-                        "writer {} vanished mid-request",
+            for (part, reply) in parts.iter().zip(replies) {
+                let data = match reply {
+                    GetReply::Data(d) => d,
+                    GetReply::Error(e) => bail!(
+                        "writer {} failed request: {e}",
                         self.writers[widx].writer_rank
                     ),
+                };
+                self.stats.bytes_got += data.len() as u64;
+                let g = &pending[part.get_idx];
+                if part_count[part.get_idx] == 1
+                    && part.sel == g.selection
+                {
+                    passthrough[part.get_idx] = Some(data);
+                    continue;
                 }
-            };
-            self.stats.bytes_got += data.len() as u64;
-            if single {
-                return Ok(data);
+                let buf = buffers[part.get_idx].get_or_insert_with(|| {
+                    vec![
+                        0u8;
+                        g.selection.num_elements() as usize
+                            * elem[part.get_idx]
+                    ]
+                });
+                let copied = region::copy_region(
+                    &part.sel, &data, &g.selection, buf,
+                    elem[part.get_idx],
+                );
+                debug_assert_eq!(copied, part.sel.num_elements());
             }
-            let copied = region::copy_region(
-                &sub_sel, &data, &selection, &mut out, elem,
-            );
-            debug_assert_eq!(copied, sub_sel.num_elements());
-            assembled = true;
         }
-        debug_assert!(assembled || selection.num_elements() == 0);
-        Ok(Arc::new(out))
+
+        for (gi, g) in pending.iter().enumerate() {
+            let data = match passthrough[gi].take() {
+                Some(d) => d,
+                None => Arc::new(buffers[gi].take().unwrap_or_default()),
+            };
+            self.gets.complete(g.handle, data);
+        }
+        Ok(())
+    }
+
+    fn take_get(&mut self, handle: GetHandle) -> Result<Bytes> {
+        self.gets.take(handle)
     }
 
     fn end_step(&mut self) -> Result<()> {
+        // Deferred gets that were never performed are dropped: their
+        // handles could no longer be redeemed after the step closes, so
+        // fetching them here would move bytes straight into the void.
+        self.gets.reset();
         let cur = self
             .current
             .take()

@@ -1,4 +1,12 @@
-//! SST writer: stages steps in memory and serves chunk requests.
+//! SST writer: stages steps in memory and serves batched chunk requests.
+//!
+//! Two-phase write side: `put_deferred` / `put_span` enqueue into the
+//! engine's [`PutQueue`]; `perform_puts` (implied by `end_step`) moves
+//! the batch into the staged step in one pass. A step discarded under
+//! backpressure drops its deferred queue wholesale — no data movement.
+//! On the serving side one `GetBatch` request yields one `GetBatchReply`
+//! carrying every selection the reader deferred — one wire message per
+//! reader pair per step.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -9,11 +17,12 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::adios::engine::{
-    Bytes, Engine, Mode, StepStatus, VarDecl, VarInfo,
+    Bytes, Engine, GetHandle, Mode, PutQueue, StepStatus, VarDecl,
+    VarHandle, VarInfo,
 };
 use crate::adios::region;
 use crate::adios::transport::{self, ConnTx, Recv};
-use crate::adios::wire::{Msg, VarMeta};
+use crate::adios::wire::{GetReply, Msg, VarMeta};
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::Attribute;
 
@@ -108,6 +117,8 @@ pub struct SstWriter {
     stop: Arc<AtomicBool>,
     /// Step being built between begin_step/end_step.
     current: Option<StagedStep>,
+    /// Variable registry + deferred-put queue (two-phase API).
+    puts: PutQueue,
     next_step: u64,
     /// True if begin_step returned Discarded for the current step.
     discarding: bool,
@@ -168,6 +179,7 @@ impl SstWriter {
             service_threads,
             stop,
             current: None,
+            puts: PutQueue::default(),
             next_step: 0,
             discarding: false,
         })
@@ -292,22 +304,31 @@ fn serve_reader(
                     break;
                 }
                 match rx.recv_timeout(Duration::from_millis(100)) {
-                    Ok(Recv::Msg(Msg::ChunkRequest {
-                        req_id, step, var, sel,
-                    })) => {
+                    Ok(Recv::Msg(Msg::GetBatch { req_id, step, items })) => {
+                        // One lock acquisition, one reply message for the
+                        // whole batch — however many chunks it carries.
                         let reply = {
                             let mut sh = shared.lock().unwrap();
-                            sh.stats.chunk_requests += 1;
-                            match serve_request(&sh, step, &var, &sel) {
-                                Ok(data) => {
-                                    sh.stats.bytes_served += data.len() as u64;
-                                    Msg::ChunkData { req_id, data }
+                            sh.stats.batch_requests += 1;
+                            sh.stats.chunk_requests += items.len() as u64;
+                            let mut replies =
+                                Vec::with_capacity(items.len());
+                            for item in &items {
+                                match serve_request(
+                                    &sh, step, &item.var, &item.sel,
+                                ) {
+                                    Ok(data) => {
+                                        sh.stats.bytes_served +=
+                                            data.len() as u64;
+                                        replies.push(GetReply::Data(data));
+                                    }
+                                    Err(e) => replies.push(
+                                        GetReply::Error(format!("{e:#}")),
+                                    ),
                                 }
-                                Err(e) => Msg::ChunkError {
-                                    req_id,
-                                    error: format!("{e:#}"),
-                                },
                             }
+                            sh.stats.data_messages += 1;
+                            Msg::GetBatchReply { req_id, items: replies }
                         };
                         if peer.tx.lock().unwrap().send(reply).is_err() {
                             break;
@@ -406,6 +427,12 @@ impl Engine for SstWriter {
         if self.current.is_some() {
             bail!("begin_step while a step is open");
         }
+        if self.discarding {
+            // Previous discarded step was never end_step'ed: drop its
+            // deferred queue now.
+            self.discarding = false;
+            self.puts.discard();
+        }
         let step = self.next_step;
         let has_room = self.queue_has_room();
         let keep = match (&self.opts.group, self.opts.queue.policy) {
@@ -444,48 +471,80 @@ impl Engine for SstWriter {
         Ok(StepStatus::Ok)
     }
 
-    fn put(&mut self, var: &VarDecl, chunk: Chunk, data: Bytes) -> Result<()> {
+    fn define_variable(&mut self, decl: &VarDecl) -> Result<VarHandle> {
+        self.puts.define(decl)
+    }
+
+    fn put_deferred(&mut self, var: &VarHandle, chunk: Chunk, data: Bytes)
+        -> Result<()>
+    {
+        if self.current.is_none() && !self.discarding {
+            bail!("put outside step");
+        }
+        self.puts.enqueue(var, chunk, data)
+    }
+
+    fn put_span(&mut self, var: &VarHandle, chunk: Chunk)
+        -> Result<&mut [u8]>
+    {
+        if self.current.is_none() && !self.discarding {
+            bail!("put_span outside step");
+        }
+        self.puts.span(var, chunk)
+    }
+
+    fn perform_puts(&mut self) -> Result<()> {
+        if self.discarding {
+            // Discarded step: the whole deferred queue is dropped before
+            // any data movement — the producer continues unblocked.
+            self.puts.discard();
+            return Ok(());
+        }
+        let pending = self.puts.drain();
+        if pending.is_empty() {
+            return Ok(());
+        }
         let staged = self
             .current
             .as_mut()
-            .ok_or_else(|| anyhow::anyhow!("put outside step"))?;
-        let expect = chunk.num_elements() as usize * var.dtype.size();
-        if data.len() != expect {
-            bail!(
-                "put {}: payload {} bytes, chunk needs {expect}",
-                var.name,
-                data.len()
+            .ok_or_else(|| anyhow::anyhow!("perform_puts outside step"))?;
+        let mut put_bytes = 0u64;
+        for p in pending {
+            let info = WrittenChunkInfo::new(
+                p.chunk.clone(),
+                self.opts.rank,
+                self.opts.hostname.clone(),
             );
-        }
-        let info = WrittenChunkInfo::new(
-            chunk.clone(),
-            self.opts.rank,
-            self.opts.hostname.clone(),
-        );
-        match staged.meta.vars.iter_mut().find(|v| v.name == var.name) {
-            Some(vm) => {
-                if vm.dtype != var.dtype || vm.shape != var.shape {
-                    bail!("conflicting redeclaration of {}", var.name);
-                }
-                vm.chunks.push(info);
+            match staged
+                .meta
+                .vars
+                .iter_mut()
+                .find(|v| v.name == p.var.name())
+            {
+                Some(vm) => vm.chunks.push(info),
+                None => staged.meta.vars.push(VarMeta {
+                    name: p.var.name().to_string(),
+                    dtype: p.var.dtype(),
+                    shape: p.var.shape().to_vec(),
+                    chunks: vec![info],
+                }),
             }
-            None => staged.meta.vars.push(VarMeta {
-                name: var.name.clone(),
-                dtype: var.dtype,
-                shape: var.shape.clone(),
-                chunks: vec![info],
-            }),
+            let data = p.data.into_bytes();
+            put_bytes += data.len() as u64;
+            staged
+                .data
+                .entry(p.var.name().to_string())
+                .or_default()
+                .push((p.chunk, data));
         }
-        self.shared.lock().unwrap().stats.bytes_put += data.len() as u64;
-        staged
-            .data
-            .entry(var.name.clone())
-            .or_default()
-            .push((chunk, data));
+        self.shared.lock().unwrap().stats.bytes_put += put_bytes;
         Ok(())
     }
 
     fn put_attribute(&mut self, name: &str, value: Attribute) -> Result<()> {
+        if self.discarding {
+            return Ok(()); // discarded step: metadata is dropped too
+        }
         let staged = self
             .current
             .as_mut()
@@ -510,15 +569,27 @@ impl Engine for SstWriter {
         Vec::new()
     }
 
-    fn get(&mut self, _var: &str, _sel: Chunk) -> Result<Bytes> {
+    fn get_deferred(&mut self, _var: &str, _selection: Chunk)
+        -> Result<GetHandle>
+    {
         bail!("get on a write-mode SST engine")
+    }
+
+    fn perform_gets(&mut self) -> Result<()> {
+        bail!("perform_gets on a write-mode SST engine")
+    }
+
+    fn take_get(&mut self, _handle: GetHandle) -> Result<Bytes> {
+        bail!("take_get on a write-mode SST engine")
     }
 
     fn end_step(&mut self) -> Result<()> {
         if self.discarding {
             self.discarding = false;
+            self.puts.discard();
             return Ok(());
         }
+        self.perform_puts()?;
         let staged = self
             .current
             .take()
@@ -549,7 +620,7 @@ impl Engine for SstWriter {
     }
 
     fn close(&mut self) -> Result<()> {
-        if self.current.is_some() {
+        if self.current.is_some() || self.discarding {
             self.end_step()?;
         }
         {

@@ -24,7 +24,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 use once_cell::sync::Lazy;
 
-use super::wire::{decode_msg, encode_msg, Msg};
+use super::wire::{decode_msg, encode_msg, GetReply, Msg};
 
 /// Receive outcome for the non-blocking path.
 pub enum Recv {
@@ -290,18 +290,54 @@ impl TcpConn {
 }
 
 fn tcp_write_frame(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
-    // Fast path for the data plane: stream the payload directly from its
-    // Arc instead of copying it into an encode buffer first. The wire
-    // format is identical to encode_msg's (tag, req_id, len, bytes).
-    if let Msg::ChunkData { req_id, data } = msg {
-        let mut header = [0u8; 8 + 1 + 8 + 8];
-        let body_len = (1 + 8 + 8 + data.len()) as u64;
-        header[..8].copy_from_slice(&body_len.to_le_bytes());
-        header[8] = 5; // ChunkData tag
-        header[9..17].copy_from_slice(&req_id.to_le_bytes());
-        header[17..25].copy_from_slice(&(data.len() as u64).to_le_bytes());
-        stream.write_all(&header)?;
-        stream.write_all(data)?;
+    // Fast path for the data plane: stream each payload directly from
+    // its Arc instead of copying the whole batch into an encode buffer
+    // first. The wire format is identical to encode_msg's
+    // (tag, req_id, count, then per item: flag + len + bytes).
+    if let Msg::GetBatchReply { req_id, items } = msg {
+        let mut body_len = 1u64 + 8 + 8;
+        for item in items {
+            body_len += 9;
+            body_len += match item {
+                GetReply::Data(d) => d.len() as u64,
+                GetReply::Error(e) => e.len() as u64,
+            };
+        }
+        // Coalesce the frame header, item headers, error strings and
+        // small payloads into one buffer (NODELAY sockets would
+        // otherwise emit a tiny segment per 9-byte item header); only
+        // large payloads are streamed directly from their Arc.
+        const STREAM_THRESHOLD: usize = 64 << 10;
+        let mut coalesced = Vec::with_capacity(256);
+        coalesced.extend_from_slice(&body_len.to_le_bytes());
+        coalesced.push(5); // GetBatchReply tag
+        coalesced.extend_from_slice(&req_id.to_le_bytes());
+        coalesced.extend_from_slice(&(items.len() as u64).to_le_bytes());
+        for item in items {
+            match item {
+                GetReply::Data(d) => {
+                    coalesced.push(1);
+                    coalesced
+                        .extend_from_slice(&(d.len() as u64).to_le_bytes());
+                    if d.len() < STREAM_THRESHOLD {
+                        coalesced.extend_from_slice(d);
+                    } else {
+                        stream.write_all(&coalesced)?;
+                        coalesced.clear();
+                        stream.write_all(d)?;
+                    }
+                }
+                GetReply::Error(e) => {
+                    coalesced.push(0);
+                    coalesced
+                        .extend_from_slice(&(e.len() as u64).to_le_bytes());
+                    coalesced.extend_from_slice(e.as_bytes());
+                }
+            }
+        }
+        if !coalesced.is_empty() {
+            stream.write_all(&coalesced)?;
+        }
         return Ok(());
     }
     let body = encode_msg(msg);
@@ -340,29 +376,61 @@ fn tcp_read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Recv> {
     // set: a partial frame would corrupt the stream.
     stream.set_read_timeout(None)?;
 
-    // Fast path for the data plane: route the payload straight into its
-    // own allocation — no intermediate frame buffer, no zero-fill, no
-    // decode copy. (Read the 1-byte tag first to dispatch.)
+    // Fast path for the data plane: route each payload of a batched
+    // reply straight into its own allocation — no intermediate frame
+    // buffer, no zero-fill, no decode copy. (Read the 1-byte tag first
+    // to dispatch.)
     let mut tag = [0u8; 1];
     stream.read_exact(&mut tag)?;
     if tag[0] == 5 && len >= 17 {
         let mut head = [0u8; 16];
         stream.read_exact(&mut head)?;
         let req_id = u64::from_le_bytes(head[..8].try_into().unwrap());
-        let data_len =
-            u64::from_le_bytes(head[8..].try_into().unwrap()) as usize;
-        if data_len != len - 17 {
-            bail!("ChunkData length mismatch: {data_len} vs {}", len - 17);
+        let n = u64::from_le_bytes(head[8..].try_into().unwrap()) as usize;
+        // Each item carries at least a 9-byte header; bounding n by the
+        // frame length keeps a corrupt count from pre-allocating
+        // gigabytes before the first item read fails.
+        if n > 1 << 24 || n > (len - 17) / 9 + 1 {
+            bail!("implausible batch item count {n}");
         }
-        let mut data = Vec::with_capacity(data_len);
-        let read = stream.take(data_len as u64).read_to_end(&mut data)?;
-        if read != data_len {
-            return Ok(Recv::Closed);
+        let mut consumed = 17u64; // tag + req_id + count
+        let mut items = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut item_head = [0u8; 9];
+            stream.read_exact(&mut item_head)?;
+            let flag = item_head[0];
+            let item_len = u64::from_le_bytes(
+                item_head[1..9].try_into().unwrap(),
+            ) as usize;
+            consumed += 9 + item_len as u64;
+            if consumed > len as u64 {
+                bail!("batch reply overruns its frame");
+            }
+            if flag == 1 {
+                let mut data = Vec::with_capacity(item_len);
+                let read = (&mut *stream)
+                    .take(item_len as u64)
+                    .read_to_end(&mut data)?;
+                if read != item_len {
+                    return Ok(Recv::Closed);
+                }
+                items.push(GetReply::Data(Arc::new(data)));
+            } else if flag == 0 {
+                let mut err = vec![0u8; item_len];
+                stream.read_exact(&mut err)?;
+                items.push(GetReply::Error(
+                    String::from_utf8_lossy(&err).into_owned(),
+                ));
+            } else {
+                // Match decode_msg: unknown flags are protocol errors,
+                // not garbage Error items.
+                bail!("bad batch-reply flag {flag}");
+            }
         }
-        return Ok(Recv::Msg(Msg::ChunkData {
-            req_id,
-            data: std::sync::Arc::new(data),
-        }));
+        if consumed != len as u64 {
+            bail!("batch reply length mismatch: {consumed} vs {len}");
+        }
+        return Ok(Recv::Msg(Msg::GetBatchReply { req_id, items }));
     }
     buf.clear();
     buf.reserve(len);
@@ -601,7 +669,7 @@ mod tests {
     }
 
     #[test]
-    fn large_payload_over_tcp() {
+    fn large_batched_payload_over_tcp() {
         let mut l = TcpTransport.listen("127.0.0.1:0").unwrap();
         let addr = l.address();
         let payload = Arc::new((0..2_000_000u32)
@@ -610,18 +678,40 @@ mod tests {
         let p2 = payload.clone();
         let t = std::thread::spawn(move || {
             let mut c = TcpTransport.dial(&addr).unwrap();
-            c.send(Msg::ChunkData { req_id: 7, data: p2 }).unwrap();
+            c.send(Msg::GetBatchReply {
+                req_id: 7,
+                items: vec![
+                    GetReply::Data(p2),
+                    GetReply::Error("second item failed".into()),
+                    GetReply::Data(Arc::new(vec![9u8; 3])),
+                ],
+            })
+            .unwrap();
         });
         let mut server = l
             .accept_timeout(Duration::from_secs(5))
             .unwrap()
             .unwrap();
         match server.recv().unwrap() {
-            Recv::Msg(Msg::ChunkData { req_id, data }) => {
+            Recv::Msg(Msg::GetBatchReply { req_id, items }) => {
                 assert_eq!(req_id, 7);
-                assert_eq!(*data, *payload);
+                assert_eq!(items.len(), 3);
+                match &items[0] {
+                    GetReply::Data(d) => assert_eq!(**d, *payload),
+                    other => panic!("wrong item 0: {other:?}"),
+                }
+                match &items[1] {
+                    GetReply::Error(e) => {
+                        assert_eq!(e, "second item failed")
+                    }
+                    other => panic!("wrong item 1: {other:?}"),
+                }
+                match &items[2] {
+                    GetReply::Data(d) => assert_eq!(**d, vec![9u8; 3]),
+                    other => panic!("wrong item 2: {other:?}"),
+                }
             }
-            _ => panic!("expected ChunkData"),
+            _ => panic!("expected GetBatchReply"),
         }
         t.join().unwrap();
     }

@@ -33,6 +33,22 @@ pub struct StepMeta {
     pub vars: Vec<VarMeta>,
 }
 
+/// One selection within a batched get request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GetItem {
+    pub var: String,
+    pub sel: Chunk,
+}
+
+/// Per-item outcome within a batched get reply.
+#[derive(Clone, Debug)]
+pub enum GetReply {
+    /// Dense row-major bytes for the requested selection.
+    Data(Bytes),
+    /// The item failed; the rest of the batch is still valid.
+    Error(String),
+}
+
 /// Protocol messages.
 #[derive(Clone, Debug)]
 pub enum Msg {
@@ -42,12 +58,16 @@ pub enum Msg {
     HelloAck { writer_rank: usize, hostname: String },
     /// Writer -> reader: a step is available.
     StepAnnounce { step: u64, meta: StepMeta },
-    /// Reader -> writer: request a region of a variable.
-    ChunkRequest { req_id: u64, step: u64, var: String, sel: Chunk },
-    /// Writer -> reader: requested data (dense row-major for `sel`).
-    ChunkData { req_id: u64, data: Bytes },
-    /// Writer -> reader: request failed.
-    ChunkError { req_id: u64, error: String },
+    /// Reader -> writer: one batched request covering every deferred
+    /// selection this reader wants from this writer for `step` — the
+    /// two-phase API's `perform_gets` sends exactly one of these per
+    /// writer per step instead of one message per chunk.
+    GetBatch { req_id: u64, step: u64, items: Vec<GetItem> },
+    /// Writer -> reader: the batched reply, one entry per request item,
+    /// in request order. `Bytes` payloads travel as `Arc`s over the
+    /// in-process transport (zero-copy) and are streamed without an
+    /// intermediate buffer over TCP.
+    GetBatchReply { req_id: u64, items: Vec<GetReply> },
     /// Reader -> writer: finished reading a step (lets the writer
     /// retire it from the staging queue).
     StepDone { step: u64 },
@@ -63,9 +83,8 @@ impl Msg {
             Msg::Hello { .. } => 1,
             Msg::HelloAck { .. } => 2,
             Msg::StepAnnounce { .. } => 3,
-            Msg::ChunkRequest { .. } => 4,
-            Msg::ChunkData { .. } => 5,
-            Msg::ChunkError { .. } => 6,
+            Msg::GetBatch { .. } => 4,
+            Msg::GetBatchReply { .. } => 5,
             Msg::StepDone { .. } => 7,
             Msg::CloseStream => 8,
             Msg::ReaderBye => 9,
@@ -239,20 +258,31 @@ pub fn encode_msg(msg: &Msg) -> Vec<u8> {
             put_u64(&mut out, *step);
             meta.encode(&mut out);
         }
-        Msg::ChunkRequest { req_id, step, var, sel } => {
+        Msg::GetBatch { req_id, step, items } => {
             put_u64(&mut out, *req_id);
             put_u64(&mut out, *step);
-            put_str(&mut out, var);
-            put_chunk(&mut out, sel);
+            put_u64(&mut out, items.len() as u64);
+            for item in items {
+                put_str(&mut out, &item.var);
+                put_chunk(&mut out, &item.sel);
+            }
         }
-        Msg::ChunkData { req_id, data } => {
+        Msg::GetBatchReply { req_id, items } => {
             put_u64(&mut out, *req_id);
-            put_u64(&mut out, data.len() as u64);
-            out.extend_from_slice(data);
-        }
-        Msg::ChunkError { req_id, error } => {
-            put_u64(&mut out, *req_id);
-            put_str(&mut out, error);
+            put_u64(&mut out, items.len() as u64);
+            for item in items {
+                match item {
+                    GetReply::Data(data) => {
+                        out.push(1);
+                        put_u64(&mut out, data.len() as u64);
+                        out.extend_from_slice(data);
+                    }
+                    GetReply::Error(error) => {
+                        out.push(0);
+                        put_str(&mut out, error);
+                    }
+                }
+            }
         }
         Msg::StepDone { step } => put_u64(&mut out, *step),
         Msg::CloseStream | Msg::ReaderBye => {}
@@ -271,17 +301,43 @@ pub fn decode_msg(buf: &[u8]) -> Result<Msg> {
             hostname: r.str()?,
         },
         3 => Msg::StepAnnounce { step: r.u64()?, meta: StepMeta::decode(&mut r)? },
-        4 => Msg::ChunkRequest {
-            req_id: r.u64()?,
-            step: r.u64()?,
-            var: r.str()?,
-            sel: get_chunk(&mut r)?,
-        },
-        5 => Msg::ChunkData {
-            req_id: r.u64()?,
-            data: std::sync::Arc::new(r.bytes()?),
-        },
-        6 => Msg::ChunkError { req_id: r.u64()?, error: r.str()? },
+        4 => {
+            let req_id = r.u64()?;
+            let step = r.u64()?;
+            let n = r.u64()? as usize;
+            // Every encoded item is at least 24 bytes (name len + two
+            // chunk-vec lens); bounding n by the remaining buffer keeps
+            // a corrupt count from pre-allocating gigabytes.
+            if n > 1 << 24 || n > r.remaining() / 24 + 1 {
+                bail!("implausible batch item count {n}");
+            }
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                let var = r.str()?;
+                let sel = get_chunk(&mut r)?;
+                items.push(GetItem { var, sel });
+            }
+            Msg::GetBatch { req_id, step, items }
+        }
+        5 => {
+            let req_id = r.u64()?;
+            let n = r.u64()? as usize;
+            // Every encoded item is at least 9 bytes (flag + length);
+            // see the tag-4 arm for why the count is bounded by the
+            // buffer before allocating.
+            if n > 1 << 24 || n > r.remaining() / 9 + 1 {
+                bail!("implausible batch item count {n}");
+            }
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                items.push(match r.u8()? {
+                    1 => GetReply::Data(std::sync::Arc::new(r.bytes()?)),
+                    0 => GetReply::Error(r.str()?),
+                    other => bail!("bad batch-reply flag {other}"),
+                });
+            }
+            Msg::GetBatchReply { req_id, items }
+        }
         7 => Msg::StepDone { step: r.u64()? },
         8 => Msg::CloseStream,
         9 => Msg::ReaderBye,
@@ -333,31 +389,68 @@ mod tests {
     }
 
     #[test]
-    fn chunk_request_round_trips() {
-        match round_trip(Msg::ChunkRequest {
+    fn get_batch_round_trips() {
+        let items = vec![
+            GetItem { var: "v".into(),
+                      sel: Chunk::new(vec![5, 0], vec![10, 3]) },
+            GetItem { var: "w".into(), sel: Chunk::new(vec![0], vec![7]) },
+        ];
+        match round_trip(Msg::GetBatch {
             req_id: 9,
             step: 1,
-            var: "v".into(),
-            sel: Chunk::new(vec![5, 0], vec![10, 3]),
+            items: items.clone(),
         }) {
-            Msg::ChunkRequest { req_id, step, var, sel } => {
-                assert_eq!((req_id, step, var.as_str()), (9, 1, "v"));
-                assert_eq!(sel, Chunk::new(vec![5, 0], vec![10, 3]));
+            Msg::GetBatch { req_id, step, items: got } => {
+                assert_eq!((req_id, step), (9, 1));
+                assert_eq!(got, items);
             }
             other => panic!("wrong variant {other:?}"),
         }
     }
 
     #[test]
-    fn chunk_data_round_trips() {
+    fn get_batch_reply_round_trips() {
         let data = Arc::new(vec![1u8, 2, 3, 4, 5]);
-        match round_trip(Msg::ChunkData { req_id: 1, data: data.clone() }) {
-            Msg::ChunkData { req_id, data: d } => {
+        match round_trip(Msg::GetBatchReply {
+            req_id: 1,
+            items: vec![
+                GetReply::Data(data.clone()),
+                GetReply::Error("nope".into()),
+                GetReply::Data(Arc::new(Vec::new())),
+            ],
+        }) {
+            Msg::GetBatchReply { req_id, items } => {
                 assert_eq!(req_id, 1);
-                assert_eq!(*d, *data);
+                assert_eq!(items.len(), 3);
+                match &items[0] {
+                    GetReply::Data(d) => assert_eq!(**d, *data),
+                    other => panic!("wrong item {other:?}"),
+                }
+                match &items[1] {
+                    GetReply::Error(e) => assert_eq!(e, "nope"),
+                    other => panic!("wrong item {other:?}"),
+                }
+                match &items[2] {
+                    GetReply::Data(d) => assert!(d.is_empty()),
+                    other => panic!("wrong item {other:?}"),
+                }
             }
             other => panic!("wrong variant {other:?}"),
         }
+    }
+
+    #[test]
+    fn empty_batches_round_trip() {
+        assert!(matches!(
+            round_trip(Msg::GetBatch { req_id: 3, step: 0,
+                                       items: Vec::new() }),
+            Msg::GetBatch { req_id: 3, items, .. } if items.is_empty()
+        ));
+        assert!(matches!(
+            round_trip(Msg::GetBatchReply { req_id: 4,
+                                            items: Vec::new() }),
+            Msg::GetBatchReply { req_id: 4, items } if items.is_empty()
+        ));
     }
 
     #[test]

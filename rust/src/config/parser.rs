@@ -60,12 +60,20 @@ impl ConfigValue {
 }
 
 /// Parse error with location.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("config parse error at line {line}: {message}")]
+#[derive(Debug, PartialEq)]
 pub struct ParseError {
     pub line: usize,
     pub message: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line,
+               self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 fn err(line: usize, message: impl Into<String>) -> ParseError {
     ParseError { line, message: message.into() }

@@ -14,7 +14,20 @@
 //!   binary-pack file engine with node-level aggregation, the SST
 //!   streaming/staging engine (publish/subscribe loose coupling) over
 //!   pluggable data transports (in-process "RDMA"-analog, TCP sockets),
-//!   and a serial JSON backend for prototyping.
+//!   and a serial JSON backend for prototyping. The API is **two-phase
+//!   and handle-based** (engine v2), mirroring ADIOS2's deferred model:
+//!   `define_variable` returns a typed [`adios::VarHandle`];
+//!   `put_deferred`/`put_span` and `get_deferred` only enqueue;
+//!   `perform_puts`/`perform_gets` execute a whole step's batch at once
+//!   (`end_step` implies the final perform). Deferred batching is what
+//!   lets a step's chunks travel as one staging exchange — one wire
+//!   message per writer pair per step over SST — so IO overlaps compute
+//!   instead of pacing it; `put_span` serializes producer data directly
+//!   into the engine's staging buffer (zero-copy on the in-process
+//!   transport). The eager `put`/`get` of engine v1 remain as provided
+//!   conveniences built on the deferred core, and an engine-conformance
+//!   suite ([`testing::engine_conformance`]) proves deferred and eager
+//!   paths byte-identical for every backend.
 //! * [`distribution`] — the paper's §3 contribution: chunk-distribution
 //!   strategies (round-robin, hyperslab slicing, binpacking, two-phase
 //!   by-hostname) plus quality metrics (locality / balance / alignment).
@@ -49,6 +62,8 @@ pub mod runtime;
 pub mod testing;
 pub mod util;
 
-pub use adios::{Engine, EngineKind, Mode, StepStatus};
+pub use adios::{
+    Engine, EngineKind, GetHandle, Mode, StepStatus, VarDecl, VarHandle,
+};
 pub use distribution::{Assignment, ChunkTable, Strategy};
 pub use openpmd::Series;

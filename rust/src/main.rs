@@ -220,10 +220,17 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         };
         let n = px.shape[0];
         let sel = Chunk::whole(vec![n]);
-        let x = cast::bytes_to_f32(&reader.get(&px.name, sel.clone())?);
-        let y = cast::bytes_to_f32(&reader.get(&py.name, sel.clone())?);
-        let z = cast::bytes_to_f32(&reader.get(&pz.name, sel.clone())?);
-        let wv = cast::bytes_to_f32(&reader.get(&w.name, sel)?);
+        // Two-phase: defer all four component loads, perform them as one
+        // batch (one seek-ordered sweep over the BP step), then redeem.
+        let hx = reader.get_deferred(&px.name, sel.clone())?;
+        let hy = reader.get_deferred(&py.name, sel.clone())?;
+        let hz = reader.get_deferred(&pz.name, sel.clone())?;
+        let hw = reader.get_deferred(&w.name, sel)?;
+        reader.perform_gets()?;
+        let x = cast::bytes_to_f32(&reader.take_get(hx)?)?;
+        let y = cast::bytes_to_f32(&reader.take_get(hy)?)?;
+        let z = cast::bytes_to_f32(&reader.take_get(hz)?)?;
+        let wv = cast::bytes_to_f32(&reader.take_get(hw)?)?;
         let mut pos = Vec::with_capacity(x.len() * 3);
         for i in 0..x.len() {
             pos.extend_from_slice(&[x[i], y[i], z[i]]);

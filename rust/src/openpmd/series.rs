@@ -9,6 +9,15 @@
 //! or JSON — unchanged, which is exactly the paper's *reusability*
 //! property: upgrading a file-based IO routine to streaming is a runtime
 //! engine switch.
+//!
+//! **Flush model** (openPMD-api style): `RecordComponent::store_chunk`
+//! only *stages* data in the application object; [`Series::
+//! write_iteration`] is the `series.flush()` — it declares every record
+//! component once via `define_variable`, enqueues every staged chunk with
+//! `put_deferred` (no copies — the `Arc`s are handed through), and ends
+//! the step, which performs the whole batch as one exchange. On the SST
+//! path a full iteration therefore costs one staging pass and one
+//! announce, however many chunks it carries.
 
 use std::collections::BTreeMap;
 
@@ -72,12 +81,16 @@ impl Series {
         Series { attributes, base_flushed: false }
     }
 
-    /// Flush one iteration as one engine step. Consumes the staged chunk
-    /// writes of every record component.
+    /// Flush one iteration as one engine step — the openPMD-api
+    /// `series.flush()`. Consumes the staged chunk writes of every
+    /// record component: each component is declared once
+    /// (`define_variable`), its staged chunks are enqueued with
+    /// `put_deferred`, and `end_step` performs the whole batch.
     ///
     /// Returns the step status: on [`StepStatus::Discarded`] (SST
     /// backpressure) nothing was sent and pending data is dropped —
-    /// mirroring ADIOS2, where a discarded step's puts never happen.
+    /// mirroring ADIOS2, where a discarded step's deferred puts never
+    /// happen.
     pub fn write_iteration(
         &mut self,
         engine: &mut dyn Engine,
@@ -289,10 +302,13 @@ fn flush_record(
         let cpath = component_path(rpath, cname);
         engine.put_attribute(&format!("{cpath}/unitSI"),
                              Attribute::F64(comp.unit_si))?;
+        // Two-phase: declare once, enqueue every staged chunk; the
+        // caller's end_step performs the whole iteration as one batch.
         let decl = VarDecl::new(cpath.clone(), comp.dataset.dtype,
                                 comp.dataset.extent.clone());
+        let handle = engine.define_variable(&decl)?;
         for (chunk, data) in comp.take_pending() {
-            engine.put(&decl, chunk, data)?;
+            engine.put_deferred(&handle, chunk, data)?;
         }
     }
     Ok(())

@@ -4,12 +4,13 @@
 //! examples) need realistic openPMD step structure at arbitrary sizes
 //! without paying for particle pushes. The synthetic producer emits the
 //! same species layout (`position`/`momentum`/`weighting`, one chunk per
-//! rank) with deterministic pseudo-random payloads, generated at memory
-//! bandwidth.
+//! rank) with deterministic pseudo-random payloads — serialized straight
+//! into the engine's staging buffer via `put_span`, so the hot path
+//! performs zero intermediate copies.
 
 use anyhow::Result;
 
-use crate::adios::engine::{Bytes, Engine, StepStatus, VarDecl};
+use crate::adios::engine::{Engine, StepStatus, VarDecl};
 use crate::openpmd::chunk::Chunk;
 use crate::openpmd::series::var_name;
 use crate::openpmd::types::Datatype;
@@ -26,8 +27,6 @@ pub struct SyntheticProducer {
     pub global_n: u64,
     rng: Rng,
     step: u64,
-    /// Reused payload buffer (regenerated per step, allocated once).
-    payload: Vec<f32>,
 }
 
 impl SyntheticProducer {
@@ -40,7 +39,6 @@ impl SyntheticProducer {
             global_n,
             rng: Rng::new(seed ^ rank as u64),
             step: 0,
-            payload: vec![0.0; n],
         }
     }
 
@@ -58,18 +56,19 @@ impl SyntheticProducer {
         self.n as u64 * 7 * 4
     }
 
-    fn fill(&mut self, scale: f32) -> Bytes {
-        for x in self.payload.iter_mut() {
-            *x = self.rng.f32() * scale;
+    /// Serialize one component's pseudo-random payload directly into an
+    /// engine staging span (no intermediate buffer).
+    fn fill_span(&mut self, scale: f32, span: &mut [u8]) {
+        for slot in span.chunks_exact_mut(4) {
+            let v = self.rng.f32() * scale;
+            slot.copy_from_slice(&v.to_le_bytes());
         }
-        let mut out = Vec::with_capacity(self.payload.len() * 4);
-        for v in &self.payload {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
-        std::sync::Arc::new(out)
     }
 
-    /// Write one step of openPMD-shaped particle data.
+    /// Write one step of openPMD-shaped particle data through the
+    /// two-phase API: every component is declared, serialized into a
+    /// `put_span` staging buffer, and the whole step is performed by
+    /// `end_step` as one batch.
     /// Returns the step status from the engine (discards propagate).
     pub fn write_step(&mut self, engine: &mut dyn Engine)
         -> Result<StepStatus>
@@ -97,8 +96,9 @@ impl SyntheticProducer {
                     Datatype::F32,
                     vec![self.global_n],
                 );
-                let data = self.fill(64.0);
-                engine.put(&decl, chunk.clone(), data)?;
+                let handle = engine.define_variable(&decl)?;
+                let span = engine.put_span(&handle, chunk.clone())?;
+                self.fill_span(64.0, span);
             }
         }
         let decl = VarDecl::new(
@@ -106,8 +106,9 @@ impl SyntheticProducer {
             Datatype::F32,
             vec![self.global_n],
         );
-        let data = self.fill(1.0);
-        engine.put(&decl, chunk, data)?;
+        let handle = engine.define_variable(&decl)?;
+        let span = engine.put_span(&handle, chunk)?;
+        self.fill_span(1.0, span);
         engine.end_step()?;
         self.step += 1;
         Ok(StepStatus::Ok)

@@ -1,0 +1,290 @@
+//! Engine-conformance suite for the two-phase (deferred) engine API.
+//!
+//! Every backend — BP, JSON, SST over any transport — must satisfy the
+//! same contract:
+//!
+//! 1. **Ordering**: `define_variable` works outside steps; `put_deferred`
+//!    / `put_span` require an open step; double `begin_step` fails;
+//!    `take_get` before `perform_gets` fails; handles die at step end.
+//! 2. **Perform-before-end equivalence**: a step whose puts were
+//!    performed explicitly is byte-identical to one relying on
+//!    `end_step`'s implicit perform.
+//! 3. **Deferred == eager, byte for byte**: for any selection, the
+//!    `get_deferred` + `perform_gets` + `take_get` batch returns exactly
+//!    what the eager `get` returns.
+//! 4. **Span == shared payload**: data serialized through `put_span`
+//!    reads back identically to data handed in by `Arc`.
+//! 5. **Validation is `Result`, not panic**: wrong payload sizes,
+//!    out-of-bounds chunks and conflicting redeclarations are errors
+//!    that leave the engine usable.
+//!
+//! Drive it from an integration test with one factory per backend; the
+//! writer is closed on a background thread because SST's `close` lingers
+//! until subscribed readers drain.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::adios::engine::{cast, Engine, StepStatus, VarDecl};
+use crate::openpmd::chunk::Chunk;
+use crate::openpmd::types::Datatype;
+use crate::openpmd::Attribute;
+
+/// A writer plus a way to open a reader onto what it wrote. The reader
+/// factory is invoked after all steps are written but *before* the
+/// writer is closed (SST readers must subscribe while the stream lives;
+/// file readers do not care).
+pub struct ConformancePair {
+    pub writer: Box<dyn Engine>,
+    pub open_reader: Box<dyn FnOnce() -> Result<Box<dyn Engine>>>,
+}
+
+const N: u64 = 16;
+const VAR_A: &str = "/data/0/conformance/a";
+const VAR_B: &str = "/data/0/conformance/b";
+
+/// Deterministic per-step payload pattern.
+fn pattern(step: u64, offset: u64, len: u64) -> Vec<f32> {
+    (0..len)
+        .map(|i| (step * 1000 + offset + i) as f32 * 0.5)
+        .collect()
+}
+
+fn lo_chunk() -> Chunk {
+    Chunk::new(vec![0], vec![N / 2])
+}
+
+fn hi_chunk() -> Chunk {
+    Chunk::new(vec![N / 2], vec![N / 2])
+}
+
+/// Selections exercised against every backend: aligned-whole, aligned
+/// chunk, misaligned spanning both chunks, tail.
+fn selections() -> Vec<Chunk> {
+    vec![
+        Chunk::whole(vec![N]),
+        lo_chunk(),
+        Chunk::new(vec![2], vec![10]),
+        hi_chunk(),
+    ]
+}
+
+/// Run the whole suite against one backend.
+pub fn run_conformance(
+    name: &str,
+    make: impl FnOnce() -> Result<ConformancePair>,
+) -> Result<()> {
+    let pair = make().with_context(|| format!("[{name}] opening pair"))?;
+    let mut writer = pair.writer;
+
+    write_phase(name, writer.as_mut())
+        .with_context(|| format!("[{name}] write phase"))?;
+
+    let mut reader = (pair.open_reader)()
+        .with_context(|| format!("[{name}] opening reader"))?;
+
+    // SST's close blocks until subscribed readers drain the staged
+    // steps, so it runs concurrently with the read phase.
+    let close_thread = std::thread::spawn(move || -> Result<()> {
+        writer.close()
+    });
+
+    let read_result = read_phase(name, reader.as_mut())
+        .with_context(|| format!("[{name}] read phase"));
+    reader.close().ok();
+    close_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("[{name}] writer close panicked"))?
+        .with_context(|| format!("[{name}] writer close"))?;
+    read_result
+}
+
+fn write_phase(name: &str, w: &mut dyn Engine) -> Result<()> {
+    let decl_a = VarDecl::new(VAR_A, Datatype::F32, vec![N]);
+    let decl_b = VarDecl::new(VAR_B, Datatype::F32, vec![N]);
+
+    // 1. define works outside a step; puts do not.
+    let ha = w.define_variable(&decl_a)?;
+    if w.put_deferred(&ha, lo_chunk(),
+                      cast::f32_to_bytes(&pattern(0, 0, N / 2)))
+        .is_ok()
+    {
+        bail!("put_deferred outside a step must fail");
+    }
+    if w.put_span(&ha, lo_chunk()).is_ok() {
+        bail!("put_span outside a step must fail");
+    }
+
+    // 5. conflicting redeclaration is an error; identical one is not.
+    if w.define_variable(&VarDecl::new(VAR_A, Datatype::F64, vec![N]))
+        .is_ok()
+    {
+        bail!("conflicting dtype redeclaration must fail");
+    }
+    if w.define_variable(&VarDecl::new(VAR_A, Datatype::F32, vec![N + 1]))
+        .is_ok()
+    {
+        bail!("conflicting shape redeclaration must fail");
+    }
+    let ha2 = w.define_variable(&decl_a)?;
+    if ha2 != ha {
+        bail!("redefinition with identical decl must return same handle");
+    }
+
+    // ---- step 0: deferred puts + EXPLICIT perform -------------------
+    if w.begin_step()? != StepStatus::Ok {
+        bail!("writer begin_step must be Ok");
+    }
+    if w.begin_step().is_ok() {
+        bail!("begin_step while a step is open must fail");
+    }
+    w.put_attribute("/conformance/step", Attribute::F64(0.0))?;
+
+    // 5. wrong payload size / out-of-bounds chunk: errors, engine lives.
+    if w.put_deferred(&ha, lo_chunk(), Arc::new(vec![0u8; 13])).is_ok() {
+        bail!("wrong-size payload must fail");
+    }
+    if w.put_deferred(&ha, Chunk::new(vec![N - 2], vec![4]),
+                      cast::f32_to_bytes(&[0.0; 4]))
+        .is_ok()
+    {
+        bail!("out-of-bounds chunk must fail");
+    }
+
+    w.put_deferred(&ha, lo_chunk(),
+                   cast::f32_to_bytes(&pattern(0, 0, N / 2)))?;
+    w.put_deferred(&ha, hi_chunk(),
+                   cast::f32_to_bytes(&pattern(0, N / 2, N / 2)))?;
+    w.perform_puts()?; // explicit
+    w.end_step()?;
+
+    // ---- step 1: deferred puts + IMPLICIT perform, plus a span var --
+    if w.begin_step()? != StepStatus::Ok {
+        bail!("writer begin_step must be Ok");
+    }
+    w.put_attribute("/conformance/step", Attribute::F64(1.0))?;
+    // Same payload as step 0 for A (shifted pattern would also do; equal
+    // data makes the perform-before-end equivalence check direct).
+    w.put_deferred(&ha, lo_chunk(),
+                   cast::f32_to_bytes(&pattern(0, 0, N / 2)))?;
+    w.put_deferred(&ha, hi_chunk(),
+                   cast::f32_to_bytes(&pattern(0, N / 2, N / 2)))?;
+    // 4. B is serialized in place through a span.
+    let hb = w.define_variable(&decl_b)?;
+    {
+        let span = w.put_span(&hb, Chunk::whole(vec![N]))?;
+        let want = pattern(7, 0, N);
+        for (slot, v) in span.chunks_exact_mut(4).zip(&want) {
+            slot.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+    w.end_step()?; // implicit perform
+    let _ = name;
+    Ok(())
+}
+
+fn read_phase(name: &str, r: &mut dyn Engine) -> Result<()> {
+    // ---- step 0 ------------------------------------------------------
+    wait_step(r)?;
+    let vars = r.available_variables();
+    if !vars.iter().any(|v| v.name == VAR_A) {
+        bail!("step 0 must expose {VAR_A}, got {vars:?}");
+    }
+    let chunks = r.available_chunks(VAR_A);
+    if chunks.len() != 2 {
+        bail!("step 0 must expose 2 written chunks, got {}", chunks.len());
+    }
+    match r.attribute("/conformance/step") {
+        Some(a) if a.as_f64() == Some(0.0) => {}
+        other => bail!("step attribute wrong: {other:?}"),
+    }
+
+    // Unknown variable: error, engine stays usable.
+    if r.get_deferred("/nope", Chunk::whole(vec![N])).is_ok() {
+        bail!("get_deferred of unknown variable must fail");
+    }
+
+    // 3. eager first, then the same selections as one deferred batch.
+    let mut eager = Vec::new();
+    for sel in selections() {
+        eager.push(r.get(VAR_A, sel)?);
+    }
+    let handles: Vec<_> = selections()
+        .into_iter()
+        .map(|sel| r.get_deferred(VAR_A, sel))
+        .collect::<Result<_>>()?;
+    // take before perform must fail.
+    if r.take_get(handles[0]).is_ok() {
+        bail!("take_get before perform_gets must fail");
+    }
+    r.perform_gets()?;
+    let mut step0_whole = None;
+    for (i, h) in handles.iter().enumerate() {
+        let deferred = r.take_get(*h)?;
+        if *deferred != *eager[i] {
+            bail!(
+                "[{name}] deferred batch result {i} differs from eager \
+                 get ({} vs {} bytes)",
+                deferred.len(),
+                eager[i].len()
+            );
+        }
+        if i == 0 {
+            step0_whole = Some(deferred.clone());
+        }
+        // Each handle is single-redemption.
+        if r.take_get(*h).is_ok() {
+            bail!("double take_get must fail");
+        }
+    }
+    let step0_whole = step0_whole.unwrap();
+    // Content check against the ground-truth pattern.
+    if cast::bytes_to_f32(&step0_whole)? != pattern(0, 0, N) {
+        bail!("step 0 payload does not match the written pattern");
+    }
+    let stale = handles[0];
+    r.end_step()?;
+
+    // ---- step 1 ------------------------------------------------------
+    wait_step(r)?;
+    // 1. handles do not survive step boundaries.
+    if r.take_get(stale).is_ok() {
+        bail!("get handle must not survive end_step");
+    }
+    // 2. perform-before-end equivalence: step 1's A (implicit perform)
+    // equals step 0's A (explicit perform), byte for byte.
+    let a1 = r.get(VAR_A, Chunk::whole(vec![N]))?;
+    if *a1 != *step0_whole {
+        bail!(
+            "[{name}] implicit-perform step differs from explicit-perform \
+             step"
+        );
+    }
+    // 4. the span-written variable reads back exactly.
+    let b1 = r.get(VAR_B, Chunk::whole(vec![N]))?;
+    if cast::bytes_to_f32(&b1)? != pattern(7, 0, N) {
+        bail!("span-serialized payload does not match");
+    }
+    r.end_step()?;
+
+    // ---- end of stream ----------------------------------------------
+    match r.begin_step()? {
+        StepStatus::EndOfStream => Ok(()),
+        other => bail!("expected EndOfStream after 2 steps, got {other:?}"),
+    }
+}
+
+/// `begin_step` with NotReady tolerance (SST readers may need to poll).
+fn wait_step(r: &mut dyn Engine) -> Result<()> {
+    for _ in 0..200 {
+        match r.begin_step()? {
+            StepStatus::Ok => return Ok(()),
+            StepStatus::NotReady => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            other => bail!("expected a step, got {other:?}"),
+        }
+    }
+    bail!("timed out waiting for a step")
+}

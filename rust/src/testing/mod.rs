@@ -1,9 +1,14 @@
-//! Mini property-testing framework (S17).
+//! Mini property-testing framework (S17) + the engine-conformance suite.
 //!
 //! proptest is not available offline, so the invariant tests for the
 //! distribution strategies use this: deterministic seeded generation, a
 //! configurable case count, and greedy input shrinking on failure. The
 //! API is intentionally tiny — `check(cases, gen, prop)`.
+//!
+//! [`engine_conformance`] is the shared contract test for the two-phase
+//! engine API, run against every backend from `tests/`.
+
+pub mod engine_conformance;
 
 use crate::util::rng::Rng;
 

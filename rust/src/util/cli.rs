@@ -27,9 +27,16 @@ pub struct Args {
 }
 
 /// Parse error with a user-facing message.
-#[derive(Debug, thiserror::Error)]
-#[error("{0}")]
+#[derive(Debug)]
 pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of arguments (excluding or including argv[0],

@@ -1,0 +1,164 @@
+//! Drives the engine-conformance suite (two-phase deferred API) against
+//! every backend: BP file, JSON, SST over inproc and TCP — plus the
+//! SST-specific contracts: a Discarded step drops its deferred queue
+//! before any data movement, and a deferred batch travels as ONE wire
+//! data message per writer per step.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
+use openpmd_stream::adios::engine::{cast, Engine, StepStatus, VarDecl};
+use openpmd_stream::adios::json::{JsonReader, JsonWriter};
+use openpmd_stream::adios::sst::{
+    QueueConfig, QueueFullPolicy, SstReader, SstReaderOptions, SstWriter,
+    SstWriterOptions,
+};
+use openpmd_stream::openpmd::chunk::Chunk;
+use openpmd_stream::openpmd::types::Datatype;
+use openpmd_stream::testing::engine_conformance::{
+    run_conformance, ConformancePair,
+};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("opmd-conf-{name}-{}", std::process::id()))
+}
+
+#[test]
+fn bp_engine_conforms() {
+    let path = tmp("bp");
+    let path2 = path.clone();
+    run_conformance("bp", move || {
+        let writer = BpWriter::create(&path2, WriterCtx {
+            rank: 0,
+            hostname: "conf".into(),
+        })?;
+        let rpath = path2.clone();
+        Ok(ConformancePair {
+            writer: Box::new(writer),
+            open_reader: Box::new(move || {
+                Ok(Box::new(BpReader::open(&rpath)?) as Box<dyn Engine>)
+            }),
+        })
+    })
+    .unwrap();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn json_engine_conforms() {
+    let dir = tmp("json");
+    std::fs::remove_dir_all(&dir).ok();
+    let dir2 = dir.clone();
+    run_conformance("json", move || {
+        let writer = JsonWriter::create(&dir2, 0, "conf")?;
+        let rdir = dir2.clone();
+        Ok(ConformancePair {
+            writer: Box::new(writer),
+            open_reader: Box::new(move || {
+                Ok(Box::new(JsonReader::open(&rdir)?) as Box<dyn Engine>)
+            }),
+        })
+    })
+    .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn sst_conformance(transport: &str) {
+    let transport_owned = transport.to_string();
+    run_conformance(&format!("sst:{transport}"), move || {
+        let writer = SstWriter::open(SstWriterOptions {
+            listen: if transport_owned == "inproc" {
+                format!("conf-{transport_owned}-{}", std::process::id())
+            } else {
+                String::new()
+            },
+            transport: transport_owned.clone(),
+            rank: 0,
+            hostname: "conf".into(),
+            // Block + roomy queue: both conformance steps stay staged
+            // until the (late-joining) reader drains them.
+            queue: QueueConfig { policy: QueueFullPolicy::Block, limit: 8 },
+            ..Default::default()
+        })?;
+        let addr = writer.address();
+        let transport = transport_owned.clone();
+        Ok(ConformancePair {
+            writer: Box::new(writer),
+            open_reader: Box::new(move || {
+                Ok(Box::new(SstReader::open(SstReaderOptions {
+                    writers: vec![addr],
+                    transport,
+                    rank: 0,
+                    hostname: "conf".into(),
+                    begin_step_timeout: Duration::from_secs(30),
+                })?) as Box<dyn Engine>)
+            }),
+        })
+    })
+    .unwrap();
+}
+
+#[test]
+fn sst_inproc_engine_conforms() {
+    sst_conformance("inproc");
+}
+
+#[test]
+fn sst_tcp_engine_conforms() {
+    sst_conformance("tcp");
+}
+
+/// SST Discard policy: a discarded step's deferred queue is dropped
+/// wholesale — no bytes staged, no step published, the producer never
+/// blocked.
+#[test]
+fn sst_discard_drops_deferred_queue() {
+    let mut writer = SstWriter::open(SstWriterOptions {
+        listen: format!("conf-discard-{}", std::process::id()),
+        transport: "inproc".into(),
+        rank: 0,
+        hostname: "conf".into(),
+        queue: QueueConfig { policy: QueueFullPolicy::Discard, limit: 1 },
+        close_linger: Duration::from_millis(200),
+        ..Default::default()
+    })
+    .unwrap();
+
+    let decl = VarDecl::new("/x", Datatype::F32, vec![4]);
+    let handle = writer.define_variable(&decl).unwrap();
+    let payload = cast::f32_to_bytes(&[1.0, 2.0, 3.0, 4.0]);
+
+    // Step 0 fills the queue (no reader ever retires it).
+    assert_eq!(writer.begin_step().unwrap(), StepStatus::Ok);
+    writer
+        .put_deferred(&handle, Chunk::whole(vec![4]), payload.clone())
+        .unwrap();
+    writer.end_step().unwrap();
+    let after_first = writer.stats();
+    assert_eq!(after_first.steps_published, 1);
+    assert_eq!(after_first.bytes_put, 16);
+
+    // Step 1 is discarded; its deferred puts (and span) must be dropped
+    // with zero data movement, and the producer continues unblocked.
+    assert_eq!(writer.begin_step().unwrap(), StepStatus::Discarded);
+    writer
+        .put_deferred(&handle, Chunk::whole(vec![4]), payload.clone())
+        .unwrap();
+    {
+        let span = writer
+            .put_span(&handle, Chunk::whole(vec![4]))
+            .unwrap();
+        span.fill(0xAB);
+    }
+    writer.perform_puts().unwrap(); // no-op on a discarded step
+    writer.end_step().unwrap();
+
+    let stats = writer.stats();
+    assert_eq!(stats.steps_published, 1, "discarded step was published");
+    assert_eq!(stats.steps_discarded, 1);
+    assert_eq!(stats.bytes_put, 16,
+               "discarded step moved data: {stats:?}");
+    writer.close().unwrap();
+}

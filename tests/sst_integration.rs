@@ -74,7 +74,7 @@ fn single_pair_round_trip(transport: &str) {
             let data = reader
                 .get(&vars[0].name, Chunk::whole(vars[0].shape.clone()))
                 .unwrap();
-            sums.push(cast::bytes_to_f32(&data).iter().sum::<f32>());
+            sums.push(cast::bytes_to_f32(&data).unwrap().iter().sum::<f32>());
             reader.end_step().unwrap();
         }
         reader.close().unwrap();
@@ -134,7 +134,7 @@ fn discard_policy_drops_steps_when_reader_lags() {
             let data =
                 reader.get(&v[0].name, Chunk::whole(v[0].shape.clone()))
                     .unwrap();
-            consumed.push(cast::bytes_to_f32(&data)[0]);
+            consumed.push(cast::bytes_to_f32(&data).unwrap()[0]);
             reader.end_step().unwrap();
         }
         consumed
@@ -257,7 +257,7 @@ fn multi_writer_multi_reader_hyperslabs() {
                 let half = total / 2;
                 let sel = Chunk::new(vec![r as u64 * half], vec![half]);
                 let data = reader.get("/data/0/x", sel).unwrap();
-                seen.push(cast::bytes_to_f32(&data));
+                seen.push(cast::bytes_to_f32(&data).unwrap());
                 reader.end_step().unwrap();
             }
             reader.close().unwrap();
@@ -325,7 +325,7 @@ fn late_joining_reader_sees_staged_steps() {
     for _ in 0..3 {
         assert_eq!(reader.begin_step().unwrap(), StepStatus::Ok);
         let data = reader.get("/x", Chunk::whole(vec![2])).unwrap();
-        got.push(cast::bytes_to_f32(&data)[0]);
+        got.push(cast::bytes_to_f32(&data).unwrap()[0]);
         reader.end_step().unwrap();
     }
     assert_eq!(got, vec![0.0, 1.0, 2.0]);
@@ -393,7 +393,65 @@ fn get_error_for_unknown_variable() {
     assert!(reader.get("/nope", Chunk::whole(vec![2])).is_err());
     // The engine is still usable afterwards.
     let ok = reader.get("/x", Chunk::whole(vec![2])).unwrap();
-    assert_eq!(cast::bytes_to_f32(&ok), vec![1.0, 2.0]);
+    assert_eq!(cast::bytes_to_f32(&ok).unwrap(), vec![1.0, 2.0]);
+    reader.end_step().unwrap();
+    reader.close().unwrap();
+    writer.close().unwrap();
+}
+
+/// The two-phase contract on the wire: a deferred batch of many
+/// selections costs ONE GetBatch/GetBatchReply round trip per writer per
+/// step, not one message per chunk.
+#[test]
+fn deferred_batch_is_one_wire_message_per_step() {
+    let mut opts = writer_opts("inproc", 0, "n0");
+    opts.listen = format!("batch1msg-{}", std::process::id());
+    let mut writer = SstWriter::open(opts).unwrap();
+    let addr = writer.address();
+    let mut reader =
+        SstReader::open(reader_opts("inproc", vec![addr])).unwrap();
+
+    // One step, two variables, two chunks each.
+    let var_a = VarDecl::new("/a", Datatype::F32, vec![8]);
+    let var_b = VarDecl::new("/b", Datatype::F32, vec![8]);
+    writer.begin_step().unwrap();
+    for (var, base) in [(&var_a, 0.0f32), (&var_b, 100.0)] {
+        let h = writer.define_variable(var).unwrap();
+        writer
+            .put_deferred(&h, Chunk::new(vec![0], vec![4]),
+                          cast::f32_to_bytes(&[base; 4]))
+            .unwrap();
+        writer
+            .put_deferred(&h, Chunk::new(vec![4], vec![4]),
+                          cast::f32_to_bytes(&[base + 1.0; 4]))
+            .unwrap();
+    }
+    writer.end_step().unwrap();
+
+    assert_eq!(reader.begin_step().unwrap(), StepStatus::Ok);
+    // Defer 4 selections (one per written chunk) + 1 spanning selection.
+    let mut handles = Vec::new();
+    for var in ["/a", "/b"] {
+        handles.push(
+            reader.get_deferred(var, Chunk::new(vec![0], vec![4])).unwrap());
+        handles.push(
+            reader.get_deferred(var, Chunk::new(vec![4], vec![4])).unwrap());
+    }
+    handles.push(
+        reader.get_deferred("/a", Chunk::new(vec![2], vec![4])).unwrap());
+    reader.perform_gets().unwrap();
+    for h in handles {
+        assert!(!reader.take_get(h).unwrap().is_empty());
+    }
+
+    let stats = reader.stats();
+    assert_eq!(stats.batch_requests, 1,
+               "whole deferred batch must be one request: {stats:?}");
+    assert_eq!(stats.data_messages, 1,
+               "whole deferred batch must be one data reply: {stats:?}");
+    // 4 aligned selections (1 part each) + 1 spanning (2 parts) = 6.
+    assert_eq!(stats.chunk_requests, 6);
+
     reader.end_step().unwrap();
     reader.close().unwrap();
     writer.close().unwrap();

@@ -1,0 +1,23 @@
+//! Minimal, offline subset of `libc`: exactly the symbols the TCP
+//! transport uses to enlarge kernel socket buffers on Linux.
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+pub type c_void = core::ffi::c_void;
+pub type socklen_t = u32;
+
+// Linux values.
+pub const SOL_SOCKET: c_int = 1;
+pub const SO_SNDBUF: c_int = 7;
+pub const SO_RCVBUF: c_int = 8;
+
+extern "C" {
+    pub fn setsockopt(
+        socket: c_int,
+        level: c_int,
+        option_name: c_int,
+        option_value: *const c_void,
+        option_len: socklen_t,
+    ) -> c_int;
+}

@@ -1,0 +1,47 @@
+//! Minimal, offline subset of `once_cell`: just `sync::Lazy`, built on
+//! `std::sync::OnceLock`. Sufficient for the static registries and
+//! timestamps this codebase uses.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access. The initializer must be `Fn`
+    /// (not `FnOnce`) in this subset; every usage in the codebase passes a
+    /// capture-free closure or fn pointer, for which this is equivalent.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init }
+        }
+
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static N: Lazy<u64> = Lazy::new(|| 41 + 1);
+
+    #[test]
+    fn lazy_init_once() {
+        assert_eq!(*N, 42);
+        assert_eq!(*N, 42);
+    }
+}
