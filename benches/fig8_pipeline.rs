@@ -8,40 +8,62 @@
 //!
 //! each x {RDMA, sockets}, with sockets swept only to 256 nodes (as in
 //! the paper). Three repetitions per cell.
+//!
+//! **Second table — the staged pipe, measured not simulated**: the real
+//! `openpmd-pipe` over real BP engines with injected per-stage latency
+//! (`testing::engines::InjectedEngine`), serial vs. depth-2 vs. depth-4.
+//! The overlapped rows must show wall-clock per step *below* the serial
+//! load+store sum — the read-ahead hiding one stage behind the other.
+//!
+//! `--smoke` (or `FIG8_SMOKE=1`) shrinks both tables to seconds of
+//! runtime; CI runs it so a staged-pipe deadlock fails fast instead of
+//! hanging the job.
 
+use std::time::Duration;
+
+use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
 use openpmd_stream::bench::fig8::{simulate, Fig8Params};
 use openpmd_stream::bench::Table;
 use openpmd_stream::cluster::network::TransportKind;
 use openpmd_stream::pipeline::metrics::OpKind;
+use openpmd_stream::pipeline::pipe::{run, PipeOptions};
+use openpmd_stream::testing::engines::InjectedEngine;
+use openpmd_stream::testing::fixtures;
 use openpmd_stream::util::bytes::fmt_rate;
+use openpmd_stream::util::cli::Args;
 use openpmd_stream::util::stats;
 
-fn main() {
+fn des_sweep(smoke: bool) {
     let strategies: [(&str, &str); 3] = [
         ("hostname", "(1) by hostname"),
         ("binpacking", "(2) binpacking"),
         ("hyperslabs", "(3) hyperslabs"),
     ];
+    let reps: u64 = if smoke { 1 } else { 3 };
     let mut t = Table::new(
         "Fig 8: perceived total throughput, strategies x transports \
-         (mean over 3 reps)",
+         (mean over reps)",
         &["nodes", "transport", "strategy", "throughput", "per-writer"],
     );
     for transport in [TransportKind::Rdma, TransportKind::Tcp] {
-        let sweep: &[usize] = match transport {
-            TransportKind::Rdma => &[64, 128, 256, 512],
-            TransportKind::Tcp => &[64, 128, 256], // paper stops at 256
+        let sweep: &[usize] = if smoke {
+            &[16]
+        } else {
+            match transport {
+                TransportKind::Rdma => &[64, 128, 256, 512],
+                TransportKind::Tcp => &[64, 128, 256], // paper stops at 256
+            }
         };
         for &nodes in sweep {
             for (name, label) in strategies {
                 let mut rates = Vec::new();
                 let mut per_writer = Vec::new();
-                for rep in 0..3 {
+                for rep in 0..reps {
                     let run = simulate(&Fig8Params {
                         nodes,
                         transport,
                         strategy: name.into(),
-                        steps: 4,
+                        steps: if smoke { 2 } else { 4 },
                         seed: 3000 + rep,
                         ..Default::default()
                     });
@@ -68,4 +90,82 @@ fn main() {
          shape: (1) ~= (3) >> (2); RDMA >> sockets; sockets+binpacking \
          collapses."
     );
+}
+
+/// The real pipe over real BP engines with injected per-stage latency:
+/// serial vs. staged at increasing read-ahead depth.
+fn staged_pipe_rows(smoke: bool) {
+    let steps: u64 = if smoke { 4 } else { 16 };
+    let elems: u64 = if smoke { 1 << 10 } else { 1 << 16 };
+    let latency = Duration::from_millis(if smoke { 2 } else { 5 });
+
+    let src = std::env::temp_dir()
+        .join(format!("fig8-pipe-src-{}.bp", std::process::id()));
+    fixtures::write_chunked_bp(&src, steps, elems, 1);
+
+    let mut t = Table::new(
+        "Staged pipe (measured): BP->BP identity with injected \
+         per-stage latency",
+        &["pipe", "wall/step", "load+store/step", "hidden/step",
+          "overlap"],
+    );
+    let mut serial_sum_per_step = 0.0f64;
+    let mut best_staged_wall = f64::MAX;
+    for depth in [0usize, 2, 4] {
+        let dst = std::env::temp_dir().join(format!(
+            "fig8-pipe-dst{depth}-{}.bp",
+            std::process::id()
+        ));
+        let mut input = InjectedEngine::slow(
+            BpReader::open(&src).unwrap(), latency, Duration::ZERO);
+        let mut output = InjectedEngine::slow(
+            BpWriter::create(&dst, WriterCtx::default()).unwrap(),
+            Duration::ZERO, latency);
+        let mut opts = PipeOptions::solo();
+        opts.depth = depth;
+        let report = run(&mut input, &mut output, opts).unwrap();
+        assert_eq!(report.steps, steps, "pipe lost steps at depth {depth}");
+        let o = report.overlap;
+        let per = |x: f64| 1e3 * x / steps as f64;
+        if depth == 0 {
+            serial_sum_per_step = per(o.serial_estimate());
+        } else {
+            best_staged_wall = best_staged_wall.min(per(o.wall_seconds));
+        }
+        t.row(vec![
+            if depth == 0 {
+                "serial (depth 0)".into()
+            } else {
+                format!("staged depth {depth}")
+            },
+            format!("{:.2} ms", per(o.wall_seconds)),
+            format!("{:.2} ms", per(o.serial_estimate())),
+            format!("{:.2} ms", per(o.hidden_seconds())),
+            format!("{:.0}%", 100.0 * o.overlap_efficiency()),
+        ]);
+        std::fs::remove_file(&dst).ok();
+    }
+    std::fs::remove_file(&src).ok();
+    print!("\n{}", t.render());
+    t.save_csv("fig8_pipeline_staged").ok();
+    println!(
+        "\noverlap check: best staged wall/step {best_staged_wall:.2} ms \
+         vs serial load+store {serial_sum_per_step:.2} ms -> {}",
+        if best_staged_wall < serial_sum_per_step {
+            "OVERLAPPED (store hidden behind load)"
+        } else {
+            "NO OVERLAP — staged pipe regression?"
+        }
+    );
+}
+
+fn main() {
+    let args = Args::from_env(false).unwrap_or_default();
+    let smoke =
+        args.flag("smoke") || std::env::var("FIG8_SMOKE").is_ok();
+    if smoke {
+        println!("[smoke mode: tiny sizes]");
+    }
+    des_sweep(smoke);
+    staged_pipe_rows(smoke);
 }

@@ -488,9 +488,22 @@ impl Engine for BpReader {
                 .unwrap_or(u64::MAX)
         };
         pending.sort_by_key(first_offset);
-        for g in pending {
-            let data = self.fetch(&g.var, &g.selection)?;
-            self.gets.complete(g.handle, data);
+        let mut failure = None;
+        for g in &pending {
+            match self.fetch(&g.var, &g.selection) {
+                Ok(data) => self.gets.complete(g.handle, data),
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            // Mid-sweep IO failure (truncated/corrupt file): poison the
+            // whole drained batch so take_get reports this error, not
+            // "unknown handle".
+            self.gets.fail_batch(&pending, &e);
+            return Err(e);
         }
         Ok(())
     }

@@ -439,6 +439,9 @@ pub struct GetQueue {
     next_id: u64,
     pending: Vec<DeferredGet>,
     ready: BTreeMap<u64, Bytes>,
+    /// Handles whose batch failed mid-flight: `take` surfaces the
+    /// recorded batch error instead of a baffling "unknown handle".
+    poisoned: BTreeMap<u64, String>,
 }
 
 impl GetQueue {
@@ -467,22 +470,47 @@ impl GetQueue {
         self.ready.insert(handle.0, data);
     }
 
+    /// Mark a drained-but-never-completed get as failed: a later `take`
+    /// reports `why` instead of "unknown handle". Backends whose
+    /// `perform_gets` bails mid-batch poison every handle of the failed
+    /// batch so the error survives to the redeem site.
+    pub fn poison(&mut self, handle: GetHandle, why: impl Into<String>) {
+        self.ready.remove(&handle.0);
+        self.poisoned.insert(handle.0, why.into());
+    }
+
+    /// The shared failure path of `perform_gets` implementations:
+    /// poison every handle of a drained batch with `err`, so whether
+    /// the batch died on the wire (SST) or mid-sweep in a file backend,
+    /// each of its handles reports the batch error — including any that
+    /// had already completed before the failure (the batch is
+    /// all-or-nothing from the caller's point of view).
+    pub fn fail_batch(&mut self, batch: &[DeferredGet], err: &anyhow::Error) {
+        let why = format!("{err:#}");
+        for g in batch {
+            self.poison(g.handle, why.clone());
+        }
+    }
+
     /// Redeem a performed get (once).
     pub fn take(&mut self, handle: GetHandle) -> Result<Bytes> {
         if self.pending.iter().any(|g| g.handle == handle) {
             bail!("get handle not performed yet — call perform_gets first");
         }
-        self.ready
-            .remove(&handle.0)
-            .ok_or_else(|| anyhow::anyhow!(
-                "unknown or already-taken get handle (or the step ended)"
-            ))
+        if let Some(data) = self.ready.remove(&handle.0) {
+            return Ok(data);
+        }
+        if let Some(why) = self.poisoned.remove(&handle.0) {
+            bail!("get failed during perform_gets: {why}");
+        }
+        bail!("unknown or already-taken get handle (or the step ended)")
     }
 
-    /// Forget deferred and unredeemed gets (step boundary).
+    /// Forget deferred, unredeemed and poisoned gets (step boundary).
     pub fn reset(&mut self) {
         self.pending.clear();
         self.ready.clear();
+        self.poisoned.clear();
     }
 }
 
@@ -742,5 +770,44 @@ mod tests {
         assert_eq!(*q.take(h).unwrap(), vec![1, 2, 3]);
         // Double-take fails.
         assert!(q.take(h).is_err());
+    }
+
+    #[test]
+    fn poisoned_handles_report_the_batch_error() {
+        let mut q = GetQueue::default();
+        let h1 = q.defer("/x", Chunk::whole(vec![4]));
+        let h2 = q.defer("/y", Chunk::whole(vec![4]));
+        let drained = q.drain_pending();
+        assert_eq!(drained.len(), 2);
+        // The batch failed mid-flight: every drained handle poisoned.
+        for g in &drained {
+            q.poison(g.handle, "writer 3 replied garbage");
+        }
+        for h in [h1, h2] {
+            let err = format!("{}", q.take(h).unwrap_err());
+            assert!(err.contains("writer 3 replied garbage"), "{err}");
+            assert!(!err.contains("unknown"), "{err}");
+        }
+        // Poison is consumed by take; afterwards the handle is unknown.
+        assert!(format!("{}", q.take(h1).unwrap_err())
+            .contains("unknown"));
+        // reset() clears leftover poison.
+        let h3 = q.defer("/z", Chunk::whole(vec![2]));
+        q.drain_pending();
+        q.poison(h3, "stale");
+        q.reset();
+        assert!(format!("{}", q.take(h3).unwrap_err())
+            .contains("unknown"));
+    }
+
+    #[test]
+    fn engine_trait_objects_are_send() {
+        // The staged pipe moves engines (as `&mut dyn Engine`) into a
+        // fetch thread; this pins the `Engine: Send` supertrait so the
+        // capability cannot silently regress.
+        fn assert_send<T: Send + ?Sized>() {}
+        assert_send::<dyn Engine>();
+        assert_send::<Box<dyn Engine>>();
+        assert_send::<&mut dyn Engine>();
     }
 }

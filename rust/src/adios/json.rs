@@ -492,9 +492,21 @@ impl Engine for JsonReader {
 
     fn perform_gets(&mut self) -> Result<()> {
         let pending = self.gets.drain_pending();
-        for g in pending {
-            let data = self.fetch(&g.var, &g.selection)?;
-            self.gets.complete(g.handle, data);
+        let mut failure = None;
+        for g in &pending {
+            match self.fetch(&g.var, &g.selection) {
+                Ok(data) => self.gets.complete(g.handle, data),
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            // Poison the whole drained batch so take_get reports this
+            // error, not "unknown handle".
+            self.gets.fail_batch(&pending, &e);
+            return Err(e);
         }
         Ok(())
     }

@@ -388,6 +388,60 @@ impl Engine for SstReader {
         if pending.is_empty() {
             return Ok(());
         }
+        match self.perform_batch(&pending) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                // A mid-batch failure (reply-count mismatch, writer-side
+                // error item, vanished writer) must not leave the
+                // already-drained gets dangling: poison every handle of
+                // the batch so a later `take_get` reports this error
+                // instead of "unknown handle".
+                self.gets.fail_batch(&pending, &e);
+                Err(e)
+            }
+        }
+    }
+
+    fn take_get(&mut self, handle: GetHandle) -> Result<Bytes> {
+        self.gets.take(handle)
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        // Deferred gets that were never performed are dropped: their
+        // handles could no longer be redeemed after the step closes, so
+        // fetching them here would move bytes straight into the void.
+        self.gets.reset();
+        let cur = self
+            .current
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("end_step without begin_step"))?;
+        for w in self.writers.iter_mut() {
+            if !w.closed {
+                let _ = w.conn.send(Msg::StepDone { step: cur.step });
+            }
+        }
+        Ok(())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        if self.current.is_some() {
+            self.end_step()?;
+        }
+        for w in self.writers.iter_mut() {
+            if !w.closed {
+                let _ = w.conn.send(Msg::ReaderBye);
+                w.closed = true;
+            }
+        }
+        self.writers.clear();
+        Ok(())
+    }
+}
+
+impl SstReader {
+    /// The body of [`Engine::perform_gets`] for one drained batch; on
+    /// error the caller poisons every handle in `pending`.
+    fn perform_batch(&mut self, pending: &[DeferredGet]) -> Result<()> {
         let step = self
             .current
             .as_ref()
@@ -511,41 +565,6 @@ impl Engine for SstReader {
             };
             self.gets.complete(g.handle, data);
         }
-        Ok(())
-    }
-
-    fn take_get(&mut self, handle: GetHandle) -> Result<Bytes> {
-        self.gets.take(handle)
-    }
-
-    fn end_step(&mut self) -> Result<()> {
-        // Deferred gets that were never performed are dropped: their
-        // handles could no longer be redeemed after the step closes, so
-        // fetching them here would move bytes straight into the void.
-        self.gets.reset();
-        let cur = self
-            .current
-            .take()
-            .ok_or_else(|| anyhow::anyhow!("end_step without begin_step"))?;
-        for w in self.writers.iter_mut() {
-            if !w.closed {
-                let _ = w.conn.send(Msg::StepDone { step: cur.step });
-            }
-        }
-        Ok(())
-    }
-
-    fn close(&mut self) -> Result<()> {
-        if self.current.is_some() {
-            self.end_step()?;
-        }
-        for w in self.writers.iter_mut() {
-            if !w.closed {
-                let _ = w.conn.send(Msg::ReaderBye);
-                w.closed = true;
-            }
-        }
-        self.writers.clear();
         Ok(())
     }
 }

@@ -36,7 +36,11 @@
 //!   discrete-event simulator that regenerates the paper's 512-node
 //!   figures on a laptop.
 //! * [`pipeline`] — the L3 orchestrator: pipeline stages, the
-//!   `openpmd-pipe` adaptor, backpressure/queue policies and metrics.
+//!   `openpmd-pipe` adaptor in its two execution modes (serial, and
+//!   staged with bounded read-ahead so the store of step N overlaps the
+//!   load of step N+1), backpressure/queue policies and metrics
+//!   (including [`pipeline::OverlapReport`], which quantifies the IO
+//!   time the staged pipe hides).
 //! * [`producer`] / [`analysis`] — the two pipeline endpoints: a
 //!   PIConGPU-like Kelvin–Helmholtz particle producer and a GAPD-like
 //!   SAXS diffraction consumer, both executing AOT-lowered JAX/Pallas

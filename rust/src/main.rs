@@ -29,7 +29,7 @@ use openpmd_stream::cluster::systems;
 use openpmd_stream::openpmd::chunk::Chunk;
 use openpmd_stream::openpmd::series::Series;
 use openpmd_stream::openpmd::validate;
-use openpmd_stream::pipeline::pipe::{run_pipe, PipeOptions};
+use openpmd_stream::pipeline::pipe::{run, PipeOptions};
 use openpmd_stream::producer::KhProducer;
 use openpmd_stream::runtime::Runtime;
 use openpmd_stream::util::bytes::fmt_bytes;
@@ -80,6 +80,11 @@ fn help() -> String {
                       default: Some("bp"), help: "output engine kind" },
             OptSpec { name: "steps", value_name: Some("N"),
                       default: Some("10"), help: "steps to produce/process" },
+            OptSpec { name: "pipeline-depth", value_name: Some("N"),
+                      default: Some("0"),
+                      help: "staged-pipe read-ahead steps (0 = serial; \
+                             2 = double buffering: store step N while \
+                             loading step N+1)" },
             OptSpec { name: "period", value_name: Some("N"),
                       default: Some("10"), help: "sim steps between outputs" },
             OptSpec { name: "particles", value_name: Some("N"),
@@ -96,7 +101,8 @@ fn help() -> String {
 }
 
 fn cmd_pipe(args: &Args) -> Result<()> {
-    args.reject_unknown(&["in", "out", "engine", "steps"])?;
+    args.reject_unknown(&["in", "out", "engine", "steps",
+                          "pipeline-depth"])?;
     let input = args.get("in").context("--in required")?;
     let output = args.get("out").context("--out required")?;
     let mut reader: Box<dyn Engine> = if let Some(addr) =
@@ -122,14 +128,28 @@ fn cmd_pipe(args: &Args) -> Result<()> {
     };
     let mut opts = PipeOptions::solo();
     opts.max_steps = args.get_parse::<u64>("steps")?;
-    let report = run_pipe(reader.as_mut(), writer.as_mut(), opts)?;
+    opts.depth = args.get_parse_or("pipeline-depth", 0usize)?;
+    let depth = opts.depth;
+    let report = run(reader.as_mut(), writer.as_mut(), opts)?;
     println!(
-        "piped {} steps, {} in, {} out, {} chunks",
+        "piped {} steps ({} dropped), {} in, {} out, {} chunks",
         report.steps,
+        report.dropped_steps,
         fmt_bytes(report.bytes_in),
         fmt_bytes(report.bytes_out),
         report.chunks
     );
+    if depth > 0 {
+        let o = &report.overlap;
+        println!(
+            "staged depth {depth}: wall {:.3}s vs serial load+store \
+             {:.3}s — {:.3}s hidden ({:.0}% of the cheaper stage)",
+            o.wall_seconds,
+            o.serial_estimate(),
+            o.hidden_seconds(),
+            100.0 * o.overlap_efficiency()
+        );
+    }
     Ok(())
 }
 

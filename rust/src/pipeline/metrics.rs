@@ -168,6 +168,74 @@ impl Default for ThroughputReport {
     }
 }
 
+/// Overlap accounting for the staged (read-ahead) pipe: how much IO
+/// time the fetch/store concurrency hid from the wall clock.
+///
+/// The staged pipe runs its two stages on separate threads, so the
+/// store of step N proceeds while step N+1 is being loaded. A strictly
+/// serial execution of the same work would cost
+/// [`OverlapReport::serial_estimate`] (load busy + store busy, added);
+/// whatever part of that does not show up in `wall_seconds` was
+/// successfully overlapped. Serial runs fill the same struct and show
+/// ~zero hidden time, which is what the fig8 bench rows compare.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapReport {
+    /// Wall-clock duration of the whole pipe run.
+    pub wall_seconds: f64,
+    /// Total time the fetch stage spent actively loading steps.
+    pub load_busy_seconds: f64,
+    /// Total time the store stage spent actively writing steps.
+    pub store_busy_seconds: f64,
+    /// Steps forwarded (denominator for per-step figures).
+    pub steps: u64,
+}
+
+impl OverlapReport {
+    /// What the same work costs when load and store latencies add
+    /// instead of overlapping — the serial pipe's per-run IO time.
+    pub fn serial_estimate(&self) -> f64 {
+        self.load_busy_seconds + self.store_busy_seconds
+    }
+
+    /// Seconds of IO hidden by the overlap (~0 for a serial run).
+    pub fn hidden_seconds(&self) -> f64 {
+        (self.serial_estimate() - self.wall_seconds).max(0.0)
+    }
+
+    /// Fraction of the cheaper stage that disappeared from the wall
+    /// clock: 1.0 means the store (or load, whichever is smaller) was
+    /// completely hidden behind the other stage.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let bound = self.load_busy_seconds.min(self.store_busy_seconds);
+        if bound <= 0.0 {
+            0.0
+        } else {
+            (self.hidden_seconds() / bound).min(1.0)
+        }
+    }
+
+    /// Stage occupancy: the fraction of the run a stage was busy.
+    pub fn occupancy(&self, kind: OpKind) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            return 0.0;
+        }
+        let busy = match kind {
+            OpKind::Load => self.load_busy_seconds,
+            OpKind::Store => self.store_busy_seconds,
+        };
+        busy / self.wall_seconds
+    }
+
+    /// Mean wall-clock per forwarded step.
+    pub fn wall_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.wall_seconds / self.steps as f64
+        }
+    }
+}
+
 /// Fraction-of-runtime accounting (the §4.1 "portion of the simulation
 /// time that the IO plugin requires").
 #[derive(Clone, Copy, Debug, Default)]
@@ -252,6 +320,45 @@ mod tests {
         };
         assert!((s.plugin_fraction() - 0.54).abs() < 1e-9);
         assert!((s.raw_fraction() - 0.44).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlap_report_quantifies_hidden_store_time() {
+        // 4 steps, 10 ms load + 10 ms store each, run in 45 ms wall:
+        // a serial run would have cost 80 ms, so 35 ms were hidden.
+        let o = OverlapReport {
+            wall_seconds: 0.045,
+            load_busy_seconds: 0.040,
+            store_busy_seconds: 0.040,
+            steps: 4,
+        };
+        assert!((o.serial_estimate() - 0.080).abs() < 1e-12);
+        assert!((o.hidden_seconds() - 0.035).abs() < 1e-12);
+        assert!((o.overlap_efficiency() - 0.875).abs() < 1e-9);
+        assert!((o.occupancy(OpKind::Load) - 0.040 / 0.045).abs() < 1e-9);
+        assert!((o.wall_per_step() - 0.045 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_report_serial_run_hides_nothing() {
+        // Serial run: wall == load + store (plus slack) -> zero hidden.
+        let o = OverlapReport {
+            wall_seconds: 0.085,
+            load_busy_seconds: 0.040,
+            store_busy_seconds: 0.040,
+            steps: 4,
+        };
+        assert_eq!(o.hidden_seconds(), 0.0);
+        assert_eq!(o.overlap_efficiency(), 0.0);
+    }
+
+    #[test]
+    fn overlap_report_empty_is_all_zero() {
+        let o = OverlapReport::default();
+        assert_eq!(o.hidden_seconds(), 0.0);
+        assert_eq!(o.overlap_efficiency(), 0.0);
+        assert_eq!(o.occupancy(OpKind::Store), 0.0);
+        assert_eq!(o.wall_per_step(), 0.0);
     }
 
     #[test]

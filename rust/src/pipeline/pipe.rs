@@ -10,16 +10,38 @@
 //! in, any write-mode [`Engine`] out. Chunks pass through as written
 //! (perfect *alignment*); with multiple pipe instances, a distribution
 //! strategy decides which instance forwards which chunk.
+//!
+//! Every step moves through the same core regardless of how the pipe
+//! executes:
+//!
+//! * [`open_step`] — probe the input for its next step (cheap,
+//!   metadata only);
+//! * [`load_open_step`] — plan this instance's share of the chunk
+//!   table, execute the whole batch as ONE `perform_gets` (over SST:
+//!   one wire request per writer per step), and detach the result into
+//!   a [`StepPayload`];
+//! * [`store_into_open_step`] — write a payload into an open output
+//!   step as one batched `perform_puts` + `end_step` publish.
+//!
+//! [`run_pipe`] composes them serially on the calling thread, probing
+//! the *output* between open and load so a step the output discards
+//! under backpressure is consumed without moving any data. The staged
+//! path in [`super::staged`] instead runs fetch ([`fetch_step`]) and
+//! store ([`store_step`]) on separate threads with a bounded
+//! read-ahead queue, so load and store latencies overlap instead of
+//! adding. Because both paths share this core and its accounting,
+//! they produce identical output bytes for identical inputs.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::adios::engine::{Engine, StepStatus, VarDecl};
+use crate::adios::engine::{Bytes, Engine, GetHandle, StepStatus, VarDecl};
 use crate::distribution::{ChunkTable, ReaderLayout, Strategy};
 use crate::openpmd::chunk::Chunk;
+use crate::openpmd::Attribute;
 
-use super::metrics::{OpKind, PerceivedThroughput};
+use super::metrics::{OpKind, OverlapReport, PerceivedThroughput};
 
 /// Pipe configuration.
 pub struct PipeOptions {
@@ -32,14 +54,22 @@ pub struct PipeOptions {
     pub strategy: Box<dyn Strategy>,
     /// Reader layout of the pipe stage (for topology-aware strategies).
     pub layout: ReaderLayout,
-    /// Stop after this many steps (None = until end of stream).
+    /// Stop after this many *forwarded* steps (None = until end of
+    /// stream). Downstream-discarded steps do not count.
     pub max_steps: Option<u64>,
-    /// Give up if no step arrives for this long.
+    /// Give up if no step arrives for this long. An input-side
+    /// discarded step counts as stream activity and resets the clock.
     pub idle_timeout: Duration,
+    /// Staged read-ahead depth: how many steps the fetch stage may run
+    /// ahead of the store stage. `0` = serial (fetch and store strictly
+    /// alternate on the calling thread); `>= 1` = staged (a dedicated
+    /// fetch thread feeds a bounded queue, so the store of step N
+    /// overlaps the load of step N+1; 2 is classic double buffering).
+    pub depth: usize,
 }
 
 impl PipeOptions {
-    /// Single-instance pipe forwarding everything.
+    /// Single-instance serial pipe forwarding everything.
     pub fn solo() -> PipeOptions {
         PipeOptions {
             rank: 0,
@@ -48,6 +78,7 @@ impl PipeOptions {
             layout: ReaderLayout::local(1),
             max_steps: None,
             idle_timeout: Duration::from_secs(60),
+            depth: 0,
         }
     }
 }
@@ -55,26 +86,388 @@ impl PipeOptions {
 /// What the pipe did.
 #[derive(Debug, Default)]
 pub struct PipeReport {
+    /// Steps forwarded to the output.
     pub steps: u64,
+    /// Steps consumed from the input but dropped because the output
+    /// discarded them (queue-full backpressure). Not counted in
+    /// `steps` and not counted against `PipeOptions::max_steps`.
+    pub dropped_steps: u64,
     pub bytes_in: u64,
     pub bytes_out: u64,
     pub chunks: u64,
     /// Load/store timing samples (perceived throughput accounting).
     pub metrics: PerceivedThroughput,
+    /// Wall-clock overlap accounting. Filled by both paths; a serial
+    /// run shows ~zero hidden time, a staged run shows how much of the
+    /// store (or load) latency the read-ahead hid.
+    pub overlap: OverlapReport,
 }
 
-/// Run the pipe until end-of-stream (or `max_steps`). The heart of the
-/// paper's first benchmark: `input` is typically an SST reader fed by
-/// the producers on this node; `output` a BP writer — giving streaming-
-/// based asynchronous IO with node-level aggregation "for free".
+// ======================================================================
+// The shared step-forwarding core
+// ======================================================================
+
+/// Bounded backoff between `NotReady` polls, replacing the former
+/// hot-spin `continue` that burned a full core until the idle timeout.
+struct PollBackoff {
+    next: Duration,
+}
+
+impl PollBackoff {
+    const FLOOR: Duration = Duration::from_micros(200);
+    const CEIL: Duration = Duration::from_millis(20);
+
+    fn new() -> PollBackoff {
+        PollBackoff { next: Self::FLOOR }
+    }
+
+    /// Sleep the current backoff and double it (bounded), so an idle
+    /// stream is polled a handful of times per second instead of
+    /// millions.
+    fn wait(&mut self) {
+        std::thread::sleep(self.next);
+        self.next = (self.next * 2).min(Self::CEIL);
+    }
+
+    /// A step arrived: poll eagerly again next time.
+    fn reset(&mut self) {
+        self.next = Self::FLOOR;
+    }
+}
+
+/// The `NotReady`/`Discarded` polling policy shared by the serial loop
+/// and the staged fetch stage, so the two cannot drift: bounded backoff
+/// between polls, and the idle timeout measured against the last
+/// stream activity.
+pub(crate) struct StepPoller {
+    backoff: PollBackoff,
+    idle_since: Instant,
+    idle_timeout: Duration,
+}
+
+impl StepPoller {
+    pub(crate) fn new(idle_timeout: Duration) -> StepPoller {
+        StepPoller {
+            backoff: PollBackoff::new(),
+            idle_since: Instant::now(),
+            idle_timeout,
+        }
+    }
+
+    /// A `NotReady` poll: fail once the idle timeout has elapsed with
+    /// no intervening activity, otherwise sleep the growing (bounded)
+    /// backoff and let the caller poll again.
+    pub(crate) fn not_ready(&mut self) -> Result<()> {
+        if self.idle_since.elapsed() > self.idle_timeout {
+            bail!("pipe idle for {:?}, giving up", self.idle_timeout);
+        }
+        self.backoff.wait();
+        Ok(())
+    }
+
+    /// Stream activity: a step was fully handled, or the input
+    /// discarded one — an active-but-discarding stream is not idle.
+    /// Resets the idle clock and the backoff. Callers stamp this
+    /// AFTER processing a step (load/store, or the staged hand-off),
+    /// so time spent working or blocked on backpressure never eats
+    /// into the idle budget.
+    pub(crate) fn activity(&mut self) {
+        self.idle_since = Instant::now();
+        self.backoff.reset();
+    }
+}
+
+/// One fetched step, detached from the input engine — everything the
+/// store stage needs to reproduce the step on any output engine, safe
+/// to hand across threads (payloads travel as `Arc`s).
+pub(crate) struct StepPayload {
+    /// Index of this step in fetch order (0-based, counting every
+    /// input step this instance consumed).
+    pub step: u64,
+    pub attributes: Vec<(String, Attribute)>,
+    /// Per variable: the declaration plus this instance's assigned
+    /// `(chunk, payload)` pairs, in deterministic (variable, chunk)
+    /// order. A variable with no assigned chunks keeps an empty list,
+    /// so the store side still calls `define_variable` for it exactly
+    /// as the pre-split serial loop did (registering it in the output
+    /// engine's variable registry; step *metadata* is built from puts,
+    /// so an undeclared-vs-declared-empty variable is not visible in
+    /// the output bytes).
+    pub vars: Vec<(VarDecl, Vec<(Chunk, Bytes)>)>,
+    /// Total payload bytes.
+    pub bytes: u64,
+    /// Seconds the fetch stage spent executing this step's batch.
+    pub load_seconds: f64,
+}
+
+impl StepPayload {
+    pub(crate) fn chunk_count(&self) -> usize {
+        self.vars.iter().map(|(_, chunks)| chunks.len()).sum()
+    }
+}
+
+/// Outcome of probing the input for its next step (no data movement).
+pub(crate) enum StepAvailability {
+    /// A step is open on the input; follow with [`load_open_step`].
+    Open,
+    /// No step available yet — poll again (with backoff).
+    NotReady,
+    /// The input discarded a step non-collectively; the stream is alive.
+    Discarded,
+    EndOfStream,
+}
+
+/// Probe the input for its next step. Cheap: metadata only, no gets.
+pub(crate) fn open_step(input: &mut dyn Engine)
+    -> Result<StepAvailability>
+{
+    Ok(match input.begin_step()? {
+        StepStatus::Ok => StepAvailability::Open,
+        StepStatus::NotReady => StepAvailability::NotReady,
+        StepStatus::Discarded => StepAvailability::Discarded,
+        StepStatus::EndOfStream => StepAvailability::EndOfStream,
+    })
+}
+
+/// Load the already-open input step: plan this instance's share of
+/// every variable's chunk table, defer all gets, execute them as one
+/// batched perform, and close the input step.
+pub(crate) fn load_open_step(
+    input: &mut dyn Engine,
+    opts: &PipeOptions,
+    step: u64,
+) -> Result<StepPayload> {
+    let attributes: Vec<(String, Attribute)> = input
+        .attribute_names()
+        .into_iter()
+        .filter_map(|name| input.attribute(&name).map(|v| (name, v)))
+        .collect();
+
+    // Two-phase forwarding: defer a get for every assigned chunk of
+    // every variable, then execute the step's whole chunk table as
+    // ONE perform — over SST that is one batched request per writer
+    // per step, the exchange the paper hides behind compute.
+    let mut staged: Vec<(VarDecl, Vec<(Chunk, GetHandle)>)> = Vec::new();
+    for var in input.available_variables() {
+        let chunks = input.available_chunks(&var.name);
+        let table = ChunkTable {
+            dataset_extent: var.shape.clone(),
+            chunks,
+        };
+        let decl =
+            VarDecl::new(var.name.clone(), var.dtype, var.shape.clone());
+        let mine: Vec<Chunk> = if opts.instances <= 1 {
+            table.chunks.iter().map(|c| c.chunk.clone()).collect()
+        } else {
+            let assignment = opts.strategy.distribute(&table, &opts.layout);
+            assignment
+                .slices(opts.rank)
+                .iter()
+                .map(|s| s.chunk.clone())
+                .collect()
+        };
+        let mut gets = Vec::with_capacity(mine.len());
+        for chunk in mine {
+            let get = input.get_deferred(&var.name, chunk.clone())?;
+            gets.push((chunk, get));
+        }
+        // Keep variables even with no assigned chunks, so the store
+        // side still registers their declarations with the output
+        // engine — the pre-split serial loop called define_variable
+        // for every input variable, and this preserves that call
+        // pattern (and its validation side effects) verbatim.
+        staged.push((decl, gets));
+    }
+
+    let started = Instant::now();
+    input.perform_gets()?;
+    let mut bytes = 0u64;
+    let mut vars = Vec::with_capacity(staged.len());
+    for (decl, gets) in staged {
+        let mut chunks = Vec::with_capacity(gets.len());
+        for (chunk, get) in gets {
+            let data = input.take_get(get)?;
+            bytes += data.len() as u64;
+            chunks.push((chunk, data));
+        }
+        vars.push((decl, chunks));
+    }
+    let load_seconds = started.elapsed().as_secs_f64().max(1e-9);
+    input.end_step()?;
+    Ok(StepPayload {
+        step,
+        attributes,
+        vars,
+        bytes,
+        load_seconds,
+    })
+}
+
+/// Outcome of one [`fetch_step`] attempt (the staged fetch stage,
+/// which cannot probe the output first, fetches unconditionally).
+pub(crate) enum Fetched {
+    Step(StepPayload),
+    NotReady,
+    Discarded,
+    EndOfStream,
+}
+
+/// Probe-and-load in one call: the staged fetch stage's unit of work.
+pub(crate) fn fetch_step(
+    input: &mut dyn Engine,
+    opts: &PipeOptions,
+    step: u64,
+) -> Result<Fetched> {
+    match open_step(input)? {
+        StepAvailability::Open => {}
+        StepAvailability::NotReady => return Ok(Fetched::NotReady),
+        StepAvailability::Discarded => return Ok(Fetched::Discarded),
+        StepAvailability::EndOfStream => return Ok(Fetched::EndOfStream),
+    }
+    Ok(Fetched::Step(load_open_step(input, opts, step)?))
+}
+
+/// Outcome of offering a payload to the output engine.
+pub(crate) enum Stored {
+    /// Step published; seconds the store stage spent on it.
+    Written { seconds: f64 },
+    /// The output discarded the step (queue-full backpressure) and the
+    /// read-ahead payload is dropped. Only the staged path reaches
+    /// this: the serial loop probes the output *before* loading, so a
+    /// discarded step moves no data at all.
+    Discarded,
+}
+
+/// Write one payload into an ALREADY-OPEN output step: attributes,
+/// one batched perform, then the `end_step` publish. Returns the
+/// store-stage seconds (the whole-step Store sample, so file engines'
+/// write cost is visible).
+pub(crate) fn store_into_open_step(
+    output: &mut dyn Engine,
+    payload: &StepPayload,
+) -> Result<f64> {
+    for (name, value) in &payload.attributes {
+        output.put_attribute(name, value.clone())?;
+    }
+    let started = Instant::now();
+    for (decl, chunks) in &payload.vars {
+        let var = output.define_variable(decl)?;
+        for (chunk, data) in chunks {
+            output.put_deferred(&var, chunk.clone(), data.clone())?;
+        }
+    }
+    output.perform_puts()?;
+    output.end_step()?;
+    Ok(started.elapsed().as_secs_f64().max(1e-9))
+}
+
+/// Open an output step and write one payload into it (or drop the
+/// payload if the output discards the step).
+pub(crate) fn store_step(
+    output: &mut dyn Engine,
+    payload: &StepPayload,
+) -> Result<Stored> {
+    match output.begin_step()? {
+        StepStatus::Ok => {}
+        StepStatus::Discarded => return Ok(Stored::Discarded),
+        other => bail!("output engine refused step: {other:?}"),
+    }
+    Ok(Stored::Written {
+        seconds: store_into_open_step(output, payload)?,
+    })
+}
+
+/// Account a fetched payload. Shared by the serial and staged paths so
+/// their metrics cannot drift apart.
+pub(crate) fn account_load(
+    report: &mut PipeReport,
+    payload: &StepPayload,
+    rank: usize,
+) {
+    report.bytes_in += payload.bytes;
+    report.metrics.record_sim(
+        OpKind::Load,
+        payload.bytes,
+        payload.load_seconds,
+        payload.step,
+        rank,
+    );
+    report.overlap.load_busy_seconds += payload.load_seconds;
+}
+
+/// Account a stored payload (the counterpart of [`account_load`]).
+pub(crate) fn account_store(
+    report: &mut PipeReport,
+    payload: &StepPayload,
+    seconds: f64,
+    rank: usize,
+) {
+    report.metrics.record_sim(
+        OpKind::Store,
+        payload.bytes,
+        seconds,
+        payload.step,
+        rank,
+    );
+    report.overlap.store_busy_seconds += seconds;
+    report.bytes_out += payload.bytes;
+    report.chunks += payload.chunk_count() as u64;
+    report.steps += 1;
+}
+
+/// The staged store stage's unit of work: offer one read-ahead payload
+/// to the output and account the outcome.
+pub(crate) fn forward_payload(
+    output: &mut dyn Engine,
+    payload: &StepPayload,
+    report: &mut PipeReport,
+    rank: usize,
+) -> Result<()> {
+    account_load(report, payload, rank);
+    match store_step(output, payload)? {
+        Stored::Written { seconds } => {
+            account_store(report, payload, seconds, rank);
+        }
+        Stored::Discarded => {
+            report.dropped_steps += 1;
+        }
+    }
+    Ok(())
+}
+
+// ======================================================================
+// Entry points
+// ======================================================================
+
+/// Run the pipe with the configured execution mode: `opts.depth == 0`
+/// is the serial loop ([`run_pipe`]), anything else the staged
+/// overlapped pipe ([`super::staged::run_staged`]).
+pub fn run(
+    input: &mut dyn Engine,
+    output: &mut dyn Engine,
+    opts: PipeOptions,
+) -> Result<PipeReport> {
+    if opts.depth == 0 {
+        run_pipe(input, output, opts)
+    } else {
+        super::staged::run_staged(input, output, opts)
+    }
+}
+
+/// Run the pipe serially until end-of-stream (or `max_steps`): fetch
+/// and store strictly alternate on the calling thread, so per-step
+/// cost is load + store. The heart of the paper's first benchmark:
+/// `input` is typically an SST reader fed by the producers on this
+/// node; `output` a BP writer — giving streaming-based asynchronous IO
+/// with node-level aggregation "for free".
 pub fn run_pipe(
     input: &mut dyn Engine,
     output: &mut dyn Engine,
     opts: PipeOptions,
 ) -> Result<PipeReport> {
     let mut report = PipeReport::default();
-    let deadline_budget = opts.idle_timeout;
-    let mut idle_since = std::time::Instant::now();
+    let wall = Instant::now();
+    let mut poller = StepPoller::new(opts.idle_timeout);
 
     loop {
         if let Some(max) = opts.max_steps {
@@ -82,91 +475,46 @@ pub fn run_pipe(
                 break;
             }
         }
-        match input.begin_step()? {
-            StepStatus::Ok => {}
-            StepStatus::NotReady => {
-                if idle_since.elapsed() > deadline_budget {
-                    bail!("pipe idle for {deadline_budget:?}, giving up");
-                }
+        match open_step(input)? {
+            StepAvailability::Open => {}
+            StepAvailability::NotReady => {
+                poller.not_ready()?;
                 continue;
             }
-            StepStatus::EndOfStream => break,
-            StepStatus::Discarded => continue,
-        }
-        idle_since = std::time::Instant::now();
-
-        let step = report.steps;
-        let out_status = output.begin_step()?;
-        if out_status == StepStatus::Discarded {
-            // Downstream backpressure: consume & drop this step.
-            input.end_step()?;
-            report.steps += 1;
-            continue;
-        }
-
-        // Forward attributes.
-        for name in input.attribute_names() {
-            if let Some(v) = input.attribute(&name) {
-                output.put_attribute(&name, v)?;
+            StepAvailability::Discarded => {
+                poller.activity();
+                continue;
             }
+            StepAvailability::EndOfStream => break,
         }
-
-        // Two-phase forwarding: defer a get for every assigned chunk of
-        // every variable, then execute the step's whole chunk table as
-        // ONE perform — over SST that is one batched request per writer
-        // per step, the exchange the paper hides behind compute.
-        let mut staged = Vec::new();
-        for var in input.available_variables() {
-            let chunks = input.available_chunks(&var.name);
-            let table = ChunkTable {
-                dataset_extent: var.shape.clone(),
-                chunks,
-            };
-            let decl =
-                VarDecl::new(var.name.clone(), var.dtype, var.shape.clone());
-            let out_var = output.define_variable(&decl)?;
-            let mine: Vec<Chunk> = if opts.instances <= 1 {
-                table.chunks.iter().map(|c| c.chunk.clone()).collect()
-            } else {
-                let assignment =
-                    opts.strategy.distribute(&table, &opts.layout);
-                assignment
-                    .slices(opts.rank)
-                    .iter()
-                    .map(|s| s.chunk.clone())
-                    .collect()
-            };
-            for chunk in mine {
-                let get = input.get_deferred(&var.name, chunk.clone())?;
-                staged.push((out_var.clone(), chunk, get));
+        // Probe the output BEFORE any data moves: under queue-full
+        // backpressure a discarded step is consumed with begin/end
+        // only — no gets, no wire traffic (SST's discard-before-
+        // data-movement contract, preserved through the pipe).
+        match output.begin_step()? {
+            StepStatus::Ok => {}
+            StepStatus::Discarded => {
+                input.end_step()?;
+                report.dropped_steps += 1;
+                poller.activity();
+                continue;
             }
+            other => bail!("output engine refused step: {other:?}"),
         }
-
-        let t = report.metrics.start(OpKind::Load, step, opts.rank);
-        input.perform_gets()?;
-        let mut step_bytes = 0u64;
-        for (out_var, chunk, get) in staged {
-            let data = input.take_get(get)?;
-            step_bytes += data.len() as u64;
-            output.put_deferred(&out_var, chunk, data)?;
-            report.chunks += 1;
-        }
-        report.metrics.finish(t, step_bytes);
-        report.bytes_in += step_bytes;
-        report.bytes_out += step_bytes;
-
-        input.end_step()?;
-        // `put_deferred` above only buffers; the batch executes and the
-        // step publishes here, charged to a whole-step Store sample so
-        // file engines' write cost is visible.
-        let t = report.metrics.start(OpKind::Store, step, opts.rank);
-        output.perform_puts()?;
-        output.end_step()?;
-        report.metrics.finish(t, step_bytes);
-        report.steps += 1;
+        let fetch_index = report.steps + report.dropped_steps;
+        let payload = load_open_step(input, &opts, fetch_index)?;
+        account_load(&mut report, &payload, opts.rank);
+        let seconds = store_into_open_step(output, &payload)?;
+        account_store(&mut report, &payload, seconds, opts.rank);
+        // Activity is stamped after the step was fully handled: a
+        // step whose load+store exceeds the idle timeout must not
+        // trip a spurious "idle" abort on the next poll.
+        poller.activity();
     }
     output.close()?;
     input.close()?;
+    report.overlap.wall_seconds = wall.elapsed().as_secs_f64().max(1e-9);
+    report.overlap.steps = report.steps;
     Ok(report)
 }
 
@@ -174,10 +522,14 @@ pub fn run_pipe(
 mod tests {
     use super::*;
     use crate::adios::bp::{BpReader, BpWriter, WriterCtx};
-    use crate::adios::engine::cast;
+    use crate::adios::engine::{
+        cast, GetHandle, Mode, VarHandle, VarInfo,
+    };
     use crate::adios::json::JsonWriter;
+    use crate::openpmd::chunk::WrittenChunkInfo;
     use crate::openpmd::types::Datatype;
     use crate::openpmd::Attribute;
+    use crate::testing::engines::InjectedEngine;
     use std::path::PathBuf;
 
     fn tmp(name: &str) -> PathBuf {
@@ -216,6 +568,7 @@ mod tests {
         let report =
             run_pipe(&mut input, &mut output, PipeOptions::solo()).unwrap();
         assert_eq!(report.steps, 3);
+        assert_eq!(report.dropped_steps, 0);
         assert_eq!(report.bytes_in, 3 * 8 * 4);
         assert_eq!(report.bytes_in, report.bytes_out);
 
@@ -287,7 +640,202 @@ mod tests {
         assert_eq!(loads.ops, 4);
         assert_eq!(loads.total_bytes, 4 * 32);
         assert!(loads.mean_instance_rate > 0.0);
+        // A serial run fills the overlap accounting with ~zero hidden
+        // time: wall covers both stages end to end.
+        assert_eq!(report.overlap.steps, 4);
+        assert!(report.overlap.wall_seconds
+                >= report.overlap.load_busy_seconds);
         std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+    }
+
+    #[test]
+    fn downstream_discards_do_not_eat_max_steps() {
+        // The output discards the first two steps (queue-full
+        // backpressure). With `max_steps = 3` the pipe must still
+        // forward THREE steps — drops are counted separately, not
+        // against the budget (the former accounting terminated after
+        // forwarding only one).
+        let src = tmp("drop-acct.bp");
+        let dst = tmp("drop-acct-out.bp");
+        make_bp(&src, 5);
+        let mut input = BpReader::open(&src).unwrap();
+        let inner = BpWriter::create(&dst, WriterCtx::default()).unwrap();
+        let mut output = InjectedEngine::discarding(inner, 2);
+        let mut opts = PipeOptions::solo();
+        opts.max_steps = Some(3);
+        let report = run_pipe(&mut input, &mut output, opts).unwrap();
+        assert_eq!(report.steps, 3);
+        assert_eq!(report.dropped_steps, 2);
+        // The serial loop probes the output before loading: discarded
+        // steps are consumed without any gets, so no bytes moved for
+        // them and no Load samples were taken.
+        assert_eq!(report.bytes_in, 3 * 32);
+        assert_eq!(report.bytes_out, 3 * 32);
+        assert_eq!(report.metrics.report(OpKind::Load, 1).ops, 3);
+
+        // The output holds the three non-dropped source steps (2, 3, 4).
+        let mut check = BpReader::open(&dst).unwrap();
+        for s in 2..5u64 {
+            assert_eq!(check.begin_step().unwrap(), StepStatus::Ok);
+            assert_eq!(
+                check.attribute("/data/0/time").unwrap().as_f64(),
+                Some(s as f64)
+            );
+            check.end_step().unwrap();
+        }
+        assert_eq!(check.begin_step().unwrap(), StepStatus::EndOfStream);
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+    }
+
+    /// Minimal scripted read engine for loop-behavior tests: plays a
+    /// fixed sequence of `begin_step` statuses (steps carry no data).
+    struct ScriptedInput {
+        script: Vec<StepStatus>,
+        cursor: usize,
+        begin_calls: u64,
+        /// Artificial latency per `begin_step` (models a polling wait).
+        delay: Duration,
+    }
+
+    impl ScriptedInput {
+        fn new(script: Vec<StepStatus>, delay: Duration) -> ScriptedInput {
+            ScriptedInput { script, cursor: 0, begin_calls: 0, delay }
+        }
+    }
+
+    impl Engine for ScriptedInput {
+        fn engine_type(&self) -> &'static str {
+            "scripted"
+        }
+
+        fn mode(&self) -> Mode {
+            Mode::Read
+        }
+
+        fn begin_step(&mut self) -> Result<StepStatus> {
+            self.begin_calls += 1;
+            std::thread::sleep(self.delay);
+            let status = self
+                .script
+                .get(self.cursor)
+                .copied()
+                .unwrap_or(StepStatus::EndOfStream);
+            if self.cursor < self.script.len() {
+                self.cursor += 1;
+            }
+            Ok(status)
+        }
+
+        fn define_variable(&mut self, _decl: &VarDecl) -> Result<VarHandle> {
+            bail!("read-mode")
+        }
+
+        fn put_deferred(&mut self, _var: &VarHandle, _chunk: Chunk,
+                        _data: Bytes) -> Result<()> {
+            bail!("read-mode")
+        }
+
+        fn put_span(&mut self, _var: &VarHandle, _chunk: Chunk)
+            -> Result<&mut [u8]>
+        {
+            bail!("read-mode")
+        }
+
+        fn perform_puts(&mut self) -> Result<()> {
+            bail!("read-mode")
+        }
+
+        fn put_attribute(&mut self, _name: &str, _value: Attribute)
+            -> Result<()>
+        {
+            bail!("read-mode")
+        }
+
+        fn available_variables(&self) -> Vec<VarInfo> {
+            Vec::new()
+        }
+
+        fn available_chunks(&self, _var: &str) -> Vec<WrittenChunkInfo> {
+            Vec::new()
+        }
+
+        fn attribute(&self, _name: &str) -> Option<Attribute> {
+            None
+        }
+
+        fn attribute_names(&self) -> Vec<String> {
+            Vec::new()
+        }
+
+        fn get_deferred(&mut self, _var: &str, _selection: Chunk)
+            -> Result<GetHandle>
+        {
+            bail!("scripted input has no data")
+        }
+
+        fn perform_gets(&mut self) -> Result<()> {
+            Ok(())
+        }
+
+        fn take_get(&mut self, _handle: GetHandle) -> Result<Bytes> {
+            bail!("scripted input has no data")
+        }
+
+        fn end_step(&mut self) -> Result<()> {
+            Ok(())
+        }
+
+        fn close(&mut self) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn not_ready_polls_back_off_instead_of_spinning() {
+        // A never-ready input must trip the idle timeout after a
+        // bounded number of polls — the former hot loop called
+        // begin_step millions of times while burning a full core.
+        // 4096 NotReady polls vastly exceed what a backed-off loop can
+        // consume in 120 ms (a spinning loop would exhaust them in
+        // microseconds and sail past the idle check to EndOfStream,
+        // failing the unwrap_err below).
+        let mut input = ScriptedInput::new(
+            vec![StepStatus::NotReady; 4096],
+            Duration::ZERO,
+        );
+        let dst = tmp("backoff-out.bp");
+        let mut output =
+            BpWriter::create(&dst, WriterCtx::default()).unwrap();
+        let mut opts = PipeOptions::solo();
+        opts.idle_timeout = Duration::from_millis(120);
+        let err = run_pipe(&mut input, &mut output, opts).unwrap_err();
+        assert!(format!("{err}").contains("idle"), "{err}");
+        // 120 ms of polling with a 200 µs..20 ms backoff is a few dozen
+        // calls at most; a busy-wait would be several orders beyond.
+        assert!(input.begin_calls < 650,
+                "busy-wait: {} polls", input.begin_calls);
+        std::fs::remove_file(&dst).ok();
+    }
+
+    #[test]
+    fn input_discards_reset_the_idle_clock() {
+        // 6 discarded steps spaced 30 ms apart exceed the 100 ms idle
+        // timeout in total, but each one is stream activity: the pipe
+        // must ride them out and end cleanly instead of bailing idle.
+        let mut script = vec![StepStatus::Discarded; 6];
+        script.push(StepStatus::EndOfStream);
+        let mut input =
+            ScriptedInput::new(script, Duration::from_millis(30));
+        let dst = tmp("discard-idle-out.bp");
+        let mut output =
+            BpWriter::create(&dst, WriterCtx::default()).unwrap();
+        let mut opts = PipeOptions::solo();
+        opts.idle_timeout = Duration::from_millis(100);
+        let report = run_pipe(&mut input, &mut output, opts).unwrap();
+        assert_eq!(report.steps, 0);
+        assert_eq!(report.dropped_steps, 0); // input-side, not downstream
         std::fs::remove_file(&dst).ok();
     }
 }

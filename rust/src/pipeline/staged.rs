@@ -1,0 +1,202 @@
+//! The staged, overlapped pipe: read-ahead across steps.
+//!
+//! The serial pipe pays load + store per step — the two latencies add,
+//! which is exactly what the paper's streaming argument says they must
+//! not do. [`run_staged`] splits the per-step work into the shared
+//! core's two stages ([`super::pipe::fetch_step`] /
+//! [`super::pipe::store_step`]) running on separate threads:
+//!
+//! ```text
+//!   fetch thread:  [load N] [load N+1] [load N+2] ...
+//!                       \        \         \
+//!                     bounded step queue (depth = read-ahead)
+//!                         \        \         \
+//!   store thread:       [store N] [store N+1] [store N+2] ...
+//! ```
+//!
+//! While the output engine writes step N, the input engine is already
+//! performing step N+1's batched gets — the store latency hides behind
+//! the load (and vice versa), so sustained per-step cost approaches
+//! `max(load, store)` instead of `load + store`. This is the pipelined,
+//! buffered step forwarding of Eisenhauer et al. 2024 ("Streaming Data
+//! in HPC Workflows Using ADIOS") and the MPI-streams double-buffering
+//! idea, applied inside the `openpmd-pipe` adaptor.
+//!
+//! **Backpressure.** The connecting queue is a bounded
+//! `std::sync::mpsc::sync_channel` of capacity `depth - 1`: the fetch
+//! stage can be at most `depth` steps ahead (one in its hands plus
+//! `depth - 1` queued). A slow store blocks the fetch thread on `send`
+//! instead of buffering unboundedly; `depth == 1` degenerates to a
+//! rendezvous hand-off (still overlapped by one step), `depth == 2` is
+//! classic double buffering.
+//!
+//! **Shutdown and errors, in both directions.**
+//!
+//! * Fetch side ends (end of stream, input error, idle timeout): the
+//!   sender is dropped; the store loop drains whatever was already
+//!   queued (mpsc delivers buffered items before the disconnect), then
+//!   stops, and the fetch stage's verdict is surfaced after join.
+//! * Store side ends (store error or `max_steps` reached): the
+//!   receiver is dropped, which fails the fetch thread's next `send`
+//!   (even one already blocked on a full queue), and a shared stop
+//!   flag interrupts a fetch stage that is instead *polling* a quiet
+//!   input (bounded by one backoff sleep, not the idle timeout) — so
+//!   the fetch loop unwinds, closes the input engine, and joins
+//!   promptly in every case; no deadlock. When `max_steps` was
+//!   reached, the run met its contract and the fetch stage's own
+//!   verdict is ignored — matching the serial path, which never
+//!   touches the input again after the last requested step.
+//!
+//! The staged path shares the serial path's fetch/store/accounting
+//! helpers (`load_open_step`, `store_into_open_step`, `account_load`/
+//! `account_store`), so the two report identically and produce
+//! byte-identical output for identical inputs. Two read-ahead
+//! consequences are inherent and documented: the fetch stage may
+//! consume up to `depth` input steps beyond a `max_steps` limit, and a
+//! step the output discards has already been loaded (the serial loop
+//! instead probes the output *before* loading and drops such steps
+//! without moving any data).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::adios::engine::Engine;
+
+use super::pipe::{
+    fetch_step, forward_payload, Fetched, PipeOptions, PipeReport,
+    StepPayload, StepPoller,
+};
+
+/// Run the pipe with a dedicated fetch thread reading ahead up to
+/// `opts.depth` steps. Same contract as [`super::pipe::run_pipe`];
+/// requires `opts.depth >= 1` (use [`super::pipe::run`] to dispatch on
+/// depth).
+pub fn run_staged(
+    input: &mut dyn Engine,
+    output: &mut dyn Engine,
+    opts: PipeOptions,
+) -> Result<PipeReport> {
+    let depth = opts.depth.max(1);
+    let (tx, rx) = sync_channel::<StepPayload>(depth - 1);
+    let max_steps = opts.max_steps;
+    let rank = opts.rank;
+    let mut report = PipeReport::default();
+    let wall = Instant::now();
+    let stop = AtomicBool::new(false);
+
+    let (store_result, fetch_result) = std::thread::scope(|scope| {
+        let stop_flag = &stop;
+        let fetch =
+            scope.spawn(move || fetch_loop(input, &opts, tx, stop_flag));
+        let store_result =
+            store_loop(output, rx, &mut report, max_steps, rank);
+        // `store_loop` consumed (and dropped) the receiver, so a fetch
+        // stage blocked on a full queue fails its send immediately; the
+        // stop flag interrupts one that is polling a quiet input. The
+        // join is bounded by one backoff sleep — it cannot deadlock and
+        // does not wait out the idle timeout.
+        stop.store(true, Ordering::Relaxed);
+        let fetch_result = match fetch.join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("pipe fetch stage panicked")),
+        };
+        (store_result, fetch_result)
+    });
+    // A store-side failure is the primary verdict (the fetch side then
+    // merely observed the hang-up). If the store side completed its
+    // `max_steps` contract, the run succeeded no matter how the fetch
+    // stage wound down (idle timeout on a now-quiet stream, or an
+    // input error past the last requested step) — exactly like the
+    // serial path, which never touches the input again. Otherwise the
+    // fetch side's verdict stands.
+    let reached_max = store_result?;
+    if !reached_max {
+        fetch_result?;
+    }
+    output.close()?;
+    report.overlap.wall_seconds = wall.elapsed().as_secs_f64().max(1e-9);
+    report.overlap.steps = report.steps;
+    Ok(report)
+}
+
+/// The fetch stage: poll/fetch input steps and feed the bounded queue
+/// until end of stream, an input error, the idle timeout, or the store
+/// stage hanging up. Closes the input engine on every exit path (over
+/// SST that sends `ReaderBye`, so writers stop queueing for us).
+fn fetch_loop(
+    input: &mut dyn Engine,
+    opts: &PipeOptions,
+    tx: SyncSender<StepPayload>,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let mut poller = StepPoller::new(opts.idle_timeout);
+    let mut step = 0u64;
+    let result = loop {
+        if stop.load(Ordering::Relaxed) {
+            // The store stage finished its contract while we were
+            // polling a quiet stream: wind down now instead of waiting
+            // for the idle timeout.
+            break Ok(());
+        }
+        match fetch_step(input, opts, step) {
+            Ok(Fetched::Step(payload)) => {
+                step += 1;
+                if tx.send(payload).is_err() {
+                    // Store stage hung up (its failure, or max_steps
+                    // reached): stop fetching; the store side owns the
+                    // verdict.
+                    break Ok(());
+                }
+                // Stamp activity AFTER the hand-off: time spent
+                // blocked on a full queue is backpressure, not
+                // idleness, and must not eat into the idle budget.
+                poller.activity();
+            }
+            Ok(Fetched::NotReady) => {
+                if let Err(e) = poller.not_ready() {
+                    break Err(e);
+                }
+            }
+            Ok(Fetched::Discarded) => poller.activity(),
+            Ok(Fetched::EndOfStream) => break Ok(()),
+            Err(e) => break Err(e),
+        }
+    };
+    match input.close() {
+        Ok(()) => result,
+        // Keep the first error; a close failure only matters on an
+        // otherwise clean exit.
+        Err(close_err) => result.and(Err(close_err)),
+    }
+}
+
+/// The store stage: drain the queue into the output engine, accounting
+/// through the exact code the serial path uses. Returns `Ok(true)` if
+/// it ended by reaching `max_steps` (its contract is met and the fetch
+/// stage's verdict no longer matters), `Ok(false)` if the fetch stage
+/// disconnected first.
+fn store_loop(
+    output: &mut dyn Engine,
+    rx: Receiver<StepPayload>,
+    report: &mut PipeReport,
+    max_steps: Option<u64>,
+    rank: usize,
+) -> Result<bool> {
+    loop {
+        if let Some(max) = max_steps {
+            if report.steps >= max {
+                return Ok(true);
+            }
+        }
+        let payload = match rx.recv() {
+            Ok(p) => p,
+            // Fetch stage done (end of stream or its own error, which
+            // the caller surfaces after joining it).
+            Err(_) => return Ok(false),
+        };
+        forward_payload(output, &payload, report, rank)?;
+    }
+}

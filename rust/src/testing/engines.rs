@@ -1,0 +1,254 @@
+//! A delegating engine wrapper with one injected behavior per
+//! constructor: latency, faults, or backpressure discards. It wraps
+//! any [`Engine`] and passes every call through, so the wrapped
+//! backend stays fully conformant while exactly one behavior is
+//! altered — and there is a single delegation impl to keep in sync
+//! with the trait.
+//!
+//! Used by the staged-pipe tests (error propagation, drop accounting)
+//! and by `benches/fig8_pipeline.rs`, where [`InjectedEngine::slow`]
+//! gives load and store measurable latencies so the serial-vs-staged
+//! overlap is visible on any machine.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::adios::engine::{
+    Bytes, Engine, GetHandle, Mode, StepStatus, VarDecl, VarHandle,
+    VarInfo,
+};
+use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
+use crate::openpmd::Attribute;
+
+/// The error text injected by [`InjectedEngine::failing`]; tests match
+/// on it.
+pub const INJECTED_STORE_FAULT: &str = "injected store fault";
+
+/// See the module docs. Construct with [`InjectedEngine::slow`],
+/// [`InjectedEngine::failing`] or [`InjectedEngine::discarding`].
+pub struct InjectedEngine<E: Engine> {
+    inner: E,
+    /// Sleep added before every `perform_gets` (read side).
+    get_latency: Duration,
+    /// Sleep added before every `end_step` publish (write side —
+    /// charged once per step, where file engines flush).
+    put_latency: Duration,
+    /// 0-based step index from which every `perform_puts` fails.
+    fail_puts_from_step: Option<u64>,
+    /// `begin_step` returns `Discarded` for this many first offers.
+    discard_first_steps: u64,
+    steps_offered: u64,
+    steps_ended: u64,
+}
+
+impl<E: Engine> InjectedEngine<E> {
+    fn passthrough(inner: E) -> InjectedEngine<E> {
+        InjectedEngine {
+            inner,
+            get_latency: Duration::ZERO,
+            put_latency: Duration::ZERO,
+            fail_puts_from_step: None,
+            discard_first_steps: 0,
+            steps_offered: 0,
+            steps_ended: 0,
+        }
+    }
+
+    /// Fixed latency per batch execution, simulating slow media or a
+    /// long wire: `get_latency` before each `perform_gets`,
+    /// `put_latency` before each `end_step` publish.
+    pub fn slow(inner: E, get_latency: Duration, put_latency: Duration)
+        -> InjectedEngine<E>
+    {
+        let mut e = Self::passthrough(inner);
+        e.get_latency = get_latency;
+        e.put_latency = put_latency;
+        e
+    }
+
+    /// Write-mode fault injection: `perform_puts` starts failing from
+    /// step index `fail_from_step` on — for error-propagation tests
+    /// (e.g. the staged pipe must unwind and join its fetch thread
+    /// when the store side dies, not deadlock it).
+    pub fn failing(inner: E, fail_from_step: u64) -> InjectedEngine<E> {
+        let mut e = Self::passthrough(inner);
+        e.fail_puts_from_step = Some(fail_from_step);
+        e
+    }
+
+    /// Write-mode backpressure injection: the first `n` steps are
+    /// discarded at `begin_step` (queue-full backpressure without an
+    /// SST queue), for drop-accounting tests.
+    pub fn discarding(inner: E, n: u64) -> InjectedEngine<E> {
+        let mut e = Self::passthrough(inner);
+        e.discard_first_steps = n;
+        e
+    }
+
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+}
+
+impl<E: Engine> Engine for InjectedEngine<E> {
+    fn engine_type(&self) -> &'static str {
+        self.inner.engine_type()
+    }
+
+    fn mode(&self) -> Mode {
+        self.inner.mode()
+    }
+
+    fn begin_step(&mut self) -> Result<StepStatus> {
+        self.steps_offered += 1;
+        if self.steps_offered <= self.discard_first_steps {
+            // Step discarded before any data movement; the inner step
+            // is never opened.
+            return Ok(StepStatus::Discarded);
+        }
+        self.inner.begin_step()
+    }
+
+    fn define_variable(&mut self, decl: &VarDecl) -> Result<VarHandle> {
+        self.inner.define_variable(decl)
+    }
+
+    fn put_deferred(&mut self, var: &VarHandle, chunk: Chunk, data: Bytes)
+        -> Result<()>
+    {
+        self.inner.put_deferred(var, chunk, data)
+    }
+
+    fn put_span(&mut self, var: &VarHandle, chunk: Chunk)
+        -> Result<&mut [u8]>
+    {
+        self.inner.put_span(var, chunk)
+    }
+
+    fn perform_puts(&mut self) -> Result<()> {
+        if let Some(from) = self.fail_puts_from_step {
+            if self.steps_ended >= from {
+                bail!("{INJECTED_STORE_FAULT} (step {})", self.steps_ended);
+            }
+        }
+        self.inner.perform_puts()
+    }
+
+    fn put_attribute(&mut self, name: &str, value: Attribute) -> Result<()> {
+        self.inner.put_attribute(name, value)
+    }
+
+    fn available_variables(&self) -> Vec<VarInfo> {
+        self.inner.available_variables()
+    }
+
+    fn available_chunks(&self, var: &str) -> Vec<WrittenChunkInfo> {
+        self.inner.available_chunks(var)
+    }
+
+    fn attribute(&self, name: &str) -> Option<Attribute> {
+        self.inner.attribute(name)
+    }
+
+    fn attribute_names(&self) -> Vec<String> {
+        self.inner.attribute_names()
+    }
+
+    fn get_deferred(&mut self, var: &str, selection: Chunk)
+        -> Result<GetHandle>
+    {
+        self.inner.get_deferred(var, selection)
+    }
+
+    fn perform_gets(&mut self) -> Result<()> {
+        std::thread::sleep(self.get_latency);
+        self.inner.perform_gets()
+    }
+
+    fn take_get(&mut self, handle: GetHandle) -> Result<Bytes> {
+        self.inner.take_get(handle)
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        if self.inner.mode() == Mode::Write {
+            std::thread::sleep(self.put_latency);
+        }
+        self.inner.end_step()?;
+        self.steps_ended += 1;
+        Ok(())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        self.inner.close()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::bp::{BpReader, BpWriter, WriterCtx};
+    use crate::adios::engine::cast;
+    use crate::openpmd::types::Datatype;
+
+    #[test]
+    fn slow_engine_round_trips_unchanged() {
+        let path = std::env::temp_dir()
+            .join(format!("opmd-slow-{}.bp", std::process::id()));
+        let inner = BpWriter::create(&path, WriterCtx::default()).unwrap();
+        let mut w = InjectedEngine::slow(
+            inner, Duration::ZERO, Duration::from_millis(1));
+        let var = VarDecl::new("/x", Datatype::F32, vec![4]);
+        w.begin_step().unwrap();
+        w.put(&var, Chunk::whole(vec![4]),
+              cast::f32_to_bytes(&[1.0, 2.0, 3.0, 4.0]))
+            .unwrap();
+        w.end_step().unwrap();
+        w.close().unwrap();
+
+        let inner = BpReader::open(&path).unwrap();
+        let mut r = InjectedEngine::slow(
+            inner, Duration::from_millis(1), Duration::ZERO);
+        assert_eq!(r.begin_step().unwrap(), StepStatus::Ok);
+        let data = r.get("/x", Chunk::whole(vec![4])).unwrap();
+        assert_eq!(cast::bytes_to_f32(&data).unwrap(),
+                   vec![1.0, 2.0, 3.0, 4.0]);
+        r.end_step().unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn failing_engine_fails_from_the_configured_step() {
+        let path = std::env::temp_dir()
+            .join(format!("opmd-failw-{}.bp", std::process::id()));
+        let inner = BpWriter::create(&path, WriterCtx::default()).unwrap();
+        let mut w = InjectedEngine::failing(inner, 1);
+        let var = VarDecl::new("/x", Datatype::F32, vec![1]);
+        // Step 0 succeeds.
+        w.begin_step().unwrap();
+        w.put(&var, Chunk::whole(vec![1]), cast::f32_to_bytes(&[0.0]))
+            .unwrap();
+        w.end_step().unwrap();
+        // Step 1 fails at batch execution.
+        w.begin_step().unwrap();
+        let err = w
+            .put(&var, Chunk::whole(vec![1]), cast::f32_to_bytes(&[1.0]))
+            .unwrap_err();
+        assert!(format!("{err}").contains(INJECTED_STORE_FAULT), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn discarding_engine_drops_then_delegates() {
+        let path = std::env::temp_dir()
+            .join(format!("opmd-discw-{}.bp", std::process::id()));
+        let inner = BpWriter::create(&path, WriterCtx::default()).unwrap();
+        let mut w = InjectedEngine::discarding(inner, 2);
+        assert_eq!(w.begin_step().unwrap(), StepStatus::Discarded);
+        assert_eq!(w.begin_step().unwrap(), StepStatus::Discarded);
+        assert_eq!(w.begin_step().unwrap(), StepStatus::Ok);
+        w.end_step().unwrap();
+        w.close().unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,82 @@
+//! Shared data fixtures for tests and benches, so the "write a chunked
+//! BP source" helper exists once instead of per test file.
+
+use std::path::Path;
+
+use crate::adios::bp::{BpWriter, WriterCtx};
+use crate::adios::engine::{cast, Engine, VarDecl};
+use crate::openpmd::chunk::Chunk;
+use crate::openpmd::types::Datatype;
+use crate::openpmd::Attribute;
+
+/// Write a BP source of `steps` steps, each carrying one f32 variable
+/// `/data/x` of extent `extent` split into `chunks_per_step` equal
+/// chunks, plus a `/data/time` attribute holding the step index.
+/// Element at global index `g` of step `s` holds `(s * 100 + g) as
+/// f32` — a formula tests can assert against.
+pub fn write_chunked_bp(
+    path: impl AsRef<Path>,
+    steps: u64,
+    extent: u64,
+    chunks_per_step: u64,
+) {
+    assert!(
+        chunks_per_step > 0 && extent % chunks_per_step == 0,
+        "extent must split evenly into chunks"
+    );
+    let mut w = BpWriter::create(path, WriterCtx {
+        rank: 0,
+        hostname: "src".into(),
+    })
+    .expect("create BP fixture");
+    let decl = VarDecl::new("/data/x", Datatype::F32, vec![extent]);
+    let per_chunk = extent / chunks_per_step;
+    for s in 0..steps {
+        w.begin_step().unwrap();
+        w.put_attribute("/data/time", Attribute::F64(s as f64))
+            .unwrap();
+        let h = w.define_variable(&decl).unwrap();
+        for c in 0..chunks_per_step {
+            let off = c * per_chunk;
+            let xs: Vec<f32> = (0..per_chunk)
+                .map(|i| (s * 100 + off + i) as f32)
+                .collect();
+            w.put_deferred(&h, Chunk::new(vec![off], vec![per_chunk]),
+                           cast::f32_to_bytes(&xs))
+                .unwrap();
+        }
+        w.end_step().unwrap();
+    }
+    w.close().unwrap();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::bp::BpReader;
+    use crate::adios::engine::StepStatus;
+
+    #[test]
+    fn fixture_writes_the_documented_formula() {
+        let path = std::env::temp_dir()
+            .join(format!("opmd-fixture-{}.bp", std::process::id()));
+        write_chunked_bp(&path, 2, 8, 2);
+        let mut r = BpReader::open(&path).unwrap();
+        for s in 0..2u64 {
+            assert_eq!(r.begin_step().unwrap(), StepStatus::Ok);
+            assert_eq!(
+                r.attribute("/data/time").unwrap().as_f64(),
+                Some(s as f64)
+            );
+            assert_eq!(r.available_chunks("/data/x").len(), 2);
+            let data = r.get("/data/x", Chunk::whole(vec![8])).unwrap();
+            let xs = cast::bytes_to_f32(&data).unwrap();
+            for (g, &x) in xs.iter().enumerate() {
+                assert_eq!(x, (s * 100 + g as u64) as f32);
+            }
+            r.end_step().unwrap();
+        }
+        assert_eq!(r.begin_step().unwrap(), StepStatus::EndOfStream);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -6,9 +6,14 @@
 //! API is intentionally tiny — `check(cases, gen, prop)`.
 //!
 //! [`engine_conformance`] is the shared contract test for the two-phase
-//! engine API, run against every backend from `tests/`.
+//! engine API, run against every backend from `tests/`. [`engines`]
+//! provides a delegating engine wrapper with one injected behavior
+//! (latency, faults, discards) for pipe tests and benches, and
+//! [`fixtures`] the shared chunked-BP source generator they read.
 
 pub mod engine_conformance;
+pub mod engines;
+pub mod fixtures;
 
 use crate::util::rng::Rng;
 

@@ -457,6 +457,95 @@ fn deferred_batch_is_one_wire_message_per_step() {
     writer.close().unwrap();
 }
 
+/// A writer-side batch failure mid-`perform_gets` must poison the
+/// drained handles: `take_get` then reports the batch error instead of
+/// a baffling "unknown handle". Uses a wire-level fake writer so the
+/// error path is actually exercised (a real `SstWriter` never errors a
+/// validated batch).
+#[test]
+fn failed_batch_poisons_handles_with_the_batch_error() {
+    use openpmd_stream::adios::transport;
+    use openpmd_stream::adios::wire::{
+        GetReply, Msg, StepMeta, VarMeta,
+    };
+    use openpmd_stream::openpmd::chunk::WrittenChunkInfo;
+    use openpmd_stream::adios::transport::Recv;
+
+    let t = transport::by_name("inproc").unwrap();
+    let mut listener = t
+        .listen(&format!("poison-{}", std::process::id()))
+        .unwrap();
+    let addr = listener.address();
+
+    // Fake writer: handshake, announce one step with /x f32 [4], then
+    // answer the batched get with per-item errors.
+    let fake = std::thread::spawn(move || {
+        let mut conn = listener
+            .accept_timeout(Duration::from_secs(10))
+            .unwrap()
+            .expect("reader never dialed");
+        match conn.recv().unwrap() {
+            Recv::Msg(Msg::Hello { .. }) => {}
+            _ => panic!("expected Hello"),
+        }
+        conn.send(Msg::HelloAck { writer_rank: 0, hostname: "fake".into() })
+            .unwrap();
+        let meta = StepMeta {
+            attributes: Default::default(),
+            vars: vec![VarMeta {
+                name: "/x".into(),
+                dtype: Datatype::F32,
+                shape: vec![4],
+                chunks: vec![WrittenChunkInfo::new(
+                    Chunk::whole(vec![4]), 0, "fake")],
+            }],
+        };
+        conn.send(Msg::StepAnnounce { step: 0, meta }).unwrap();
+        loop {
+            match conn.recv().unwrap() {
+                Recv::Msg(Msg::GetBatch { req_id, items, .. }) => {
+                    conn.send(Msg::GetBatchReply {
+                        req_id,
+                        items: items
+                            .iter()
+                            .map(|_| {
+                                GetReply::Error("injected fault".into())
+                            })
+                            .collect(),
+                    })
+                    .unwrap();
+                }
+                Recv::Msg(Msg::ReaderBye) | Recv::Closed => break,
+                _ => {}
+            }
+        }
+    });
+
+    let mut reader =
+        SstReader::open(reader_opts("inproc", vec![addr])).unwrap();
+    assert_eq!(reader.begin_step().unwrap(), StepStatus::Ok);
+    let h1 = reader
+        .get_deferred("/x", Chunk::new(vec![0], vec![2]))
+        .unwrap();
+    let h2 = reader
+        .get_deferred("/x", Chunk::new(vec![2], vec![2]))
+        .unwrap();
+    let perform_err = reader.perform_gets().unwrap_err();
+    assert!(format!("{perform_err:#}").contains("injected fault"),
+            "{perform_err:#}");
+    // Both handles were drained before the failure; they must surface
+    // the batch error, not "unknown handle".
+    for h in [h1, h2] {
+        let err = format!("{}", reader.take_get(h).unwrap_err());
+        assert!(err.contains("injected fault"), "{err}");
+        assert!(!err.contains("unknown"), "{err}");
+    }
+    // The engine stays usable for step lifecycle calls.
+    reader.end_step().unwrap();
+    reader.close().unwrap();
+    fake.join().unwrap();
+}
+
 #[test]
 fn zero_copy_on_aligned_inproc_reads() {
     // An exact-chunk read over inproc must return the writer's buffer
