@@ -1,0 +1,247 @@
+//! **fig_compression**: operator throughput vs. compression ratio.
+//!
+//! The paper's streaming rates are ultimately bound by bytes moved per
+//! step; per-variable operators (`adios::ops`) trade CPU for bytes.
+//! This bench quantifies the trade on both axes:
+//!
+//! * **Table 1 (codec micro)** — every chain over one step of the
+//!   synthetic producer's openPMD fields (plus `delta` over monotone
+//!   u64 index data): compression ratio, encode and decode throughput.
+//! * **Table 2 (end-to-end SST-TCP)** — the same producer streaming
+//!   over a real TCP socket to an SST reader, identity vs. operated:
+//!   wire bytes, wire ratio, and *effective* stream throughput (raw
+//!   bytes delivered per wall second). Lossless runs are verified
+//!   byte-identical to the identity run.
+//!
+//! `--smoke` (or `FIGC_SMOKE=1`) shrinks sizes for CI, which runs it so
+//! an operator-path regression on the real wire fails fast.
+//!
+//! Acceptance bar (asserted): `shuffle|rle` on the producer's fields
+//! reaches ratio > 1.5x and the end-to-end output stays byte-identical.
+
+use std::time::{Duration, Instant};
+
+use openpmd_stream::adios::engine::{cast, Engine, StepStatus};
+use openpmd_stream::adios::ops::{self, OpChain, OpCtx, OpsReport};
+use openpmd_stream::adios::sst::{
+    QueueConfig, QueueFullPolicy, SstReader, SstReaderOptions, SstWriter,
+    SstWriterOptions,
+};
+use openpmd_stream::bench::Table;
+use openpmd_stream::openpmd::chunk::Chunk;
+use openpmd_stream::openpmd::types::Datatype;
+use openpmd_stream::producer::SyntheticProducer;
+use openpmd_stream::util::bytes::{fmt_bytes, fmt_rate};
+use openpmd_stream::util::cli::Args;
+
+const SEED: u64 = 2024;
+
+fn codec_micro(smoke: bool) {
+    let particles: usize = if smoke { 1 << 12 } else { 1 << 17 };
+    let mut producer =
+        SyntheticProducer::new(0, particles, 0, particles as u64, SEED);
+    let payloads = producer.component_payloads();
+
+    let mut t = Table::new(
+        "fig_compression 1: codec chains over one synthetic producer \
+         step (position ramp / momentum noise / constant weighting)",
+        &["chain", "ratio", "saved", "encode", "decode"],
+    );
+
+    let mut shuffle_rle_ratio = 0.0f64;
+    for spec in ["identity", "shuffle", "rle", "shuffle|rle", "zfp:14",
+                 "zfp:14|shuffle|rle"] {
+        let chain = OpChain::parse(spec).unwrap();
+        let mut rep = OpsReport::default();
+        for (name, raw) in &payloads {
+            let octx = OpCtx {
+                dtype: Datatype::F32,
+                extent: &[raw.len() as u64 / 4],
+            };
+            let framed =
+                ops::encode_bytes(&chain, &octx, raw, &mut rep).unwrap();
+            let back = ops::decode_bytes(&chain, &octx, &framed,
+                                         raw.len(), &mut rep)
+                .unwrap();
+            if chain.is_lossless() {
+                assert_eq!(*back, *raw, "{spec} not lossless on {name}");
+            }
+        }
+        if spec == "shuffle|rle" {
+            shuffle_rle_ratio = rep.ratio();
+        }
+        t.row(vec![
+            spec.into(),
+            format!("{:.2}x", rep.ratio()),
+            fmt_bytes(rep.bytes_saved().max(0) as u64),
+            fmt_rate(rep.encode_rate()),
+            fmt_rate(rep.decode_rate()),
+        ]);
+    }
+
+    // delta over monotone u64 index data (particle ids / offsets).
+    let ids: Vec<u64> =
+        (0..particles as u64).map(|i| 5_000_000 + i * 3).collect();
+    let raw = cast::u64_to_bytes(&ids);
+    for spec in ["delta", "delta|rle"] {
+        let chain = OpChain::parse(spec).unwrap();
+        let mut rep = OpsReport::default();
+        let octx = OpCtx {
+            dtype: Datatype::U64,
+            extent: &[ids.len() as u64],
+        };
+        let framed =
+            ops::encode_bytes(&chain, &octx, &raw, &mut rep).unwrap();
+        let back = ops::decode_bytes(&chain, &octx, &framed, raw.len(),
+                                     &mut rep)
+            .unwrap();
+        assert_eq!(*back, *raw, "{spec} not lossless on u64 ids");
+        t.row(vec![
+            format!("{spec} (u64 ids)"),
+            format!("{:.2}x", rep.ratio()),
+            fmt_bytes(rep.bytes_saved().max(0) as u64),
+            fmt_rate(rep.encode_rate()),
+            fmt_rate(rep.decode_rate()),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("fig_compression_micro").ok();
+
+    assert!(
+        shuffle_rle_ratio > 1.5,
+        "ACCEPTANCE: shuffle|rle ratio {shuffle_rle_ratio:.2} <= 1.5"
+    );
+    println!(
+        "\nacceptance: shuffle|rle ratio {shuffle_rle_ratio:.2}x > 1.5x \
+         on the producer's fields — OK"
+    );
+}
+
+/// Stream `steps` producer steps over SST-TCP with `chain`, read every
+/// variable whole, and return (raw bytes, wire bytes, wall seconds,
+/// concatenated output) for comparison across chains.
+fn stream_once(
+    chain: &OpChain,
+    steps: u64,
+    particles: usize,
+) -> (u64, u64, f64, Vec<u8>) {
+    let mut writer = SstWriter::open(SstWriterOptions {
+        listen: String::new(),
+        transport: "tcp".into(),
+        rank: 0,
+        hostname: "bench".into(),
+        queue: QueueConfig {
+            policy: QueueFullPolicy::Block,
+            limit: steps as usize + 2,
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = writer.address();
+    let chain_w = chain.clone();
+    let producer_thread = std::thread::spawn(move || {
+        let mut p =
+            SyntheticProducer::new(0, particles, 0, particles as u64,
+                                   SEED)
+                .with_ops(chain_w);
+        for _ in 0..steps {
+            assert_eq!(p.write_step(&mut writer).unwrap(),
+                       StepStatus::Ok);
+        }
+        writer.close().unwrap();
+    });
+
+    let mut reader = SstReader::open(SstReaderOptions {
+        writers: vec![addr],
+        transport: "tcp".into(),
+        begin_step_timeout: Duration::from_secs(60),
+        ..Default::default()
+    })
+    .unwrap();
+
+    let started = Instant::now();
+    let mut raw_bytes = 0u64;
+    let mut output = Vec::new();
+    let mut seen = 0u64;
+    while seen < steps {
+        match reader.begin_step().unwrap() {
+            StepStatus::Ok => {}
+            StepStatus::NotReady => {
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+            other => panic!("stream ended early: {other:?}"),
+        }
+        for var in reader.available_variables() {
+            let data = reader
+                .get(&var.name, Chunk::whole(var.shape.clone()))
+                .unwrap();
+            raw_bytes += data.len() as u64;
+            output.extend_from_slice(&data);
+        }
+        reader.end_step().unwrap();
+        seen += 1;
+    }
+    let wall = started.elapsed().as_secs_f64().max(1e-9);
+    let wire_bytes = reader.stats().bytes_got;
+    reader.close().unwrap();
+    producer_thread.join().unwrap();
+    (raw_bytes, wire_bytes, wall, output)
+}
+
+fn end_to_end_sst_tcp(smoke: bool) {
+    let steps: u64 = if smoke { 2 } else { 4 };
+    let particles: usize = if smoke { 1 << 12 } else { 1 << 16 };
+
+    let mut t = Table::new(
+        "fig_compression 2: end-to-end over SST-TCP (whole-variable \
+         reads, one reader)",
+        &["chain", "raw", "wire", "wire ratio", "wall", "effective"],
+    );
+
+    let mut identity_output: Option<Vec<u8>> = None;
+    for spec in ["identity", "shuffle|rle", "zfp:14|shuffle|rle"] {
+        let chain = OpChain::parse(spec).unwrap();
+        let (raw, wire, wall, output) =
+            stream_once(&chain, steps, particles);
+        match identity_output.take() {
+            None => identity_output = Some(output),
+            Some(want) => {
+                if chain.is_lossless() {
+                    assert_eq!(
+                        output, want,
+                        "ACCEPTANCE: {spec} end-to-end output differs \
+                         from the identity chain"
+                    );
+                }
+                identity_output = Some(want);
+            }
+        }
+        t.row(vec![
+            spec.into(),
+            fmt_bytes(raw),
+            fmt_bytes(wire),
+            format!("{:.2}x", raw as f64 / wire.max(1) as f64),
+            format!("{:.1} ms", wall * 1e3),
+            fmt_rate(raw as f64 / wall),
+        ]);
+    }
+    print!("\n{}", t.render());
+    t.save_csv("fig_compression_e2e").ok();
+    println!(
+        "\nacceptance: lossless chains byte-identical to identity over \
+         real SST-TCP — OK (the conformance suite proves the same for \
+         bp, json and sst-inproc)"
+    );
+}
+
+fn main() {
+    let args = Args::from_env(false).unwrap_or_default();
+    let smoke =
+        args.flag("smoke") || std::env::var("FIGC_SMOKE").is_ok();
+    if smoke {
+        println!("[smoke mode: tiny sizes]");
+    }
+    codec_micro(smoke);
+    end_to_end_sst_tcp(smoke);
+}

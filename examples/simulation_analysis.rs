@@ -170,6 +170,7 @@ fn main() -> Result<()> {
                     rank,
                     hostname: "node0000".into(),
                     begin_step_timeout: Duration::from_secs(120),
+                    codecs: None,
                 })?;
                 let mut saxs = SaxsAnalyzer::new(2.0, runtime.as_ref())?;
                 let mut spectrum =

@@ -80,6 +80,7 @@ fn main() -> Result<()> {
                 rank: 0,
                 hostname: "node0000".into(),
                 begin_step_timeout: Duration::from_secs(30),
+                codecs: None,
             })?;
             let mut output = BpWriter::create(&bp_path, WriterCtx {
                 rank: 0,

@@ -29,6 +29,7 @@ use super::engine::{
     Bytes, Engine, GetHandle, GetQueue, Mode, PutQueue, StepStatus,
     VarDecl, VarHandle, VarInfo,
 };
+use super::ops::{self, OpChain, OpsReport};
 use super::region;
 use super::wire::{Reader as WireReader, StepMeta, VarMeta};
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
@@ -37,7 +38,9 @@ use crate::openpmd::Attribute;
 #[allow(unused_imports)]
 pub use super::engine::EngineKind;
 
-const MAGIC: &[u8; 8] = b"OPMDBP01";
+// BP02: variable metadata carries an operator chain and payload records
+// of operated variables are stored operator-framed (compressed on disk).
+const MAGIC: &[u8; 8] = b"OPMDBP02";
 const STEP_MARKER: u64 = 0x0053_5445_5000_0000; // "STEP"-ish sentinel
 
 /// Writer context: rank + hostname recorded into every chunk's metadata.
@@ -66,6 +69,8 @@ pub struct BpWriter {
     current: Option<(StepMeta, Vec<(String, Chunk, Bytes)>)>,
     /// Variable registry + deferred-put queue (two-phase API).
     puts: PutQueue,
+    /// Encode-side operator accounting.
+    ops_stats: OpsReport,
     pub bytes_written: u64,
 }
 
@@ -89,6 +94,7 @@ impl BpWriter {
             step: 0,
             current: None,
             puts: PutQueue::default(),
+            ops_stats: OpsReport::default(),
             bytes_written: MAGIC.len() as u64,
         })
     }
@@ -156,11 +162,16 @@ impl Engine for BpWriter {
                     name: p.var.name().to_string(),
                     dtype: p.var.dtype(),
                     shape: p.var.shape().to_vec(),
+                    ops: p.var.ops().clone(),
                     chunks: vec![info],
                 }),
             }
-            payloads.push((p.var.name().to_string(), p.chunk,
-                           p.data.into_bytes()));
+            // The operator chain is applied here, in the deferred core:
+            // payload records of operated variables land on disk
+            // operator-framed (compressed), never raw.
+            let data = ops::encode_put(&p.var, &p.chunk, p.data,
+                                       &mut self.ops_stats)?;
+            payloads.push((p.var.name().to_string(), p.chunk, data));
         }
         Ok(())
     }
@@ -251,6 +262,10 @@ impl Engine for BpWriter {
         self.file.flush()?;
         Ok(())
     }
+
+    fn ops_report(&self) -> OpsReport {
+        self.ops_stats
+    }
 }
 
 impl Drop for BpWriter {
@@ -278,6 +293,8 @@ pub struct BpReader {
     index: BTreeMap<String, Vec<PayloadIndex>>,
     /// Deferred-get queue (two-phase API).
     gets: GetQueue,
+    /// Decode-side operator accounting.
+    ops_stats: OpsReport,
     open_step: bool,
 }
 
@@ -298,6 +315,7 @@ impl BpReader {
             meta: None,
             index: BTreeMap::new(),
             gets: GetQueue::default(),
+            ops_stats: OpsReport::default(),
             open_step: false,
         })
     }
@@ -418,6 +436,7 @@ impl Engine for BpReader {
                         name: v.name.clone(),
                         dtype: v.dtype,
                         shape: v.shape.clone(),
+                        ops: v.ops.clone(),
                     })
                     .collect()
             })
@@ -542,6 +561,10 @@ impl Engine for BpReader {
         self.open_step = false;
         Ok(())
     }
+
+    fn ops_report(&self) -> OpsReport {
+        self.ops_stats
+    }
 }
 
 /// Current step index (reader side) + internal batch servicing.
@@ -550,13 +573,14 @@ impl BpReader {
         self.meta.as_ref().map(|(s, _)| *s)
     }
 
-    /// Load one selection from the current step's payload records.
+    /// Load one selection from the current step's payload records,
+    /// reversing the variable's operator chain on each record read.
     fn fetch(&mut self, var: &str, selection: &Chunk) -> Result<Bytes> {
-        let dtype = self
+        let (dtype, chain): (_, OpChain) = self
             .meta
             .as_ref()
             .and_then(|(_, m)| m.vars.iter().find(|v| v.name == var))
-            .map(|v| v.dtype)
+            .map(|v| (v.dtype, v.ops.clone()))
             .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))?;
         let elem = dtype.size();
         let records: Vec<(Chunk, u64, u64)> = self
@@ -568,7 +592,8 @@ impl BpReader {
             .collect();
 
         // Fast path: the selection IS a written chunk (perfect alignment,
-        // the property §3.1 rewards) — one contiguous read, zero copies.
+        // the property §3.1 rewards) — one contiguous read; an operated
+        // record additionally pays exactly one decode.
         for (chunk, file_offset, len) in &records {
             if chunk == selection {
                 self.file.seek(SeekFrom::Start(*file_offset))?;
@@ -579,7 +604,12 @@ impl BpReader {
                 if read as u64 != *len {
                     bail!("short read for {var:?}");
                 }
-                return Ok(Arc::new(data));
+                if chain.is_identity() {
+                    return Ok(Arc::new(data));
+                }
+                return ops::decode_get(&chain, dtype, chunk, &data,
+                                       &mut self.ops_stats)
+                    .map_err(|e| anyhow::anyhow!("{var}: {e}"));
             }
         }
 
@@ -596,7 +626,14 @@ impl BpReader {
             if read as u64 != len {
                 bail!("short read for {var:?}");
             }
-            covered += region::copy_region(&chunk, &data, selection,
+            let raw: Bytes = if chain.is_identity() {
+                Arc::new(data)
+            } else {
+                ops::decode_get(&chain, dtype, &chunk, &data,
+                                &mut self.ops_stats)
+                    .map_err(|e| anyhow::anyhow!("{var}: {e}"))?
+            };
+            covered += region::copy_region(&chunk, &raw, selection,
                                            &mut out, elem);
         }
         if covered < selection.num_elements() {
@@ -732,6 +769,57 @@ mod tests {
             }
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn operated_variable_shrinks_the_file_and_self_describes() {
+        let chain = OpChain::parse("shuffle|rle").unwrap();
+        let xs = vec![1.25f32; 4096];
+        let write = |path: &Path, ops: OpChain| {
+            let mut w =
+                BpWriter::create(path, WriterCtx::default()).unwrap();
+            w.begin_step().unwrap();
+            let decl = VarDecl::new("/data/0/x", Datatype::F32,
+                                    vec![4096])
+                .with_ops(ops);
+            let h = w.define_variable(&decl).unwrap();
+            w.put_deferred(&h, Chunk::whole(vec![4096]),
+                           cast::f32_to_bytes(&xs))
+                .unwrap();
+            w.end_step().unwrap();
+            let report = w.ops_report();
+            w.close().unwrap();
+            report
+        };
+        let plain = tmp("ops-plain");
+        let coded = tmp("ops-coded");
+        let plain_report = write(&plain, OpChain::identity());
+        let coded_report = write(&coded, chain.clone());
+        assert!(plain_report.is_empty());
+        assert!(coded_report.ratio() > 10.0,
+                "constant payload must collapse: {coded_report:?}");
+        let plain_size = std::fs::metadata(&plain).unwrap().len();
+        let coded_size = std::fs::metadata(&coded).unwrap().len();
+        assert!(coded_size < plain_size / 4,
+                "coded {coded_size} vs plain {plain_size}");
+
+        // The file self-describes its chain, and reads decode.
+        let mut r = BpReader::open(&coded).unwrap();
+        assert_eq!(r.begin_step().unwrap(), StepStatus::Ok);
+        let vars = r.available_variables();
+        assert_eq!(vars[0].ops, chain);
+        // Aligned (fast-path) read.
+        let whole = r.get("/data/0/x", Chunk::whole(vec![4096])).unwrap();
+        assert_eq!(cast::bytes_to_f32(&whole).unwrap(), xs);
+        // Misaligned read decodes then assembles.
+        let part = r
+            .get("/data/0/x", Chunk::new(vec![7], vec![9]))
+            .unwrap();
+        assert_eq!(cast::bytes_to_f32(&part).unwrap(), vec![1.25f32; 9]);
+        assert!(r.ops_report().chunks_decoded >= 2);
+        r.end_step().unwrap();
+        std::fs::remove_file(&plain).ok();
+        std::fs::remove_file(&coded).ok();
     }
 
     #[test]

@@ -37,6 +37,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use super::ops::{OpChain, OpsReport};
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::types::Datatype;
 use crate::openpmd::Attribute;
@@ -76,12 +77,23 @@ pub struct VarDecl {
     pub dtype: Datatype,
     /// Global dataset extent.
     pub shape: Vec<u64>,
+    /// Operator chain applied to every chunk payload at put time and
+    /// reversed at get time (ADIOS2's `AddOperation`). Identity by
+    /// default; validated against `dtype` once, at `define_variable`.
+    pub ops: OpChain,
 }
 
 impl VarDecl {
     pub fn new(name: impl Into<String>, dtype: Datatype,
                shape: Vec<u64>) -> Self {
-        VarDecl { name: name.into(), dtype, shape }
+        VarDecl { name: name.into(), dtype, shape,
+                  ops: OpChain::identity() }
+    }
+
+    /// Attach an operator chain (builder style).
+    pub fn with_ops(mut self, ops: OpChain) -> Self {
+        self.ops = ops;
+        self
     }
 }
 
@@ -94,6 +106,7 @@ pub struct VarHandle {
     name: Arc<str>,
     dtype: Datatype,
     shape: Arc<[u64]>,
+    ops: OpChain,
 }
 
 impl PartialEq for VarHandle {
@@ -117,6 +130,11 @@ impl VarHandle {
 
     pub fn shape(&self) -> &[u64] {
         &self.shape
+    }
+
+    /// The operator chain this variable was declared with.
+    pub fn ops(&self) -> &OpChain {
+        &self.ops
     }
 
     /// Validate `chunk` against this variable (rank, bounds) and return
@@ -152,6 +170,10 @@ pub struct VarInfo {
     pub name: String,
     pub dtype: Datatype,
     pub shape: Vec<u64>,
+    /// Operator chain the writer declared for this variable — the read
+    /// side decodes with it, and `pipeline::pipe` forwards it so a
+    /// piped stream stays transformed end to end.
+    pub ops: OpChain,
 }
 
 /// The engine trait. One instance per parallel rank and stream.
@@ -236,6 +258,15 @@ pub trait Engine: Send {
     /// Close the engine (writer: signals end-of-stream to readers).
     fn close(&mut self) -> Result<()>;
 
+    // ---- operators --------------------------------------------------
+
+    /// Cumulative operator (compression) statistics of this engine:
+    /// encode side on writers, decode side on readers. Engines without
+    /// an operator path report the empty default.
+    fn ops_report(&self) -> OpsReport {
+        OpsReport::default()
+    }
+
     // ---- eager v1 conveniences, built on the deferred core ----------
 
     /// (write) Declare-and-write one chunk immediately: `define` +
@@ -280,6 +311,14 @@ impl PutPayload {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// The raw payload bytes (input to an operator encode).
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            PutPayload::Shared(b) => b,
+            PutPayload::Owned(v) => v,
+        }
     }
 
     /// Convert into `Bytes` without copying: an owned staging buffer is
@@ -328,10 +367,17 @@ impl PutQueue {
             bail!("variable {}: implausible rank {}", decl.name,
                   decl.shape.len());
         }
+        // Operator-chain validation happens once, here — not per put.
+        // Lossy-codec-on-integer and codec/dtype mismatches are typed
+        // `OpsError`s surfaced at definition time.
+        decl.ops
+            .validate_for(decl.dtype)
+            .map_err(|e| anyhow::anyhow!("variable {}: {e}", decl.name))?;
         if let Some(&id) = self.by_name.get(&decl.name) {
             let existing = &self.vars[id as usize];
             if existing.dtype != decl.dtype
                 || existing.shape.as_ref() != decl.shape.as_slice()
+                || existing.ops != decl.ops
             {
                 bail!("conflicting redeclaration of {}", decl.name);
             }
@@ -343,6 +389,7 @@ impl PutQueue {
             name: Arc::from(decl.name.as_str()),
             dtype: decl.dtype,
             shape: Arc::from(decl.shape.as_slice()),
+            ops: decl.ops.clone(),
         };
         self.vars.push(handle.clone());
         self.by_name.insert(decl.name.clone(), id);
@@ -360,6 +407,7 @@ impl PutQueue {
                 v.name == var.name
                     && v.dtype == var.dtype
                     && v.shape == var.shape
+                    && v.ops == var.ops
             })
             .unwrap_or(false);
         if !known {
@@ -706,6 +754,35 @@ mod tests {
         assert!(q.define(&bad).is_err());
         let bad2 = VarDecl::new("/x", Datatype::F32, vec![9]);
         assert!(q.define(&bad2).is_err());
+    }
+
+    #[test]
+    fn put_queue_validates_operator_chains_at_definition() {
+        use crate::adios::ops::OpChain;
+        let mut q = PutQueue::default();
+        // Lossy codec on an integer variable: typed error at define.
+        let lossy = VarDecl::new("/ids", Datatype::U64, vec![8])
+            .with_ops(OpChain::parse("zfp:10").unwrap());
+        let err = q.define(&lossy).unwrap_err();
+        assert!(format!("{err}").contains("lossy"), "{err}");
+        // Integer codec on a float variable: typed error at define.
+        let mismatch = VarDecl::new("/f", Datatype::F32, vec![8])
+            .with_ops(OpChain::parse("delta").unwrap());
+        assert!(q.define(&mismatch).is_err());
+        // Valid chain defines; identical redefinition returns the same
+        // handle; a different chain is a conflicting redeclaration.
+        let chain = OpChain::parse("shuffle|rle").unwrap();
+        let decl = VarDecl::new("/f", Datatype::F32, vec![8])
+            .with_ops(chain.clone());
+        let h1 = q.define(&decl).unwrap();
+        assert_eq!(h1.ops(), &chain);
+        let h2 = q.define(&decl).unwrap();
+        assert_eq!(h1, h2);
+        let other = VarDecl::new("/f", Datatype::F32, vec![8])
+            .with_ops(OpChain::parse("rle").unwrap());
+        assert!(q.define(&other).is_err());
+        let plain = VarDecl::new("/f", Datatype::F32, vec![8]);
+        assert!(q.define(&plain).is_err());
     }
 
     #[test]

@@ -16,10 +16,12 @@ use super::engine::{
     Bytes, Engine, GetHandle, GetQueue, Mode, PutQueue, StepStatus,
     VarDecl, VarHandle, VarInfo,
 };
+use super::ops::{self, OpChain, OpsReport};
 use super::region;
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::types::Datatype;
 use crate::openpmd::Attribute;
+use crate::util::bytes::{b64_decode, b64_encode};
 use crate::util::json::{parse, Json};
 
 /// Encode a payload as a JSON number array for its dtype.
@@ -142,6 +144,8 @@ pub struct JsonWriter {
                      BTreeMap<String, (VarHandle, Vec<(Chunk, Bytes)>)>)>,
     /// Variable registry + deferred-put queue (two-phase API).
     puts: PutQueue,
+    /// Encode-side operator accounting.
+    ops_stats: OpsReport,
 }
 
 impl JsonWriter {
@@ -157,6 +161,7 @@ impl JsonWriter {
             step: 0,
             current: None,
             puts: PutQueue::default(),
+            ops_stats: OpsReport::default(),
         })
     }
 }
@@ -210,10 +215,15 @@ impl Engine for JsonWriter {
             .as_mut()
             .ok_or_else(|| anyhow::anyhow!("perform_puts outside step"))?;
         for p in pending {
+            // Operated variables are stored compressed (base64 in the
+            // step document); the chain is applied here in the
+            // deferred core, like every other backend.
+            let data = ops::encode_put(&p.var, &p.chunk, p.data,
+                                       &mut self.ops_stats)?;
             vars.entry(p.var.name().to_string())
                 .or_insert_with(|| (p.var.clone(), Vec::new()))
                 .1
-                .push((p.chunk, p.data.into_bytes()));
+                .push((p.chunk, data));
         }
         Ok(())
     }
@@ -286,12 +296,23 @@ impl Engine for JsonWriter {
                          Json::Num(self.rank as f64));
                 c.insert("hostname".into(),
                          Json::Str(self.hostname.clone()));
-                c.insert("data".into(), data_to_json(handle.dtype(), data));
+                if handle.ops().is_identity() {
+                    c.insert("data".into(),
+                             data_to_json(handle.dtype(), data));
+                } else {
+                    // Operator-framed payload, stored compressed.
+                    c.insert("data64".into(),
+                             Json::Str(b64_encode(data)));
+                }
                 chunk_arr.push(Json::Obj(c));
             }
             let mut v = BTreeMap::new();
             v.insert("dtype".into(),
                      Json::Str(handle.dtype().name().to_string()));
+            if !handle.ops().is_identity() {
+                v.insert("ops".into(),
+                         Json::Str(handle.ops().to_string()));
+            }
             v.insert(
                 "shape".into(),
                 Json::Arr(handle.shape().iter()
@@ -317,6 +338,10 @@ impl Engine for JsonWriter {
         }
         Ok(())
     }
+
+    fn ops_report(&self) -> OpsReport {
+        self.ops_stats
+    }
 }
 
 // ======================================================================
@@ -328,6 +353,8 @@ pub struct JsonReader {
     current: Option<Json>,
     /// Deferred-get queue (two-phase API).
     gets: GetQueue,
+    /// Decode-side operator accounting.
+    ops_stats: OpsReport,
 }
 
 impl JsonReader {
@@ -341,6 +368,7 @@ impl JsonReader {
             step: 0,
             current: None,
             gets: GetQueue::default(),
+            ops_stats: OpsReport::default(),
         })
     }
 
@@ -422,8 +450,22 @@ impl Engine for JsonReader {
                     .and_then(|d| d.as_str())
                     .and_then(|s| parse_dtype(s).ok());
                 let shape = v.get("shape").and_then(|s| s.as_u64_vec());
-                if let (Some(dtype), Some(shape)) = (dtype, shape) {
-                    out.push(VarInfo { name: name.clone(), dtype, shape });
+                // Missing "ops" means identity; an unparseable chain
+                // makes the variable invisible (consistent with how
+                // malformed dtype/shape entries are treated).
+                let ops = match v.get("ops").and_then(|o| o.as_str()) {
+                    Some(spec) => OpChain::parse(spec).ok(),
+                    None => Some(OpChain::identity()),
+                };
+                if let (Some(dtype), Some(shape), Some(ops)) =
+                    (dtype, shape, ops)
+                {
+                    out.push(VarInfo {
+                        name: name.clone(),
+                        dtype,
+                        shape,
+                        ops,
+                    });
                 }
             }
         }
@@ -531,44 +573,84 @@ impl Engine for JsonReader {
         self.current = None;
         Ok(())
     }
+
+    fn ops_report(&self) -> OpsReport {
+        self.ops_stats
+    }
 }
 
 impl JsonReader {
-    /// Load one selection from the current step document.
-    fn fetch(&self, var: &str, selection: &Chunk) -> Result<Bytes> {
+    /// Load one selection from the current step document, reversing the
+    /// variable's operator chain on compressed (`data64`) chunks.
+    fn fetch(&mut self, var: &str, selection: &Chunk) -> Result<Bytes> {
         let info = self
             .available_variables()
             .into_iter()
             .find(|v| v.name == var)
             .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))?;
         let elem = info.dtype.size();
-        let chunks = self
-            .var(var)
-            .and_then(|v| v.get("chunks"))
-            .and_then(|c| c.as_arr())
-            .ok_or_else(|| anyhow::anyhow!("no chunks for {var:?}"))?;
+        // Collect the raw chunk table first (the JSON document borrows
+        // `self.current`, while decoding mutates `self.ops_stats`).
+        enum Payload {
+            Numbers(Vec<u8>),
+            Framed(Vec<u8>),
+        }
+        let mut table: Vec<(Chunk, Payload)> = Vec::new();
+        {
+            let chunks = self
+                .var(var)
+                .and_then(|v| v.get("chunks"))
+                .and_then(|c| c.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("no chunks for {var:?}"))?;
+            for c in chunks {
+                let offset = c
+                    .get("offset")
+                    .and_then(|o| o.as_u64_vec())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("chunk missing offset")
+                    })?;
+                let extent = c
+                    .get("extent")
+                    .and_then(|e| e.as_u64_vec())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("chunk missing extent")
+                    })?;
+                let chunk = Chunk { offset, extent };
+                if chunk.intersect(selection).is_none() {
+                    continue;
+                }
+                let payload = if let Some(b64) =
+                    c.get("data64").and_then(|d| d.as_str())
+                {
+                    Payload::Framed(
+                        b64_decode(b64)
+                            .map_err(|e| anyhow::anyhow!("{var}: {e}"))?,
+                    )
+                } else {
+                    let arr = c
+                        .get("data")
+                        .and_then(|d| d.as_arr())
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("chunk missing data")
+                        })?;
+                    Payload::Numbers(json_to_data(info.dtype, arr)?)
+                };
+                table.push((chunk, payload));
+            }
+        }
         let mut out = vec![0u8; selection.num_elements() as usize * elem];
         let mut covered = 0u64;
-        for c in chunks {
-            let offset = c
-                .get("offset")
-                .and_then(|o| o.as_u64_vec())
-                .ok_or_else(|| anyhow::anyhow!("chunk missing offset"))?;
-            let extent = c
-                .get("extent")
-                .and_then(|e| e.as_u64_vec())
-                .ok_or_else(|| anyhow::anyhow!("chunk missing extent"))?;
-            let chunk = Chunk { offset, extent };
-            if chunk.intersect(selection).is_none() {
-                continue;
-            }
-            let arr = c
-                .get("data")
-                .and_then(|d| d.as_arr())
-                .ok_or_else(|| anyhow::anyhow!("chunk missing data"))?;
-            let data = json_to_data(info.dtype, arr)?;
+        for (chunk, payload) in table {
+            let raw: Bytes = match payload {
+                Payload::Numbers(data) => Arc::new(data),
+                Payload::Framed(framed) => {
+                    ops::decode_get(&info.ops, info.dtype, &chunk,
+                                    &framed, &mut self.ops_stats)
+                        .map_err(|e| anyhow::anyhow!("{var}: {e}"))?
+                }
+            };
             covered += region::copy_region(
-                &chunk, &data, selection, &mut out, elem,
+                &chunk, &raw, selection, &mut out, elem,
             );
         }
         if covered < selection.num_elements() {
@@ -644,6 +726,43 @@ mod tests {
         assert!(text.contains("\"variables\""));
         assert!(text.contains("\"/x\""));
         assert!(text.contains('\n')); // pretty-printed
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn operated_variable_round_trips_as_base64() {
+        let dir = tmp_dir("ops");
+        let chain = OpChain::parse("shuffle|rle").unwrap();
+        let xs = vec![2.5f32; 64];
+        let mut w = JsonWriter::create(&dir, 0, "h").unwrap();
+        w.begin_step().unwrap();
+        let decl = VarDecl::new("/data/0/x", Datatype::F32, vec![64])
+            .with_ops(chain.clone());
+        let h = w.define_variable(&decl).unwrap();
+        w.put_deferred(&h, Chunk::whole(vec![64]),
+                       cast::f32_to_bytes(&xs))
+            .unwrap();
+        w.end_step().unwrap();
+        assert!(w.ops_report().ratio() > 4.0);
+        w.close().unwrap();
+
+        // The document stores base64, not a number array, and records
+        // the chain.
+        let text =
+            std::fs::read_to_string(dir.join("step-0.json")).unwrap();
+        assert!(text.contains("\"data64\""), "{text}");
+        assert!(text.contains("shuffle|rle"), "{text}");
+        assert!(!text.contains("\"data\""), "{text}");
+
+        let mut r = JsonReader::open(&dir).unwrap();
+        assert_eq!(r.begin_step().unwrap(), StepStatus::Ok);
+        let vars = r.available_variables();
+        assert_eq!(vars[0].ops, chain);
+        let data = r.get("/data/0/x", Chunk::new(vec![3], vec![7]))
+            .unwrap();
+        assert_eq!(cast::bytes_to_f32(&data).unwrap(), vec![2.5f32; 7]);
+        assert_eq!(r.ops_report().chunks_decoded, 1);
+        r.end_step().unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -13,6 +13,12 @@
 //! * [`json`] — a serial JSON backend for prototyping and debugging
 //!   (bottom of Fig. 3), trading performance for `cat`-ability.
 //!
+//! Cross-cutting, [`ops`] is the per-variable *operator* layer (ADIOS2's
+//! `AddOperation`): compression/precision-reduction chains declared per
+//! variable, applied transparently inside `perform_puts`/`perform_gets`
+//! by every backend, negotiated over the SST wire and persisted in BP
+//! metadata.
+//!
 //! The *reusability* property (§2.1): application code is written against
 //! [`Engine`] + [`EngineKind`] and switches between file IO and streaming
 //! by changing a runtime parameter, not code.
@@ -20,6 +26,7 @@
 pub mod engine;
 pub mod bp;
 pub mod json;
+pub mod ops;
 pub mod region;
 pub mod sst;
 pub mod transport;
@@ -29,3 +36,4 @@ pub use engine::{
     Bytes, Engine, EngineKind, GetHandle, Mode, StepStatus, VarDecl,
     VarHandle, VarInfo,
 };
+pub use ops::{OpChain, Operator, OpsError, OpsReport};

@@ -1,0 +1,817 @@
+//! `adios::ops` — per-variable operators: data transforms (compression,
+//! precision reduction) applied transparently at put/get time.
+//!
+//! Mirrors ADIOS2's `AddOperation`: a variable declared with an operator
+//! chain has every chunk payload pushed through the chain inside
+//! `perform_puts` (write side) and reversed on the read side, so
+//! application code keeps exchanging raw dense bytes while every byte
+//! that crosses a wire, a staging queue or a file is transformed. The
+//! streaming throughput the paper measures is ultimately bound by bytes
+//! moved per step; operators are the lever once the network — not the
+//! filesystem — is the bottleneck (Eisenhauer et al. 2024).
+//!
+//! * A chain is declared as a parseable spec string, e.g. `"shuffle|rle"`
+//!   or `"zfp:14|shuffle|rle"`, attached to a [`crate::adios::VarDecl`]
+//!   via `with_ops` and carried by the resulting `VarHandle`. Validation
+//!   ([`OpChain::validate_for`]) happens once at `define_variable` time:
+//!   unknown codecs, empty chain segments and lossy-codec-on-integer
+//!   declarations are typed [`OpsError`]s.
+//! * On the wire and in BP files, the chain travels inside the variable
+//!   metadata (`wire::VarMeta`), so streams and files self-describe;
+//!   encoded payloads are wrapped in a small frame
+//!   (`[raw_len][encoded_len][bytes]`) whose lengths are validated on
+//!   decode — a corrupted length field is an error, not a panic or an
+//!   allocation bomb.
+//! * SST readers advertise the codecs they understand in the `Hello`
+//!   handshake (operator negotiation); a writer serves readers lacking a
+//!   codec with decoded raw payloads instead of failing the stream.
+//! * Every encode/decode is accounted in an [`OpsReport`] (ratio,
+//!   encode/decode time, bytes saved), exposed per engine via
+//!   [`crate::adios::Engine::ops_report`] and merged into
+//!   `pipeline::PipeReport` by the pipe.
+
+pub mod codec;
+
+use std::fmt;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::adios::engine::Bytes;
+use crate::openpmd::types::Datatype;
+
+pub use codec::{Delta, Rle, Shuffle, ZfpLite};
+
+/// Codec names understood by this build — what SST readers advertise in
+/// the wire handshake (operator negotiation).
+pub const CODEC_NAMES: [&str; 4] = ["shuffle", "rle", "delta", "zfp"];
+
+/// The advertised codec list, owned (for the `Hello` message).
+pub fn supported_codecs() -> Vec<String> {
+    CODEC_NAMES.iter().map(|s| s.to_string()).collect()
+}
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// Typed errors of the operator subsystem.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum OpsError {
+    /// Spec names a codec this build does not know.
+    UnknownCodec(String),
+    /// Spec contains an empty chain segment (e.g. `"shuffle||rle"`).
+    EmptySegment(String),
+    /// Codec parameter failed to parse or is out of range.
+    BadParam { codec: &'static str, param: String },
+    /// A lossy codec was attached to an integer variable.
+    LossyOnInteger { codec: &'static str, dtype: &'static str },
+    /// Codec cannot operate on this element type (e.g. `delta` on f32).
+    DtypeUnsupported { codec: &'static str, dtype: &'static str },
+    /// Encoded payload failed structural validation.
+    Corrupt(String),
+    /// Decoded size does not match the declared/expected size.
+    LengthMismatch { expected: usize, got: usize },
+}
+
+impl fmt::Display for OpsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpsError::UnknownCodec(name) => {
+                write!(f, "unknown codec {name:?} (known: {})",
+                       CODEC_NAMES.join(", "))
+            }
+            OpsError::EmptySegment(spec) => {
+                write!(f, "empty chain segment in operator spec {spec:?}")
+            }
+            OpsError::BadParam { codec, param } => {
+                write!(f, "bad parameter {param:?} for codec {codec}")
+            }
+            OpsError::LossyOnInteger { codec, dtype } => {
+                write!(f, "lossy codec {codec} cannot be applied to \
+                           integer variable type {dtype}")
+            }
+            OpsError::DtypeUnsupported { codec, dtype } => {
+                write!(f, "codec {codec} does not support element type \
+                           {dtype}")
+            }
+            OpsError::Corrupt(why) => {
+                write!(f, "corrupt operator payload: {why}")
+            }
+            OpsError::LengthMismatch { expected, got } => {
+                write!(f, "operator payload size mismatch: expected \
+                           {expected} bytes, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for OpsError {}
+
+// ---------------------------------------------------------------------
+// Operator trait + specs
+// ---------------------------------------------------------------------
+
+/// Type/shape metadata a codec may consult.
+#[derive(Clone, Copy, Debug)]
+pub struct OpCtx<'a> {
+    pub dtype: Datatype,
+    /// Extent of the chunk being transformed (element counts per dim).
+    pub extent: &'a [u64],
+}
+
+/// One data transform. `apply` runs at put time, `reverse` at get time.
+///
+/// `reverse` receives `want` (the exact output size, when the position
+/// in the chain makes it knowable) and `cap` (a hard output bound that
+/// keeps a corrupt stream from decoding into unbounded memory).
+pub trait Operator: Send + Sync {
+    fn spec(&self) -> OpSpec;
+
+    /// Whether `reverse(apply(x)) == x` for all valid inputs.
+    fn lossless(&self) -> bool {
+        true
+    }
+
+    fn apply(&self, data: &[u8], ctx: &OpCtx) -> Result<Vec<u8>, OpsError>;
+
+    fn reverse(
+        &self,
+        data: &[u8],
+        ctx: &OpCtx,
+        want: Option<usize>,
+        cap: usize,
+    ) -> Result<Vec<u8>, OpsError>;
+}
+
+/// Parsed form of one chain segment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpSpec {
+    Shuffle,
+    Rle,
+    Delta,
+    ZfpLite { keep_bits: u8 },
+}
+
+/// Default mantissa bits kept by a bare `"zfp"` segment.
+pub const ZFP_DEFAULT_KEEP_BITS: u8 = 12;
+
+impl OpSpec {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpSpec::Shuffle => "shuffle",
+            OpSpec::Rle => "rle",
+            OpSpec::Delta => "delta",
+            OpSpec::ZfpLite { .. } => "zfp",
+        }
+    }
+
+    /// Whether `apply` preserves the byte length (used to propagate the
+    /// exact expected size backwards through a chain on decode).
+    fn preserves_len(self) -> bool {
+        matches!(self, OpSpec::Shuffle | OpSpec::ZfpLite { .. })
+    }
+
+    fn lossless(self) -> bool {
+        !matches!(self, OpSpec::ZfpLite { .. })
+    }
+
+    /// Materialize the codec.
+    pub fn operator(self) -> Box<dyn Operator> {
+        match self {
+            OpSpec::Shuffle => Box::new(Shuffle),
+            OpSpec::Rle => Box::new(Rle),
+            OpSpec::Delta => Box::new(Delta),
+            OpSpec::ZfpLite { keep_bits } => {
+                Box::new(ZfpLite { keep_bits })
+            }
+        }
+    }
+
+    /// Parse one `name` or `name:param` segment.
+    fn parse(seg: &str) -> Result<OpSpec, OpsError> {
+        let (name, param) = match seg.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (seg, None),
+        };
+        match name.to_ascii_lowercase().as_str() {
+            "shuffle" => match param {
+                None => Ok(OpSpec::Shuffle),
+                Some(p) => Err(OpsError::BadParam {
+                    codec: "shuffle",
+                    param: p.to_string(),
+                }),
+            },
+            "rle" => match param {
+                None => Ok(OpSpec::Rle),
+                Some(p) => Err(OpsError::BadParam {
+                    codec: "rle",
+                    param: p.to_string(),
+                }),
+            },
+            "delta" => match param {
+                None => Ok(OpSpec::Delta),
+                Some(p) => Err(OpsError::BadParam {
+                    codec: "delta",
+                    param: p.to_string(),
+                }),
+            },
+            "zfp" => {
+                let keep_bits = match param {
+                    None => ZFP_DEFAULT_KEEP_BITS,
+                    Some(p) => match p.parse::<u8>() {
+                        Ok(b) if (1..=52).contains(&b) => b,
+                        _ => {
+                            return Err(OpsError::BadParam {
+                                codec: "zfp",
+                                param: p.to_string(),
+                            })
+                        }
+                    },
+                };
+                Ok(OpSpec::ZfpLite { keep_bits })
+            }
+            _ => Err(OpsError::UnknownCodec(name.to_string())),
+        }
+    }
+}
+
+// `zfp` always renders its parameter so specs round-trip through
+// parse ↔ display (like `EngineKind`'s `bp:N`).
+impl fmt::Display for OpSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpSpec::ZfpLite { keep_bits } => write!(f, "zfp:{keep_bits}"),
+            other => write!(f, "{}", other.name()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chains
+// ---------------------------------------------------------------------
+
+/// An ordered operator chain attached to one variable. The empty chain
+/// is the identity (no transform) and is the default everywhere.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OpChain {
+    specs: Vec<OpSpec>,
+}
+
+impl OpChain {
+    /// The no-op chain.
+    pub fn identity() -> OpChain {
+        OpChain::default()
+    }
+
+    pub fn from_specs(specs: Vec<OpSpec>) -> OpChain {
+        OpChain { specs }
+    }
+
+    /// Parse a `"shuffle|rle"`-style spec. The empty string (and the
+    /// aliases `"identity"`/`"none"`) parse to the identity chain;
+    /// empty segments (`"shuffle||rle"`) and unknown codec names are
+    /// typed errors.
+    pub fn parse(spec: &str) -> Result<OpChain, OpsError> {
+        let trimmed = spec.trim();
+        if trimmed.is_empty()
+            || trimmed.eq_ignore_ascii_case("identity")
+            || trimmed.eq_ignore_ascii_case("none")
+        {
+            return Ok(OpChain::identity());
+        }
+        let mut specs = Vec::new();
+        for seg in trimmed.split('|') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                return Err(OpsError::EmptySegment(spec.to_string()));
+            }
+            specs.push(OpSpec::parse(seg)?);
+        }
+        Ok(OpChain { specs })
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn specs(&self) -> &[OpSpec] {
+        &self.specs
+    }
+
+    pub fn is_lossless(&self) -> bool {
+        self.specs.iter().all(|s| s.lossless())
+    }
+
+    /// Validate the chain against a variable's element type — the
+    /// `define_variable`-time check. Lossy codecs on integer variables
+    /// and integer codecs on floats are typed errors.
+    pub fn validate_for(&self, dtype: Datatype) -> Result<(), OpsError> {
+        for spec in &self.specs {
+            match spec {
+                OpSpec::ZfpLite { .. } => match dtype {
+                    Datatype::F32 | Datatype::F64 => {}
+                    other => {
+                        return Err(OpsError::LossyOnInteger {
+                            codec: "zfp",
+                            dtype: other.name(),
+                        })
+                    }
+                },
+                OpSpec::Delta => match dtype {
+                    Datatype::I32
+                    | Datatype::I64
+                    | Datatype::U32
+                    | Datatype::U64 => {}
+                    other => {
+                        return Err(OpsError::DtypeUnsupported {
+                            codec: "delta",
+                            dtype: other.name(),
+                        })
+                    }
+                },
+                OpSpec::Shuffle | OpSpec::Rle => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Distinct codec names used by this chain.
+    pub fn codec_names(&self) -> Vec<&'static str> {
+        let mut names: Vec<&'static str> =
+            self.specs.iter().map(|s| s.name()).collect();
+        names.dedup();
+        names.sort_unstable();
+        names.dedup();
+        names
+    }
+
+    /// Whether a peer advertising `codecs` can decode this chain.
+    pub fn supported_by(&self, codecs: &[String]) -> bool {
+        self.specs
+            .iter()
+            .all(|s| codecs.iter().any(|c| c == s.name()))
+    }
+}
+
+impl fmt::Display for OpChain {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for spec in &self.specs {
+            if !first {
+                write!(f, "|")?;
+            }
+            write!(f, "{spec}")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Payload framing
+// ---------------------------------------------------------------------
+
+/// Bytes of the operator frame header: `[raw_len u64][encoded_len u64]`.
+pub const FRAME_HEAD: usize = 16;
+
+/// Apply `chain` to a raw dense payload and wrap the result in the
+/// operator frame. The frame records the raw size so every decoder can
+/// validate its output before handing bytes to the application.
+pub fn encode_payload(
+    chain: &OpChain,
+    ctx: &OpCtx,
+    raw: &[u8],
+) -> Result<Vec<u8>, OpsError> {
+    let mut cur: Option<Vec<u8>> = None;
+    for spec in chain.specs() {
+        let op = spec.operator();
+        let next = match &cur {
+            Some(v) => op.apply(v, ctx)?,
+            None => op.apply(raw, ctx)?,
+        };
+        cur = Some(next);
+    }
+    let encoded = match cur {
+        Some(v) => v,
+        None => raw.to_vec(),
+    };
+    let mut out = Vec::with_capacity(FRAME_HEAD + encoded.len());
+    out.extend_from_slice(&(raw.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(encoded.len() as u64).to_le_bytes());
+    out.extend_from_slice(&encoded);
+    Ok(out)
+}
+
+/// Validate an operator frame and reverse the chain. `expect_len` is
+/// the raw byte count the caller independently knows the payload must
+/// decode to (chunk elements × element width) — a frame disagreeing
+/// with it, or whose length fields disagree with the buffer, is
+/// rejected before any decoding work.
+pub fn decode_payload(
+    chain: &OpChain,
+    ctx: &OpCtx,
+    framed: &[u8],
+    expect_len: usize,
+) -> Result<Vec<u8>, OpsError> {
+    if framed.len() < FRAME_HEAD {
+        return Err(OpsError::Corrupt(format!(
+            "frame of {} bytes is shorter than its {FRAME_HEAD}-byte \
+             header",
+            framed.len()
+        )));
+    }
+    let raw_len =
+        u64::from_le_bytes(framed[..8].try_into().unwrap()) as usize;
+    let enc_len =
+        u64::from_le_bytes(framed[8..16].try_into().unwrap()) as usize;
+    if enc_len != framed.len() - FRAME_HEAD {
+        return Err(OpsError::Corrupt(format!(
+            "encoded-length field says {enc_len}, frame carries {}",
+            framed.len() - FRAME_HEAD
+        )));
+    }
+    if raw_len != expect_len {
+        return Err(OpsError::LengthMismatch {
+            expected: expect_len,
+            got: raw_len,
+        });
+    }
+    let body = &framed[FRAME_HEAD..];
+    // Propagate the exact output size backwards through the chain: the
+    // size entering codec i is known whenever every earlier codec
+    // preserves length.
+    let specs = chain.specs();
+    let mut known: Vec<Option<usize>> = Vec::with_capacity(specs.len());
+    let mut k = Some(expect_len);
+    for spec in specs {
+        known.push(k);
+        if !spec.preserves_len() {
+            k = None;
+        }
+    }
+    let cap = expect_len.saturating_mul(2) + 1024;
+    let mut cur: Option<Vec<u8>> = None;
+    for (i, spec) in specs.iter().enumerate().rev() {
+        let op = spec.operator();
+        let next = match &cur {
+            Some(v) => op.reverse(v, ctx, known[i], cap)?,
+            None => op.reverse(body, ctx, known[i], cap)?,
+        };
+        cur = Some(next);
+    }
+    let out = match cur {
+        Some(v) => v,
+        None => body.to_vec(),
+    };
+    if out.len() != expect_len {
+        return Err(OpsError::LengthMismatch {
+            expected: expect_len,
+            got: out.len(),
+        });
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Accounting
+// ---------------------------------------------------------------------
+
+/// Cumulative operator statistics: encode side (writers), decode side
+/// (readers). Cheap to copy; merge across engines with [`absorb`].
+///
+/// [`absorb`]: OpsReport::absorb
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpsReport {
+    pub chunks_encoded: u64,
+    pub chunks_decoded: u64,
+    /// Raw bytes entering encode.
+    pub raw_bytes_in: u64,
+    /// Framed bytes leaving encode.
+    pub encoded_bytes_out: u64,
+    /// Framed bytes entering decode.
+    pub encoded_bytes_in: u64,
+    /// Raw bytes leaving decode.
+    pub raw_bytes_out: u64,
+    pub encode_ns: u64,
+    pub decode_ns: u64,
+}
+
+impl OpsReport {
+    pub fn absorb(&mut self, o: OpsReport) {
+        self.chunks_encoded += o.chunks_encoded;
+        self.chunks_decoded += o.chunks_decoded;
+        self.raw_bytes_in += o.raw_bytes_in;
+        self.encoded_bytes_out += o.encoded_bytes_out;
+        self.encoded_bytes_in += o.encoded_bytes_in;
+        self.raw_bytes_out += o.raw_bytes_out;
+        self.encode_ns += o.encode_ns;
+        self.decode_ns += o.decode_ns;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks_encoded == 0 && self.chunks_decoded == 0
+    }
+
+    /// Compression ratio (raw / encoded), from whichever side this
+    /// report saw traffic on. 1.0 when nothing was transformed.
+    pub fn ratio(&self) -> f64 {
+        if self.encoded_bytes_out > 0 {
+            self.raw_bytes_in as f64 / self.encoded_bytes_out as f64
+        } else if self.encoded_bytes_in > 0 {
+            self.raw_bytes_out as f64 / self.encoded_bytes_in as f64
+        } else {
+            1.0
+        }
+    }
+
+    /// Bytes the encode side kept off the wire/disk (can be negative
+    /// when a codec expands incompressible data).
+    pub fn bytes_saved(&self) -> i64 {
+        self.raw_bytes_in as i64 - self.encoded_bytes_out as i64
+    }
+
+    /// Encode throughput over raw bytes, bytes/s.
+    pub fn encode_rate(&self) -> f64 {
+        if self.encode_ns == 0 {
+            0.0
+        } else {
+            self.raw_bytes_in as f64 / (self.encode_ns as f64 * 1e-9)
+        }
+    }
+
+    /// Decode throughput over raw bytes, bytes/s.
+    pub fn decode_rate(&self) -> f64 {
+        if self.decode_ns == 0 {
+            0.0
+        } else {
+            self.raw_bytes_out as f64 / (self.decode_ns as f64 * 1e-9)
+        }
+    }
+}
+
+/// Timed, accounted encode: the write-side hook used by every backend's
+/// `perform_puts`.
+pub fn encode_bytes(
+    chain: &OpChain,
+    ctx: &OpCtx,
+    raw: &[u8],
+    report: &mut OpsReport,
+) -> Result<Bytes, OpsError> {
+    let started = Instant::now();
+    let framed = encode_payload(chain, ctx, raw)?;
+    report.encode_ns += started.elapsed().as_nanos() as u64;
+    report.chunks_encoded += 1;
+    report.raw_bytes_in += raw.len() as u64;
+    report.encoded_bytes_out += framed.len() as u64;
+    Ok(Arc::new(framed))
+}
+
+/// Timed, accounted decode: the read-side hook used by every backend's
+/// `perform_gets` (and the SST writer when it must assemble a partial
+/// selection from encoded staged chunks).
+pub fn decode_bytes(
+    chain: &OpChain,
+    ctx: &OpCtx,
+    framed: &[u8],
+    expect_len: usize,
+    report: &mut OpsReport,
+) -> Result<Bytes, OpsError> {
+    let started = Instant::now();
+    let raw = decode_payload(chain, ctx, framed, expect_len)?;
+    report.decode_ns += started.elapsed().as_nanos() as u64;
+    report.chunks_decoded += 1;
+    report.encoded_bytes_in += framed.len() as u64;
+    report.raw_bytes_out += raw.len() as u64;
+    Ok(Arc::new(raw))
+}
+
+/// The write-side hook shared by every backend's `perform_puts`: an
+/// identity-chain payload passes through untouched (no copy), anything
+/// else is encoded through the variable's chain, timed and accounted.
+pub fn encode_put(
+    var: &crate::adios::engine::VarHandle,
+    chunk: &crate::openpmd::chunk::Chunk,
+    data: crate::adios::engine::PutPayload,
+    report: &mut OpsReport,
+) -> anyhow::Result<Bytes> {
+    if var.ops().is_identity() {
+        return Ok(data.into_bytes());
+    }
+    let ctx = OpCtx { dtype: var.dtype(), extent: &chunk.extent };
+    encode_bytes(var.ops(), &ctx, data.as_slice(), report).map_err(|e| {
+        anyhow::anyhow!("{}: operator encode: {e}", var.name())
+    })
+}
+
+/// The read-side hook shared by every backend: reverse `chain` over one
+/// framed chunk payload; `chunk` supplies the raw size the frame must
+/// decode to. Callers handle identity chains themselves (their raw data
+/// needs no copy).
+pub fn decode_get(
+    chain: &OpChain,
+    dtype: Datatype,
+    chunk: &crate::openpmd::chunk::Chunk,
+    framed: &[u8],
+    report: &mut OpsReport,
+) -> anyhow::Result<Bytes> {
+    let ctx = OpCtx { dtype, extent: &chunk.extent };
+    let expect = chunk.num_elements() as usize * dtype.size();
+    decode_bytes(chain, &ctx, framed, expect, report)
+        .map_err(|e| anyhow::anyhow!("operator decode: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fctx() -> OpCtx<'static> {
+        OpCtx { dtype: Datatype::F32, extent: &[] }
+    }
+
+    #[test]
+    fn chain_spec_parsing_round_trips() {
+        for s in ["shuffle", "rle", "shuffle|rle", "delta",
+                  "zfp:14|shuffle|rle", "delta|rle"] {
+            let chain = OpChain::parse(s).unwrap();
+            assert_eq!(chain.to_string(), s, "display must round-trip");
+            assert_eq!(OpChain::parse(&chain.to_string()).unwrap(), chain);
+        }
+        // Bare zfp renders its default parameter; re-parse agrees.
+        let z = OpChain::parse("zfp").unwrap();
+        assert_eq!(z.to_string(),
+                   format!("zfp:{ZFP_DEFAULT_KEEP_BITS}"));
+        assert_eq!(OpChain::parse(&z.to_string()).unwrap(), z);
+        // Identity spellings.
+        for s in ["", "  ", "identity", "none"] {
+            assert!(OpChain::parse(s).unwrap().is_identity(), "{s:?}");
+        }
+        // Case-insensitive names.
+        assert_eq!(OpChain::parse("SHUFFLE|Rle").unwrap(),
+                   OpChain::parse("shuffle|rle").unwrap());
+    }
+
+    #[test]
+    fn chain_spec_typed_errors() {
+        assert!(matches!(OpChain::parse("gzip").unwrap_err(),
+                         OpsError::UnknownCodec(n) if n == "gzip"));
+        assert!(matches!(OpChain::parse("shuffle||rle").unwrap_err(),
+                         OpsError::EmptySegment(_)));
+        assert!(matches!(OpChain::parse("|shuffle").unwrap_err(),
+                         OpsError::EmptySegment(_)));
+        assert!(matches!(OpChain::parse("zfp:0").unwrap_err(),
+                         OpsError::BadParam { codec: "zfp", .. }));
+        assert!(matches!(OpChain::parse("zfp:99").unwrap_err(),
+                         OpsError::BadParam { codec: "zfp", .. }));
+        assert!(matches!(OpChain::parse("rle:4").unwrap_err(),
+                         OpsError::BadParam { codec: "rle", .. }));
+    }
+
+    #[test]
+    fn chain_dtype_validation() {
+        let lossy = OpChain::parse("zfp:10").unwrap();
+        assert!(lossy.validate_for(Datatype::F32).is_ok());
+        assert!(lossy.validate_for(Datatype::F64).is_ok());
+        assert!(matches!(
+            lossy.validate_for(Datatype::U64).unwrap_err(),
+            OpsError::LossyOnInteger { codec: "zfp", .. }
+        ));
+        let delta = OpChain::parse("delta").unwrap();
+        assert!(delta.validate_for(Datatype::U64).is_ok());
+        assert!(delta.validate_for(Datatype::I32).is_ok());
+        assert!(matches!(
+            delta.validate_for(Datatype::F32).unwrap_err(),
+            OpsError::DtypeUnsupported { codec: "delta", .. }
+        ));
+        assert!(matches!(
+            delta.validate_for(Datatype::U8).unwrap_err(),
+            OpsError::DtypeUnsupported { codec: "delta", .. }
+        ));
+        assert!(OpChain::parse("shuffle|rle")
+            .unwrap()
+            .validate_for(Datatype::U8)
+            .is_ok());
+    }
+
+    #[test]
+    fn losslessness_and_negotiation_queries() {
+        assert!(OpChain::parse("shuffle|rle").unwrap().is_lossless());
+        assert!(!OpChain::parse("zfp|shuffle").unwrap().is_lossless());
+        let chain = OpChain::parse("zfp:9|shuffle|rle").unwrap();
+        assert_eq!(chain.codec_names(), vec!["rle", "shuffle", "zfp"]);
+        assert!(chain.supported_by(&supported_codecs()));
+        assert!(!chain
+            .supported_by(&["shuffle".to_string(), "rle".to_string()]));
+        assert!(OpChain::identity().supported_by(&[]));
+    }
+
+    #[test]
+    fn framed_round_trip_all_chains() {
+        let raw: Vec<u8> = (0..640u32)
+            .flat_map(|i| ((i as f32) * 0.21).to_le_bytes())
+            .collect();
+        for spec in ["shuffle", "rle", "shuffle|rle"] {
+            let chain = OpChain::parse(spec).unwrap();
+            let framed =
+                encode_payload(&chain, &fctx(), &raw).unwrap();
+            let back =
+                decode_payload(&chain, &fctx(), &framed, raw.len())
+                    .unwrap();
+            assert_eq!(back, raw, "chain {spec}");
+        }
+        // Identity chain frames too (raw passes through the frame).
+        let id = OpChain::identity();
+        let framed = encode_payload(&id, &fctx(), &raw).unwrap();
+        assert_eq!(framed.len(), raw.len() + FRAME_HEAD);
+        assert_eq!(decode_payload(&id, &fctx(), &framed, raw.len())
+                       .unwrap(),
+                   raw);
+        // Zero-byte payloads round-trip.
+        for spec in ["shuffle|rle", ""] {
+            let chain = OpChain::parse(spec).unwrap();
+            let framed = encode_payload(&chain, &fctx(), &[]).unwrap();
+            assert!(decode_payload(&chain, &fctx(), &framed, 0)
+                .unwrap()
+                .is_empty());
+        }
+    }
+
+    #[test]
+    fn frame_validation_rejects_corruption() {
+        let raw = vec![7u8; 256];
+        let chain = OpChain::parse("shuffle|rle").unwrap();
+        let ctx = OpCtx { dtype: Datatype::U8, extent: &[] };
+        let framed = encode_payload(&chain, &ctx, &raw).unwrap();
+        // Happy path.
+        assert_eq!(decode_payload(&chain, &ctx, &framed, 256).unwrap(),
+                   raw);
+        // Truncated below the header.
+        assert!(decode_payload(&chain, &ctx, &framed[..8], 256).is_err());
+        // Corrupted raw-length field.
+        let mut bad = framed.clone();
+        bad[..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_payload(&chain, &ctx, &bad, 256).unwrap_err(),
+            OpsError::LengthMismatch { .. }
+        ));
+        // Corrupted encoded-length field.
+        let mut bad = framed.clone();
+        bad[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_payload(&chain, &ctx, &bad, 256).unwrap_err(),
+            OpsError::Corrupt(_)
+        ));
+        // Truncated body.
+        let cut = framed.len() - 1;
+        assert!(decode_payload(&chain, &ctx, &framed[..cut], 256)
+            .is_err());
+        // Wrong expected size.
+        assert!(decode_payload(&chain, &ctx, &framed, 255).is_err());
+    }
+
+    #[test]
+    fn report_math_and_absorb() {
+        assert!(OpsReport::default().is_empty());
+        assert_eq!(OpsReport::default().ratio(), 1.0);
+        let mut a = OpsReport {
+            chunks_encoded: 2,
+            raw_bytes_in: 400,
+            encoded_bytes_out: 100,
+            encode_ns: 1_000_000_000,
+            ..Default::default()
+        };
+        assert!((a.ratio() - 4.0).abs() < 1e-12);
+        assert_eq!(a.bytes_saved(), 300);
+        assert!((a.encode_rate() - 400.0).abs() < 1e-9);
+        let b = OpsReport {
+            chunks_decoded: 1,
+            encoded_bytes_in: 50,
+            raw_bytes_out: 200,
+            decode_ns: 500_000_000,
+            ..Default::default()
+        };
+        assert!((b.ratio() - 4.0).abs() < 1e-12);
+        assert!((b.decode_rate() - 400.0).abs() < 1e-9);
+        a.absorb(b);
+        assert_eq!(a.chunks_decoded, 1);
+        assert_eq!(a.raw_bytes_out, 200);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn timed_helpers_fill_the_report() {
+        let raw = vec![3u8; 4096];
+        let chain = OpChain::parse("rle").unwrap();
+        let ctx = OpCtx { dtype: Datatype::U8, extent: &[4096] };
+        let mut rep = OpsReport::default();
+        let framed = encode_bytes(&chain, &ctx, &raw, &mut rep).unwrap();
+        assert_eq!(rep.chunks_encoded, 1);
+        assert_eq!(rep.raw_bytes_in, 4096);
+        assert_eq!(rep.encoded_bytes_out, framed.len() as u64);
+        assert!(rep.ratio() > 10.0, "constant bytes must collapse");
+        let back =
+            decode_bytes(&chain, &ctx, &framed, 4096, &mut rep).unwrap();
+        assert_eq!(*back, raw);
+        assert_eq!(rep.chunks_decoded, 1);
+        assert_eq!(rep.raw_bytes_out, 4096);
+    }
+}

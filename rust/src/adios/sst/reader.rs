@@ -18,6 +18,7 @@ use crate::adios::engine::{
     Bytes, DeferredGet, Engine, GetHandle, GetQueue, Mode, StepStatus,
     VarHandle, VarDecl, VarInfo,
 };
+use crate::adios::ops::{self, OpChain, OpsReport};
 use crate::adios::region;
 use crate::adios::transport::{self, Conn, Recv};
 use crate::adios::wire::{GetItem, GetReply, Msg, StepMeta};
@@ -38,6 +39,10 @@ pub struct SstReaderOptions {
     pub hostname: String,
     /// How long `begin_step` waits before reporting `NotReady`.
     pub begin_step_timeout: Duration,
+    /// Operator codecs to advertise in the handshake. `None` (default)
+    /// advertises everything this build supports; tests restrict it to
+    /// exercise the writer's raw-fallback negotiation path.
+    pub codecs: Option<Vec<String>>,
 }
 
 impl Default for SstReaderOptions {
@@ -48,6 +53,7 @@ impl Default for SstReaderOptions {
             rank: 0,
             hostname: "localhost".into(),
             begin_step_timeout: Duration::from_secs(30),
+            codecs: None,
         }
     }
 }
@@ -79,6 +85,8 @@ pub struct SstReader {
     next_req_id: u64,
     /// Deferred-get queue (two-phase API).
     gets: GetQueue,
+    /// Decode-side operator accounting.
+    ops_stats: OpsReport,
     /// Steps skipped during announce reconciliation (writers discarded
     /// non-collectively).
     pub steps_skipped: u64,
@@ -88,6 +96,10 @@ impl SstReader {
     /// Connect to all writer ranks and handshake.
     pub fn open(opts: SstReaderOptions) -> Result<SstReader> {
         let transport = transport::by_name(&opts.transport)?;
+        let codecs = opts
+            .codecs
+            .clone()
+            .unwrap_or_else(ops::supported_codecs);
         let mut writers = Vec::with_capacity(opts.writers.len());
         for addr in &opts.writers {
             let mut conn = transport
@@ -96,6 +108,7 @@ impl SstReader {
             conn.send(Msg::Hello {
                 reader_rank: opts.rank,
                 hostname: opts.hostname.clone(),
+                codecs: codecs.clone(),
             })?;
             let (writer_rank, hostname) =
                 match conn.recv_timeout(Duration::from_secs(10))? {
@@ -119,6 +132,7 @@ impl SstReader {
             stats: SstStats::default(),
             next_req_id: 1,
             gets: GetQueue::default(),
+            ops_stats: OpsReport::default(),
             steps_skipped: 0,
         })
     }
@@ -191,6 +205,19 @@ impl SstReader {
             .flat_map(|m| m.vars.iter())
             .find(|v| v.name == var)
             .map(|v| v.dtype.size())
+            .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))
+    }
+
+    /// Dtype + operator chain of a variable in the current step.
+    fn var_coding(&self, var: &str)
+        -> Result<(crate::openpmd::types::Datatype, OpChain)>
+    {
+        self.current
+            .iter()
+            .flat_map(|c| c.metas.iter())
+            .flat_map(|m| m.vars.iter())
+            .find(|v| v.name == var)
+            .map(|v| (v.dtype, v.ops.clone()))
             .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))
     }
 
@@ -320,6 +347,7 @@ impl Engine for SstReader {
                         name: v.name.clone(),
                         dtype: v.dtype,
                         shape: v.shape.clone(),
+                        ops: v.ops.clone(),
                     });
                 }
             }
@@ -436,6 +464,10 @@ impl Engine for SstReader {
         self.writers.clear();
         Ok(())
     }
+
+    fn ops_report(&self) -> OpsReport {
+        self.ops_stats
+    }
 }
 
 impl SstReader {
@@ -456,9 +488,11 @@ impl SstReader {
         }
         let mut per_writer: BTreeMap<usize, Vec<Part>> = BTreeMap::new();
         let mut elem = Vec::with_capacity(pending.len());
+        let mut coding = Vec::with_capacity(pending.len());
         let mut part_count = vec![0usize; pending.len()];
         for (gi, g) in pending.iter().enumerate() {
             elem.push(self.elem_size(&g.var)?);
+            coding.push(self.var_coding(&g.var)?);
             let mut covered = 0u64;
             for info in &self.merged_chunks(&g.var) {
                 if let Some(inter) = info.chunk.intersect(&g.selection) {
@@ -529,13 +563,29 @@ impl SstReader {
             }
             for (part, reply) in parts.iter().zip(replies) {
                 let data = match reply {
-                    GetReply::Data(d) => d,
+                    GetReply::Data(d) => {
+                        self.stats.bytes_got += d.len() as u64;
+                        d
+                    }
+                    GetReply::Encoded(d) => {
+                        // Operator-framed wire payload: fewer bytes
+                        // moved, one decode here. The frame's declared
+                        // raw size must match what this part's
+                        // selection needs.
+                        self.stats.bytes_got += d.len() as u64;
+                        let (dtype, chain) = &coding[part.get_idx];
+                        ops::decode_get(chain, *dtype, &part.sel, &d,
+                                        &mut self.ops_stats)
+                            .map_err(|e| anyhow::anyhow!(
+                                "writer {}: {e}",
+                                self.writers[widx].writer_rank
+                            ))?
+                    }
                     GetReply::Error(e) => bail!(
                         "writer {} failed request: {e}",
                         self.writers[widx].writer_rank
                     ),
                 };
-                self.stats.bytes_got += data.len() as u64;
                 let g = &pending[part.get_idx];
                 if part_count[part.get_idx] == 1
                     && part.sel == g.selection

@@ -20,6 +20,7 @@ use crate::adios::engine::{
     Bytes, Engine, GetHandle, Mode, PutQueue, StepStatus, VarDecl,
     VarHandle, VarInfo,
 };
+use crate::adios::ops::{self, OpCtx, OpsReport};
 use crate::adios::region;
 use crate::adios::transport::{self, ConnTx, Recv};
 use crate::adios::wire::{GetReply, Msg, VarMeta};
@@ -92,6 +93,9 @@ struct ReaderPeer {
     /// Reader rank (diagnostics).
     #[allow(dead_code)]
     rank: usize,
+    /// Operator codecs this reader advertised in its Hello (operator
+    /// negotiation): chains outside this set are served decoded.
+    codecs: Vec<String>,
 }
 
 #[derive(Default)]
@@ -100,6 +104,10 @@ struct Shared {
     published: BTreeMap<u64, Arc<StagedStep>>,
     readers: Vec<Arc<ReaderPeer>>,
     stats: SstStats,
+    /// Operator accounting: encode side of `perform_puts` plus any
+    /// decode/re-encode the serve threads do for partial selections or
+    /// codec-less readers.
+    ops: OpsReport,
     closed: bool,
     /// At least one reader completed the handshake at some point.
     ever_had_reader: bool,
@@ -254,8 +262,11 @@ fn serve_reader(
 ) -> Result<()> {
     let mut conn = conn;
     // Handshake happens synchronously on the accept thread.
-    let hello = match conn.recv_timeout(Duration::from_secs(10))? {
-        Recv::Msg(Msg::Hello { reader_rank, .. }) => reader_rank,
+    let (hello, codecs) = match conn.recv_timeout(Duration::from_secs(10))?
+    {
+        Recv::Msg(Msg::Hello { reader_rank, codecs, .. }) => {
+            (reader_rank, codecs)
+        }
         other => bail!(
             "expected Hello, got {:?}",
             std::mem::discriminant(&match other {
@@ -272,6 +283,7 @@ fn serve_reader(
         done: AtomicU64::new(0),
         alive: AtomicBool::new(true),
         rank: hello,
+        codecs,
     });
 
     // Late joiners see the currently staged steps.
@@ -305,31 +317,52 @@ fn serve_reader(
                 }
                 match rx.recv_timeout(Duration::from_millis(100)) {
                     Ok(Recv::Msg(Msg::GetBatch { req_id, step, items })) => {
-                        // One lock acquisition, one reply message for the
-                        // whole batch — however many chunks it carries.
-                        let reply = {
+                        // Grab the staged step's Arc under the lock, but
+                        // serve (extract/decode/re-encode — potentially
+                        // CPU-bound codec work) OUTSIDE it, so concurrent
+                        // readers and the producer's perform_puts never
+                        // serialize on compression.
+                        let staged = {
                             let mut sh = shared.lock().unwrap();
                             sh.stats.batch_requests += 1;
                             sh.stats.chunk_requests += items.len() as u64;
-                            let mut replies =
-                                Vec::with_capacity(items.len());
-                            for item in &items {
-                                match serve_request(
-                                    &sh, step, &item.var, &item.sel,
-                                ) {
-                                    Ok(data) => {
-                                        sh.stats.bytes_served +=
-                                            data.len() as u64;
-                                        replies.push(GetReply::Data(data));
-                                    }
-                                    Err(e) => replies.push(
-                                        GetReply::Error(format!("{e:#}")),
-                                    ),
-                                }
-                            }
-                            sh.stats.data_messages += 1;
-                            Msg::GetBatchReply { req_id, items: replies }
+                            sh.published.get(&step).cloned()
                         };
+                        let mut local_ops = OpsReport::default();
+                        let mut served_bytes = 0u64;
+                        let mut replies = Vec::with_capacity(items.len());
+                        for item in &items {
+                            let served = match &staged {
+                                None => Err(anyhow::anyhow!(
+                                    "step {step} not staged (retired?)"
+                                )),
+                                Some(staged) => serve_request(
+                                    staged, &item.var, &item.sel,
+                                    &peer.codecs, &mut local_ops,
+                                ),
+                            };
+                            match served {
+                                Ok(r) => {
+                                    served_bytes += match &r {
+                                        GetReply::Data(d) => d.len(),
+                                        GetReply::Encoded(d) => d.len(),
+                                        GetReply::Error(_) => 0,
+                                    } as u64;
+                                    replies.push(r);
+                                }
+                                Err(e) => replies.push(
+                                    GetReply::Error(format!("{e:#}")),
+                                ),
+                            }
+                        }
+                        {
+                            let mut sh = shared.lock().unwrap();
+                            sh.stats.bytes_served += served_bytes;
+                            sh.stats.data_messages += 1;
+                            sh.ops.absorb(local_ops);
+                        }
+                        let reply =
+                            Msg::GetBatchReply { req_id, items: replies };
                         if peer.tx.lock().unwrap().send(reply).is_err() {
                             break;
                         }
@@ -368,50 +401,98 @@ fn serve_reader(
 }
 
 /// Extract `sel` of `var` from a staged step (lock held by caller).
+///
+/// Chunks of operated variables are staged operator-framed. An
+/// exact-chunk selection to a codec-capable reader passes the staged
+/// frame through untouched (one encode at `perform_puts`, zero work per
+/// reader — the compressed analog of the inproc zero-copy). A partial
+/// selection decodes the overlapping chunks, assembles raw bytes, and
+/// re-encodes for the wire; readers that did not advertise the chain's
+/// codecs get decoded raw bytes instead.
 fn serve_request(
-    shared: &Shared,
-    step: u64,
+    staged: &StagedStep,
     var: &str,
     sel: &Chunk,
-) -> Result<Bytes> {
-    let staged = shared
-        .published
-        .get(&step)
-        .ok_or_else(|| anyhow::anyhow!("step {step} not staged (retired?)"))?;
+    peer_codecs: &[String],
+    ops_stats: &mut OpsReport,
+) -> Result<GetReply> {
     let chunks = staged
         .data
         .get(var)
         .ok_or_else(|| anyhow::anyhow!("no such variable {var:?}"))?;
-    let dtype = staged
+    let vm = staged
         .meta
         .vars
         .iter()
         .find(|v| v.name == var)
-        .map(|v| v.dtype)
         .ok_or_else(|| anyhow::anyhow!("no metadata for {var:?}"))?;
-    let elem = dtype.size();
-    // Fast path: a single stored chunk fully contains the selection and
-    // *is* the selection -> hand back the Arc without copying.
-    for (chunk, data) in chunks {
-        if chunk == sel {
-            return Ok(data.clone());
+    let elem = vm.dtype.size();
+    if vm.ops.is_identity() {
+        // Fast path: a stored chunk *is* the selection -> hand back the
+        // Arc without copying.
+        for (chunk, data) in chunks {
+            if chunk == sel {
+                return Ok(GetReply::Data(data.clone()));
+            }
+        }
+        let mut out = vec![0u8; sel.num_elements() as usize * elem];
+        let mut covered = 0u64;
+        for (chunk, data) in chunks {
+            covered +=
+                region::copy_region(chunk, data, sel, &mut out, elem);
+        }
+        if covered < sel.num_elements() {
+            bail!(
+                "selection {:?}+{:?} of {var:?} only partially present \
+                 at this writer ({covered}/{} elements)",
+                sel.offset,
+                sel.extent,
+                sel.num_elements()
+            );
+        }
+        return Ok(GetReply::Data(Arc::new(out)));
+    }
+
+    let peer_ok = vm.ops.supported_by(peer_codecs);
+    if peer_ok {
+        // Exact-chunk passthrough of the staged frame.
+        for (chunk, data) in chunks {
+            if chunk == sel {
+                return Ok(GetReply::Encoded(data.clone()));
+            }
         }
     }
+    // Assemble the selection raw from decoded chunks.
     let mut out = vec![0u8; sel.num_elements() as usize * elem];
     let mut covered = 0u64;
     for (chunk, data) in chunks {
-        covered += region::copy_region(chunk, data, sel, &mut out, elem);
+        if chunk.intersect(sel).is_none() {
+            continue;
+        }
+        let raw = ops::decode_get(&vm.ops, vm.dtype, chunk, data,
+                                  ops_stats)
+            .map_err(|e| anyhow::anyhow!("{var}: {e}"))?;
+        covered += region::copy_region(chunk, &raw, sel, &mut out, elem);
     }
     if covered < sel.num_elements() {
         bail!(
-            "selection {:?}+{:?} of {var:?} only partially present at this \
-             writer ({covered}/{} elements)",
+            "selection {:?}+{:?} of {var:?} only partially present at \
+             this writer ({covered}/{} elements)",
             sel.offset,
             sel.extent,
             sel.num_elements()
         );
     }
-    Ok(Arc::new(out))
+    if peer_ok {
+        let octx = OpCtx { dtype: vm.dtype, extent: &sel.extent };
+        let framed =
+            ops::encode_bytes(&vm.ops, &octx, &out, ops_stats).map_err(
+                |e| anyhow::anyhow!("{var}: operator encode: {e}"),
+            )?;
+        Ok(GetReply::Encoded(framed))
+    } else {
+        Ok(GetReply::Data(Arc::new(out)))
+    }
 }
 
 impl Engine for SstWriter {
@@ -509,6 +590,7 @@ impl Engine for SstWriter {
             .as_mut()
             .ok_or_else(|| anyhow::anyhow!("perform_puts outside step"))?;
         let mut put_bytes = 0u64;
+        let mut local_ops = OpsReport::default();
         for p in pending {
             let info = WrittenChunkInfo::new(
                 p.chunk.clone(),
@@ -526,18 +608,25 @@ impl Engine for SstWriter {
                     name: p.var.name().to_string(),
                     dtype: p.var.dtype(),
                     shape: p.var.shape().to_vec(),
+                    ops: p.var.ops().clone(),
                     chunks: vec![info],
                 }),
             }
-            let data = p.data.into_bytes();
-            put_bytes += data.len() as u64;
+            // Operated chunks are staged encoded: the chain runs once
+            // here, and the staging queue itself holds fewer bytes.
+            // `bytes_put` keeps counting raw produced bytes.
+            put_bytes += p.data.len() as u64;
+            let data =
+                ops::encode_put(&p.var, &p.chunk, p.data, &mut local_ops)?;
             staged
                 .data
                 .entry(p.var.name().to_string())
                 .or_default()
                 .push((p.chunk, data));
         }
-        self.shared.lock().unwrap().stats.bytes_put += put_bytes;
+        let mut sh = self.shared.lock().unwrap();
+        sh.stats.bytes_put += put_bytes;
+        sh.ops.absorb(local_ops);
         Ok(())
     }
 
@@ -674,6 +763,10 @@ impl Engine for SstWriter {
             let _ = t.join();
         }
         Ok(())
+    }
+
+    fn ops_report(&self) -> OpsReport {
+        self.shared.lock().unwrap().ops
     }
 }
 

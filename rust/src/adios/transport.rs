@@ -300,6 +300,7 @@ fn tcp_write_frame(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
             body_len += 9;
             body_len += match item {
                 GetReply::Data(d) => d.len() as u64,
+                GetReply::Encoded(d) => d.len() as u64,
                 GetReply::Error(e) => e.len() as u64,
             };
         }
@@ -315,8 +316,11 @@ fn tcp_write_frame(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
         coalesced.extend_from_slice(&(items.len() as u64).to_le_bytes());
         for item in items {
             match item {
-                GetReply::Data(d) => {
-                    coalesced.push(1);
+                GetReply::Data(d) | GetReply::Encoded(d) => {
+                    coalesced.push(match item {
+                        GetReply::Data(_) => 1,
+                        _ => 2,
+                    });
                     coalesced
                         .extend_from_slice(&(d.len() as u64).to_le_bytes());
                     if d.len() < STREAM_THRESHOLD {
@@ -406,7 +410,7 @@ fn tcp_read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Recv> {
             if consumed > len as u64 {
                 bail!("batch reply overruns its frame");
             }
-            if flag == 1 {
+            if flag == 1 || flag == 2 {
                 let mut data = Vec::with_capacity(item_len);
                 let read = (&mut *stream)
                     .take(item_len as u64)
@@ -414,7 +418,11 @@ fn tcp_read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Recv> {
                 if read != item_len {
                     return Ok(Recv::Closed);
                 }
-                items.push(GetReply::Data(Arc::new(data)));
+                items.push(if flag == 1 {
+                    GetReply::Data(Arc::new(data))
+                } else {
+                    GetReply::Encoded(Arc::new(data))
+                });
             } else if flag == 0 {
                 let mut err = vec![0u8; item_len];
                 stream.read_exact(&mut err)?;
@@ -587,8 +595,12 @@ mod tests {
             move || {
                 let transport = by_name(&transport_name).unwrap();
                 let mut c = transport.dial(&addr).unwrap();
-                c.send(Msg::Hello { reader_rank: 1, hostname: "h1".into() })
-                    .unwrap();
+                c.send(Msg::Hello {
+                    reader_rank: 1,
+                    hostname: "h1".into(),
+                    codecs: vec!["shuffle".into()],
+                })
+                .unwrap();
                 match c.recv().unwrap() {
                     Recv::Msg(Msg::HelloAck { writer_rank, .. }) => {
                         assert_eq!(writer_rank, 0)
@@ -603,9 +615,10 @@ mod tests {
             .unwrap()
             .expect("no connection");
         match server.recv().unwrap() {
-            Recv::Msg(Msg::Hello { reader_rank, hostname }) => {
+            Recv::Msg(Msg::Hello { reader_rank, hostname, codecs }) => {
                 assert_eq!(reader_rank, 1);
                 assert_eq!(hostname, "h1");
+                assert_eq!(codecs, vec!["shuffle"]);
             }
             _ => panic!("expected Hello"),
         }
@@ -684,6 +697,7 @@ mod tests {
                     GetReply::Data(p2),
                     GetReply::Error("second item failed".into()),
                     GetReply::Data(Arc::new(vec![9u8; 3])),
+                    GetReply::Encoded(Arc::new(vec![5u8; 40])),
                 ],
             })
             .unwrap();
@@ -695,7 +709,7 @@ mod tests {
         match server.recv().unwrap() {
             Recv::Msg(Msg::GetBatchReply { req_id, items }) => {
                 assert_eq!(req_id, 7);
-                assert_eq!(items.len(), 3);
+                assert_eq!(items.len(), 4);
                 match &items[0] {
                     GetReply::Data(d) => assert_eq!(**d, *payload),
                     other => panic!("wrong item 0: {other:?}"),
@@ -709,6 +723,10 @@ mod tests {
                 match &items[2] {
                     GetReply::Data(d) => assert_eq!(**d, vec![9u8; 3]),
                     other => panic!("wrong item 2: {other:?}"),
+                }
+                match &items[3] {
+                    GetReply::Encoded(d) => assert_eq!(**d, vec![5u8; 40]),
+                    other => panic!("wrong item 3: {other:?}"),
                 }
             }
             _ => panic!("expected GetBatchReply"),

@@ -12,6 +12,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Result};
 
 use super::engine::Bytes;
+use super::ops::OpChain;
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::types::Datatype;
 use crate::openpmd::Attribute;
@@ -22,6 +23,11 @@ pub struct VarMeta {
     pub name: String,
     pub dtype: Datatype,
     pub shape: Vec<u64>,
+    /// Operator chain the writer applied to this variable's payloads
+    /// (identity = none). Travels in every step announcement and BP
+    /// metadata block, so streams and files self-describe their
+    /// encoding.
+    pub ops: OpChain,
     /// Chunks contributed by the announcing writer rank.
     pub chunks: Vec<WrittenChunkInfo>,
 }
@@ -45,6 +51,10 @@ pub struct GetItem {
 pub enum GetReply {
     /// Dense row-major bytes for the requested selection.
     Data(Bytes),
+    /// Operator-framed bytes: decode with the chain announced in the
+    /// variable's [`VarMeta::ops`]. Sent only to readers whose `Hello`
+    /// advertised every codec of that chain.
+    Encoded(Bytes),
     /// The item failed; the rest of the batch is still valid.
     Error(String),
 }
@@ -52,8 +62,10 @@ pub enum GetReply {
 /// Protocol messages.
 #[derive(Clone, Debug)]
 pub enum Msg {
-    /// Reader -> writer: subscribe to the stream.
-    Hello { reader_rank: usize, hostname: String },
+    /// Reader -> writer: subscribe to the stream. `codecs` lists the
+    /// operator codecs this reader can decode (operator negotiation):
+    /// a writer serves chains outside this set as decoded raw bytes.
+    Hello { reader_rank: usize, hostname: String, codecs: Vec<String> },
     /// Writer -> reader: identify.
     HelloAck { writer_rank: usize, hostname: String },
     /// Writer -> reader: a step is available.
@@ -125,12 +137,21 @@ impl<'a> Reader<'a> {
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
-            bail!("wire decode overrun: need {n} at {} of {}", self.pos,
-                  self.buf.len());
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        // Checked arithmetic: a corrupted length field near usize::MAX
+        // must be a decode error, not a wrapping-add panic.
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "wire decode overrun: need {n} at {} of {}",
+                    self.pos,
+                    self.buf.len()
+                )
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
         Ok(s)
     }
 
@@ -191,6 +212,7 @@ impl StepMeta {
         for v in &self.vars {
             put_str(out, &v.name);
             out.push(v.dtype.tag());
+            put_str(out, &v.ops.to_string());
             put_vec_u64(out, &v.shape);
             put_u64(out, v.chunks.len() as u64);
             for ci in &v.chunks {
@@ -216,24 +238,29 @@ impl StepMeta {
         if n_vars > 1 << 20 {
             bail!("implausible variable count {n_vars}");
         }
-        let mut vars = Vec::with_capacity(n_vars);
+        // Pre-allocation bounded by the remaining buffer so a corrupt
+        // count cannot allocate far beyond what could ever decode.
+        let mut vars = Vec::with_capacity(n_vars.min(r.remaining() / 8));
         for _ in 0..n_vars {
             let name = r.str()?;
             let dtype = Datatype::from_tag(r.u8()?)
                 .ok_or_else(|| anyhow::anyhow!("bad dtype tag"))?;
+            let ops = OpChain::parse(&r.str()?)
+                .map_err(|e| anyhow::anyhow!("bad operator chain: {e}"))?;
             let shape = r.vec_u64()?;
             let n_chunks = r.u64()? as usize;
             if n_chunks > 1 << 24 {
                 bail!("implausible chunk count {n_chunks}");
             }
-            let mut chunks = Vec::with_capacity(n_chunks);
+            let mut chunks =
+                Vec::with_capacity(n_chunks.min(r.remaining() / 8));
             for _ in 0..n_chunks {
                 let chunk = get_chunk(r)?;
                 let source_rank = r.u64()? as usize;
                 let hostname = r.str()?;
                 chunks.push(WrittenChunkInfo { chunk, source_rank, hostname });
             }
-            vars.push(VarMeta { name, dtype, shape, chunks });
+            vars.push(VarMeta { name, dtype, shape, ops, chunks });
         }
         Ok(StepMeta { attributes, vars })
     }
@@ -246,9 +273,13 @@ pub fn encode_msg(msg: &Msg) -> Vec<u8> {
     let mut out = Vec::with_capacity(64);
     out.push(msg.tag());
     match msg {
-        Msg::Hello { reader_rank, hostname } => {
+        Msg::Hello { reader_rank, hostname, codecs } => {
             put_u64(&mut out, *reader_rank as u64);
             put_str(&mut out, hostname);
+            put_u64(&mut out, codecs.len() as u64);
+            for c in codecs {
+                put_str(&mut out, c);
+            }
         }
         Msg::HelloAck { writer_rank, hostname } => {
             put_u64(&mut out, *writer_rank as u64);
@@ -277,6 +308,11 @@ pub fn encode_msg(msg: &Msg) -> Vec<u8> {
                         put_u64(&mut out, data.len() as u64);
                         out.extend_from_slice(data);
                     }
+                    GetReply::Encoded(data) => {
+                        out.push(2);
+                        put_u64(&mut out, data.len() as u64);
+                        out.extend_from_slice(data);
+                    }
                     GetReply::Error(error) => {
                         out.push(0);
                         put_str(&mut out, error);
@@ -295,7 +331,17 @@ pub fn decode_msg(buf: &[u8]) -> Result<Msg> {
     let mut r = Reader::new(buf);
     let tag = r.u8()?;
     let msg = match tag {
-        1 => Msg::Hello { reader_rank: r.u64()? as usize, hostname: r.str()? },
+        1 => {
+            let reader_rank = r.u64()? as usize;
+            let hostname = r.str()?;
+            let n = r.u64()? as usize;
+            if n > 256 {
+                bail!("implausible codec count {n}");
+            }
+            let codecs =
+                (0..n).map(|_| r.str()).collect::<Result<Vec<_>>>()?;
+            Msg::Hello { reader_rank, hostname, codecs }
+        }
         2 => Msg::HelloAck {
             writer_rank: r.u64()? as usize,
             hostname: r.str()?,
@@ -332,6 +378,9 @@ pub fn decode_msg(buf: &[u8]) -> Result<Msg> {
             for _ in 0..n {
                 items.push(match r.u8()? {
                     1 => GetReply::Data(std::sync::Arc::new(r.bytes()?)),
+                    2 => GetReply::Encoded(
+                        std::sync::Arc::new(r.bytes()?),
+                    ),
                     0 => GetReply::Error(r.str()?),
                     other => bail!("bad batch-reply flag {other}"),
                 });
@@ -364,16 +413,30 @@ mod tests {
         attributes.insert("/data/3/time".into(), Attribute::F64(1.5));
         StepMeta {
             attributes,
-            vars: vec![VarMeta {
-                name: "/data/3/particles/e/position/x".into(),
-                dtype: Datatype::F32,
-                shape: vec![1000],
-                chunks: vec![WrittenChunkInfo::new(
-                    Chunk::new(vec![0], vec![500]),
-                    2,
-                    "node07",
-                )],
-            }],
+            vars: vec![
+                VarMeta {
+                    name: "/data/3/particles/e/position/x".into(),
+                    dtype: Datatype::F32,
+                    shape: vec![1000],
+                    ops: OpChain::identity(),
+                    chunks: vec![WrittenChunkInfo::new(
+                        Chunk::new(vec![0], vec![500]),
+                        2,
+                        "node07",
+                    )],
+                },
+                VarMeta {
+                    name: "/data/3/particles/e/position/y".into(),
+                    dtype: Datatype::F32,
+                    shape: vec![1000],
+                    ops: OpChain::parse("zfp:14|shuffle|rle").unwrap(),
+                    chunks: vec![WrittenChunkInfo::new(
+                        Chunk::new(vec![500], vec![500]),
+                        3,
+                        "node08",
+                    )],
+                },
+            ],
         }
     }
 
@@ -411,17 +474,19 @@ mod tests {
     #[test]
     fn get_batch_reply_round_trips() {
         let data = Arc::new(vec![1u8, 2, 3, 4, 5]);
+        let framed = Arc::new(vec![9u8; 24]);
         match round_trip(Msg::GetBatchReply {
             req_id: 1,
             items: vec![
                 GetReply::Data(data.clone()),
                 GetReply::Error("nope".into()),
                 GetReply::Data(Arc::new(Vec::new())),
+                GetReply::Encoded(framed.clone()),
             ],
         }) {
             Msg::GetBatchReply { req_id, items } => {
                 assert_eq!(req_id, 1);
-                assert_eq!(items.len(), 3);
+                assert_eq!(items.len(), 4);
                 match &items[0] {
                     GetReply::Data(d) => assert_eq!(**d, *data),
                     other => panic!("wrong item {other:?}"),
@@ -432,6 +497,10 @@ mod tests {
                 }
                 match &items[2] {
                     GetReply::Data(d) => assert!(d.is_empty()),
+                    other => panic!("wrong item {other:?}"),
+                }
+                match &items[3] {
+                    GetReply::Encoded(d) => assert_eq!(**d, *framed),
                     other => panic!("wrong item {other:?}"),
                 }
             }
@@ -459,10 +528,18 @@ mod tests {
         assert!(matches!(round_trip(Msg::ReaderBye), Msg::ReaderBye));
         assert!(matches!(round_trip(Msg::StepDone { step: 7 }),
                          Msg::StepDone { step: 7 }));
-        assert!(matches!(
-            round_trip(Msg::Hello { reader_rank: 4, hostname: "h".into() }),
-            Msg::Hello { reader_rank: 4, .. }
-        ));
+        match round_trip(Msg::Hello {
+            reader_rank: 4,
+            hostname: "h".into(),
+            codecs: vec!["shuffle".into(), "rle".into()],
+        }) {
+            Msg::Hello { reader_rank, hostname, codecs } => {
+                assert_eq!(reader_rank, 4);
+                assert_eq!(hostname, "h");
+                assert_eq!(codecs, vec!["shuffle", "rle"]);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
     }
 
     #[test]

@@ -28,6 +28,38 @@
 //!   conveniences built on the deferred core, and an engine-conformance
 //!   suite ([`testing::engine_conformance`]) proves deferred and eager
 //!   paths byte-identical for every backend.
+//! * [`adios::ops`] — the per-variable **operator** subsystem (ADIOS2's
+//!   `AddOperation`): data transforms applied transparently at put/get
+//!   time, because once the network rather than the filesystem is the
+//!   bottleneck, bytes-per-step is the remaining lever. An
+//!   [`adios::ops::Operator`] has `apply`/`reverse` over typed byte
+//!   slices; four dependency-free codecs ship — `shuffle` (byte
+//!   transposition by element width), `rle` (PackBits-style byte runs),
+//!   `delta` (delta+zigzag+varint for integer/index data) and `zfp:N`
+//!   (lossy mantissa truncation keeping `N` bits, f32/f64 only).
+//!   Chains compose via a spec grammar attached at `define_variable`
+//!   time:
+//!
+//!   ```text
+//!   chain   := "" | "identity" | "none" | codec ("|" codec)*
+//!   codec   := "shuffle" | "rle" | "delta" | "zfp" | "zfp:" bits
+//!   bits    := 1..=52        (mantissa bits kept; default 12)
+//!   ```
+//!
+//!   Validation is typed and up-front: unknown codecs, empty segments
+//!   (`"shuffle||rle"`) and lossy-codec-on-integer declarations are
+//!   [`adios::ops::OpsError`]s at definition, not failures mid-stream.
+//!   The chain is applied inside `perform_puts` and reversed at
+//!   `perform_gets` (the deferred core), so eager paths inherit it;
+//!   encoded payloads travel in a length-validated frame; the SST wire
+//!   negotiates codecs at handshake (readers lacking one are served
+//!   raw); BP files persist the chain in variable metadata so they
+//!   self-describe; JSON stores compressed payloads base64-encoded; and
+//!   `pipeline::pipe` forwards chains end to end (or re-encodes with
+//!   `--operators`). Every engine reports an [`adios::ops::OpsReport`]
+//!   (ratio, bytes saved, encode/decode throughput), merged into the
+//!   pipe report; `benches/fig_compression.rs` measures ratio vs.
+//!   throughput per chain over real SST-TCP.
 //! * [`distribution`] — the paper's §3 contribution: chunk-distribution
 //!   strategies (round-robin, hyperslab slicing, binpacking, two-phase
 //!   by-hostname) plus quality metrics (locality / balance / alignment).
@@ -67,7 +99,8 @@ pub mod testing;
 pub mod util;
 
 pub use adios::{
-    Engine, EngineKind, GetHandle, Mode, StepStatus, VarDecl, VarHandle,
+    Engine, EngineKind, GetHandle, Mode, OpChain, OpsError, OpsReport,
+    StepStatus, VarDecl, VarHandle,
 };
 pub use distribution::{Assignment, ChunkTable, Strategy};
 pub use openpmd::Series;

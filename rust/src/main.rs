@@ -23,8 +23,10 @@ use openpmd_stream::adios::engine::{cast, Engine, StepStatus};
 use openpmd_stream::adios::json::JsonWriter;
 use openpmd_stream::adios::sst::{SstReader, SstReaderOptions, SstWriter,
                                  SstWriterOptions};
+use openpmd_stream::adios::ops::OpChain;
 use openpmd_stream::analysis::SaxsAnalyzer;
 use openpmd_stream::bench::Table;
+use openpmd_stream::pipeline::ops_summary;
 use openpmd_stream::cluster::systems;
 use openpmd_stream::openpmd::chunk::Chunk;
 use openpmd_stream::openpmd::series::Series;
@@ -85,6 +87,13 @@ fn help() -> String {
                       help: "staged-pipe read-ahead steps (0 = serial; \
                              2 = double buffering: store step N while \
                              loading step N+1)" },
+            OptSpec { name: "operators", value_name: Some("CHAIN"),
+                      default: None,
+                      help: "per-variable operator chain, e.g. \
+                             shuffle|rle or zfp:14|shuffle|rle \
+                             (produce: applied to every record; pipe: \
+                             re-encode forwarded variables with this \
+                             chain)" },
             OptSpec { name: "period", value_name: Some("N"),
                       default: Some("10"), help: "sim steps between outputs" },
             OptSpec { name: "particles", value_name: Some("N"),
@@ -100,9 +109,18 @@ fn help() -> String {
     )
 }
 
+fn parse_operators(args: &Args) -> Result<Option<OpChain>> {
+    match args.get("operators") {
+        None => Ok(None),
+        Some(spec) => OpChain::parse(spec)
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("--operators: {e}")),
+    }
+}
+
 fn cmd_pipe(args: &Args) -> Result<()> {
     args.reject_unknown(&["in", "out", "engine", "steps",
-                          "pipeline-depth"])?;
+                          "pipeline-depth", "operators"])?;
     let input = args.get("in").context("--in required")?;
     let output = args.get("out").context("--out required")?;
     let mut reader: Box<dyn Engine> = if let Some(addr) =
@@ -129,6 +147,7 @@ fn cmd_pipe(args: &Args) -> Result<()> {
     let mut opts = PipeOptions::solo();
     opts.max_steps = args.get_parse::<u64>("steps")?;
     opts.depth = args.get_parse_or("pipeline-depth", 0usize)?;
+    opts.operators = parse_operators(args)?;
     let depth = opts.depth;
     let report = run(reader.as_mut(), writer.as_mut(), opts)?;
     println!(
@@ -139,6 +158,9 @@ fn cmd_pipe(args: &Args) -> Result<()> {
         fmt_bytes(report.bytes_out),
         report.chunks
     );
+    if !report.ops.is_empty() {
+        println!("{}", ops_summary(&report.ops));
+    }
     if depth > 0 {
         let o = &report.overlap;
         println!(
@@ -155,7 +177,7 @@ fn cmd_pipe(args: &Args) -> Result<()> {
 
 fn cmd_produce(args: &Args) -> Result<()> {
     args.reject_unknown(&["out", "engine", "steps", "particles",
-                          "no-runtime", "period"])?;
+                          "no-runtime", "period", "operators"])?;
     let out = args.get("out").context("--out required")?;
     let steps: u64 = args.get_parse_or("steps", 10)?;
     let period: u64 = args.get_parse_or("period", 10)?;
@@ -169,6 +191,9 @@ fn cmd_produce(args: &Args) -> Result<()> {
     };
     let mut producer = KhProducer::new(
         0, "localhost", n, 0, n as u64, 42, runtime.as_ref())?;
+    if let Some(chain) = parse_operators(args)? {
+        producer.set_operators(chain);
+    }
     let engine_kind = args.get_or("engine", "bp");
     let mut engine: Box<dyn Engine> = match engine_kind {
         "bp" => Box::new(BpWriter::create(out, WriterCtx::default())?),
@@ -198,11 +223,15 @@ fn cmd_produce(args: &Args) -> Result<()> {
             t0.elapsed().as_secs_f64()
         );
     }
+    let ops_report = engine.ops_report();
     engine.close()?;
     println!(
         "produced {steps} iterations of {n} particles ({} each)",
         fmt_bytes(n as u64 * 7 * 4)
     );
+    if !ops_report.is_empty() {
+        println!("{}", ops_summary(&ops_report));
+    }
     Ok(())
 }
 

@@ -140,7 +140,11 @@ impl Attribute {
             4 => Attribute::Bool(take(buf, pos, 1)?[0] != 0),
             5 => {
                 let n = u32_at(buf, pos)? as usize;
-                let mut v = Vec::with_capacity(n);
+                // Bound the pre-allocation by the bytes actually left:
+                // a corrupted count is a decode error a few elements
+                // in, not a multi-gigabyte allocation up front.
+                let mut v =
+                    Vec::with_capacity(n.min((buf.len() - *pos) / 8));
                 for _ in 0..n {
                     v.push(f64::from_le_bytes(
                         take(buf, pos, 8)?.try_into().unwrap(),
@@ -150,7 +154,8 @@ impl Attribute {
             }
             6 => {
                 let n = u32_at(buf, pos)? as usize;
-                let mut v = Vec::with_capacity(n);
+                let mut v =
+                    Vec::with_capacity(n.min((buf.len() - *pos) / 8));
                 for _ in 0..n {
                     v.push(u64::from_le_bytes(
                         take(buf, pos, 8)?.try_into().unwrap(),
@@ -160,7 +165,8 @@ impl Attribute {
             }
             7 => {
                 let n = u32_at(buf, pos)? as usize;
-                let mut v = Vec::with_capacity(n);
+                let mut v =
+                    Vec::with_capacity(n.min((buf.len() - *pos) / 4));
                 for _ in 0..n {
                     let m = u32_at(buf, pos)? as usize;
                     let s = take(buf, pos, m)?;

@@ -10,21 +10,36 @@ use std::collections::BTreeMap;
 use super::attribute::Attribute;
 use super::chunk::Chunk;
 use super::types::{byte_size, Datatype, Extent, UnitDimension};
+use crate::adios::ops::OpChain;
 use crate::adios::Bytes;
 
 /// Name used for the single component of scalar records.
 pub const SCALAR: &str = "\u{b}_scalar";
 
-/// Dataset declaration: element type + global extent.
+/// Dataset declaration: element type + global extent, plus an optional
+/// operator chain (openPMD-api's `Dataset::options` compression knob):
+/// the series flush declares the variable with this chain, so every
+/// backend transforms the component's payloads transparently.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Dataset {
     pub dtype: Datatype,
     pub extent: Extent,
+    pub ops: OpChain,
 }
 
 impl Dataset {
     pub fn new(dtype: Datatype, extent: impl Into<Extent>) -> Self {
-        Dataset { dtype, extent: extent.into() }
+        Dataset {
+            dtype,
+            extent: extent.into(),
+            ops: OpChain::identity(),
+        }
+    }
+
+    /// Attach an operator chain (builder style).
+    pub fn with_ops(mut self, ops: OpChain) -> Self {
+        self.ops = ops;
+        self
     }
 }
 
@@ -213,7 +228,13 @@ impl ParticleSpecies {
     /// `position` (x,y,z), `momentum` (x,y,z), scalar `weighting`, all f32
     /// with `n` global particles.
     pub fn pic_layout(n: u64) -> Self {
-        let ds = Dataset::new(Datatype::F32, vec![n]);
+        Self::pic_layout_with_ops(n, OpChain::identity())
+    }
+
+    /// [`ParticleSpecies::pic_layout`] with an operator chain on every
+    /// component (the producer's `--operators` path).
+    pub fn pic_layout_with_ops(n: u64, ops: OpChain) -> Self {
+        let ds = Dataset::new(Datatype::F32, vec![n]).with_ops(ops);
         let mut s = ParticleSpecies::new();
         s.records.insert(
             "position".into(),

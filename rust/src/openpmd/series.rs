@@ -304,8 +304,11 @@ fn flush_record(
                              Attribute::F64(comp.unit_si))?;
         // Two-phase: declare once, enqueue every staged chunk; the
         // caller's end_step performs the whole iteration as one batch.
+        // The dataset's operator chain rides on the declaration, so the
+        // engine transforms payloads transparently at perform time.
         let decl = VarDecl::new(cpath.clone(), comp.dataset.dtype,
-                                comp.dataset.extent.clone());
+                                comp.dataset.extent.clone())
+            .with_ops(comp.dataset.ops.clone());
         let handle = engine.define_variable(&decl)?;
         for (chunk, data) in comp.take_pending() {
             engine.put_deferred(&handle, chunk, data)?;

@@ -11,6 +11,30 @@ use std::time::Instant;
 
 use crate::util::stats::{boxplot, BoxPlot};
 
+/// Operator (compression) accounting, re-exported from the `adios::ops`
+/// subsystem: `PipeReport::ops` merges the input engine's decode side
+/// and the output engine's encode side, so a pipe run reports data
+/// reduction alongside perceived throughput.
+pub use crate::adios::ops::OpsReport;
+
+/// One-line human summary of an [`OpsReport`] for pipe/bench output.
+pub fn ops_summary(ops: &OpsReport) -> String {
+    use crate::util::bytes::{fmt_bytes_f, fmt_rate};
+    if ops.is_empty() {
+        return "operators: none".into();
+    }
+    format!(
+        "operators: ratio {:.2}x, {} saved, encode {} ({} chunks), \
+         decode {} ({} chunks)",
+        ops.ratio(),
+        fmt_bytes_f(ops.bytes_saved() as f64),
+        fmt_rate(ops.encode_rate()),
+        ops.chunks_encoded,
+        fmt_rate(ops.decode_rate()),
+        ops.chunks_decoded,
+    )
+}
+
 /// What kind of IO operation a sample describes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum OpKind {
@@ -367,5 +391,21 @@ mod tests {
         let r = m.report(OpKind::Store, 8);
         assert_eq!(r.ops, 0);
         assert_eq!(r.aggregate_rate, 0.0);
+    }
+
+    #[test]
+    fn ops_summary_renders_both_states() {
+        let empty = OpsReport::default();
+        assert_eq!(ops_summary(&empty), "operators: none");
+        let r = OpsReport {
+            chunks_encoded: 3,
+            raw_bytes_in: 3000,
+            encoded_bytes_out: 1000,
+            encode_ns: 1_000_000,
+            ..Default::default()
+        };
+        let s = ops_summary(&r);
+        assert!(s.contains("3.00x"), "{s}");
+        assert!(s.contains("3 chunks"), "{s}");
     }
 }

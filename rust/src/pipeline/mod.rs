@@ -35,7 +35,8 @@ pub mod pipe;
 pub mod staged;
 
 pub use metrics::{
-    OpKind, OverlapReport, PerceivedThroughput, ThroughputReport,
+    ops_summary, OpKind, OpsReport, OverlapReport, PerceivedThroughput,
+    ThroughputReport,
 };
 pub use pipe::{run, run_pipe, PipeOptions, PipeReport};
 pub use staged::run_staged;

@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::adios::engine::{Bytes, Engine, GetHandle, StepStatus, VarDecl};
+use crate::adios::ops::{OpChain, OpsReport};
 use crate::distribution::{ChunkTable, ReaderLayout, Strategy};
 use crate::openpmd::chunk::Chunk;
 use crate::openpmd::Attribute;
@@ -66,6 +67,13 @@ pub struct PipeOptions {
     /// fetch thread feeds a bounded queue, so the store of step N
     /// overlaps the load of step N+1; 2 is classic double buffering).
     pub depth: usize,
+    /// Operator-chain handling. `None` (default) forwards each input
+    /// variable's announced chain to the output unchanged, so a
+    /// compressed stream stays compressed end to end. `Some(chain)`
+    /// overrides: every forwarded variable is re-declared with `chain`
+    /// on the output (the pipe as a transcoder — e.g. raw SST in,
+    /// `shuffle|rle` BP out).
+    pub operators: Option<OpChain>,
 }
 
 impl PipeOptions {
@@ -79,6 +87,7 @@ impl PipeOptions {
             max_steps: None,
             idle_timeout: Duration::from_secs(60),
             depth: 0,
+            operators: None,
         }
     }
 }
@@ -101,6 +110,9 @@ pub struct PipeReport {
     /// run shows ~zero hidden time, a staged run shows how much of the
     /// store (or load) latency the read-ahead hid.
     pub overlap: OverlapReport,
+    /// Merged operator accounting of both engines (decode on the input
+    /// side, encode on the output side).
+    pub ops: OpsReport,
 }
 
 // ======================================================================
@@ -254,8 +266,16 @@ pub(crate) fn load_open_step(
             dataset_extent: var.shape.clone(),
             chunks,
         };
+        // Forward the writer's operator chain (or the configured
+        // override) so the output re-encodes what the input decoded —
+        // the chain survives the pipe end to end.
+        let fwd_ops = match &opts.operators {
+            Some(chain) => chain.clone(),
+            None => var.ops.clone(),
+        };
         let decl =
-            VarDecl::new(var.name.clone(), var.dtype, var.shape.clone());
+            VarDecl::new(var.name.clone(), var.dtype, var.shape.clone())
+                .with_ops(fwd_ops);
         let mine: Vec<Chunk> = if opts.instances <= 1 {
             table.chunks.iter().map(|c| c.chunk.clone()).collect()
         } else {
@@ -515,6 +535,8 @@ pub fn run_pipe(
     input.close()?;
     report.overlap.wall_seconds = wall.elapsed().as_secs_f64().max(1e-9);
     report.overlap.steps = report.steps;
+    report.ops.absorb(input.ops_report());
+    report.ops.absorb(output.ops_report());
     Ok(report)
 }
 

@@ -64,6 +64,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::adios::engine::Engine;
+use crate::adios::ops::OpsReport;
 
 use super::pipe::{
     fetch_step, forward_payload, Fetched, PipeOptions, PipeReport,
@@ -87,24 +88,33 @@ pub fn run_staged(
     let wall = Instant::now();
     let stop = AtomicBool::new(false);
 
-    let (store_result, fetch_result) = std::thread::scope(|scope| {
-        let stop_flag = &stop;
-        let fetch =
-            scope.spawn(move || fetch_loop(input, &opts, tx, stop_flag));
-        let store_result =
-            store_loop(output, rx, &mut report, max_steps, rank);
-        // `store_loop` consumed (and dropped) the receiver, so a fetch
-        // stage blocked on a full queue fails its send immediately; the
-        // stop flag interrupts one that is polling a quiet input. The
-        // join is bounded by one backoff sleep — it cannot deadlock and
-        // does not wait out the idle timeout.
-        stop.store(true, Ordering::Relaxed);
-        let fetch_result = match fetch.join() {
-            Ok(r) => r,
-            Err(_) => Err(anyhow::anyhow!("pipe fetch stage panicked")),
-        };
-        (store_result, fetch_result)
-    });
+    let (store_result, fetch_result, fetch_ops) =
+        std::thread::scope(|scope| {
+            let stop_flag = &stop;
+            let fetch = scope.spawn(move || {
+                let r = fetch_loop(&mut *input, &opts, tx, stop_flag);
+                // The input engine's operator accounting is read here,
+                // on the thread that owns the borrow, and handed back
+                // with the verdict.
+                (r, input.ops_report())
+            });
+            let store_result =
+                store_loop(output, rx, &mut report, max_steps, rank);
+            // `store_loop` consumed (and dropped) the receiver, so a
+            // fetch stage blocked on a full queue fails its send
+            // immediately; the stop flag interrupts one that is polling
+            // a quiet input. The join is bounded by one backoff sleep —
+            // it cannot deadlock and does not wait out the idle timeout.
+            stop.store(true, Ordering::Relaxed);
+            let (fetch_result, fetch_ops) = match fetch.join() {
+                Ok((r, o)) => (r, o),
+                Err(_) => (
+                    Err(anyhow::anyhow!("pipe fetch stage panicked")),
+                    OpsReport::default(),
+                ),
+            };
+            (store_result, fetch_result, fetch_ops)
+        });
     // A store-side failure is the primary verdict (the fetch side then
     // merely observed the hang-up). If the store side completed its
     // `max_steps` contract, the run succeeded no matter how the fetch
@@ -119,6 +129,8 @@ pub fn run_staged(
     output.close()?;
     report.overlap.wall_seconds = wall.elapsed().as_secs_f64().max(1e-9);
     report.overlap.steps = report.steps;
+    report.ops.absorb(fetch_ops);
+    report.ops.absorb(output.ops_report());
     Ok(report)
 }
 

@@ -17,6 +17,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::adios::engine::{cast, Engine, StepStatus};
+use crate::adios::ops::OpChain;
 use crate::openpmd::chunk::Chunk;
 use crate::openpmd::record::ParticleSpecies;
 use crate::openpmd::series::{Iteration, Series};
@@ -48,6 +49,9 @@ pub struct KhProducer {
     pub global_offset: u64,
     /// Global particle count across all ranks.
     pub global_n: u64,
+    /// Operator chain declared for every emitted record component
+    /// (the `--operators` CLI knob).
+    pub ops: OpChain,
     step_count: u64,
 }
 
@@ -121,8 +125,14 @@ impl KhProducer {
             hostname: hostname.to_string(),
             global_offset,
             global_n,
+            ops: OpChain::identity(),
             step_count: 0,
         })
+    }
+
+    /// Declare every emitted record component with `ops` from now on.
+    pub fn set_operators(&mut self, ops: OpChain) {
+        self.ops = ops;
     }
 
     /// Advance one PIC step (through PJRT when available).
@@ -219,7 +229,8 @@ impl KhProducer {
     ) -> Result<StepStatus> {
         let mut it = Iteration::new(self.step_count as f64 * DT as f64,
                                     DT as f64);
-        let mut species = ParticleSpecies::pic_layout(self.global_n);
+        let mut species = ParticleSpecies::pic_layout_with_ops(
+            self.global_n, self.ops.clone());
         let my_chunk = Chunk::new(vec![self.global_offset],
                                   vec![self.n as u64]);
         for (record, data) in [

@@ -1,16 +1,28 @@
 //! Synthetic producer: the data *shape* of PIConGPU without the physics.
 //!
-//! IO benchmarks (micro_transport, the real-engine parts of the
-//! examples) need realistic openPMD step structure at arbitrary sizes
-//! without paying for particle pushes. The synthetic producer emits the
-//! same species layout (`position`/`momentum`/`weighting`, one chunk per
-//! rank) with deterministic pseudo-random payloads — serialized straight
-//! into the engine's staging buffer via `put_span`, so the hot path
-//! performs zero intermediate copies.
+//! IO benchmarks (micro_transport, fig_compression, the real-engine
+//! parts of the examples) need realistic openPMD step structure at
+//! arbitrary sizes without paying for particle pushes. The synthetic
+//! producer emits the same species layout (`position`/`momentum`/
+//! `weighting`, one chunk per rank) with deterministic payloads —
+//! serialized straight into the engine's staging buffer via `put_span`,
+//! so the hot path performs zero intermediate copies.
+//!
+//! The payloads model the *statistics* of real PIC output, which is
+//! what makes the operator benchmarks honest rather than flattering:
+//!
+//! * `position` — a quantized ramp with a per-step phase (particles are
+//!   initialized on a lattice and stay spatially ordered per rank);
+//! * `momentum` — quantized pseudo-random values (thermal spread;
+//!   15 significant bits, the effective precision of real single-
+//!   precision particle data);
+//! * `weighting` — constant (macroparticle weight is uniform in the
+//!   paper's KH setup).
 
 use anyhow::Result;
 
 use crate::adios::engine::{Engine, StepStatus, VarDecl};
+use crate::adios::ops::OpChain;
 use crate::openpmd::chunk::Chunk;
 use crate::openpmd::series::var_name;
 use crate::openpmd::types::Datatype;
@@ -25,6 +37,8 @@ pub struct SyntheticProducer {
     pub n: usize,
     pub global_offset: u64,
     pub global_n: u64,
+    /// Operator chain declared for every emitted variable.
+    pub ops: OpChain,
     rng: Rng,
     step: u64,
 }
@@ -37,6 +51,7 @@ impl SyntheticProducer {
             n,
             global_offset,
             global_n,
+            ops: OpChain::identity(),
             rng: Rng::new(seed ^ rank as u64),
             step: 0,
         }
@@ -51,24 +66,61 @@ impl SyntheticProducer {
         Self::new(rank, n, (rank * n) as u64, global_n, seed)
     }
 
+    /// Attach an operator chain to every variable this producer
+    /// declares (builder style).
+    pub fn with_ops(mut self, ops: OpChain) -> Self {
+        self.ops = ops;
+        self
+    }
+
     /// Bytes this producer writes per step.
     pub fn bytes_per_step(&self) -> u64 {
         self.n as u64 * 7 * 4
     }
 
-    /// Serialize one component's pseudo-random payload directly into an
-    /// engine staging span (no intermediate buffer).
-    fn fill_span(&mut self, scale: f32, span: &mut [u8]) {
-        for slot in span.chunks_exact_mut(4) {
-            let v = self.rng.f32() * scale;
+    /// Quantized lattice ramp: monotone across the rank's chunk with a
+    /// per-step phase, 15 significant bits per value.
+    fn fill_ramp(span: &mut [u8], offset: u64, global_n: u64, step: u64,
+                 scale: f32) {
+        let n = global_n.max(1);
+        let phase = (step * 131) & 0x7fff;
+        for (j, slot) in span.chunks_exact_mut(4).enumerate() {
+            let g = offset + j as u64;
+            let t = ((g * 0x7fff / n) + phase) & 0x7fff;
+            let v = (t as f32 / 32768.0) * scale;
             slot.copy_from_slice(&v.to_le_bytes());
         }
     }
 
+    /// Quantized pseudo-random values: 15 significant bits per value.
+    fn fill_quantized(&mut self, span: &mut [u8], scale: f32) {
+        for slot in span.chunks_exact_mut(4) {
+            let q = (self.rng.next_u64() & 0x7fff) as f32;
+            let v = q / 32768.0 * scale;
+            slot.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn fill_constant(span: &mut [u8], v: f32) {
+        for slot in span.chunks_exact_mut(4) {
+            slot.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn fill_component(&mut self, record: &str, span: &mut [u8],
+                      step: u64) {
+        match record {
+            "position" => Self::fill_ramp(span, self.global_offset,
+                                          self.global_n, step, 64.0),
+            "momentum" => self.fill_quantized(span, 8.0),
+            _ => Self::fill_constant(span, 1.0),
+        }
+    }
+
     /// Write one step of openPMD-shaped particle data through the
-    /// two-phase API: every component is declared, serialized into a
-    /// `put_span` staging buffer, and the whole step is performed by
-    /// `end_step` as one batch.
+    /// two-phase API: every component is declared (with this producer's
+    /// operator chain), serialized into a `put_span` staging buffer,
+    /// and the whole step is performed by `end_step` as one batch.
     /// Returns the step status from the engine (discards propagate).
     pub fn write_step(&mut self, engine: &mut dyn Engine)
         -> Result<StepStatus>
@@ -95,23 +147,46 @@ impl SyntheticProducer {
                     var_name(idx, "e", record, comp),
                     Datatype::F32,
                     vec![self.global_n],
-                );
+                )
+                .with_ops(self.ops.clone());
                 let handle = engine.define_variable(&decl)?;
                 let span = engine.put_span(&handle, chunk.clone())?;
-                self.fill_span(64.0, span);
+                self.fill_component(record, span, idx);
             }
         }
         let decl = VarDecl::new(
             var_name(idx, "e", "weighting", SCALAR),
             Datatype::F32,
             vec![self.global_n],
-        );
+        )
+        .with_ops(self.ops.clone());
         let handle = engine.define_variable(&decl)?;
         let span = engine.put_span(&handle, chunk)?;
-        self.fill_span(1.0, span);
+        Self::fill_constant(span, 1.0);
         engine.end_step()?;
         self.step += 1;
         Ok(StepStatus::Ok)
+    }
+
+    /// One step's per-component payloads without an engine — exactly
+    /// the bytes `write_step` would serialize, for codec benchmarks and
+    /// compression-ratio tests. Advances the step counter like
+    /// `write_step`.
+    pub fn component_payloads(&mut self) -> Vec<(String, Vec<u8>)> {
+        let idx = self.step;
+        let mut out = Vec::with_capacity(7);
+        for record in ["position", "momentum"] {
+            for comp in ["x", "y", "z"] {
+                let mut buf = vec![0u8; self.n * 4];
+                self.fill_component(record, &mut buf, idx);
+                out.push((var_name(idx, "e", record, comp), buf));
+            }
+        }
+        let mut buf = vec![0u8; self.n * 4];
+        Self::fill_constant(&mut buf, 1.0);
+        out.push((var_name(idx, "e", "weighting", SCALAR), buf));
+        self.step += 1;
+        out
     }
 
     pub fn steps_written(&self) -> u64 {
@@ -123,6 +198,7 @@ impl SyntheticProducer {
 mod tests {
     use super::*;
     use crate::adios::bp::{BpReader, BpWriter, WriterCtx};
+    use crate::adios::ops::{self, OpCtx, OpsReport};
 
     #[test]
     fn produces_seven_components_with_right_sizes() {
@@ -168,5 +244,47 @@ mod tests {
                    std::fs::read(&path2).unwrap());
         std::fs::remove_file(&path1).ok();
         std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn payload_helper_matches_write_step_shape() {
+        let mut p = SyntheticProducer::new(0, 64, 0, 64, 7);
+        let payloads = p.component_payloads();
+        assert_eq!(payloads.len(), 7);
+        assert!(payloads.iter().all(|(_, b)| b.len() == 64 * 4));
+        assert_eq!(p.steps_written(), 1);
+        // Component names follow the openPMD layout.
+        assert!(payloads[0].0.contains("/position/x"));
+        assert!(payloads[6].0.contains("/weighting"));
+    }
+
+    /// The acceptance bar for the operator subsystem: `shuffle|rle`
+    /// over the synthetic producer's fields reduces the step by more
+    /// than 1.5x (the fig_compression bench measures the same thing
+    /// over a real SST-TCP stream).
+    #[test]
+    fn shuffle_rle_beats_1_5x_on_producer_fields() {
+        let chain = OpChain::parse("shuffle|rle").unwrap();
+        let mut p = SyntheticProducer::new(0, 20_000, 0, 20_000, 42);
+        let payloads = p.component_payloads();
+        let mut report = OpsReport::default();
+        for (name, raw) in &payloads {
+            let octx = OpCtx {
+                dtype: Datatype::F32,
+                extent: &[raw.len() as u64 / 4],
+            };
+            let framed =
+                ops::encode_bytes(&chain, &octx, raw, &mut report)
+                    .unwrap();
+            // Lossless: decodes back to the exact input.
+            let mut dec_report = OpsReport::default();
+            let back = ops::decode_bytes(&chain, &octx, &framed,
+                                         raw.len(), &mut dec_report)
+                .unwrap();
+            assert_eq!(*back, *raw, "{name}");
+        }
+        assert!(report.ratio() > 1.5,
+                "shuffle|rle ratio {:.2} <= 1.5 over {} raw bytes",
+                report.ratio(), report.raw_bytes_in);
     }
 }

@@ -27,6 +27,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::adios::engine::{cast, Engine, StepStatus, VarDecl};
+use crate::adios::ops::{OpChain, OpSpec};
 use crate::openpmd::chunk::Chunk;
 use crate::openpmd::types::Datatype;
 use crate::openpmd::Attribute;
@@ -272,6 +273,163 @@ fn read_phase(name: &str, r: &mut dyn Engine) -> Result<()> {
     match r.begin_step()? {
         StepStatus::EndOfStream => Ok(()),
         other => bail!("expected EndOfStream after 2 steps, got {other:?}"),
+    }
+}
+
+// =====================================================================
+// Operator axis
+// =====================================================================
+
+const VAR_PLAIN: &str = "/data/0/ops/plain";
+const VAR_CODED: &str = "/data/0/ops/coded";
+
+/// Operator-chain conformance, run per (chain × backend): the same
+/// payload is written twice in one step — once through an identity
+/// chain, once through `spec` — as two chunks each (so exact-match
+/// passthrough AND decode/assemble/re-encode service paths both run).
+/// The read side loads whole, aligned and misaligned selections from
+/// both variables; a lossless chain must be **byte-identical** to the
+/// identity variable, a zfp-lite chain must agree within its
+/// `keep_bits` tolerance. Integer chains (`delta`) run the same
+/// contract on a u64 variable with monotone content.
+pub fn run_operator_conformance(
+    name: &str,
+    spec: &str,
+    make: impl FnOnce() -> Result<ConformancePair>,
+) -> Result<()> {
+    let chain = OpChain::parse(spec)
+        .map_err(|e| anyhow::anyhow!("[{name}] spec {spec:?}: {e}"))?;
+    // Chains rejected for f32 (delta) run on the integer variable.
+    let integer = chain.validate_for(Datatype::F32).is_err();
+    if integer {
+        chain
+            .validate_for(Datatype::U64)
+            .map_err(|e| anyhow::anyhow!("[{name}] spec {spec:?}: {e}"))?;
+    }
+    // Per-element relative tolerance: 0 for lossless chains.
+    let mut tol = 0.0f32;
+    for s in chain.specs() {
+        if let OpSpec::ZfpLite { keep_bits } = s {
+            tol = tol.max(2.0f32.powi(1 - *keep_bits as i32));
+        }
+    }
+
+    let pair = make()
+        .with_context(|| format!("[{name}] {spec}: opening pair"))?;
+    let mut writer = pair.writer;
+    ops_write_phase(writer.as_mut(), &chain, integer)
+        .with_context(|| format!("[{name}] {spec}: write phase"))?;
+
+    let mut reader = (pair.open_reader)()
+        .with_context(|| format!("[{name}] {spec}: opening reader"))?;
+    let close_thread = std::thread::spawn(move || -> Result<()> {
+        writer.close()
+    });
+    let read_result =
+        ops_read_phase(reader.as_mut(), &chain, integer, tol)
+            .with_context(|| format!("[{name}] {spec}: read phase"));
+    reader.close().ok();
+    close_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("[{name}] writer close panicked"))?
+        .with_context(|| format!("[{name}] {spec}: writer close"))?;
+    read_result
+}
+
+fn ops_payload_int(offset: u64, len: u64) -> Vec<u64> {
+    (0..len).map(|i| 1_000_000 + (offset + i) * 7).collect()
+}
+
+fn ops_write_phase(
+    w: &mut dyn Engine,
+    chain: &OpChain,
+    integer: bool,
+) -> Result<()> {
+    let dtype = if integer { Datatype::U64 } else { Datatype::F32 };
+    let plain = VarDecl::new(VAR_PLAIN, dtype, vec![N]);
+    let coded = VarDecl::new(VAR_CODED, dtype, vec![N])
+        .with_ops(chain.clone());
+    let hp = w.define_variable(&plain)?;
+    let hc = w.define_variable(&coded)?;
+    if w.begin_step()? != StepStatus::Ok {
+        bail!("writer begin_step must be Ok");
+    }
+    for (chunk, offset) in [(lo_chunk(), 0u64), (hi_chunk(), N / 2)] {
+        let bytes = if integer {
+            cast::u64_to_bytes(&ops_payload_int(offset, N / 2))
+        } else {
+            cast::f32_to_bytes(&pattern(3, offset, N / 2))
+        };
+        w.put_deferred(&hp, chunk.clone(), bytes.clone())?;
+        w.put_deferred(&hc, chunk, bytes)?;
+    }
+    w.end_step()?;
+    Ok(())
+}
+
+fn ops_read_phase(
+    r: &mut dyn Engine,
+    chain: &OpChain,
+    integer: bool,
+    tol: f32,
+) -> Result<()> {
+    wait_step(r)?;
+    // The stream/file self-describes the chain.
+    let vars = r.available_variables();
+    let coded_info = vars
+        .iter()
+        .find(|v| v.name == VAR_CODED)
+        .ok_or_else(|| anyhow::anyhow!("coded variable not announced"))?;
+    if &coded_info.ops != chain {
+        bail!(
+            "announced chain {:?} != declared {:?}",
+            coded_info.ops.to_string(),
+            chain.to_string()
+        );
+    }
+    let plain_info = vars
+        .iter()
+        .find(|v| v.name == VAR_PLAIN)
+        .ok_or_else(|| anyhow::anyhow!("plain variable not announced"))?;
+    if !plain_info.ops.is_identity() {
+        bail!("identity variable grew a chain: {:?}",
+              plain_info.ops.to_string());
+    }
+
+    // Whole (spans chunks), aligned (exact chunk), misaligned.
+    for sel in selections() {
+        let want = r.get(VAR_PLAIN, sel.clone())?;
+        let got = r.get(VAR_CODED, sel.clone())?;
+        if chain.is_lossless() {
+            if *got != *want {
+                bail!(
+                    "lossless chain output differs from identity on \
+                     selection {:?}+{:?} ({} vs {} bytes)",
+                    sel.offset, sel.extent, got.len(), want.len()
+                );
+            }
+        } else if integer {
+            bail!("lossy chains are float-only (validation hole)");
+        } else {
+            let want = cast::bytes_to_f32(&want)?;
+            let got = cast::bytes_to_f32(&got)?;
+            if want.len() != got.len() {
+                bail!("lossy chain changed the element count");
+            }
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                if (a - b).abs() > a.abs() * tol + 1e-6 {
+                    bail!(
+                        "element {i} outside zfp tolerance: {a} vs {b} \
+                         (tol {tol})"
+                    );
+                }
+            }
+        }
+    }
+    r.end_step()?;
+    match r.begin_step()? {
+        StepStatus::EndOfStream => Ok(()),
+        other => bail!("expected EndOfStream, got {other:?}"),
     }
 }
 

@@ -18,6 +18,7 @@ use crate::adios::engine::{
     Bytes, Engine, GetHandle, Mode, StepStatus, VarDecl, VarHandle,
     VarInfo,
 };
+use crate::adios::ops::OpsReport;
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::Attribute;
 
@@ -181,6 +182,10 @@ impl<E: Engine> Engine for InjectedEngine<E> {
 
     fn close(&mut self) -> Result<()> {
         self.inner.close()
+    }
+
+    fn ops_report(&self) -> OpsReport {
+        self.inner.ops_report()
     }
 }
 

@@ -64,6 +64,84 @@ pub fn parse_bytes(s: &str) -> Result<u64, String> {
     Ok((value * mult as f64).round() as u64)
 }
 
+// ---------------------------------------------------------------------
+// base64 (standard alphabet, padded) — used by the JSON engine to store
+// operator-compressed payloads; hand-rolled because this environment
+// builds fully offline.
+// ---------------------------------------------------------------------
+
+const B64_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 with padding.
+pub fn b64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity((data.len() + 2) / 3 * 4);
+    for group in data.chunks(3) {
+        let b0 = group[0] as u32;
+        let b1 = *group.get(1).unwrap_or(&0) as u32;
+        let b2 = *group.get(2).unwrap_or(&0) as u32;
+        let n = (b0 << 16) | (b1 << 8) | b2;
+        out.push(B64_ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(B64_ALPHABET[(n >> 12) as usize & 63] as char);
+        if group.len() > 1 {
+            out.push(B64_ALPHABET[(n >> 6) as usize & 63] as char);
+        } else {
+            out.push('=');
+        }
+        if group.len() > 2 {
+            out.push(B64_ALPHABET[n as usize & 63] as char);
+        } else {
+            out.push('=');
+        }
+    }
+    out
+}
+
+fn b64_value(c: u8) -> Result<u32, String> {
+    Ok(match c {
+        b'A'..=b'Z' => (c - b'A') as u32,
+        b'a'..=b'z' => (c - b'a') as u32 + 26,
+        b'0'..=b'9' => (c - b'0') as u32 + 52,
+        b'+' => 62,
+        b'/' => 63,
+        other => {
+            return Err(format!("invalid base64 byte {:?}",
+                               other as char))
+        }
+    })
+}
+
+/// Decode standard padded base64.
+pub fn b64_decode(s: &str) -> Result<Vec<u8>, String> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(format!(
+            "base64 length {} is not a multiple of 4", bytes.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (gi, group) in bytes.chunks_exact(4).enumerate() {
+        let last = gi == bytes.len() / 4 - 1;
+        let pad = group.iter().rev().take_while(|&&c| c == b'=').count();
+        if pad > 2 || (pad > 0 && !last) {
+            return Err("misplaced base64 padding".into());
+        }
+        let mut n = 0u32;
+        for &c in &group[..4 - pad] {
+            n = (n << 6) | b64_value(c)?;
+        }
+        n <<= 6 * pad as u32;
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,5 +176,34 @@ mod tests {
     #[test]
     fn rate_formatting() {
         assert_eq!(fmt_rate(4.15 * TIB as f64), "4.15 TiB/s");
+    }
+
+    #[test]
+    fn base64_known_vectors() {
+        assert_eq!(b64_encode(b""), "");
+        assert_eq!(b64_encode(b"f"), "Zg==");
+        assert_eq!(b64_encode(b"fo"), "Zm8=");
+        assert_eq!(b64_encode(b"foo"), "Zm9v");
+        assert_eq!(b64_encode(b"foobar"), "Zm9vYmFy");
+        assert_eq!(b64_decode("Zm9vYmFy").unwrap(), b"foobar");
+        assert_eq!(b64_decode("").unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn base64_round_trips_all_byte_values() {
+        for len in [0usize, 1, 2, 3, 4, 255, 256, 1000] {
+            let data: Vec<u8> =
+                (0..len).map(|i| (i * 37 % 256) as u8).collect();
+            assert_eq!(b64_decode(&b64_encode(&data)).unwrap(), data,
+                       "len {len}");
+        }
+    }
+
+    #[test]
+    fn base64_rejects_garbage() {
+        assert!(b64_decode("Zm9").is_err()); // bad length
+        assert!(b64_decode("Z###").is_err()); // bad alphabet
+        assert!(b64_decode("Zg==Zg==").is_err()); // interior padding
+        assert!(b64_decode("====").is_err()); // all padding
     }
 }

@@ -10,6 +10,7 @@ use std::time::Duration;
 use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
 use openpmd_stream::adios::engine::{cast, Engine, StepStatus, VarDecl};
 use openpmd_stream::adios::json::{JsonReader, JsonWriter};
+use openpmd_stream::adios::ops::OpChain;
 use openpmd_stream::adios::sst::{
     QueueConfig, QueueFullPolicy, SstReader, SstReaderOptions, SstWriter,
     SstWriterOptions,
@@ -17,13 +18,26 @@ use openpmd_stream::adios::sst::{
 use openpmd_stream::openpmd::chunk::Chunk;
 use openpmd_stream::openpmd::types::Datatype;
 use openpmd_stream::testing::engine_conformance::{
-    run_conformance, ConformancePair,
+    run_conformance, run_operator_conformance, ConformancePair,
 };
 
 fn tmp(name: &str) -> PathBuf {
     std::env::temp_dir()
         .join(format!("opmd-conf-{name}-{}", std::process::id()))
 }
+
+/// Every codec chain the operator axis runs against every backend:
+/// the lossless set must be byte-identical to the identity chain, the
+/// zfp-lite set within tolerance, and the delta set runs on u64 data.
+const OPS_CHAINS: [&str; 7] = [
+    "shuffle",
+    "rle",
+    "shuffle|rle",
+    "zfp:16",
+    "zfp:16|shuffle|rle",
+    "delta",
+    "delta|rle",
+];
 
 #[test]
 fn bp_engine_conforms() {
@@ -93,6 +107,7 @@ fn sst_conformance(transport: &str) {
                     rank: 0,
                     hostname: "conf".into(),
                     begin_step_timeout: Duration::from_secs(30),
+                    codecs: None,
                 })?) as Box<dyn Engine>)
             }),
         })
@@ -108,6 +123,164 @@ fn sst_inproc_engine_conforms() {
 #[test]
 fn sst_tcp_engine_conforms() {
     sst_conformance("tcp");
+}
+
+// =====================================================================
+// Operator axis: every chain × every backend
+// =====================================================================
+
+#[test]
+fn bp_engine_operator_conformance() {
+    for (i, spec) in OPS_CHAINS.iter().enumerate() {
+        let path = tmp(&format!("bp-ops-{i}"));
+        let path2 = path.clone();
+        run_operator_conformance("bp", spec, move || {
+            let writer = BpWriter::create(&path2, WriterCtx {
+                rank: 0,
+                hostname: "conf".into(),
+            })?;
+            let rpath = path2.clone();
+            Ok(ConformancePair {
+                writer: Box::new(writer),
+                open_reader: Box::new(move || {
+                    Ok(Box::new(BpReader::open(&rpath)?)
+                        as Box<dyn Engine>)
+                }),
+            })
+        })
+        .unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn json_engine_operator_conformance() {
+    for (i, spec) in OPS_CHAINS.iter().enumerate() {
+        let dir = tmp(&format!("json-ops-{i}"));
+        std::fs::remove_dir_all(&dir).ok();
+        let dir2 = dir.clone();
+        run_operator_conformance("json", spec, move || {
+            let writer = JsonWriter::create(&dir2, 0, "conf")?;
+            let rdir = dir2.clone();
+            Ok(ConformancePair {
+                writer: Box::new(writer),
+                open_reader: Box::new(move || {
+                    Ok(Box::new(JsonReader::open(&rdir)?)
+                        as Box<dyn Engine>)
+                }),
+            })
+        })
+        .unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+fn sst_operator_conformance(transport: &str) {
+    for (i, spec) in OPS_CHAINS.iter().enumerate() {
+        let transport_owned = transport.to_string();
+        run_operator_conformance(
+            &format!("sst:{transport}"),
+            spec,
+            move || {
+                let writer = SstWriter::open(SstWriterOptions {
+                    listen: if transport_owned == "inproc" {
+                        format!("confops-{transport_owned}-{i}-{}",
+                                std::process::id())
+                    } else {
+                        String::new()
+                    },
+                    transport: transport_owned.clone(),
+                    rank: 0,
+                    hostname: "conf".into(),
+                    queue: QueueConfig {
+                        policy: QueueFullPolicy::Block,
+                        limit: 8,
+                    },
+                    ..Default::default()
+                })?;
+                let addr = writer.address();
+                let transport = transport_owned.clone();
+                Ok(ConformancePair {
+                    writer: Box::new(writer),
+                    open_reader: Box::new(move || {
+                        Ok(Box::new(SstReader::open(SstReaderOptions {
+                            writers: vec![addr],
+                            transport,
+                            rank: 0,
+                            hostname: "conf".into(),
+                            begin_step_timeout: Duration::from_secs(30),
+                            ..Default::default()
+                        })?) as Box<dyn Engine>)
+                    }),
+                })
+            },
+        )
+        .unwrap();
+    }
+}
+
+#[test]
+fn sst_inproc_operator_conformance() {
+    sst_operator_conformance("inproc");
+}
+
+#[test]
+fn sst_tcp_operator_conformance() {
+    sst_operator_conformance("tcp");
+}
+
+/// Operator negotiation: a reader that advertises NO codecs still reads
+/// an operated stream correctly — the writer decodes on its side and
+/// serves raw bytes instead of failing the stream.
+#[test]
+fn sst_codec_less_reader_gets_raw_fallback() {
+    let chain = OpChain::parse("shuffle|rle").unwrap();
+    let mut writer = SstWriter::open(SstWriterOptions {
+        listen: format!("conf-nego-{}", std::process::id()),
+        transport: "inproc".into(),
+        rank: 0,
+        hostname: "conf".into(),
+        queue: QueueConfig { policy: QueueFullPolicy::Block, limit: 8 },
+        ..Default::default()
+    })
+    .unwrap();
+    let decl = VarDecl::new("/data/0/x", Datatype::F32, vec![16])
+        .with_ops(chain);
+    let h = writer.define_variable(&decl).unwrap();
+    let xs: Vec<f32> = (0..16).map(|i| i as f32 * 0.5).collect();
+    assert_eq!(writer.begin_step().unwrap(), StepStatus::Ok);
+    writer
+        .put_deferred(&h, Chunk::whole(vec![16]), cast::f32_to_bytes(&xs))
+        .unwrap();
+    writer.end_step().unwrap();
+
+    let addr = writer.address();
+    let mut reader = SstReader::open(SstReaderOptions {
+        writers: vec![addr],
+        transport: "inproc".into(),
+        rank: 0,
+        hostname: "conf".into(),
+        begin_step_timeout: Duration::from_secs(30),
+        codecs: Some(Vec::new()), // understands no codecs at all
+    })
+    .unwrap();
+    let close_thread = std::thread::spawn(move || writer.close());
+    loop {
+        match reader.begin_step().unwrap() {
+            StepStatus::Ok => break,
+            StepStatus::NotReady => {
+                std::thread::sleep(Duration::from_millis(5))
+            }
+            other => panic!("expected a step, got {other:?}"),
+        }
+    }
+    let whole = reader.get("/data/0/x", Chunk::whole(vec![16])).unwrap();
+    assert_eq!(cast::bytes_to_f32(&whole).unwrap(), xs);
+    // The fallback means the reader decoded nothing itself.
+    assert_eq!(reader.ops_report().chunks_decoded, 0);
+    reader.end_step().unwrap();
+    reader.close().unwrap();
+    close_thread.join().unwrap().unwrap();
 }
 
 /// SST Discard policy: a discarded step's deferred queue is dropped

@@ -54,6 +54,7 @@ fn two_round_robin_instances_forward_disjoint_complete_union() {
             max_steps: None,
             idle_timeout: Duration::from_secs(10),
             depth: 0,
+            operators: None,
         };
         let report = run_pipe(&mut input, &mut output, opts).unwrap();
         assert_eq!(report.steps, steps);
@@ -216,6 +217,7 @@ fn staged_max_steps_over_quiet_stream_returns_promptly() {
         rank: 0,
         hostname: "n0".into(),
         begin_step_timeout: Duration::from_millis(50),
+        codecs: None,
     })
     .unwrap();
     let dst = tmp("quiet-dst.bp");

@@ -35,6 +35,7 @@ fn reader_opts(transport: &str, writers: Vec<String>) -> SstReaderOptions {
         rank: 0,
         hostname: "localhost".into(),
         begin_step_timeout: Duration::from_secs(20),
+        codecs: None,
     }
 }
 
@@ -496,6 +497,7 @@ fn failed_batch_poisons_handles_with_the_batch_error() {
                 name: "/x".into(),
                 dtype: Datatype::F32,
                 shape: vec![4],
+                ops: Default::default(),
                 chunks: vec![WrittenChunkInfo::new(
                     Chunk::whole(vec![4]), 0, "fake")],
             }],
