@@ -8,13 +8,17 @@
 //!   * SST+BP (file)      — the pipe's asynchronous file phase.
 
 use openpmd_stream::bench::fig6::{simulate, Fig6Params, Setup};
-use openpmd_stream::bench::Table;
+use openpmd_stream::bench::{smoke_mode, Table};
 use openpmd_stream::pipeline::metrics::OpKind;
 use openpmd_stream::util::bytes::fmt_rate;
+use openpmd_stream::util::cli::Args;
 
 fn main() {
-    let nodes_sweep = [64usize, 128, 256, 512];
-    let reps = 3;
+    let args = Args::from_env(false).unwrap_or_default();
+    let smoke = smoke_mode(&args, "FIG6_SMOKE");
+    let nodes_sweep: &[usize] =
+        if smoke { &[64] } else { &[64, 128, 256, 512] };
+    let reps = if smoke { 1 } else { 3 };
 
     let mut fig = Table::new(
         "Fig 6: perceived total throughput (3 repetitions each)",
@@ -32,7 +36,7 @@ fn main() {
           "SST plugin"],
     );
 
-    for &nodes in &nodes_sweep {
+    for &nodes in nodes_sweep {
         let mut bp_dumps = Vec::new();
         let mut sst_dumps = Vec::new();
         let mut sst_disc = Vec::new();

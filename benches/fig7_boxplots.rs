@@ -4,13 +4,17 @@
 //! three repetitions (the paper's plotting convention).
 
 use openpmd_stream::bench::fig6::{simulate, Fig6Params, Setup};
-use openpmd_stream::bench::Table;
+use openpmd_stream::bench::{smoke_mode, Table};
 use openpmd_stream::pipeline::metrics::OpKind;
+use openpmd_stream::util::cli::Args;
 use openpmd_stream::util::stats::boxplot;
 
 fn main() {
-    let nodes_sweep = [64usize, 128, 256, 512];
-    let reps = 3;
+    let args = Args::from_env(false).unwrap_or_default();
+    let smoke = smoke_mode(&args, "FIG7_SMOKE");
+    let nodes_sweep: &[usize] =
+        if smoke { &[64] } else { &[64, 128, 256, 512] };
+    let reps = if smoke { 1 } else { 3 };
 
     let mut t = Table::new(
         "Fig 7: write/load time distributions [s] (3 reps pooled)",
@@ -18,7 +22,7 @@ fn main() {
           "max", "outliers"],
     );
 
-    for &nodes in &nodes_sweep {
+    for &nodes in nodes_sweep {
         let mut bp_times = Vec::new();
         let mut stream_times = Vec::new();
         for rep in 0..reps {

@@ -23,7 +23,7 @@ use std::time::Duration;
 
 use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
 use openpmd_stream::bench::fig8::{simulate, Fig8Params};
-use openpmd_stream::bench::Table;
+use openpmd_stream::bench::{smoke_mode, Table};
 use openpmd_stream::cluster::network::TransportKind;
 use openpmd_stream::pipeline::metrics::OpKind;
 use openpmd_stream::pipeline::pipe::{run, PipeOptions};
@@ -161,11 +161,7 @@ fn staged_pipe_rows(smoke: bool) {
 
 fn main() {
     let args = Args::from_env(false).unwrap_or_default();
-    let smoke =
-        args.flag("smoke") || std::env::var("FIG8_SMOKE").is_ok();
-    if smoke {
-        println!("[smoke mode: tiny sizes]");
-    }
+    let smoke = smoke_mode(&args, "FIG8_SMOKE");
     des_sweep(smoke);
     staged_pipe_rows(smoke);
 }

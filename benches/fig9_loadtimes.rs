@@ -4,22 +4,29 @@
 //! exchange where Next-Fit sent ~2x the ideal volume to one reader).
 
 use openpmd_stream::bench::fig8::{simulate, Fig8Params};
-use openpmd_stream::bench::Table;
+use openpmd_stream::bench::{smoke_mode, Table};
 use openpmd_stream::pipeline::metrics::OpKind;
+use openpmd_stream::util::cli::Args;
 use openpmd_stream::util::stats::boxplot;
 
 fn main() {
+    let args = Args::from_env(false).unwrap_or_default();
+    let smoke = smoke_mode(&args, "FIG9_SMOKE");
+    let nodes_sweep: &[usize] =
+        if smoke { &[64] } else { &[64, 128, 256, 512] };
+    let reps = if smoke { 1 } else { 3 };
+    let scan_seeds = if smoke { 4 } else { 24 };
     let mut t = Table::new(
         "Fig 9: perceived data loading times [s], strategies (1) and (3), \
          RDMA (3 reps pooled)",
         &["nodes", "strategy", "n", "w-", "q1", "median", "q3", "w+",
           "max", "outliers"],
     );
-    for &nodes in &[64usize, 128, 256, 512] {
+    for &nodes in nodes_sweep {
         for (name, label) in [("hostname", "(1) by hostname"),
                               ("hyperslabs", "(3) hyperslabs")] {
             let mut times = Vec::new();
-            for rep in 0..3 {
+            for rep in 0..reps {
                 let run = simulate(&Fig8Params {
                     nodes,
                     strategy: name.into(),
@@ -52,7 +59,7 @@ fn main() {
     // 512 nodes, skewing that scatter plot from ~5 to ~10 minutes).
     println!("\nbinpacking worst-case scan (Next-Fit 2x bound):");
     let mut found = 0;
-    for seed in 0..24u64 {
+    for seed in 0..scan_seeds as u64 {
         let run = simulate(&Fig8Params {
             nodes: 64,
             strategy: "binpacking".into(),
@@ -64,8 +71,9 @@ fn main() {
     }
     println!(
         "  {found} reader-exchanges received >=1.9x the ideal volume \
-         across 24 seeds x 4 exchanges — the worst-case behavior \"does \
-         in practice occur\" (SS 4.3), while staying rare."
+         across {scan_seeds} seeds x 4 exchanges — the worst-case \
+         behavior \"does in practice occur\" (SS 4.3), while staying \
+         rare."
     );
     println!(
         "\npaper reference: medians ~0.9 s for both strategies at every \

@@ -18,6 +18,11 @@
 //!
 //! Acceptance bar (asserted): `shuffle|rle` on the producer's fields
 //! reaches ratio > 1.5x and the end-to-end output stays byte-identical.
+//!
+//! Emits `bench-results/BENCH_compression.json`: the compression
+//! ratios gate the CI `bench-compare` regression step; wall-clock
+//! throughput is recorded ungated (shared runners are too noisy to
+//! gate on absolutes).
 
 use std::time::{Duration, Instant};
 
@@ -27,7 +32,7 @@ use openpmd_stream::adios::sst::{
     QueueConfig, QueueFullPolicy, SstReader, SstReaderOptions, SstWriter,
     SstWriterOptions,
 };
-use openpmd_stream::bench::Table;
+use openpmd_stream::bench::{smoke_mode, BenchJson, Table};
 use openpmd_stream::openpmd::chunk::Chunk;
 use openpmd_stream::openpmd::types::Datatype;
 use openpmd_stream::producer::SyntheticProducer;
@@ -36,7 +41,7 @@ use openpmd_stream::util::cli::Args;
 
 const SEED: u64 = 2024;
 
-fn codec_micro(smoke: bool) {
+fn codec_micro(smoke: bool, json: &mut BenchJson) {
     let particles: usize = if smoke { 1 << 12 } else { 1 << 17 };
     let mut producer =
         SyntheticProducer::new(0, particles, 0, particles as u64, SEED);
@@ -111,6 +116,7 @@ fn codec_micro(smoke: bool) {
         shuffle_rle_ratio > 1.5,
         "ACCEPTANCE: shuffle|rle ratio {shuffle_rle_ratio:.2} <= 1.5"
     );
+    json.gauge("shuffle_rle_ratio", shuffle_rle_ratio, true);
     println!(
         "\nacceptance: shuffle|rle ratio {shuffle_rle_ratio:.2}x > 1.5x \
          on the producer's fields — OK"
@@ -189,7 +195,7 @@ fn stream_once(
     (raw_bytes, wire_bytes, wall, output)
 }
 
-fn end_to_end_sst_tcp(smoke: bool) {
+fn end_to_end_sst_tcp(smoke: bool, json: &mut BenchJson) {
     let steps: u64 = if smoke { 2 } else { 4 };
     let particles: usize = if smoke { 1 << 12 } else { 1 << 16 };
 
@@ -217,6 +223,14 @@ fn end_to_end_sst_tcp(smoke: bool) {
                 identity_output = Some(want);
             }
         }
+        if spec == "shuffle|rle" {
+            json.gauge("e2e_shuffle_rle_wire_ratio",
+                       raw as f64 / wire.max(1) as f64, true);
+            json.info("e2e_shuffle_rle_bytes_per_s", raw as f64 / wall);
+        }
+        if spec == "identity" {
+            json.info("e2e_identity_bytes_per_s", raw as f64 / wall);
+        }
         t.row(vec![
             spec.into(),
             fmt_bytes(raw),
@@ -237,11 +251,12 @@ fn end_to_end_sst_tcp(smoke: bool) {
 
 fn main() {
     let args = Args::from_env(false).unwrap_or_default();
-    let smoke =
-        args.flag("smoke") || std::env::var("FIGC_SMOKE").is_ok();
-    if smoke {
-        println!("[smoke mode: tiny sizes]");
+    let smoke = smoke_mode(&args, "FIGC_SMOKE");
+    let mut json = BenchJson::new("compression");
+    codec_micro(smoke, &mut json);
+    end_to_end_sst_tcp(smoke, &mut json);
+    match json.save() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => println!("\nBENCH_compression.json not written: {e}"),
     }
-    codec_micro(smoke);
-    end_to_end_sst_tcp(smoke);
 }

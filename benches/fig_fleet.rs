@@ -1,0 +1,169 @@
+//! **fig_fleet**: aggregate fleet throughput vs reader count M and
+//! distribution strategy, over a live N=2-writer SST stream with a
+//! deliberately skewed chunk table.
+//!
+//! Each writer rank publishes one 8x-skewed chunk plus three small
+//! ones per step (the load-imbalanced-producer shape of §4.3), so a
+//! strategy that ignores sizes (RoundRobin) piles both 8x chunks onto
+//! one reader while the cost-aware LoadBalanced (LPT over announced
+//! staged bytes) gives each its own rank. The sweep reports aggregate
+//! forwarded throughput, per-rank byte loads and the max/mean
+//! imbalance from the fleet's [`FleetReport`] straggler accounting.
+//!
+//! Acceptance bar (asserted): at M = 4, LoadBalanced's max-rank bytes
+//! <= RoundRobin's on the skewed table, and every cell forwards the
+//! complete byte volume (union conservation).
+//!
+//! Emits `bench-results/BENCH_fleet.json` (shared [`BenchJson`]
+//! format): structural metrics (imbalance, LB/RR max-byte ratio) are
+//! gated by the CI `bench-compare` step; absolute throughput is
+//! recorded ungated. `--smoke` (or `FIGF_SMOKE=1`) shrinks sizes.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use openpmd_stream::adios::engine::Engine;
+use openpmd_stream::adios::sst::{SstReader, SstReaderOptions};
+use openpmd_stream::bench::{smoke_mode, BenchJson, Table};
+use openpmd_stream::distribution::{by_name, Strategy};
+use openpmd_stream::pipeline::fleet::{run_fleet, FleetOptions};
+use openpmd_stream::pipeline::FleetReport;
+use openpmd_stream::testing::engines::CountingSink;
+use openpmd_stream::testing::fleet_conformance::spawn_skewed_sst_writers;
+use openpmd_stream::util::bytes::{fmt_bytes, fmt_rate};
+use openpmd_stream::util::cli::Args;
+
+const WRITERS: usize = 2;
+/// Per-writer chunk sizes in units of `k` elements: one 8x straggler
+/// chunk plus three small ones.
+const SKEW: [u64; 4] = [8, 1, 1, 1];
+
+fn per_writer_elems(k: u64) -> u64 {
+    SKEW.iter().sum::<u64>() * k
+}
+
+/// Run one (M, strategy) fleet cell over a fresh stream. The writers
+/// come from the fleet-conformance harness's shared fixture, so the
+/// bench exercises exactly the staging contract the test suite proves.
+fn fleet_cell(
+    case: &str,
+    readers: usize,
+    strategy_name: &str,
+    steps: u64,
+    k: u64,
+) -> FleetReport {
+    let (addrs, producer_threads) = spawn_skewed_sst_writers(
+        case,
+        WRITERS,
+        steps,
+        SKEW.iter().map(|f| f * k).collect(),
+        "/data/0/x",
+    )
+    .expect("spawn skewed writers");
+    let mut inputs: Vec<Box<dyn Engine>> = Vec::with_capacity(readers);
+    let mut outputs: Vec<Box<dyn Engine>> = Vec::with_capacity(readers);
+    for rank in 0..readers {
+        inputs.push(Box::new(
+            SstReader::open(SstReaderOptions {
+                writers: addrs.clone(),
+                transport: "inproc".into(),
+                rank,
+                hostname: "localhost".into(),
+                begin_step_timeout: Duration::from_secs(30),
+                codecs: None,
+            })
+            .expect("open fleet reader"),
+        ));
+        outputs.push(Box::new(CountingSink::new()));
+    }
+    let strategy: Arc<dyn Strategy> =
+        Arc::from(by_name(strategy_name).unwrap());
+    let mut opts = FleetOptions::local(readers, strategy).unwrap();
+    opts.idle_timeout = Duration::from_secs(30);
+    let report = run_fleet(inputs, outputs, opts).expect("fleet run");
+    for t in producer_threads {
+        t.join().expect("producer thread");
+    }
+    report
+}
+
+fn main() {
+    let args = Args::from_env(false).unwrap_or_default();
+    let smoke = smoke_mode(&args, "FIGF_SMOKE");
+    let steps: u64 = if smoke { 3 } else { 8 };
+    let k: u64 = if smoke { 1 << 10 } else { 1 << 14 };
+    let step_bytes = WRITERS as u64 * per_writer_elems(k) * 4;
+
+    let mut t = Table::new(
+        "fig_fleet: N=2 skewed SST writers -> M-reader fleet \
+         (per-step table: 2 x [8k,k,k,k] chunks)",
+        &["M", "strategy", "steps", "aggregate", "max rank",
+          "mean rank", "imbalance"],
+    );
+
+    let mut json = BenchJson::new("fleet");
+    let mut rr_m4_max = 0u64;
+    let mut lb_m4_max = u64::MAX;
+    for &readers in &[1usize, 2, 4] {
+        for strategy in ["roundrobin", "binpacking", "loadbalanced"] {
+            let case = format!("m{readers}-{strategy}");
+            let report = fleet_cell(&case, readers, strategy, steps, k);
+            assert_eq!(report.steps(), steps,
+                       "{case}: fleet lost steps");
+            assert_eq!(
+                report.total_bytes_in(),
+                steps * step_bytes,
+                "{case}: union does not conserve the stream's bytes"
+            );
+            if readers == 4 && strategy == "roundrobin" {
+                rr_m4_max = report.max_rank_bytes();
+                json.gauge("m4_roundrobin_imbalance",
+                           report.imbalance(), false);
+            }
+            if readers == 4 && strategy == "loadbalanced" {
+                lb_m4_max = report.max_rank_bytes();
+                json.gauge("m4_loadbalanced_imbalance",
+                           report.imbalance(), false);
+                json.info("m4_loadbalanced_bytes_per_s",
+                          report.aggregate_rate());
+            }
+            if readers == 1 && strategy == "roundrobin" {
+                json.info("m1_bytes_per_s", report.aggregate_rate());
+            }
+            t.row(vec![
+                readers.to_string(),
+                strategy.into(),
+                report.steps().to_string(),
+                fmt_rate(report.aggregate_rate()),
+                fmt_bytes(report.max_rank_bytes()),
+                fmt_bytes(report.mean_rank_bytes() as u64),
+                format!("{:.2}x", report.imbalance()),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    t.save_csv("fig_fleet").ok();
+
+    // ACCEPTANCE: the cost-aware strategy must not straggle worse than
+    // dealing blind on a skewed table.
+    assert!(
+        lb_m4_max <= rr_m4_max,
+        "ACCEPTANCE: LoadBalanced max-rank bytes {lb_m4_max} > \
+         RoundRobin {rr_m4_max} on the skewed table"
+    );
+    json.gauge(
+        "lb_over_rr_max_rank_bytes",
+        lb_m4_max as f64 / rr_m4_max.max(1) as f64,
+        false,
+    );
+    match json.save() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => println!("\nBENCH_fleet.json not written: {e}"),
+    }
+    println!(
+        "acceptance: LoadBalanced max-rank bytes {} <= RoundRobin {} \
+         at M=4 — OK",
+        fmt_bytes(lb_m4_max),
+        fmt_bytes(rr_m4_max)
+    );
+}

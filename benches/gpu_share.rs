@@ -9,8 +9,9 @@
 //! with K = 315 s at the 3+3 split. The analysis-paced output period is
 //! the smallest multiple of 100 simulation steps covering T_gapd.
 
-use openpmd_stream::bench::Table;
+use openpmd_stream::bench::{smoke_mode, Table};
 use openpmd_stream::cluster::network::workload;
+use openpmd_stream::util::cli::Args;
 
 fn scatter_period(writer_gpus: usize, reader_gpus: usize) -> (f64, u64) {
     let t_gapd = workload::GAPD_COMPUTE_3GPU * (writer_gpus as f64 / 3.0)
@@ -22,6 +23,10 @@ fn scatter_period(writer_gpus: usize, reader_gpus: usize) -> (f64, u64) {
 }
 
 fn main() {
+    // Closed-form model, already instant: --smoke is accepted for
+    // harness uniformity but changes nothing.
+    let args = Args::from_env(false).unwrap_or_default();
+    let _ = smoke_mode(&args, "GPU_SHARE_SMOKE");
     let mut t = Table::new(
         "SS 4.3: GPU-share shift on a 6-GPU node (PIConGPU + GAPD)",
         &["PIConGPU GPUs", "GAPD GPUs", "GAPD time/plot [s]",

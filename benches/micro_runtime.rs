@@ -7,11 +7,20 @@
 use std::time::Duration;
 
 use openpmd_stream::analysis::saxs::{SaxsAnalyzer, BATCH_ATOMS, N_Q};
-use openpmd_stream::bench::{bench_loop, Table};
+use openpmd_stream::bench::{bench_loop, smoke_mode, Table};
 use openpmd_stream::runtime::Runtime;
+use openpmd_stream::util::cli::Args;
 use openpmd_stream::util::rng::Rng;
 
 fn main() {
+    let args = Args::from_env(false).unwrap_or_default();
+    let smoke = smoke_mode(&args, "MICRO_RUNTIME_SMOKE");
+    let (warmup, iters) = if smoke { (1, 3) } else { (3, 10) };
+    let budget = if smoke {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(1)
+    };
     let rt = match Runtime::load_default() {
         Ok(rt) => rt,
         Err(e) => {
@@ -32,7 +41,7 @@ fn main() {
             (0..BATCH_ATOMS * 3).map(|_| rng.f32() * 64.0).collect();
         let w: Vec<f32> = (0..BATCH_ATOMS).map(|_| rng.f32()).collect();
         let q_t = SaxsAnalyzer::polar_q_grid(2.0, N_Q);
-        let r = bench_loop("saxs", 3, 10, Duration::from_secs(1), || {
+        let r = bench_loop("saxs", warmup, iters, budget, || {
             std::hint::black_box(
                 exec.run_f32(&[&pos, &w, &q_t]).unwrap());
         });
@@ -68,7 +77,7 @@ fn main() {
         let mom: Vec<f32> =
             (0..n * 3).map(|_| rng.f32() - 0.5).collect();
         let fields = vec![0.01f32; g * g * 3];
-        let r = bench_loop("pic_step", 3, 10, Duration::from_secs(1), || {
+        let r = bench_loop("pic_step", warmup, iters, budget, || {
             std::hint::black_box(
                 exec.run_f32(&[&pos, &mom, &fields, &fields]).unwrap());
         });
@@ -87,7 +96,7 @@ fn main() {
         let mom: Vec<f32> =
             (0..n * 3).map(|_| rng.f32() - 0.5).collect();
         let w = vec![1.0f32; n];
-        let r = bench_loop("binning", 3, 10, Duration::from_secs(1), || {
+        let r = bench_loop("binning", warmup, iters, budget, || {
             std::hint::black_box(exec.run_f32(&[&mom, &w]).unwrap());
         });
         t.row(vec![

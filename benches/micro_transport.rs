@@ -14,10 +14,11 @@ use openpmd_stream::adios::sst::{
     QueueConfig, QueueFullPolicy, SstReader, SstReaderOptions, SstWriter,
     SstWriterOptions,
 };
-use openpmd_stream::bench::Table;
+use openpmd_stream::bench::{smoke_mode, Table};
 use openpmd_stream::openpmd::chunk::Chunk;
 use openpmd_stream::openpmd::types::Datatype;
 use openpmd_stream::util::bytes::{fmt_bytes, fmt_rate, MIB};
+use openpmd_stream::util::cli::Args;
 
 const STEPS: u64 = 12;
 
@@ -121,12 +122,15 @@ fn bp_throughput(chunk_mib: u64) -> (f64, f64) {
 }
 
 fn main() {
+    let args = Args::from_env(false).unwrap_or_default();
+    let smoke = smoke_mode(&args, "MICRO_TRANSPORT_SMOKE");
+    let sweep: &[u64] = if smoke { &[1, 16] } else { &[1, 16, 64, 256] };
     let mut t = Table::new(
         "M2: measured single-pair transport throughput (12 steps)",
         &["chunk", "SST inproc (zero-copy)", "SST tcp", "BP write",
           "BP read"],
     );
-    for &chunk_mib in &[1u64, 16, 64, 256] {
+    for &chunk_mib in sweep {
         let inproc = sst_throughput("inproc", chunk_mib);
         let tcp = sst_throughput("tcp", chunk_mib);
         let (bp_w, bp_r) = bp_throughput(chunk_mib);

@@ -3,11 +3,16 @@
 //! dumps) and the §1.1 derived quantities (per-GPU PFS share, growth
 //! factors).
 
-use openpmd_stream::bench::Table;
+use openpmd_stream::bench::{smoke_mode, Table};
 use openpmd_stream::cluster::systems::{self, FRONTIER, SUMMIT, TITAN};
 use openpmd_stream::util::bytes::{MIB, PIB, TIB};
+use openpmd_stream::util::cli::Args;
 
 fn main() {
+    // Static table, already instant: --smoke is accepted for harness
+    // uniformity but changes nothing.
+    let args = Args::from_env(false).unwrap_or_default();
+    let _ = smoke_mode(&args, "TABLE1_SMOKE");
     let mut t = Table::new(
         "Table 1: system performance, OLCF Titan -> Frontier",
         &["system", "year", "compute [PFlop/s]", "PFS bw [TiB/s]",

@@ -143,7 +143,7 @@ fn main() -> Result<()> {
         .collect();
 
     // --- Analysis threads (readers; distribution decides the loads) --
-    let reader_layout = ReaderLayout::local(READERS);
+    let reader_layout = ReaderLayout::local(READERS).unwrap();
     let analysis_threads: Vec<_> = (0..READERS)
         .map(|rank| {
             let addrs = addrs.clone();

@@ -40,7 +40,9 @@ pub use super::engine::EngineKind;
 
 // BP02: variable metadata carries an operator chain and payload records
 // of operated variables are stored operator-framed (compressed on disk).
-const MAGIC: &[u8; 8] = b"OPMDBP02";
+// 03: chunk metadata grew the staged payload size (encoded_bytes) used
+// by cost-aware distribution strategies.
+const MAGIC: &[u8; 8] = b"OPMDBP03";
 const STEP_MARKER: u64 = 0x0053_5445_5000_0000; // "STEP"-ish sentinel
 
 /// Writer context: rank + hostname recorded into every chunk's metadata.
@@ -153,9 +155,18 @@ impl Engine for BpWriter {
             .as_mut()
             .ok_or_else(|| anyhow::anyhow!("perform_puts outside step"))?;
         for p in pending {
+            // The operator chain is applied here, in the deferred core:
+            // payload records of operated variables land on disk
+            // operator-framed (compressed), never raw.
+            let data = ops::encode_put(&p.var, &p.chunk, p.data,
+                                       &mut self.ops_stats)?;
+            // The stored size rides in the chunk metadata so readers
+            // (and cost-aware distribution strategies) know the real
+            // byte footprint without opening the record.
             let info = WrittenChunkInfo::new(p.chunk.clone(),
                                              self.ctx.rank,
-                                             self.ctx.hostname.clone());
+                                             self.ctx.hostname.clone())
+                .with_encoded_bytes(data.len() as u64);
             match meta.vars.iter_mut().find(|v| v.name == p.var.name()) {
                 Some(vm) => vm.chunks.push(info),
                 None => meta.vars.push(VarMeta {
@@ -166,11 +177,6 @@ impl Engine for BpWriter {
                     chunks: vec![info],
                 }),
             }
-            // The operator chain is applied here, in the deferred core:
-            // payload records of operated variables land on disk
-            // operator-framed (compressed), never raw.
-            let data = ops::encode_put(&p.var, &p.chunk, p.data,
-                                       &mut self.ops_stats)?;
             payloads.push((p.var.name().to_string(), p.chunk, data));
         }
         Ok(())

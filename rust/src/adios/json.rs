@@ -296,6 +296,8 @@ impl Engine for JsonWriter {
                          Json::Num(self.rank as f64));
                 c.insert("hostname".into(),
                          Json::Str(self.hostname.clone()));
+                c.insert("encodedBytes".into(),
+                         Json::Num(data.len() as f64));
                 if handle.ops().is_identity() {
                     c.insert("data".into(),
                              data_to_json(handle.dtype(), data));
@@ -491,11 +493,14 @@ impl Engine for JsonReader {
                     .and_then(|h| h.as_str())
                     .unwrap_or("")
                     .to_string();
+                let encoded_bytes =
+                    c.get("encodedBytes").and_then(|b| b.as_u64());
                 if let (Some(offset), Some(extent)) = (offset, extent) {
                     out.push(WrittenChunkInfo {
                         chunk: Chunk { offset, extent },
                         source_rank: rank,
                         hostname,
+                        encoded_bytes,
                     });
                 }
             }

@@ -208,19 +208,6 @@ impl SstReader {
             .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))
     }
 
-    /// Dtype + operator chain of a variable in the current step.
-    fn var_coding(&self, var: &str)
-        -> Result<(crate::openpmd::types::Datatype, OpChain)>
-    {
-        self.current
-            .iter()
-            .flat_map(|c| c.metas.iter())
-            .flat_map(|m| m.vars.iter())
-            .find(|v| v.name == var)
-            .map(|v| (v.dtype, v.ops.clone()))
-            .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))
-    }
-
     /// Receive one batched reply from writer `widx`, pumping other
     /// traffic (step announces, close notices) into the pending queues.
     fn recv_batch_reply(&mut self, widx: usize, req_id: u64)
@@ -480,6 +467,47 @@ impl SstReader {
             .ok_or_else(|| anyhow::anyhow!("perform_gets outside step"))?
             .step;
 
+        // Merge each requested variable's chunk table ONCE per batch
+        // instead of once per deferred get: a fleet worker batches one
+        // slice set per variable per step, and with N writers x many
+        // slices the repeated metadata sweep was the plan-phase cost.
+        struct VarTable {
+            elem: usize,
+            dtype: crate::openpmd::types::Datatype,
+            ops: OpChain,
+            chunks: Vec<WrittenChunkInfo>,
+        }
+        let mut vars: BTreeMap<String, VarTable> = BTreeMap::new();
+        {
+            let cur = self.current.as_ref().expect("checked above");
+            for g in pending {
+                if vars.contains_key(&g.var) {
+                    continue;
+                }
+                let mut found: Option<VarTable> = None;
+                for meta in &cur.metas {
+                    for v in &meta.vars {
+                        if v.name != g.var {
+                            continue;
+                        }
+                        let t = found.get_or_insert_with(|| VarTable {
+                            elem: v.dtype.size(),
+                            dtype: v.dtype,
+                            ops: v.ops.clone(),
+                            chunks: Vec::new(),
+                        });
+                        t.chunks.extend(v.chunks.iter().cloned());
+                    }
+                }
+                match found {
+                    Some(t) => {
+                        vars.insert(g.var.clone(), t);
+                    }
+                    None => bail!("unknown variable {:?}", g.var),
+                }
+            }
+        }
+
         // Plan: for every deferred get, the (writer, intersection)
         // parts; grouped per writer into one batched request.
         struct Part {
@@ -491,10 +519,11 @@ impl SstReader {
         let mut coding = Vec::with_capacity(pending.len());
         let mut part_count = vec![0usize; pending.len()];
         for (gi, g) in pending.iter().enumerate() {
-            elem.push(self.elem_size(&g.var)?);
-            coding.push(self.var_coding(&g.var)?);
+            let vt = &vars[&g.var];
+            elem.push(vt.elem);
+            coding.push((vt.dtype, vt.ops.clone()));
             let mut covered = 0u64;
-            for info in &self.merged_chunks(&g.var) {
+            for info in &vt.chunks {
                 if let Some(inter) = info.chunk.intersect(&g.selection) {
                     covered += inter.num_elements();
                     part_count[gi] += 1;

@@ -592,11 +592,21 @@ impl Engine for SstWriter {
         let mut put_bytes = 0u64;
         let mut local_ops = OpsReport::default();
         for p in pending {
+            // Operated chunks are staged encoded: the chain runs once
+            // here, and the staging queue itself holds fewer bytes.
+            // `bytes_put` keeps counting raw produced bytes.
+            put_bytes += p.data.len() as u64;
+            let data =
+                ops::encode_put(&p.var, &p.chunk, p.data, &mut local_ops)?;
+            // Announce the staged size: readers planning a cost-aware
+            // distribution then balance the bytes that will actually
+            // cross the wire, not just element counts.
             let info = WrittenChunkInfo::new(
                 p.chunk.clone(),
                 self.opts.rank,
                 self.opts.hostname.clone(),
-            );
+            )
+            .with_encoded_bytes(data.len() as u64);
             match staged
                 .meta
                 .vars
@@ -612,12 +622,6 @@ impl Engine for SstWriter {
                     chunks: vec![info],
                 }),
             }
-            // Operated chunks are staged encoded: the chain runs once
-            // here, and the staging queue itself holds fewer bytes.
-            // `bytes_put` keeps counting raw produced bytes.
-            put_bytes += p.data.len() as u64;
-            let data =
-                ops::encode_put(&p.var, &p.chunk, p.data, &mut local_ops)?;
             staged
                 .data
                 .entry(p.var.name().to_string())

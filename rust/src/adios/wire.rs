@@ -219,6 +219,10 @@ impl StepMeta {
                 put_chunk(out, &ci.chunk);
                 put_u64(out, ci.source_rank as u64);
                 put_str(out, &ci.hostname);
+                // Staged payload size; u64::MAX = unknown (the value
+                // itself can never be a real size, the buffer could not
+                // exist).
+                put_u64(out, ci.encoded_bytes.unwrap_or(u64::MAX));
             }
         }
     }
@@ -258,7 +262,16 @@ impl StepMeta {
                 let chunk = get_chunk(r)?;
                 let source_rank = r.u64()? as usize;
                 let hostname = r.str()?;
-                chunks.push(WrittenChunkInfo { chunk, source_rank, hostname });
+                let encoded_bytes = match r.u64()? {
+                    u64::MAX => None,
+                    b => Some(b),
+                };
+                chunks.push(WrittenChunkInfo {
+                    chunk,
+                    source_rank,
+                    hostname,
+                    encoded_bytes,
+                });
             }
             vars.push(VarMeta { name, dtype, shape, ops, chunks });
         }
@@ -423,7 +436,8 @@ mod tests {
                         Chunk::new(vec![0], vec![500]),
                         2,
                         "node07",
-                    )],
+                    )
+                    .with_encoded_bytes(2000)],
                 },
                 VarMeta {
                     name: "/data/3/particles/e/position/y".into(),

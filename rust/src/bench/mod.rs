@@ -18,5 +18,5 @@ pub mod fig8;
 pub mod table;
 pub mod timing;
 
-pub use table::Table;
+pub use table::{smoke_mode, BenchJson, BenchMetric, Table};
 pub use timing::{bench_loop, BenchResult};

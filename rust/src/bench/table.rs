@@ -1,6 +1,12 @@
-//! ASCII tables + CSV emission for bench outputs.
+//! ASCII tables + CSV emission for bench outputs, the shared `--smoke`
+//! flag, and the machine-readable `BENCH_*.json` emitter consumed by
+//! the CI perf-regression gate (`tools/bench_compare.rs`).
 
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
 
 /// A simple left-aligned table with a header row.
 #[derive(Clone, Debug, Default)]
@@ -95,9 +101,162 @@ impl Table {
     }
 }
 
+// ---------------------------------------------------------------------
+// Shared bench plumbing
+// ---------------------------------------------------------------------
+
+/// The one `--smoke` convention every `benches/*.rs` main follows: the
+/// flag (or the bench's env key, e.g. `FIG8_SMOKE=1`) shrinks sizes to
+/// CI scale and announces it. Centralized so no bench grows its own
+/// variant spelling.
+pub fn smoke_mode(args: &Args, env_key: &str) -> bool {
+    let smoke = args.flag("smoke") || std::env::var(env_key).is_ok();
+    if smoke {
+        println!("[smoke mode: tiny sizes]");
+    }
+    smoke
+}
+
+/// One metric inside a [`BenchJson`] document.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BenchMetric {
+    pub value: f64,
+    /// Direction of goodness for the regression gate.
+    pub higher_is_better: bool,
+    /// Whether `bench-compare` fails the job on a regression of this
+    /// metric. Structural quantities (ratios, imbalance factors) gate;
+    /// absolute wall-clock throughput on shared CI runners is recorded
+    /// (`false`) so the trajectory stays inspectable without flaking.
+    pub gate: bool,
+}
+
+/// Machine-readable bench result: written as
+/// `bench-results/BENCH_<name>.json`, diffed against the committed
+/// `bench/baseline/BENCH_<name>.json` by the `bench-compare` CI step,
+/// and uploaded as a workflow artifact so every PR's perf trajectory
+/// is inspectable.
+#[derive(Clone, Debug, Default)]
+pub struct BenchJson {
+    pub name: String,
+    pub metrics: BTreeMap<String, BenchMetric>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> BenchJson {
+        BenchJson { name: name.to_string(), metrics: BTreeMap::new() }
+    }
+
+    /// Record a gated metric (the regression gate compares it).
+    pub fn gauge(&mut self, key: &str, value: f64,
+                 higher_is_better: bool) {
+        self.metrics.insert(
+            key.to_string(),
+            BenchMetric { value, higher_is_better, gate: true },
+        );
+    }
+
+    /// Record an ungated metric (kept for the artifact trail only).
+    pub fn info(&mut self, key: &str, value: f64) {
+        self.metrics.insert(
+            key.to_string(),
+            BenchMetric { value, higher_is_better: true, gate: false },
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut metrics = BTreeMap::new();
+        for (key, m) in &self.metrics {
+            let mut obj = BTreeMap::new();
+            obj.insert("value".to_string(), Json::Num(m.value));
+            obj.insert("higherIsBetter".to_string(),
+                       Json::Bool(m.higher_is_better));
+            obj.insert("gate".to_string(), Json::Bool(m.gate));
+            metrics.insert(key.clone(), Json::Obj(obj));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str(self.name.clone()));
+        doc.insert("metrics".to_string(), Json::Obj(metrics));
+        Json::Obj(doc)
+    }
+
+    /// Parse a document produced by [`BenchJson::to_json`] (the
+    /// `bench-compare` tool's input path).
+    pub fn from_json(doc: &Json) -> Result<BenchJson, String> {
+        let name = doc
+            .get("bench")
+            .and_then(|b| b.as_str())
+            .ok_or("missing \"bench\" name")?
+            .to_string();
+        let mut metrics = BTreeMap::new();
+        let obj = doc
+            .get("metrics")
+            .and_then(|m| m.as_obj())
+            .ok_or("missing \"metrics\" object")?;
+        for (key, m) in obj {
+            let value = m
+                .get("value")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("metric {key:?} lacks a value"))?;
+            let flag = |name: &str| -> bool {
+                matches!(m.get(name), Some(Json::Bool(true)))
+            };
+            metrics.insert(
+                key.clone(),
+                BenchMetric {
+                    value,
+                    higher_is_better: flag("higherIsBetter"),
+                    gate: flag("gate"),
+                },
+            );
+        }
+        Ok(BenchJson { name, metrics })
+    }
+
+    /// Write `bench-results/BENCH_<name>.json` (same directory as the
+    /// CSV outputs) and return the path.
+    pub fn save(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from("bench-results");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_json_round_trips() {
+        let mut b = BenchJson::new("fleet");
+        b.gauge("imbalance", 1.25, false);
+        b.info("aggregate_mibps", 812.5);
+        let doc = b.to_json();
+        let parsed = crate::util::json::parse(&doc.to_string()).unwrap();
+        let back = BenchJson::from_json(&parsed).unwrap();
+        assert_eq!(back.name, "fleet");
+        assert_eq!(back.metrics.len(), 2);
+        let im = back.metrics["imbalance"];
+        assert_eq!(im, BenchMetric {
+            value: 1.25,
+            higher_is_better: false,
+            gate: true,
+        });
+        assert!(!back.metrics["aggregate_mibps"].gate);
+    }
+
+    #[test]
+    fn bench_json_rejects_malformed_docs() {
+        for bad in [
+            "{}",
+            r#"{"bench": "x"}"#,
+            r#"{"bench": "x", "metrics": {"m": {}}}"#,
+        ] {
+            let doc = crate::util::json::parse(bad).unwrap();
+            assert!(BenchJson::from_json(&doc).is_err(), "{bad}");
+        }
+    }
 
     #[test]
     fn renders_aligned() {

@@ -107,7 +107,7 @@ mod tests {
             (37, 0, "a"), (91, 1, "a"), (5, 2, "b"), (128, 3, "b"),
             (64, 4, "c"),
         ]);
-        let readers = ReaderLayout::local(3);
+        let readers = ReaderLayout::local(3).unwrap();
         let a = Binpacking.distribute(&table, &readers);
         verify_complete(&table, &a).unwrap();
     }
@@ -119,7 +119,7 @@ mod tests {
             (90, 4, "b"), (10, 5, "b"), (60, 6, "c"),
         ]);
         for n in 1..=7 {
-            let readers = ReaderLayout::local(n);
+            let readers = ReaderLayout::local(n).unwrap();
             let a = Binpacking.distribute(&table, &readers);
             verify_complete(&table, &a).unwrap();
             let ideal = table.total_elements().div_ceil(n as u64);
@@ -137,7 +137,7 @@ mod tests {
     #[test]
     fn pieces_never_exceed_ideal() {
         let table = table_1d(&[(1000, 0, "a")]);
-        let readers = ReaderLayout::local(4);
+        let readers = ReaderLayout::local(4).unwrap();
         let a = Binpacking.distribute(&table, &readers);
         let ideal = 1000u64.div_ceil(4);
         for slices in a.per_reader.values() {
@@ -152,7 +152,8 @@ mod tests {
     fn small_chunks_stay_whole() {
         // alignment: chunks below ideal are never split.
         let table = table_1d(&[(10, 0, "a"), (20, 1, "a"), (15, 2, "b")]);
-        let a = Binpacking.distribute(&table, &ReaderLayout::local(2));
+        let a =
+            Binpacking.distribute(&table, &ReaderLayout::local(2).unwrap());
         verify_complete(&table, &a).unwrap();
         for slices in a.per_reader.values() {
             for s in slices {
@@ -168,7 +169,8 @@ mod tests {
     #[test]
     fn single_reader_takes_everything() {
         let table = table_1d(&[(10, 0, "a"), (20, 1, "b")]);
-        let a = Binpacking.distribute(&table, &ReaderLayout::local(1));
+        let a =
+            Binpacking.distribute(&table, &ReaderLayout::local(1).unwrap());
         verify_complete(&table, &a).unwrap();
         assert_eq!(a.elements_for(0), 30);
     }
@@ -184,7 +186,8 @@ mod tests {
                 "a",
             )],
         };
-        let a = Binpacking.distribute(&table, &ReaderLayout::local(4));
+        let a =
+            Binpacking.distribute(&table, &ReaderLayout::local(4).unwrap());
         verify_complete(&table, &a).unwrap();
         for slices in a.per_reader.values() {
             for s in slices {
@@ -196,7 +199,8 @@ mod tests {
     #[test]
     fn empty_table_is_fine() {
         let table = table_1d(&[]);
-        let a = Binpacking.distribute(&table, &ReaderLayout::local(3));
+        let a =
+            Binpacking.distribute(&table, &ReaderLayout::local(3).unwrap());
         assert_eq!(a.total_slices(), 0);
     }
 }

@@ -138,7 +138,7 @@ mod tests {
     fn co_scheduled_communication_stays_local() {
         // 3 writers + 3 readers per node (the paper's §4.2 layout).
         let table = co_scheduled_table(4, 3, 100);
-        let readers = ReaderLayout::nodes(4, 3);
+        let readers = ReaderLayout::nodes(4, 3).unwrap();
         let a = ByHostname::paper_default().distribute(&table, &readers);
         verify_complete(&table, &a).unwrap();
         // Every slice must be served by a writer on the reader's host.
@@ -160,7 +160,7 @@ mod tests {
     fn writer_only_nodes_use_fallback() {
         // Writers on 4 nodes, readers only on the first 2.
         let table = co_scheduled_table(4, 2, 50);
-        let readers = ReaderLayout::nodes(2, 2);
+        let readers = ReaderLayout::nodes(2, 2).unwrap();
         let a = ByHostname::paper_default().distribute(&table, &readers);
         verify_complete(&table, &a).unwrap();
         // All data still assigned, some of it off-node.
@@ -203,7 +203,7 @@ mod tests {
     #[test]
     fn respects_secondary_strategy_choice() {
         let table = co_scheduled_table(1, 4, 25);
-        let readers = ReaderLayout::nodes(1, 2);
+        let readers = ReaderLayout::nodes(1, 2).unwrap();
         let strat = ByHostname::new(
             Box::new(super::super::RoundRobin),
             Box::new(super::super::Hyperslabs),
@@ -219,7 +219,7 @@ mod tests {
     fn empty_table() {
         let table = ChunkTable { dataset_extent: vec![0], chunks: vec![] };
         let a = ByHostname::paper_default()
-            .distribute(&table, &ReaderLayout::local(2));
+            .distribute(&table, &ReaderLayout::local(2).unwrap());
         assert_eq!(a.total_slices(), 0);
     }
 }

@@ -100,7 +100,7 @@ mod tests {
         let table = table_1d(&[
             (100, 0, "a"), (100, 1, "a"), (100, 2, "b"), (100, 3, "b"),
         ]);
-        let readers = ReaderLayout::local(4);
+        let readers = ReaderLayout::local(4).unwrap();
         let a = Hyperslabs.distribute(&table, &readers);
         verify_complete(&table, &a).unwrap();
         for r in 0..4 {
@@ -114,7 +114,8 @@ mod tests {
     #[test]
     fn misaligned_cuts_split_chunks() {
         let table = table_1d(&[(10, 0, "a"), (10, 1, "a")]);
-        let a = Hyperslabs.distribute(&table, &ReaderLayout::local(3));
+        let a =
+            Hyperslabs.distribute(&table, &ReaderLayout::local(3).unwrap());
         verify_complete(&table, &a).unwrap();
         // 20 rows over 3 readers: 7, 7, 6.
         assert_eq!(a.elements_for(0), 7);
@@ -136,7 +137,8 @@ mod tests {
                     Chunk::new(vec![4, 0], vec![4, 16]), 1, "a"),
             ],
         };
-        let a = Hyperslabs.distribute(&table, &ReaderLayout::local(2));
+        let a =
+            Hyperslabs.distribute(&table, &ReaderLayout::local(2).unwrap());
         verify_complete(&table, &a).unwrap();
         assert_eq!(a.elements_for(0), 64);
         assert_eq!(a.elements_for(1), 64);
@@ -151,7 +153,8 @@ mod tests {
     #[test]
     fn more_readers_than_rows() {
         let table = table_1d(&[(3, 0, "a")]);
-        let a = Hyperslabs.distribute(&table, &ReaderLayout::local(5));
+        let a =
+            Hyperslabs.distribute(&table, &ReaderLayout::local(5).unwrap());
         verify_complete(&table, &a).unwrap();
         let nonempty = (0..5).filter(|r| a.elements_for(*r) > 0).count();
         assert_eq!(nonempty, 3);

@@ -1,0 +1,174 @@
+//! Cost-aware load-balanced distribution: Longest-Processing-Time.
+//!
+//! Deals whole written chunks like Round-Robin (perfect *alignment*),
+//! but greedily: chunks are sorted by descending byte cost and each is
+//! assigned to the currently least-loaded reader — Graham's LPT
+//! list-scheduling heuristic (1969), whose makespan is within 4/3 of
+//! optimal. The cost of a chunk is its **announced staged byte size**
+//! ([`crate::openpmd::chunk::WrittenChunkInfo::encoded_bytes`], set by
+//! every writer after its operator chain ran), so when compression is
+//! active the strategy balances the bytes that actually cross the wire,
+//! not the pre-compression element counts; without announced sizes it
+//! falls back to element counts.
+//!
+//! Compared to the paper's strategies: Binpacking bounds the worst
+//! reader at 2x ideal but cuts chunks; Round-Robin never cuts but can
+//! put every large chunk on one reader. LPT never cuts *and* tracks the
+//! loaded sizes — the right default when writers emit skewed chunks
+//! (load-balanced producers, §4.3) and readers must not straggle.
+
+use super::{Assignment, ChunkSlice, ChunkTable, ReaderLayout, Strategy};
+
+/// See module docs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadBalanced;
+
+impl Strategy for LoadBalanced {
+    fn name(&self) -> &'static str {
+        "loadbalanced"
+    }
+
+    fn distribute(&self, table: &ChunkTable, readers: &ReaderLayout)
+        -> Assignment
+    {
+        let mut out = Assignment::default();
+        if readers.is_empty() {
+            return out;
+        }
+        // Whole chunks, largest first; ties broken by table order so
+        // the assignment is deterministic for identical inputs (the
+        // fleet's shared-plan contract).
+        let mut order: Vec<(usize, ChunkSlice)> = table
+            .chunks
+            .iter()
+            .map(ChunkSlice::of)
+            .enumerate()
+            .collect();
+        order.sort_by_key(|(i, s)| (std::cmp::Reverse(s.cost), *i));
+        // Least-loaded reader per chunk (linear scan: reader counts are
+        // small; the table scan above dominates).
+        let mut load = vec![0u64; readers.len()];
+        for (_, slice) in order {
+            let (idx, _) = load
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, l)| (**l, *i))
+                .expect("non-empty layout checked above");
+            load[idx] += slice.cost;
+            out.per_reader
+                .entry(readers.ranks[idx].rank)
+                .or_default()
+                .push(slice);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::table_1d;
+    use super::super::{verify_complete, RoundRobin};
+    use super::*;
+    use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
+
+    #[test]
+    fn complete_and_whole_chunks_only() {
+        let table = table_1d(&[
+            (37, 0, "a"), (91, 1, "a"), (5, 2, "b"), (128, 3, "b"),
+            (64, 4, "c"),
+        ]);
+        let readers = ReaderLayout::local(3).unwrap();
+        let a = LoadBalanced.distribute(&table, &readers);
+        verify_complete(&table, &a).unwrap();
+        // Perfect alignment: every slice is a written chunk.
+        for slices in a.per_reader.values() {
+            for s in slices {
+                assert!(table.chunks.iter().any(
+                    |c| c.chunk == s.chunk && c.source_rank == s.source_rank
+                ));
+            }
+        }
+    }
+
+    #[test]
+    fn beats_round_robin_on_skewed_chunks() {
+        // One huge chunk plus many small ones: RoundRobin piles the big
+        // chunk and half the small ones on reader 0; LPT gives the big
+        // chunk a reader of its own.
+        let table = table_1d(&[
+            (1000, 0, "a"), (100, 1, "a"), (100, 2, "a"), (100, 3, "a"),
+            (100, 4, "a"), (100, 5, "a"),
+        ]);
+        let readers = ReaderLayout::local(2).unwrap();
+        let lpt = LoadBalanced.distribute(&table, &readers);
+        let rr = RoundRobin.distribute(&table, &readers);
+        verify_complete(&table, &lpt).unwrap();
+        assert_eq!(lpt.max_cost(&readers), 1000);
+        assert_eq!(rr.max_cost(&readers), 1000 + 2 * 100);
+        assert!(lpt.max_cost(&readers) < rr.max_cost(&readers));
+    }
+
+    #[test]
+    fn balances_announced_bytes_not_elements() {
+        // Two chunks of equal element count but 8x different staged
+        // sizes (one compressed well), plus two fillers. Balancing by
+        // elements pairs the two equal-element chunks arbitrarily;
+        // balancing by bytes must give the 8000-byte chunk its own
+        // reader.
+        let mk = |off: u64, n: u64, rank: usize, bytes: u64| {
+            WrittenChunkInfo::new(Chunk::new(vec![off], vec![n]), rank, "h")
+                .with_encoded_bytes(bytes)
+        };
+        let table = ChunkTable {
+            dataset_extent: vec![400],
+            chunks: vec![
+                mk(0, 100, 0, 8000),
+                mk(100, 100, 1, 1000),
+                mk(200, 100, 2, 1000),
+                mk(300, 100, 3, 1000),
+            ],
+        };
+        let readers = ReaderLayout::local(2).unwrap();
+        let a = LoadBalanced.distribute(&table, &readers);
+        verify_complete(&table, &a).unwrap();
+        assert_eq!(a.max_cost(&readers), 8000);
+        // The three cheap chunks share the other reader.
+        let loads: Vec<u64> =
+            (0..2).map(|r| a.cost_for(r)).collect();
+        assert!(loads.contains(&8000) && loads.contains(&3000),
+                "{loads:?}");
+    }
+
+    #[test]
+    fn deterministic_under_cost_ties() {
+        let table = table_1d(&[
+            (50, 0, "a"), (50, 1, "a"), (50, 2, "a"), (50, 3, "a"),
+        ]);
+        let readers = ReaderLayout::local(3).unwrap();
+        let a = LoadBalanced.distribute(&table, &readers);
+        let b = LoadBalanced.distribute(&table, &readers);
+        for r in 0..3 {
+            assert_eq!(a.slices(r), b.slices(r));
+        }
+    }
+
+    #[test]
+    fn empty_table_and_single_reader() {
+        let empty = table_1d(&[]);
+        let readers = ReaderLayout::local(2).unwrap();
+        assert_eq!(
+            LoadBalanced.distribute(&empty, &readers).total_slices(), 0);
+        let table = table_1d(&[(10, 0, "a"), (20, 1, "b")]);
+        let solo = ReaderLayout::local(1).unwrap();
+        let a = LoadBalanced.distribute(&table, &solo);
+        verify_complete(&table, &a).unwrap();
+        assert_eq!(a.elements_for(0), 30);
+    }
+
+    #[test]
+    fn empty_readers_yield_empty_assignment() {
+        let table = table_1d(&[(4, 0, "a")]);
+        let a = LoadBalanced.distribute(&table, &ReaderLayout::default());
+        assert_eq!(a.total_slices(), 0);
+    }
+}

@@ -117,7 +117,7 @@ mod tests {
     #[test]
     fn perfect_case_metrics() {
         let table = node_table(2, 2, 100);
-        let readers = ReaderLayout::nodes(2, 2);
+        let readers = ReaderLayout::nodes(2, 2).unwrap();
         let a = ByHostname::paper_default().distribute(&table, &readers);
         let q = quality(&table, &readers, &a);
         assert!((q.balance_factor - 1.0).abs() < 1e-9, "{q:?}");
@@ -129,7 +129,7 @@ mod tests {
     #[test]
     fn round_robin_alignment_one_but_poor_balance() {
         let table = table_1d(&[(1000, 0, "a"), (10, 1, "a"), (10, 2, "a")]);
-        let readers = ReaderLayout::local(3);
+        let readers = ReaderLayout::local(3).unwrap();
         let a = RoundRobin.distribute(&table, &readers);
         let q = quality(&table, &readers, &a);
         assert_eq!(q.alignment, 1.0);
@@ -139,7 +139,7 @@ mod tests {
     #[test]
     fn hyperslabs_balance_near_one() {
         let table = node_table(4, 2, 128);
-        let readers = ReaderLayout::nodes(4, 2);
+        let readers = ReaderLayout::nodes(4, 2).unwrap();
         let a = Hyperslabs.distribute(&table, &readers);
         let q = quality(&table, &readers, &a);
         assert!(q.balance_factor <= 1.01, "{q:?}");
@@ -154,7 +154,7 @@ mod tests {
         for (i, c) in table.chunks.iter_mut().enumerate() {
             c.chunk.extent[0] = 60 + ((i * 37) % 80) as u64;
         }
-        let readers = ReaderLayout::nodes(8, 3);
+        let readers = ReaderLayout::nodes(8, 3).unwrap();
         let bp = quality(&table, &readers,
                          &Binpacking.distribute(&table, &readers));
         let bh = quality(
@@ -169,7 +169,7 @@ mod tests {
     #[test]
     fn empty_assignment_quality_is_neutral() {
         let table = ChunkTable { dataset_extent: vec![0], chunks: vec![] };
-        let readers = ReaderLayout::local(2);
+        let readers = ReaderLayout::local(2).unwrap();
         let q = quality(&table, &readers, &Default::default());
         assert_eq!(q.balance_factor, 1.0);
         assert_eq!(q.locality_fraction, 1.0);

@@ -18,15 +18,18 @@
 pub mod binpacking;
 pub mod by_hostname;
 pub mod hyperslabs;
+pub mod load_balanced;
 pub mod metrics;
 pub mod round_robin;
 
 pub use binpacking::Binpacking;
 pub use by_hostname::ByHostname;
 pub use hyperslabs::Hyperslabs;
+pub use load_balanced::LoadBalanced;
 pub use round_robin::RoundRobin;
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 use anyhow::{bail, Result};
 
@@ -39,6 +42,32 @@ pub struct ReaderRank {
     pub hostname: String,
 }
 
+/// Typed error for degenerate reader layouts. A zero-rank layout would
+/// make every [`Assignment`] vacuously "complete" (nothing assigned,
+/// nothing checked), so the constructors reject it up front instead of
+/// letting the hole surface as silently-dropped data downstream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayoutError {
+    /// A layout with zero reader ranks was requested
+    /// (`local(0)`, `nodes(0, _)` or `nodes(_, 0)`).
+    Empty { nodes: usize, per_node: usize },
+}
+
+impl fmt::Display for LayoutError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LayoutError::Empty { nodes, per_node } => write!(
+                f,
+                "reader layout of {nodes} node(s) x {per_node} rank(s) \
+                 has no readers; an empty layout would make every \
+                 distribution vacuously complete"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for LayoutError {}
+
 /// The reading application's parallel layout.
 #[derive(Clone, Debug, Default)]
 pub struct ReaderLayout {
@@ -47,17 +76,27 @@ pub struct ReaderLayout {
 
 impl ReaderLayout {
     /// `n` readers all on one host (the degenerate single-node case).
-    pub fn local(n: usize) -> Self {
-        ReaderLayout {
+    /// `n == 0` is a typed error, not an empty layout.
+    pub fn local(n: usize) -> std::result::Result<Self, LayoutError> {
+        if n == 0 {
+            return Err(LayoutError::Empty { nodes: 1, per_node: 0 });
+        }
+        Ok(ReaderLayout {
             ranks: (0..n)
                 .map(|rank| ReaderRank { rank, hostname: "localhost".into() })
                 .collect(),
-        }
+        })
     }
 
     /// `per_node` readers on each of `nodes` hosts named `node<i>`,
     /// ranks numbered node-major (like `jsrun` round-robin placement).
-    pub fn nodes(nodes: usize, per_node: usize) -> Self {
+    /// A zero node or per-node count is a typed error.
+    pub fn nodes(nodes: usize, per_node: usize)
+        -> std::result::Result<Self, LayoutError>
+    {
+        if nodes == 0 || per_node == 0 {
+            return Err(LayoutError::Empty { nodes, per_node });
+        }
         let mut ranks = Vec::with_capacity(nodes * per_node);
         for node in 0..nodes {
             for slot in 0..per_node {
@@ -67,7 +106,7 @@ impl ReaderLayout {
                 });
             }
         }
-        ReaderLayout { ranks }
+        Ok(ReaderLayout { ranks })
     }
 
     pub fn len(&self) -> usize {
@@ -102,6 +141,13 @@ pub struct ChunkSlice {
     pub source_rank: usize,
     /// Writer hostname (for locality accounting).
     pub source_host: String,
+    /// Cost of moving this slice, for balancing: the source chunk's
+    /// announced staged byte size ([`WrittenChunkInfo::encoded_bytes`],
+    /// pro-rated for sub-chunks), or the element count when the writer
+    /// did not announce sizes. Comparable *within* one chunk table —
+    /// either every chunk of a variable carries announced sizes or none
+    /// does — which is all a per-variable strategy needs.
+    pub cost: u64,
 }
 
 impl ChunkSlice {
@@ -110,14 +156,28 @@ impl ChunkSlice {
             chunk: info.chunk.clone(),
             source_rank: info.source_rank,
             source_host: info.hostname.clone(),
+            cost: info
+                .encoded_bytes
+                .unwrap_or_else(|| info.chunk.num_elements()),
         }
     }
 
     pub fn with_chunk(info: &WrittenChunkInfo, chunk: Chunk) -> Self {
+        let sub = chunk.num_elements();
+        let cost = match (info.encoded_bytes, info.chunk.num_elements()) {
+            // Pro-rate the announced size by the sub-chunk's share; a
+            // non-empty sub-slice keeps a nonzero cost.
+            (Some(bytes), total) if total > 0 => {
+                ((bytes as u128 * sub as u128 / total as u128) as u64)
+                    .max(u64::from(sub > 0))
+            }
+            _ => sub,
+        };
         ChunkSlice {
             chunk,
             source_rank: info.source_rank,
             source_host: info.hostname.clone(),
+            cost,
         }
     }
 }
@@ -141,6 +201,23 @@ impl Assignment {
             .iter()
             .map(|s| s.chunk.num_elements())
             .sum()
+    }
+
+    /// Total [`ChunkSlice::cost`] assigned to `reader` — the byte load
+    /// the cost-aware strategies balance.
+    pub fn cost_for(&self, reader: usize) -> u64 {
+        self.slices(reader).iter().map(|s| s.cost).sum()
+    }
+
+    /// Max per-reader cost over `readers` ranks (0 for an empty
+    /// assignment) — the straggler bound a balanced strategy minimizes.
+    pub fn max_cost(&self, readers: &ReaderLayout) -> u64 {
+        readers
+            .ranks
+            .iter()
+            .map(|r| self.cost_for(r.rank))
+            .max()
+            .unwrap_or(0)
     }
 
     pub fn total_elements(&self) -> u64 {
@@ -167,6 +244,10 @@ pub trait Strategy: Send + Sync {
         -> Assignment;
 }
 
+/// The strategy names [`by_name`] resolves (canonical spellings).
+pub const STRATEGY_NAMES: [&str; 5] =
+    ["roundrobin", "hyperslabs", "binpacking", "loadbalanced", "hostname"];
+
 /// Resolve a strategy by config name. `"hostname"` takes optional
 /// secondary/fallback suffixes: `"hostname:binpacking:hyperslabs"`.
 pub fn by_name(name: &str) -> Result<Box<dyn Strategy>> {
@@ -176,12 +257,16 @@ pub fn by_name(name: &str) -> Result<Box<dyn Strategy>> {
         "roundrobin" | "round-robin" => Box::new(RoundRobin),
         "hyperslabs" | "slicing" => Box::new(Hyperslabs),
         "binpacking" => Box::new(Binpacking),
+        "loadbalanced" | "load-balanced" | "lpt" => Box::new(LoadBalanced),
         "hostname" | "by-hostname" => {
             let secondary = parts.next().unwrap_or("binpacking");
             let fallback = parts.next().unwrap_or("binpacking");
             Box::new(ByHostname::new(by_name(secondary)?, by_name(fallback)?))
         }
-        other => bail!("unknown distribution strategy {other:?}"),
+        other => bail!(
+            "unknown distribution strategy {other:?} (valid: {})",
+            STRATEGY_NAMES.join(", ")
+        ),
     })
 }
 
@@ -261,10 +346,50 @@ mod tests {
     #[test]
     fn by_name_resolves_all() {
         for n in ["roundrobin", "hyperslabs", "binpacking", "hostname",
-                  "hostname:roundrobin:hyperslabs"] {
+                  "loadbalanced", "lpt",
+                  "hostname:roundrobin:hyperslabs",
+                  "hostname:loadbalanced:loadbalanced"] {
             assert!(by_name(n).is_ok(), "{n}");
         }
         assert!(by_name("quantum").is_err());
+    }
+
+    #[test]
+    fn by_name_error_lists_valid_strategies() {
+        let err = format!("{}", by_name("quantum").unwrap_err());
+        for name in STRATEGY_NAMES {
+            assert!(err.contains(name), "{err:?} lacks {name}");
+        }
+    }
+
+    #[test]
+    fn empty_layouts_are_typed_errors() {
+        assert_eq!(ReaderLayout::local(0).unwrap_err(),
+                   LayoutError::Empty { nodes: 1, per_node: 0 });
+        assert_eq!(ReaderLayout::nodes(0, 3).unwrap_err(),
+                   LayoutError::Empty { nodes: 0, per_node: 3 });
+        assert_eq!(ReaderLayout::nodes(3, 0).unwrap_err(),
+                   LayoutError::Empty { nodes: 3, per_node: 0 });
+        let msg = format!("{}", ReaderLayout::local(0).unwrap_err());
+        assert!(msg.contains("no readers"), "{msg}");
+    }
+
+    #[test]
+    fn slice_costs_default_to_elements_and_prefer_announced_bytes() {
+        let info = WrittenChunkInfo::new(
+            Chunk::new(vec![0], vec![100]), 0, "a");
+        assert_eq!(ChunkSlice::of(&info).cost, 100);
+        let sized = info.clone().with_encoded_bytes(4000);
+        assert_eq!(ChunkSlice::of(&sized).cost, 4000);
+        // Sub-slices pro-rate the announced size.
+        let half = ChunkSlice::with_chunk(
+            &sized, Chunk::new(vec![0], vec![50]));
+        assert_eq!(half.cost, 2000);
+        // ...and never round a non-empty slice down to zero cost.
+        let tiny = ChunkSlice::with_chunk(
+            &info.clone().with_encoded_bytes(1),
+            Chunk::new(vec![0], vec![1]));
+        assert_eq!(tiny.cost, 1);
     }
 
     #[test]
@@ -289,10 +414,11 @@ mod tests {
 
     #[test]
     fn layouts() {
-        let l = ReaderLayout::nodes(2, 3);
+        let l = ReaderLayout::nodes(2, 3).unwrap();
         assert_eq!(l.len(), 6);
         assert_eq!(l.ranks[4].hostname, "node0001");
         assert_eq!(l.ranks[4].rank, 4);
-        assert_eq!(ReaderLayout::local(2).ranks[1].hostname, "localhost");
+        assert_eq!(ReaderLayout::local(2).unwrap().ranks[1].hostname,
+                   "localhost");
     }
 }

@@ -48,7 +48,7 @@ mod tests {
             (10, 0, "a"), (10, 1, "a"), (10, 2, "b"), (10, 3, "b"),
             (10, 4, "c"),
         ]);
-        let readers = ReaderLayout::local(2);
+        let readers = ReaderLayout::local(2).unwrap();
         let a = RoundRobin.distribute(&table, &readers);
         verify_complete(&table, &a).unwrap();
         assert_eq!(a.slices(0).len(), 3); // chunks 0, 2, 4
@@ -58,7 +58,8 @@ mod tests {
     #[test]
     fn never_splits_chunks_perfect_alignment() {
         let table = table_1d(&[(7, 0, "a"), (13, 1, "a"), (29, 2, "b")]);
-        let a = RoundRobin.distribute(&table, &ReaderLayout::local(2));
+        let a =
+            RoundRobin.distribute(&table, &ReaderLayout::local(2).unwrap());
         for slices in a.per_reader.values() {
             for s in slices {
                 assert!(table
@@ -74,7 +75,8 @@ mod tests {
     fn imbalance_with_uneven_chunks() {
         // One huge chunk lands on reader 0: balancing is forgone.
         let table = table_1d(&[(1000, 0, "a"), (1, 1, "a")]);
-        let a = RoundRobin.distribute(&table, &ReaderLayout::local(2));
+        let a =
+            RoundRobin.distribute(&table, &ReaderLayout::local(2).unwrap());
         assert_eq!(a.elements_for(0), 1000);
         assert_eq!(a.elements_for(1), 1);
     }
@@ -89,7 +91,8 @@ mod tests {
     #[test]
     fn more_readers_than_chunks() {
         let table = table_1d(&[(4, 0, "a"), (4, 1, "a")]);
-        let a = RoundRobin.distribute(&table, &ReaderLayout::local(5));
+        let a =
+            RoundRobin.distribute(&table, &ReaderLayout::local(5).unwrap());
         verify_complete(&table, &a).unwrap();
         assert!(a.slices(2).is_empty());
     }

@@ -62,7 +62,9 @@
 //!   throughput per chain over real SST-TCP.
 //! * [`distribution`] — the paper's §3 contribution: chunk-distribution
 //!   strategies (round-robin, hyperslab slicing, binpacking, two-phase
-//!   by-hostname) plus quality metrics (locality / balance / alignment).
+//!   by-hostname, and cost-aware load-balanced LPT over the staged byte
+//!   sizes writers announce per chunk) plus quality metrics (locality /
+//!   balance / alignment).
 //! * [`cluster`] — the simulated Summit substrate: node topology, fabric
 //!   and parallel-filesystem models, and a max–min fair-share
 //!   discrete-event simulator that regenerates the paper's 512-node
@@ -72,7 +74,14 @@
 //!   staged with bounded read-ahead so the store of step N overlaps the
 //!   load of step N+1), backpressure/queue policies and metrics
 //!   (including [`pipeline::OverlapReport`], which quantifies the IO
-//!   time the staged pipe hides).
+//!   time the staged pipe hides). [`pipeline::fleet`] scales the
+//!   adaptor across readers: M workers over the N writer transports,
+//!   coordinated by one shared per-step chunk plan (a complete +
+//!   disjoint `Assignment` per step and variable), each storing into
+//!   its own output shard — shard unions are byte-identical to the
+//!   serial pipe for every strategy, and
+//!   [`pipeline::FleetReport`] carries the straggler accounting
+//!   (per-rank bytes/busy time, max/mean imbalance, aggregate rate).
 //! * [`producer`] / [`analysis`] — the two pipeline endpoints: a
 //!   PIConGPU-like Kelvin–Helmholtz particle producer and a GAPD-like
 //!   SAXS diffraction consumer, both executing AOT-lowered JAX/Pallas

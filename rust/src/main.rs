@@ -16,6 +16,8 @@
 //! binary provides the single-role building blocks that `examples/`
 //! compose, usable across real processes via the TCP transport.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
@@ -26,11 +28,13 @@ use openpmd_stream::adios::sst::{SstReader, SstReaderOptions, SstWriter,
 use openpmd_stream::adios::ops::OpChain;
 use openpmd_stream::analysis::SaxsAnalyzer;
 use openpmd_stream::bench::Table;
+use openpmd_stream::distribution::{by_name, Strategy};
 use openpmd_stream::pipeline::ops_summary;
 use openpmd_stream::cluster::systems;
 use openpmd_stream::openpmd::chunk::Chunk;
-use openpmd_stream::openpmd::series::Series;
+use openpmd_stream::openpmd::series::{self, Series};
 use openpmd_stream::openpmd::validate;
+use openpmd_stream::pipeline::fleet::{run_fleet, FleetOptions};
 use openpmd_stream::pipeline::pipe::{run, PipeOptions};
 use openpmd_stream::producer::KhProducer;
 use openpmd_stream::runtime::Runtime;
@@ -87,6 +91,18 @@ fn help() -> String {
                       help: "staged-pipe read-ahead steps (0 = serial; \
                              2 = double buffering: store step N while \
                              loading step N+1)" },
+            OptSpec { name: "readers", value_name: Some("M"),
+                      default: Some("1"),
+                      help: "pipe: parallel reader-fleet width; M > 1 \
+                             runs M workers over a shared per-step \
+                             chunk plan, each writing its own output \
+                             shard (out.r0ofM.bp ...) plus a merged \
+                             series index" },
+            OptSpec { name: "strategy", value_name: Some("NAME"),
+                      default: Some("roundrobin"),
+                      help: "pipe: chunk-distribution strategy for the \
+                             fleet (roundrobin|hyperslabs|binpacking|\
+                             loadbalanced|hostname[:2nd:fallback])" },
             OptSpec { name: "operators", value_name: Some("CHAIN"),
                       default: None,
                       help: "per-variable operator chain, e.g. \
@@ -118,60 +134,142 @@ fn parse_operators(args: &Args) -> Result<Option<OpChain>> {
     }
 }
 
+/// Open one pipe input: `sst+ADDR[,ADDR...]` subscribes to every
+/// listed writer rank (the fleet's N side); anything else is a BP
+/// file. `rank` is the consuming worker's rank within the fleet.
+fn open_pipe_input(input: &str, rank: usize) -> Result<Box<dyn Engine>> {
+    if let Some(addrs) = input.strip_prefix("sst+") {
+        let writers: Vec<String> =
+            addrs.split(',').map(|a| a.trim().to_string()).collect();
+        // One transport per reader connection set: every writer
+        // address must agree, or the non-matching ones would be dialed
+        // over the wrong transport and fail opaquely.
+        let tcp_count =
+            writers.iter().filter(|a| a.starts_with("tcp://")).count();
+        let transport = if tcp_count == writers.len() {
+            "tcp".to_string()
+        } else if tcp_count == 0 {
+            "inproc".to_string()
+        } else {
+            bail!(
+                "mixed SST transports in --in: {tcp_count} of {} \
+                 writer address(es) are tcp:// — use one transport \
+                 for all writers",
+                writers.len()
+            );
+        };
+        Ok(Box::new(SstReader::open(SstReaderOptions {
+            writers,
+            transport,
+            rank,
+            ..Default::default()
+        })?))
+    } else {
+        Ok(Box::new(BpReader::open(input)?))
+    }
+}
+
 fn cmd_pipe(args: &Args) -> Result<()> {
     args.reject_unknown(&["in", "out", "engine", "steps",
-                          "pipeline-depth", "operators"])?;
+                          "pipeline-depth", "operators", "readers",
+                          "strategy"])?;
     let input = args.get("in").context("--in required")?;
     let output = args.get("out").context("--out required")?;
-    let mut reader: Box<dyn Engine> = if let Some(addr) =
-        input.strip_prefix("sst+")
-    {
-        Box::new(SstReader::open(SstReaderOptions {
-            writers: vec![addr.to_string()],
-            transport: if addr.starts_with("tcp://") {
-                "tcp".into()
-            } else {
-                "inproc".into()
-            },
-            ..Default::default()
-        })?)
-    } else {
-        Box::new(BpReader::open(input)?)
-    };
+    let readers: usize = args.get_parse_or("readers", 1)?;
+    if readers == 0 {
+        bail!("--readers must be >= 1");
+    }
     let engine = args.get_or("engine", "bp");
-    let mut writer: Box<dyn Engine> = match engine {
-        "bp" => Box::new(BpWriter::create(output, WriterCtx::default())?),
-        "json" => Box::new(JsonWriter::create(output, 0, "localhost")?),
-        other => bail!("pipe output engine must be bp|json, got {other}"),
+    let depth: usize = args.get_parse_or("pipeline-depth", 0)?;
+    let max_steps = args.get_parse::<u64>("steps")?;
+    let operators = parse_operators(args)?;
+    let strategy: Arc<dyn Strategy> =
+        Arc::from(by_name(args.get_or("strategy", "roundrobin"))?);
+
+    let make_output = |rank: usize| -> Result<Box<dyn Engine>> {
+        let shard = series::shard_path(output, rank, readers);
+        Ok(match engine {
+            "bp" => Box::new(BpWriter::create(&shard, WriterCtx {
+                rank,
+                hostname: "localhost".into(),
+            })?),
+            "json" => Box::new(JsonWriter::create(&shard, rank,
+                                                  "localhost")?),
+            other => {
+                bail!("pipe output engine must be bp|json, got {other}")
+            }
+        })
     };
-    let mut opts = PipeOptions::solo();
-    opts.max_steps = args.get_parse::<u64>("steps")?;
-    opts.depth = args.get_parse_or("pipeline-depth", 0usize)?;
-    opts.operators = parse_operators(args)?;
-    let depth = opts.depth;
-    let report = run(reader.as_mut(), writer.as_mut(), opts)?;
-    println!(
-        "piped {} steps ({} dropped), {} in, {} out, {} chunks",
-        report.steps,
-        report.dropped_steps,
-        fmt_bytes(report.bytes_in),
-        fmt_bytes(report.bytes_out),
-        report.chunks
-    );
+
+    if readers == 1 {
+        let mut reader = open_pipe_input(input, 0)?;
+        let mut writer = make_output(0)?;
+        let mut opts = PipeOptions::solo();
+        opts.max_steps = max_steps;
+        opts.depth = depth;
+        opts.operators = operators;
+        opts.strategy = strategy;
+        let report = run(reader.as_mut(), writer.as_mut(), opts)?;
+        println!(
+            "piped {} steps ({} dropped), {} in, {} out, {} chunks",
+            report.steps,
+            report.dropped_steps,
+            fmt_bytes(report.bytes_in),
+            fmt_bytes(report.bytes_out),
+            report.chunks
+        );
+        if !report.ops.is_empty() {
+            println!("{}", ops_summary(&report.ops));
+        }
+        if depth > 0 {
+            let o = &report.overlap;
+            println!(
+                "staged depth {depth}: wall {:.3}s vs serial load+store \
+                 {:.3}s — {:.3}s hidden ({:.0}% of the cheaper stage)",
+                o.wall_seconds,
+                o.serial_estimate(),
+                o.hidden_seconds(),
+                100.0 * o.overlap_efficiency()
+            );
+        }
+        return Ok(());
+    }
+
+    // Parallel fleet: M workers, each with its own reader subscribed
+    // to all writers and its own output shard; read-ahead within a
+    // worker comes from fleet parallelism itself.
+    if depth > 0 {
+        bail!("--pipeline-depth applies to the single-reader pipe; \
+               a fleet (--readers {readers}) overlaps via its workers");
+    }
+    let mut inputs = Vec::with_capacity(readers);
+    let mut outputs = Vec::with_capacity(readers);
+    for rank in 0..readers {
+        inputs.push(open_pipe_input(input, rank)?);
+        outputs.push(make_output(rank)?);
+    }
+    let mut fopts = FleetOptions::local(readers, strategy)?;
+    fopts.max_steps = max_steps;
+    fopts.operators = operators;
+    let report = run_fleet(inputs, outputs, fopts)?;
+    println!("{}", report.summary());
+    for r in &report.per_rank {
+        println!(
+            "  rank {}: {} steps, {} in, {} out, {} chunks, busy {:.3}s",
+            r.rank,
+            r.steps,
+            fmt_bytes(r.bytes_in),
+            fmt_bytes(r.bytes_out),
+            r.chunks,
+            r.busy_seconds
+        );
+    }
     if !report.ops.is_empty() {
         println!("{}", ops_summary(&report.ops));
     }
-    if depth > 0 {
-        let o = &report.overlap;
-        println!(
-            "staged depth {depth}: wall {:.3}s vs serial load+store \
-             {:.3}s — {:.3}s hidden ({:.0}% of the cheaper stage)",
-            o.wall_seconds,
-            o.serial_estimate(),
-            o.hidden_seconds(),
-            100.0 * o.overlap_efficiency()
-        );
-    }
+    let index = series::write_shard_index(output, readers,
+                                          report.steps())?;
+    println!("shard index: {}", index.display());
     Ok(())
 }
 

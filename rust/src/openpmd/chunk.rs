@@ -109,13 +109,31 @@ pub struct WrittenChunkInfo {
     /// Hostname of the producing rank (topology layer for §3.2's
     /// distribution-by-hostname).
     pub hostname: String,
+    /// Bytes this chunk actually occupies at the writer — the staged
+    /// (operator-encoded) payload size, announced so cost-aware
+    /// distribution strategies can balance the bytes that will really
+    /// cross the wire. `None` when the writer does not know (e.g. a
+    /// metadata-only probe); strategies then fall back to element
+    /// counts.
+    pub encoded_bytes: Option<u64>,
 }
 
 impl WrittenChunkInfo {
     pub fn new(chunk: Chunk, source_rank: usize, hostname: impl Into<String>)
         -> Self
     {
-        WrittenChunkInfo { chunk, source_rank, hostname: hostname.into() }
+        WrittenChunkInfo {
+            chunk,
+            source_rank,
+            hostname: hostname.into(),
+            encoded_bytes: None,
+        }
+    }
+
+    /// Attach the staged payload size in bytes (builder style).
+    pub fn with_encoded_bytes(mut self, bytes: u64) -> Self {
+        self.encoded_bytes = Some(bytes);
+        self
     }
 }
 

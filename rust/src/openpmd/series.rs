@@ -388,6 +388,88 @@ pub fn particle_dataset(n: u64) -> Dataset {
     Dataset::new(Datatype::F32, vec![n])
 }
 
+// ---------------------------------------------------------------------
+// Sharded output naming (parallel reader fleets)
+// ---------------------------------------------------------------------
+
+/// Output shard name for fleet worker `rank` of `readers`: the shard
+/// marker goes before the extension so a family of shards sorts next
+/// to its base name (`out.bp` → `out.r2of4.bp`). A single-reader fleet
+/// keeps the base name — fleet M=1 writes exactly what the serial pipe
+/// writes, same path included.
+pub fn shard_path(
+    base: impl AsRef<std::path::Path>,
+    rank: usize,
+    readers: usize,
+) -> std::path::PathBuf {
+    let base = base.as_ref();
+    if readers <= 1 {
+        return base.to_path_buf();
+    }
+    let marker = format!("r{rank}of{readers}");
+    match (
+        base.file_stem().and_then(|s| s.to_str()),
+        base.extension().and_then(|e| e.to_str()),
+    ) {
+        (Some(stem), Some(ext)) => {
+            base.with_file_name(format!("{stem}.{marker}.{ext}"))
+        }
+        _ => {
+            let mut name = base
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or("series")
+                .to_string();
+            name.push('.');
+            name.push_str(&marker);
+            base.with_file_name(name)
+        }
+    }
+}
+
+/// Write the merged series index next to a fleet's shards:
+/// `<base>.index.json` names every shard (rank order) plus the step
+/// count, so downstream tooling reassembles the series without
+/// globbing — the openPMD "one logical series, many files" pattern.
+pub fn write_shard_index(
+    base: impl AsRef<std::path::Path>,
+    readers: usize,
+    steps: u64,
+) -> Result<std::path::PathBuf> {
+    use crate::util::json::Json;
+    let base = base.as_ref();
+    let shard_name = |rank: usize| -> String {
+        shard_path(base, rank, readers)
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("shard")
+            .to_string()
+    };
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert(
+        "series".to_string(),
+        Json::Str(
+            base.file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or("series")
+                .to_string(),
+        ),
+    );
+    doc.insert("readers".to_string(), Json::Num(readers as f64));
+    doc.insert("steps".to_string(), Json::Num(steps as f64));
+    doc.insert(
+        "shards".to_string(),
+        Json::Arr((0..readers).map(|r| Json::Str(shard_name(r))).collect()),
+    );
+    let path = std::path::PathBuf::from(format!(
+        "{}.index.json",
+        base.display()
+    ));
+    std::fs::write(&path, Json::Obj(doc).to_string_pretty())
+        .with_context(|| format!("writing shard index {path:?}"))?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -440,6 +522,44 @@ mod tests {
         assert!(parse_var_name("/data/notanum/particles/e/p/x").is_err());
         assert!(parse_var_name("bare").is_err());
         assert!(parse_var_name("/data/1/meshes").is_err());
+    }
+
+    #[test]
+    fn shard_paths_keep_the_extension_and_sort_together() {
+        assert_eq!(
+            shard_path("out/run.bp", 2, 4),
+            std::path::PathBuf::from("out/run.r2of4.bp")
+        );
+        // M = 1 is the serial pipe's path, unchanged.
+        assert_eq!(
+            shard_path("out/run.bp", 0, 1),
+            std::path::PathBuf::from("out/run.bp")
+        );
+        // Extension-less bases still get the marker.
+        assert_eq!(
+            shard_path("out/run", 1, 2),
+            std::path::PathBuf::from("out/run.r1of2")
+        );
+    }
+
+    #[test]
+    fn shard_index_lists_every_shard_in_rank_order() {
+        let dir = std::env::temp_dir()
+            .join(format!("opmd-shardidx-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("fleet.bp");
+        let path = write_shard_index(&base, 3, 7).unwrap();
+        let doc = crate::util::json::parse(
+            &std::fs::read_to_string(&path).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(doc.get("readers").unwrap().as_u64(), Some(3));
+        assert_eq!(doc.get("steps").unwrap().as_u64(), Some(7));
+        let shards = doc.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards[0].as_str(), Some("fleet.r0of3.bp"));
+        assert_eq!(shards[2].as_str(), Some("fleet.r2of3.bp"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

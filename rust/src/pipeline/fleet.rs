@@ -1,0 +1,514 @@
+//! The parallel reader fleet: M pipe workers over N writers, one
+//! shared per-step chunk plan.
+//!
+//! The paper's loose-coupling story stops scaling the moment a single
+//! reader must drain everything N writer ranks produce — the gap §3
+//! names "the need of strategies for a flexible data distribution".
+//! [`run_fleet`] closes it: M workers (threads), each owning its own
+//! read engine subscribed to the same N writer transports and its own
+//! output shard, coordinated **only** through a per-step plan:
+//!
+//! ```text
+//!  N writers ──announce──▶ every worker's reader
+//!                               │ step s chunk table
+//!                               ▼
+//!                      SharedPlanner (one Assignment per step+var:
+//!                      strategy.distribute, complete + disjoint)
+//!                        │          │           │
+//!                 slices(0)   slices(1)   slices(M-1)
+//!                        ▼          ▼           ▼
+//!                  worker 0    worker 1 ...  worker M-1
+//!                  (fetch own slices via one batched perform,
+//!                   store into own output shard)
+//! ```
+//!
+//! **Plan phase.** The first worker to reach step `s` computes the
+//! step's [`Assignment`] from the announced chunk table (one
+//! `distribute` per variable per step) and publishes it; the other
+//! workers reuse it and the entry is pruned once all M have taken
+//! their share. Strategies are deterministic (a property-tested
+//! invariant), so "first worker plans" is observably identical to the
+//! issue of a fixed planner rank — without a cross-thread barrier on
+//! the hot path. In debug builds every shared plan is re-checked with
+//! [`verify_complete`]; release builds trust the property tests.
+//!
+//! **Fetch phase.** Each worker runs the pipe's step-forwarding core
+//! with the shared plan as its slice filter: per step, one batched
+//! `perform_gets` covering exactly its assigned slices — over SST
+//! that is one wire request per *owning* writer, so a worker whose
+//! slices all live on one writer rank never contacts the others.
+//! Unlike the solo serial loop (which probes its output first and can
+//! consume a downstream-discarded step without moving data), a fleet
+//! worker fetches **before** offering the step to its output: its
+//! slices are its share of the step's complete distribution, and
+//! skipping the fetch would silently leave them unmoved by any rank.
+//! A step the output then discards is dropped and counted in
+//! `dropped_steps` — the staged path's read-ahead semantics.
+//!
+//! **Input contract.** Workers coordinate plans by input-step ordinal
+//! (every consumed input step advances it, discarded ones included),
+//! so all fleet inputs must present the same step sequence. SST
+//! readers over one writer application do: announcements are
+//! broadcast to every subscribed reader, and steps retire only after
+//! every live reader consumed them — and `run_fleet` takes all M
+//! already-open inputs up front, so none can miss a prefix.
+//!
+//! **Store phase.** Each worker owns an output engine (typically a
+//! per-rank BP shard named by [`crate::openpmd::series::shard_path`]);
+//! every worker publishes every step, so the union of the shards'
+//! chunks per step is exactly the input step — complete and disjoint,
+//! asserted end to end by `tests/fleet_conformance.rs`.
+//!
+//! Workers never exchange payload bytes; the only shared state is the
+//! plan cache, a mutex held for microseconds per step. Stragglers are
+//! visible, not hidden: [`FleetReport`] carries per-rank bytes, busy
+//! seconds and the max/mean imbalance that bounds fleet speedup.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::adios::engine::{Engine, VarInfo};
+use crate::adios::ops::OpChain;
+use crate::distribution::{
+    verify_complete, Assignment, ChunkTable, ReaderLayout, Strategy,
+};
+use crate::openpmd::chunk::Chunk;
+
+use super::metrics::FleetReport;
+use super::pipe::{
+    fetch_step, forward_payload, Fetched, PipeOptions, PipeReport,
+    StepPlan, StepPoller,
+};
+
+/// Fleet configuration: the reader-side parallel layout plus the pipe
+/// knobs every worker shares. Fleet width M is `layout.len()`.
+pub struct FleetOptions {
+    /// Distribution strategy computing the shared per-step plan. Must
+    /// be deterministic (all in-tree strategies are).
+    pub strategy: Arc<dyn Strategy>,
+    /// Reader layout; one worker per rank, in rank order.
+    pub layout: ReaderLayout,
+    /// Stop each worker after this many *consumed data* steps
+    /// (forwarded + downstream-discarded). Unlike the solo pipe —
+    /// where only forwarded steps count — a fleet worker's budget must
+    /// not stretch when its own output discards, or workers would
+    /// consume different input prefixes and desynchronize the shared
+    /// plan (leaving the trailing step's distribution partially
+    /// unfetched).
+    pub max_steps: Option<u64>,
+    /// Per-worker idle timeout (same contract as the serial pipe).
+    pub idle_timeout: Duration,
+    /// Operator-chain override forwarded to every worker's output
+    /// (None = forward each variable's announced chain unchanged).
+    pub operators: Option<OpChain>,
+}
+
+impl FleetOptions {
+    /// `readers` workers on one host with `strategy` — the common
+    /// single-node fleet. `readers == 0` is a typed layout error.
+    pub fn local(
+        readers: usize,
+        strategy: Arc<dyn Strategy>,
+    ) -> Result<FleetOptions> {
+        Ok(FleetOptions {
+            strategy,
+            layout: ReaderLayout::local(readers)?,
+            max_steps: None,
+            idle_timeout: Duration::from_secs(60),
+            operators: None,
+        })
+    }
+}
+
+/// One step+variable's published plan, pruned once every worker took
+/// its share.
+struct PlanEntry {
+    assignment: Arc<Assignment>,
+    taken: usize,
+}
+
+/// The fleet's only shared state: compute-once plan cache keyed by
+/// (step, variable). Entries live from the first worker reaching a
+/// step to the last worker leaving it, so memory is bounded by how far
+/// the fastest worker runs ahead (itself bounded by the writers'
+/// staging queues).
+pub(crate) struct SharedPlanner {
+    strategy: Arc<dyn Strategy>,
+    layout: ReaderLayout,
+    readers: usize,
+    plans: Mutex<BTreeMap<(u64, String), PlanEntry>>,
+}
+
+impl SharedPlanner {
+    pub(crate) fn new(
+        strategy: Arc<dyn Strategy>,
+        layout: ReaderLayout,
+    ) -> SharedPlanner {
+        let readers = layout.len();
+        SharedPlanner {
+            strategy,
+            layout,
+            readers,
+            plans: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Worker `rank`'s slices of `var` in `step`: compute the step
+    /// plan on first arrival, reuse it afterwards, prune on last use.
+    fn slices(
+        &self,
+        rank: usize,
+        step: u64,
+        var: &VarInfo,
+        table: &ChunkTable,
+    ) -> Result<Vec<Chunk>> {
+        use std::collections::btree_map::Entry;
+        let key = (step, var.name.clone());
+        let mut plans = self
+            .plans
+            .lock()
+            .map_err(|_| anyhow!("fleet planner poisoned by a panic"))?;
+        let entry = match plans.entry(key.clone()) {
+            Entry::Occupied(entry) => entry.into_mut(),
+            Entry::Vacant(slot) => {
+                let assignment =
+                    self.strategy.distribute(table, &self.layout);
+                // The hot-path contract check rides the debug build:
+                // release trusts `tests/distribution_props.rs`.
+                #[cfg(debug_assertions)]
+                if let Err(why) = verify_complete(table, &assignment) {
+                    panic!(
+                        "fleet plan for step {step} var {:?} is not a \
+                         complete distribution: {why}",
+                        var.name
+                    );
+                }
+                #[cfg(not(debug_assertions))]
+                let _ = verify_complete; // referenced in debug only
+                slot.insert(PlanEntry {
+                    assignment: Arc::new(assignment),
+                    taken: 0,
+                })
+            }
+        };
+        let slices: Vec<Chunk> = entry
+            .assignment
+            .slices(rank)
+            .iter()
+            .map(|s| s.chunk.clone())
+            .collect();
+        entry.taken += 1;
+        if entry.taken >= self.readers {
+            plans.remove(&key);
+        }
+        Ok(slices)
+    }
+
+    /// Plans currently cached (bounded-memory check for tests).
+    #[cfg(test)]
+    fn cached(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+}
+
+/// The [`StepPlan`] a fleet worker hands to the pipe core.
+struct FleetPlan {
+    shared: Arc<SharedPlanner>,
+    rank: usize,
+}
+
+impl StepPlan for FleetPlan {
+    fn slices_for(
+        &mut self,
+        step: u64,
+        var: &VarInfo,
+        table: &ChunkTable,
+    ) -> Result<Vec<Chunk>> {
+        self.shared.slices(self.rank, step, var, table)
+    }
+}
+
+/// One fleet worker's loop: fetch-before-offer over the shared plan.
+/// Mirrors the serial loop's polling/accounting (same helpers), but a
+/// step is always loaded before the output is probed — the worker's
+/// slices are part of the step's complete distribution and must move
+/// even if this worker's output then discards the step (counted in
+/// `dropped_steps`, exactly like the staged path's read-ahead).
+fn run_worker(
+    input: &mut dyn Engine,
+    output: &mut dyn Engine,
+    opts: &PipeOptions,
+    plan: &mut dyn StepPlan,
+) -> Result<PipeReport> {
+    let mut report = PipeReport::default();
+    let wall = Instant::now();
+    let mut poller = StepPoller::new(opts.idle_timeout);
+    // Input-step ordinal: the shared plan key. Advances for EVERY
+    // consumed input step — discarded ones included — so workers over
+    // identical input sequences always agree on it.
+    let mut ordinal = 0u64;
+    loop {
+        if let Some(max) = opts.max_steps {
+            // Forwarded + dropped: every worker's budget burns at the
+            // same input rate whatever its own output discards, so the
+            // fleet stops on a common input prefix (see
+            // `FleetOptions::max_steps`).
+            if report.steps + report.dropped_steps >= max {
+                break;
+            }
+        }
+        match fetch_step(input, opts, plan, ordinal)? {
+            Fetched::Step(payload) => {
+                ordinal += 1;
+                forward_payload(output, &payload, &mut report,
+                                opts.rank)?;
+                poller.activity();
+            }
+            Fetched::NotReady => poller.not_ready()?,
+            Fetched::Discarded => {
+                ordinal += 1;
+                poller.activity();
+            }
+            Fetched::EndOfStream => break,
+        }
+    }
+    output.close()?;
+    input.close()?;
+    report.overlap.wall_seconds = wall.elapsed().as_secs_f64().max(1e-9);
+    report.overlap.steps = report.steps;
+    report.ops.absorb(input.ops_report());
+    report.ops.absorb(output.ops_report());
+    Ok(report)
+}
+
+/// Run M fleet workers to completion. `inputs[i]` / `outputs[i]` are
+/// worker `i`'s engines (one read engine subscribed to all writers,
+/// one output shard each); both must match the layout's rank count.
+/// Workers run on scoped threads; the first worker error (by rank)
+/// fails the fleet after all workers wound down.
+pub fn run_fleet(
+    inputs: Vec<Box<dyn Engine>>,
+    outputs: Vec<Box<dyn Engine>>,
+    opts: FleetOptions,
+) -> Result<FleetReport> {
+    let readers = opts.layout.len();
+    if readers == 0 {
+        bail!("fleet needs at least one reader rank in its layout");
+    }
+    if inputs.len() != readers || outputs.len() != readers {
+        bail!(
+            "fleet layout has {readers} rank(s) but {} input / {} \
+             output engine(s) were supplied",
+            inputs.len(),
+            outputs.len()
+        );
+    }
+    let planner = Arc::new(SharedPlanner::new(
+        opts.strategy.clone(),
+        opts.layout.clone(),
+    ));
+    let worker_opts: Vec<PipeOptions> = (0..readers)
+        .map(|rank| PipeOptions {
+            rank,
+            instances: readers,
+            strategy: opts.strategy.clone(),
+            layout: opts.layout.clone(),
+            max_steps: opts.max_steps,
+            idle_timeout: opts.idle_timeout,
+            depth: 0,
+            operators: opts.operators.clone(),
+        })
+        .collect();
+
+    let wall = Instant::now();
+    let results: Vec<Result<PipeReport>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = inputs
+                .into_iter()
+                .zip(outputs)
+                .zip(worker_opts.iter())
+                .enumerate()
+                .map(|(rank, ((mut input, mut output), wopts))| {
+                    let planner = planner.clone();
+                    std::thread::Builder::new()
+                        .name(format!("fleet-r{rank}"))
+                        .spawn_scoped(scope, move || {
+                            let mut plan =
+                                FleetPlan { shared: planner, rank };
+                            run_worker(
+                                input.as_mut(),
+                                output.as_mut(),
+                                wopts,
+                                &mut plan,
+                            )
+                        })
+                        .expect("spawning a fleet worker thread")
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(anyhow!("fleet worker panicked"))
+                    })
+                })
+                .collect()
+        });
+
+    let mut report = FleetReport::new(readers);
+    let mut first_err: Option<anyhow::Error> = None;
+    for (rank, result) in results.into_iter().enumerate() {
+        match result {
+            Ok(worker) => report.absorb_worker(rank, worker),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err =
+                        Some(e.context(format!("fleet worker {rank}")));
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    report.wall_seconds = wall.elapsed().as_secs_f64().max(1e-9);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::{LoadBalanced, RoundRobin};
+    use crate::openpmd::chunk::WrittenChunkInfo;
+    use crate::openpmd::types::Datatype;
+
+    fn var() -> VarInfo {
+        VarInfo {
+            name: "/data/0/x".into(),
+            dtype: Datatype::F32,
+            shape: vec![40],
+            ops: OpChain::identity(),
+        }
+    }
+
+    fn table() -> ChunkTable {
+        ChunkTable {
+            dataset_extent: vec![40],
+            chunks: (0..4)
+                .map(|i| {
+                    WrittenChunkInfo::new(
+                        Chunk::new(vec![i * 10], vec![10]),
+                        i as usize,
+                        "h",
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn shared_plans_are_disjoint_complete_and_pruned() {
+        let layout = ReaderLayout::local(2).unwrap();
+        let planner = SharedPlanner::new(Arc::new(RoundRobin), layout);
+        let (v, t) = (var(), table());
+        let s0 = planner.slices(0, 7, &v, &t).unwrap();
+        assert_eq!(planner.cached(), 1, "entry must persist for rank 1");
+        let s1 = planner.slices(1, 7, &v, &t).unwrap();
+        assert_eq!(planner.cached(), 0, "entry must be pruned after all \
+                                         ranks took their share");
+        // Disjoint + complete union.
+        assert_eq!(s0.len() + s1.len(), 4);
+        for c in &s0 {
+            assert!(!s1.contains(c), "chunk {c:?} assigned twice");
+        }
+    }
+
+    #[test]
+    fn first_arriver_plan_is_what_every_rank_sees() {
+        // Rank 1 arrives first; rank 0 must still get the complement
+        // of what rank 1 took (one shared assignment, not two local
+        // ones that could disagree).
+        let layout = ReaderLayout::local(2).unwrap();
+        let planner =
+            SharedPlanner::new(Arc::new(LoadBalanced), layout.clone());
+        let (v, t) = (var(), table());
+        let s1 = planner.slices(1, 0, &v, &t).unwrap();
+        let s0 = planner.slices(0, 0, &v, &t).unwrap();
+        let direct = LoadBalanced.distribute(&t, &layout);
+        let want = |r: usize| -> Vec<Chunk> {
+            direct.slices(r).iter().map(|s| s.chunk.clone()).collect()
+        };
+        assert_eq!(s0, want(0));
+        assert_eq!(s1, want(1));
+    }
+
+    #[test]
+    fn discarding_output_still_fetches_the_workers_share() {
+        // A fleet worker whose OUTPUT discards a step must still fetch
+        // its assigned slices first (fetch-before-offer): skipping the
+        // fetch would leave that rank's share of the step unmoved by
+        // any rank, a silently incomplete union. The dropped payload
+        // is accounted, not silently absent.
+        use crate::testing::engines::{CountingSink, InjectedEngine};
+        use crate::testing::fixtures;
+        // 4 steps in the source, budget of 3: with rank 0's first
+        // offer discarded, BOTH workers must still consume exactly the
+        // same 3-step input prefix (max_steps counts forwarded +
+        // dropped), leaving step 3 untouched by everyone.
+        let budget = 3u64;
+        let src = std::env::temp_dir().join(format!(
+            "opmd-fleet-disc-{}.bp",
+            std::process::id()
+        ));
+        fixtures::write_chunked_bp(&src, budget + 1, 16, 4);
+        let inputs: Vec<Box<dyn Engine>> = vec![
+            Box::new(crate::adios::bp::BpReader::open(&src).unwrap()),
+            Box::new(crate::adios::bp::BpReader::open(&src).unwrap()),
+        ];
+        // Rank 0's output discards the first step; rank 1's accepts
+        // everything.
+        let outputs: Vec<Box<dyn Engine>> = vec![
+            Box::new(InjectedEngine::discarding(CountingSink::new(), 1)),
+            Box::new(CountingSink::new()),
+        ];
+        let mut opts =
+            FleetOptions::local(2, Arc::new(RoundRobin)).unwrap();
+        opts.max_steps = Some(budget);
+        let report = run_fleet(inputs, outputs, opts).unwrap();
+        std::fs::remove_file(&src).ok();
+
+        assert_eq!(report.steps(), budget);
+        let r0 = &report.per_rank[0];
+        let r1 = &report.per_rank[1];
+        assert_eq!(r0.dropped_steps, 1);
+        assert_eq!(r0.steps, budget - 1);
+        assert_eq!(r1.dropped_steps, 0);
+        assert_eq!(r1.steps, budget);
+        // THE fix under test: rank 0 fetched its share of every
+        // consumed step, including the one its output dropped (16
+        // elems x 4 B per step, half per rank) — and its budget did
+        // not stretch past the common input prefix.
+        assert_eq!(r0.bytes_in, budget * 8 * 4);
+        assert_eq!(r1.bytes_in, budget * 8 * 4);
+        assert_eq!(report.total_bytes_in(), budget * 16 * 4);
+        // The dropped step's bytes never reached rank 0's output.
+        assert_eq!(r0.bytes_out, (budget - 1) * 8 * 4);
+    }
+
+    #[test]
+    fn fleet_rejects_mismatched_engine_counts() {
+        let opts =
+            FleetOptions::local(2, Arc::new(RoundRobin)).unwrap();
+        let err =
+            run_fleet(Vec::new(), Vec::new(), opts).unwrap_err();
+        assert!(format!("{err}").contains("2 rank(s)"), "{err}");
+    }
+
+    #[test]
+    fn fleet_options_local_rejects_zero_readers() {
+        assert!(FleetOptions::local(0, Arc::new(RoundRobin)).is_err());
+    }
+}

@@ -260,6 +260,155 @@ impl OverlapReport {
     }
 }
 
+/// One fleet worker's distilled accounting, merged from its
+/// [`super::pipe::PipeReport`] after the run.
+#[derive(Clone, Debug, Default)]
+pub struct RankReport {
+    pub rank: usize,
+    /// Steps this worker forwarded to its output shard.
+    pub steps: u64,
+    pub dropped_steps: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub chunks: u64,
+    /// Seconds the worker spent actively loading + storing (its busy
+    /// time; wall minus this is time spent waiting on peers/stream).
+    pub busy_seconds: f64,
+}
+
+/// Straggler accounting for a parallel reader fleet: per-rank loads,
+/// rank imbalance, and aggregate throughput. The number the fleet
+/// exists to improve is [`FleetReport::aggregate_rate`]; the number
+/// that caps it is [`FleetReport::imbalance`] — a fleet is only as
+/// fast as its most-loaded rank, so max/mean rank bytes is the direct
+/// measure of how much of the M-fold parallelism a distribution
+/// strategy actually delivers.
+#[derive(Clone, Debug, Default)]
+pub struct FleetReport {
+    /// Configured fleet width (M).
+    pub readers: usize,
+    /// Wall-clock duration of the whole fleet run (slowest worker).
+    pub wall_seconds: f64,
+    pub per_rank: Vec<RankReport>,
+    /// Merged per-op samples of every worker (per-instance rates).
+    pub metrics: PerceivedThroughput,
+    /// Merged operator accounting of every worker's engines.
+    pub ops: OpsReport,
+}
+
+impl FleetReport {
+    pub fn new(readers: usize) -> FleetReport {
+        FleetReport { readers, ..Default::default() }
+    }
+
+    /// Fold one worker's pipe report into the fleet view.
+    pub fn absorb_worker(
+        &mut self,
+        rank: usize,
+        report: super::pipe::PipeReport,
+    ) {
+        self.per_rank.push(RankReport {
+            rank,
+            steps: report.steps,
+            dropped_steps: report.dropped_steps,
+            bytes_in: report.bytes_in,
+            bytes_out: report.bytes_out,
+            chunks: report.chunks,
+            busy_seconds: report.overlap.load_busy_seconds
+                + report.overlap.store_busy_seconds,
+        });
+        self.metrics.absorb(report.metrics);
+        self.ops.absorb(report.ops);
+    }
+
+    /// Steps the fleet forwarded (every worker consumes every input
+    /// step, so the max over ranks is the fleet's step count).
+    pub fn steps(&self) -> u64 {
+        self.per_rank.iter().map(|r| r.steps).max().unwrap_or(0)
+    }
+
+    pub fn total_bytes_in(&self) -> u64 {
+        self.per_rank.iter().map(|r| r.bytes_in).sum()
+    }
+
+    pub fn total_bytes_out(&self) -> u64 {
+        self.per_rank.iter().map(|r| r.bytes_out).sum()
+    }
+
+    /// Aggregate forwarded throughput, bytes/s over the fleet wall
+    /// clock — the figure `benches/fig_fleet.rs` sweeps over M.
+    pub fn aggregate_rate(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.total_bytes_out() as f64 / self.wall_seconds
+        }
+    }
+
+    /// Heaviest rank's input bytes — the straggler's load.
+    pub fn max_rank_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|r| r.bytes_in).max().unwrap_or(0)
+    }
+
+    /// Mean input bytes per rank.
+    pub fn mean_rank_bytes(&self) -> f64 {
+        if self.per_rank.is_empty() {
+            0.0
+        } else {
+            self.total_bytes_in() as f64 / self.per_rank.len() as f64
+        }
+    }
+
+    /// Max-over-mean rank byte load: 1.0 = perfectly balanced, M =
+    /// one rank carried everything. Mirrors
+    /// [`crate::distribution::metrics::Quality::balance_factor`], but
+    /// measured on what the fleet actually moved.
+    pub fn imbalance(&self) -> f64 {
+        let mean = self.mean_rank_bytes();
+        if mean <= 0.0 {
+            1.0
+        } else {
+            self.max_rank_bytes() as f64 / mean
+        }
+    }
+
+    /// Busy-time gap between the slowest and the average worker — the
+    /// seconds of parallelism lost to stragglers.
+    pub fn straggler_seconds(&self) -> f64 {
+        if self.per_rank.is_empty() {
+            return 0.0;
+        }
+        let max = self
+            .per_rank
+            .iter()
+            .map(|r| r.busy_seconds)
+            .fold(0.0f64, f64::max);
+        let mean = self
+            .per_rank
+            .iter()
+            .map(|r| r.busy_seconds)
+            .sum::<f64>()
+            / self.per_rank.len() as f64;
+        (max - mean).max(0.0)
+    }
+
+    /// One-line human summary for CLI/bench output.
+    pub fn summary(&self) -> String {
+        use crate::util::bytes::{fmt_bytes, fmt_rate};
+        format!(
+            "fleet of {}: {} steps, {} in, {} out, {} at imbalance \
+             {:.2}x (straggler +{:.3}s busy)",
+            self.readers,
+            self.steps(),
+            fmt_bytes(self.total_bytes_in()),
+            fmt_bytes(self.total_bytes_out()),
+            fmt_rate(self.aggregate_rate()),
+            self.imbalance(),
+            self.straggler_seconds(),
+        )
+    }
+}
+
 /// Fraction-of-runtime accounting (the §4.1 "portion of the simulation
 /// time that the IO plugin requires").
 #[derive(Clone, Copy, Debug, Default)]
@@ -391,6 +540,57 @@ mod tests {
         let r = m.report(OpKind::Store, 8);
         assert_eq!(r.ops, 0);
         assert_eq!(r.aggregate_rate, 0.0);
+    }
+
+    #[test]
+    fn fleet_report_math() {
+        use crate::pipeline::pipe::PipeReport;
+        let mut f = FleetReport::new(2);
+        let a = PipeReport {
+            steps: 3,
+            bytes_in: 300,
+            bytes_out: 300,
+            overlap: OverlapReport {
+                load_busy_seconds: 0.3,
+                store_busy_seconds: 0.1,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let b = PipeReport {
+            steps: 3,
+            bytes_in: 100,
+            bytes_out: 100,
+            overlap: OverlapReport {
+                load_busy_seconds: 0.1,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        f.absorb_worker(0, a);
+        f.absorb_worker(1, b);
+        f.wall_seconds = 2.0;
+        assert_eq!(f.steps(), 3);
+        assert_eq!(f.total_bytes_in(), 400);
+        assert_eq!(f.total_bytes_out(), 400);
+        assert!((f.aggregate_rate() - 200.0).abs() < 1e-9);
+        assert_eq!(f.max_rank_bytes(), 300);
+        // max 300 over mean 200 = 1.5x imbalance.
+        assert!((f.imbalance() - 1.5).abs() < 1e-9);
+        // busy: 0.4 vs 0.1 -> straggler gap 0.4 - 0.25.
+        assert!((f.straggler_seconds() - 0.15).abs() < 1e-9);
+        let s = f.summary();
+        assert!(s.contains("fleet of 2"), "{s}");
+        assert!(s.contains("1.50x"), "{s}");
+    }
+
+    #[test]
+    fn empty_fleet_report_is_neutral() {
+        let f = FleetReport::new(4);
+        assert_eq!(f.steps(), 0);
+        assert_eq!(f.imbalance(), 1.0);
+        assert_eq!(f.aggregate_rate(), 0.0);
+        assert_eq!(f.straggler_seconds(), 0.0);
     }
 
     #[test]

@@ -29,14 +29,30 @@
 //! Both paths share the same fetch/store/accounting code, so they are
 //! behavior-identical — byte-identical output for identical inputs —
 //! and [`run`] dispatches between them on `PipeOptions::depth`.
+//!
+//! **The parallel reader fleet** ([`fleet`], [`run_fleet`]) scales the
+//! adaptor across the reader dimension: M workers, each with its own
+//! reader engine subscribed to the N writer transports and its own
+//! output shard, coordinated by a shared per-step chunk plan (one
+//! complete + disjoint [`crate::distribution::Assignment`] per step
+//! and variable, computed once and handed out slice-by-slice). Each
+//! worker runs the pipe's step-forwarding core with the shared slice
+//! filter ([`pipe::StepPlan`]), fetching its share before offering
+//! the step downstream — so fleet shards at any M union to exactly
+//! the serial pipe's output. [`FleetReport`] carries the
+//! straggler accounting (per-rank bytes/busy time, max/mean imbalance,
+//! aggregate throughput) that `benches/fig_fleet.rs` sweeps over
+//! M ∈ {1, 2, 4} and strategy.
 
+pub mod fleet;
 pub mod metrics;
 pub mod pipe;
 pub mod staged;
 
+pub use fleet::{run_fleet, FleetOptions};
 pub use metrics::{
-    ops_summary, OpKind, OpsReport, OverlapReport, PerceivedThroughput,
-    ThroughputReport,
+    ops_summary, FleetReport, OpKind, OpsReport, OverlapReport,
+    PerceivedThroughput, RankReport, ThroughputReport,
 };
-pub use pipe::{run, run_pipe, PipeOptions, PipeReport};
+pub use pipe::{run, run_pipe, PipeOptions, PipeReport, StepPlan};
 pub use staged::run_staged;

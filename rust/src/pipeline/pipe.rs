@@ -32,11 +32,14 @@
 //! adding. Because both paths share this core and its accounting,
 //! they produce identical output bytes for identical inputs.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::adios::engine::{Bytes, Engine, GetHandle, StepStatus, VarDecl};
+use crate::adios::engine::{
+    Bytes, Engine, GetHandle, StepStatus, VarDecl, VarInfo,
+};
 use crate::adios::ops::{OpChain, OpsReport};
 use crate::distribution::{ChunkTable, ReaderLayout, Strategy};
 use crate::openpmd::chunk::Chunk;
@@ -52,7 +55,9 @@ pub struct PipeOptions {
     pub instances: usize,
     /// Distribution strategy for selecting chunks when parallel
     /// (ignored for a single instance, which forwards everything).
-    pub strategy: Box<dyn Strategy>,
+    /// Shared (`Arc`) so a fleet of workers can plan with one strategy
+    /// instance.
+    pub strategy: Arc<dyn Strategy>,
     /// Reader layout of the pipe stage (for topology-aware strategies).
     pub layout: ReaderLayout,
     /// Stop after this many *forwarded* steps (None = until end of
@@ -82,8 +87,9 @@ impl PipeOptions {
         PipeOptions {
             rank: 0,
             instances: 1,
-            strategy: Box::new(crate::distribution::RoundRobin),
-            layout: ReaderLayout::local(1),
+            strategy: Arc::new(crate::distribution::RoundRobin),
+            layout: ReaderLayout::local(1)
+                .expect("a one-reader layout is never empty"),
             max_steps: None,
             idle_timeout: Duration::from_secs(60),
             depth: 0,
@@ -189,6 +195,59 @@ impl StepPoller {
     }
 }
 
+/// The slice filter: decides which chunks of each variable's table THIS
+/// instance fetches for a given input step. The serial/staged pipe uses
+/// a [`LocalPlan`] (each instance plans independently from its own
+/// [`PipeOptions`]); the parallel fleet substitutes a shared planner
+/// that computes one step-wide [`crate::distribution::Assignment`] and
+/// hands every worker its disjoint share.
+pub trait StepPlan: Send {
+    /// Chunks of `var` this instance must fetch for input step `step`
+    /// (`table` is the step's merged chunk table for that variable).
+    fn slices_for(
+        &mut self,
+        step: u64,
+        var: &VarInfo,
+        table: &ChunkTable,
+    ) -> Result<Vec<Chunk>>;
+}
+
+/// The per-instance default plan: forward everything when solo,
+/// otherwise distribute the table locally and keep this rank's share.
+/// (With every instance running the same deterministic strategy over
+/// the same announced table, the local plans agree — the pre-fleet
+/// multi-instance behavior, preserved verbatim.)
+pub(crate) struct LocalPlan<'a> {
+    opts: &'a PipeOptions,
+}
+
+impl<'a> LocalPlan<'a> {
+    pub(crate) fn new(opts: &'a PipeOptions) -> LocalPlan<'a> {
+        LocalPlan { opts }
+    }
+}
+
+impl StepPlan for LocalPlan<'_> {
+    fn slices_for(
+        &mut self,
+        _step: u64,
+        _var: &VarInfo,
+        table: &ChunkTable,
+    ) -> Result<Vec<Chunk>> {
+        Ok(if self.opts.instances <= 1 {
+            table.chunks.iter().map(|c| c.chunk.clone()).collect()
+        } else {
+            let assignment =
+                self.opts.strategy.distribute(table, &self.opts.layout);
+            assignment
+                .slices(self.opts.rank)
+                .iter()
+                .map(|s| s.chunk.clone())
+                .collect()
+        })
+    }
+}
+
 /// One fetched step, detached from the input engine — everything the
 /// store stage needs to reproduce the step on any output engine, safe
 /// to hand across threads (payloads travel as `Arc`s).
@@ -241,12 +300,13 @@ pub(crate) fn open_step(input: &mut dyn Engine)
     })
 }
 
-/// Load the already-open input step: plan this instance's share of
-/// every variable's chunk table, defer all gets, execute them as one
-/// batched perform, and close the input step.
+/// Load the already-open input step: ask `plan` for this instance's
+/// share of every variable's chunk table, defer all gets, execute them
+/// as one batched perform, and close the input step.
 pub(crate) fn load_open_step(
     input: &mut dyn Engine,
     opts: &PipeOptions,
+    plan: &mut dyn StepPlan,
     step: u64,
 ) -> Result<StepPayload> {
     let attributes: Vec<(String, Attribute)> = input
@@ -276,16 +336,7 @@ pub(crate) fn load_open_step(
         let decl =
             VarDecl::new(var.name.clone(), var.dtype, var.shape.clone())
                 .with_ops(fwd_ops);
-        let mine: Vec<Chunk> = if opts.instances <= 1 {
-            table.chunks.iter().map(|c| c.chunk.clone()).collect()
-        } else {
-            let assignment = opts.strategy.distribute(&table, &opts.layout);
-            assignment
-                .slices(opts.rank)
-                .iter()
-                .map(|s| s.chunk.clone())
-                .collect()
-        };
+        let mine: Vec<Chunk> = plan.slices_for(step, &var, &table)?;
         let mut gets = Vec::with_capacity(mine.len());
         for chunk in mine {
             let get = input.get_deferred(&var.name, chunk.clone())?;
@@ -336,6 +387,7 @@ pub(crate) enum Fetched {
 pub(crate) fn fetch_step(
     input: &mut dyn Engine,
     opts: &PipeOptions,
+    plan: &mut dyn StepPlan,
     step: u64,
 ) -> Result<Fetched> {
     match open_step(input)? {
@@ -344,7 +396,7 @@ pub(crate) fn fetch_step(
         StepAvailability::Discarded => return Ok(Fetched::Discarded),
         StepAvailability::EndOfStream => return Ok(Fetched::EndOfStream),
     }
-    Ok(Fetched::Step(load_open_step(input, opts, step)?))
+    Ok(Fetched::Step(load_open_step(input, opts, plan, step)?))
 }
 
 /// Outcome of offering a payload to the output engine.
@@ -485,6 +537,19 @@ pub fn run_pipe(
     output: &mut dyn Engine,
     opts: PipeOptions,
 ) -> Result<PipeReport> {
+    let mut plan = LocalPlan::new(&opts);
+    run_pipe_with_plan(input, output, &opts, &mut plan)
+}
+
+/// [`run_pipe`] with an explicit slice filter — the fleet's per-worker
+/// loop, where `plan` is the shared step planner instead of a local
+/// per-instance one.
+pub(crate) fn run_pipe_with_plan(
+    input: &mut dyn Engine,
+    output: &mut dyn Engine,
+    opts: &PipeOptions,
+    plan: &mut dyn StepPlan,
+) -> Result<PipeReport> {
     let mut report = PipeReport::default();
     let wall = Instant::now();
     let mut poller = StepPoller::new(opts.idle_timeout);
@@ -522,7 +587,7 @@ pub fn run_pipe(
             other => bail!("output engine refused step: {other:?}"),
         }
         let fetch_index = report.steps + report.dropped_steps;
-        let payload = load_open_step(input, &opts, fetch_index)?;
+        let payload = load_open_step(input, opts, plan, fetch_index)?;
         account_load(&mut report, &payload, opts.rank);
         let seconds = store_into_open_step(output, &payload)?;
         account_store(&mut report, &payload, seconds, opts.rank);

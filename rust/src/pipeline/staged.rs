@@ -67,8 +67,8 @@ use crate::adios::engine::Engine;
 use crate::adios::ops::OpsReport;
 
 use super::pipe::{
-    fetch_step, forward_payload, Fetched, PipeOptions, PipeReport,
-    StepPayload, StepPoller,
+    fetch_step, forward_payload, Fetched, LocalPlan, PipeOptions,
+    PipeReport, StepPayload, StepPoller,
 };
 
 /// Run the pipe with a dedicated fetch thread reading ahead up to
@@ -145,6 +145,7 @@ fn fetch_loop(
     stop: &AtomicBool,
 ) -> Result<()> {
     let mut poller = StepPoller::new(opts.idle_timeout);
+    let mut plan = LocalPlan::new(opts);
     let mut step = 0u64;
     let result = loop {
         if stop.load(Ordering::Relaxed) {
@@ -153,7 +154,7 @@ fn fetch_loop(
             // for the idle timeout.
             break Ok(());
         }
-        match fetch_step(input, opts, step) {
+        match fetch_step(input, opts, &mut plan, step) {
             Ok(Fetched::Step(payload)) => {
                 step += 1;
                 if tx.send(payload).is_err() {

@@ -15,8 +15,8 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::adios::engine::{
-    Bytes, Engine, GetHandle, Mode, StepStatus, VarDecl, VarHandle,
-    VarInfo,
+    Bytes, Engine, GetHandle, Mode, PutQueue, StepStatus, VarDecl,
+    VarHandle, VarInfo,
 };
 use crate::adios::ops::OpsReport;
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
@@ -189,12 +189,157 @@ impl<E: Engine> Engine for InjectedEngine<E> {
     }
 }
 
+/// A fully-validating write engine that stores nothing: every put goes
+/// through the real two-phase queue (declaration checks, chunk bounds,
+/// payload sizes) and is then counted and dropped. The measurement
+/// sink for benches where a real output medium would dominate what is
+/// being measured — `benches/fig_fleet.rs` points every fleet worker
+/// at one so the sweep times the reader side, not disk writes.
+#[derive(Default)]
+pub struct CountingSink {
+    puts: PutQueue,
+    open: bool,
+    pub steps: u64,
+    pub bytes: u64,
+    pub chunks: u64,
+}
+
+impl CountingSink {
+    pub fn new() -> CountingSink {
+        CountingSink::default()
+    }
+}
+
+impl Engine for CountingSink {
+    fn engine_type(&self) -> &'static str {
+        "counting-sink"
+    }
+
+    fn mode(&self) -> Mode {
+        Mode::Write
+    }
+
+    fn begin_step(&mut self) -> Result<StepStatus> {
+        if self.open {
+            bail!("begin_step while a step is open");
+        }
+        self.open = true;
+        Ok(StepStatus::Ok)
+    }
+
+    fn define_variable(&mut self, decl: &VarDecl) -> Result<VarHandle> {
+        self.puts.define(decl)
+    }
+
+    fn put_deferred(&mut self, var: &VarHandle, chunk: Chunk, data: Bytes)
+        -> Result<()>
+    {
+        if !self.open {
+            bail!("put outside step");
+        }
+        self.puts.enqueue(var, chunk, data)
+    }
+
+    fn put_span(&mut self, var: &VarHandle, chunk: Chunk)
+        -> Result<&mut [u8]>
+    {
+        if !self.open {
+            bail!("put_span outside step");
+        }
+        self.puts.span(var, chunk)
+    }
+
+    fn perform_puts(&mut self) -> Result<()> {
+        for p in self.puts.drain() {
+            self.bytes += p.data.len() as u64;
+            self.chunks += 1;
+        }
+        Ok(())
+    }
+
+    fn put_attribute(&mut self, _name: &str, _value: Attribute)
+        -> Result<()>
+    {
+        if !self.open {
+            bail!("put_attribute outside step");
+        }
+        Ok(())
+    }
+
+    fn available_variables(&self) -> Vec<VarInfo> {
+        Vec::new()
+    }
+
+    fn available_chunks(&self, _var: &str) -> Vec<WrittenChunkInfo> {
+        Vec::new()
+    }
+
+    fn attribute(&self, _name: &str) -> Option<Attribute> {
+        None
+    }
+
+    fn attribute_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    fn get_deferred(&mut self, _var: &str, _selection: Chunk)
+        -> Result<GetHandle>
+    {
+        bail!("get on a write-mode sink")
+    }
+
+    fn perform_gets(&mut self) -> Result<()> {
+        bail!("perform_gets on a write-mode sink")
+    }
+
+    fn take_get(&mut self, _handle: GetHandle) -> Result<Bytes> {
+        bail!("take_get on a write-mode sink")
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        if !self.open {
+            bail!("end_step without begin_step");
+        }
+        self.perform_puts()?;
+        self.open = false;
+        self.steps += 1;
+        Ok(())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::adios::bp::{BpReader, BpWriter, WriterCtx};
     use crate::adios::engine::cast;
     use crate::openpmd::types::Datatype;
+
+    #[test]
+    fn counting_sink_counts_and_validates() {
+        let mut sink = CountingSink::new();
+        let decl = VarDecl::new("/x", Datatype::F32, vec![8]);
+        let h = sink.define_variable(&decl).unwrap();
+        // Puts outside a step are errors, like every real backend.
+        assert!(sink
+            .put_deferred(&h, Chunk::whole(vec![8]),
+                          cast::f32_to_bytes(&[0.0; 8]))
+            .is_err());
+        sink.begin_step().unwrap();
+        sink.put_deferred(&h, Chunk::new(vec![0], vec![4]),
+                          cast::f32_to_bytes(&[1.0; 4]))
+            .unwrap();
+        // Invalid chunks are still rejected.
+        assert!(sink
+            .put_deferred(&h, Chunk::new(vec![6], vec![4]),
+                          cast::f32_to_bytes(&[1.0; 4]))
+            .is_err());
+        sink.end_step().unwrap();
+        assert_eq!((sink.steps, sink.chunks, sink.bytes), (1, 1, 16));
+    }
 
     #[test]
     fn slow_engine_round_trips_unchanged() {

@@ -1,0 +1,329 @@
+//! Fleet-conformance harness: for any strategy and fleet width M, the
+//! union of the fleet's output shards must be **byte-identical** to
+//! what the serial single pipe forwards from the same stream — every
+//! element present exactly once (complete AND disjoint), with the
+//! same values, for every step.
+//!
+//! Shape mirrors [`super::engine_conformance`]: the library owns the
+//! machinery, `tests/fleet_conformance.rs` drives it across the
+//! (strategy × M) matrix. Each run builds a fresh N=2-writer SST
+//! stream with a skewed chunk table (one 8x chunk per writer — the
+//! shape that separates cost-aware from blind strategies), consumes
+//! it once through the serial pipe and once through [`run_fleet`],
+//! and compares the assembled step payloads element by element.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::adios::bp::{BpReader, BpWriter, WriterCtx};
+use crate::adios::engine::{cast, Engine, StepStatus, VarDecl};
+use crate::adios::sst::{
+    QueueConfig, QueueFullPolicy, SstReader, SstReaderOptions, SstWriter,
+    SstWriterOptions, WriterGroup,
+};
+use crate::distribution::{by_name, Strategy};
+use crate::openpmd::chunk::Chunk;
+use crate::openpmd::series::shard_path;
+use crate::openpmd::types::Datatype;
+use crate::pipeline::fleet::{run_fleet, FleetOptions};
+use crate::pipeline::pipe::{run_pipe, PipeOptions};
+
+const WRITERS: usize = 2;
+/// Per-writer chunk sizes in units of [`K`] elements: skewed so blind
+/// and cost-aware strategies produce different (but equally complete)
+/// assignments.
+const SKEW: [u64; 4] = [8, 1, 2, 1];
+const K: u64 = 16;
+const STEPS: u64 = 3;
+const VAR: &str = "/data/0/fleet/x";
+
+fn per_writer_elems() -> u64 {
+    SKEW.iter().sum::<u64>() * K
+}
+
+fn total_elems() -> u64 {
+    WRITERS as u64 * per_writer_elems()
+}
+
+/// Ground-truth value of global element `g` in step `s` — what every
+/// writer spawned by [`spawn_skewed_sst_writers`] emits.
+pub fn formula(step: u64, g: u64) -> f32 {
+    (step * 1000 + g) as f32
+}
+
+/// Spawn `writers` skewed SST writer ranks (collective discard group,
+/// blocking queue so nothing is dropped): writer `w` contributes the
+/// chunk sizes in `sizes` (elements) at base offset `w * sum(sizes)`
+/// of variable `var` (f32, shape `writers * sum(sizes)`), each element
+/// holding [`formula`]. Returns dial addresses + producer threads to
+/// join after the stream is drained. Shared by this harness and
+/// `benches/fig_fleet.rs`, so the bench and the conformance suite
+/// always exercise the same staging contract.
+pub fn spawn_skewed_sst_writers(
+    tag: &str,
+    writers: usize,
+    steps: u64,
+    sizes: Vec<u64>,
+    var: &'static str,
+) -> Result<(Vec<String>, Vec<JoinHandle<()>>)> {
+    let group = WriterGroup::new();
+    let per_writer: u64 = sizes.iter().sum();
+    let total = writers as u64 * per_writer;
+    let mut addrs = Vec::new();
+    let mut threads = Vec::new();
+    for w in 0..writers {
+        let mut writer = SstWriter::open(SstWriterOptions {
+            listen: format!("fleet-skew-{tag}-w{w}-{}",
+                            std::process::id()),
+            transport: "inproc".into(),
+            rank: w,
+            hostname: format!("node{w:04}"),
+            queue: QueueConfig {
+                policy: QueueFullPolicy::Block,
+                limit: 4,
+            },
+            group: Some(group.clone()),
+            ..Default::default()
+        })
+        .with_context(|| format!("opening writer {w}"))?;
+        addrs.push(writer.address());
+        let sizes = sizes.clone();
+        threads.push(std::thread::spawn(move || {
+            let decl = VarDecl::new(var, Datatype::F32, vec![total]);
+            let base = w as u64 * per_writer;
+            for step in 0..steps {
+                assert_eq!(writer.begin_step().unwrap(), StepStatus::Ok);
+                let h = writer.define_variable(&decl).unwrap();
+                let mut off = base;
+                for &n in &sizes {
+                    let xs: Vec<f32> =
+                        (0..n).map(|i| formula(step, off + i)).collect();
+                    writer
+                        .put_deferred(
+                            &h,
+                            Chunk::new(vec![off], vec![n]),
+                            cast::f32_to_bytes(&xs),
+                        )
+                        .unwrap();
+                    off += n;
+                }
+                writer.end_step().unwrap();
+            }
+            writer.close().unwrap();
+        }));
+    }
+    Ok((addrs, threads))
+}
+
+/// The harness's fixed fixture: N=2 writers over the [`SKEW`] table.
+fn spawn_writers(tag: &str)
+    -> Result<(Vec<String>, Vec<JoinHandle<()>>)>
+{
+    spawn_skewed_sst_writers(
+        tag,
+        WRITERS,
+        STEPS,
+        SKEW.iter().map(|f| f * K).collect(),
+        VAR,
+    )
+}
+
+fn open_reader(addrs: &[String], rank: usize) -> Result<SstReader> {
+    SstReader::open(SstReaderOptions {
+        writers: addrs.to_vec(),
+        transport: "inproc".into(),
+        rank,
+        hostname: "localhost".into(),
+        begin_step_timeout: Duration::from_secs(20),
+        codecs: None,
+    })
+    .with_context(|| format!("opening fleet reader {rank}"))
+}
+
+/// Assemble each step's full payload from a set of output shards,
+/// proving along the way that the shards' chunks cover every element
+/// of every step **exactly once**.
+fn assemble_union(shards: &[PathBuf]) -> Result<Vec<Vec<f32>>> {
+    let n = total_elems() as usize;
+    let mut readers = Vec::with_capacity(shards.len());
+    for path in shards {
+        readers.push(
+            BpReader::open(path)
+                .with_context(|| format!("opening shard {path:?}"))?,
+        );
+    }
+    let mut steps_out = Vec::new();
+    for step in 0..STEPS {
+        let mut coverage = vec![0u32; n];
+        let mut data = vec![0f32; n];
+        for (shard, reader) in readers.iter_mut().enumerate() {
+            match reader.begin_step()? {
+                StepStatus::Ok => {}
+                other => bail!(
+                    "shard {shard} step {step}: begin_step {other:?}"
+                ),
+            }
+            for info in reader.available_chunks(VAR) {
+                let bytes = reader.get(VAR, info.chunk.clone())?;
+                let xs = cast::bytes_to_f32(&bytes)?;
+                let off = info.chunk.offset[0] as usize;
+                for (i, &x) in xs.iter().enumerate() {
+                    data[off + i] = x;
+                    coverage[off + i] += 1;
+                }
+            }
+            reader.end_step()?;
+        }
+        for (g, &c) in coverage.iter().enumerate() {
+            if c != 1 {
+                bail!(
+                    "step {step}: element {g} covered {c} times across \
+                     {} shard(s) — union not complete+disjoint",
+                    shards.len()
+                );
+            }
+        }
+        steps_out.push(data);
+    }
+    for (shard, reader) in readers.iter_mut().enumerate() {
+        match reader.begin_step()? {
+            StepStatus::EndOfStream => {}
+            other => {
+                bail!("shard {shard}: trailing step status {other:?}")
+            }
+        }
+    }
+    Ok(steps_out)
+}
+
+fn tmp(tag: &str, name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "opmd-fleet-conf-{tag}-{name}-{}",
+        std::process::id()
+    ))
+}
+
+/// The serial single pipe's output for one fresh stream — the
+/// reference every fleet configuration must union to. Validated
+/// against the writers' [`formula`] before it is returned, so callers
+/// can reuse one reference across every (strategy, M) cell.
+pub fn serial_reference(tag: &str) -> Result<Vec<Vec<f32>>> {
+    let (addrs, producers) = spawn_writers(&format!("{tag}-serial"))?;
+    let mut input = open_reader(&addrs, 0)?;
+    let dst = tmp(tag, "serial.bp");
+    let mut output = BpWriter::create(&dst, WriterCtx::default())?;
+    let mut opts = PipeOptions::solo();
+    opts.idle_timeout = Duration::from_secs(20);
+    let report = run_pipe(&mut input, &mut output, opts)?;
+    for t in producers {
+        t.join().map_err(|_| anyhow::anyhow!("producer panicked"))?;
+    }
+    if report.steps != STEPS {
+        bail!("serial pipe forwarded {} of {STEPS} steps", report.steps);
+    }
+    let result = assemble_union(std::slice::from_ref(&dst));
+    std::fs::remove_file(&dst).ok();
+    let serial = result?;
+    for (step, data) in serial.iter().enumerate() {
+        for (g, &x) in data.iter().enumerate() {
+            if x != formula(step as u64, g as u64) {
+                bail!(
+                    "serial reference step {step} element {g}: {x} != \
+                     formula {}",
+                    formula(step as u64, g as u64)
+                );
+            }
+        }
+    }
+    Ok(serial)
+}
+
+/// Run the fleet at width `readers` with `strategy_name` over a fresh
+/// stream and return the union of its shards (validated complete +
+/// disjoint), deleting the shards afterwards.
+pub fn fleet_union(
+    tag: &str,
+    strategy_name: &str,
+    readers: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let case = format!("{tag}-{strategy_name}-m{readers}");
+    let (addrs, producers) = spawn_writers(&case)?;
+    let base = tmp(&case, "out.bp");
+    let mut inputs: Vec<Box<dyn Engine>> = Vec::with_capacity(readers);
+    let mut outputs: Vec<Box<dyn Engine>> = Vec::with_capacity(readers);
+    let mut shards = Vec::with_capacity(readers);
+    for rank in 0..readers {
+        inputs.push(Box::new(open_reader(&addrs, rank)?));
+        let shard = shard_path(&base, rank, readers);
+        outputs.push(Box::new(BpWriter::create(&shard, WriterCtx {
+            rank,
+            hostname: "localhost".into(),
+        })?));
+        shards.push(shard);
+    }
+    let strategy: Arc<dyn Strategy> = Arc::from(by_name(strategy_name)?);
+    let mut opts = FleetOptions::local(readers, strategy)?;
+    opts.idle_timeout = Duration::from_secs(20);
+    let report = run_fleet(inputs, outputs, opts)?;
+    for t in producers {
+        t.join().map_err(|_| anyhow::anyhow!("producer panicked"))?;
+    }
+    if report.steps() != STEPS {
+        bail!(
+            "[{case}] fleet forwarded {} of {STEPS} steps",
+            report.steps()
+        );
+    }
+    if report.total_bytes_in() != STEPS * total_elems() * 4 {
+        bail!(
+            "[{case}] fleet moved {} bytes, stream holds {}",
+            report.total_bytes_in(),
+            STEPS * total_elems() * 4
+        );
+    }
+    let result = assemble_union(&shards);
+    for shard in shards {
+        std::fs::remove_file(&shard).ok();
+    }
+    result.with_context(|| format!("[{case}] shard union"))
+}
+
+/// Compare one (strategy, M) fleet cell against an already-validated
+/// serial reference (from [`serial_reference`] — hoist it once per
+/// strategy, the reference is independent of the cell).
+pub fn assert_fleet_matches(
+    serial: &[Vec<f32>],
+    tag: &str,
+    strategy_name: &str,
+    readers: usize,
+) -> Result<()> {
+    let fleet = fleet_union(tag, strategy_name, readers)?;
+    if fleet != serial {
+        for (step, (f, s)) in fleet.iter().zip(serial).enumerate() {
+            if f != s {
+                let g = f
+                    .iter()
+                    .zip(s)
+                    .position(|(a, b)| a != b)
+                    .unwrap_or(0);
+                bail!(
+                    "[{strategy_name} M={readers}] step {step} differs \
+                     from the serial pipe first at element {g}: {} != {}",
+                    f[g],
+                    s[g]
+                );
+            }
+        }
+        bail!(
+            "[{strategy_name} M={readers}] fleet union and serial \
+             output disagree in step count: {} vs {}",
+            fleet.len(),
+            serial.len()
+        );
+    }
+    Ok(())
+}

@@ -6,14 +6,18 @@
 //! API is intentionally tiny — `check(cases, gen, prop)`.
 //!
 //! [`engine_conformance`] is the shared contract test for the two-phase
-//! engine API, run against every backend from `tests/`. [`engines`]
+//! engine API, run against every backend from `tests/`;
+//! [`fleet_conformance`] is its analog for the parallel reader fleet
+//! (shard union == serial pipe, for any strategy × M). [`engines`]
 //! provides a delegating engine wrapper with one injected behavior
-//! (latency, faults, discards) for pipe tests and benches, and
+//! (latency, faults, discards) plus a validating
+//! [`engines::CountingSink`] for pipe tests and benches, and
 //! [`fixtures`] the shared chunked-BP source generator they read.
 
 pub mod engine_conformance;
 pub mod engines;
 pub mod fixtures;
+pub mod fleet_conformance;
 
 use crate::util::rng::Rng;
 

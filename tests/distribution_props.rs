@@ -11,7 +11,7 @@
 
 use openpmd_stream::distribution::{
     by_name, metrics, verify_complete, Binpacking, ByHostname, ChunkTable,
-    Hyperslabs, ReaderLayout, RoundRobin, Strategy,
+    Hyperslabs, LoadBalanced, ReaderLayout, RoundRobin, Strategy,
 };
 use openpmd_stream::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use openpmd_stream::prop_assert;
@@ -60,11 +60,13 @@ impl Gen for ProblemGen {
             }
         }
         let readers = if co_scheduled {
-            ReaderLayout::nodes(nodes, readers_per_node)
+            ReaderLayout::nodes(nodes, readers_per_node).unwrap()
         } else {
             // Readers on a disjoint or partially overlapping node set.
             let reader_nodes = rng.range(1, nodes + 2);
-            let mut l = ReaderLayout::nodes(reader_nodes, readers_per_node);
+            let mut l =
+                ReaderLayout::nodes(reader_nodes, readers_per_node)
+                    .unwrap();
             if rng.chance(0.5) {
                 for r in l.ranks.iter_mut() {
                     r.hostname = format!("other-{}", r.hostname);
@@ -119,8 +121,10 @@ fn all_strategies() -> Vec<Box<dyn Strategy>> {
         Box::new(RoundRobin),
         Box::new(Hyperslabs),
         Box::new(Binpacking),
+        Box::new(LoadBalanced),
         Box::new(ByHostname::paper_default()),
         by_name("hostname:roundrobin:hyperslabs").unwrap(),
+        by_name("hostname:loadbalanced:loadbalanced").unwrap(),
     ]
 }
 
@@ -264,6 +268,132 @@ fn slices_stay_within_their_source_chunks() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------
+// LoadBalanced (LPT) properties
+// ---------------------------------------------------------------------
+
+/// A randomly *skewed* table: one straggler chunk at least as large as
+/// all other chunks combined (the load-imbalanced-producer shape), in
+/// a shuffled position, with announced byte costs on a coin flip.
+#[derive(Clone, Debug)]
+struct SkewedProblem {
+    table: ChunkTable,
+    readers: ReaderLayout,
+}
+
+struct SkewedGen {
+    max_small: u64,
+    max_small_count: usize,
+}
+
+impl Gen for SkewedGen {
+    type Value = SkewedProblem;
+
+    fn generate(&self, rng: &mut Rng) -> SkewedProblem {
+        let n_small = rng.range(1, self.max_small_count + 1);
+        let mut sizes: Vec<u64> = (0..n_small)
+            .map(|_| rng.below(self.max_small) + 1)
+            .collect();
+        let small_sum: u64 = sizes.iter().sum();
+        // The straggler dominates: >= the sum of everything else.
+        sizes.push(small_sum + rng.below(small_sum + 1));
+        rng.shuffle(&mut sizes);
+        let announce_bytes = rng.chance(0.5);
+        let mut chunks = Vec::new();
+        let mut off = 0u64;
+        for (i, &size) in sizes.iter().enumerate() {
+            let mut info = WrittenChunkInfo::new(
+                Chunk::new(vec![off], vec![size]),
+                i,
+                format!("node{:04}", i % 3),
+            );
+            if announce_bytes {
+                // Byte costs proportional to elements (f32 payloads):
+                // dominance carries over to the byte scale.
+                info = info.with_encoded_bytes(size * 4);
+            }
+            chunks.push(info);
+            off += size;
+        }
+        SkewedProblem {
+            table: ChunkTable { dataset_extent: vec![off], chunks },
+            readers: ReaderLayout::local(rng.range(1, 9)).unwrap(),
+        }
+    }
+}
+
+/// On straggler-dominated tables the LPT bound is exact: the straggler
+/// IS the makespan, so LoadBalanced's max-rank byte load can never
+/// exceed RoundRobin's (which may deal extra chunks onto the
+/// straggler's rank). This is the PR's acceptance property.
+#[test]
+fn loadbalanced_max_load_never_exceeds_round_robin_on_skewed_tables() {
+    let gen = SkewedGen { max_small: 800, max_small_count: 12 };
+    check_with(cfg(200), &gen, |p| {
+        let lb = LoadBalanced.distribute(&p.table, &p.readers);
+        let rr = RoundRobin.distribute(&p.table, &p.readers);
+        if let Err(e) = verify_complete(&p.table, &lb) {
+            return Err(format!("loadbalanced incomplete: {e}"));
+        }
+        let (lb_max, rr_max) =
+            (lb.max_cost(&p.readers), rr.max_cost(&p.readers));
+        prop_assert!(
+            lb_max <= rr_max,
+            "LPT max load {lb_max} > RoundRobin {rr_max} on a \
+             straggler-dominated table"
+        );
+        Ok(())
+    });
+}
+
+/// On *arbitrary* random tables RoundRobin can get lucky, so the
+/// provable relation is Graham's LPT guarantee transferred through
+/// OPT <= RR: 3 * LPT_max <= 4 * RR_max, always.
+#[test]
+fn loadbalanced_within_graham_bound_of_round_robin() {
+    check_with(cfg(150), &gen(), |p| {
+        if p.readers.is_empty() {
+            return Ok(());
+        }
+        let lb = LoadBalanced.distribute(&p.table, &p.readers);
+        let rr = RoundRobin.distribute(&p.table, &p.readers);
+        let (lb_max, rr_max) =
+            (lb.max_cost(&p.readers), rr.max_cost(&p.readers));
+        prop_assert!(
+            3 * (lb_max as u128) <= 4 * (rr_max as u128),
+            "LPT max {lb_max} beyond 4/3 of RoundRobin {rr_max}"
+        );
+        Ok(())
+    });
+}
+
+/// Cost-awareness: when announced byte sizes disagree with element
+/// counts, LoadBalanced balances the bytes. Equal-element chunks where
+/// one compressed 8x worse must see the heavy chunk isolated.
+#[test]
+fn loadbalanced_balances_announced_bytes() {
+    let mk = |off: u64, rank: usize, bytes: u64| {
+        WrittenChunkInfo::new(Chunk::new(vec![off], vec![100]), rank, "h")
+            .with_encoded_bytes(bytes)
+    };
+    let table = ChunkTable {
+        dataset_extent: vec![500],
+        chunks: vec![
+            mk(0, 0, 8000),
+            mk(100, 1, 1000),
+            mk(200, 2, 1000),
+            mk(300, 3, 1000),
+            mk(400, 4, 1000),
+        ],
+    };
+    let readers = ReaderLayout::local(2).unwrap();
+    let a = LoadBalanced.distribute(&table, &readers);
+    verify_complete(&table, &a).unwrap();
+    // Elements say 300 vs 200; bytes say 8000 vs 4000 — the byte view
+    // must win: the heavy chunk alone on one rank.
+    assert_eq!(a.max_cost(&readers), 8000);
 }
 
 #[test]

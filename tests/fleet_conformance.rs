@@ -1,0 +1,62 @@
+//! Fleet conformance across the (strategy × M) matrix: the union of a
+//! fleet's output shards must be byte-identical to the serial single
+//! pipe over the same N=2-writer skewed SST stream — complete,
+//! disjoint, and value-exact (the PR's acceptance bar asserts the
+//! RoundRobin / BinPacking / LoadBalanced cells at M ∈ {1, 2, 4}).
+//!
+//! The serial reference is independent of (strategy, M), so each test
+//! builds it once (already validated against the writers' formula by
+//! `serial_reference`) and sweeps the widths against it.
+
+use openpmd_stream::testing::fleet_conformance::{
+    assert_fleet_matches, fleet_union, serial_reference,
+};
+
+fn sweep(tag: &str, strategy: &str) {
+    let serial = serial_reference(tag)
+        .unwrap_or_else(|e| panic!("serial reference: {e:#}"));
+    for readers in [1usize, 2, 4] {
+        assert_fleet_matches(&serial, tag, strategy, readers)
+            .unwrap_or_else(|e| panic!("M={readers}: {e:#}"));
+    }
+}
+
+/// The acceptance-bar strategies, every fleet width.
+#[test]
+fn fleet_union_matches_serial_pipe_roundrobin() {
+    sweep("rr", "roundrobin");
+}
+
+#[test]
+fn fleet_union_matches_serial_pipe_binpacking() {
+    sweep("bin", "binpacking");
+}
+
+#[test]
+fn fleet_union_matches_serial_pipe_loadbalanced() {
+    sweep("lb", "loadbalanced");
+}
+
+/// The slicing strategies cut chunks (slice-subset fetches per writer,
+/// partial-selection service on the writer side): same contract.
+#[test]
+fn fleet_union_matches_serial_pipe_hyperslabs() {
+    sweep("hs", "hyperslabs");
+}
+
+#[test]
+fn fleet_union_matches_serial_pipe_hostname() {
+    // Readers all on "localhost" while writers live on node0000/0001:
+    // by-hostname degrades entirely to its fallback, which must still
+    // be complete + disjoint.
+    sweep("host", "hostname");
+}
+
+/// A union check alone (no serial reference) at a width that exceeds
+/// the chunk count for some strategies — idle ranks must still
+/// publish empty steps rather than desynchronize the shard family.
+#[test]
+fn fleet_wider_than_the_chunk_table_stays_complete() {
+    let merged = fleet_union("wide", "binpacking", 6).unwrap();
+    assert_eq!(merged.len(), 3);
+}

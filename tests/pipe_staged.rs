@@ -49,8 +49,8 @@ fn two_round_robin_instances_forward_disjoint_complete_union() {
         let opts = PipeOptions {
             rank,
             instances: 2,
-            strategy: Box::new(RoundRobin),
-            layout: ReaderLayout::local(2),
+            strategy: std::sync::Arc::new(RoundRobin),
+            layout: ReaderLayout::local(2).unwrap(),
             max_steps: None,
             idle_timeout: Duration::from_secs(10),
             depth: 0,

@@ -58,9 +58,20 @@ fn random_announce_msg(rng: &mut Rng) -> Msg {
             ops: OpChain::parse(chains[rng.range(0, chains.len())])
                 .unwrap(),
             chunks: (0..rng.below(4))
-                .map(|_| WrittenChunkInfo::new(random_chunk(rng),
-                                               rng.below(8) as usize,
-                                               "propnode"))
+                .map(|_| {
+                    let info = WrittenChunkInfo::new(
+                        random_chunk(rng),
+                        rng.below(8) as usize,
+                        "propnode",
+                    );
+                    // Exercise both the announced-size and the
+                    // unknown-size (sentinel) encodings.
+                    if rng.chance(0.5) {
+                        info.with_encoded_bytes(rng.below(1 << 20))
+                    } else {
+                        info
+                    }
+                })
                 .collect(),
         })
         .collect();

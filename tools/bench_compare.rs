@@ -1,0 +1,185 @@
+//! `bench-compare` — the CI perf-regression gate.
+//!
+//! Diffs the `BENCH_*.json` documents a CI run emitted (shared
+//! [`BenchJson`] format from `bench::table`) against the committed
+//! baselines:
+//!
+//! ```text
+//! bench-compare --baseline bench/baseline --current bench-results \
+//!               [--tolerance 0.30]
+//! ```
+//!
+//! For every baseline document the current run must contain a
+//! counterpart, and every **gated** metric must not regress beyond the
+//! tolerance: a higher-is-better metric fails when
+//! `current < baseline * (1 - tol)`, a lower-is-better one when
+//! `current > baseline * (1 + tol)`. Ungated metrics (absolute
+//! throughput on shared runners) are printed for the artifact trail
+//! but never fail the job. New metrics in the current run are reported
+//! as additions — commit a refreshed baseline to start gating them.
+//!
+//! Exit status: 0 clean, 1 regression(s), 2 usage/IO error.
+
+use std::path::{Path, PathBuf};
+
+use openpmd_stream::bench::{BenchJson, Table};
+use openpmd_stream::util::cli::Args;
+use openpmd_stream::util::json;
+
+fn load_dir(dir: &Path) -> Result<Vec<BenchJson>, String> {
+    let mut out = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry.map_err(|e| e.to_string())?.path();
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or_default();
+        if !name.starts_with("BENCH_") || !name.ends_with(".json") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let doc = json::parse(&text)
+            .map_err(|e| format!("parsing {}: {e}", path.display()))?;
+        out.push(
+            BenchJson::from_json(&doc)
+                .map_err(|e| format!("{}: {e}", path.display()))?,
+        );
+    }
+    out.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(out)
+}
+
+fn run() -> Result<bool, String> {
+    let args = Args::from_env(false).map_err(|e| e.to_string())?;
+    args.reject_unknown(&["baseline", "current", "tolerance"])
+        .map_err(|e| e.to_string())?;
+    let baseline_dir =
+        PathBuf::from(args.get_or("baseline", "bench/baseline"));
+    let current_dir =
+        PathBuf::from(args.get_or("current", "bench-results"));
+    let tolerance: f64 = args
+        .get_parse_or("tolerance", 0.30)
+        .map_err(|e| e.to_string())?;
+    if !(0.0..1.0).contains(&tolerance) {
+        return Err(format!(
+            "--tolerance must be in [0, 1), got {tolerance}"
+        ));
+    }
+
+    let baselines = load_dir(&baseline_dir)?;
+    if baselines.is_empty() {
+        return Err(format!(
+            "no BENCH_*.json baselines under {}",
+            baseline_dir.display()
+        ));
+    }
+    let currents = load_dir(&current_dir)?;
+
+    let mut t = Table::new(
+        &format!(
+            "bench-compare: {} vs {} (tolerance {:.0}%)",
+            current_dir.display(),
+            baseline_dir.display(),
+            tolerance * 100.0
+        ),
+        &["bench", "metric", "baseline", "current", "delta", "verdict"],
+    );
+    let mut regressions = 0usize;
+    for base in &baselines {
+        let Some(cur) = currents.iter().find(|c| c.name == base.name)
+        else {
+            t.row(vec![
+                base.name.clone(),
+                "(document)".into(),
+                "present".into(),
+                "MISSING".into(),
+                "-".into(),
+                "REGRESSION".into(),
+            ]);
+            regressions += 1;
+            continue;
+        };
+        for (key, bm) in &base.metrics {
+            let Some(cm) = cur.metrics.get(key) else {
+                t.row(vec![
+                    base.name.clone(),
+                    key.clone(),
+                    format!("{:.4}", bm.value),
+                    "MISSING".into(),
+                    "-".into(),
+                    if bm.gate { "REGRESSION" } else { "gone" }.into(),
+                ]);
+                if bm.gate {
+                    regressions += 1;
+                }
+                continue;
+            };
+            let delta = if bm.value.abs() > f64::EPSILON {
+                (cm.value - bm.value) / bm.value * 100.0
+            } else {
+                0.0
+            };
+            let regressed = bm.gate
+                && if bm.higher_is_better {
+                    cm.value < bm.value * (1.0 - tolerance)
+                } else {
+                    cm.value > bm.value * (1.0 + tolerance)
+                };
+            if regressed {
+                regressions += 1;
+            }
+            t.row(vec![
+                base.name.clone(),
+                key.clone(),
+                format!("{:.4}", bm.value),
+                format!("{:.4}", cm.value),
+                format!("{delta:+.1}%"),
+                if regressed {
+                    "REGRESSION".into()
+                } else if bm.gate {
+                    "ok".into()
+                } else {
+                    "info".into()
+                },
+            ]);
+        }
+        // Metrics the current run added (not yet in the baseline).
+        for key in cur.metrics.keys() {
+            if !base.metrics.contains_key(key) {
+                t.row(vec![
+                    base.name.clone(),
+                    key.clone(),
+                    "-".into(),
+                    format!("{:.4}", cur.metrics[key].value),
+                    "-".into(),
+                    "new".into(),
+                ]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    if regressions > 0 {
+        println!(
+            "\n{regressions} regression(s) beyond {:.0}% — refresh \
+             bench/baseline/*.json only with an explanation in the PR.",
+            tolerance * 100.0
+        );
+    } else {
+        println!("\nno gated regressions.");
+    }
+    Ok(regressions == 0)
+}
+
+fn main() {
+    match run() {
+        Ok(true) => {}
+        Ok(false) => std::process::exit(1),
+        Err(e) => {
+            eprintln!("bench-compare: {e}");
+            std::process::exit(2);
+        }
+    }
+}
