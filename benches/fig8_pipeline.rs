@@ -23,7 +23,7 @@ use std::time::Duration;
 
 use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
 use openpmd_stream::bench::fig8::{simulate, Fig8Params};
-use openpmd_stream::bench::{smoke_mode, Table};
+use openpmd_stream::bench::{smoke_mode, BenchJson, Table};
 use openpmd_stream::cluster::network::TransportKind;
 use openpmd_stream::pipeline::metrics::OpKind;
 use openpmd_stream::pipeline::pipe::{run, PipeOptions};
@@ -111,6 +111,7 @@ fn staged_pipe_rows(smoke: bool) {
     );
     let mut serial_sum_per_step = 0.0f64;
     let mut best_staged_wall = f64::MAX;
+    let mut best_efficiency = 0.0f64;
     for depth in [0usize, 2, 4] {
         let dst = std::env::temp_dir().join(format!(
             "fig8-pipe-dst{depth}-{}.bp",
@@ -131,6 +132,8 @@ fn staged_pipe_rows(smoke: bool) {
             serial_sum_per_step = per(o.serial_estimate());
         } else {
             best_staged_wall = best_staged_wall.min(per(o.wall_seconds));
+            best_efficiency =
+                best_efficiency.max(o.overlap_efficiency());
         }
         t.row(vec![
             if depth == 0 {
@@ -157,6 +160,27 @@ fn staged_pipe_rows(smoke: bool) {
             "NO OVERLAP — staged pipe regression?"
         }
     );
+
+    // Machine-readable gate: overlap efficiency and the staged/serial
+    // wall ratio are structural (latency is injected, so they hold on
+    // any machine); absolute per-step walls ride along ungated.
+    let mut json = BenchJson::new("fig8");
+    json.gauge("overlap_efficiency_best", best_efficiency, true);
+    json.gauge(
+        "staged_wall_over_serial_sum",
+        if serial_sum_per_step > 0.0 {
+            best_staged_wall / serial_sum_per_step
+        } else {
+            1.0
+        },
+        false,
+    );
+    json.info("serial_ms_per_step", serial_sum_per_step);
+    json.info("staged_best_ms_per_step", best_staged_wall);
+    match json.save() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => println!("BENCH_fig8.json not written: {e}"),
+    }
 }
 
 fn main() {

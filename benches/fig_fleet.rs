@@ -28,8 +28,12 @@ use openpmd_stream::bench::{smoke_mode, BenchJson, Table};
 use openpmd_stream::distribution::{by_name, Strategy};
 use openpmd_stream::pipeline::fleet::{run_fleet, FleetOptions};
 use openpmd_stream::pipeline::FleetReport;
+use openpmd_stream::openpmd::series::open_shard_family;
+use openpmd_stream::pipeline::pipe::{run_pipe, PipeOptions};
 use openpmd_stream::testing::engines::CountingSink;
-use openpmd_stream::testing::fleet_conformance::spawn_skewed_sst_writers;
+use openpmd_stream::testing::fleet_conformance::{
+    cleanup_family, fleet_into_shards, spawn_skewed_sst_writers,
+};
 use openpmd_stream::util::bytes::{fmt_bytes, fmt_rate};
 use openpmd_stream::util::cli::Args;
 
@@ -141,6 +145,38 @@ fn main() {
             ]);
         }
     }
+    // Reassembly row: run one fleet into REAL BP shards plus the
+    // merged index, reopen the family through the index as ONE
+    // multiplexed logical series, and forward it through the serial
+    // pipe — the closed produce → fleet → reassemble → consume chain.
+    // Recorded ungated (absolute throughput).
+    {
+        let (index, shards) =
+            fleet_into_shards("figf-reasm", "roundrobin", 2, 0)
+                .expect("fleet into shards");
+        let mut input =
+            open_shard_family(&index).expect("open shard family");
+        let mut sink = CountingSink::new();
+        let mut popts = PipeOptions::solo();
+        popts.idle_timeout = Duration::from_secs(30);
+        let rep = run_pipe(&mut input, &mut sink, popts)
+            .expect("reassembling pipe");
+        cleanup_family(&index, &shards);
+        assert!(rep.steps > 0, "reassembly forwarded no steps");
+        let rate =
+            rep.bytes_out as f64 / rep.overlap.wall_seconds.max(1e-9);
+        t.row(vec![
+            "2".into(),
+            "fleet+reassemble".into(),
+            rep.steps.to_string(),
+            fmt_rate(rate),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+        ]);
+        json.info("m2_reassemble_bytes_per_s", rate);
+    }
+
     print!("{}", t.render());
     t.save_csv("fig_fleet").ok();
 

@@ -576,14 +576,25 @@ pub enum EngineKind {
     Sst { transport: String },
     /// Serial JSON files.
     Json,
+    /// Read-only multiplexed shard family: open every shard named by a
+    /// fleet's `<out>.index.json` and present them as ONE logical
+    /// series via [`super::multiplex::MultiplexReader`]. The value is
+    /// the index path.
+    Shards { index: String },
+    /// Read-only ad-hoc merge of concrete series sources (BP files,
+    /// JSON step directories, or nested `*.index.json` shard families)
+    /// into one logical series — the `merge:a,b,...` spec.
+    Merge { sources: Vec<String> },
 }
 
 impl EngineKind {
-    /// Parse `"bp"`, `"bp:6"`, `"sst"`, `"sst:tcp"`, `"json"`.
+    /// Parse `"bp"`, `"bp:6"`, `"sst"`, `"sst:tcp"`, `"json"`,
+    /// `"shards:<index.json>"`, `"merge:a,b,..."`.
     ///
     /// Rejects degenerate configurations: `bp:0` (zero aggregation would
-    /// make node-level file aggregation divide-by-zero downstream) and
-    /// `sst:` (an empty transport name can never resolve).
+    /// make node-level file aggregation divide-by-zero downstream),
+    /// `sst:` (an empty transport name can never resolve), `shards:`
+    /// without an index path, and `merge:` with zero or empty sources.
     pub fn parse(s: &str) -> Result<EngineKind> {
         let (kind, arg) = match s.split_once(':') {
             Some((k, a)) => (k, Some(a)),
@@ -606,6 +617,28 @@ impl EngineKind {
                 EngineKind::Sst { transport: transport.to_string() }
             }
             "json" => EngineKind::Json,
+            "shards" => {
+                let index = arg.unwrap_or("");
+                if index.is_empty() {
+                    bail!("shards spec needs an index path \
+                           (shards:<out>.index.json)");
+                }
+                EngineKind::Shards { index: index.to_string() }
+            }
+            "merge" => {
+                let sources: Vec<String> = arg
+                    .unwrap_or("")
+                    .split(',')
+                    .map(|p| p.trim().to_string())
+                    .collect();
+                if sources.is_empty()
+                    || sources.iter().any(|p| p.is_empty())
+                {
+                    bail!("merge spec needs a non-empty comma-separated \
+                           source list (merge:a,b,...)");
+                }
+                EngineKind::Merge { sources }
+            }
             other => anyhow::bail!("unknown engine kind {other:?}"),
         })
     }
@@ -617,6 +650,10 @@ impl std::fmt::Display for EngineKind {
             EngineKind::Bp { aggregation } => write!(f, "bp:{aggregation}"),
             EngineKind::Sst { transport } => write!(f, "sst:{transport}"),
             EngineKind::Json => write!(f, "json"),
+            EngineKind::Shards { index } => write!(f, "shards:{index}"),
+            EngineKind::Merge { sources } => {
+                write!(f, "merge:{}", sources.join(","))
+            }
         }
     }
 }
@@ -687,6 +724,27 @@ mod tests {
     }
 
     #[test]
+    fn multiplex_engine_kinds_parse() {
+        assert_eq!(
+            EngineKind::parse("shards:out/run.bp.index.json").unwrap(),
+            EngineKind::Shards { index: "out/run.bp.index.json".into() }
+        );
+        assert_eq!(
+            EngineKind::parse("merge:a.bp, b-json ,c.bp").unwrap(),
+            EngineKind::Merge {
+                sources: vec!["a.bp".into(), "b-json".into(),
+                              "c.bp".into()],
+            }
+        );
+        // Degenerate specs are parse errors, not latent open failures.
+        assert!(EngineKind::parse("shards").is_err());
+        assert!(EngineKind::parse("shards:").is_err());
+        assert!(EngineKind::parse("merge").is_err());
+        assert!(EngineKind::parse("merge:").is_err());
+        assert!(EngineKind::parse("merge:a,,b").is_err());
+    }
+
+    #[test]
     fn degenerate_engine_kinds_rejected() {
         // bp:0 would make node-level aggregation divide by zero.
         assert!(EngineKind::parse("bp:0").is_err());
@@ -699,14 +757,16 @@ mod tests {
 
     #[test]
     fn engine_kind_display_round_trips() {
-        for s in ["bp:6", "sst:tcp", "json"] {
+        for s in ["bp:6", "sst:tcp", "json", "shards:run.bp.index.json",
+                  "merge:a.bp,b.bp"] {
             assert_eq!(EngineKind::parse(s).unwrap().to_string(), s);
         }
     }
 
     #[test]
     fn valid_kinds_survive_display_parse_display() {
-        for s in ["bp", "bp:12", "sst", "sst:inproc", "sst:tcp", "json"] {
+        for s in ["bp", "bp:12", "sst", "sst:inproc", "sst:tcp", "json",
+                  "shards:x.index.json", "merge:a,b,c"] {
             let kind = EngineKind::parse(s).unwrap();
             let rendered = kind.to_string();
             assert_eq!(EngineKind::parse(&rendered).unwrap(), kind,

@@ -501,6 +501,7 @@ impl Engine for JsonReader {
                         source_rank: rank,
                         hostname,
                         encoded_bytes,
+                        source_id: None,
                     });
                 }
             }

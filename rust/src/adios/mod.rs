@@ -12,6 +12,13 @@
 //!   paper's focus. Rides on a pluggable [`transport`].
 //! * [`json`] — a serial JSON backend for prototyping and debugging
 //!   (bottom of Fig. 3), trading performance for `cat`-ability.
+//! * [`multiplex`] — the multiplexing *virtual* read engine: an
+//!   arbitrary set of child readers (a fleet's shard family, or any
+//!   `merge:` composition of sources, backends mixed freely) presented
+//!   as ONE logical series behind the same [`Engine`] contract —
+//!   step-aligned with a discard-consistent barrier, tables merged
+//!   with per-child provenance, gets routed to the owning child and
+//!   batched one perform per child per step.
 //!
 //! Cross-cutting, [`ops`] is the per-variable *operator* layer (ADIOS2's
 //! `AddOperation`): compression/precision-reduction chains declared per
@@ -26,6 +33,7 @@
 pub mod engine;
 pub mod bp;
 pub mod json;
+pub mod multiplex;
 pub mod ops;
 pub mod region;
 pub mod sst;
@@ -36,4 +44,5 @@ pub use engine::{
     Bytes, Engine, EngineKind, GetHandle, Mode, StepStatus, VarDecl,
     VarHandle, VarInfo,
 };
+pub use multiplex::MultiplexReader;
 pub use ops::{OpChain, Operator, OpsError, OpsReport};

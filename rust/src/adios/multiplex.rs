@@ -1,0 +1,1119 @@
+//! The multiplexing virtual read engine: N child readers, ONE logical
+//! series.
+//!
+//! PR 4's reader fleet fans a stream *out* into `out.r<i>ofM.bp` shards
+//! plus a merged index; this module is the inverse — the reassembly
+//! side of the paper's loose-coupling chain (produce → fleet →
+//! reassemble → consume), and the general composition primitive behind
+//! it: [`MultiplexReader`] implements the full two-phase read
+//! [`Engine`] contract over an arbitrary set of child read engines, so
+//! *any* set of producers can be treated as one chunk table
+//! (Eisenhauer et al. 2024's N-writer/M-reader stage chaining).
+//!
+//! * **Steps are aligned across children.** `begin_step` opens the
+//!   next step on every child and only reports `Ok` once all of them
+//!   agree; a child that is `NotReady` leaves the others' steps parked
+//!   open until the barrier completes. The barrier is
+//!   *discard-consistent*: a step any child discards is discarded
+//!   everywhere (already-open peers consume it without data movement)
+//!   and accounted in [`MultiplexReader::discarded_steps`]. Children
+//!   must present the same step sequence — a family whose members end
+//!   at different steps is a typed alignment error, not silent
+//!   truncation.
+//! * **Tables merge with provenance.** `available_variables` is the
+//!   union of the children's declarations (conflicting redeclarations
+//!   are errors at the step barrier); `available_chunks` concatenates
+//!   the children's tables with each entry stamped with its child
+//!   index ([`WrittenChunkInfo::source_id`]), so distribution
+//!   strategies planning over the merged table keep the provenance
+//!   through their [`crate::distribution::ChunkSlice`]s.
+//! * **Gets route to the owning child.** `get_deferred` intersects the
+//!   selection with each child's coverage and defers one child-get per
+//!   intersection piece; `perform_gets` executes **one batched perform
+//!   per involved child per step** (preserving each backend's own
+//!   batching — one wire request per writer over SST, one seek-ordered
+//!   sweep over BP); `take_get` reassembles the pieces densely (a
+//!   selection that exactly matches one child chunk is handed through
+//!   zero-copy).
+//!
+//! [`open_merge`] builds a multiplexer over concrete series sources
+//! (BP files, JSON step directories, nested `*.index.json` shard
+//! families), and [`open_source`] resolves every input spec the pipe
+//! accepts (`sst+addr,...`, `shards:<index.json>`, `merge:a,b,...`, or
+//! a bare BP/JSON path) — "one engine" as the universal interface to
+//! any composition of sources, replacing the pipe CLI's former
+//! SST-or-BP-only input handling.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{
+    Bytes, Engine, GetHandle, GetQueue, Mode, StepStatus, VarDecl,
+    VarHandle, VarInfo,
+};
+use super::ops::OpsReport;
+use super::region;
+use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
+use crate::openpmd::Attribute;
+
+/// Where a child engine stands relative to the step barrier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ChildStep {
+    /// No step open (not yet polled this round, or consumed).
+    Idle,
+    /// The child's next step is open, parked until the barrier
+    /// completes.
+    Open,
+    /// The child discarded (and thereby consumed) this round's step —
+    /// remembered until the barrier resolves, so a still-NotReady
+    /// sibling cannot desynchronize the ordinals.
+    Dropped,
+    /// The child reported end of stream.
+    Ended,
+}
+
+/// One child engine plus its barrier state and display name.
+struct Child {
+    name: String,
+    engine: Box<dyn Engine>,
+    step: ChildStep,
+}
+
+/// The merged view of one aligned step: union of variable
+/// declarations plus the provenance-stamped merged chunk tables.
+struct StepView {
+    /// Merged declarations in deterministic (name-sorted) order.
+    vars: Vec<VarInfo>,
+    /// Variable name -> merged chunk table, every entry stamped with
+    /// its owning child via `source_id`.
+    tables: BTreeMap<String, Vec<WrittenChunkInfo>>,
+}
+
+/// One piece of a routed get: the sub-selection a single child serves.
+struct Piece {
+    child: usize,
+    chunk: Chunk,
+    handle: GetHandle,
+}
+
+/// The routing plan of one deferred multiplex get.
+struct GetPlan {
+    pieces: Vec<Piece>,
+    elem: usize,
+}
+
+/// See the module docs.
+pub struct MultiplexReader {
+    children: Vec<Child>,
+    view: Option<StepView>,
+    /// Steps dropped by the discard-consistent barrier.
+    discarded: u64,
+    /// Handle bookkeeping for the multiplexer's own get lifecycle.
+    gets: GetQueue,
+    /// Multiplex handle -> routing plan (child handles to redeem).
+    plans: BTreeMap<u64, GetPlan>,
+}
+
+impl MultiplexReader {
+    /// Multiplex `children` (all read-mode) into one logical series.
+    pub fn over(children: Vec<Box<dyn Engine>>) -> Result<MultiplexReader> {
+        let names = (0..children.len())
+            .map(|i| format!("child {i}"))
+            .collect();
+        Self::over_named(names, children)
+    }
+
+    /// [`MultiplexReader::over`] with display names (shard paths,
+    /// source specs) for error messages.
+    pub fn over_named(
+        names: Vec<String>,
+        children: Vec<Box<dyn Engine>>,
+    ) -> Result<MultiplexReader> {
+        if children.is_empty() {
+            bail!("multiplex reader needs at least one child engine");
+        }
+        if names.len() != children.len() {
+            bail!(
+                "multiplex reader got {} name(s) for {} child(ren)",
+                names.len(),
+                children.len()
+            );
+        }
+        for (name, child) in names.iter().zip(&children) {
+            if child.mode() != Mode::Read {
+                bail!("multiplex child {name} is not a read engine");
+            }
+        }
+        Ok(MultiplexReader {
+            children: names
+                .into_iter()
+                .zip(children)
+                .map(|(name, engine)| Child {
+                    name,
+                    engine,
+                    step: ChildStep::Idle,
+                })
+                .collect(),
+            view: None,
+            discarded: 0,
+            gets: GetQueue::default(),
+            plans: BTreeMap::new(),
+        })
+    }
+
+    /// Number of child engines.
+    pub fn width(&self) -> usize {
+        self.children.len()
+    }
+
+    /// Steps dropped by the discard-consistent barrier (a step any
+    /// child discarded was discarded everywhere and counted here).
+    pub fn discarded_steps(&self) -> u64 {
+        self.discarded
+    }
+
+    /// Build the merged step view once all children are `Open`:
+    /// union the declarations (conflicts are errors) and stamp every
+    /// merged chunk with its owning child.
+    fn build_view(&self) -> Result<StepView> {
+        let mut merged: BTreeMap<String, VarInfo> = BTreeMap::new();
+        let mut tables: BTreeMap<String, Vec<WrittenChunkInfo>> =
+            BTreeMap::new();
+        for (idx, child) in self.children.iter().enumerate() {
+            for var in child.engine.available_variables() {
+                match merged.get(&var.name) {
+                    None => {
+                        merged.insert(var.name.clone(), var.clone());
+                    }
+                    Some(seen) => {
+                        if seen.dtype != var.dtype
+                            || seen.shape != var.shape
+                            || seen.ops != var.ops
+                        {
+                            bail!(
+                                "multiplex child {} redeclares {:?} \
+                                 ({:?} {:?}) conflicting with an \
+                                 earlier child ({:?} {:?})",
+                                child.name, var.name, var.dtype,
+                                var.shape, seen.dtype, seen.shape
+                            );
+                        }
+                    }
+                }
+                let table = tables.entry(var.name.clone()).or_default();
+                for info in child.engine.available_chunks(&var.name) {
+                    table.push(info.with_source_id(idx));
+                }
+            }
+        }
+        Ok(StepView {
+            vars: merged.into_values().collect(),
+            tables,
+        })
+    }
+}
+
+impl Engine for MultiplexReader {
+    fn engine_type(&self) -> &'static str {
+        "multiplex"
+    }
+
+    fn mode(&self) -> Mode {
+        Mode::Read
+    }
+
+    fn begin_step(&mut self) -> Result<StepStatus> {
+        if self.view.is_some() {
+            bail!("begin_step while a step is open");
+        }
+        // Poll every child that has not resolved this round yet
+        // (children holding an Open or Dropped verdict from an earlier
+        // NotReady round are parked).
+        let mut any_not_ready = false;
+        for child in &mut self.children {
+            if child.step != ChildStep::Idle {
+                continue;
+            }
+            match child.engine.begin_step()? {
+                StepStatus::Ok => child.step = ChildStep::Open,
+                StepStatus::NotReady => any_not_ready = true,
+                // The child consumed (discarded) its own step; the
+                // verdict is remembered until every sibling resolves
+                // the same ordinal.
+                StepStatus::Discarded => child.step = ChildStep::Dropped,
+                StepStatus::EndOfStream => child.step = ChildStep::Ended,
+            }
+        }
+        if any_not_ready {
+            // Children with a verdict stay parked; the next poll only
+            // touches the stragglers — the barrier must not resolve
+            // an ordinal some child has not yet seen.
+            return Ok(StepStatus::NotReady);
+        }
+        if self.children.iter().any(|c| c.step == ChildStep::Dropped) {
+            // A sibling that instead ENDED never presented this
+            // ordinal at all: that is a misaligned family, not a
+            // consistent discard — erroring here keeps the "identical
+            // step sequences" contract instead of silently truncating
+            // behind a trailing discard.
+            if self.children.iter().any(|c| c.step == ChildStep::Ended)
+            {
+                bail!(
+                    "multiplexed sources are misaligned: a source \
+                     discarded a step that an already-ended sibling \
+                     never presented — a shard family must present \
+                     identical step sequences"
+                );
+            }
+            // Discard-consistent barrier: the step one child dropped is
+            // dropped everywhere. Peers that already opened it consume
+            // it without any data movement, exactly like the serial
+            // pipe's output-probe path.
+            for child in &mut self.children {
+                match child.step {
+                    ChildStep::Open => {
+                        child.engine.end_step()?;
+                        child.step = ChildStep::Idle;
+                    }
+                    ChildStep::Dropped => child.step = ChildStep::Idle,
+                    ChildStep::Idle | ChildStep::Ended => {}
+                }
+            }
+            self.discarded += 1;
+            return Ok(StepStatus::Discarded);
+        }
+        let ended = self
+            .children
+            .iter()
+            .filter(|c| c.step == ChildStep::Ended)
+            .count();
+        if ended == self.children.len() {
+            return Ok(StepStatus::EndOfStream);
+        }
+        if ended > 0 {
+            let done: Vec<&str> = self
+                .children
+                .iter()
+                .filter(|c| c.step == ChildStep::Ended)
+                .map(|c| c.name.as_str())
+                .collect();
+            bail!(
+                "multiplexed sources are misaligned: {} ended while \
+                 {} other source(s) still have steps — a shard family \
+                 must present identical step sequences",
+                done.join(", "),
+                self.children.len() - ended
+            );
+        }
+        // All Open: the barrier holds, merge the step.
+        self.view = Some(self.build_view()?);
+        Ok(StepStatus::Ok)
+    }
+
+    fn define_variable(&mut self, _decl: &VarDecl) -> Result<VarHandle> {
+        bail!("define_variable on a read-mode multiplex engine")
+    }
+
+    fn put_deferred(&mut self, _var: &VarHandle, _chunk: Chunk,
+                    _data: Bytes) -> Result<()> {
+        bail!("put on a read-mode multiplex engine")
+    }
+
+    fn put_span(&mut self, _var: &VarHandle, _chunk: Chunk)
+        -> Result<&mut [u8]>
+    {
+        bail!("put_span on a read-mode multiplex engine")
+    }
+
+    fn perform_puts(&mut self) -> Result<()> {
+        bail!("perform_puts on a read-mode multiplex engine")
+    }
+
+    fn put_attribute(&mut self, _name: &str, _value: Attribute)
+        -> Result<()>
+    {
+        bail!("put_attribute on a read-mode multiplex engine")
+    }
+
+    fn available_variables(&self) -> Vec<VarInfo> {
+        self.view
+            .as_ref()
+            .map(|v| v.vars.clone())
+            .unwrap_or_default()
+    }
+
+    fn available_chunks(&self, var: &str) -> Vec<WrittenChunkInfo> {
+        self.view
+            .as_ref()
+            .and_then(|v| v.tables.get(var).cloned())
+            .unwrap_or_default()
+    }
+
+    fn attribute(&self, name: &str) -> Option<Attribute> {
+        if self.view.is_none() {
+            return None;
+        }
+        // First child holding the attribute wins (a shard family
+        // replicates the full attribute set into every shard).
+        self.children
+            .iter()
+            .find_map(|c| c.engine.attribute(name))
+    }
+
+    fn attribute_names(&self) -> Vec<String> {
+        if self.view.is_none() {
+            return Vec::new();
+        }
+        let mut names = BTreeSet::new();
+        for child in &self.children {
+            names.extend(child.engine.attribute_names());
+        }
+        names.into_iter().collect()
+    }
+
+    fn get_deferred(&mut self, var: &str, selection: Chunk)
+        -> Result<GetHandle>
+    {
+        let view = self
+            .view
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("get outside step"))?;
+        let info = view
+            .vars
+            .iter()
+            .find(|v| v.name == var)
+            .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))?;
+        let elem = info.dtype.size();
+        // Route: one child-get per (child chunk ∩ selection) piece.
+        // Dedup per (child, piece) so two overlapping table entries of
+        // one child do not fetch the same region twice.
+        let mut pieces: Vec<(usize, Chunk)> = Vec::new();
+        if let Some(table) = view.tables.get(var) {
+            for entry in table {
+                let child = entry.source_id.unwrap_or(0);
+                if let Some(inter) = entry.chunk.intersect(&selection) {
+                    if !pieces
+                        .iter()
+                        .any(|(c, p)| *c == child && *p == inter)
+                    {
+                        pieces.push((child, inter));
+                    }
+                }
+            }
+        }
+        if pieces.is_empty() {
+            bail!("no chunks of {var:?} cover the selection");
+        }
+        let mut routed = Vec::with_capacity(pieces.len());
+        for (child, chunk) in pieces {
+            let handle = match self.children[child]
+                .engine
+                .get_deferred(var, chunk.clone())
+            {
+                Ok(h) => h,
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "routing get of {var:?} to multiplex {}",
+                        self.children[child].name
+                    )));
+                }
+            };
+            routed.push(Piece { child, chunk, handle });
+        }
+        let handle = self.gets.defer(var, selection);
+        self.plans
+            .insert(handle.0, GetPlan { pieces: routed, elem });
+        Ok(handle)
+    }
+
+    fn perform_gets(&mut self) -> Result<()> {
+        let batch = self.gets.drain_pending();
+        if batch.is_empty() {
+            return Ok(());
+        }
+        if self.view.is_none() {
+            bail!("perform_gets outside step");
+        }
+        // One batched perform per involved child — each backend keeps
+        // its own batching (one wire request per writer over SST, one
+        // file sweep over BP).
+        let involved: BTreeSet<usize> = batch
+            .iter()
+            .filter_map(|g| self.plans.get(&g.handle.0))
+            .flat_map(|p| p.pieces.iter().map(|piece| piece.child))
+            .collect();
+        for child in involved {
+            if let Err(e) = self.children[child].engine.perform_gets() {
+                let e = e.context(format!(
+                    "multiplex {} failed its batch",
+                    self.children[child].name
+                ));
+                for g in &batch {
+                    self.plans.remove(&g.handle.0);
+                }
+                self.gets.fail_batch(&batch, &e);
+                return Err(e);
+            }
+        }
+        // Redeem and reassemble each multiplex get.
+        let mut failure: Option<anyhow::Error> = None;
+        for g in &batch {
+            let plan = match self.plans.remove(&g.handle.0) {
+                Some(p) => p,
+                None => continue,
+            };
+            match assemble(&mut self.children, &g.selection, plan, &g.var)
+            {
+                Ok(data) => self.gets.complete(g.handle, data),
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            for g in &batch {
+                self.plans.remove(&g.handle.0);
+            }
+            self.gets.fail_batch(&batch, &e);
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    fn take_get(&mut self, handle: GetHandle) -> Result<Bytes> {
+        self.gets.take(handle)
+    }
+
+    fn end_step(&mut self) -> Result<()> {
+        if self.view.take().is_none() {
+            bail!("end_step without an aligned open step");
+        }
+        self.gets.reset();
+        self.plans.clear();
+        for child in &mut self.children {
+            debug_assert_eq!(child.step, ChildStep::Open);
+            child.engine.end_step()?;
+            child.step = ChildStep::Idle;
+        }
+        Ok(())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        self.gets.reset();
+        self.plans.clear();
+        self.view = None;
+        for child in &mut self.children {
+            child.engine.close()?;
+        }
+        Ok(())
+    }
+
+    fn ops_report(&self) -> OpsReport {
+        // Aggregate decode-side accounting across every child.
+        let mut report = OpsReport::default();
+        for child in &self.children {
+            report.absorb(child.engine.ops_report());
+        }
+        report
+    }
+}
+
+/// Reassemble one routed get from its children's piece payloads.
+/// Free function (not a method) so `perform_gets` can call it while
+/// holding the drained batch.
+fn assemble(
+    children: &mut [Child],
+    selection: &Chunk,
+    plan: GetPlan,
+    var: &str,
+) -> Result<Bytes> {
+    // Perfect alignment fast path: the selection IS one child chunk —
+    // hand the child's buffer through without copying, so a
+    // reassembled shard family costs what the pre-fleet serial stream
+    // cost.
+    if plan.pieces.len() == 1 && plan.pieces[0].chunk == *selection {
+        let piece = &plan.pieces[0];
+        return children[piece.child].engine.take_get(piece.handle);
+    }
+    let elem = plan.elem;
+    let n = selection.num_elements() as usize;
+    let mut out = vec![0u8; n * elem];
+    // Element-level coverage map: pieces from different children may
+    // overlap (replicated merge sources), so completeness is the
+    // UNION of the pieces — summing per-piece copy counts would let an
+    // overlap mask a genuine gap and return silent zeros. The map is
+    // marked through the same region walk that places the bytes.
+    let mut cov = vec![0u8; n];
+    for piece in &plan.pieces {
+        let data = children[piece.child].engine.take_get(piece.handle)?;
+        region::copy_region(&piece.chunk, &data, selection, &mut out,
+                            elem);
+        let ones = vec![1u8; piece.chunk.num_elements() as usize];
+        region::copy_region(&piece.chunk, &ones, selection, &mut cov, 1);
+    }
+    let covered = cov.iter().filter(|&&c| c != 0).count() as u64;
+    if covered < selection.num_elements() {
+        bail!(
+            "selection of {var:?} only partially covered by the \
+             multiplexed sources ({covered}/{} elements)",
+            selection.num_elements()
+        );
+    }
+    Ok(Arc::new(out))
+}
+
+// ======================================================================
+// Source openers
+// ======================================================================
+
+/// Open one concrete series source for multiplexing: a `*.index.json`
+/// path nests a whole shard family, a directory is a JSON step series,
+/// anything else a BP file.
+pub fn open_series_source(path: impl AsRef<Path>) -> Result<Box<dyn Engine>> {
+    let path = path.as_ref();
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or_default();
+    if name.ends_with(".index.json") {
+        return Ok(Box::new(
+            crate::openpmd::series::open_shard_family(path)?,
+        ));
+    }
+    if path.is_dir() {
+        return Ok(Box::new(super::json::JsonReader::open(path)?));
+    }
+    Ok(Box::new(super::bp::BpReader::open(path)?))
+}
+
+/// Open a `merge:a,b,...` composition: every source becomes one child
+/// of a [`MultiplexReader`]. Sources may mix backends freely (bp +
+/// json + nested shard families) — the merged stream is one logical
+/// series either way.
+pub fn open_merge(sources: &[String]) -> Result<MultiplexReader> {
+    if sources.is_empty() {
+        bail!("merge needs at least one source");
+    }
+    let mut children = Vec::with_capacity(sources.len());
+    for source in sources {
+        children.push(
+            open_series_source(source)
+                .with_context(|| format!("opening merge source {source}"))?,
+        );
+    }
+    MultiplexReader::over_named(sources.to_vec(), children)
+}
+
+/// Resolve a pipe *input spec* to an engine — the universal entry the
+/// CLI and tests share:
+///
+/// * `sst+ADDR[,ADDR...]` — subscribe to every listed SST writer rank
+///   (all addresses on one transport);
+/// * `shards:<out>.index.json` — reassemble a fleet's shard family;
+/// * `merge:a,b,...` — multiplex arbitrary series sources;
+/// * a directory — JSON step series;
+/// * anything else — a BP file.
+///
+/// `rank` names the consuming worker's rank within a reader fleet (it
+/// parameterizes the SST subscription; file-backed sources open one
+/// independent reader per worker).
+pub fn open_source(spec: &str, rank: usize) -> Result<Box<dyn Engine>> {
+    use super::engine::EngineKind;
+    use super::sst::{SstReader, SstReaderOptions};
+    if let Some(addrs) = spec.strip_prefix("sst+") {
+        let writers: Vec<String> =
+            addrs.split(',').map(|a| a.trim().to_string()).collect();
+        // One transport per reader connection set: every writer
+        // address must agree, or the non-matching ones would be dialed
+        // over the wrong transport and fail opaquely.
+        let tcp_count =
+            writers.iter().filter(|a| a.starts_with("tcp://")).count();
+        let transport = if tcp_count == writers.len() {
+            "tcp".to_string()
+        } else if tcp_count == 0 {
+            "inproc".to_string()
+        } else {
+            bail!(
+                "mixed SST transports in input: {tcp_count} of {} \
+                 writer address(es) are tcp:// — use one transport \
+                 for all writers",
+                writers.len()
+            );
+        };
+        return Ok(Box::new(SstReader::open(SstReaderOptions {
+            writers,
+            transport,
+            rank,
+            ..Default::default()
+        })?));
+    }
+    if spec.starts_with("shards:") || spec.starts_with("merge:") {
+        return match EngineKind::parse(spec)? {
+            EngineKind::Shards { index } => Ok(Box::new(
+                crate::openpmd::series::open_shard_family(&index)?,
+            )),
+            EngineKind::Merge { sources } => {
+                Ok(Box::new(open_merge(&sources)?))
+            }
+            other => bail!("{other} is not an input spec"),
+        };
+    }
+    open_series_source(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::bp::{BpReader, BpWriter, WriterCtx};
+    use crate::adios::engine::cast;
+    use crate::adios::json::JsonWriter;
+    use crate::openpmd::types::Datatype;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("opmd-mux-{name}-{}", std::process::id()))
+    }
+
+    /// Write `steps` steps of the f32 variable `/data/0/x` (extent
+    /// `total`) into `engine`, contributing only `[offset, offset+n)`
+    /// with value `step*1000 + g` at global element `g`.
+    fn write_slice(
+        engine: &mut dyn Engine,
+        steps: u64,
+        total: u64,
+        offset: u64,
+        n: u64,
+    ) {
+        let decl = VarDecl::new("/data/0/x", Datatype::F32, vec![total]);
+        for step in 0..steps {
+            assert_eq!(engine.begin_step().unwrap(), StepStatus::Ok);
+            engine
+                .put_attribute("/data/0/time",
+                               Attribute::F64(step as f64))
+                .unwrap();
+            let h = engine.define_variable(&decl).unwrap();
+            let xs: Vec<f32> = (0..n)
+                .map(|i| (step * 1000 + offset + i) as f32)
+                .collect();
+            engine
+                .put_deferred(&h, Chunk::new(vec![offset], vec![n]),
+                              cast::f32_to_bytes(&xs))
+                .unwrap();
+            engine.end_step().unwrap();
+        }
+        engine.close().unwrap();
+    }
+
+    #[test]
+    fn merges_two_bp_halves_into_one_series() {
+        let a = tmp("half-a.bp");
+        let b = tmp("half-b.bp");
+        let mut wa = BpWriter::create(&a, WriterCtx::default()).unwrap();
+        let mut wb = BpWriter::create(&b, WriterCtx {
+            rank: 1,
+            hostname: "h".into(),
+        })
+        .unwrap();
+        write_slice(&mut wa, 2, 8, 0, 4);
+        write_slice(&mut wb, 2, 8, 4, 4);
+        let mut mux = MultiplexReader::over(vec![
+            Box::new(BpReader::open(&a).unwrap()),
+            Box::new(BpReader::open(&b).unwrap()),
+        ])
+        .unwrap();
+        for step in 0..2u64 {
+            assert_eq!(mux.begin_step().unwrap(), StepStatus::Ok);
+            let vars = mux.available_variables();
+            assert_eq!(vars.len(), 1);
+            assert_eq!(vars[0].shape, vec![8]);
+            // Provenance: merged table stamps the child index.
+            let chunks = mux.available_chunks("/data/0/x");
+            assert_eq!(chunks.len(), 2);
+            assert_eq!(chunks[0].source_id, Some(0));
+            assert_eq!(chunks[1].source_id, Some(1));
+            assert_eq!(
+                mux.attribute("/data/0/time").unwrap().as_f64(),
+                Some(step as f64)
+            );
+            // A cross-child whole read reassembles both halves.
+            let data = mux.get("/data/0/x", Chunk::whole(vec![8])).unwrap();
+            let want: Vec<f32> =
+                (0..8).map(|g| (step * 1000 + g) as f32).collect();
+            assert_eq!(cast::bytes_to_f32(&data).unwrap(), want);
+            mux.end_step().unwrap();
+        }
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::EndOfStream);
+        mux.close().unwrap();
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn aligned_reads_route_to_the_owning_child() {
+        let a = tmp("route-a.bp");
+        let b = tmp("route-b.bp");
+        let mut wa = BpWriter::create(&a, WriterCtx::default()).unwrap();
+        let mut wb = BpWriter::create(&b, WriterCtx::default()).unwrap();
+        write_slice(&mut wa, 1, 8, 0, 4);
+        write_slice(&mut wb, 1, 8, 4, 4);
+        let mut mux = MultiplexReader::over(vec![
+            Box::new(BpReader::open(&a).unwrap()),
+            Box::new(BpReader::open(&b).unwrap()),
+        ])
+        .unwrap();
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::Ok);
+        // Two aligned gets, one per child chunk: one perform serves
+        // both children in one batch each.
+        let h0 = mux
+            .get_deferred("/data/0/x", Chunk::new(vec![0], vec![4]))
+            .unwrap();
+        let h1 = mux
+            .get_deferred("/data/0/x", Chunk::new(vec![4], vec![4]))
+            .unwrap();
+        mux.perform_gets().unwrap();
+        let lo = cast::bytes_to_f32(&mux.take_get(h0).unwrap()).unwrap();
+        let hi = cast::bytes_to_f32(&mux.take_get(h1).unwrap()).unwrap();
+        assert_eq!(lo, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(hi, vec![4.0, 5.0, 6.0, 7.0]);
+        mux.end_step().unwrap();
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn mixed_backend_merge_bp_plus_json() {
+        let a = tmp("mixed-a.bp");
+        let d = tmp("mixed-json");
+        let mut wa = BpWriter::create(&a, WriterCtx::default()).unwrap();
+        let mut wd = JsonWriter::create(&d, 1, "h").unwrap();
+        write_slice(&mut wa, 2, 6, 0, 3);
+        write_slice(&mut wd, 2, 6, 3, 3);
+        let mut mux = open_merge(&[
+            a.display().to_string(),
+            d.display().to_string(),
+        ])
+        .unwrap();
+        assert_eq!(mux.width(), 2);
+        for step in 0..2u64 {
+            assert_eq!(mux.begin_step().unwrap(), StepStatus::Ok);
+            let data = mux.get("/data/0/x", Chunk::whole(vec![6])).unwrap();
+            let want: Vec<f32> =
+                (0..6).map(|g| (step * 1000 + g) as f32).collect();
+            assert_eq!(cast::bytes_to_f32(&data).unwrap(), want);
+            mux.end_step().unwrap();
+        }
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::EndOfStream);
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn overlapping_children_cannot_mask_a_coverage_gap() {
+        // A covers [0,6) and B covers [2,6) — overlapping, with a
+        // genuine gap at [6,8). Summed piece counts (6 + 4 = 10 >= 8)
+        // would wave the whole-selection read through with silent
+        // zeros; the union coverage map must reject it.
+        let a = tmp("overlap-a.bp");
+        let b = tmp("overlap-b.bp");
+        let mut wa = BpWriter::create(&a, WriterCtx::default()).unwrap();
+        let mut wb = BpWriter::create(&b, WriterCtx::default()).unwrap();
+        write_slice(&mut wa, 1, 8, 0, 6);
+        write_slice(&mut wb, 1, 8, 2, 4);
+        let mut mux = MultiplexReader::over(vec![
+            Box::new(BpReader::open(&a).unwrap()),
+            Box::new(BpReader::open(&b).unwrap()),
+        ])
+        .unwrap();
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::Ok);
+        let err = mux
+            .get("/data/0/x", Chunk::whole(vec![8]))
+            .unwrap_err();
+        assert!(format!("{err}").contains("partially covered"),
+                "{err}");
+        // A selection the overlapping pair DOES cover reads fine (the
+        // replicas hold identical values by construction).
+        let data = mux
+            .get("/data/0/x", Chunk::new(vec![0], vec![6]))
+            .unwrap();
+        assert_eq!(cast::bytes_to_f32(&data).unwrap(),
+                   vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        mux.end_step().unwrap();
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn misaligned_step_counts_are_a_typed_error() {
+        let a = tmp("misalign-a.bp");
+        let b = tmp("misalign-b.bp");
+        let mut wa = BpWriter::create(&a, WriterCtx::default()).unwrap();
+        let mut wb = BpWriter::create(&b, WriterCtx::default()).unwrap();
+        write_slice(&mut wa, 3, 8, 0, 4);
+        write_slice(&mut wb, 2, 8, 4, 4);
+        let mut mux = MultiplexReader::over(vec![
+            Box::new(BpReader::open(&a).unwrap()),
+            Box::new(BpReader::open(&b).unwrap()),
+        ])
+        .unwrap();
+        for _ in 0..2 {
+            assert_eq!(mux.begin_step().unwrap(), StepStatus::Ok);
+            mux.end_step().unwrap();
+        }
+        let err = mux.begin_step().unwrap_err();
+        assert!(format!("{err}").contains("misaligned"), "{err}");
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn conflicting_redeclaration_is_an_error() {
+        let a = tmp("conflict-a.bp");
+        let b = tmp("conflict-b.bp");
+        let mut wa = BpWriter::create(&a, WriterCtx::default()).unwrap();
+        write_slice(&mut wa, 1, 8, 0, 4);
+        // Same variable name, different extent.
+        let mut wb = BpWriter::create(&b, WriterCtx::default()).unwrap();
+        write_slice(&mut wb, 1, 16, 4, 4);
+        let mut mux = MultiplexReader::over(vec![
+            Box::new(BpReader::open(&a).unwrap()),
+            Box::new(BpReader::open(&b).unwrap()),
+        ])
+        .unwrap();
+        let err = mux.begin_step().unwrap_err();
+        assert!(format!("{err}").contains("redeclares"), "{err}");
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    /// Minimal scripted read child: plays a fixed `begin_step` status
+    /// sequence (steps carry no data) and counts how often it was
+    /// polled, for barrier-behavior tests.
+    struct Scripted {
+        script: Vec<StepStatus>,
+        cursor: usize,
+        begins: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    }
+
+    impl Scripted {
+        fn new(
+            script: Vec<StepStatus>,
+        ) -> (Scripted, std::sync::Arc<std::sync::atomic::AtomicUsize>)
+        {
+            let begins = std::sync::Arc::new(
+                std::sync::atomic::AtomicUsize::new(0),
+            );
+            (Scripted { script, cursor: 0, begins: begins.clone() },
+             begins)
+        }
+    }
+
+    impl Engine for Scripted {
+        fn engine_type(&self) -> &'static str {
+            "scripted"
+        }
+
+        fn mode(&self) -> Mode {
+            Mode::Read
+        }
+
+        fn begin_step(&mut self) -> Result<StepStatus> {
+            self.begins
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let status = self
+                .script
+                .get(self.cursor)
+                .copied()
+                .unwrap_or(StepStatus::EndOfStream);
+            if self.cursor < self.script.len() {
+                self.cursor += 1;
+            }
+            Ok(status)
+        }
+
+        fn define_variable(&mut self, _d: &VarDecl) -> Result<VarHandle> {
+            bail!("read-mode")
+        }
+
+        fn put_deferred(&mut self, _v: &VarHandle, _c: Chunk, _d: Bytes)
+            -> Result<()>
+        {
+            bail!("read-mode")
+        }
+
+        fn put_span(&mut self, _v: &VarHandle, _c: Chunk)
+            -> Result<&mut [u8]>
+        {
+            bail!("read-mode")
+        }
+
+        fn perform_puts(&mut self) -> Result<()> {
+            bail!("read-mode")
+        }
+
+        fn put_attribute(&mut self, _n: &str, _v: Attribute)
+            -> Result<()>
+        {
+            bail!("read-mode")
+        }
+
+        fn available_variables(&self) -> Vec<VarInfo> {
+            Vec::new()
+        }
+
+        fn available_chunks(&self, _v: &str) -> Vec<WrittenChunkInfo> {
+            Vec::new()
+        }
+
+        fn attribute(&self, _n: &str) -> Option<Attribute> {
+            None
+        }
+
+        fn attribute_names(&self) -> Vec<String> {
+            Vec::new()
+        }
+
+        fn get_deferred(&mut self, _v: &str, _s: Chunk)
+            -> Result<GetHandle>
+        {
+            bail!("scripted child has no data")
+        }
+
+        fn perform_gets(&mut self) -> Result<()> {
+            Ok(())
+        }
+
+        fn take_get(&mut self, _h: GetHandle) -> Result<Bytes> {
+            bail!("scripted child has no data")
+        }
+
+        fn end_step(&mut self) -> Result<()> {
+            Ok(())
+        }
+
+        fn close(&mut self) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn discard_consistent_barrier_drops_the_step_everywhere() {
+        // Child A offers two data steps; child B discards the first.
+        // The barrier must discard step 0 everywhere (A's open step
+        // consumed without data movement) and align step 1.
+        use StepStatus::{Discarded, Ok as StepOk};
+        let (a, _) = Scripted::new(vec![StepOk, StepOk]);
+        let (b, _) = Scripted::new(vec![Discarded, StepOk]);
+        let mut mux = MultiplexReader::over(vec![
+            Box::new(a),
+            Box::new(b),
+        ])
+        .unwrap();
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::Discarded);
+        assert_eq!(mux.discarded_steps(), 1);
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::Ok);
+        mux.end_step().unwrap();
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::EndOfStream);
+    }
+
+    #[test]
+    fn not_ready_parks_resolved_children_without_repolling() {
+        // Child A is ready immediately; child B needs three polls.
+        // While B straggles, A's open step is parked — A must be
+        // polled exactly once per aligned step, or ordinals would
+        // shear apart.
+        use StepStatus::{EndOfStream, NotReady, Ok as StepOk};
+        let (a, a_begins) =
+            Scripted::new(vec![StepOk, EndOfStream]);
+        let (b, _) = Scripted::new(vec![NotReady, NotReady, StepOk,
+                                        EndOfStream]);
+        let mut mux = MultiplexReader::over(vec![
+            Box::new(a),
+            Box::new(b),
+        ])
+        .unwrap();
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::NotReady);
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::NotReady);
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::Ok);
+        assert_eq!(
+            a_begins.load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "parked child was re-polled"
+        );
+        mux.end_step().unwrap();
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::EndOfStream);
+    }
+
+    #[test]
+    fn late_discard_verdicts_survive_not_ready_rounds() {
+        // B discards step 0 while C is still NotReady: the Dropped
+        // verdict must be remembered (not re-polled), so when C
+        // resolves, the barrier discards ordinal 0 for everyone and
+        // step 1 aligns correctly.
+        use StepStatus::{Discarded, EndOfStream, NotReady,
+                         Ok as StepOk};
+        let (a, _) =
+            Scripted::new(vec![StepOk, StepOk, EndOfStream]);
+        let (b, b_begins) =
+            Scripted::new(vec![Discarded, StepOk, EndOfStream]);
+        let (c, _) = Scripted::new(vec![NotReady, StepOk, StepOk,
+                                        EndOfStream]);
+        let mut mux = MultiplexReader::over(vec![
+            Box::new(a),
+            Box::new(b),
+            Box::new(c),
+        ])
+        .unwrap();
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::NotReady);
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::Discarded);
+        assert_eq!(
+            b_begins.load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "a Dropped child must not be re-polled before the barrier \
+             resolves"
+        );
+        assert_eq!(mux.discarded_steps(), 1);
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::Ok);
+        mux.end_step().unwrap();
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::EndOfStream);
+    }
+
+    #[test]
+    fn trailing_discard_against_an_ended_sibling_is_misalignment() {
+        use StepStatus::{Discarded, EndOfStream, Ok as StepOk};
+        // A ends after one step; B discards a second ordinal A never
+        // presented. That is a misaligned family — it must error, not
+        // count a phantom discarded step and truncate silently.
+        let (a, _) = Scripted::new(vec![StepOk, EndOfStream]);
+        let (b, _) = Scripted::new(vec![StepOk, Discarded]);
+        let mut mux = MultiplexReader::over(vec![
+            Box::new(a),
+            Box::new(b),
+        ])
+        .unwrap();
+        assert_eq!(mux.begin_step().unwrap(), StepStatus::Ok);
+        mux.end_step().unwrap();
+        let err = mux.begin_step().unwrap_err();
+        assert!(format!("{err}").contains("misaligned"), "{err}");
+        assert_eq!(mux.discarded_steps(), 0);
+    }
+
+    #[test]
+    fn write_mode_children_are_rejected() {
+        let a = tmp("wmode.bp");
+        let w = BpWriter::create(&a, WriterCtx::default()).unwrap();
+        let err =
+            MultiplexReader::over(vec![Box::new(w)]).unwrap_err();
+        assert!(format!("{err}").contains("not a read engine"), "{err}");
+        std::fs::remove_file(&a).ok();
+    }
+
+    #[test]
+    fn empty_multiplexer_is_rejected() {
+        assert!(MultiplexReader::over(Vec::new()).is_err());
+    }
+}

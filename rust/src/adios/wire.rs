@@ -271,6 +271,9 @@ impl StepMeta {
                     source_rank,
                     hostname,
                     encoded_bytes,
+                    // Multiplex provenance is a reader-side annotation;
+                    // it is never encoded, so decoding yields None.
+                    source_id: None,
                 });
             }
             vars.push(VarMeta { name, dtype, shape, ops, chunks });

@@ -141,6 +141,11 @@ pub struct ChunkSlice {
     pub source_rank: usize,
     /// Writer hostname (for locality accounting).
     pub source_host: String,
+    /// Source engine of a multiplexed composition holding the data
+    /// ([`WrittenChunkInfo::source_id`]): preserved through the
+    /// assignment so a plan over a merged table still knows which
+    /// child each slice routes to. `None` for single-engine tables.
+    pub source_id: Option<usize>,
     /// Cost of moving this slice, for balancing: the source chunk's
     /// announced staged byte size ([`WrittenChunkInfo::encoded_bytes`],
     /// pro-rated for sub-chunks), or the element count when the writer
@@ -156,6 +161,7 @@ impl ChunkSlice {
             chunk: info.chunk.clone(),
             source_rank: info.source_rank,
             source_host: info.hostname.clone(),
+            source_id: info.source_id,
             cost: info
                 .encoded_bytes
                 .unwrap_or_else(|| info.chunk.num_elements()),
@@ -177,6 +183,7 @@ impl ChunkSlice {
             chunk,
             source_rank: info.source_rank,
             source_host: info.hostname.clone(),
+            source_id: info.source_id,
             cost,
         }
     }
@@ -390,6 +397,24 @@ mod tests {
             &info.clone().with_encoded_bytes(1),
             Chunk::new(vec![0], vec![1]));
         assert_eq!(tiny.cost, 1);
+    }
+
+    #[test]
+    fn slices_preserve_multiplex_provenance() {
+        // A merged (multiplexed) table stamps each chunk with its
+        // source engine; slicing — whole or sub-chunk — must carry it
+        // through to the Assignment.
+        let info = WrittenChunkInfo::new(
+            Chunk::new(vec![0], vec![100]), 2, "a")
+            .with_source_id(3);
+        assert_eq!(ChunkSlice::of(&info).source_id, Some(3));
+        let sub = ChunkSlice::with_chunk(
+            &info, Chunk::new(vec![10], vec![5]));
+        assert_eq!(sub.source_id, Some(3));
+        // Plain single-engine tables stay unstamped.
+        let plain = WrittenChunkInfo::new(
+            Chunk::new(vec![0], vec![4]), 0, "a");
+        assert_eq!(ChunkSlice::of(&plain).source_id, None);
     }
 
     #[test]

@@ -27,7 +27,22 @@
 //!   transport). The eager `put`/`get` of engine v1 remain as provided
 //!   conveniences built on the deferred core, and an engine-conformance
 //!   suite ([`testing::engine_conformance`]) proves deferred and eager
-//!   paths byte-identical for every backend.
+//!   paths byte-identical for every backend. On top of the backends,
+//!   [`adios::multiplex`] is the *virtual* read engine that closes the
+//!   composition loop: an arbitrary set of child readers — a reader
+//!   fleet's `out.r<i>ofM.bp` shard family opened through its merged
+//!   `<out>.index.json` ([`openpmd::series::open_shard_family`]), or
+//!   any ad-hoc `merge:a,b,...` of sources, backends mixed freely —
+//!   presented as ONE logical series behind the same engine contract.
+//!   Steps align across children under a discard-consistent barrier, a
+//!   merged chunk table carries per-child provenance
+//!   (`WrittenChunkInfo::source_id`, preserved through distribution
+//!   assignments), deferred gets route to the owning child with one
+//!   batched perform per child per step, and the engine-spec grammar
+//!   grows `shards:<index.json>` / `merge:a,b,...` — so a fleet's
+//!   output is consumable by the pipe, the analysis, or a second
+//!   fleet stage exactly like the pre-fleet serial stream
+//!   (byte-identical, proven by `tests/reassembly_conformance.rs`).
 //! * [`adios::ops`] — the per-variable **operator** subsystem (ADIOS2's
 //!   `AddOperation`): data transforms applied transparently at put/get
 //!   time, because once the network rather than the filesystem is the
@@ -82,6 +97,10 @@
 //!   serial pipe for every strategy, and
 //!   [`pipeline::FleetReport`] carries the straggler accounting
 //!   (per-rank bytes/busy time, max/mean imbalance, aggregate rate).
+//!   Fleet workers optionally stack staged read-ahead on top
+//!   (`FleetOptions::depth`), and the chain composes end to end:
+//!   produce → fleet(M) → reassemble (shard family as one multiplexed
+//!   series) → pipe/analyze/second fleet.
 //! * [`producer`] / [`analysis`] — the two pipeline endpoints: a
 //!   PIConGPU-like Kelvin–Helmholtz particle producer and a GAPD-like
 //!   SAXS diffraction consumer, both executing AOT-lowered JAX/Pallas

@@ -23,8 +23,8 @@ use anyhow::{bail, Context, Result};
 use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
 use openpmd_stream::adios::engine::{cast, Engine, StepStatus};
 use openpmd_stream::adios::json::JsonWriter;
-use openpmd_stream::adios::sst::{SstReader, SstReaderOptions, SstWriter,
-                                 SstWriterOptions};
+use openpmd_stream::adios::multiplex;
+use openpmd_stream::adios::sst::{SstWriter, SstWriterOptions};
 use openpmd_stream::adios::ops::OpChain;
 use openpmd_stream::analysis::SaxsAnalyzer;
 use openpmd_stream::bench::Table;
@@ -78,8 +78,15 @@ fn help() -> String {
         "streaming data pipelines with openPMD + ADIOS2 (paper reproduction)",
         "openpmd-stream <pipe|produce|analyze|validate|info|systems> [OPTIONS]",
         &[
-            OptSpec { name: "in", value_name: Some("PATH|sst://ADDR"),
-                      default: None, help: "input (BP file or SST address)" },
+            OptSpec { name: "in", value_name: Some("SPEC"),
+                      default: None,
+                      help: "input: a BP file, a JSON step directory, \
+                             sst+ADDR[,ADDR...] (subscribe to N SST \
+                             writers), shards:<out>.index.json \
+                             (reassemble a reader fleet's shard family \
+                             as ONE logical series), or \
+                             merge:a,b,... (multiplex arbitrary \
+                             sources, backends mixed freely)" },
             OptSpec { name: "out", value_name: Some("PATH"),
                       default: None, help: "output (BP file, JSON dir, or SST listen addr)" },
             OptSpec { name: "engine", value_name: Some("bp|json|sst[:tcp]"),
@@ -88,9 +95,11 @@ fn help() -> String {
                       default: Some("10"), help: "steps to produce/process" },
             OptSpec { name: "pipeline-depth", value_name: Some("N"),
                       default: Some("0"),
-                      help: "staged-pipe read-ahead steps (0 = serial; \
+                      help: "staged read-ahead steps (0 = serial; \
                              2 = double buffering: store step N while \
-                             loading step N+1)" },
+                             loading step N+1); with --readers M > 1 \
+                             each fleet worker gets its own staged \
+                             fetch thread" },
             OptSpec { name: "readers", value_name: Some("M"),
                       default: Some("1"),
                       help: "pipe: parallel reader-fleet width; M > 1 \
@@ -134,39 +143,17 @@ fn parse_operators(args: &Args) -> Result<Option<OpChain>> {
     }
 }
 
-/// Open one pipe input: `sst+ADDR[,ADDR...]` subscribes to every
-/// listed writer rank (the fleet's N side); anything else is a BP
-/// file. `rank` is the consuming worker's rank within the fleet.
+/// Open one pipe input via the universal spec resolver
+/// ([`multiplex::open_source`]): `sst+ADDR[,ADDR...]` subscribes to
+/// every listed writer rank (the fleet's N side);
+/// `shards:<out>.index.json` reassembles a fleet's shard family as one
+/// logical series; `merge:a,b,...` multiplexes arbitrary sources
+/// (backends mixed freely); a directory is a JSON series; anything
+/// else a BP file. `rank` is the consuming worker's rank within the
+/// fleet.
 fn open_pipe_input(input: &str, rank: usize) -> Result<Box<dyn Engine>> {
-    if let Some(addrs) = input.strip_prefix("sst+") {
-        let writers: Vec<String> =
-            addrs.split(',').map(|a| a.trim().to_string()).collect();
-        // One transport per reader connection set: every writer
-        // address must agree, or the non-matching ones would be dialed
-        // over the wrong transport and fail opaquely.
-        let tcp_count =
-            writers.iter().filter(|a| a.starts_with("tcp://")).count();
-        let transport = if tcp_count == writers.len() {
-            "tcp".to_string()
-        } else if tcp_count == 0 {
-            "inproc".to_string()
-        } else {
-            bail!(
-                "mixed SST transports in --in: {tcp_count} of {} \
-                 writer address(es) are tcp:// — use one transport \
-                 for all writers",
-                writers.len()
-            );
-        };
-        Ok(Box::new(SstReader::open(SstReaderOptions {
-            writers,
-            transport,
-            rank,
-            ..Default::default()
-        })?))
-    } else {
-        Ok(Box::new(BpReader::open(input)?))
-    }
+    multiplex::open_source(input, rank)
+        .with_context(|| format!("opening pipe input {input:?}"))
 }
 
 fn cmd_pipe(args: &Args) -> Result<()> {
@@ -236,12 +223,9 @@ fn cmd_pipe(args: &Args) -> Result<()> {
     }
 
     // Parallel fleet: M workers, each with its own reader subscribed
-    // to all writers and its own output shard; read-ahead within a
-    // worker comes from fleet parallelism itself.
-    if depth > 0 {
-        bail!("--pipeline-depth applies to the single-reader pipe; \
-               a fleet (--readers {readers}) overlaps via its workers");
-    }
+    // to all writers and its own output shard. `--pipeline-depth N`
+    // additionally gives every worker staged read-ahead, so per-worker
+    // load/store latencies overlap on top of the fleet parallelism.
     let mut inputs = Vec::with_capacity(readers);
     let mut outputs = Vec::with_capacity(readers);
     for rank in 0..readers {
@@ -251,6 +235,7 @@ fn cmd_pipe(args: &Args) -> Result<()> {
     let mut fopts = FleetOptions::local(readers, strategy)?;
     fopts.max_steps = max_steps;
     fopts.operators = operators;
+    fopts.depth = depth;
     let report = run_fleet(inputs, outputs, fopts)?;
     println!("{}", report.summary());
     for r in &report.per_rank {

@@ -116,6 +116,15 @@ pub struct WrittenChunkInfo {
     /// metadata-only probe); strategies then fall back to element
     /// counts.
     pub encoded_bytes: Option<u64>,
+    /// Which *source engine* of a multiplexed composition announced the
+    /// chunk — the reader-side analog of `source_rank` (which names the
+    /// producing writer rank). `None` for a plain single-engine table;
+    /// [`crate::adios::multiplex::MultiplexReader`] stamps the child
+    /// index when it merges its children's tables, so distribution
+    /// strategies and reports see where each merged chunk lives. Not a
+    /// written property: it never travels on the wire or in BP
+    /// metadata.
+    pub source_id: Option<usize>,
 }
 
 impl WrittenChunkInfo {
@@ -127,12 +136,19 @@ impl WrittenChunkInfo {
             source_rank,
             hostname: hostname.into(),
             encoded_bytes: None,
+            source_id: None,
         }
     }
 
     /// Attach the staged payload size in bytes (builder style).
     pub fn with_encoded_bytes(mut self, bytes: u64) -> Self {
         self.encoded_bytes = Some(bytes);
+        self
+    }
+
+    /// Attach the multiplex source id (builder style; reader-side only).
+    pub fn with_source_id(mut self, id: usize) -> Self {
+        self.source_id = Some(id);
         self
     }
 }

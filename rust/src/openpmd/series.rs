@@ -431,6 +431,10 @@ pub fn shard_path(
 /// `<base>.index.json` names every shard (rank order) plus the step
 /// count, so downstream tooling reassembles the series without
 /// globbing — the openPMD "one logical series, many files" pattern.
+///
+/// The write is **atomic** (temp file in the same directory, then
+/// `rename`): a reassembling reader polling for the index observes
+/// either no file or a complete one, never a torn prefix.
 pub fn write_shard_index(
     base: impl AsRef<std::path::Path>,
     readers: usize,
@@ -465,9 +469,229 @@ pub fn write_shard_index(
         "{}.index.json",
         base.display()
     ));
-    std::fs::write(&path, Json::Obj(doc).to_string_pretty())
-        .with_context(|| format!("writing shard index {path:?}"))?;
+    // Same-directory temp + rename: the rename is atomic on POSIX
+    // filesystems, so a concurrent open_shard_family never sees a
+    // partial document (fs::write alone leaves a visible torn file
+    // between create and the final flush).
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, Json::Obj(doc).to_string_pretty())
+        .with_context(|| format!("writing shard index temp {tmp:?}"))?;
+    std::fs::rename(&tmp, &path).with_context(|| {
+        format!("publishing shard index {path:?} (rename from {tmp:?})")
+    })?;
     Ok(path)
+}
+
+// ---------------------------------------------------------------------
+// Shard-index schema + reassembly (the inverse of the fleet)
+// ---------------------------------------------------------------------
+
+/// Parsed `<out>.index.json` document: the shard family one fleet run
+/// published, in rank order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardIndex {
+    /// Base series file name (`out.bp`).
+    pub series: String,
+    /// Fleet width M the index declares.
+    pub readers: usize,
+    /// Steps the fleet forwarded.
+    pub steps: u64,
+    /// Shard file names in rank order (`out.r<i>ofM.bp`; the bare
+    /// series name for M = 1).
+    pub shards: Vec<String>,
+}
+
+/// Typed shard-index failures, so a reassembling reader can tell a
+/// torn/incomplete family apart from a malformed document.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardIndexError {
+    /// Document is not the expected JSON schema.
+    Malformed(String),
+    /// The `shards` list length does not match the declared `readers`.
+    CountMismatch { declared: usize, listed: usize },
+    /// A shard name's `r<i>ofM` marker names a different family width
+    /// than the index declares.
+    WidthMismatch { name: String, marker: usize, declared: usize },
+    /// Two shard names claim the same rank.
+    DuplicateRank { rank: usize },
+    /// A shard name carries no parseable rank marker (or an
+    /// out-of-range one).
+    BadShardName { name: String },
+    /// A listed shard does not exist on disk.
+    MissingShard { path: std::path::PathBuf },
+}
+
+impl std::fmt::Display for ShardIndexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardIndexError::Malformed(why) => {
+                write!(f, "malformed shard index: {why}")
+            }
+            ShardIndexError::CountMismatch { declared, listed } => write!(
+                f,
+                "shard index declares {declared} reader(s) but lists \
+                 {listed} shard(s)"
+            ),
+            ShardIndexError::WidthMismatch {
+                name,
+                marker,
+                declared,
+            } => write!(
+                f,
+                "shard {name:?} is marked as one of {marker} but the \
+                 index declares a family of {declared}"
+            ),
+            ShardIndexError::DuplicateRank { rank } => {
+                write!(f, "shard index lists rank {rank} twice")
+            }
+            ShardIndexError::BadShardName { name } => write!(
+                f,
+                "shard {name:?} carries no valid r<i>ofM rank marker"
+            ),
+            ShardIndexError::MissingShard { path } => {
+                write!(f, "shard {} is missing on disk", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardIndexError {}
+
+/// Parse the `r<i>ofM` marker out of a shard file name
+/// (`out.r2of4.bp` → `(2, 4)`).
+fn parse_shard_marker(name: &str) -> Option<(usize, usize)> {
+    for piece in name.split('.') {
+        if let Some(rest) = piece.strip_prefix('r') {
+            if let Some((i, m)) = rest.split_once("of") {
+                if let (Ok(i), Ok(m)) = (i.parse(), m.parse()) {
+                    return Some((i, m));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Parse and validate a shard-index document: the declared width must
+/// match the shard list, every shard's `r<i>ofM` marker must agree
+/// with it, and the ranks must cover `0..M` exactly once (a single
+/// shard family keeps the unmarked base name, rank 0).
+pub fn parse_shard_index(text: &str)
+    -> std::result::Result<ShardIndex, ShardIndexError>
+{
+    let doc = crate::util::json::parse(text)
+        .map_err(ShardIndexError::Malformed)?;
+    let series = doc
+        .get("series")
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| {
+            ShardIndexError::Malformed("missing \"series\" name".into())
+        })?
+        .to_string();
+    let readers = doc
+        .get("readers")
+        .and_then(|r| r.as_u64())
+        .ok_or_else(|| {
+            ShardIndexError::Malformed("missing \"readers\" count".into())
+        })? as usize;
+    if readers == 0 {
+        return Err(ShardIndexError::Malformed(
+            "a zero-reader shard family cannot exist".into(),
+        ));
+    }
+    let steps = doc.get("steps").and_then(|s| s.as_u64()).ok_or_else(
+        || ShardIndexError::Malformed("missing \"steps\" count".into()),
+    )?;
+    let shards: Vec<String> = doc
+        .get("shards")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| {
+            ShardIndexError::Malformed("missing \"shards\" list".into())
+        })?
+        .iter()
+        .map(|s| {
+            s.as_str().map(str::to_string).ok_or_else(|| {
+                ShardIndexError::Malformed(
+                    "non-string shard entry".into(),
+                )
+            })
+        })
+        .collect::<std::result::Result<_, _>>()?;
+    if shards.len() != readers {
+        return Err(ShardIndexError::CountMismatch {
+            declared: readers,
+            listed: shards.len(),
+        });
+    }
+    // Rank coverage: each name's marker must agree with the declared
+    // width and the ranks must be exactly {0, .., M-1}.
+    let mut seen = vec![false; readers];
+    for name in &shards {
+        let rank = match parse_shard_marker(name) {
+            Some((i, m)) => {
+                if m != readers {
+                    return Err(ShardIndexError::WidthMismatch {
+                        name: name.clone(),
+                        marker: m,
+                        declared: readers,
+                    });
+                }
+                if i >= readers {
+                    return Err(ShardIndexError::BadShardName {
+                        name: name.clone(),
+                    });
+                }
+                i
+            }
+            // M = 1 keeps the unmarked base name: rank 0.
+            None if readers == 1 => 0,
+            None => {
+                return Err(ShardIndexError::BadShardName {
+                    name: name.clone(),
+                })
+            }
+        };
+        if seen[rank] {
+            return Err(ShardIndexError::DuplicateRank { rank });
+        }
+        seen[rank] = true;
+    }
+    Ok(ShardIndex { series, readers, steps, shards })
+}
+
+/// Open a fleet's shard family as ONE logical series: parse the
+/// `<out>.index.json` the fleet wrote, open every shard (BP file or
+/// JSON step directory, resolved next to the index), and hand back a
+/// [`crate::adios::multiplex::MultiplexReader`] whose merged stream is
+/// byte-identical to the pre-fleet serial pipe's output. Missing
+/// shards surface as the typed [`ShardIndexError::MissingShard`].
+pub fn open_shard_family(
+    index: impl AsRef<std::path::Path>,
+) -> Result<crate::adios::multiplex::MultiplexReader> {
+    let index = index.as_ref();
+    let text = std::fs::read_to_string(index)
+        .with_context(|| format!("reading shard index {index:?}"))?;
+    let parsed = parse_shard_index(&text)
+        .map_err(|e| anyhow::anyhow!("{index:?}: {e}"))?;
+    let dir = index.parent().unwrap_or_else(|| std::path::Path::new(""));
+    let mut names = Vec::with_capacity(parsed.shards.len());
+    let mut children: Vec<Box<dyn Engine>> =
+        Vec::with_capacity(parsed.shards.len());
+    for name in &parsed.shards {
+        let path = dir.join(name);
+        if !path.exists() {
+            return Err(anyhow::anyhow!(
+                "{}",
+                ShardIndexError::MissingShard { path }
+            ));
+        }
+        children.push(
+            crate::adios::multiplex::open_series_source(&path)
+                .with_context(|| format!("opening shard {name}"))?,
+        );
+        names.push(name.clone());
+    }
+    crate::adios::multiplex::MultiplexReader::over_named(names, children)
 }
 
 #[cfg(test)]
@@ -559,6 +783,99 @@ mod tests {
         assert_eq!(shards.len(), 3);
         assert_eq!(shards[0].as_str(), Some("fleet.r0of3.bp"));
         assert_eq!(shards[2].as_str(), Some("fleet.r2of3.bp"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_index_write_is_atomic_and_round_trips() {
+        let dir = std::env::temp_dir()
+            .join(format!("opmd-shardidx-atomic-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("fleet.bp");
+        // Overwrite an existing (stale) index: rename replaces it in
+        // one step.
+        std::fs::write(format!("{}.index.json", base.display()),
+                       "{ torn garbage").unwrap();
+        let path = write_shard_index(&base, 4, 9).unwrap();
+        // No temp file may survive the publish.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.file_name().to_string_lossy().contains(".tmp.")
+            })
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let parsed = parse_shard_index(
+            &std::fs::read_to_string(&path).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(parsed.series, "fleet.bp");
+        assert_eq!(parsed.readers, 4);
+        assert_eq!(parsed.steps, 9);
+        assert_eq!(
+            parsed.shards,
+            (0..4)
+                .map(|r| format!("fleet.r{r}of4.bp"))
+                .collect::<Vec<_>>()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_index_schema_violations_are_typed() {
+        // Declared M does not match the shard list.
+        let mismatch = r#"{"series": "s.bp", "readers": 3, "steps": 1,
+            "shards": ["s.r0of3.bp", "s.r1of3.bp"]}"#;
+        assert_eq!(
+            parse_shard_index(mismatch).unwrap_err(),
+            ShardIndexError::CountMismatch { declared: 3, listed: 2 }
+        );
+        // Marker width disagrees with the declared family width.
+        let width = r#"{"series": "s.bp", "readers": 2, "steps": 1,
+            "shards": ["s.r0of2.bp", "s.r1of4.bp"]}"#;
+        assert_eq!(
+            parse_shard_index(width).unwrap_err(),
+            ShardIndexError::WidthMismatch {
+                name: "s.r1of4.bp".into(),
+                marker: 4,
+                declared: 2,
+            }
+        );
+        // Two shards claiming one rank.
+        let dup = r#"{"series": "s.bp", "readers": 2, "steps": 1,
+            "shards": ["s.r0of2.bp", "s.r0of2.bp"]}"#;
+        assert_eq!(
+            parse_shard_index(dup).unwrap_err(),
+            ShardIndexError::DuplicateRank { rank: 0 }
+        );
+        // Unmarked names are only legal in an M = 1 family.
+        let unmarked = r#"{"series": "s.bp", "readers": 2, "steps": 1,
+            "shards": ["s.bp", "s.r1of2.bp"]}"#;
+        assert_eq!(
+            parse_shard_index(unmarked).unwrap_err(),
+            ShardIndexError::BadShardName { name: "s.bp".into() }
+        );
+        // Malformed documents name the missing piece.
+        for bad in ["{", "{}", r#"{"series": "s", "readers": 0,
+                     "steps": 1, "shards": []}"#] {
+            assert!(matches!(
+                parse_shard_index(bad).unwrap_err(),
+                ShardIndexError::Malformed(_)
+            ));
+        }
+    }
+
+    #[test]
+    fn missing_shards_surface_as_typed_errors() {
+        let dir = std::env::temp_dir()
+            .join(format!("opmd-shardidx-miss-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("gone.bp");
+        let index = write_shard_index(&base, 2, 3).unwrap();
+        // No shard file was ever written.
+        let err = open_shard_family(&index).unwrap_err();
+        assert!(format!("{err}").contains("missing on disk"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -82,6 +82,7 @@ use super::pipe::{
     fetch_step, forward_payload, Fetched, PipeOptions, PipeReport,
     StepPlan, StepPoller,
 };
+use super::staged::{run_staged_with_plan, StagedBudget};
 
 /// Fleet configuration: the reader-side parallel layout plus the pipe
 /// knobs every worker shares. Fleet width M is `layout.len()`.
@@ -104,6 +105,15 @@ pub struct FleetOptions {
     /// Operator-chain override forwarded to every worker's output
     /// (None = forward each variable's announced chain unchanged).
     pub operators: Option<OpChain>,
+    /// Per-worker staged read-ahead depth: `0` runs each worker's
+    /// serial fetch-before-offer loop; `>= 1` gives every worker its
+    /// own [`super::staged`] fetch thread, so within one worker the
+    /// store of step N overlaps the load of step N+1 *on top of* the
+    /// fleet's cross-worker parallelism. The shared plan still keys on
+    /// the input-step ordinal, and a worker's `max_steps` budget is
+    /// enforced on the fetch side so every worker consumes the same
+    /// input prefix.
+    pub depth: usize,
 }
 
 impl FleetOptions {
@@ -119,6 +129,7 @@ impl FleetOptions {
             max_steps: None,
             idle_timeout: Duration::from_secs(60),
             operators: None,
+            depth: 0,
         })
     }
 }
@@ -318,7 +329,7 @@ pub fn run_fleet(
             layout: opts.layout.clone(),
             max_steps: opts.max_steps,
             idle_timeout: opts.idle_timeout,
-            depth: 0,
+            depth: opts.depth,
             operators: opts.operators.clone(),
         })
         .collect();
@@ -338,12 +349,28 @@ pub fn run_fleet(
                         .spawn_scoped(scope, move || {
                             let mut plan =
                                 FleetPlan { shared: planner, rank };
-                            run_worker(
-                                input.as_mut(),
-                                output.as_mut(),
-                                wopts,
-                                &mut plan,
-                            )
+                            if wopts.depth > 0 {
+                                // Staged read-ahead per worker: the
+                                // worker's budget moves to the fetch
+                                // side so the fleet still stops on a
+                                // common input prefix.
+                                run_staged_with_plan(
+                                    input.as_mut(),
+                                    output.as_mut(),
+                                    wopts,
+                                    &mut plan,
+                                    StagedBudget::Fetch(
+                                        wopts.max_steps,
+                                    ),
+                                )
+                            } else {
+                                run_worker(
+                                    input.as_mut(),
+                                    output.as_mut(),
+                                    wopts,
+                                    &mut plan,
+                                )
+                            }
                         })
                         .expect("spawning a fleet worker thread")
                 })

@@ -39,10 +39,23 @@
 //! worker runs the pipe's step-forwarding core with the shared slice
 //! filter ([`pipe::StepPlan`]), fetching its share before offering
 //! the step downstream — so fleet shards at any M union to exactly
-//! the serial pipe's output. [`FleetReport`] carries the
+//! the serial pipe's output. With `FleetOptions::depth > 0` every
+//! worker additionally runs the staged read-ahead path (its budget
+//! enforced on the fetch side, so workers still stop on a common
+//! input prefix). [`FleetReport`] carries the
 //! straggler accounting (per-rank bytes/busy time, max/mean imbalance,
 //! aggregate throughput) that `benches/fig_fleet.rs` sweeps over
 //! M ∈ {1, 2, 4} and strategy.
+//!
+//! **The chain closes** through the multiplex read layer
+//! ([`crate::adios::multiplex`]): a fleet's shard family, reopened via
+//! its merged `<out>.index.json`
+//! ([`crate::openpmd::series::open_shard_family`]) or any `merge:`
+//! composition of sources, is one logical series behind the ordinary
+//! engine contract — so `pipe` consumes a fleet's output like any
+//! other input and stages chain arbitrarily
+//! (produce → fleet → reassemble → pipe/analyze/fleet ...), the
+//! paper's loose-coupling vision end to end.
 
 pub mod fleet;
 pub mod metrics;

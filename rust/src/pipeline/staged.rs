@@ -68,8 +68,24 @@ use crate::adios::ops::OpsReport;
 
 use super::pipe::{
     fetch_step, forward_payload, Fetched, LocalPlan, PipeOptions,
-    PipeReport, StepPayload, StepPoller,
+    PipeReport, StepPayload, StepPlan, StepPoller,
 };
+
+/// Which stage enforces `max_steps` — the one knob distinguishing a
+/// solo staged pipe from a staged fleet worker.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum StagedBudget {
+    /// Solo-pipe semantics: the store stage stops after this many
+    /// *forwarded* steps (downstream discards do not count) and the
+    /// fetch stage may read ahead past the limit by up to `depth`.
+    Store(Option<u64>),
+    /// Fleet-worker semantics: the FETCH stage stops after this many
+    /// consumed data steps (forwarded + downstream-dropped — the
+    /// fleet's budget unit), so every worker consumes the same input
+    /// prefix whatever its own output discards; the store stage drains
+    /// everything fetched.
+    Fetch(Option<u64>),
+}
 
 /// Run the pipe with a dedicated fetch thread reading ahead up to
 /// `opts.depth` steps. Same contract as [`super::pipe::run_pipe`];
@@ -80,9 +96,27 @@ pub fn run_staged(
     output: &mut dyn Engine,
     opts: PipeOptions,
 ) -> Result<PipeReport> {
+    let mut plan = LocalPlan::new(&opts);
+    let budget = StagedBudget::Store(opts.max_steps);
+    run_staged_with_plan(input, output, &opts, &mut plan, budget)
+}
+
+/// [`run_staged`] with an explicit slice filter and budget owner — the
+/// staged fleet worker's entry point, where `plan` is the fleet's
+/// shared step planner instead of a local per-instance one.
+pub(crate) fn run_staged_with_plan(
+    input: &mut dyn Engine,
+    output: &mut dyn Engine,
+    opts: &PipeOptions,
+    plan: &mut dyn StepPlan,
+    budget: StagedBudget,
+) -> Result<PipeReport> {
     let depth = opts.depth.max(1);
     let (tx, rx) = sync_channel::<StepPayload>(depth - 1);
-    let max_steps = opts.max_steps;
+    let (store_max, fetch_max) = match budget {
+        StagedBudget::Store(max) => (max, None),
+        StagedBudget::Fetch(max) => (None, max),
+    };
     let rank = opts.rank;
     let mut report = PipeReport::default();
     let wall = Instant::now();
@@ -92,14 +126,15 @@ pub fn run_staged(
         std::thread::scope(|scope| {
             let stop_flag = &stop;
             let fetch = scope.spawn(move || {
-                let r = fetch_loop(&mut *input, &opts, tx, stop_flag);
+                let r = fetch_loop(&mut *input, opts, plan, tx,
+                                   stop_flag, fetch_max);
                 // The input engine's operator accounting is read here,
                 // on the thread that owns the borrow, and handed back
                 // with the verdict.
                 (r, input.ops_report())
             });
             let store_result =
-                store_loop(output, rx, &mut report, max_steps, rank);
+                store_loop(output, rx, &mut report, store_max, rank);
             // `store_loop` consumed (and dropped) the receiver, so a
             // fetch stage blocked on a full queue fails its send
             // immediately; the stop flag interrupts one that is polling
@@ -135,18 +170,26 @@ pub fn run_staged(
 }
 
 /// The fetch stage: poll/fetch input steps and feed the bounded queue
-/// until end of stream, an input error, the idle timeout, or the store
-/// stage hanging up. Closes the input engine on every exit path (over
-/// SST that sends `ReaderBye`, so writers stop queueing for us).
+/// until end of stream, an input error, the idle timeout, the fetch
+/// budget (staged fleet workers), or the store stage hanging up.
+/// Closes the input engine on every exit path (over SST that sends
+/// `ReaderBye`, so writers stop queueing for us).
 fn fetch_loop(
     input: &mut dyn Engine,
     opts: &PipeOptions,
+    plan: &mut dyn StepPlan,
     tx: SyncSender<StepPayload>,
     stop: &AtomicBool,
+    max_data_steps: Option<u64>,
 ) -> Result<()> {
     let mut poller = StepPoller::new(opts.idle_timeout);
-    let mut plan = LocalPlan::new(opts);
-    let mut step = 0u64;
+    // Input-step ordinal, the shared-plan key: advances for EVERY
+    // consumed input step — discarded ones included — so staged fleet
+    // workers over identical input sequences agree on it. (A local
+    // plan ignores it, so the solo staged pipe is unaffected.)
+    let mut ordinal = 0u64;
+    // Data steps actually fetched — what a fleet budget counts.
+    let mut fetched = 0u64;
     let result = loop {
         if stop.load(Ordering::Relaxed) {
             // The store stage finished its contract while we were
@@ -154,9 +197,17 @@ fn fetch_loop(
             // for the idle timeout.
             break Ok(());
         }
-        match fetch_step(input, opts, &mut plan, step) {
+        if let Some(max) = max_data_steps {
+            if fetched >= max {
+                // Fetch-side budget met (staged fleet worker): stop on
+                // this exact input prefix so every worker agrees.
+                break Ok(());
+            }
+        }
+        match fetch_step(input, opts, plan, ordinal) {
             Ok(Fetched::Step(payload)) => {
-                step += 1;
+                ordinal += 1;
+                fetched += 1;
                 if tx.send(payload).is_err() {
                     // Store stage hung up (its failure, or max_steps
                     // reached): stop fetching; the store side owns the
@@ -173,7 +224,10 @@ fn fetch_loop(
                     break Err(e);
                 }
             }
-            Ok(Fetched::Discarded) => poller.activity(),
+            Ok(Fetched::Discarded) => {
+                ordinal += 1;
+                poller.activity();
+            }
             Ok(Fetched::EndOfStream) => break Ok(()),
             Err(e) => break Err(e),
         }

@@ -11,8 +11,18 @@
 //! shape that separates cost-aware from blind strategies), consumes
 //! it once through the serial pipe and once through [`run_fleet`],
 //! and compares the assembled step payloads element by element.
+//!
+//! **Reassembly conformance** closes the chain the other way:
+//! [`fleet_into_shards`] runs a fleet into real BP shards plus the
+//! merged `<out>.index.json`, [`reassembled_union`] opens that family
+//! via [`crate::openpmd::series::open_shard_family`] (one multiplexed
+//! logical series) and forwards it through ANOTHER serial pipe — so
+//! `tests/reassembly_conformance.rs` proves
+//! `produce → fleet(M) → reassemble → pipe` byte-identical to
+//! `produce → pipe` for every strategy × M, with per-worker staged
+//! read-ahead on top.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -250,9 +260,38 @@ pub fn fleet_union(
     strategy_name: &str,
     readers: usize,
 ) -> Result<Vec<Vec<f32>>> {
-    let case = format!("{tag}-{strategy_name}-m{readers}");
-    let (addrs, producers) = spawn_writers(&case)?;
-    let base = tmp(&case, "out.bp");
+    fleet_union_at_depth(tag, strategy_name, readers, 0)
+}
+
+/// [`fleet_union`] with per-worker staged read-ahead (`depth > 0`
+/// gives every worker its own fetch thread — the satellite the
+/// ROADMAP called "fleet workers with staged read-ahead").
+pub fn fleet_union_at_depth(
+    tag: &str,
+    strategy_name: &str,
+    readers: usize,
+    depth: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let case = format!("{tag}-{strategy_name}-m{readers}-d{depth}");
+    let (index, shards) =
+        fleet_into_shards(&case, strategy_name, readers, depth)?;
+    let result = assemble_union(&shards);
+    cleanup_family(&index, &shards);
+    result.with_context(|| format!("[{case}] shard union"))
+}
+
+/// Run a fleet into REAL BP shards plus the merged
+/// `<out>.index.json`: the persistent artifact half of the
+/// produce → fleet → reassemble chain. Returns the index path and the
+/// shard paths (callers clean up with [`cleanup_family`]).
+pub fn fleet_into_shards(
+    case: &str,
+    strategy_name: &str,
+    readers: usize,
+    depth: usize,
+) -> Result<(PathBuf, Vec<PathBuf>)> {
+    let (addrs, producers) = spawn_writers(case)?;
+    let base = tmp(case, "out.bp");
     let mut inputs: Vec<Box<dyn Engine>> = Vec::with_capacity(readers);
     let mut outputs: Vec<Box<dyn Engine>> = Vec::with_capacity(readers);
     let mut shards = Vec::with_capacity(readers);
@@ -268,6 +307,7 @@ pub fn fleet_union(
     let strategy: Arc<dyn Strategy> = Arc::from(by_name(strategy_name)?);
     let mut opts = FleetOptions::local(readers, strategy)?;
     opts.idle_timeout = Duration::from_secs(20);
+    opts.depth = depth;
     let report = run_fleet(inputs, outputs, opts)?;
     for t in producers {
         t.join().map_err(|_| anyhow::anyhow!("producer panicked"))?;
@@ -285,11 +325,105 @@ pub fn fleet_union(
             STEPS * total_elems() * 4
         );
     }
-    let result = assemble_union(&shards);
+    let index = crate::openpmd::series::write_shard_index(
+        &base, readers, report.steps(),
+    )?;
+    Ok((index, shards))
+}
+
+/// Delete a shard family and its index (paths from
+/// [`fleet_into_shards`] — tests run in parallel threads, so only this
+/// family's files are touched).
+pub fn cleanup_family(index: &Path, shards: &[PathBuf]) {
+    std::fs::remove_file(index).ok();
     for shard in shards {
-        std::fs::remove_file(&shard).ok();
+        std::fs::remove_file(shard).ok();
     }
-    result.with_context(|| format!("[{case}] shard union"))
+}
+
+/// The reassembly half of the chain: open a shard family through the
+/// merged index as ONE multiplexed logical series, forward it through
+/// a fresh serial pipe (`shards → openpmd-pipe → single BP file`), and
+/// return the assembled per-step payloads of that final output. This
+/// is exactly what a downstream consumer of a fleet's output sees, so
+/// comparing it against [`serial_reference`] proves the closed
+/// produce → fleet(M) → reassemble → pipe chain byte-identical to
+/// produce → pipe.
+pub fn reassembled_union(case: &str, index: &Path)
+    -> Result<Vec<Vec<f32>>>
+{
+    let mut input = crate::openpmd::series::open_shard_family(index)
+        .with_context(|| format!("[{case}] opening shard family"))?;
+    let dst = tmp(case, "reassembled.bp");
+    let mut output = BpWriter::create(&dst, WriterCtx::default())?;
+    let mut opts = PipeOptions::solo();
+    opts.idle_timeout = Duration::from_secs(20);
+    let report = run_pipe(&mut input, &mut output, opts)
+        .with_context(|| format!("[{case}] reassembling pipe"))?;
+    if report.steps != STEPS {
+        std::fs::remove_file(&dst).ok();
+        bail!(
+            "[{case}] reassembling pipe forwarded {} of {STEPS} steps",
+            report.steps
+        );
+    }
+    let result = assemble_union(std::slice::from_ref(&dst));
+    std::fs::remove_file(&dst).ok();
+    result.with_context(|| format!("[{case}] reassembled output"))
+}
+
+/// One full produce → fleet(M) → reassemble → pipe cell, compared
+/// against an already-validated serial reference.
+pub fn assert_reassembly_matches(
+    serial: &[Vec<f32>],
+    tag: &str,
+    strategy_name: &str,
+    readers: usize,
+    depth: usize,
+) -> Result<()> {
+    let case = format!("re-{tag}-{strategy_name}-m{readers}-d{depth}");
+    let (index, shards) =
+        fleet_into_shards(&case, strategy_name, readers, depth)?;
+    let result = reassembled_union(&case, &index);
+    cleanup_family(&index, &shards);
+    let reassembled = result?;
+    compare_step_payloads(
+        &reassembled,
+        serial,
+        &format!("{strategy_name} M={readers} depth={depth} reassembled"),
+    )
+}
+
+/// Element-exact comparison of two assembled step-payload sets with a
+/// first-difference diagnostic.
+pub fn compare_step_payloads(
+    got: &[Vec<f32>],
+    want: &[Vec<f32>],
+    label: &str,
+) -> Result<()> {
+    if got == want {
+        return Ok(());
+    }
+    for (step, (g, w)) in got.iter().zip(want).enumerate() {
+        if g != w {
+            let at = g
+                .iter()
+                .zip(w)
+                .position(|(a, b)| a != b)
+                .unwrap_or(0);
+            bail!(
+                "[{label}] step {step} differs from the serial pipe \
+                 first at element {at}: {} != {}",
+                g[at],
+                w[at]
+            );
+        }
+    }
+    bail!(
+        "[{label}] step counts disagree: {} vs {}",
+        got.len(),
+        want.len()
+    )
 }
 
 /// Compare one (strategy, M) fleet cell against an already-validated
@@ -302,28 +436,9 @@ pub fn assert_fleet_matches(
     readers: usize,
 ) -> Result<()> {
     let fleet = fleet_union(tag, strategy_name, readers)?;
-    if fleet != serial {
-        for (step, (f, s)) in fleet.iter().zip(serial).enumerate() {
-            if f != s {
-                let g = f
-                    .iter()
-                    .zip(s)
-                    .position(|(a, b)| a != b)
-                    .unwrap_or(0);
-                bail!(
-                    "[{strategy_name} M={readers}] step {step} differs \
-                     from the serial pipe first at element {g}: {} != {}",
-                    f[g],
-                    s[g]
-                );
-            }
-        }
-        bail!(
-            "[{strategy_name} M={readers}] fleet union and serial \
-             output disagree in step count: {} vs {}",
-            fleet.len(),
-            serial.len()
-        );
-    }
-    Ok(())
+    compare_step_payloads(
+        &fleet,
+        serial,
+        &format!("{strategy_name} M={readers}"),
+    )
 }

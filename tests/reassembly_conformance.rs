@@ -1,0 +1,259 @@
+//! Reassembly conformance: the closed loop the multiplex layer exists
+//! for. For every strategy × fleet width M, the chain
+//!
+//! ```text
+//!   produce → fleet(M) → shards + index → reassemble → pipe
+//! ```
+//!
+//! must be byte-identical to the plain `produce → pipe` chain — the
+//! fleet's shard family, opened through its merged `<out>.index.json`
+//! as ONE multiplexed logical series, is indistinguishable from the
+//! pre-fleet serial stream to any downstream consumer. Also covered:
+//! per-worker staged read-ahead (`depth = 2`), a mixed-backend
+//! `merge:` composition (bp + json children), and the CLI end to end
+//! (`openpmd-pipe` consuming `shards:<index.json>` as `--in`).
+
+use std::path::{Path, PathBuf};
+
+use openpmd_stream::adios::engine::{Engine, StepStatus};
+use openpmd_stream::adios::multiplex;
+use openpmd_stream::openpmd::chunk::Chunk;
+use openpmd_stream::testing::fleet_conformance::{
+    assert_reassembly_matches, compare_step_payloads,
+    fleet_union_at_depth, serial_reference,
+};
+
+fn sweep(tag: &str, strategy: &str) {
+    let serial = serial_reference(tag)
+        .unwrap_or_else(|e| panic!("serial reference: {e:#}"));
+    for readers in [1usize, 2, 4] {
+        assert_reassembly_matches(&serial, tag, strategy, readers, 0)
+            .unwrap_or_else(|e| panic!("M={readers}: {e:#}"));
+    }
+}
+
+/// The acceptance-bar matrix: every strategy, every fleet width.
+#[test]
+fn reassembled_family_matches_serial_pipe_roundrobin() {
+    sweep("rr", "roundrobin");
+}
+
+#[test]
+fn reassembled_family_matches_serial_pipe_binpacking() {
+    sweep("bin", "binpacking");
+}
+
+#[test]
+fn reassembled_family_matches_serial_pipe_loadbalanced() {
+    sweep("lb", "loadbalanced");
+}
+
+#[test]
+fn reassembled_family_matches_serial_pipe_hyperslabs() {
+    sweep("hs", "hyperslabs");
+}
+
+#[test]
+fn reassembled_family_matches_serial_pipe_hostname() {
+    sweep("host", "hostname");
+}
+
+/// Fleet workers with staged read-ahead (`--pipeline-depth 2`): the
+/// shard union AND the full reassembled chain stay conformant when
+/// every worker fetches through its own read-ahead thread.
+#[test]
+fn staged_fleet_workers_at_depth_2_stay_conformant() {
+    let serial = serial_reference("depth2")
+        .unwrap_or_else(|e| panic!("serial reference: {e:#}"));
+    let staged = fleet_union_at_depth("depth2", "loadbalanced", 2, 2)
+        .unwrap_or_else(|e| panic!("staged fleet: {e:#}"));
+    compare_step_payloads(&staged, &serial, "loadbalanced M=2 depth=2")
+        .unwrap_or_else(|e| panic!("{e:#}"));
+    assert_reassembly_matches(&serial, "depth2", "roundrobin", 2, 2)
+        .unwrap_or_else(|e| panic!("reassembled depth=2: {e:#}"));
+}
+
+// ---------------------------------------------------------------------
+// Mixed-backend merge
+// ---------------------------------------------------------------------
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("opmd-reasm-{name}-{}", std::process::id()))
+}
+
+/// `merge:bp,json` — two sources on different backends, each holding
+/// half of every step, consumed through the pipe as one logical
+/// series.
+#[test]
+fn mixed_backend_merge_pipes_as_one_series() {
+    use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
+    use openpmd_stream::adios::engine::{cast, VarDecl};
+    use openpmd_stream::adios::json::JsonWriter;
+    use openpmd_stream::openpmd::types::Datatype;
+    use openpmd_stream::pipeline::pipe::{run_pipe, PipeOptions};
+
+    const TOTAL: u64 = 16;
+    const STEPS: u64 = 3;
+    let write_half = |engine: &mut dyn Engine, offset: u64, n: u64| {
+        let decl =
+            VarDecl::new("/data/0/x", Datatype::F32, vec![TOTAL]);
+        for step in 0..STEPS {
+            assert_eq!(engine.begin_step().unwrap(), StepStatus::Ok);
+            let h = engine.define_variable(&decl).unwrap();
+            let xs: Vec<f32> = (0..n)
+                .map(|i| (step * 1000 + offset + i) as f32)
+                .collect();
+            engine
+                .put_deferred(&h, Chunk::new(vec![offset], vec![n]),
+                              cast::f32_to_bytes(&xs))
+                .unwrap();
+            engine.end_step().unwrap();
+        }
+        engine.close().unwrap();
+    };
+
+    let bp_half = tmp("merge-half.bp");
+    let json_half = tmp("merge-half-json");
+    let mut wa = BpWriter::create(&bp_half, WriterCtx::default()).unwrap();
+    write_half(&mut wa, 0, TOTAL / 2);
+    let mut wb = JsonWriter::create(&json_half, 1, "h").unwrap();
+    write_half(&mut wb, TOTAL / 2, TOTAL / 2);
+
+    // Consume the merged composition through the pipe, exactly as the
+    // CLI would with --in merge:a,b.
+    let spec = format!(
+        "merge:{},{}",
+        bp_half.display(),
+        json_half.display()
+    );
+    let mut input = multiplex::open_source(&spec, 0).unwrap();
+    let dst = tmp("merge-out.bp");
+    let mut output = BpWriter::create(&dst, WriterCtx::default()).unwrap();
+    let report = run_pipe(input.as_mut(), &mut output,
+                          PipeOptions::solo())
+        .unwrap();
+    assert_eq!(report.steps, STEPS);
+    assert_eq!(report.bytes_in, STEPS * TOTAL * 4);
+
+    let mut check = BpReader::open(&dst).unwrap();
+    for step in 0..STEPS {
+        assert_eq!(check.begin_step().unwrap(), StepStatus::Ok);
+        let data = check
+            .get("/data/0/x", Chunk::whole(vec![TOTAL]))
+            .unwrap();
+        let xs = cast::bytes_to_f32(&data).unwrap();
+        for (g, &x) in xs.iter().enumerate() {
+            assert_eq!(x, (step * 1000 + g as u64) as f32,
+                       "step {step} element {g}");
+        }
+        check.end_step().unwrap();
+    }
+    assert_eq!(check.begin_step().unwrap(), StepStatus::EndOfStream);
+    std::fs::remove_file(&bp_half).ok();
+    std::fs::remove_dir_all(&json_half).ok();
+    std::fs::remove_file(&dst).ok();
+}
+
+// ---------------------------------------------------------------------
+// CLI end to end
+// ---------------------------------------------------------------------
+
+fn run_cli(args: &[&str]) {
+    let out = std::process::Command::new(env!(
+        "CARGO_BIN_EXE_openpmd-stream"
+    ))
+    .args(args)
+    .output()
+    .expect("spawning openpmd-stream");
+    assert!(
+        out.status.success(),
+        "openpmd-stream {:?} failed\nstdout:\n{}\nstderr:\n{}",
+        args,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// One step's logical content: rendered attributes plus every
+/// variable's fully-assembled payload.
+type StepSnapshot = (Vec<(String, String)>, Vec<(String, Vec<u8>)>);
+
+/// Logical snapshot of a BP series: per step, its attributes plus
+/// every variable's fully-assembled payload. Chunk *boundaries* may
+/// legitimately differ between a direct and a reassembled copy (the
+/// fleet splits chunks per its strategy); the logical content must
+/// not.
+fn snapshot(path: &Path) -> Vec<StepSnapshot> {
+    use openpmd_stream::adios::bp::BpReader;
+    let mut reader = BpReader::open(path).expect("open snapshot source");
+    let mut steps = Vec::new();
+    while reader.begin_step().expect("begin_step") == StepStatus::Ok {
+        let attrs: Vec<(String, String)> = reader
+            .attribute_names()
+            .into_iter()
+            .filter_map(|name| {
+                reader
+                    .attribute(&name)
+                    .map(|v| (name, format!("{v:?}")))
+            })
+            .collect();
+        let mut vars = Vec::new();
+        for v in reader.available_variables() {
+            let data = reader
+                .get(&v.name, Chunk::whole(v.shape.clone()))
+                .unwrap_or_else(|e| panic!("get {}: {e:#}", v.name));
+            vars.push((v.name.clone(), data.to_vec()));
+        }
+        vars.sort();
+        steps.push((attrs, vars));
+        reader.end_step().expect("end_step");
+    }
+    steps
+}
+
+/// The acceptance bar's CLI leg: `openpmd-pipe` (the `pipe`
+/// subcommand) accepts `shards:<index.json>` as an input engine spec,
+/// end to end — produce, fleet into shards, reassemble through the
+/// CLI, and compare against the direct serial pipe of the same
+/// source.
+#[test]
+fn cli_pipe_consumes_a_shard_family_via_shards_spec() {
+    let dir = tmp("cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = dir.join("src.bp");
+    let serial_out = dir.join("serial.bp");
+    let fleet_out = dir.join("fleet.bp");
+    let final_out = dir.join("reassembled.bp");
+
+    run_cli(&[
+        "produce", "--out", src.to_str().unwrap(), "--engine", "bp",
+        "--steps", "3", "--particles", "512", "--period", "2",
+        "--no-runtime",
+    ]);
+    run_cli(&[
+        "pipe", "--in", src.to_str().unwrap(),
+        "--out", serial_out.to_str().unwrap(),
+    ]);
+    run_cli(&[
+        "pipe", "--in", src.to_str().unwrap(),
+        "--out", fleet_out.to_str().unwrap(),
+        "--readers", "2", "--strategy", "binpacking",
+    ]);
+    let index = dir.join("fleet.bp.index.json");
+    assert!(index.exists(), "fleet run must publish the shard index");
+    let shards_spec = format!("shards:{}", index.display());
+    run_cli(&[
+        "pipe", "--in", &shards_spec,
+        "--out", final_out.to_str().unwrap(),
+    ]);
+
+    let direct = snapshot(&serial_out);
+    let reassembled = snapshot(&final_out);
+    assert_eq!(direct.len(), 3, "serial pipe lost steps");
+    assert_eq!(
+        reassembled, direct,
+        "reassembled CLI chain differs from the direct serial pipe"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

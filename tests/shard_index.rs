@@ -1,0 +1,115 @@
+//! Shard-index schema conformance: the `<out>.index.json` a fleet
+//! publishes must round-trip exactly (write → parse → identical shard
+//! list and ordering) for any fleet width and step count, and every
+//! way a family can be inconsistent — missing shards on disk,
+//! duplicate ranks, width mismatches — must surface as the typed
+//! [`ShardIndexError`] it is, never as silent truncation.
+
+use openpmd_stream::openpmd::series::{
+    open_shard_family, parse_shard_index, shard_path, write_shard_index,
+    ShardIndexError,
+};
+use openpmd_stream::testing::{check, Pair, UsizeRange};
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("opmd-idx-{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Property: for any (readers, steps), writing the index and parsing
+/// it back yields exactly the declared width, step count, and the
+/// shard names in rank order.
+#[test]
+fn index_round_trips_for_any_width_and_step_count() {
+    let dir = tmp_dir("prop");
+    let base = dir.join("fam.bp");
+    check(
+        &Pair(UsizeRange(1, 32), UsizeRange(0, 1000)),
+        |&(readers, steps)| {
+            let path = write_shard_index(&base, readers, steps as u64)
+                .map_err(|e| format!("write: {e:#}"))?;
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| format!("read: {e}"))?;
+            let parsed = parse_shard_index(&text)
+                .map_err(|e| format!("parse: {e}"))?;
+            if parsed.readers != readers {
+                return Err(format!(
+                    "readers {} != {readers}",
+                    parsed.readers
+                ));
+            }
+            if parsed.steps != steps as u64 {
+                return Err(format!("steps {} != {steps}", parsed.steps));
+            }
+            let want: Vec<String> = (0..readers)
+                .map(|r| {
+                    shard_path(&base, r, readers)
+                        .file_name()
+                        .unwrap()
+                        .to_string_lossy()
+                        .into_owned()
+                })
+                .collect();
+            if parsed.shards != want {
+                return Err(format!(
+                    "shard list {:?} != {want:?}",
+                    parsed.shards
+                ));
+            }
+            Ok(())
+        },
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn duplicate_ranks_are_a_typed_error() {
+    let doc = r#"{"series": "f.bp", "readers": 3, "steps": 2,
+        "shards": ["f.r0of3.bp", "f.r1of3.bp", "f.r1of3.bp"]}"#;
+    assert_eq!(
+        parse_shard_index(doc).unwrap_err(),
+        ShardIndexError::DuplicateRank { rank: 1 }
+    );
+}
+
+#[test]
+fn width_mismatches_are_typed_errors() {
+    // Declared M vs listed count.
+    let count = r#"{"series": "f.bp", "readers": 4, "steps": 2,
+        "shards": ["f.r0of4.bp"]}"#;
+    assert_eq!(
+        parse_shard_index(count).unwrap_err(),
+        ShardIndexError::CountMismatch { declared: 4, listed: 1 }
+    );
+    // Declared M vs a shard's own r<i>ofM marker.
+    let marker = r#"{"series": "f.bp", "readers": 2, "steps": 2,
+        "shards": ["f.r0of2.bp", "f.r1of8.bp"]}"#;
+    assert_eq!(
+        parse_shard_index(marker).unwrap_err(),
+        ShardIndexError::WidthMismatch {
+            name: "f.r1of8.bp".into(),
+            marker: 8,
+            declared: 2,
+        }
+    );
+}
+
+#[test]
+fn missing_shard_files_are_typed_errors() {
+    let dir = tmp_dir("missing");
+    let base = dir.join("ghost.bp");
+    let index = write_shard_index(&base, 2, 1).unwrap();
+    // The index exists; the shards were never written. The error is
+    // the typed MissingShard, naming the first absent shard.
+    let err = format!("{:#}", open_shard_family(&index).unwrap_err());
+    let typed = format!(
+        "{}",
+        ShardIndexError::MissingShard {
+            path: dir.join("ghost.r0of2.bp"),
+        }
+    );
+    assert!(err.contains(&typed), "{err:?} lacks {typed:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
