@@ -14,8 +14,12 @@
 //! Node-level aggregation (Fig. 5: "each node creates only one file")
 //! arises in this codebase by composition — N producers stream via SST to
 //! one `openpmd-pipe` which owns one `BpWriter` — exactly the paper's
-//! SST+BP setup. The `aggregation` parameter of [`EngineKind::Bp`] is a
+//! SST+BP setup. The `aggregation` parameter of `EngineKind::Bp` is a
 //! modeling knob for the simulated benchmarks.
+//!
+//! This module is a `pallas-lint` hardened zone: a corrupt or
+//! truncated BP file must surface as a typed [`BpError`] the caller
+//! (or the multiplex barrier) can report — never a panic.
 
 use std::collections::BTreeMap;
 use std::fs::File;
@@ -35,15 +39,76 @@ use super::wire::{Reader as WireReader, StepMeta, VarMeta};
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::Attribute;
 
-#[allow(unused_imports)]
-pub use super::engine::EngineKind;
-
 // BP02: variable metadata carries an operator chain and payload records
 // of operated variables are stored operator-framed (compressed on disk).
 // 03: chunk metadata grew the staged payload size (encoded_bytes) used
 // by cost-aware distribution strategies.
 const MAGIC: &[u8; 8] = b"OPMDBP03";
 const STEP_MARKER: u64 = 0x0053_5445_5000_0000; // "STEP"-ish sentinel
+
+/// Typed reader-side errors for corrupt or truncated BP files.
+///
+/// These surface through `anyhow::Result` as error *sources*, so
+/// callers that care (the multiplex barrier, `openpmd-pipe`) can
+/// `downcast_ref::<BpError>()` and report which file is damaged and
+/// how, while everyone else just propagates. Every variant replaces a
+/// code path that could previously allocate unboundedly or panic on
+/// malformed input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BpError {
+    /// The file does not start with the current `MAGIC` bytes.
+    BadMagic { found: [u8; 8] },
+    /// A step boundary did not carry the step sentinel — the file is
+    /// damaged or was written by a different layout.
+    BadStepMarker { found: u64 },
+    /// A length/count field exceeds its plausibility bound; reading on
+    /// would allocate or seek absurdly.
+    ImplausibleLength { what: &'static str, len: u64, max: u64 },
+    /// A payload record's offset/extent ranks disagree.
+    RankMismatch { offset: usize, extent: usize },
+    /// EOF in the middle of a step (file truncated mid-write).
+    Truncated { what: &'static str },
+}
+
+impl std::fmt::Display for BpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BpError::BadMagic { found } => write!(
+                f,
+                "not a BP file: bad magic {:?} (expected {:?})",
+                String::from_utf8_lossy(found),
+                String::from_utf8_lossy(MAGIC),
+            ),
+            BpError::BadStepMarker { found } => {
+                write!(f, "corrupt BP file: bad step marker {found:#x}")
+            }
+            BpError::ImplausibleLength { what, len, max } => write!(
+                f,
+                "corrupt BP file: implausible {what} of {len} \
+                 (limit {max})"
+            ),
+            BpError::RankMismatch { offset, extent } => write!(
+                f,
+                "corrupt BP payload record: offset rank {offset} != \
+                 extent rank {extent}"
+            ),
+            BpError::Truncated { what } => {
+                write!(f, "truncated BP file: EOF while reading {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BpError {}
+
+/// Plausibility bound + typed error for a length/count field read from
+/// the file, applied *before* any allocation sized by it.
+fn bounded(len: u64, max: u64, what: &'static str) -> Result<usize> {
+    if len > max {
+        return Err(BpError::ImplausibleLength { what, len, max }.into());
+    }
+    Ok(len as usize)
+}
 
 /// Writer context: rank + hostname recorded into every chunk's metadata.
 #[derive(Clone, Debug)]
@@ -314,7 +379,8 @@ impl BpReader {
         let mut magic = [0u8; 8];
         file.read_exact(&mut magic).context("reading BP magic")?;
         if &magic != MAGIC {
-            bail!("{} is not a BP file (bad magic)", path.display());
+            return Err(BpError::BadMagic { found: magic })
+                .with_context(|| path.display().to_string());
         }
         Ok(BpReader {
             file,
@@ -337,9 +403,9 @@ impl BpReader {
         }
     }
 
-    fn read_exact_u64(&mut self) -> Result<u64> {
+    fn read_exact_u64(&mut self, what: &'static str) -> Result<u64> {
         self.read_u64()?
-            .ok_or_else(|| anyhow::anyhow!("unexpected EOF in BP step"))
+            .ok_or_else(|| BpError::Truncated { what }.into())
     }
 }
 
@@ -361,40 +427,74 @@ impl Engine for BpReader {
             Some(m) => m,
         };
         if marker != STEP_MARKER {
-            bail!("corrupt BP file: bad step marker {marker:#x}");
+            return Err(BpError::BadStepMarker { found: marker }.into());
         }
-        let step = self.read_exact_u64()?;
-        let meta_len = self.read_exact_u64()? as usize;
-        if meta_len > 1 << 30 {
-            bail!("implausible BP metadata block of {meta_len} bytes");
-        }
+        let step = self.read_exact_u64("step number")?;
+        let meta_len = bounded(
+            self.read_exact_u64("metadata length")?,
+            1 << 30,
+            "metadata block",
+        )?;
         let mut meta_buf = vec![0u8; meta_len];
-        self.file.read_exact(&mut meta_buf)?;
+        self.file
+            .read_exact(&mut meta_buf)
+            .map_err(|_| BpError::Truncated { what: "metadata block" })?;
         let meta = StepMeta::decode(&mut WireReader::new(&meta_buf))?;
 
-        let n_payloads = self.read_exact_u64()? as usize;
+        let n_payloads = bounded(
+            self.read_exact_u64("payload count")?,
+            1 << 24,
+            "payload count",
+        )?;
         self.index.clear();
         for _ in 0..n_payloads {
-            let name_len = self.read_exact_u64()? as usize;
+            let name_len = bounded(
+                self.read_exact_u64("variable name length")?,
+                1 << 24,
+                "variable name",
+            )?;
             let mut name = vec![0u8; name_len];
-            self.file.read_exact(&mut name)?;
+            self.file
+                .read_exact(&mut name)
+                .map_err(|_| BpError::Truncated {
+                    what: "variable name",
+                })?;
             let name = String::from_utf8_lossy(&name).into_owned();
-            let nd = self.read_exact_u64()? as usize;
+            let nd = bounded(
+                self.read_exact_u64("offset rank")?,
+                1 << 16,
+                "offset rank",
+            )?;
             let mut offset = Vec::with_capacity(nd);
             for _ in 0..nd {
-                offset.push(self.read_exact_u64()?);
+                offset.push(self.read_exact_u64("chunk offset")?);
             }
-            let nd2 = self.read_exact_u64()? as usize;
+            let nd2 = bounded(
+                self.read_exact_u64("extent rank")?,
+                1 << 16,
+                "extent rank",
+            )?;
+            if nd != nd2 {
+                return Err(BpError::RankMismatch {
+                    offset: nd,
+                    extent: nd2,
+                }
+                .into());
+            }
             let mut extent = Vec::with_capacity(nd2);
             for _ in 0..nd2 {
-                extent.push(self.read_exact_u64()?);
+                extent.push(self.read_exact_u64("chunk extent")?);
             }
-            if nd != nd2 {
-                bail!("corrupt BP payload record: rank mismatch");
-            }
-            let len = self.read_exact_u64()?;
+            let len = self.read_exact_u64("payload length")?;
+            let delta = i64::try_from(len).map_err(|_| {
+                BpError::ImplausibleLength {
+                    what: "payload record",
+                    len,
+                    max: i64::MAX as u64,
+                }
+            })?;
             let file_offset = self.file.stream_position()?;
-            self.file.seek(SeekFrom::Current(len as i64))?;
+            self.file.seek(SeekFrom::Current(delta))?;
             self.index
                 .entry(name)
                 .or_default()
@@ -750,7 +850,48 @@ mod tests {
     fn bad_magic_rejected() {
         let path = tmp("bad-magic");
         std::fs::write(&path, b"NOTABP!!").unwrap();
-        assert!(BpReader::open(&path).is_err());
+        let err = BpReader::open(&path).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<BpError>(),
+            Some(&BpError::BadMagic { found: *b"NOTABP!!" })
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_step_marker_is_a_typed_error() {
+        let path = tmp("bad-marker");
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&0xdead_beefu64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let mut r = BpReader::open(&path).unwrap();
+        let err = r.begin_step().unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<BpError>(),
+            Some(&BpError::BadStepMarker { found: 0xdead_beef })
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn implausible_length_is_bounded_before_allocation() {
+        // MAGIC + step marker + step number + an absurd metadata
+        // length: must be a typed error, not a 2^60-byte allocation.
+        let path = tmp("absurd-len");
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&STEP_MARKER.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&(1u64 << 60).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let mut r = BpReader::open(&path).unwrap();
+        let err = r.begin_step().unwrap_err();
+        match err.downcast_ref::<BpError>() {
+            Some(BpError::ImplausibleLength { what, len, .. }) => {
+                assert_eq!(*what, "metadata block");
+                assert_eq!(*len, 1 << 60);
+            }
+            other => panic!("expected ImplausibleLength, got {other:?}"),
+        }
         std::fs::remove_file(&path).ok();
     }
 

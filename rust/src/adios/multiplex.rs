@@ -535,9 +535,10 @@ fn assemble(
     // hand the child's buffer through without copying, so a
     // reassembled shard family costs what the pre-fleet serial stream
     // cost.
-    if plan.pieces.len() == 1 && plan.pieces[0].chunk == *selection {
-        let piece = &plan.pieces[0];
-        return children[piece.child].engine.take_get(piece.handle);
+    if let [piece] = plan.pieces.as_slice() {
+        if piece.chunk == *selection {
+            return children[piece.child].engine.take_get(piece.handle);
+        }
     }
     let elem = plan.elem;
     let n = selection.num_elements() as usize;

@@ -61,7 +61,8 @@ impl Default for SstReaderOptions {
 struct WriterConn {
     conn: Box<dyn Conn>,
     writer_rank: usize,
-    #[allow(dead_code)]
+    /// From the writer's `HelloAck`; named in connection-loss errors
+    /// so a torn stream points at the failing host.
     hostname: String,
     /// Announces received but not yet consumed, in step order. Several
     /// can pile up while `get` is draining a slow step.
@@ -230,8 +231,9 @@ impl SstReader {
                 Recv::Msg(_) => {}
                 Recv::TimedOut => {}
                 Recv::Closed => bail!(
-                    "writer {} vanished mid-request",
-                    self.writers[widx].writer_rank
+                    "writer {} ({}) vanished mid-request",
+                    self.writers[widx].writer_rank,
+                    self.writers[widx].hostname
                 ),
             }
         }
@@ -271,14 +273,17 @@ impl Engine for SstReader {
                 if !Self::pump_announce(w, target, deadline)? {
                     return Ok(StepStatus::NotReady);
                 }
-                if w.closed && w.pending.is_empty() {
+                // `pump_announce` only returns success with an empty
+                // queue when the writer closed without announcing
+                // `target`; either way an empty queue means this
+                // writer contributes nothing to the step.
+                let Some(&(s, _)) = w.pending.front() else {
                     continue;
-                }
+                };
                 any_live = true;
-                let (s, _) = w.pending.front().unwrap();
-                if *s > target {
-                    self.steps_skipped += target.abs_diff(*s).min(1);
-                    target = *s;
+                if s > target {
+                    self.steps_skipped += target.abs_diff(s).min(1);
+                    target = s;
                     all_ready = false;
                 }
             }
@@ -461,12 +466,6 @@ impl SstReader {
     /// The body of [`Engine::perform_gets`] for one drained batch; on
     /// error the caller poisons every handle in `pending`.
     fn perform_batch(&mut self, pending: &[DeferredGet]) -> Result<()> {
-        let step = self
-            .current
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("perform_gets outside step"))?
-            .step;
-
         // Merge each requested variable's chunk table ONCE per batch
         // instead of once per deferred get: a fleet worker batches one
         // slice set per variable per step, and with N writers x many
@@ -478,8 +477,12 @@ impl SstReader {
             chunks: Vec<WrittenChunkInfo>,
         }
         let mut vars: BTreeMap<String, VarTable> = BTreeMap::new();
+        let step;
         {
-            let cur = self.current.as_ref().expect("checked above");
+            let cur = self.current.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("perform_gets outside step")
+            })?;
+            step = cur.step;
             for g in pending {
                 if vars.contains_key(&g.var) {
                     continue;

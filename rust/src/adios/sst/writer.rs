@@ -10,11 +10,13 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
+
+use crate::util::sync::{lock_or_poisoned, wait_timeout_or_poisoned};
 
 use crate::adios::engine::{
     Bytes, Engine, GetHandle, Mode, PutQueue, StepStatus, VarDecl,
@@ -79,9 +81,29 @@ impl WriterGroup {
     }
 
     /// Returns `true` if step `step` should be kept (published).
-    fn decide(&self, step: u64, keep_if_first: impl FnOnce() -> bool) -> bool {
-        let mut d = self.decisions.lock().unwrap();
-        *d.entry(step).or_insert_with(keep_if_first)
+    fn decide(
+        &self,
+        step: u64,
+        keep_if_first: impl FnOnce() -> bool,
+    ) -> Result<bool> {
+        let mut d =
+            lock_or_poisoned(&self.decisions, "writer group decisions")?;
+        Ok(*d.entry(step).or_insert_with(keep_if_first))
+    }
+}
+
+/// Service-thread lock helper: threads with no `Result` channel back to
+/// the producer log the poison and bow out instead of re-panicking.
+fn lock_or_warn<'a, T>(
+    m: &'a Mutex<T>,
+    what: &'static str,
+) -> Option<MutexGuard<'a, T>> {
+    match lock_or_poisoned(m, what) {
+        Ok(g) => Some(g),
+        Err(e) => {
+            crate::warn_log!("sst-writer", "{e}; stopping service thread");
+            None
+        }
     }
 }
 
@@ -90,8 +112,7 @@ struct ReaderPeer {
     /// Highest step this reader has fully consumed (StepDone).
     done: AtomicU64,
     alive: AtomicBool,
-    /// Reader rank (diagnostics).
-    #[allow(dead_code)]
+    /// Reader rank, named in the serve thread's diagnostics.
     rank: usize,
     /// Operator codecs this reader advertised in its Hello (operator
     /// negotiation): chains outside this set are served decoded.
@@ -198,19 +219,18 @@ impl SstWriter {
         self.address.clone()
     }
 
-    pub fn stats(&self) -> SstStats {
-        self.shared.lock().unwrap().stats
+    pub fn stats(&self) -> Result<SstStats> {
+        Ok(lock_or_poisoned(&self.shared, "sst writer shared state")?
+            .stats)
     }
 
     /// Number of currently subscribed readers.
-    pub fn reader_count(&self) -> usize {
-        self.shared
-            .lock()
-            .unwrap()
+    pub fn reader_count(&self) -> Result<usize> {
+        Ok(lock_or_poisoned(&self.shared, "sst writer shared state")?
             .readers
             .iter()
             .filter(|r| r.alive.load(Ordering::Relaxed))
-            .count()
+            .count())
     }
 
     /// Queue occupancy check + retirement: drop steps every live reader
@@ -241,10 +261,11 @@ impl SstWriter {
         }
     }
 
-    fn queue_has_room(&self) -> bool {
-        let mut shared = self.shared.lock().unwrap();
+    fn queue_has_room(&self) -> Result<bool> {
+        let mut shared =
+            lock_or_poisoned(&self.shared, "sst writer shared state")?;
         Self::retire_locked(&mut shared);
-        shared.published.len() < self.opts.queue.limit
+        Ok(shared.published.len() < self.opts.queue.limit)
     }
 }
 
@@ -286,20 +307,32 @@ fn serve_reader(
         codecs,
     });
 
-    // Late joiners see the currently staged steps.
+    // Late joiners see the currently staged steps. Backlog replay and
+    // peer registration happen in ONE critical section: a step published
+    // between the two would otherwise be announced to nobody — not in
+    // the backlog, and the reader not yet in the peer table.
     {
-        let shared_l = shared.lock().unwrap();
-        let mut tx = peer.tx.lock().unwrap();
-        for (step, staged) in &shared_l.published {
-            tx.send(Msg::StepAnnounce { step: *step,
-                                        meta: staged.meta.clone() })?;
+        let mut sh = lock_or_poisoned(shared, "sst writer shared state")?;
+        let mut backlog: Vec<Msg> = sh
+            .published
+            .iter()
+            .map(|(step, staged)| Msg::StepAnnounce {
+                step: *step,
+                meta: staged.meta.clone(),
+            })
+            .collect();
+        if sh.closed {
+            backlog.push(Msg::CloseStream);
         }
-        if shared_l.closed {
-            tx.send(Msg::CloseStream)?;
+        let mut tx = lock_or_poisoned(&peer.tx, "reader peer tx")?;
+        for m in backlog {
+            // lint:allow(lock-across-blocking): the backlog must go
+            // out under the registration lock, or a concurrent
+            // end_step could publish a step this reader never hears
+            // about
+            tx.send(m)?;
         }
-    }
-    {
-        let mut sh = shared.lock().unwrap();
+        drop(tx);
         sh.readers.push(peer.clone());
         sh.ever_had_reader = true;
     }
@@ -323,7 +356,11 @@ fn serve_reader(
                         // readers and the producer's perform_puts never
                         // serialize on compression.
                         let staged = {
-                            let mut sh = shared.lock().unwrap();
+                            let Some(mut sh) = lock_or_warn(
+                                &shared, "sst writer shared state",
+                            ) else {
+                                break;
+                            };
                             sh.stats.batch_requests += 1;
                             sh.stats.chunk_requests += items.len() as u64;
                             sh.published.get(&step).cloned()
@@ -356,21 +393,35 @@ fn serve_reader(
                             }
                         }
                         {
-                            let mut sh = shared.lock().unwrap();
+                            let Some(mut sh) = lock_or_warn(
+                                &shared, "sst writer shared state",
+                            ) else {
+                                break;
+                            };
                             sh.stats.bytes_served += served_bytes;
                             sh.stats.data_messages += 1;
                             sh.ops.absorb(local_ops);
                         }
                         let reply =
                             Msg::GetBatchReply { req_id, items: replies };
-                        if peer.tx.lock().unwrap().send(reply).is_err() {
+                        let sent = match lock_or_poisoned(
+                            &peer.tx, "reader peer tx",
+                        ) {
+                            Ok(mut tx) => tx.send(reply).is_ok(),
+                            Err(_) => false,
+                        };
+                        if !sent {
                             break;
                         }
                     }
                     Ok(Recv::Msg(Msg::StepDone { step })) => {
                         // done holds step+1 (see retire_locked).
                         peer.done.fetch_max(step + 1, Ordering::Relaxed);
-                        let mut sh = shared.lock().unwrap();
+                        let Some(mut sh) = lock_or_warn(
+                            &shared, "sst writer shared state",
+                        ) else {
+                            break;
+                        };
                         SstWriter::retire_locked(&mut sh);
                         drop(sh);
                         cv.notify_all();
@@ -380,23 +431,30 @@ fn serve_reader(
                     Ok(Recv::Msg(other)) => {
                         crate::warn_log!(
                             "sst-writer",
-                            "unexpected message from reader: tag-ish {:?}",
+                            "unexpected message from reader {}: tag-ish {:?}",
+                            peer.rank,
                             std::mem::discriminant(&other)
                         );
                     }
                     Err(e) => {
-                        crate::warn_log!("sst-writer", "recv error: {e:#}");
+                        crate::warn_log!(
+                            "sst-writer",
+                            "reader {} recv error: {e:#}",
+                            peer.rank
+                        );
                         break;
                     }
                 }
             }
             peer.alive.store(false, Ordering::Relaxed);
-            let mut sh = shared.lock().unwrap();
-            SstWriter::retire_locked(&mut sh);
-            drop(sh);
+            if let Some(mut sh) =
+                lock_or_warn(&shared, "sst writer shared state")
+            {
+                SstWriter::retire_locked(&mut sh);
+            }
             cv.notify_all();
         })?;
-    threads.lock().unwrap().push(handle);
+    lock_or_poisoned(threads, "service thread registry")?.push(handle);
     Ok(())
 }
 
@@ -515,24 +573,28 @@ impl Engine for SstWriter {
             self.puts.discard();
         }
         let step = self.next_step;
-        let has_room = self.queue_has_room();
+        let has_room = self.queue_has_room()?;
         let keep = match (&self.opts.group, self.opts.queue.policy) {
             (Some(group), QueueFullPolicy::Discard) => {
-                group.decide(step, || has_room)
+                group.decide(step, || has_room)?
             }
             (None, QueueFullPolicy::Discard) => has_room,
             (_, QueueFullPolicy::Block) => {
                 // Block until the queue drains.
-                let mut sh = self.shared.lock().unwrap();
+                let mut sh = lock_or_poisoned(
+                    &self.shared, "sst writer shared state",
+                )?;
                 loop {
                     Self::retire_locked(&mut sh);
                     if sh.published.len() < self.opts.queue.limit {
                         break;
                     }
-                    let (guard, timeout) = self
-                        .retire_cv
-                        .wait_timeout(sh, Duration::from_millis(200))
-                        .unwrap();
+                    let (guard, timeout) = wait_timeout_or_poisoned(
+                        &self.retire_cv,
+                        sh,
+                        Duration::from_millis(200),
+                        "sst writer shared state",
+                    )?;
                     sh = guard;
                     if timeout.timed_out() && sh.closed {
                         bail!("writer closed while blocked on full queue");
@@ -544,7 +606,9 @@ impl Engine for SstWriter {
         if !keep {
             self.next_step += 1;
             self.discarding = true;
-            self.shared.lock().unwrap().stats.steps_discarded += 1;
+            lock_or_poisoned(&self.shared, "sst writer shared state")?
+                .stats
+                .steps_discarded += 1;
             return Ok(StepStatus::Discarded);
         }
         self.discarding = false;
@@ -628,7 +692,8 @@ impl Engine for SstWriter {
                 .or_default()
                 .push((p.chunk, data));
         }
-        let mut sh = self.shared.lock().unwrap();
+        let mut sh =
+            lock_or_poisoned(&self.shared, "sst writer shared state")?;
         sh.stats.bytes_put += put_bytes;
         sh.ops.absorb(local_ops);
         Ok(())
@@ -690,23 +755,34 @@ impl Engine for SstWriter {
         let step = self.next_step;
         self.next_step += 1;
         let staged = Arc::new(staged);
-        let mut sh = self.shared.lock().unwrap();
+        // Publish under the lock, announce outside it: a slow reader
+        // socket must not stall the service threads on `shared`. A
+        // reader joining after the snapshot replays the freshly inserted
+        // step from the backlog instead (see serve_reader), so every
+        // peer hears about the step exactly once.
+        let mut sh =
+            lock_or_poisoned(&self.shared, "sst writer shared state")?;
         sh.stats.steps_published += 1;
         sh.published.insert(step, staged.clone());
-        for r in sh.readers.iter() {
-            if r.alive.load(Ordering::Relaxed) {
-                let ok = r
-                    .tx
-                    .lock()
-                    .unwrap()
+        let peers: Vec<Arc<ReaderPeer>> = sh
+            .readers
+            .iter()
+            .filter(|r| r.alive.load(Ordering::Relaxed))
+            .cloned()
+            .collect();
+        drop(sh);
+        for r in peers {
+            let ok = match lock_or_poisoned(&r.tx, "reader peer tx") {
+                Ok(mut tx) => tx
                     .send(Msg::StepAnnounce {
                         step,
                         meta: staged.meta.clone(),
                     })
-                    .is_ok();
-                if !ok {
-                    r.alive.store(false, Ordering::Relaxed);
-                }
+                    .is_ok(),
+                Err(_) => false,
+            };
+            if !ok {
+                r.alive.store(false, Ordering::Relaxed);
             }
         }
         Ok(())
@@ -716,16 +792,26 @@ impl Engine for SstWriter {
         if self.current.is_some() || self.discarding {
             self.end_step()?;
         }
-        {
-            let mut sh = self.shared.lock().unwrap();
+        // Same publish-then-announce split as end_step: flip `closed`
+        // and snapshot the live peers under the lock, send CloseStream
+        // outside it. Readers that join after the flip get CloseStream
+        // appended to their backlog replay.
+        let peers: Vec<Arc<ReaderPeer>> = {
+            let mut sh =
+                lock_or_poisoned(&self.shared, "sst writer shared state")?;
             if sh.closed {
                 return Ok(());
             }
             sh.closed = true;
-            for r in sh.readers.iter() {
-                if r.alive.load(Ordering::Relaxed) {
-                    let _ = r.tx.lock().unwrap().send(Msg::CloseStream);
-                }
+            sh.readers
+                .iter()
+                .filter(|r| r.alive.load(Ordering::Relaxed))
+                .cloned()
+                .collect()
+        };
+        for r in peers {
+            if let Ok(mut tx) = lock_or_poisoned(&r.tx, "reader peer tx") {
+                let _ = tx.send(Msg::CloseStream);
             }
         }
         // Linger so that (a) readers that already subscribed can finish
@@ -733,7 +819,8 @@ impl Engine for SstWriter {
         // still in flight are not stranded mid-connect.
         let deadline = std::time::Instant::now() + self.opts.close_linger;
         loop {
-            let mut sh = self.shared.lock().unwrap();
+            let mut sh =
+                lock_or_poisoned(&self.shared, "sst writer shared state")?;
             Self::retire_locked(&mut sh);
             if sh.published.is_empty() {
                 break;
@@ -746,10 +833,12 @@ impl Engine for SstWriter {
                 // All subscribers consumed what they wanted and left.
                 break;
             }
-            let (guard, _) = self
-                .retire_cv
-                .wait_timeout(sh, Duration::from_millis(50))
-                .unwrap();
+            let (guard, _) = wait_timeout_or_poisoned(
+                &self.retire_cv,
+                sh,
+                Duration::from_millis(50),
+                "sst writer shared state",
+            )?;
             drop(guard);
             if std::time::Instant::now() > deadline {
                 crate::warn_log!("sst-writer",
@@ -761,8 +850,10 @@ impl Engine for SstWriter {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        let threads: Vec<_> =
-            std::mem::take(&mut *self.service_threads.lock().unwrap());
+        let threads: Vec<_> = std::mem::take(&mut *lock_or_poisoned(
+            &self.service_threads,
+            "service thread registry",
+        )?);
         for t in threads {
             let _ = t.join();
         }
@@ -770,7 +861,15 @@ impl Engine for SstWriter {
     }
 
     fn ops_report(&self) -> OpsReport {
-        self.shared.lock().unwrap().ops
+        // The trait returns a bare report: on poison, report empty
+        // rather than tearing the caller down for a diagnostics read.
+        match lock_or_poisoned(&self.shared, "sst writer shared state") {
+            Ok(sh) => sh.ops,
+            Err(e) => {
+                crate::warn_log!("sst-writer", "{e}; reporting empty ops");
+                OpsReport::default()
+            }
+        }
     }
 }
 

@@ -25,6 +25,7 @@ use anyhow::{bail, Context, Result};
 use once_cell::sync::Lazy;
 
 use super::wire::{decode_msg, encode_msg, GetReply, Msg};
+use crate::util::sync::lock_or_poisoned;
 
 /// Receive outcome for the non-blocking path.
 pub enum Recv {
@@ -193,7 +194,13 @@ impl Listener for InProcListener {
 
 impl Drop for InProcListener {
     fn drop(&mut self) {
-        INPROC_REGISTRY.lock().unwrap().remove(&self.address);
+        // Poisoned registry on teardown: skip the unregister rather
+        // than panic inside drop (which would abort).
+        if let Ok(mut reg) =
+            lock_or_poisoned(&INPROC_REGISTRY, "inproc registry")
+        {
+            reg.remove(&self.address);
+        }
     }
 }
 
@@ -212,7 +219,7 @@ impl Transport for InProcTransport {
             format!("inproc://{hint}")
         };
         let (tx, rx) = mpsc::sync_channel(64);
-        let mut reg = INPROC_REGISTRY.lock().unwrap();
+        let mut reg = lock_or_poisoned(&INPROC_REGISTRY, "inproc registry")?;
         if reg.contains_key(&address) {
             bail!("inproc address {address:?} already in use");
         }
@@ -222,7 +229,8 @@ impl Transport for InProcTransport {
 
     fn dial(&self, address: &str) -> Result<Box<dyn Conn>> {
         let acceptor = {
-            let reg = INPROC_REGISTRY.lock().unwrap();
+            let reg =
+                lock_or_poisoned(&INPROC_REGISTRY, "inproc registry")?;
             reg.get(address)
                 .cloned()
                 .with_context(|| format!("no inproc listener at {address:?}"))?

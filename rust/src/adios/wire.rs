@@ -17,6 +17,13 @@ use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::types::Datatype;
 use crate::openpmd::Attribute;
 
+/// Wire-format version tag. Bump this whenever the frame layout of
+/// [`encode_msg`]/[`StepMeta::encode`] or the [`Msg`] tag map changes —
+/// `pallas-lint`'s `format-fingerprint` rule compares the structural
+/// fingerprint of those bodies against the committed manifest and fails
+/// when the layout drifts while this string stays put.
+pub const WIRE_FORMAT: &str = "SSTWIRE01";
+
 /// Per-variable metadata within a step announcement.
 #[derive(Clone, Debug, PartialEq)]
 pub struct VarMeta {
@@ -156,11 +163,18 @@ impl<'a> Reader<'a> {
     }
 
     pub fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b: [u8; 8] = self
+            .take(8)?
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("wire decode: short u64"))?;
+        Ok(u64::from_le_bytes(b))
     }
 
     pub fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        self.take(1)?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("wire decode: short u8"))
     }
 
     pub fn str(&mut self) -> Result<String> {

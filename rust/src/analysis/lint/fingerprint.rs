@@ -1,0 +1,633 @@
+//! Format-fingerprint hygiene (the `format-fingerprint` rule).
+//!
+//! The on-disk BP layout and the SST wire protocol are contracts with
+//! every peer and every previously-written file. Silently editing
+//! `StepMeta::encode`, `encode_msg`, or `BpWriter::end_step` — or the
+//! `Msg` tag map — without bumping the corresponding version string
+//! (`MAGIC` in `bp.rs`, `WIRE_FORMAT` in `wire.rs`) produces readers
+//! and writers that disagree while claiming compatibility.
+//!
+//! This module extracts a *structural* fingerprint of those layouts
+//! (the ordered sequence of serializer calls in each encode body, plus
+//! the tag map and version strings) and compares it against the
+//! committed manifest `tools/lint/format.fingerprint.json`. A diff is a
+//! finding; `pallas-lint --bless` regenerates the manifest but refuses
+//! when a layout changed while its version string did not.
+//!
+//! The fingerprint is deliberately token-structural rather than a
+//! source hash: formatting, comments, and variable renames don't
+//! disturb it — only the actual serialization sequence does.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::lexer::{self, Token};
+use super::{rules, Finding};
+use crate::util::json::{self, Json};
+
+/// Call-position identifiers that constitute a serialized layout.
+/// Only calls to these (in order) enter the fingerprint; control flow
+/// and arithmetic around them do not.
+const OP_VOCAB: &[&str] = &[
+    "put_u64",
+    "put_str",
+    "put_vec_u64",
+    "put_chunk",
+    "push",
+    "extend_from_slice",
+    "encode",
+    "write_all",
+];
+
+/// The structural fingerprint of the two format-bearing modules.
+#[derive(Debug, PartialEq)]
+pub struct Fingerprint {
+    /// `const MAGIC` in `bp.rs` (e.g. `OPMDBP03`).
+    pub bp_magic: String,
+    /// `const WIRE_FORMAT` in `wire.rs`.
+    pub wire_version: String,
+    /// `Msg` variant → tag byte, from `Msg::tag`.
+    pub msg_tags: BTreeMap<String, u64>,
+    /// Layout name → ordered serializer-call sequence.
+    pub layouts: BTreeMap<String, Vec<String>>,
+}
+
+/// The layouts recorded per module (manifest key → owner/function).
+const WIRE_LAYOUTS: &[(&str, Option<&str>, &str)] = &[
+    ("wire.rs::StepMeta::encode", Some("StepMeta"), "encode"),
+    ("wire.rs::encode_msg", None, "encode_msg"),
+];
+const BP_LAYOUTS: &[(&str, Option<&str>, &str)] =
+    &[("bp.rs::BpWriter::end_step", Some("BpWriter"), "end_step")];
+
+/// Value of `const NAME: .. = ["b"]"VALUE"`, by raw text scan — the
+/// lexer drops string contents, so the source text is the authority.
+fn const_str(src: &str, name: &str) -> Option<String> {
+    let at = src.find(&format!("const {name}"))?;
+    let rest = &src[at..];
+    let q = rest.find('"')?;
+    let rest = &rest[q + 1..];
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+fn match_brace(t: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut k = open;
+    while k < t.len() {
+        if t[k].is_punct('{') {
+            depth += 1;
+        } else if t[k].is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+        k += 1;
+    }
+    t.len().saturating_sub(1)
+}
+
+/// Find `fn name`'s body tokens within `t[start..end]`.
+fn fn_body<'a>(
+    t: &'a [Token],
+    start: usize,
+    end: usize,
+    name: &str,
+) -> Option<&'a [Token]> {
+    let mut i = start;
+    while i + 1 < end {
+        if t[i].is_ident("fn") && t[i + 1].is_ident(name) {
+            let (b, e) = rules::body_range(t, i + 2)?;
+            return Some(&t[b..e]);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Find `fn name`'s body, optionally qualified by the impl self type:
+/// `owner = Some("BpWriter")` matches both `impl BpWriter` and
+/// `impl Engine for BpWriter` (the owner must be the self type — after
+/// `for` when a trait is implemented).
+fn body_of<'a>(
+    t: &'a [Token],
+    owner: Option<&str>,
+    name: &str,
+) -> Option<&'a [Token]> {
+    let Some(owner) = owner else {
+        return fn_body(t, 0, t.len(), name);
+    };
+    let mut i = 0usize;
+    while i < t.len() {
+        if !t[i].is_ident("impl") {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        let mut for_at: Option<usize> = None;
+        let mut owner_at: Option<usize> = None;
+        while j < t.len()
+            && !t[j].is_punct('{')
+            && !t[j].is_punct(';')
+        {
+            if t[j].is_ident("for") {
+                for_at.get_or_insert(j);
+            }
+            if t[j].is_ident(owner) {
+                owner_at = Some(j);
+            }
+            j += 1;
+        }
+        if j >= t.len() || !t[j].is_punct('{') {
+            i = j.max(i + 1);
+            continue;
+        }
+        let end = match_brace(t, j);
+        let is_owner = match (owner_at, for_at) {
+            (Some(o), Some(f)) => o > f,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        if is_owner {
+            if let Some(b) = fn_body(t, j + 1, end, name) {
+                return Some(b);
+            }
+        }
+        i = end + 1;
+    }
+    None
+}
+
+/// Ordered serializer calls (vocabulary-filtered, call position only).
+fn ops(body: &[Token]) -> Vec<String> {
+    let mut out = Vec::new();
+    for i in 0..body.len() {
+        if let Some(id) = body[i].ident() {
+            if OP_VOCAB.contains(&id)
+                && body
+                    .get(i + 1)
+                    .map(|n| n.is_punct('('))
+                    .unwrap_or(false)
+            {
+                out.push(id.to_string());
+            }
+        }
+    }
+    out
+}
+
+/// `Msg` variant → tag, from the match arms of `fn tag`
+/// (`Msg::Hello { .. } => 1`).
+fn msg_tags(t: &[Token]) -> BTreeMap<String, u64> {
+    let mut out = BTreeMap::new();
+    let Some(body) = body_of(t, None, "tag") else {
+        return out;
+    };
+    let mut last: Option<String> = None;
+    let mut i = 0usize;
+    while i < body.len() {
+        if body[i].is_ident("Msg")
+            && body.get(i + 1).map(|x| x.is_punct(':')).unwrap_or(false)
+            && body.get(i + 2).map(|x| x.is_punct(':')).unwrap_or(false)
+        {
+            if let Some(v) = body.get(i + 3).and_then(|x| x.ident()) {
+                last = Some(v.to_string());
+                i += 4;
+                continue;
+            }
+        }
+        if body[i].is_punct('=')
+            && body.get(i + 1).map(|x| x.is_punct('>')).unwrap_or(false)
+        {
+            if let Some(n) = body.get(i + 2).and_then(|x| x.num()) {
+                if let (Some(name), Ok(tag)) = (
+                    last.take(),
+                    n.replace('_', "").parse::<u64>(),
+                ) {
+                    out.insert(name, tag);
+                }
+            }
+            i += 2;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Extract the live fingerprint from the sources under `root`.
+pub fn extract(root: &Path) -> Result<Fingerprint> {
+    let wire_path = root.join("rust/src/adios/wire.rs");
+    let bp_path = root.join("rust/src/adios/bp.rs");
+    let wire_src = std::fs::read_to_string(&wire_path)
+        .with_context(|| format!("reading {}", wire_path.display()))?;
+    let bp_src = std::fs::read_to_string(&bp_path)
+        .with_context(|| format!("reading {}", bp_path.display()))?;
+    let wire = lexer::lex(&wire_src).tokens;
+    let bp = lexer::lex(&bp_src).tokens;
+
+    let bp_magic = const_str(&bp_src, "MAGIC")
+        .ok_or_else(|| anyhow!("bp.rs: `const MAGIC` not found"))?;
+    let wire_version = const_str(&wire_src, "WIRE_FORMAT").ok_or_else(
+        || anyhow!("wire.rs: `const WIRE_FORMAT` not found"),
+    )?;
+    let tags = msg_tags(&wire);
+    if tags.is_empty() {
+        bail!("wire.rs: no Msg tags extracted from `fn tag`");
+    }
+    let mut layouts = BTreeMap::new();
+    for (toks, specs) in
+        [(&wire, WIRE_LAYOUTS), (&bp, BP_LAYOUTS)]
+    {
+        for (key, owner, name) in specs {
+            let body = body_of(toks, *owner, name).ok_or_else(|| {
+                anyhow!("fingerprint target `{}` not found", key)
+            })?;
+            layouts.insert((*key).to_string(), ops(body));
+        }
+    }
+    Ok(Fingerprint { bp_magic, wire_version, msg_tags: tags, layouts })
+}
+
+impl Fingerprint {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("bp_magic".into(), Json::Str(self.bp_magic.clone()));
+        o.insert(
+            "wire_version".into(),
+            Json::Str(self.wire_version.clone()),
+        );
+        o.insert(
+            "msg_tags".into(),
+            Json::Obj(
+                self.msg_tags
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "layouts".into(),
+            Json::Obj(
+                self.layouts
+                    .iter()
+                    .map(|(k, ops)| {
+                        (
+                            k.clone(),
+                            Json::Arr(
+                                ops.iter()
+                                    .map(|s| Json::Str(s.clone()))
+                                    .collect(),
+                            ),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Fingerprint> {
+        let field = |k: &str| {
+            j.get(k).ok_or_else(|| anyhow!("manifest missing `{k}`"))
+        };
+        let s = |k: &str| -> Result<String> {
+            Ok(field(k)?
+                .as_str()
+                .ok_or_else(|| anyhow!("manifest `{k}` not a string"))?
+                .to_string())
+        };
+        let mut msg_tags = BTreeMap::new();
+        for (k, v) in field("msg_tags")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest `msg_tags` not an object"))?
+        {
+            msg_tags.insert(
+                k.clone(),
+                v.as_u64().ok_or_else(|| {
+                    anyhow!("manifest tag `{k}` not an integer")
+                })?,
+            );
+        }
+        let mut layouts = BTreeMap::new();
+        for (k, v) in field("layouts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest `layouts` not an object"))?
+        {
+            let ops = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("layout `{k}` not an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_str().map(str::to_string).ok_or_else(|| {
+                        anyhow!("layout `{k}` has a non-string op")
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            layouts.insert(k.clone(), ops);
+        }
+        Ok(Fingerprint {
+            bp_magic: s("bp_magic")?,
+            wire_version: s("wire_version")?,
+            msg_tags,
+            layouts,
+        })
+    }
+}
+
+fn diff_module(
+    module_file: &str,
+    version_name: &str,
+    version_changed: bool,
+    changed_keys: &[&str],
+    out: &mut Vec<Finding>,
+) {
+    if changed_keys.is_empty() {
+        if version_changed {
+            out.push(Finding::new(
+                "format-fingerprint",
+                module_file,
+                0,
+                format!(
+                    "`{version_name}` was bumped but the recorded \
+                     manifest still holds the old value — run \
+                     `pallas-lint --bless`"
+                ),
+            ));
+        }
+        return;
+    }
+    let what = changed_keys.join(", ");
+    let msg = if version_changed {
+        format!(
+            "serialized layout changed ({what}) — run `pallas-lint \
+             --bless` to record the new fingerprint"
+        )
+    } else {
+        format!(
+            "serialized layout changed ({what}) without bumping \
+             `{version_name}` — old readers will misparse; bump the \
+             version, then `pallas-lint --bless`"
+        )
+    };
+    out.push(Finding::new("format-fingerprint", module_file, 0, msg));
+}
+
+/// Compare the live fingerprint against the manifest; mismatches are
+/// `format-fingerprint` findings. IO/parse problems are hard errors.
+pub fn check(
+    root: &Path,
+    manifest: &Path,
+    out: &mut Vec<Finding>,
+) -> Result<()> {
+    let current = extract(root)?;
+    let text = match std::fs::read_to_string(manifest) {
+        Ok(t) => t,
+        Err(_) => {
+            out.push(Finding::new(
+                "format-fingerprint",
+                "tools/lint/format.fingerprint.json",
+                0,
+                "fingerprint manifest missing — run `pallas-lint \
+                 --bless` and commit it"
+                    .to_string(),
+            ));
+            return Ok(());
+        }
+    };
+    let recorded = Fingerprint::from_json(
+        &json::parse(&text)
+            .map_err(|e| anyhow!("parsing fingerprint manifest: {e}"))?,
+    )?;
+
+    let changed = |keys: &[(&str, Option<&str>, &str)]| -> Vec<&str> {
+        keys.iter()
+            .map(|(k, _, _)| *k)
+            .filter(|k| current.layouts.get(*k) != recorded.layouts.get(*k))
+            .collect()
+    };
+    let mut wire_changed = changed(WIRE_LAYOUTS);
+    if current.msg_tags != recorded.msg_tags {
+        wire_changed.push("wire.rs::Msg tags");
+    }
+    diff_module(
+        "rust/src/adios/wire.rs",
+        "WIRE_FORMAT",
+        current.wire_version != recorded.wire_version,
+        &wire_changed,
+        out,
+    );
+    diff_module(
+        "rust/src/adios/bp.rs",
+        "MAGIC",
+        current.bp_magic != recorded.bp_magic,
+        &changed(BP_LAYOUTS),
+        out,
+    );
+    Ok(())
+}
+
+/// Regenerate the manifest — unless a layout changed while its version
+/// string did not, which is exactly the mistake the rule exists to
+/// catch.
+pub fn bless(root: &Path, manifest: &Path) -> Result<String> {
+    let current = extract(root)?;
+    if let Ok(text) = std::fs::read_to_string(manifest) {
+        let old = Fingerprint::from_json(
+            &json::parse(&text).map_err(|e| {
+                anyhow!("parsing existing manifest: {e}")
+            })?,
+        )?;
+        let key_changed = |keys: &[(&str, Option<&str>, &str)]| {
+            keys.iter().any(|(k, _, _)| {
+                current.layouts.get(*k) != old.layouts.get(*k)
+            })
+        };
+        if (key_changed(WIRE_LAYOUTS)
+            || current.msg_tags != old.msg_tags)
+            && current.wire_version == old.wire_version
+        {
+            bail!(
+                "refusing to bless: the wire layout changed but \
+                 WIRE_FORMAT is still {:?} — bump it first",
+                current.wire_version
+            );
+        }
+        if key_changed(BP_LAYOUTS) && current.bp_magic == old.bp_magic {
+            bail!(
+                "refusing to bless: the BP layout changed but MAGIC \
+                 is still {:?} — bump it first",
+                current.bp_magic
+            );
+        }
+    }
+    if let Some(dir) = manifest.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    let mut body = current.to_json().to_string_pretty();
+    body.push('\n');
+    std::fs::write(manifest, body)
+        .with_context(|| format!("writing {}", manifest.display()))?;
+    Ok(format!("fingerprint manifest written: {}", manifest.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WIRE_FIXTURE: &str = r#"
+pub const WIRE_FORMAT: &str = "TESTWIRE01";
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::StepAnnounce(_) => 3,
+            Msg::Bye => 9,
+        }
+    }
+}
+impl StepMeta {
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.step);
+        for v in &self.vars {
+            put_str(out, &v.name);
+            v.meta.encode(out);
+        }
+    }
+}
+pub fn encode_msg(msg: &Msg) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.push(msg.tag());
+    put_u64(&mut out, 0);
+    out
+}
+"#;
+
+    const BP_FIXTURE: &str = r#"
+const MAGIC: &[u8; 8] = b"TESTBP01";
+impl BpWriter {
+    pub fn create() {}
+}
+impl Engine for BpWriter {
+    fn end_step(&mut self) -> Result<()> {
+        self.buf.extend_from_slice(MAGIC);
+        self.file.write_all(&self.buf)?;
+        Ok(())
+    }
+}
+impl Engine for BpReader {
+    fn end_step(&mut self) -> Result<()> {
+        self.step += 1;
+        Ok(())
+    }
+}
+"#;
+
+    fn fixture_root(tag: &str) -> std::path::PathBuf {
+        let root = std::env::temp_dir().join(format!(
+            "pallas-lint-fp-{}-{}",
+            tag,
+            std::process::id()
+        ));
+        let adios = root.join("rust/src/adios");
+        std::fs::create_dir_all(&adios).unwrap();
+        std::fs::write(adios.join("wire.rs"), WIRE_FIXTURE).unwrap();
+        std::fs::write(adios.join("bp.rs"), BP_FIXTURE).unwrap();
+        root
+    }
+
+    #[test]
+    fn extracts_structural_fingerprint() {
+        let root = fixture_root("extract");
+        let fp = extract(&root).unwrap();
+        assert_eq!(fp.bp_magic, "TESTBP01");
+        assert_eq!(fp.wire_version, "TESTWIRE01");
+        assert_eq!(fp.msg_tags.get("Hello"), Some(&1));
+        assert_eq!(fp.msg_tags.get("StepAnnounce"), Some(&3));
+        assert_eq!(fp.msg_tags.get("Bye"), Some(&9));
+        assert_eq!(
+            fp.layouts["wire.rs::StepMeta::encode"],
+            vec!["put_u64", "put_str", "encode"]
+        );
+        assert_eq!(
+            fp.layouts["wire.rs::encode_msg"],
+            vec!["push", "put_u64"]
+        );
+        // BpWriter's end_step, not BpReader's.
+        assert_eq!(
+            fp.layouts["bp.rs::BpWriter::end_step"],
+            vec!["extend_from_slice", "write_all"]
+        );
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn manifest_round_trips() {
+        let root = fixture_root("roundtrip");
+        let fp = extract(&root).unwrap();
+        let back = Fingerprint::from_json(
+            &json::parse(&fp.to_json().to_string_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, fp);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn layout_drift_without_version_bump_is_caught() {
+        let root = fixture_root("drift");
+        let manifest = root.join("fingerprint.json");
+        bless(&root, &manifest).unwrap();
+
+        // Clean check after bless.
+        let mut f = Vec::new();
+        check(&root, &manifest, &mut f).unwrap();
+        assert!(f.is_empty(), "{f:?}");
+
+        // Reorder the BP layout without touching MAGIC.
+        let bp = root.join("rust/src/adios/bp.rs");
+        let src = std::fs::read_to_string(&bp)
+            .unwrap()
+            .replace(
+                "self.buf.extend_from_slice(MAGIC);\n        \
+                 self.file.write_all(&self.buf)?;",
+                "self.file.write_all(&self.buf)?;\n        \
+                 self.buf.extend_from_slice(MAGIC);",
+            );
+        std::fs::write(&bp, src).unwrap();
+
+        let mut f = Vec::new();
+        check(&root, &manifest, &mut f).unwrap();
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "format-fingerprint");
+        assert!(f[0].message.contains("MAGIC"), "{}", f[0].message);
+
+        // And bless refuses to paper over it.
+        let err = bless(&root, &manifest).unwrap_err().to_string();
+        assert!(err.contains("refusing to bless"), "{err}");
+
+        // Bumping MAGIC unblocks the bless.
+        let src = std::fs::read_to_string(&bp)
+            .unwrap()
+            .replace("TESTBP01", "TESTBP02");
+        std::fs::write(&bp, src).unwrap();
+        bless(&root, &manifest).unwrap();
+        let mut f = Vec::new();
+        check(&root, &manifest, &mut f).unwrap();
+        assert!(f.is_empty(), "{f:?}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_a_finding_not_an_error() {
+        let root = fixture_root("missing");
+        let mut f = Vec::new();
+        check(&root, &root.join("nope.json"), &mut f).unwrap();
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("--bless"));
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -1,0 +1,472 @@
+//! A Rust token scanner sufficient for `pallas-lint`'s rules.
+//!
+//! Not a full lexer: it distinguishes identifiers, integer/float
+//! literals, string/char literals (contents dropped, so rule patterns
+//! never fire inside quoted text), lifetimes, comments (retained so
+//! `lint:allow` waiver directives can be parsed), and single-character
+//! punctuation. Multi-character operators arrive as their component
+//! punct tokens (`::` is `:` `:`), which is all the rules need.
+//!
+//! Handles the literal forms that appear in this crate: escapes in
+//! string and char literals, raw strings `r"…"` / `r#"…"#` with any
+//! number of hashes, byte strings `b"…"` / `br#"…"#`, nested block
+//! comments, and the lifetime-vs-char-literal ambiguity after `'`.
+
+/// One lexed token with the 1-based line it starts on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub line: u32,
+    pub kind: TokKind,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Single punctuation character.
+    Punct(char),
+    /// Numeric literal (verbatim text, e.g. `0x1f`, `3.5`, `1u64`).
+    Num(String),
+    /// String literal of any form; contents dropped.
+    Str,
+    /// Char literal; contents dropped.
+    Char,
+    /// Lifetime (`'a`).
+    Lifetime,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(&self.kind, TokKind::Ident(i) if i == s)
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Ident(i) => Some(i),
+            _ => None,
+        }
+    }
+
+    pub fn num(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Num(n) => Some(n),
+            _ => None,
+        }
+    }
+}
+
+/// A comment, kept out of the token stream (rules never match inside
+/// comments) but retained for waiver-directive parsing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Comment {
+    pub line: u32,
+    /// Text without the `//` / `/*` markers, trimmed.
+    pub text: String,
+    /// True when the comment is the only thing on its source line
+    /// (directives in such comments waive the *next* line).
+    pub own_line: bool,
+}
+
+/// Lexer output: the token stream plus the comment side channel.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+/// Tokenize `src`. Never fails: unrecognized bytes are skipped (an
+/// unterminated literal consumes to end of input), which is the right
+/// degradation for a linter — rules simply see fewer tokens.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    // Byte offset where the current source line starts; used to decide
+    // whether a comment has code before it on the same line.
+    let mut line_start = 0usize;
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+                line_start = i;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                let start = i + 2;
+                let mut j = start;
+                while j < b.len() && b[j] != b'\n' {
+                    j += 1;
+                }
+                let own_line = src[line_start..i]
+                    .chars()
+                    .all(|ch| ch.is_whitespace());
+                out.comments.push(Comment {
+                    line,
+                    text: src[start..j].trim().to_string(),
+                    own_line,
+                });
+                i = j;
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                // Nested block comments, per Rust.
+                let start_line = line;
+                let text_start = i + 2;
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < b.len() && depth > 0 {
+                    if b[j] == b'\n' {
+                        line += 1;
+                        line_start = j + 1;
+                        j += 1;
+                    } else if b[j] == b'/'
+                        && j + 1 < b.len()
+                        && b[j + 1] == b'*'
+                    {
+                        depth += 1;
+                        j += 2;
+                    } else if b[j] == b'*'
+                        && j + 1 < b.len()
+                        && b[j + 1] == b'/'
+                    {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                let text_end = j.saturating_sub(2).max(text_start);
+                out.comments.push(Comment {
+                    line: start_line,
+                    text: src[text_start..text_end].trim().to_string(),
+                    own_line: false,
+                });
+                i = j;
+            }
+            b'"' => {
+                i = skip_string(b, i, &mut line, &mut line_start);
+                out.tokens.push(Token { line, kind: TokKind::Str });
+            }
+            b'\'' => {
+                // Lifetime or char literal.
+                let (next, kind) =
+                    lex_quote(b, i, &mut line, &mut line_start);
+                out.tokens.push(Token { line, kind });
+                i = next;
+            }
+            _ if c == b'r' || c == b'b' => {
+                // Possible raw/byte string prefix, else an identifier.
+                if let Some(next) =
+                    try_prefixed_string(b, i, &mut line, &mut line_start)
+                {
+                    out.tokens.push(Token { line, kind: TokKind::Str });
+                    i = next;
+                } else {
+                    i = lex_ident(src, b, i, line, &mut out.tokens);
+                }
+            }
+            _ if c == b'_' || c.is_ascii_alphabetic() => {
+                i = lex_ident(src, b, i, line, &mut out.tokens);
+            }
+            _ if c.is_ascii_digit() => {
+                let start = i;
+                let mut j = i + 1;
+                while j < b.len() {
+                    let d = b[j];
+                    if d == b'.' {
+                        // `1..n` is a range, not a float.
+                        if j + 1 < b.len() && b[j + 1] == b'.' {
+                            break;
+                        }
+                        // `1.method()` — method call on a literal.
+                        if j + 1 < b.len()
+                            && (b[j + 1] == b'_'
+                                || b[j + 1].is_ascii_alphabetic())
+                        {
+                            break;
+                        }
+                        j += 1;
+                    } else if d == b'_'
+                        || d.is_ascii_alphanumeric()
+                    {
+                        j += 1;
+                    } else {
+                        break;
+                    }
+                }
+                out.tokens.push(Token {
+                    line,
+                    kind: TokKind::Num(src[start..j].to_string()),
+                });
+                i = j;
+            }
+            _ => {
+                if c.is_ascii() {
+                    out.tokens.push(Token {
+                        line,
+                        kind: TokKind::Punct(c as char),
+                    });
+                    i += 1;
+                } else {
+                    // Multi-byte UTF-8 (e.g. `µ` in a doc string that
+                    // leaked here): skip the whole scalar.
+                    let mut j = i + 1;
+                    while j < b.len() && (b[j] & 0xC0) == 0x80 {
+                        j += 1;
+                    }
+                    i = j;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn lex_ident(
+    src: &str,
+    b: &[u8],
+    i: usize,
+    line: u32,
+    tokens: &mut Vec<Token>,
+) -> usize {
+    let start = i;
+    let mut j = i + 1;
+    while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+        j += 1;
+    }
+    tokens.push(Token {
+        line,
+        kind: TokKind::Ident(src[start..j].to_string()),
+    });
+    j
+}
+
+/// Skip a `"…"` string starting at `i` (which points at the opening
+/// quote). Returns the index after the closing quote.
+fn skip_string(
+    b: &[u8],
+    i: usize,
+    line: &mut u32,
+    line_start: &mut usize,
+) -> usize {
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            b'\n' => {
+                *line += 1;
+                j += 1;
+                *line_start = j;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Raw / byte string starting at `i` if the prefix matches
+/// (`r"`, `r#…#"`, `b"`, `br"`, `br#…#"`): returns the index after the
+/// literal, or `None` when this is a plain identifier.
+fn try_prefixed_string(
+    b: &[u8],
+    i: usize,
+    line: &mut u32,
+    line_start: &mut usize,
+) -> Option<usize> {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+        if j < b.len() && b[j] == b'"' {
+            return Some(skip_string(b, j, line, line_start));
+        }
+        if j >= b.len() || b[j] != b'r' {
+            return None;
+        }
+    }
+    // At `r`.
+    j += 1;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'"' {
+        return None;
+    }
+    // Raw string: scan for `"` followed by `hashes` hashes; no escapes.
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'\n' {
+            *line += 1;
+            j += 1;
+            *line_start = j;
+            continue;
+        }
+        if b[j] == b'"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < b.len() && b[k] == b'#' && seen < hashes {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return Some(k);
+            }
+        }
+        j += 1;
+    }
+    Some(j)
+}
+
+/// Disambiguate `'` at `i`: char literal vs lifetime. Returns the index
+/// after the token and its kind.
+fn lex_quote(
+    b: &[u8],
+    i: usize,
+    line: &mut u32,
+    line_start: &mut usize,
+) -> (usize, TokKind) {
+    let j = i + 1;
+    if j >= b.len() {
+        return (j, TokKind::Char);
+    }
+    if b[j] == b'\\' {
+        // Escaped char literal: skip to the closing quote.
+        let mut k = j + 2;
+        while k < b.len() && b[k] != b'\'' {
+            if b[k] == b'\n' {
+                *line += 1;
+                *line_start = k + 1;
+            }
+            k += 1;
+        }
+        return (k.saturating_add(1).min(b.len()), TokKind::Char);
+    }
+    if b[j] == b'_' || b[j].is_ascii_alphabetic() {
+        // `'a'` is a char literal; `'a` (no closing quote after one
+        // ident char run) is a lifetime.
+        let mut k = j + 1;
+        while k < b.len() && (b[k] == b'_' || b[k].is_ascii_alphanumeric())
+        {
+            k += 1;
+        }
+        if k < b.len() && b[k] == b'\'' && k == j + 1 {
+            return (k + 1, TokKind::Char);
+        }
+        return (k, TokKind::Lifetime);
+    }
+    // Punctuation char literal like `'('` or `' '`.
+    let mut k = j;
+    while k < b.len() && b[k] != b'\'' && b[k] != b'\n' {
+        k += 1;
+    }
+    if k < b.len() && b[k] == b'\'' {
+        return (k + 1, TokKind::Char);
+    }
+    // Stray quote; treat as punct to make progress.
+    (i + 1, TokKind::Punct('\''))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| t.ident().map(|s| s.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn basic_tokens_with_lines() {
+        let l = lex("let x = 1;\nfoo.bar();\n");
+        assert_eq!(
+            l.tokens[0],
+            Token { line: 1, kind: TokKind::Ident("let".into()) }
+        );
+        let bar = l
+            .tokens
+            .iter()
+            .find(|t| t.is_ident("bar"))
+            .expect("bar lexed");
+        assert_eq!(bar.line, 2);
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        // `.unwrap()` inside the string must not surface as tokens.
+        let l = lex(r#"let s = "a.unwrap() call"; s.len();"#);
+        assert!(!l.tokens.iter().any(|t| t.is_ident("unwrap")));
+        assert!(l.tokens.iter().any(|t| t.is_ident("len")));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let src = "let a = r#\"panic!(\"x\")\"#; let b = b\"todo\"; \
+                   let c = br#\"x\"#; rest";
+        let ids = idents(src);
+        assert!(!ids.contains(&"panic".to_string()));
+        assert!(!ids.contains(&"todo".to_string()));
+        assert!(ids.contains(&"rest".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes = l
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .count();
+        let chars = l
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Char)
+            .count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn comments_are_captured_not_tokenized() {
+        let l = lex("x(); // lint:allow(panic-site): reason\n/* block\n\
+                     unwrap */ y();");
+        assert!(!l.tokens.iter().any(|t| t.is_ident("unwrap")));
+        assert_eq!(l.comments.len(), 2);
+        assert!(l.comments[0].text.starts_with("lint:allow"));
+        assert!(!l.comments[0].own_line);
+        assert_eq!(l.comments[0].line, 1);
+    }
+
+    #[test]
+    fn own_line_comments_detected() {
+        let l = lex("    // lint:allow(x): next line\nfoo();");
+        assert!(l.comments[0].own_line);
+    }
+
+    #[test]
+    fn numbers_and_ranges() {
+        let l = lex("for i in 0..n { a[i] = 0x1f_u64; b = 1.5; }");
+        let nums: Vec<&str> =
+            l.tokens.iter().filter_map(|t| t.num()).collect();
+        assert_eq!(nums, vec!["0", "0x1f_u64", "1.5"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("a /* x /* y */ z */ b");
+        let ids = idents("a /* x /* y */ z */ b");
+        assert_eq!(ids, vec!["a", "b"]);
+        assert_eq!(l.comments.len(), 1);
+    }
+}

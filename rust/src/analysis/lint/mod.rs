@@ -1,0 +1,580 @@
+//! `pallas-lint`: the crate's own static-analysis gate.
+//!
+//! In the paper's loosely-coupled streaming setups a single panicking
+//! producer or reader tears down every coupled peer mid-stream — there
+//! is no filesystem to fall back to — so the crate-wide invariants the
+//! engine contract relies on (decode paths return typed errors, failed
+//! `perform_gets` poisons handles, wire lengths are validated before
+//! allocation) must hold *everywhere*, not just where a reviewer
+//! looked. This module is a hand-rolled (dependency-free) lexer-level
+//! scanner over the crate's own sources enforcing them statically,
+//! wired into CI through the `pallas-lint` binary (`tools/`).
+//!
+//! ## Rule families
+//!
+//! **Panic-freedom zones** (hardened modules only — see
+//! [`HARDENED_ZONES`]): `unwrap`/`expect` calls, `panic!`/`todo!`/
+//! `unimplemented!`/`unreachable!`, integer-literal slice indexing, and
+//! narrowing `as` casts are findings (`panic-site`, `index-literal`,
+//! `narrow-cast`) unless inside `#[cfg(test)]` / `#[cfg(debug_assertions)]`
+//! or waived.
+//!
+//! **Lock discipline**: `.lock().unwrap()` swallows poison anywhere in
+//! the crate (`lock-unwrap` — use [`crate::util::sync::lock_or_poisoned`]);
+//! inside hardened zones, holding a named lock guard across a blocking
+//! call (`lock-across-blocking`) or re-acquiring the same mutex while
+//! its guard is live (`nested-lock`) are findings.
+//!
+//! **Engine-contract conformance**: `impl Engine for ...` blocks must
+//! not override the eager `put`/`get` trait defaults
+//! (`engine-override`), and any `perform_gets` body that drains the
+//! deferred queue must reach `fail_batch`/`poison` on failure
+//! (`performgets-discipline`).
+//!
+//! **Escape + format hygiene**: `#[allow(...)]` attributes outside test
+//! code are findings (`allow-escape` — justify with a waiver or fix the
+//! code), and the wire/BP format fingerprint must match the committed
+//! manifest (`format-fingerprint`, see [`fingerprint`]).
+//!
+//! ## Waiver grammar
+//!
+//! A finding is waived by an inline comment directive on the same line,
+//! or alone on the line directly above:
+//!
+//! ```text
+//! // lint:allow(<rule>): <reason>
+//! ```
+//!
+//! The reason is mandatory; a directive with an unknown rule or a
+//! missing reason is itself a finding (`bad-waiver`), and a directive
+//! that waives nothing is one too (`stale-waiver`) — waivers cannot
+//! rot in place. Every waived finding must additionally fit the
+//! committed budget in `tools/lint/waivers.ledger`; the budget can only
+//! shrink (see [`waivers`]).
+
+pub mod fingerprint;
+pub mod lexer;
+pub mod rules;
+pub mod waivers;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Rule identifiers a waiver directive may name.
+pub const RULES: &[&str] = &[
+    "panic-site",
+    "index-literal",
+    "narrow-cast",
+    "lock-unwrap",
+    "lock-across-blocking",
+    "nested-lock",
+    "engine-override",
+    "performgets-discipline",
+    "allow-escape",
+    "format-fingerprint",
+];
+
+/// Panic-freedom zones, as paths relative to the repository root.
+/// Entries ending in `/` are directory prefixes. These are the modules
+/// a corrupt peer or file reaches directly: every panic here is a
+/// stream teardown in production.
+pub const HARDENED_ZONES: &[&str] = &[
+    "rust/src/adios/wire.rs",
+    "rust/src/adios/bp.rs",
+    "rust/src/adios/sst/",
+    "rust/src/adios/multiplex.rs",
+    "rust/src/pipeline/",
+];
+
+/// Is `rel` (repo-relative, `/`-separated) inside a hardened zone?
+pub fn is_hardened(rel: &str) -> bool {
+    HARDENED_ZONES.iter().any(|z| {
+        if let Some(dir) = z.strip_suffix('/') {
+            rel.strip_prefix(dir)
+                .map(|rest| rest.starts_with('/'))
+                .unwrap_or(false)
+        } else {
+            rel == *z
+        }
+    })
+}
+
+/// One lint finding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Repo-relative path, `/`-separated.
+    pub file: String,
+    /// 1-based; 0 for file-level findings (fingerprint, ledger).
+    pub line: u32,
+    pub message: String,
+    /// The waiver reason when an inline directive covers this finding.
+    pub waived: Option<String>,
+}
+
+impl Finding {
+    pub fn new(
+        rule: &'static str,
+        file: &str,
+        line: u32,
+        message: String,
+    ) -> Finding {
+        Finding { rule, file: file.to_string(), line, message, waived: None }
+    }
+}
+
+/// A parsed `lint:allow` directive.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub rule: String,
+    pub reason: String,
+    /// The single source line this directive applies to: its own line,
+    /// or the next code line when the directive stands alone.
+    pub line: u32,
+    /// The line the directive itself is written on (for diagnostics).
+    pub at: u32,
+    pub used: bool,
+}
+
+/// One lexed source file plus the derived facts every rule consumes.
+pub struct SourceFile {
+    /// Repo-relative path, `/`-separated.
+    pub path: String,
+    pub hardened: bool,
+    pub tokens: Vec<lexer::Token>,
+    /// Per-token: inside a `#[cfg(test)]` or `#[cfg(debug_assertions)]`
+    /// item (rules skip these).
+    pub exempt: Vec<bool>,
+    pub allows: Vec<Allow>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, src: &str) -> SourceFile {
+        let lexed = lexer::lex(src);
+        let exempt = exempt_regions(&lexed.tokens);
+        let allows = parse_allows(&lexed);
+        SourceFile {
+            path: path.to_string(),
+            hardened: is_hardened(path),
+            tokens: lexed.tokens,
+            exempt,
+            allows,
+        }
+    }
+}
+
+/// Mark every token inside a `#[cfg(test)]` / `#[cfg(debug_assertions)]`
+/// item. The region runs from the attribute to the item's matching
+/// closing brace — or only to a `;` met first (braceless items such as
+/// `#[cfg(test)] use ...;`).
+fn exempt_regions(tokens: &[lexer::Token]) -> Vec<bool> {
+    fn is_cfg_exempt(tokens: &[lexer::Token], i: usize) -> bool {
+        i + 6 < tokens.len()
+            && tokens[i].is_punct('#')
+            && tokens[i + 1].is_punct('[')
+            && tokens[i + 2].is_ident("cfg")
+            && tokens[i + 3].is_punct('(')
+            && (tokens[i + 4].is_ident("test")
+                || tokens[i + 4].is_ident("debug_assertions"))
+            && tokens[i + 5].is_punct(')')
+            && tokens[i + 6].is_punct(']')
+    }
+
+    let mut exempt = vec![false; tokens.len()];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if !is_cfg_exempt(tokens, i) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 7;
+        // Find the item body's `{`, unless a `;` ends a braceless item
+        // first.
+        let mut end = None;
+        while j < tokens.len() {
+            if tokens[j].is_punct('{') {
+                break;
+            }
+            if tokens[j].is_punct(';') {
+                end = Some(j);
+                break;
+            }
+            j += 1;
+        }
+        let end = end.unwrap_or_else(|| {
+            let mut depth = 0usize;
+            let mut k = j;
+            while k < tokens.len() {
+                if tokens[k].is_punct('{') {
+                    depth += 1;
+                } else if tokens[k].is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            k
+        });
+        let end = end.min(tokens.len().saturating_sub(1));
+        for e in exempt.iter_mut().take(end + 1).skip(i) {
+            *e = true;
+        }
+        i = end + 1;
+    }
+    exempt
+}
+
+/// Extract `lint:allow(rule): reason` directives from the comment side
+/// channel. Malformed directives surface later as `bad-waiver` findings
+/// (rule name `"?"`, empty reason).
+fn parse_allows(lexed: &lexer::Lexed) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for c in &lexed.comments {
+        let Some(rest) = c.text.strip_prefix("lint:allow(") else {
+            continue;
+        };
+        let (rule, reason) = match rest.split_once(')') {
+            Some((rule, tail)) => {
+                let reason = tail
+                    .strip_prefix(':')
+                    .map(str::trim)
+                    .unwrap_or("")
+                    .to_string();
+                (rule.trim().to_string(), reason)
+            }
+            None => ("?".to_string(), String::new()),
+        };
+        let line = if c.own_line {
+            // Applies to the next line bearing code.
+            lexed
+                .tokens
+                .iter()
+                .map(|t| t.line)
+                .find(|&l| l > c.line)
+                .unwrap_or(c.line)
+        } else {
+            c.line
+        };
+        out.push(Allow { rule, reason, line, at: c.line, used: false });
+    }
+    out
+}
+
+/// The complete lint result.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn unwaived(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.waived.is_none())
+    }
+
+    pub fn unwaived_count(&self) -> usize {
+        self.unwaived().count()
+    }
+
+    pub fn waived_count(&self) -> usize {
+        self.findings.len() - self.unwaived_count()
+    }
+
+    /// Machine-readable report (consumed by the CI artifact).
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = BTreeMap::new();
+                o.insert("rule".into(), Json::Str(f.rule.into()));
+                o.insert("file".into(), Json::Str(f.file.clone()));
+                o.insert("line".into(), Json::Num(f.line as f64));
+                o.insert("message".into(), Json::Str(f.message.clone()));
+                o.insert(
+                    "waived".into(),
+                    match &f.waived {
+                        Some(r) => Json::Str(r.clone()),
+                        None => Json::Null,
+                    },
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert(
+            "files_scanned".into(),
+            Json::Num(self.files_scanned as f64),
+        );
+        top.insert("findings".into(), Json::Arr(findings));
+        let mut counts = BTreeMap::new();
+        counts.insert(
+            "total".into(),
+            Json::Num(self.findings.len() as f64),
+        );
+        counts.insert(
+            "waived".into(),
+            Json::Num(self.waived_count() as f64),
+        );
+        counts.insert(
+            "unwaived".into(),
+            Json::Num(self.unwaived_count() as f64),
+        );
+        top.insert("counts".into(), Json::Obj(counts));
+        Json::Obj(top)
+    }
+}
+
+/// Lint configuration. `root` is the repository root (the directory
+/// holding `Cargo.toml`); sources under `rust/src/` and `tools/` are
+/// scanned.
+pub struct LintOptions {
+    pub root: PathBuf,
+    /// Format-fingerprint manifest; `None` skips the rule.
+    pub manifest: Option<PathBuf>,
+    /// Waiver-budget ledger; `None` skips budget enforcement.
+    pub ledger: Option<PathBuf>,
+}
+
+impl LintOptions {
+    /// The standard layout rooted at `root`.
+    pub fn at(root: impl AsRef<Path>) -> LintOptions {
+        let root = root.as_ref().to_path_buf();
+        LintOptions {
+            manifest: Some(root.join("tools/lint/format.fingerprint.json")),
+            ledger: Some(root.join("tools/lint/waivers.ledger")),
+            root,
+        }
+    }
+}
+
+/// Lint one in-memory source file: run every token rule, then apply
+/// waiver directives. Stale/malformed directives become findings.
+/// This is the per-file core of [`run`], separated so tests can feed
+/// fixture snippets.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let mut sf = SourceFile::parse(path, src);
+    let mut findings = Vec::new();
+    rules::check_all(&sf, &mut findings);
+    apply_waivers(&mut sf, &mut findings);
+    findings
+}
+
+fn apply_waivers(sf: &mut SourceFile, findings: &mut Vec<Finding>) {
+    for f in findings.iter_mut() {
+        if f.waived.is_some() {
+            continue;
+        }
+        if let Some(a) = sf
+            .allows
+            .iter_mut()
+            .find(|a| a.line == f.line && a.rule == f.rule)
+        {
+            f.waived = Some(a.reason.clone());
+            a.used = true;
+        }
+    }
+    for a in &sf.allows {
+        if !RULES.contains(&a.rule.as_str()) || a.reason.is_empty() {
+            findings.push(Finding::new(
+                "bad-waiver",
+                &sf.path,
+                a.at,
+                format!(
+                    "malformed waiver: rule {:?}, reason {:?} — use \
+                     `lint:allow(<rule>): <reason>` with a known rule \
+                     and a non-empty reason",
+                    a.rule, a.reason
+                ),
+            ));
+        } else if !a.used {
+            findings.push(Finding::new(
+                "stale-waiver",
+                &sf.path,
+                a.at,
+                format!(
+                    "waiver for {:?} matches no finding — delete it \
+                     (and shrink the ledger budget)",
+                    a.rule
+                ),
+            ));
+        }
+    }
+}
+
+/// Recursively collect `.rs` files, sorted for deterministic output.
+fn collect_sources(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("scanning {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_sources(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Run the full lint over the repository at `opts.root`.
+pub fn run(opts: &LintOptions) -> Result<Report> {
+    let mut files = Vec::new();
+    for sub in ["rust/src", "tools"] {
+        let dir = opts.root.join(sub);
+        if dir.is_dir() {
+            collect_sources(&dir, &mut files)?;
+        }
+    }
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&opts.root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    if let Some(manifest) = &opts.manifest {
+        fingerprint::check(&opts.root, manifest, &mut findings)?;
+    }
+    if let Some(ledger) = &opts.ledger {
+        waivers::check(ledger, &mut findings)?;
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule)
+            .cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(Report { findings, files_scanned: files.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hardened_zone_matching() {
+        assert!(is_hardened("rust/src/adios/wire.rs"));
+        assert!(is_hardened("rust/src/adios/sst/writer.rs"));
+        assert!(is_hardened("rust/src/pipeline/fleet.rs"));
+        assert!(!is_hardened("rust/src/adios/engine.rs"));
+        assert!(!is_hardened("rust/src/adios/sstx.rs"));
+        assert!(!is_hardened("tools/pallas_lint.rs"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt() {
+        let sf = SourceFile::parse(
+            "rust/src/adios/wire.rs",
+            "fn a() { x.unwrap(); }\n\
+             #[cfg(test)]\nmod tests { fn b() { y.unwrap(); } }\n",
+        );
+        // Tokens of the test mod are exempt; fn a's are not.
+        let unwraps: Vec<bool> = sf
+            .tokens
+            .iter()
+            .zip(&sf.exempt)
+            .filter(|(t, _)| t.is_ident("unwrap"))
+            .map(|(_, &e)| e)
+            .collect();
+        assert_eq!(unwraps, vec![false, true]);
+    }
+
+    #[test]
+    fn braceless_cfg_item_ends_at_semicolon() {
+        let sf = SourceFile::parse(
+            "rust/src/adios/wire.rs",
+            "#[cfg(test)]\nuse foo::bar;\nfn a() { x.unwrap(); }\n",
+        );
+        let unwrap_exempt = sf
+            .tokens
+            .iter()
+            .zip(&sf.exempt)
+            .find(|(t, _)| t.is_ident("unwrap"))
+            .map(|(_, &e)| e);
+        assert_eq!(unwrap_exempt, Some(false));
+    }
+
+    #[test]
+    fn waiver_on_same_line_suppresses() {
+        let f = lint_source(
+            "rust/src/adios/wire.rs",
+            "fn a() { x.unwrap(); \
+             // lint:allow(panic-site): startup only\n}\n",
+        );
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "panic-site");
+        assert_eq!(f[0].waived.as_deref(), Some("startup only"));
+    }
+
+    #[test]
+    fn own_line_waiver_covers_next_line() {
+        let f = lint_source(
+            "rust/src/adios/wire.rs",
+            "fn a() {\n    // lint:allow(panic-site): startup only\n    \
+             x.unwrap();\n}\n",
+        );
+        assert_eq!(f.len(), 1);
+        assert!(f[0].waived.is_some());
+    }
+
+    #[test]
+    fn stale_waiver_is_a_finding() {
+        let f = lint_source(
+            "rust/src/adios/wire.rs",
+            "// lint:allow(panic-site): nothing here\nfn a() {}\n",
+        );
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "stale-waiver");
+        assert!(f[0].waived.is_none());
+    }
+
+    #[test]
+    fn malformed_waiver_is_a_finding() {
+        let f = lint_source(
+            "rust/src/adios/wire.rs",
+            "fn a() { x.unwrap(); // lint:allow(panic-site)\n}\n",
+        );
+        // The unwrap stays unwaived AND the directive is flagged.
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().any(|x| x.rule == "panic-site"
+            && x.waived.is_none()));
+        assert!(f.iter().any(|x| x.rule == "bad-waiver"));
+        let g = lint_source(
+            "rust/src/adios/wire.rs",
+            "fn a() { x.unwrap(); // lint:allow(no-such-rule): because\n}\n",
+        );
+        assert!(g.iter().any(|x| x.rule == "bad-waiver"));
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let r = Report {
+            findings: vec![Finding::new(
+                "panic-site",
+                "rust/src/adios/wire.rs",
+                7,
+                "x".into(),
+            )],
+            files_scanned: 3,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("files_scanned").and_then(|v| v.as_u64()),
+                   Some(3));
+        assert_eq!(
+            j.get("counts")
+                .and_then(|c| c.get("unwaived"))
+                .and_then(|v| v.as_u64()),
+            Some(1)
+        );
+    }
+}

@@ -1,0 +1,753 @@
+//! The lint rule implementations.
+//!
+//! Every rule is a pure function over a [`SourceFile`]: it pattern-
+//! matches the token stream (comments and literal contents are already
+//! gone — the lexer drops them) and pushes [`Finding`]s. Tokens inside
+//! `#[cfg(test)]` / `#[cfg(debug_assertions)]` regions are exempt.
+//!
+//! Hardened-zone rules (`panic-site`, `index-literal`, `narrow-cast`,
+//! `lock-across-blocking`, `nested-lock`) only run when
+//! `SourceFile::hardened` is set; the rest run crate-wide.
+
+use super::lexer::Token;
+use super::{Finding, SourceFile};
+
+/// Macros that abort the thread.
+const PANIC_MACROS: &[&str] =
+    &["panic", "todo", "unimplemented", "unreachable"];
+
+/// Cast targets narrower than the wire's native u64/i64 — silent
+/// truncation hazards in decode paths.
+const NARROW_INTS: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// Calls that can block indefinitely (channel / socket / thread).
+/// Holding a lock across one of these stalls every other lock user.
+const BLOCKING_CALLS: &[&str] = &[
+    "send",
+    "recv",
+    "recv_timeout",
+    "write_all",
+    "read_exact",
+    "read_to_end",
+    "flush",
+    "accept",
+    "accept_timeout",
+    "dial",
+    "connect",
+    "join",
+    "sleep",
+];
+
+/// Run every rule over `sf`.
+pub fn check_all(sf: &SourceFile, out: &mut Vec<Finding>) {
+    panic_freedom(sf, out);
+    lock_unwrap(sf, out);
+    guard_discipline(sf, out);
+    engine_override(sf, out);
+    performgets_discipline(sf, out);
+    allow_escape(sf, out);
+}
+
+fn tok<'a>(sf: &'a SourceFile, i: usize) -> Option<&'a Token> {
+    sf.tokens.get(i)
+}
+
+fn is_punct_at(sf: &SourceFile, i: usize, c: char) -> bool {
+    tok(sf, i).map(|t| t.is_punct(c)).unwrap_or(false)
+}
+
+fn is_ident_at(sf: &SourceFile, i: usize, s: &str) -> bool {
+    tok(sf, i).map(|t| t.is_ident(s)).unwrap_or(false)
+}
+
+/// `panic-site`, `index-literal`, `narrow-cast` — hardened zones only.
+fn panic_freedom(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !sf.hardened {
+        return;
+    }
+    let t = &sf.tokens;
+    for i in 0..t.len() {
+        if sf.exempt[i] {
+            continue;
+        }
+        // `.unwrap(` / `.expect(`
+        if let Some(name) = t[i].ident() {
+            if (name == "unwrap" || name == "expect")
+                && i > 0
+                && t[i - 1].is_punct('.')
+                && is_punct_at(sf, i + 1, '(')
+            {
+                out.push(Finding::new(
+                    "panic-site",
+                    &sf.path,
+                    t[i].line,
+                    format!(
+                        "`.{}()` in a hardened zone — return a typed \
+                         error (BpError / PoisonedLock / anyhow) instead",
+                        name
+                    ),
+                ));
+            }
+            // `panic!(` / `todo!(` / `unimplemented!(` / `unreachable!(`
+            if PANIC_MACROS.contains(&name)
+                && is_punct_at(sf, i + 1, '!')
+                && (is_punct_at(sf, i + 2, '(')
+                    || is_punct_at(sf, i + 2, '[')
+                    || is_punct_at(sf, i + 2, '{'))
+            {
+                out.push(Finding::new(
+                    "panic-site",
+                    &sf.path,
+                    t[i].line,
+                    format!(
+                        "`{}!` in a hardened zone — a corrupt peer or \
+                         file must surface an error, not tear the \
+                         process down",
+                        name
+                    ),
+                ));
+            }
+            // `as u8` etc.
+            if name == "as" {
+                if let Some(ty) =
+                    tok(sf, i + 1).and_then(|n| n.ident())
+                {
+                    if NARROW_INTS.contains(&ty) {
+                        out.push(Finding::new(
+                            "narrow-cast",
+                            &sf.path,
+                            t[i].line,
+                            format!(
+                                "narrowing `as {}` in a hardened zone \
+                                 — use `try_from` and surface the \
+                                 overflow",
+                                ty
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        // `expr[0]` — integer-literal indexing of a value (previous
+        // token is an identifier, `)`, `]`, or `?`). Array type/len
+        // syntax (`[0u8; 8]`) and attributes (`#[...]`) don't match.
+        // Limitation: variable-index expressions (`buf[i]`) are out of
+        // scope — they are usually range-checked by construction and
+        // flagging them all would drown the signal.
+        if t[i].is_punct('[')
+            && i > 0
+            && (t[i - 1].ident().is_some()
+                || t[i - 1].is_punct(')')
+                || t[i - 1].is_punct(']')
+                || t[i - 1].is_punct('?'))
+        {
+            let lit = tok(sf, i + 1)
+                .and_then(|n| n.num())
+                .map(|n| !n.contains('.'))
+                .unwrap_or(false);
+            if lit && is_punct_at(sf, i + 2, ']') {
+                out.push(Finding::new(
+                    "index-literal",
+                    &sf.path,
+                    t[i].line,
+                    "literal slice index in a hardened zone — panics \
+                     on short input; use `get(..)`/`first()` and \
+                     surface the error"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+/// `lock-unwrap` — crate-wide: `.lock().unwrap()` / `.lock().expect(`
+/// turns a poisoned mutex into a second panic.
+fn lock_unwrap(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let t = &sf.tokens;
+    for i in 0..t.len() {
+        if sf.exempt[i] {
+            continue;
+        }
+        if t[i].is_punct('.')
+            && is_ident_at(sf, i + 1, "lock")
+            && is_punct_at(sf, i + 2, '(')
+            && is_punct_at(sf, i + 3, ')')
+            && is_punct_at(sf, i + 4, '.')
+            && (is_ident_at(sf, i + 5, "unwrap")
+                || is_ident_at(sf, i + 5, "expect"))
+            && is_punct_at(sf, i + 6, '(')
+        {
+            out.push(Finding::new(
+                "lock-unwrap",
+                &sf.path,
+                t[i + 5].line,
+                "`.lock().unwrap()` swallows poison into a panic — \
+                 use util::sync::lock_or_poisoned"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// A mutex guard bound by `let` and still in scope.
+struct LiveGuard {
+    name: String,
+    /// Normalized mutex expression (`self.shared`,
+    /// `INPROC_REGISTRY`, ...) for nested-acquisition comparison.
+    expr: String,
+    /// Brace depth at creation: a `}` below this kills the guard.
+    depth: usize,
+}
+
+/// Normalize a run of expression tokens to `ident.ident...` (drops
+/// `&`, `mut`, `*`, `::`).
+fn expr_string(toks: &[&Token]) -> String {
+    toks.iter()
+        .filter_map(|t| t.ident())
+        .filter(|s| *s != "mut")
+        .collect::<Vec<_>>()
+        .join(".")
+}
+
+/// Walk back from the `.` of `.lock(` over the receiver chain
+/// (`self.shared.lock()` → start index of `self`, "self.shared").
+fn lock_receiver(t: &[Token], dot: usize) -> (usize, String) {
+    let mut k = dot;
+    loop {
+        if k == 0 {
+            break;
+        }
+        if t[k - 1].ident().is_some() {
+            k -= 1;
+            if k > 0
+                && (t[k - 1].is_punct('.') || t[k - 1].is_punct(':'))
+            {
+                while k > 0
+                    && (t[k - 1].is_punct('.')
+                        || t[k - 1].is_punct(':'))
+                {
+                    k -= 1;
+                }
+                continue;
+            }
+        }
+        break;
+    }
+    let parts: Vec<&Token> = t[k..dot].iter().collect();
+    (k, expr_string(&parts))
+}
+
+/// First argument of `lock_or_poisoned(...)` as a normalized
+/// expression; `open` is the index of the `(`.
+fn first_arg_expr(t: &[Token], open: usize) -> String {
+    let mut depth = 0usize;
+    let mut arg: Vec<&Token> = Vec::new();
+    for token in t.iter().skip(open) {
+        if token.is_punct('(') {
+            depth += 1;
+            if depth == 1 {
+                continue;
+            }
+        } else if token.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if token.is_punct(',') && depth == 1 {
+            break;
+        }
+        if depth >= 1 {
+            arg.push(token);
+        }
+    }
+    expr_string(&arg)
+}
+
+/// Is the statement ending at `rhs_start` of the form
+/// `let [mut] NAME = <rhs>`? Returns the bound name.
+fn binding_name(t: &[Token], rhs_start: usize) -> Option<String> {
+    if rhs_start < 2 || !t[rhs_start - 1].is_punct('=') {
+        return None;
+    }
+    let mut j = rhs_start - 2;
+    let name = t[j].ident()?.to_string();
+    if name == "mut" {
+        return None;
+    }
+    if j >= 1 && t[j - 1].is_ident("mut") {
+        j -= 1;
+    }
+    if j >= 1 && t[j - 1].is_ident("let") {
+        return Some(name);
+    }
+    None
+}
+
+/// `lock-across-blocking` + `nested-lock` — hardened zones only.
+///
+/// Tracks `let`-bound guards from `lock_or_poisoned(...)` or
+/// `.lock(...)`, scoped by braces and killed by `drop(name)`. While a
+/// guard is live, a blocking call is a finding unless its receiver is
+/// the *sole* live guard (the lock-the-sender serializer idiom), and
+/// acquiring the same mutex expression again is a finding. Pattern-
+/// and match-bound guards are not tracked (conservative: fewer false
+/// positives).
+fn guard_discipline(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !sf.hardened {
+        return;
+    }
+    let t = &sf.tokens;
+    let mut guards: Vec<LiveGuard> = Vec::new();
+    let mut depth = 0usize;
+    for i in 0..t.len() {
+        // Brace depth must track exempt regions too, or scopes drift.
+        if t[i].is_punct('{') {
+            depth += 1;
+            continue;
+        }
+        if t[i].is_punct('}') {
+            depth = depth.saturating_sub(1);
+            guards.retain(|g| g.depth <= depth);
+            continue;
+        }
+        if sf.exempt[i] {
+            continue;
+        }
+        // `drop(name)` releases early.
+        if t[i].is_ident("drop")
+            && is_punct_at(sf, i + 1, '(')
+            && is_punct_at(sf, i + 3, ')')
+        {
+            if let Some(name) = tok(sf, i + 2).and_then(|t| t.ident())
+            {
+                guards.retain(|g| g.name != name);
+            }
+        }
+        // Acquisition via helper: `lock_or_poisoned(&m, ...)`.
+        let acq = if t[i].is_ident("lock_or_poisoned")
+            && is_punct_at(sf, i + 1, '(')
+        {
+            Some((i, first_arg_expr(t, i + 1)))
+        } else if t[i].is_punct('.')
+            && is_ident_at(sf, i + 1, "lock")
+            && is_punct_at(sf, i + 2, '(')
+        {
+            // Acquisition via `.lock(`.
+            let (start, expr) = lock_receiver(t, i);
+            Some((start, expr))
+        } else {
+            None
+        };
+        if let Some((start, expr)) = acq {
+            if !expr.is_empty() {
+                if let Some(g) =
+                    guards.iter().find(|g| g.expr == expr)
+                {
+                    out.push(Finding::new(
+                        "nested-lock",
+                        &sf.path,
+                        t[i].line,
+                        format!(
+                            "`{}` is already locked here (guard \
+                             `{}`) — re-acquiring self-deadlocks",
+                            expr, g.name
+                        ),
+                    ));
+                }
+            }
+            if let Some(name) = binding_name(t, start) {
+                guards.push(LiveGuard { name, expr, depth });
+            }
+            continue;
+        }
+        // Blocking call with a guard live: `.send(` / `::connect(` ...
+        if guards.is_empty() {
+            continue;
+        }
+        if let Some(name) = t[i].ident() {
+            if BLOCKING_CALLS.contains(&name)
+                && is_punct_at(sf, i + 1, '(')
+                && i > 0
+                && (t[i - 1].is_punct('.') || t[i - 1].is_punct(':'))
+            {
+                // Receiver-is-the-sole-guard: `tx.send(..)` where `tx`
+                // guards only the sender is the sanctioned serializer
+                // idiom — but only while no OTHER lock is held, or the
+                // send still stalls every user of that other lock.
+                let recv_is_sole_guard = i >= 2
+                    && t[i - 1].is_punct('.')
+                    && t[i - 2]
+                        .ident()
+                        .map(|r| guards.iter().all(|g| g.name == r))
+                        .unwrap_or(false);
+                if !recv_is_sole_guard {
+                    let held: Vec<&str> = guards
+                        .iter()
+                        .map(|g| g.name.as_str())
+                        .collect();
+                    out.push(Finding::new(
+                        "lock-across-blocking",
+                        &sf.path,
+                        t[i].line,
+                        format!(
+                            "blocking `{}` while holding lock \
+                             guard(s) {} — release first or waive \
+                             with the reason the lock must span it",
+                            name,
+                            held.join(", ")
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Find the body `{..}` of an item starting at token `from`: the first
+/// `{` unless a `;` ends a braceless declaration first. Returns the
+/// token range inside the braces.
+pub(super) fn body_range(
+    t: &[Token],
+    from: usize,
+) -> Option<(usize, usize)> {
+    let mut j = from;
+    while j < t.len() {
+        if t[j].is_punct(';') {
+            return None;
+        }
+        if t[j].is_punct('{') {
+            break;
+        }
+        j += 1;
+    }
+    if j >= t.len() {
+        return None;
+    }
+    let start = j + 1;
+    let mut depth = 0usize;
+    while j < t.len() {
+        if t[j].is_punct('{') {
+            depth += 1;
+        } else if t[j].is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return Some((start, j));
+            }
+        }
+        j += 1;
+    }
+    Some((start, t.len()))
+}
+
+/// `engine-override` — crate-wide: `impl Engine for X` must not
+/// redefine the eager `put`/`get` trait defaults; backends express
+/// semantics through `put_deferred`/`get_deferred` + `perform_*`, and
+/// the defaults guarantee eager calls stay equivalent to
+/// deferred-then-perform everywhere.
+fn engine_override(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let t = &sf.tokens;
+    let mut i = 0usize;
+    while i < t.len() {
+        if !t[i].is_ident("impl") || sf.exempt[i] {
+            i += 1;
+            continue;
+        }
+        // Header runs to the first `{`; the implemented trait is the
+        // ident right before `for`.
+        let mut j = i + 1;
+        let mut trait_is_engine = false;
+        while j < t.len() && !t[j].is_punct('{') {
+            if t[j].is_ident("for")
+                && j > 0
+                && t[j - 1].is_ident("Engine")
+            {
+                trait_is_engine = true;
+            }
+            if t[j].is_punct(';') {
+                break;
+            }
+            j += 1;
+        }
+        if !trait_is_engine {
+            i = j.max(i + 1);
+            continue;
+        }
+        let Some((start, end)) = body_range(t, j) else {
+            i = j.max(i + 1);
+            continue;
+        };
+        for k in start..end {
+            if t[k].is_ident("fn")
+                && k + 2 < t.len()
+                && (t[k + 1].is_ident("put") || t[k + 1].is_ident("get"))
+                && t[k + 2].is_punct('(')
+            {
+                out.push(Finding::new(
+                    "engine-override",
+                    &sf.path,
+                    t[k + 1].line,
+                    format!(
+                        "`impl Engine` overrides the eager `{}` trait \
+                         default — express backend behavior through \
+                         the deferred queue instead",
+                        t[k + 1].ident().unwrap_or("?"),
+                    ),
+                ));
+            }
+        }
+        i = end + 1;
+    }
+}
+
+/// `performgets-discipline` — crate-wide: a `perform_gets` body that
+/// drains the deferred queue must reach `fail_batch`/`poison` so
+/// outstanding `GetHandle`s never dangle on error. Delegating wrappers
+/// and write-mode `bail!` stubs (no `drain_pending`) pass.
+fn performgets_discipline(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let t = &sf.tokens;
+    for i in 0..t.len() {
+        if sf.exempt[i]
+            || !t[i].is_ident("fn")
+            || !is_ident_at(sf, i + 1, "perform_gets")
+        {
+            continue;
+        }
+        let Some((start, end)) = body_range(t, i + 2) else {
+            continue;
+        };
+        let body = &t[start..end];
+        let has = |s: &str| body.iter().any(|t| t.is_ident(s));
+        if has("drain_pending") && !has("fail_batch") && !has("poison")
+        {
+            out.push(Finding::new(
+                "performgets-discipline",
+                &sf.path,
+                t[i + 1].line,
+                "`perform_gets` drains the deferred queue but no \
+                 error arm reaches `fail_batch`/`poison` — failed \
+                 batches must poison their handles"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// `allow-escape` — crate-wide: `#[allow(...)]` / `#![allow(...)]`
+/// outside test code silences the compiler with no recorded reason;
+/// fix the code or use a budgeted `lint:allow` waiver.
+fn allow_escape(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let t = &sf.tokens;
+    for i in 0..t.len() {
+        if sf.exempt[i] || !t[i].is_punct('#') {
+            continue;
+        }
+        let mut j = i + 1;
+        if is_punct_at(sf, j, '!') {
+            j += 1;
+        }
+        if is_punct_at(sf, j, '[')
+            && is_ident_at(sf, j + 1, "allow")
+            && is_punct_at(sf, j + 2, '(')
+        {
+            out.push(Finding::new(
+                "allow-escape",
+                &sf.path,
+                t[j + 1].line,
+                "`#[allow(..)]` outside test code — delete the dead \
+                 code or justify it where it stands"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analysis::lint::lint_source;
+
+    const HARD: &str = "rust/src/adios/wire.rs";
+    const SOFT: &str = "rust/src/util/stats.rs";
+
+    fn rules(path: &str, src: &str) -> Vec<&'static str> {
+        lint_source(path, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unwrap_expect_flagged_in_hardened_only() {
+        let src = "fn f(x: Option<u8>) { x.unwrap(); x.expect(\"y\"); }";
+        assert_eq!(rules(HARD, src), ["panic-site", "panic-site"]);
+        assert_eq!(rules(SOFT, src), Vec::<&str>::new());
+        // unwrap_or / unwrap_or_else / fn defs named unwrap don't fire.
+        let ok = "fn f(x: Option<u8>) { x.unwrap_or(0); \
+                  x.unwrap_or_else(|| 0); }\nfn unwrap() {}";
+        assert_eq!(rules(HARD, ok), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn panic_macros_flagged() {
+        let src = "fn f() { panic!(\"x\"); todo!(); unreachable!(); \
+                   unimplemented!() }";
+        assert_eq!(rules(HARD, src).len(), 4);
+        // `std::panic::catch_unwind` is not a panic site.
+        assert_eq!(
+            rules(HARD, "fn f() { std::panic::catch_unwind(|| 0); }"),
+            Vec::<&str>::new()
+        );
+        // Test code is exempt.
+        let test_src = "#[cfg(test)]\nmod t { fn f() { panic!(\"x\") } }";
+        assert_eq!(rules(HARD, test_src), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn literal_index_flagged_variable_index_not() {
+        assert_eq!(
+            rules(HARD, "fn f(b: &[u8]) -> u8 { b[0] }"),
+            ["index-literal"]
+        );
+        assert_eq!(
+            rules(HARD, "fn f(&mut self) -> u8 { self.take(1)?[0] }"),
+            ["index-literal"]
+        );
+        // Variable index, array literals, attributes: out of scope.
+        let ok = "#[derive(Debug)]\nfn f(b: &[u8], i: usize) -> u8 { \
+                  let a = [0u8; 8]; b[i] + a[i] }";
+        assert_eq!(rules(HARD, ok), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn narrowing_casts_flagged() {
+        assert_eq!(
+            rules(HARD, "fn f(x: u64) -> u32 { x as u32 }"),
+            ["narrow-cast"]
+        );
+        // Widening / same-width is fine.
+        let ok = "fn f(x: u32, l: usize) { let a = x as u64; \
+                  let b = l as i64; let c = x as usize; }";
+        assert_eq!(rules(HARD, ok), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn lock_unwrap_is_crate_wide() {
+        let src = "fn f(&self) { self.m.lock().unwrap().push(1); }";
+        assert_eq!(rules(SOFT, src), ["lock-unwrap"]);
+        // In a hardened file the panic-site rule fires too.
+        let mut r = rules(HARD, src);
+        r.sort();
+        assert_eq!(r, ["lock-unwrap", "panic-site"]);
+        assert_eq!(
+            rules(SOFT, "fn f(&self) { self.m.lock().expect(\"m\"); }"),
+            ["lock-unwrap"]
+        );
+    }
+
+    #[test]
+    fn blocking_call_under_guard_flagged() {
+        let src = "fn f(&self) -> Result<()> {\n\
+                   let mut sh = lock_or_poisoned(&self.shared, \"s\")?;\n\
+                   sh.steps += 1;\n\
+                   self.tx.send(1)?;\n\
+                   Ok(())\n}";
+        assert_eq!(rules(HARD, src), ["lock-across-blocking"]);
+        // Dropping the guard first is clean.
+        let ok = "fn f(&self) -> Result<()> {\n\
+                  let mut sh = lock_or_poisoned(&self.shared, \"s\")?;\n\
+                  sh.steps += 1;\n\
+                  drop(sh);\n\
+                  self.tx.send(1)?;\n\
+                  Ok(())\n}";
+        assert_eq!(rules(HARD, ok), Vec::<&str>::new());
+        // Scope exit releases too.
+        let scoped = "fn f(&self) -> Result<()> {\n\
+                      { let sh = lock_or_poisoned(&self.s, \"s\")?; }\n\
+                      self.tx.send(1)?;\nOk(())\n}";
+        assert_eq!(rules(HARD, scoped), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn serializer_idiom_is_exempt() {
+        // The guard IS the sender: lock guards only the send.
+        let src = "fn f(&self) -> Result<()> {\n\
+                   let mut tx = lock_or_poisoned(&self.tx, \"tx\")?;\n\
+                   tx.send(1)?;\nOk(())\n}";
+        assert_eq!(rules(HARD, src), Vec::<&str>::new());
+        // ... but not while a SECOND lock is held: the send then
+        // stalls every user of the other lock too.
+        let two = "fn f(&self) -> Result<()> {\n\
+                   let mut sh = lock_or_poisoned(&self.shared, \"s\")?;\n\
+                   let mut tx = lock_or_poisoned(&self.tx, \"tx\")?;\n\
+                   tx.send(1)?;\nOk(())\n}";
+        assert_eq!(rules(HARD, two), ["lock-across-blocking"]);
+    }
+
+    #[test]
+    fn plain_lock_guards_are_tracked_too() {
+        let src = "fn f(&self) -> Result<()> {\n\
+                   let g = self.shared.lock().map_err(|_| x)?;\n\
+                   self.tx.send(1)?;\nOk(())\n}";
+        assert_eq!(rules(HARD, src), ["lock-across-blocking"]);
+    }
+
+    #[test]
+    fn nested_same_mutex_flagged() {
+        let src = "fn f(&self) -> Result<()> {\n\
+                   let a = lock_or_poisoned(&self.shared, \"a\")?;\n\
+                   let b = lock_or_poisoned(&self.shared, \"b\")?;\n\
+                   Ok(())\n}";
+        assert_eq!(rules(HARD, src), ["nested-lock"]);
+        // Different mutexes are fine.
+        let ok = "fn f(&self) -> Result<()> {\n\
+                  let a = lock_or_poisoned(&self.shared, \"a\")?;\n\
+                  let b = lock_or_poisoned(&self.other, \"b\")?;\n\
+                  Ok(())\n}";
+        assert_eq!(rules(HARD, ok), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn engine_override_flagged() {
+        let src = "impl Engine for Foo {\n\
+                   fn put(&mut self, h: &VarHandle) -> Result<()> { \
+                   Ok(()) }\n}";
+        assert_eq!(rules(SOFT, src), ["engine-override"]);
+        // Deferred methods, other traits, and the trait's own defaults
+        // are fine.
+        let ok = "impl Engine for Foo { fn put_deferred(&mut self) {} }\n\
+                  impl Display for Engine2 { fn put(&self) {} }\n\
+                  pub trait Engine: Send { fn put(&mut self) {} }";
+        assert_eq!(rules(SOFT, ok), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn performgets_must_poison_when_draining() {
+        let bad = "impl Engine for F {\nfn perform_gets(&mut self) -> \
+                   Result<()> { let p = self.gets.drain_pending(); \
+                   Ok(()) }\n}";
+        assert_eq!(rules(SOFT, bad), ["performgets-discipline"]);
+        let good = "impl Engine for F {\nfn perform_gets(&mut self) -> \
+                    Result<()> { let p = self.gets.drain_pending(); \
+                    if bad { self.gets.fail_batch(p, e); }\nOk(()) }\n}";
+        assert_eq!(rules(SOFT, good), Vec::<&str>::new());
+        // Delegating wrappers and bail!-stubs have no drain.
+        let stub = "fn perform_gets(&mut self) -> Result<()> { \
+                    self.inner.perform_gets() }";
+        assert_eq!(rules(SOFT, stub), Vec::<&str>::new());
+        // Trait declarations (no body) are skipped.
+        let decl = "pub trait Engine: Send { fn perform_gets(&mut \
+                    self) -> Result<()>; }";
+        assert_eq!(rules(SOFT, decl), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn allow_attributes_flagged_outside_tests() {
+        assert_eq!(
+            rules(SOFT, "#[allow(dead_code)]\nfn f() {}"),
+            ["allow-escape"]
+        );
+        assert_eq!(
+            rules(SOFT, "#![allow(unused_imports)]\nuse x;"),
+            ["allow-escape"]
+        );
+        let ok = "#[cfg(test)]\nmod t {\n#![allow(dead_code)]\n}\n\
+                  #[allow_other(x)]\nfn f() {}";
+        assert_eq!(rules(SOFT, ok), Vec::<&str>::new());
+    }
+}

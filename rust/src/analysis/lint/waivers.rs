@@ -1,0 +1,230 @@
+//! The waiver-budget ledger (`tools/lint/waivers.ledger`).
+//!
+//! Inline `lint:allow` directives keep a waiver next to the code it
+//! excuses; the ledger keeps the *total* under version control so it
+//! can only move by an explicit, reviewable edit. Each line is
+//!
+//! ```text
+//! <rule> <budget>        # comment
+//! ```
+//!
+//! and the check is an equality, not an upper bound: more waived
+//! findings than budget fails (no silent growth), fewer also fails
+//! (the ledger must shrink in the same commit that removes a waiver —
+//! that is the shrink-only ratchet). A waived finding whose rule has
+//! no ledger line fails too.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Finding;
+
+/// Parse the ledger: rule → (budget, line number).
+fn parse(
+    path: &Path,
+    text: &str,
+) -> Result<BTreeMap<String, (usize, u32)>> {
+    let mut out = BTreeMap::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(rule), Some(budget), None) =
+            (parts.next(), parts.next(), parts.next())
+        else {
+            bail!(
+                "{}:{}: expected `<rule> <budget>`, got {:?}",
+                path.display(),
+                idx + 1,
+                raw
+            );
+        };
+        if !super::RULES.contains(&rule) {
+            bail!(
+                "{}:{}: unknown rule {:?}",
+                path.display(),
+                idx + 1,
+                rule
+            );
+        }
+        let budget: usize = budget.parse().with_context(|| {
+            format!(
+                "{}:{}: budget {:?} is not a number",
+                path.display(),
+                idx + 1,
+                budget
+            )
+        })?;
+        if out.insert(rule.to_string(), (budget, idx as u32 + 1))
+            .is_some()
+        {
+            bail!(
+                "{}:{}: duplicate ledger entry for {:?}",
+                path.display(),
+                idx + 1,
+                rule
+            );
+        }
+    }
+    Ok(out)
+}
+
+/// Enforce the ledger against the waived findings already collected in
+/// `out`. A missing ledger file is an empty ledger (every waiver is
+/// then over budget); a malformed one is a hard error.
+pub fn check(ledger: &Path, out: &mut Vec<Finding>) -> Result<()> {
+    let budgets = match std::fs::read_to_string(ledger) {
+        Ok(text) => parse(ledger, &text)?,
+        Err(_) => BTreeMap::new(),
+    };
+    let mut waived: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for f in out.iter().filter(|f| f.waived.is_some()) {
+        *waived.entry(f.rule).or_insert(0) += 1;
+    }
+    let label = ledger.display().to_string();
+    for (&rule, &n) in &waived {
+        match budgets.get(rule) {
+            None => out.push(Finding::new(
+                "waiver-ledger",
+                &label,
+                0,
+                format!(
+                    "{n} waived `{rule}` finding(s) but the ledger has \
+                     no `{rule}` line — waivers must be budgeted"
+                ),
+            )),
+            Some(&(budget, line)) if n > budget => {
+                out.push(Finding::new(
+                    "waiver-ledger",
+                    &label,
+                    line,
+                    format!(
+                        "`{rule}` budget is {budget} but {n} findings \
+                         are waived — fix the code instead of adding \
+                         waivers"
+                    ),
+                ))
+            }
+            Some(&(budget, line)) if n < budget => {
+                out.push(Finding::new(
+                    "waiver-ledger",
+                    &label,
+                    line,
+                    format!(
+                        "`{rule}` budget is {budget} but only {n} \
+                         finding(s) are waived — shrink the budget \
+                         (the ledger is a ratchet)"
+                    ),
+                ))
+            }
+            Some(_) => {}
+        }
+    }
+    for (rule, &(budget, line)) in &budgets {
+        if budget > 0 && !waived.contains_key(rule.as_str()) {
+            out.push(Finding::new(
+                "waiver-ledger",
+                &label,
+                line,
+                format!(
+                    "`{rule}` budget is {budget} but nothing is \
+                     waived — delete the ledger line"
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn waived(rule: &'static str, n: usize) -> Vec<Finding> {
+        (0..n)
+            .map(|i| {
+                let mut f = Finding::new(
+                    rule,
+                    "rust/src/adios/wire.rs",
+                    i as u32 + 1,
+                    "x".into(),
+                );
+                f.waived = Some("reason".into());
+                f
+            })
+            .collect()
+    }
+
+    fn ledger(tag: &str, body: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "pallas-lint-ledger-{}-{}",
+            tag,
+            std::process::id()
+        ));
+        std::fs::write(&p, body).unwrap();
+        p
+    }
+
+    #[test]
+    fn exact_budget_passes() {
+        let p = ledger("ok", "# hardened-zone waivers\npanic-site 2\n");
+        let mut f = waived("panic-site", 2);
+        check(&p, &mut f).unwrap();
+        assert_eq!(f.len(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn over_budget_fails() {
+        let p = ledger("over", "panic-site 1\n");
+        let mut f = waived("panic-site", 2);
+        check(&p, &mut f).unwrap();
+        assert!(f.iter().any(|x| x.rule == "waiver-ledger"
+            && x.message.contains("budget is 1")));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn slack_budget_fails_the_ratchet() {
+        let p = ledger("slack", "panic-site 3\n");
+        let mut f = waived("panic-site", 1);
+        check(&p, &mut f).unwrap();
+        assert!(f.iter().any(|x| x.rule == "waiver-ledger"
+            && x.message.contains("shrink")));
+        // Budget with zero waived findings left behind fails too.
+        let p2 = ledger("dead", "nested-lock 1\n");
+        let mut f2 = Vec::new();
+        check(&p2, &mut f2).unwrap();
+        assert!(f2.iter().any(|x| x.rule == "waiver-ledger"
+            && x.message.contains("delete the ledger line")));
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn unledgered_waiver_fails() {
+        let p = ledger("none", "");
+        let mut f = waived("lock-across-blocking", 1);
+        check(&p, &mut f).unwrap();
+        assert!(f.iter().any(|x| x.rule == "waiver-ledger"
+            && x.message.contains("no `lock-across-blocking` line")));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn malformed_ledger_is_a_hard_error() {
+        for bad in
+            ["panic-site", "panic-site one", "no-such-rule 1",
+             "panic-site 1 extra", "panic-site 1\npanic-site 2"]
+        {
+            let p = ledger("bad", bad);
+            let err = check(&p, &mut Vec::new());
+            assert!(err.is_err(), "{bad:?}");
+            std::fs::remove_file(&p).ok();
+        }
+    }
+}

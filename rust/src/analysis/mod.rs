@@ -6,8 +6,12 @@
 //!   pure-rust oracle fallback.
 //! * [`binning`] — the "filter and bin" stage of Fig. 2: a weighted
 //!   kinetic-energy spectrum via the `binning` artifact.
+//! * [`lint`] — `pallas-lint`, the static-analysis gate over the
+//!   crate's own sources (panic-freedom zones, lock discipline,
+//!   engine-contract conformance, format-fingerprint hygiene).
 
 pub mod binning;
+pub mod lint;
 pub mod saxs;
 
 pub use binning::EnergySpectrum;

@@ -110,6 +110,16 @@
 //!   parsing, statistics, deterministic RNG, a TOML-subset config
 //!   format, a mini property-testing framework, and a bench harness.
 //!
+//! The crate polices itself with [`analysis::lint`] — a
+//! dependency-free static-analysis gate (`pallas-lint` in `tools/`,
+//! run by CI and by `tests/lint_clean.rs`) enforcing panic-freedom in
+//! the hardened wire/BP/SST/multiplex/pipeline modules, lock
+//! discipline crate-wide (see [`util::sync::lock_or_poisoned`]),
+//! engine-contract conformance, and a committed fingerprint of the
+//! serialization layouts. Waivers are in-source
+//! `// lint:allow(<rule>): <reason>` comments budgeted by the
+//! shrink-only ledger `tools/lint/waivers.ledger`.
+//!
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 

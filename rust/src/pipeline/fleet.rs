@@ -76,6 +76,7 @@ use crate::distribution::{
     verify_complete, Assignment, ChunkTable, ReaderLayout, Strategy,
 };
 use crate::openpmd::chunk::Chunk;
+use crate::util::sync::lock_or_poisoned;
 
 use super::metrics::FleetReport;
 use super::pipe::{
@@ -178,10 +179,7 @@ impl SharedPlanner {
     ) -> Result<Vec<Chunk>> {
         use std::collections::btree_map::Entry;
         let key = (step, var.name.clone());
-        let mut plans = self
-            .plans
-            .lock()
-            .map_err(|_| anyhow!("fleet planner poisoned by a panic"))?;
+        let mut plans = lock_or_poisoned(&self.plans, "fleet planner")?;
         let entry = match plans.entry(key.clone()) {
             Entry::Occupied(entry) => entry.into_mut(),
             Entry::Vacant(slot) => {
@@ -337,52 +335,66 @@ pub fn run_fleet(
     let wall = Instant::now();
     let results: Vec<Result<PipeReport>> =
         std::thread::scope(|scope| {
-            let handles: Vec<_> = inputs
+            // Spawn failures surface as that rank's worker error
+            // instead of panicking; already-spawned workers are still
+            // joined below, so no rank's result is dropped.
+            let mut handles = Vec::with_capacity(readers);
+            let mut spawn_err: Option<anyhow::Error> = None;
+            for (rank, ((mut input, mut output), wopts)) in inputs
                 .into_iter()
                 .zip(outputs)
                 .zip(worker_opts.iter())
                 .enumerate()
-                .map(|(rank, ((mut input, mut output), wopts))| {
-                    let planner = planner.clone();
-                    std::thread::Builder::new()
-                        .name(format!("fleet-r{rank}"))
-                        .spawn_scoped(scope, move || {
-                            let mut plan =
-                                FleetPlan { shared: planner, rank };
-                            if wopts.depth > 0 {
-                                // Staged read-ahead per worker: the
-                                // worker's budget moves to the fetch
-                                // side so the fleet still stops on a
-                                // common input prefix.
-                                run_staged_with_plan(
-                                    input.as_mut(),
-                                    output.as_mut(),
-                                    wopts,
-                                    &mut plan,
-                                    StagedBudget::Fetch(
-                                        wopts.max_steps,
-                                    ),
-                                )
-                            } else {
-                                run_worker(
-                                    input.as_mut(),
-                                    output.as_mut(),
-                                    wopts,
-                                    &mut plan,
-                                )
-                            }
-                        })
-                        .expect("spawning a fleet worker thread")
-                })
-                .collect();
-            handles
+            {
+                let planner = planner.clone();
+                let spawned = std::thread::Builder::new()
+                    .name(format!("fleet-r{rank}"))
+                    .spawn_scoped(scope, move || {
+                        let mut plan =
+                            FleetPlan { shared: planner, rank };
+                        if wopts.depth > 0 {
+                            // Staged read-ahead per worker: the
+                            // worker's budget moves to the fetch
+                            // side so the fleet still stops on a
+                            // common input prefix.
+                            run_staged_with_plan(
+                                input.as_mut(),
+                                output.as_mut(),
+                                wopts,
+                                &mut plan,
+                                StagedBudget::Fetch(wopts.max_steps),
+                            )
+                        } else {
+                            run_worker(
+                                input.as_mut(),
+                                output.as_mut(),
+                                wopts,
+                                &mut plan,
+                            )
+                        }
+                    });
+                match spawned {
+                    Ok(h) => handles.push(h),
+                    Err(e) => {
+                        spawn_err = Some(anyhow!(
+                            "spawning fleet worker {rank}: {e}"
+                        ));
+                        break;
+                    }
+                }
+            }
+            let mut results: Vec<Result<PipeReport>> = handles
                 .into_iter()
                 .map(|h| {
                     h.join().unwrap_or_else(|_| {
                         Err(anyhow!("fleet worker panicked"))
                     })
                 })
-                .collect()
+                .collect();
+            if let Some(e) = spawn_err {
+                results.push(Err(e));
+            }
+            results
         });
 
     let mut report = FleetReport::new(readers);

@@ -89,6 +89,7 @@ impl PipeOptions {
             instances: 1,
             strategy: Arc::new(crate::distribution::RoundRobin),
             layout: ReaderLayout::local(1)
+                // lint:allow(panic-site): local(1) is statically non-empty
                 .expect("a one-reader layout is never empty"),
             max_steps: None,
             idle_timeout: Duration::from_secs(60),

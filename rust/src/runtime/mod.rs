@@ -95,7 +95,10 @@ impl Exec {
                 self.meta.inputs[i].iter().map(|&d| d as i64).collect();
             literals.push(xla::Literal::vec1(data).reshape(&dims)?);
         }
-        let _guard = self.lock.lock().unwrap();
+        let _guard = crate::util::sync::lock_or_poisoned(
+            &self.lock,
+            "pjrt executable",
+        )?;
         let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
             .to_literal_sync()?;
         drop(_guard);
@@ -123,8 +126,9 @@ impl Exec {
 
 /// The artifact registry.
 pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
+    /// Owns the PJRT device plugin; executables stay valid only while
+    /// it lives, so the registry keeps it even though nothing reads it.
+    _client: xla::PjRtClient,
     execs: HashMap<String, Arc<Exec>>,
     dir: PathBuf,
 }
@@ -182,7 +186,7 @@ impl Runtime {
                 }),
             );
         }
-        Ok(Runtime { client, execs, dir })
+        Ok(Runtime { _client: client, execs, dir })
     }
 
     /// Load from the default directory.

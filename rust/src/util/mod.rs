@@ -8,6 +8,7 @@ pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 /// Monotonic wall-clock helper used by metrics and benches.
 pub fn now() -> std::time::Instant {

@@ -1,0 +1,114 @@
+//! Lock helpers with typed poison propagation.
+//!
+//! `Mutex::lock().unwrap()` converts a poisoned lock — some other
+//! thread panicked while holding it — into a second panic in the
+//! current thread. In the streaming setups this crate targets that is
+//! the worst possible reaction: a panicking peer tears down every
+//! coupled engine mid-stream, and there is no filesystem to fall back
+//! to. These helpers turn poison into an ordinary typed error
+//! ([`PoisonedLock`], a `std::error::Error`, so `?` lifts it into
+//! `anyhow::Result`) that the engine contract already knows how to
+//! route: a failed `perform_gets` poisons its batch handles, a failed
+//! `begin_step` surfaces to the pipe loop, and the multiplex barrier
+//! reports it instead of dying.
+//!
+//! `pallas-lint` (the `lock-unwrap` rule) gates new `.lock().unwrap()`
+//! sites crate-wide; this module is the sanctioned replacement.
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// A mutex (or condvar wait) observed poison: a thread panicked while
+/// holding the lock. Carries a static description of what the lock
+/// guards so the surfaced error names the subsystem, not just "lock".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoisonedLock {
+    /// What the mutex guards (e.g. `"sst writer shared state"`).
+    pub what: &'static str,
+}
+
+impl std::fmt::Display for PoisonedLock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} lock poisoned by a panicked thread",
+            self.what
+        )
+    }
+}
+
+impl std::error::Error for PoisonedLock {}
+
+/// Acquire `m`, propagating poison as a typed error instead of
+/// panicking. The usual call shape is
+/// `let mut sh = lock_or_poisoned(&self.shared, "sst writer shared")?;`
+/// in `Result` contexts, or a `match` with an explicit recovery path
+/// (log + break) inside service threads that cannot return errors.
+pub fn lock_or_poisoned<'a, T>(
+    m: &'a Mutex<T>,
+    what: &'static str,
+) -> Result<MutexGuard<'a, T>, PoisonedLock> {
+    m.lock().map_err(|_| PoisonedLock { what })
+}
+
+/// [`Condvar::wait_timeout`] with typed poison propagation, matching
+/// [`lock_or_poisoned`]. The guard is consumed and returned exactly as
+/// with the std API.
+pub fn wait_timeout_or_poisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+    what: &'static str,
+) -> Result<(MutexGuard<'a, T>, WaitTimeoutResult), PoisonedLock> {
+    cv.wait_timeout(guard, timeout)
+        .map_err(|_| PoisonedLock { what })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn healthy_lock_passes_through() {
+        let m = Mutex::new(7);
+        *lock_or_poisoned(&m, "test").unwrap() += 1;
+        assert_eq!(*lock_or_poisoned(&m, "test").unwrap(), 8);
+    }
+
+    #[test]
+    fn poisoned_lock_is_a_typed_error() {
+        let m = Arc::new(Mutex::new(0));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let err = lock_or_poisoned(&m, "test counter").unwrap_err();
+        assert_eq!(err, PoisonedLock { what: "test counter" });
+        assert!(err.to_string().contains("test counter"));
+        // And it lifts into anyhow::Result via `?`.
+        let lifted: anyhow::Result<()> = (|| {
+            lock_or_poisoned(&m, "test counter")?;
+            Ok(())
+        })();
+        assert!(lifted.unwrap_err().to_string().contains("poisoned"));
+    }
+
+    #[test]
+    fn wait_timeout_passes_guard_back() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_or_poisoned(&m, "test").unwrap();
+        let (g, res) = wait_timeout_or_poisoned(
+            &cv,
+            g,
+            Duration::from_millis(1),
+            "test",
+        )
+        .unwrap();
+        assert!(res.timed_out());
+        drop(g);
+    }
+}

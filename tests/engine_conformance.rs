@@ -309,7 +309,7 @@ fn sst_discard_drops_deferred_queue() {
         .put_deferred(&handle, Chunk::whole(vec![4]), payload.clone())
         .unwrap();
     writer.end_step().unwrap();
-    let after_first = writer.stats();
+    let after_first = writer.stats().unwrap();
     assert_eq!(after_first.steps_published, 1);
     assert_eq!(after_first.bytes_put, 16);
 
@@ -328,7 +328,7 @@ fn sst_discard_drops_deferred_queue() {
     writer.perform_puts().unwrap(); // no-op on a discarded step
     writer.end_step().unwrap();
 
-    let stats = writer.stats();
+    let stats = writer.stats().unwrap();
     assert_eq!(stats.steps_published, 1, "discarded step was published");
     assert_eq!(stats.steps_discarded, 1);
     assert_eq!(stats.bytes_put, 16,

@@ -1,0 +1,46 @@
+//! Tier-1 gate: the crate passes its own static-analysis lint.
+//!
+//! Runs the full `pallas-lint` pipeline (all rule families, the
+//! format-fingerprint manifest, and the waiver-budget ledger) over this
+//! repository and asserts zero unwaived findings. This is the same
+//! check CI runs through the `pallas-lint` binary; having it in the
+//! test suite means a plain `cargo test` catches a hardened-zone
+//! regression before any workflow does.
+
+use openpmd_stream::analysis::lint::{self, LintOptions};
+
+#[test]
+fn repository_is_lint_clean() {
+    let root = env!("CARGO_MANIFEST_DIR");
+    let report =
+        lint::run(&LintOptions::at(root)).expect("lint run succeeds");
+    assert!(report.files_scanned > 0, "no sources scanned");
+
+    let unwaived: Vec<String> = report
+        .unwaived()
+        .map(|f| {
+            format!("{}:{} [{}] {}", f.file, f.line, f.rule, f.message)
+        })
+        .collect();
+    assert!(
+        unwaived.is_empty(),
+        "unwaived lint findings:\n  {}",
+        unwaived.join("\n  ")
+    );
+}
+
+#[test]
+fn waived_findings_fit_the_committed_ledger() {
+    // The ledger equality check runs inside lint::run (any imbalance is
+    // itself an unwaived `waiver-ledger` finding, caught above). This
+    // test pins the current waiver total so a diff shows up in review
+    // when it moves.
+    let root = env!("CARGO_MANIFEST_DIR");
+    let report =
+        lint::run(&LintOptions::at(root)).expect("lint run succeeds");
+    assert_eq!(
+        report.waived_count(),
+        2,
+        "waiver set changed — update this pin and the ledger together"
+    );
+}

@@ -159,7 +159,7 @@ fn discard_policy_drops_steps_when_reader_lags() {
         }
         std::thread::sleep(Duration::from_millis(5));
     }
-    let stats = writer.stats();
+    let stats = writer.stats().unwrap();
     writer.close().unwrap();
     let consumed = reader_thread.join().unwrap();
 
@@ -212,7 +212,7 @@ fn block_policy_never_discards() {
             .unwrap();
         writer.end_step().unwrap();
     }
-    let stats = writer.stats();
+    let stats = writer.stats().unwrap();
     writer.close().unwrap();
     let n = reader_thread.join().unwrap();
     assert_eq!(stats.steps_discarded, 0);
@@ -372,7 +372,7 @@ fn reader_crash_does_not_wedge_writer() {
     // NOTE: the leaked in-proc reader keeps its channel alive, so the
     // writer sees an unresponsive (not dead) peer — exactly the lagging-
     // reader case, which Discard handles by dropping steps.
-    let stats = writer.stats();
+    let stats = writer.stats().unwrap();
     assert!(stats.steps_published >= 1);
 }
 

@@ -1,0 +1,132 @@
+//! `pallas-lint` — the repository's static-analysis gate.
+//!
+//! Scans `rust/src/` and `tools/` with the hand-rolled lexer-level
+//! rules in `openpmd_stream::analysis::lint` (panic-freedom zones,
+//! lock discipline, engine-contract conformance, format-fingerprint
+//! hygiene), prints `file:line` findings, optionally writes the
+//! machine-readable JSON report CI uploads as an artifact, and exits
+//! nonzero on any unwaived finding:
+//!
+//! ```text
+//! pallas-lint [--root DIR] [--json FILE] [--bless]
+//! ```
+//!
+//! `--bless` regenerates `tools/lint/format.fingerprint.json` — and
+//! refuses when a serialized layout changed while its version string
+//! (`MAGIC` / `WIRE_FORMAT`) did not.
+//!
+//! Exit status: 0 clean (waived-only), 1 unwaived finding(s),
+//! 2 usage/IO error.
+
+use std::path::PathBuf;
+
+use openpmd_stream::analysis::lint;
+use openpmd_stream::util::cli::{render_help, Args, OptSpec};
+
+fn help() -> String {
+    render_help(
+        "pallas-lint",
+        "dependency-free static-analysis gate (panic-freedom, lock \
+         discipline, engine contract, format fingerprint)",
+        "pallas-lint [--root DIR] [--json FILE] [--bless]",
+        &[
+            OptSpec {
+                name: "root",
+                value_name: Some("DIR"),
+                default: Some("."),
+                help: "repository root to scan",
+            },
+            OptSpec {
+                name: "json",
+                value_name: Some("FILE"),
+                default: None,
+                help: "write the machine-readable findings report",
+            },
+            OptSpec {
+                name: "bless",
+                value_name: None,
+                default: None,
+                help: "regenerate the format-fingerprint manifest",
+            },
+            OptSpec {
+                name: "help",
+                value_name: None,
+                default: None,
+                help: "show this help",
+            },
+        ],
+    )
+}
+
+fn run() -> Result<bool, String> {
+    let args = Args::from_env(false).map_err(|e| e.to_string())?;
+    if args.flag("help") {
+        print!("{}", help());
+        return Ok(true);
+    }
+    args.reject_unknown(&["root", "json", "bless", "help"])
+        .map_err(|e| e.to_string())?;
+    let root = PathBuf::from(args.get_or("root", "."));
+    if !root.join("Cargo.toml").is_file() {
+        return Err(format!(
+            "{} does not look like the repository root (no \
+             Cargo.toml); pass --root",
+            root.display()
+        ));
+    }
+    let opts = lint::LintOptions::at(&root);
+
+    if args.flag("bless") {
+        let manifest = opts
+            .manifest
+            .as_deref()
+            .expect("LintOptions::at always sets a manifest path");
+        let msg = lint::fingerprint::bless(&root, manifest)
+            .map_err(|e| format!("{e:#}"))?;
+        println!("{msg}");
+    }
+
+    let report = lint::run(&opts).map_err(|e| format!("{e:#}"))?;
+
+    if let Some(json_path) = args.get("json") {
+        let mut body = report.to_json().to_string_pretty();
+        body.push('\n');
+        std::fs::write(json_path, body).map_err(|e| {
+            format!("writing {json_path}: {e}")
+        })?;
+    }
+
+    for f in &report.findings {
+        match &f.waived {
+            Some(reason) => println!(
+                "{}:{}: [{}] waived: {} ({})",
+                f.file, f.line, f.rule, f.message, reason
+            ),
+            None => println!(
+                "{}:{}: [{}] {}",
+                f.file, f.line, f.rule, f.message
+            ),
+        }
+    }
+    let unwaived = report.unwaived_count();
+    println!(
+        "pallas-lint: {} file(s), {} finding(s) ({} waived, {} \
+         unwaived)",
+        report.files_scanned,
+        report.findings.len(),
+        report.waived_count(),
+        unwaived,
+    );
+    Ok(unwaived == 0)
+}
+
+fn main() {
+    match run() {
+        Ok(true) => {}
+        Ok(false) => std::process::exit(1),
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            std::process::exit(2);
+        }
+    }
+}
