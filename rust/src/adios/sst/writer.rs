@@ -10,13 +10,15 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::util::sync::{lock_or_poisoned, wait_timeout_or_poisoned};
+use crate::util::sync::{
+    classes, OrderedCondvar, OrderedGuard, OrderedMutex,
+};
 
 use crate::adios::engine::{
     Bytes, Engine, GetHandle, Mode, PutQueue, StepStatus, VarDecl,
@@ -70,9 +72,19 @@ impl Default for SstWriterOptions {
 /// application: the first rank to reach a step index decides (based on its
 /// own queue occupancy) and the others follow, so all ranks publish the
 /// same step sequence.
-#[derive(Debug, Default)]
 pub struct WriterGroup {
-    decisions: Mutex<HashMap<u64, bool>>,
+    decisions: OrderedMutex<HashMap<u64, bool>>,
+}
+
+impl Default for WriterGroup {
+    fn default() -> WriterGroup {
+        WriterGroup {
+            decisions: OrderedMutex::new(
+                &classes::SST_GROUP_DECISIONS,
+                HashMap::new(),
+            ),
+        }
+    }
 }
 
 impl WriterGroup {
@@ -86,19 +98,15 @@ impl WriterGroup {
         step: u64,
         keep_if_first: impl FnOnce() -> bool,
     ) -> Result<bool> {
-        let mut d =
-            lock_or_poisoned(&self.decisions, "writer group decisions")?;
+        let mut d = self.decisions.lock()?;
         Ok(*d.entry(step).or_insert_with(keep_if_first))
     }
 }
 
 /// Service-thread lock helper: threads with no `Result` channel back to
 /// the producer log the poison and bow out instead of re-panicking.
-fn lock_or_warn<'a, T>(
-    m: &'a Mutex<T>,
-    what: &'static str,
-) -> Option<MutexGuard<'a, T>> {
-    match lock_or_poisoned(m, what) {
+fn lock_or_warn<T>(m: &OrderedMutex<T>) -> Option<OrderedGuard<'_, T>> {
+    match m.lock() {
         Ok(g) => Some(g),
         Err(e) => {
             crate::warn_log!("sst-writer", "{e}; stopping service thread");
@@ -108,7 +116,7 @@ fn lock_or_warn<'a, T>(
 }
 
 struct ReaderPeer {
-    tx: Mutex<Box<dyn ConnTx>>,
+    tx: OrderedMutex<Box<dyn ConnTx>>,
     /// Highest step this reader has fully consumed (StepDone).
     done: AtomicU64,
     alive: AtomicBool,
@@ -138,11 +146,11 @@ struct Shared {
 pub struct SstWriter {
     opts: SstWriterOptions,
     address: String,
-    shared: Arc<Mutex<Shared>>,
+    shared: Arc<OrderedMutex<Shared>>,
     /// Signalled when a step retires or a reader joins/leaves.
-    retire_cv: Arc<Condvar>,
+    retire_cv: Arc<OrderedCondvar>,
     accept_thread: Option<JoinHandle<()>>,
-    service_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    service_threads: Arc<OrderedMutex<Vec<JoinHandle<()>>>>,
     stop: Arc<AtomicBool>,
     /// Step being built between begin_step/end_step.
     current: Option<StagedStep>,
@@ -159,10 +167,17 @@ impl SstWriter {
         let transport = transport::by_name(&opts.transport)?;
         let mut listener = transport.listen(&opts.listen)?;
         let address = listener.address();
-        let shared = Arc::new(Mutex::new(Shared::default()));
-        let retire_cv = Arc::new(Condvar::new());
+        let shared = Arc::new(OrderedMutex::new(
+            &classes::SST_WRITER_SHARED,
+            Shared::default(),
+        ));
+        let retire_cv =
+            Arc::new(OrderedCondvar::new(&classes::SST_WRITER_SHARED));
         let stop = Arc::new(AtomicBool::new(false));
-        let service_threads = Arc::new(Mutex::new(Vec::new()));
+        let service_threads = Arc::new(OrderedMutex::new(
+            &classes::SST_SERVICE_THREADS,
+            Vec::new(),
+        ));
 
         let accept_thread = {
             let shared = shared.clone();
@@ -220,13 +235,14 @@ impl SstWriter {
     }
 
     pub fn stats(&self) -> Result<SstStats> {
-        Ok(lock_or_poisoned(&self.shared, "sst writer shared state")?
-            .stats)
+        Ok(self.shared.lock()?.stats)
     }
 
     /// Number of currently subscribed readers.
     pub fn reader_count(&self) -> Result<usize> {
-        Ok(lock_or_poisoned(&self.shared, "sst writer shared state")?
+        Ok(self
+            .shared
+            .lock()?
             .readers
             .iter()
             .filter(|r| r.alive.load(Ordering::Relaxed))
@@ -262,8 +278,7 @@ impl SstWriter {
     }
 
     fn queue_has_room(&self) -> Result<bool> {
-        let mut shared =
-            lock_or_poisoned(&self.shared, "sst writer shared state")?;
+        let mut shared = self.shared.lock()?;
         Self::retire_locked(&mut shared);
         Ok(shared.published.len() < self.opts.queue.limit)
     }
@@ -274,9 +289,9 @@ impl SstWriter {
 /// peer table so `end_step` can push announcements.
 fn serve_reader(
     conn: Box<dyn transport::Conn>,
-    shared: &Arc<Mutex<Shared>>,
-    cv: &Arc<Condvar>,
-    threads: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    shared: &Arc<OrderedMutex<Shared>>,
+    cv: &Arc<OrderedCondvar>,
+    threads: &Arc<OrderedMutex<Vec<JoinHandle<()>>>>,
     writer_rank: usize,
     hostname: &str,
     stop: &Arc<AtomicBool>,
@@ -300,7 +315,7 @@ fn serve_reader(
     let (tx, mut rx) = conn.split()?;
 
     let peer = Arc::new(ReaderPeer {
-        tx: Mutex::new(tx),
+        tx: OrderedMutex::new(&classes::SST_PEER_TX, tx),
         done: AtomicU64::new(0),
         alive: AtomicBool::new(true),
         rank: hello,
@@ -312,7 +327,7 @@ fn serve_reader(
     // between the two would otherwise be announced to nobody — not in
     // the backlog, and the reader not yet in the peer table.
     {
-        let mut sh = lock_or_poisoned(shared, "sst writer shared state")?;
+        let mut sh = shared.lock()?;
         let mut backlog: Vec<Msg> = sh
             .published
             .iter()
@@ -324,7 +339,7 @@ fn serve_reader(
         if sh.closed {
             backlog.push(Msg::CloseStream);
         }
-        let mut tx = lock_or_poisoned(&peer.tx, "reader peer tx")?;
+        let mut tx = peer.tx.lock()?;
         for m in backlog {
             // lint:allow(lock-across-blocking): the backlog must go
             // out under the registration lock, or a concurrent
@@ -356,9 +371,8 @@ fn serve_reader(
                         // readers and the producer's perform_puts never
                         // serialize on compression.
                         let staged = {
-                            let Some(mut sh) = lock_or_warn(
-                                &shared, "sst writer shared state",
-                            ) else {
+                            let Some(mut sh) = lock_or_warn(&shared)
+                            else {
                                 break;
                             };
                             sh.stats.batch_requests += 1;
@@ -393,9 +407,8 @@ fn serve_reader(
                             }
                         }
                         {
-                            let Some(mut sh) = lock_or_warn(
-                                &shared, "sst writer shared state",
-                            ) else {
+                            let Some(mut sh) = lock_or_warn(&shared)
+                            else {
                                 break;
                             };
                             sh.stats.bytes_served += served_bytes;
@@ -404,9 +417,7 @@ fn serve_reader(
                         }
                         let reply =
                             Msg::GetBatchReply { req_id, items: replies };
-                        let sent = match lock_or_poisoned(
-                            &peer.tx, "reader peer tx",
-                        ) {
+                        let sent = match peer.tx.lock() {
                             Ok(mut tx) => tx.send(reply).is_ok(),
                             Err(_) => false,
                         };
@@ -417,9 +428,7 @@ fn serve_reader(
                     Ok(Recv::Msg(Msg::StepDone { step })) => {
                         // done holds step+1 (see retire_locked).
                         peer.done.fetch_max(step + 1, Ordering::Relaxed);
-                        let Some(mut sh) = lock_or_warn(
-                            &shared, "sst writer shared state",
-                        ) else {
+                        let Some(mut sh) = lock_or_warn(&shared) else {
                             break;
                         };
                         SstWriter::retire_locked(&mut sh);
@@ -447,14 +456,12 @@ fn serve_reader(
                 }
             }
             peer.alive.store(false, Ordering::Relaxed);
-            if let Some(mut sh) =
-                lock_or_warn(&shared, "sst writer shared state")
-            {
+            if let Some(mut sh) = lock_or_warn(&shared) {
                 SstWriter::retire_locked(&mut sh);
             }
             cv.notify_all();
         })?;
-    lock_or_poisoned(threads, "service thread registry")?.push(handle);
+    threads.lock()?.push(handle);
     Ok(())
 }
 
@@ -581,19 +588,15 @@ impl Engine for SstWriter {
             (None, QueueFullPolicy::Discard) => has_room,
             (_, QueueFullPolicy::Block) => {
                 // Block until the queue drains.
-                let mut sh = lock_or_poisoned(
-                    &self.shared, "sst writer shared state",
-                )?;
+                let mut sh = self.shared.lock()?;
                 loop {
                     Self::retire_locked(&mut sh);
                     if sh.published.len() < self.opts.queue.limit {
                         break;
                     }
-                    let (guard, timeout) = wait_timeout_or_poisoned(
-                        &self.retire_cv,
+                    let (guard, timeout) = self.retire_cv.wait_timeout(
                         sh,
                         Duration::from_millis(200),
-                        "sst writer shared state",
                     )?;
                     sh = guard;
                     if timeout.timed_out() && sh.closed {
@@ -606,9 +609,7 @@ impl Engine for SstWriter {
         if !keep {
             self.next_step += 1;
             self.discarding = true;
-            lock_or_poisoned(&self.shared, "sst writer shared state")?
-                .stats
-                .steps_discarded += 1;
+            self.shared.lock()?.stats.steps_discarded += 1;
             return Ok(StepStatus::Discarded);
         }
         self.discarding = false;
@@ -692,8 +693,7 @@ impl Engine for SstWriter {
                 .or_default()
                 .push((p.chunk, data));
         }
-        let mut sh =
-            lock_or_poisoned(&self.shared, "sst writer shared state")?;
+        let mut sh = self.shared.lock()?;
         sh.stats.bytes_put += put_bytes;
         sh.ops.absorb(local_ops);
         Ok(())
@@ -760,8 +760,7 @@ impl Engine for SstWriter {
         // reader joining after the snapshot replays the freshly inserted
         // step from the backlog instead (see serve_reader), so every
         // peer hears about the step exactly once.
-        let mut sh =
-            lock_or_poisoned(&self.shared, "sst writer shared state")?;
+        let mut sh = self.shared.lock()?;
         sh.stats.steps_published += 1;
         sh.published.insert(step, staged.clone());
         let peers: Vec<Arc<ReaderPeer>> = sh
@@ -772,7 +771,7 @@ impl Engine for SstWriter {
             .collect();
         drop(sh);
         for r in peers {
-            let ok = match lock_or_poisoned(&r.tx, "reader peer tx") {
+            let ok = match r.tx.lock() {
                 Ok(mut tx) => tx
                     .send(Msg::StepAnnounce {
                         step,
@@ -797,8 +796,7 @@ impl Engine for SstWriter {
         // outside it. Readers that join after the flip get CloseStream
         // appended to their backlog replay.
         let peers: Vec<Arc<ReaderPeer>> = {
-            let mut sh =
-                lock_or_poisoned(&self.shared, "sst writer shared state")?;
+            let mut sh = self.shared.lock()?;
             if sh.closed {
                 return Ok(());
             }
@@ -810,7 +808,7 @@ impl Engine for SstWriter {
                 .collect()
         };
         for r in peers {
-            if let Ok(mut tx) = lock_or_poisoned(&r.tx, "reader peer tx") {
+            if let Ok(mut tx) = r.tx.lock() {
                 let _ = tx.send(Msg::CloseStream);
             }
         }
@@ -819,8 +817,7 @@ impl Engine for SstWriter {
         // still in flight are not stranded mid-connect.
         let deadline = std::time::Instant::now() + self.opts.close_linger;
         loop {
-            let mut sh =
-                lock_or_poisoned(&self.shared, "sst writer shared state")?;
+            let mut sh = self.shared.lock()?;
             Self::retire_locked(&mut sh);
             if sh.published.is_empty() {
                 break;
@@ -833,12 +830,9 @@ impl Engine for SstWriter {
                 // All subscribers consumed what they wanted and left.
                 break;
             }
-            let (guard, _) = wait_timeout_or_poisoned(
-                &self.retire_cv,
-                sh,
-                Duration::from_millis(50),
-                "sst writer shared state",
-            )?;
+            let (guard, _) = self
+                .retire_cv
+                .wait_timeout(sh, Duration::from_millis(50))?;
             drop(guard);
             if std::time::Instant::now() > deadline {
                 crate::warn_log!("sst-writer",
@@ -850,10 +844,8 @@ impl Engine for SstWriter {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        let threads: Vec<_> = std::mem::take(&mut *lock_or_poisoned(
-            &self.service_threads,
-            "service thread registry",
-        )?);
+        let threads: Vec<_> =
+            std::mem::take(&mut *self.service_threads.lock()?);
         for t in threads {
             let _ = t.join();
         }
@@ -863,7 +855,7 @@ impl Engine for SstWriter {
     fn ops_report(&self) -> OpsReport {
         // The trait returns a bare report: on poison, report empty
         // rather than tearing the caller down for a diagnostics read.
-        match lock_or_poisoned(&self.shared, "sst writer shared state") {
+        match self.shared.lock() {
             Ok(sh) => sh.ops,
             Err(e) => {
                 crate::warn_log!("sst-writer", "{e}; reporting empty ops");

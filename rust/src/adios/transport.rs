@@ -18,14 +18,14 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 use once_cell::sync::Lazy;
 
 use super::wire::{decode_msg, encode_msg, GetReply, Msg};
-use crate::util::sync::lock_or_poisoned;
+use crate::util::sync::{classes, OrderedMutex};
 
 /// Receive outcome for the non-blocking path.
 pub enum Recv {
@@ -166,8 +166,11 @@ impl ConnRx for InProcRx {
 }
 
 /// Global registry of in-process listening endpoints.
-static INPROC_REGISTRY: Lazy<Mutex<HashMap<String,
-    SyncSender<Box<dyn Conn>>>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+static INPROC_REGISTRY: Lazy<
+    OrderedMutex<HashMap<String, SyncSender<Box<dyn Conn>>>>,
+> = Lazy::new(
+    || OrderedMutex::new(&classes::INPROC_REGISTRY, HashMap::new()),
+);
 
 struct InProcListener {
     address: String,
@@ -196,9 +199,7 @@ impl Drop for InProcListener {
     fn drop(&mut self) {
         // Poisoned registry on teardown: skip the unregister rather
         // than panic inside drop (which would abort).
-        if let Ok(mut reg) =
-            lock_or_poisoned(&INPROC_REGISTRY, "inproc registry")
-        {
+        if let Ok(mut reg) = INPROC_REGISTRY.lock() {
             reg.remove(&self.address);
         }
     }
@@ -219,7 +220,7 @@ impl Transport for InProcTransport {
             format!("inproc://{hint}")
         };
         let (tx, rx) = mpsc::sync_channel(64);
-        let mut reg = lock_or_poisoned(&INPROC_REGISTRY, "inproc registry")?;
+        let mut reg = INPROC_REGISTRY.lock()?;
         if reg.contains_key(&address) {
             bail!("inproc address {address:?} already in use");
         }
@@ -229,8 +230,7 @@ impl Transport for InProcTransport {
 
     fn dial(&self, address: &str) -> Result<Box<dyn Conn>> {
         let acceptor = {
-            let reg =
-                lock_or_poisoned(&INPROC_REGISTRY, "inproc registry")?;
+            let reg = INPROC_REGISTRY.lock()?;
             reg.get(address)
                 .cloned()
                 .with_context(|| format!("no inproc listener at {address:?}"))?
@@ -392,13 +392,16 @@ fn tcp_read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Recv> {
     // reply straight into its own allocation — no intermediate frame
     // buffer, no zero-fill, no decode copy. (Read the 1-byte tag first
     // to dispatch.)
-    let mut tag = [0u8; 1];
-    stream.read_exact(&mut tag)?;
-    if tag[0] == 5 && len >= 17 {
-        let mut head = [0u8; 16];
-        stream.read_exact(&mut head)?;
-        let req_id = u64::from_le_bytes(head[..8].try_into().unwrap());
-        let n = u64::from_le_bytes(head[8..].try_into().unwrap()) as usize;
+    let mut tag_buf = [0u8; 1];
+    stream.read_exact(&mut tag_buf)?;
+    let [tag] = tag_buf;
+    if tag == 5 && len >= 17 {
+        let mut req_id_buf = [0u8; 8];
+        let mut count_buf = [0u8; 8];
+        stream.read_exact(&mut req_id_buf)?;
+        stream.read_exact(&mut count_buf)?;
+        let req_id = u64::from_le_bytes(req_id_buf);
+        let n = u64::from_le_bytes(count_buf) as usize;
         // Each item carries at least a 9-byte header; bounding n by the
         // frame length keeps a corrupt count from pre-allocating
         // gigabytes before the first item read fails.
@@ -410,10 +413,8 @@ fn tcp_read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Recv> {
         for _ in 0..n {
             let mut item_head = [0u8; 9];
             stream.read_exact(&mut item_head)?;
-            let flag = item_head[0];
-            let item_len = u64::from_le_bytes(
-                item_head[1..9].try_into().unwrap(),
-            ) as usize;
+            let [flag, len_bytes @ ..] = item_head;
+            let item_len = u64::from_le_bytes(len_bytes) as usize;
             consumed += 9 + item_len as u64;
             if consumed > len as u64 {
                 bail!("batch reply overruns its frame");
@@ -450,7 +451,7 @@ fn tcp_read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Recv> {
     }
     buf.clear();
     buf.reserve(len);
-    buf.push(tag[0]);
+    buf.push(tag);
     buf.resize(len, 0);
     stream.read_exact(&mut buf[1..])?;
     Ok(Recv::Msg(decode_msg(buf)?))

@@ -1,0 +1,1568 @@
+//! Interprocedural concurrency analysis (the `lock-*` rule family).
+//!
+//! The crate's unattended service loops — SST writer serve threads,
+//! fleet workers, staged fetch threads — share state behind a handful
+//! of long-lived mutexes. A lock-order inversion between any two of
+//! them is a production deadlock that no single-file rule can see, so
+//! this pass models the whole crate at once:
+//!
+//! 1. **Class registry.** `util::sync::classes` declares every lock
+//!    class as `static NAME: LockClass = LockClass { .., rank: N };`.
+//!    The pass parses that table straight out of the token stream, so
+//!    the static model and the debug-build runtime checker
+//!    (`OrderedMutex`) can never drift apart.
+//! 2. **Owner map.** Every `OrderedMutex::new(&classes::X, ..)` /
+//!    `OrderedCondvar::new(&classes::X)` construction site is walked
+//!    backwards to the field, `let`, or `static` that owns it, giving
+//!    a crate-wide ident → class map (`shared` → `SST_WRITER_SHARED`).
+//! 3. **Item table.** A lightweight parser collects every `fn` item
+//!    and its body token range, building a crate-wide call-edge table
+//!    on top of the lexer.
+//! 4. **Dataflow walk.** Each body is walked with a live-guard stack
+//!    (brace-scoped, killed by `drop(g)` / statement end), recording
+//!    direct nesting edges, call sites made while guards are held, and
+//!    `Condvar` waits. A fixpoint over the call graph yields
+//!    `may_acquire` per function, turning held-across-call sites into
+//!    interprocedural edges.
+//!
+//! Findings: `lock-order` (acquisition violating the rank order),
+//! `lock-across-call` (a call that may transitively acquire a class at
+//! or below a held rank), `lock-cycle` (a cycle in the combined
+//! edge graph — deadlock between class orders), `condvar-class` (a
+//! wait using a guard of the wrong class, or made while other locks
+//! are held), and `unregistered-lock` (a raw `Mutex`/`Condvar` or an
+//! unresolvable acquisition inside a [`LOCK_ZONES`] module).
+//!
+//! The computed graph is serialized to the blessed manifest
+//! `tools/lint/lock.graph.json` (fingerprint-style, see
+//! [`check_graph`]): growing an edge without re-blessing is a
+//! `lock-graph` finding, so every new lock ordering is a reviewable
+//! diff.
+//!
+//! Known limits, chosen to keep the walk lexer-level: guards bound by
+//! `match` scrutinees live to the end of the enclosing statement
+//! (slight over-approximation), call edges are matched by bare
+//! function name (a method call resolves to every crate `fn` of that
+//! name — except the std-shadowing method names in `DOTTED_EXCLUDE`,
+//! which are never linked when invoked through `.`), and `Drop::drop`
+//! bodies are scanned but never appear as callees.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::lexer::Token;
+use super::{rules, Finding, SourceFile};
+use crate::util::json::{self, Json};
+
+/// Modules in which every `Mutex`/`Condvar` must carry a registered
+/// lock class. Same path grammar as `HARDENED_ZONES`: entries ending
+/// in `/` are directory prefixes. `util/sync.rs` itself is excluded —
+/// it *implements* the wrappers.
+pub const LOCK_ZONES: &[&str] = &[
+    "rust/src/adios/sst/",
+    "rust/src/adios/transport.rs",
+    "rust/src/adios/multiplex.rs",
+    "rust/src/pipeline/",
+    "rust/src/runtime/mod.rs",
+];
+
+/// Is `rel` (repo-relative, `/`-separated) inside a lock zone?
+pub fn in_lock_zone(rel: &str) -> bool {
+    LOCK_ZONES.iter().any(|z| {
+        if let Some(dir) = z.strip_suffix('/') {
+            rel.strip_prefix(dir)
+                .map(|rest| rest.starts_with('/'))
+                .unwrap_or(false)
+        } else {
+            rel == *z
+        }
+    })
+}
+
+/// Acquisition helpers: a call to one of these IS an acquisition of
+/// its first argument, handled at the call site.
+const ACQUIRE_HELPERS: &[&str] = &["lock_or_poisoned", "lock_or_warn"];
+
+/// Function names that are the locking machinery itself (or `drop`):
+/// never treated as call edges, and the acquisition helpers' own
+/// bodies are skipped — they are the implementation of acquisition,
+/// not users of it.
+const INTRINSICS: &[&str] = &[
+    "lock",
+    "try_lock",
+    "lock_or_poisoned",
+    "lock_or_warn",
+    "wait_timeout",
+    "wait_timeout_or_poisoned",
+    "notify_one",
+    "notify_all",
+    "drop",
+    "class",
+];
+
+/// Method names (call position after `.`) that shadow ubiquitous std
+/// container/iterator/atomic methods. Call edges are matched by bare
+/// name, so `sh.published.get(step)` would otherwise link to
+/// `Engine::get` and every other crate `fn get` — these names are never
+/// treated as crate call edges when invoked as methods. Free and
+/// path-qualified calls (`Self::helper(..)`) still link normally.
+const DOTTED_EXCLUDE: &[&str] = &[
+    "get", "get_mut", "insert", "remove", "entry", "push", "pop",
+    "len", "is_empty", "iter", "iter_mut", "keys", "values",
+    "contains", "contains_key", "clone", "cloned", "copied",
+    "collect", "map", "filter", "find", "any", "all", "min", "max",
+    "sum", "take", "send", "recv", "load", "store", "join", "next",
+    "extend", "drain",
+];
+
+/// One lock class parsed from the registry
+/// (`static NAME: LockClass = LockClass { .., rank: N };`).
+#[derive(Debug, Clone)]
+pub struct ClassDef {
+    /// The registry static's identifier (`SST_WRITER_SHARED`) — the
+    /// stable name used in findings and the blessed graph.
+    pub ident: String,
+    pub rank: u32,
+    pub file: String,
+    pub line: u32,
+}
+
+/// One edge of the lock-order graph: while `from` was held, `to` was
+/// acquired (kind `direct`) or a call was made that may acquire it
+/// (kind `call`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Edge {
+    pub kind: String,
+    /// `file::fn` sites that induce the edge, sorted.
+    pub sites: BTreeSet<String>,
+}
+
+/// The crate-wide lock-order graph.
+#[derive(Debug, Default, PartialEq)]
+pub struct LockGraph {
+    /// Class ident → rank.
+    pub classes: BTreeMap<String, u32>,
+    /// (from ident, to ident) → edge facts.
+    pub edges: BTreeMap<(String, String), Edge>,
+}
+
+/// A `fn` item with a body.
+struct Item {
+    name: String,
+    line: u32,
+    end_line: u32,
+    /// Token index range of the body (inside the braces).
+    body: (usize, usize),
+}
+
+/// Collect every `fn` item (with a body) in `sf`, including nested and
+/// test functions. Trait method declarations without bodies are
+/// skipped.
+fn items(sf: &SourceFile) -> Vec<Item> {
+    let t = &sf.tokens;
+    let mut out = Vec::new();
+    for i in 0..t.len() {
+        if !t[i].is_ident("fn") {
+            continue;
+        }
+        let Some(name) = t.get(i + 1).and_then(|x| x.ident()) else {
+            continue;
+        };
+        let Some((b, e)) = rules::body_range(t, i + 2) else {
+            continue;
+        };
+        let end_line = t
+            .get(e)
+            .or_else(|| t.last())
+            .map(|x| x.line)
+            .unwrap_or(t[i].line);
+        out.push(Item {
+            name: name.to_string(),
+            line: t[i].line,
+            end_line,
+            body: (b, e),
+        });
+    }
+    out
+}
+
+/// `(name, start_line, end_line)` for every `fn` item with a body —
+/// used by the report layer to attach stable symbols to findings.
+pub fn fn_spans(sf: &SourceFile) -> Vec<(String, u32, u32)> {
+    items(sf)
+        .into_iter()
+        .map(|it| (it.name, it.line, it.end_line))
+        .collect()
+}
+
+/// Parse the lock-class registry out of the token streams:
+/// `static NAME : LockClass = .. rank : N .. ;` anywhere in the crate.
+fn class_defs(sources: &[SourceFile]) -> Vec<ClassDef> {
+    let mut out: Vec<ClassDef> = Vec::new();
+    for sf in sources {
+        let t = &sf.tokens;
+        for i in 0..t.len() {
+            if !t[i].is_ident("static") {
+                continue;
+            }
+            let Some(name) = t.get(i + 1).and_then(|x| x.ident())
+            else {
+                continue;
+            };
+            if !(t.get(i + 2).map(|x| x.is_punct(':')).unwrap_or(false)
+                && t.get(i + 3)
+                    .map(|x| x.is_ident("LockClass"))
+                    .unwrap_or(false))
+            {
+                continue;
+            }
+            let mut rank = None;
+            let mut j = i + 4;
+            while j < t.len() && !t[j].is_punct(';') {
+                if t[j].is_ident("rank")
+                    && t.get(j + 1)
+                        .map(|x| x.is_punct(':'))
+                        .unwrap_or(false)
+                {
+                    rank = t
+                        .get(j + 2)
+                        .and_then(|x| x.num())
+                        .and_then(|n| {
+                            n.replace('_', "").parse::<u32>().ok()
+                        });
+                }
+                j += 1;
+            }
+            if let Some(rank) = rank {
+                if !out.iter().any(|d| d.ident == name) {
+                    out.push(ClassDef {
+                        ident: name.to_string(),
+                        rank,
+                        file: sf.path.clone(),
+                        line: t[i].line,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Walk back from a construction site (`OrderedMutex::new(..)` at
+/// token `ctor`) to the binding that owns it: a struct-literal field
+/// (`shared: Arc::new(OrderedMutex::new(..))`), a `let`, or a
+/// `static`/`const`. Returns `None` when no owner is found within the
+/// statement.
+fn owner_ident(t: &[Token], ctor: usize) -> Option<String> {
+    let mut k = ctor;
+    let mut steps = 0usize;
+    while k > 0 && steps < 96 {
+        k -= 1;
+        steps += 1;
+        let tk = &t[k];
+        if tk.is_punct(';') || tk.is_punct('}') {
+            return None;
+        }
+        if tk.is_ident("let") {
+            let mut j = k + 1;
+            if t.get(j).map(|x| x.is_ident("mut")).unwrap_or(false) {
+                j += 1;
+            }
+            return t.get(j).and_then(|x| x.ident()).map(str::to_string);
+        }
+        if tk.is_ident("static") || tk.is_ident("const") {
+            return t
+                .get(k + 1)
+                .and_then(|x| x.ident())
+                .map(str::to_string);
+        }
+        if tk.is_punct(':')
+            && !(k > 0 && t[k - 1].is_punct(':'))
+            && !t.get(k + 1).map(|x| x.is_punct(':')).unwrap_or(false)
+        {
+            // Struct-literal field: `{` or `,` then `name` then `:`.
+            if k >= 2 {
+                if let Some(name) = t[k - 1].ident() {
+                    if t[k - 2].is_punct('{') || t[k - 2].is_punct(',')
+                    {
+                        return Some(name.to_string());
+                    }
+                }
+            }
+            continue;
+        }
+        if tk.is_punct('{') {
+            return None;
+        }
+    }
+    None
+}
+
+/// Map every binding that owns an `OrderedMutex`/`OrderedCondvar` to
+/// its class index. Constructions with an unresolvable class, and
+/// idents bound to two different classes, are `unregistered-lock`
+/// findings inside lock zones.
+fn owner_map(
+    sources: &[SourceFile],
+    defs: &[ClassDef],
+    out: &mut Vec<Finding>,
+) -> BTreeMap<String, usize> {
+    let idx: BTreeMap<&str, usize> = defs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| (d.ident.as_str(), i))
+        .collect();
+    let mut owners: BTreeMap<String, usize> = BTreeMap::new();
+    for sf in sources {
+        let t = &sf.tokens;
+        let zone = in_lock_zone(&sf.path);
+        for i in 0..t.len() {
+            let is_ctor = (t[i].is_ident("OrderedMutex")
+                || t[i].is_ident("OrderedCondvar"))
+                && t.get(i + 1).map(|x| x.is_punct(':')).unwrap_or(false)
+                && t.get(i + 2).map(|x| x.is_punct(':')).unwrap_or(false)
+                && t.get(i + 3).map(|x| x.is_ident("new")).unwrap_or(false)
+                && t.get(i + 4).map(|x| x.is_punct('(')).unwrap_or(false);
+            if !is_ctor {
+                continue;
+            }
+            let arg = rules::first_arg_expr(t, i + 4);
+            let class = arg
+                .rsplit('.')
+                .next()
+                .and_then(|seg| idx.get(seg))
+                .copied();
+            let Some(class) = class else {
+                if zone && !sf.exempt[i] {
+                    out.push(
+                        Finding::new(
+                            "unregistered-lock",
+                            &sf.path,
+                            t[i].line,
+                            format!(
+                                "ordered lock constructed with \
+                                 unresolvable class `{arg}` — name a \
+                                 `util::sync::classes` entry"
+                            ),
+                        )
+                        .with_symbol(enclosing(sf, t[i].line)),
+                    );
+                }
+                continue;
+            };
+            let Some(owner) = owner_ident(t, i) else {
+                continue;
+            };
+            match owners.get(&owner) {
+                Some(&prev) if prev != class => {
+                    out.push(
+                        Finding::new(
+                            "unregistered-lock",
+                            &sf.path,
+                            t[i].line,
+                            format!(
+                                "`{owner}` is bound to two lock \
+                                 classes (`{}` and `{}`) — class \
+                                 resolution is by ident; rename one \
+                                 binding",
+                                defs[prev].ident, defs[class].ident
+                            ),
+                        )
+                        .with_symbol(enclosing(sf, t[i].line)),
+                    );
+                }
+                _ => {
+                    owners.insert(owner, class);
+                }
+            }
+        }
+    }
+    owners
+}
+
+/// Innermost enclosing `fn` name for a line, for finding symbols.
+fn enclosing(sf: &SourceFile, line: u32) -> Option<String> {
+    let mut best: Option<Item> = None;
+    for it in items(sf) {
+        if it.line <= line && line <= it.end_line {
+            let deeper = best
+                .as_ref()
+                .map(|b| it.line >= b.line)
+                .unwrap_or(true);
+            if deeper {
+                best = Some(it);
+            }
+        }
+    }
+    best.map(|b| b.name)
+}
+
+/// A live guard during the dataflow walk.
+struct Live {
+    binding: Option<String>,
+    class: Option<usize>,
+    depth: usize,
+    /// Unbound guards die at the end of their statement.
+    temp: bool,
+}
+
+/// A call made inside a function body.
+struct CallSite {
+    callee: String,
+    /// Classes held (resolved guards only) when the call was made.
+    held: Vec<usize>,
+    line: u32,
+}
+
+/// A `Condvar` wait site.
+struct Wait {
+    cv_class: Option<usize>,
+    cv_expr: String,
+    guard_class: Option<usize>,
+    guard_resolved: bool,
+    /// Other resolved classes held during the wait.
+    others: Vec<usize>,
+    line: u32,
+}
+
+/// Everything the walk learned about one function body.
+struct FnFacts {
+    name: String,
+    file: String,
+    /// `file::fn` — the site label used in graph edges.
+    site: String,
+    /// Classes acquired directly (with the site line).
+    direct: Vec<(usize, u32)>,
+    /// Direct nesting: (held, acquired, line).
+    nested: Vec<(usize, usize, u32)>,
+    calls: Vec<CallSite>,
+    waits: Vec<Wait>,
+}
+
+/// Binding that receives the value produced at token `start` (`start`
+/// points at the first token of the RHS expression): walks back over
+/// `=` and the pattern to the nearest plausible binding ident. Skips
+/// type-ish idents (capitalized), path segments, and `mut`, so
+/// `let Some(mut sh) = ..`, `let g: MutexGuard<T> = ..`, and plain
+/// reassignment all resolve.
+fn binding_before(t: &[Token], start: usize) -> Option<String> {
+    if start == 0 || !t[start - 1].is_punct('=') {
+        return None;
+    }
+    let mut k = start - 1;
+    let mut steps = 0usize;
+    while k > 0 && steps < 24 {
+        k -= 1;
+        steps += 1;
+        let tk = &t[k];
+        if tk.is_punct(';') || tk.is_punct('{') || tk.is_punct('}') {
+            return None;
+        }
+        if tk.is_ident("let") {
+            return None;
+        }
+        if let Some(id) = tk.ident() {
+            if id == "mut" {
+                continue;
+            }
+            if id.starts_with(char::is_uppercase) {
+                continue;
+            }
+            let path_seg = (k >= 2
+                && t[k - 1].is_punct(':')
+                && t[k - 2].is_punct(':'))
+                || (t.get(k + 1).map(|x| x.is_punct(':')).unwrap_or(false)
+                    && t.get(k + 2)
+                        .map(|x| x.is_punct(':'))
+                        .unwrap_or(false));
+            if path_seg {
+                continue;
+            }
+            return Some(id.to_string());
+        }
+    }
+    None
+}
+
+/// Resolve a normalized receiver/argument expression to a class index
+/// by its last segment (`self.shared` → `shared`).
+fn resolve(expr: &str, owners: &BTreeMap<String, usize>) -> Option<usize> {
+    expr.rsplit('.').next().and_then(|seg| owners.get(seg)).copied()
+}
+
+/// All top-level argument expressions of a call; `open` is the index
+/// of the `(`.
+fn call_args(t: &[Token], open: usize) -> Vec<String> {
+    let mut depth = 0usize;
+    let mut args: Vec<String> = Vec::new();
+    let mut cur: Vec<&Token> = Vec::new();
+    for token in t.iter().skip(open) {
+        if token.is_punct('(') {
+            depth += 1;
+            if depth == 1 {
+                continue;
+            }
+        } else if token.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if token.is_punct(',') && depth == 1 {
+            args.push(rules::expr_string(&cur));
+            cur.clear();
+            continue;
+        }
+        if depth >= 1 {
+            cur.push(token);
+        }
+    }
+    if !cur.is_empty() {
+        args.push(rules::expr_string(&cur));
+    }
+    args
+}
+
+/// Walk one function body, producing facts. `out` receives
+/// `unregistered-lock` findings for unresolvable acquisitions inside
+/// lock zones.
+fn scan_fn(
+    sf: &SourceFile,
+    item: &Item,
+    owners: &BTreeMap<String, usize>,
+    out: &mut Vec<Finding>,
+) -> FnFacts {
+    let t = &sf.tokens;
+    let zone = in_lock_zone(&sf.path);
+    let mut facts = FnFacts {
+        name: item.name.clone(),
+        file: sf.path.clone(),
+        site: format!("{}::{}", sf.path, item.name),
+        direct: Vec::new(),
+        nested: Vec::new(),
+        calls: Vec::new(),
+        waits: Vec::new(),
+    };
+    let mut live: Vec<Live> = Vec::new();
+    let mut depth = 0usize;
+    let mut i = item.body.0;
+    while i < item.body.1 {
+        // Skip nested fn items — they are walked as their own entries.
+        if t[i].is_ident("fn")
+            && t.get(i + 1).map(|x| x.ident().is_some()).unwrap_or(false)
+        {
+            if let Some((_, e)) = rules::body_range(t, i + 2) {
+                if e < item.body.1 {
+                    i = e + 1;
+                    continue;
+                }
+            }
+        }
+        if t[i].is_punct('{') {
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if t[i].is_punct('}') {
+            depth = depth.saturating_sub(1);
+            live.retain(|g| g.depth <= depth);
+            i += 1;
+            continue;
+        }
+        if t[i].is_punct(';') {
+            live.retain(|g| !(g.temp && g.depth == depth));
+            i += 1;
+            continue;
+        }
+        if sf.exempt[i] {
+            i += 1;
+            continue;
+        }
+        // `drop(name)` releases early.
+        if t[i].is_ident("drop")
+            && t.get(i + 1).map(|x| x.is_punct('(')).unwrap_or(false)
+            && t.get(i + 3).map(|x| x.is_punct(')')).unwrap_or(false)
+        {
+            if let Some(name) = t.get(i + 2).and_then(|x| x.ident()) {
+                live.retain(|g| g.binding.as_deref() != Some(name));
+            }
+            i += 1;
+            continue;
+        }
+        // Acquisition via helper call or `.lock(`.
+        let acq: Option<(usize, String, u32)> = if t[i]
+            .ident()
+            .map(|n| ACQUIRE_HELPERS.contains(&n))
+            .unwrap_or(false)
+            && t.get(i + 1).map(|x| x.is_punct('(')).unwrap_or(false)
+        {
+            Some((i, rules::first_arg_expr(t, i + 1), t[i].line))
+        } else if t[i].is_punct('.')
+            && t.get(i + 1).map(|x| x.is_ident("lock")).unwrap_or(false)
+            && t.get(i + 2).map(|x| x.is_punct('(')).unwrap_or(false)
+        {
+            let (start, expr) = rules::lock_receiver(t, i);
+            Some((start, expr, t[i + 1].line))
+        } else {
+            None
+        };
+        if let Some((start, expr, line)) = acq {
+            let class = resolve(&expr, owners);
+            if class.is_none() && zone && !expr.is_empty() {
+                out.push(
+                    Finding::new(
+                        "unregistered-lock",
+                        &sf.path,
+                        line,
+                        format!(
+                            "acquisition of `{expr}` resolves to no \
+                             registered lock class — wrap it in \
+                             `OrderedMutex` with a `classes` entry"
+                        ),
+                    )
+                    .with_symbol(Some(item.name.clone())),
+                );
+            }
+            if let Some(b) = class {
+                facts.direct.push((b, line));
+                for g in &live {
+                    if let Some(a) = g.class {
+                        facts.nested.push((a, b, line));
+                    }
+                }
+            }
+            let binding = binding_before(t, start);
+            live.push(Live {
+                temp: binding.is_none(),
+                binding,
+                class,
+                depth,
+            });
+            i += 1;
+            continue;
+        }
+        // Condvar waits: `cv.wait_timeout(guard, ..)` or the legacy
+        // `wait_timeout_or_poisoned(&cv, guard, ..)` helper.
+        let wait: Option<(String, Option<String>, u32)> = if t[i]
+            .is_punct('.')
+            && t.get(i + 1)
+                .map(|x| x.is_ident("wait_timeout"))
+                .unwrap_or(false)
+            && t.get(i + 2).map(|x| x.is_punct('(')).unwrap_or(false)
+        {
+            let (_, cv) = rules::lock_receiver(t, i);
+            let args = call_args(t, i + 2);
+            (!cv.is_empty()).then(|| {
+                (cv, args.first().cloned(), t[i + 1].line)
+            })
+        } else if t[i].is_ident("wait_timeout_or_poisoned")
+            && t.get(i + 1).map(|x| x.is_punct('(')).unwrap_or(false)
+        {
+            let args = call_args(t, i + 1);
+            args.first().cloned().map(|cv| {
+                (cv, args.get(1).cloned(), t[i].line)
+            })
+        } else {
+            None
+        };
+        if let Some((cv_expr, guard_expr, line)) = wait {
+            let guard_name = guard_expr
+                .as_deref()
+                .and_then(|e| e.rsplit('.').next())
+                .map(str::to_string);
+            let guard = guard_name.as_deref().and_then(|n| {
+                live.iter()
+                    .rev()
+                    .find(|g| g.binding.as_deref() == Some(n))
+            });
+            let guard_class = guard.and_then(|g| g.class);
+            let guard_resolved = guard.is_some();
+            let others = live
+                .iter()
+                .filter(|g| {
+                    g.binding.as_deref() != guard_name.as_deref()
+                })
+                .filter_map(|g| g.class)
+                .collect();
+            facts.waits.push(Wait {
+                cv_class: resolve(&cv_expr, owners),
+                cv_expr,
+                guard_class,
+                guard_resolved,
+                others,
+                line,
+            });
+            i += 1;
+            continue;
+        }
+        // Call site: `name(` in call position. Filtered against the
+        // crate fn table later; intrinsics never become edges.
+        if let Some(name) = t[i].ident() {
+            let dotted = i > 0 && t[i - 1].is_punct('.');
+            if t.get(i + 1).map(|x| x.is_punct('(')).unwrap_or(false)
+                && !INTRINSICS.contains(&name)
+                && !(dotted && DOTTED_EXCLUDE.contains(&name))
+                && !(i > 0 && t[i - 1].is_ident("fn"))
+            {
+                let held: Vec<usize> = {
+                    let mut h: Vec<usize> =
+                        live.iter().filter_map(|g| g.class).collect();
+                    h.dedup();
+                    h
+                };
+                facts.calls.push(CallSite {
+                    callee: name.to_string(),
+                    held,
+                    line: t[i].line,
+                });
+            }
+        }
+        i += 1;
+    }
+    facts
+}
+
+/// Flag raw `Mutex::new` / `Condvar::new` constructions inside lock
+/// zones — every lock there must carry a class.
+fn raw_ctor_scan(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_lock_zone(&sf.path) {
+        return;
+    }
+    let t = &sf.tokens;
+    for i in 0..t.len() {
+        if sf.exempt[i] {
+            continue;
+        }
+        let raw = (t[i].is_ident("Mutex") || t[i].is_ident("Condvar"))
+            && t.get(i + 1).map(|x| x.is_punct(':')).unwrap_or(false)
+            && t.get(i + 2).map(|x| x.is_punct(':')).unwrap_or(false)
+            && t.get(i + 3)
+                .map(|x| x.is_ident("new") || x.is_ident("default"))
+                .unwrap_or(false);
+        if raw {
+            out.push(
+                Finding::new(
+                    "unregistered-lock",
+                    &sf.path,
+                    t[i].line,
+                    format!(
+                        "raw `{}` constructed in a lock zone — use \
+                         `util::sync::Ordered{}` with a registered \
+                         class so the order checker sees it",
+                        t[i].ident().unwrap_or("?"),
+                        t[i].ident().unwrap_or("?"),
+                    ),
+                )
+                .with_symbol(enclosing(sf, t[i].line)),
+            );
+        }
+    }
+}
+
+/// Run the whole pass: returns the computed lock-order graph and
+/// pushes findings. The graph is what `--bless` records and
+/// [`check_graph`] compares.
+pub fn analyze(
+    sources: &[SourceFile],
+    out: &mut Vec<Finding>,
+) -> LockGraph {
+    let defs = class_defs(sources);
+    let owners = owner_map(sources, &defs, out);
+    for sf in sources {
+        raw_ctor_scan(sf, out);
+    }
+
+    let mut all_facts: Vec<FnFacts> = Vec::new();
+    for sf in sources {
+        for item in items(sf) {
+            if ACQUIRE_HELPERS.contains(&item.name.as_str())
+                || INTRINSICS.contains(&item.name.as_str())
+            {
+                continue;
+            }
+            all_facts.push(scan_fn(sf, &item, &owners, out));
+        }
+    }
+
+    // Call graph + may-acquire fixpoint, merged by bare fn name.
+    let mut direct: BTreeMap<&str, BTreeSet<usize>> = BTreeMap::new();
+    let mut callees: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for f in &all_facts {
+        let d = direct.entry(&f.name).or_default();
+        d.extend(f.direct.iter().map(|(c, _)| *c));
+        let cs = callees.entry(&f.name).or_default();
+        cs.extend(f.calls.iter().map(|c| c.callee.as_str()));
+    }
+    let mut may: BTreeMap<&str, BTreeSet<usize>> = direct.clone();
+    loop {
+        let mut grew = false;
+        for (name, cs) in &callees {
+            let mut add: BTreeSet<usize> = BTreeSet::new();
+            for callee in cs {
+                if let Some(m) = may.get(callee) {
+                    add.extend(m.iter().copied());
+                }
+            }
+            let cur = may.entry(*name).or_default();
+            let before = cur.len();
+            cur.extend(add);
+            grew |= cur.len() != before;
+        }
+        if !grew {
+            break;
+        }
+    }
+
+    // Findings + edges.
+    let mut graph = LockGraph {
+        classes: defs
+            .iter()
+            .map(|d| (d.ident.clone(), d.rank))
+            .collect(),
+        edges: BTreeMap::new(),
+    };
+    let mut add_edge = |graph: &mut LockGraph,
+                        a: usize,
+                        b: usize,
+                        kind: &str,
+                        site: &str| {
+        let key = (defs[a].ident.clone(), defs[b].ident.clone());
+        let e = graph.edges.entry(key).or_insert_with(|| Edge {
+            kind: kind.to_string(),
+            sites: BTreeSet::new(),
+        });
+        if kind == "direct" {
+            e.kind = "direct".to_string();
+        }
+        e.sites.insert(site.to_string());
+    };
+    for f in &all_facts {
+        for &(a, b, line) in &f.nested {
+            add_edge(&mut graph, a, b, "direct", &f.site);
+            if defs[b].rank <= defs[a].rank {
+                out.push(
+                    Finding::new(
+                        "lock-order",
+                        &f.file,
+                        line,
+                        format!(
+                            "`{}` (rank {}) acquired while `{}` \
+                             (rank {}) is held — lock ranks must \
+                             strictly increase",
+                            defs[b].ident,
+                            defs[b].rank,
+                            defs[a].ident,
+                            defs[a].rank,
+                        ),
+                    )
+                    .with_symbol(Some(f.name.clone())),
+                );
+            }
+        }
+        for call in &f.calls {
+            if call.held.is_empty()
+                || INTRINSICS.contains(&call.callee.as_str())
+            {
+                continue;
+            }
+            let Some(acq) = may.get(call.callee.as_str()) else {
+                continue;
+            };
+            for &a in &call.held {
+                for &b in acq {
+                    add_edge(&mut graph, a, b, "call", &f.site);
+                    if defs[b].rank <= defs[a].rank {
+                        out.push(
+                            Finding::new(
+                                "lock-across-call",
+                                &f.file,
+                                call.line,
+                                format!(
+                                    "call to `{}` may acquire `{}` \
+                                     (rank {}) while `{}` (rank {}) \
+                                     is held — release first or \
+                                     re-rank",
+                                    call.callee,
+                                    defs[b].ident,
+                                    defs[b].rank,
+                                    defs[a].ident,
+                                    defs[a].rank,
+                                ),
+                            )
+                            .with_symbol(Some(f.name.clone())),
+                        );
+                    }
+                }
+            }
+        }
+        for w in &f.waits {
+            let Some(cv) = w.cv_class else {
+                continue;
+            };
+            if w.guard_resolved {
+                if let Some(g) = w.guard_class {
+                    if g != cv {
+                        out.push(
+                            Finding::new(
+                                "condvar-class",
+                                &f.file,
+                                w.line,
+                                format!(
+                                    "waiting on condvar `{}` (class \
+                                     `{}`) with a guard of class \
+                                     `{}` — the wait would release \
+                                     the wrong lock",
+                                    w.cv_expr,
+                                    defs[cv].ident,
+                                    defs[g].ident,
+                                ),
+                            )
+                            .with_symbol(Some(f.name.clone())),
+                        );
+                    }
+                }
+            }
+            for &o in &w.others {
+                out.push(
+                    Finding::new(
+                        "condvar-class",
+                        &f.file,
+                        w.line,
+                        format!(
+                            "waiting on condvar `{}` while also \
+                             holding `{}` — the extra lock stays \
+                             held for the whole wait",
+                            w.cv_expr, defs[o].ident,
+                        ),
+                    )
+                    .with_symbol(Some(f.name.clone())),
+                );
+            }
+        }
+    }
+
+    cycle_findings(&graph, out);
+    graph
+}
+
+/// Detect strongly-connected components with more than one node (or a
+/// self-loop) in the class graph — each is a potential deadlock cycle.
+fn cycle_findings(graph: &LockGraph, out: &mut Vec<Finding>) {
+    let nodes: Vec<&str> =
+        graph.classes.keys().map(String::as_str).collect();
+    let succ = |n: &str| -> Vec<&str> {
+        graph
+            .edges
+            .keys()
+            .filter(|(f, _)| f == n)
+            .map(|(_, t)| t.as_str())
+            .collect()
+    };
+    // Iterative Kosaraju would be overkill for a handful of classes:
+    // a node is in a cycle iff it can reach itself.
+    let reaches = |from: &str, to: &str| -> bool {
+        let mut seen: BTreeSet<&str> = BTreeSet::new();
+        let mut stack = succ(from);
+        while let Some(n) = stack.pop() {
+            if n == to {
+                return true;
+            }
+            if seen.insert(n) {
+                stack.extend(succ(n));
+            }
+        }
+        false
+    };
+    let mut reported: BTreeSet<String> = BTreeSet::new();
+    for &n in &nodes {
+        if !reaches(n, n) {
+            continue;
+        }
+        // Every cycle member reaches n and vice versa; report the
+        // whole component once, keyed by its sorted member list.
+        let members: Vec<&str> = nodes
+            .iter()
+            .copied()
+            .filter(|&m| m == n || (reaches(n, m) && reaches(m, n)))
+            .collect();
+        let key = members.join(",");
+        if !reported.insert(key) {
+            continue;
+        }
+        let involved: Vec<String> = graph
+            .edges
+            .iter()
+            .filter(|((f, t), _)| {
+                members.contains(&f.as_str())
+                    && members.contains(&t.as_str())
+            })
+            .map(|((f, t), e)| {
+                format!(
+                    "{} -> {} ({})",
+                    f,
+                    t,
+                    e.sites
+                        .iter()
+                        .cloned()
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+            .collect();
+        let file = graph
+            .edges
+            .iter()
+            .find(|((f, _), _)| members.contains(&f.as_str()))
+            .and_then(|(_, e)| e.sites.iter().next())
+            .and_then(|s| s.split("::").next())
+            .unwrap_or("")
+            .to_string();
+        out.push(Finding::new(
+            "lock-cycle",
+            &file,
+            0,
+            format!(
+                "lock-order inversion cycle between {{{}}}: {} — \
+                 threads taking these in different orders deadlock",
+                members.join(", "),
+                involved.join("; "),
+            ),
+        ));
+    }
+}
+
+impl LockGraph {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert(
+            "classes".into(),
+            Json::Obj(
+                self.classes
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                    .collect(),
+            ),
+        );
+        let edges = self
+            .edges
+            .iter()
+            .map(|((from, to), e)| {
+                let mut eo = BTreeMap::new();
+                eo.insert("from".into(), Json::Str(from.clone()));
+                eo.insert("to".into(), Json::Str(to.clone()));
+                eo.insert("kind".into(), Json::Str(e.kind.clone()));
+                eo.insert(
+                    "sites".into(),
+                    Json::Arr(
+                        e.sites
+                            .iter()
+                            .map(|s| Json::Str(s.clone()))
+                            .collect(),
+                    ),
+                );
+                Json::Obj(eo)
+            })
+            .collect();
+        o.insert("edges".into(), Json::Arr(edges));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<LockGraph> {
+        let mut classes = BTreeMap::new();
+        for (k, v) in j
+            .get("classes")
+            .and_then(|c| c.as_obj())
+            .ok_or_else(|| anyhow!("lock graph missing `classes`"))?
+        {
+            classes.insert(
+                k.clone(),
+                v.as_u64().map(|r| r as u32).ok_or_else(|| {
+                    anyhow!("lock graph class `{k}` rank not an integer")
+                })?,
+            );
+        }
+        let mut edges = BTreeMap::new();
+        for e in j
+            .get("edges")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow!("lock graph missing `edges`"))?
+        {
+            let s = |k: &str| -> Result<String> {
+                Ok(e.get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| {
+                        anyhow!("lock graph edge missing `{k}`")
+                    })?
+                    .to_string())
+            };
+            let sites = e
+                .get("sites")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("lock graph edge missing `sites`"))?
+                .iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect();
+            edges.insert(
+                (s("from")?, s("to")?),
+                Edge { kind: s("kind")?, sites },
+            );
+        }
+        Ok(LockGraph { classes, edges })
+    }
+}
+
+/// Manifest label used for `lock-graph` findings (relative, stable).
+const GRAPH_LABEL: &str = "tools/lint/lock.graph.json";
+
+/// Compare the computed graph against the blessed manifest. Every
+/// difference — a new edge, a vanished edge, a class change — is a
+/// `lock-graph` finding: new lock orderings only land via an explicit,
+/// reviewed `--bless` diff.
+pub fn check_graph(
+    manifest: &Path,
+    graph: &LockGraph,
+    out: &mut Vec<Finding>,
+) -> Result<()> {
+    let text = match std::fs::read_to_string(manifest) {
+        Ok(t) => t,
+        Err(_) => {
+            out.push(Finding::new(
+                "lock-graph",
+                GRAPH_LABEL,
+                0,
+                "lock-order graph manifest missing — run \
+                 `pallas-lint --bless` and commit it"
+                    .to_string(),
+            ));
+            return Ok(());
+        }
+    };
+    let recorded = LockGraph::from_json(
+        &json::parse(&text)
+            .map_err(|e| anyhow!("parsing lock graph manifest: {e}"))?,
+    )?;
+    if recorded.classes != graph.classes {
+        let describe = |m: &BTreeMap<String, u32>| {
+            m.iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        out.push(Finding::new(
+            "lock-graph",
+            GRAPH_LABEL,
+            0,
+            format!(
+                "lock classes changed: recorded [{}], current [{}] — \
+                 review the ranks and run `pallas-lint --bless`",
+                describe(&recorded.classes),
+                describe(&graph.classes),
+            ),
+        ));
+    }
+    for ((from, to), e) in &graph.edges {
+        match recorded.edges.get(&(from.clone(), to.clone())) {
+            None => out.push(Finding::new(
+                "lock-graph",
+                GRAPH_LABEL,
+                0,
+                format!(
+                    "new lock-order edge {from} -> {to} ({}, via {}) \
+                     — review the ordering and run `pallas-lint \
+                     --bless`",
+                    e.kind,
+                    e.sites
+                        .iter()
+                        .cloned()
+                        .collect::<Vec<_>>()
+                        .join(", "),
+                ),
+            )),
+            Some(r) if r != e => out.push(Finding::new(
+                "lock-graph",
+                GRAPH_LABEL,
+                0,
+                format!(
+                    "lock-order edge {from} -> {to} changed (kind or \
+                     sites) — run `pallas-lint --bless` to re-record"
+                ),
+            )),
+            Some(_) => {}
+        }
+    }
+    for (from, to) in recorded.edges.keys() {
+        if !graph.edges.contains_key(&(from.clone(), to.clone())) {
+            out.push(Finding::new(
+                "lock-graph",
+                GRAPH_LABEL,
+                0,
+                format!(
+                    "recorded lock-order edge {from} -> {to} no \
+                     longer observed — run `pallas-lint --bless` to \
+                     shrink the graph"
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Write the computed graph as the blessed manifest.
+pub fn write_graph(manifest: &Path, graph: &LockGraph) -> Result<String> {
+    if let Some(dir) = manifest.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    let mut body = graph.to_json().to_string_pretty();
+    body.push('\n');
+    std::fs::write(manifest, body)
+        .with_context(|| format!("writing {}", manifest.display()))?;
+    Ok(format!("lock graph written: {}", manifest.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const REG: &str = "
+pub struct LockClass { pub name: &'static str, pub rank: u32 }
+pub mod classes {
+    pub static ALPHA: LockClass =
+        LockClass { name: \"alpha\", rank: 10 };
+    pub static BETA: LockClass =
+        LockClass { name: \"beta\", rank: 20 };
+}
+";
+
+    fn run(files: &[(&str, &str)]) -> (Vec<Finding>, LockGraph) {
+        let mut sources =
+            vec![SourceFile::parse("rust/src/util/sync.rs", REG)];
+        for (path, src) in files {
+            sources.push(SourceFile::parse(path, src));
+        }
+        let mut out = Vec::new();
+        let graph = analyze(&sources, &mut out);
+        (out, graph)
+    }
+
+    fn rules_of(f: &[Finding]) -> Vec<&'static str> {
+        f.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn registry_and_owner_map_extracted() {
+        let src = "
+struct S { a: OrderedMutex<u32>, b: OrderedMutex<u32> }
+fn build() -> S {
+    S { a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0) }
+}
+fn ordered(s: &S) {
+    let ga = s.a.lock();
+    let gb = s.b.lock();
+}
+";
+        let (f, g) = run(&[("rust/src/adios/sst/x.rs", src)]);
+        assert_eq!(rules_of(&f), Vec::<&str>::new());
+        assert_eq!(g.classes.get("ALPHA"), Some(&10));
+        assert_eq!(g.classes.get("BETA"), Some(&20));
+        let e = g
+            .edges
+            .get(&("ALPHA".to_string(), "BETA".to_string()))
+            .expect("direct edge recorded");
+        assert_eq!(e.kind, "direct");
+        assert!(e
+            .sites
+            .contains("rust/src/adios/sst/x.rs::ordered"));
+    }
+
+    #[test]
+    fn inversion_is_lock_order_and_cycle() {
+        let src = "
+struct S { a: OrderedMutex<u32>, b: OrderedMutex<u32> }
+fn build() -> S {
+    S { a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0) }
+}
+fn good(s: &S) { let ga = s.a.lock(); let gb = s.b.lock(); }
+fn bad(s: &S) { let gb = s.b.lock(); let ga = s.a.lock(); }
+";
+        let (f, g) = run(&[("rust/src/adios/sst/x.rs", src)]);
+        let mut r = rules_of(&f);
+        r.sort();
+        assert_eq!(r, ["lock-cycle", "lock-order"]);
+        let order = f.iter().find(|x| x.rule == "lock-order").unwrap();
+        assert_eq!(order.symbol.as_deref(), Some("bad"));
+        assert!(g
+            .edges
+            .contains_key(&("BETA".to_string(), "ALPHA".to_string())));
+    }
+
+    #[test]
+    fn guard_drop_ends_the_nesting() {
+        let src = "
+struct S { a: OrderedMutex<u32>, b: OrderedMutex<u32> }
+fn build() -> S {
+    S { a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0) }
+}
+fn f(s: &S) {
+    let gb = s.b.lock();
+    drop(gb);
+    let ga = s.a.lock();
+}
+fn scoped(s: &S) {
+    { let gb = s.b.lock(); }
+    let ga = s.a.lock();
+}
+";
+        let (f, g) = run(&[("rust/src/adios/sst/x.rs", src)]);
+        assert_eq!(rules_of(&f), Vec::<&str>::new());
+        assert!(g.edges.is_empty());
+    }
+
+    #[test]
+    fn interprocedural_acquisition_via_call_edge() {
+        let src = "
+struct S { a: OrderedMutex<u32>, b: OrderedMutex<u32> }
+fn build() -> S {
+    S { a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0) }
+}
+fn takes_alpha(s: &S) { let ga = s.a.lock(); }
+fn outer(s: &S) {
+    let gb = s.b.lock();
+    takes_alpha(s);
+}
+";
+        let (f, g) = run(&[("rust/src/adios/sst/x.rs", src)]);
+        assert_eq!(rules_of(&f), ["lock-across-call", "lock-cycle"]);
+        let e = g
+            .edges
+            .get(&("BETA".to_string(), "ALPHA".to_string()))
+            .expect("call edge");
+        assert_eq!(e.kind, "call");
+        assert!(e.sites.contains("rust/src/adios/sst/x.rs::outer"));
+        // The rank-respecting direction draws no finding.
+        let ok = "
+struct S { a: OrderedMutex<u32>, b: OrderedMutex<u32> }
+fn build() -> S {
+    S { a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0) }
+}
+fn takes_beta(s: &S) { let gb = s.b.lock(); }
+fn outer(s: &S) {
+    let ga = s.a.lock();
+    takes_beta(s);
+}
+";
+        let (f, g) = run(&[("rust/src/adios/sst/x.rs", ok)]);
+        assert_eq!(rules_of(&f), Vec::<&str>::new());
+        assert_eq!(
+            g.edges
+                .get(&("ALPHA".to_string(), "BETA".to_string()))
+                .map(|e| e.kind.as_str()),
+            Some("call")
+        );
+    }
+
+    #[test]
+    fn std_shadowing_method_calls_draw_no_edge() {
+        // `fn get` stands in for `Engine::get`: a crate function whose
+        // name collides with the ubiquitous container method. Calling
+        // `.get(..)` on guarded data must not link to it; a free call
+        // of the same name still does.
+        let src = "
+struct S { a: OrderedMutex<u32>, b: OrderedMutex<u32> }
+fn build() -> S {
+    S { a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0) }
+}
+fn get(s: &S) { let ga = s.a.lock(); }
+fn method_position(s: &S) {
+    let gb = s.b.lock();
+    let hit = gb.get(7);
+}
+";
+        let (f, g) = run(&[("rust/src/adios/sst/x.rs", src)]);
+        assert_eq!(rules_of(&f), Vec::<&str>::new());
+        assert!(g.edges.is_empty());
+
+        let free = "
+struct S { a: OrderedMutex<u32>, b: OrderedMutex<u32> }
+fn build() -> S {
+    S { a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0) }
+}
+fn get(s: &S) { let ga = s.a.lock(); }
+fn free_position(s: &S) {
+    let gb = s.b.lock();
+    get(s);
+}
+";
+        let (f, g) = run(&[("rust/src/adios/sst/x.rs", free)]);
+        assert_eq!(rules_of(&f), ["lock-across-call", "lock-cycle"]);
+        assert!(g
+            .edges
+            .contains_key(&("BETA".to_string(), "ALPHA".to_string())));
+    }
+
+    #[test]
+    fn condvar_wrong_class_and_extra_guard_flagged() {
+        let src = "
+struct S { a: OrderedMutex<u32>, b: OrderedMutex<u32>,
+           cv: OrderedCondvar }
+fn build() -> S {
+    S { a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0),
+        cv: OrderedCondvar::new(&classes::BETA) }
+}
+fn wrong(s: &S) {
+    let ga = s.a.lock();
+    let r = s.cv.wait_timeout(ga, timeout);
+}
+";
+        let (f, _) = run(&[("rust/src/adios/sst/x.rs", src)]);
+        assert_eq!(rules_of(&f), ["condvar-class"]);
+        assert!(f[0].message.contains("wrong lock"), "{}", f[0].message);
+
+        let extra = "
+struct S { a: OrderedMutex<u32>, b: OrderedMutex<u32>,
+           cv: OrderedCondvar }
+fn build() -> S {
+    S { a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0),
+        cv: OrderedCondvar::new(&classes::BETA) }
+}
+fn holds_extra(s: &S) {
+    let ga = s.a.lock();
+    let gb = s.b.lock();
+    let r = s.cv.wait_timeout(gb, timeout);
+}
+";
+        let (f, _) = run(&[("rust/src/adios/sst/x.rs", extra)]);
+        assert_eq!(rules_of(&f), ["condvar-class"]);
+        assert!(f[0].message.contains("also"), "{}", f[0].message);
+
+        let ok = "
+struct S { b: OrderedMutex<u32>, cv: OrderedCondvar }
+fn build() -> S {
+    S { b: OrderedMutex::new(&classes::BETA, 0),
+        cv: OrderedCondvar::new(&classes::BETA) }
+}
+fn fine(s: &S) {
+    let gb = s.b.lock();
+    let r = s.cv.wait_timeout(gb, timeout);
+}
+";
+        let (f, _) = run(&[("rust/src/adios/sst/x.rs", ok)]);
+        assert_eq!(rules_of(&f), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn unregistered_locks_flagged_in_zones_only() {
+        let src = "
+fn f() {
+    let m = Mutex::new(0);
+    let g = m.lock();
+}
+";
+        let (f, _) = run(&[("rust/src/adios/sst/x.rs", src)]);
+        let r = rules_of(&f);
+        assert_eq!(r, ["unregistered-lock", "unregistered-lock"]);
+        // Outside a lock zone the same code is silent.
+        let (f, _) = run(&[("rust/src/util/stats.rs", src)]);
+        assert_eq!(rules_of(&f), Vec::<&str>::new());
+        // Test code inside a zone is exempt.
+        let test_src = "#[cfg(test)]\nmod t {\nfn f() {\n    \
+                        let m = Mutex::new(0);\n    \
+                        let g = m.lock();\n}\n}\n";
+        let (f, _) = run(&[("rust/src/adios/sst/x.rs", test_src)]);
+        assert_eq!(rules_of(&f), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn graph_round_trips_and_drift_is_found() {
+        let src = "
+struct S { a: OrderedMutex<u32>, b: OrderedMutex<u32> }
+fn build() -> S {
+    S { a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0) }
+}
+fn ordered(s: &S) { let ga = s.a.lock(); let gb = s.b.lock(); }
+";
+        let (_, g) = run(&[("rust/src/adios/sst/x.rs", src)]);
+        let back = LockGraph::from_json(
+            &json::parse(&g.to_json().to_string_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, g);
+
+        let dir = std::env::temp_dir().join(format!(
+            "pallas-lint-lg-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = dir.join("lock.graph.json");
+
+        // Missing manifest is a finding, not an error.
+        let mut f = Vec::new();
+        check_graph(&manifest, &g, &mut f).unwrap();
+        assert_eq!(rules_of(&f), ["lock-graph"]);
+        assert!(f[0].message.contains("--bless"));
+
+        // Blessed graph checks clean.
+        write_graph(&manifest, &g).unwrap();
+        let mut f = Vec::new();
+        check_graph(&manifest, &g, &mut f).unwrap();
+        assert_eq!(rules_of(&f), Vec::<&str>::new());
+
+        // A grown edge without re-blessing is drift.
+        let mut grown = LockGraph {
+            classes: g.classes.clone(),
+            edges: g.edges.clone(),
+        };
+        grown.edges.insert(
+            ("BETA".into(), "ALPHA".into()),
+            Edge {
+                kind: "direct".into(),
+                sites: ["x.rs::f".to_string()].into_iter().collect(),
+            },
+        );
+        let mut f = Vec::new();
+        check_graph(&manifest, &grown, &mut f).unwrap();
+        assert_eq!(rules_of(&f), ["lock-graph"]);
+        assert!(f[0].message.contains("new lock-order edge"));
+
+        // A vanished edge is drift too (shrink must re-bless).
+        let empty = LockGraph {
+            classes: g.classes.clone(),
+            edges: BTreeMap::new(),
+        };
+        let mut f = Vec::new();
+        check_graph(&manifest, &empty, &mut f).unwrap();
+        assert_eq!(rules_of(&f), ["lock-graph"]);
+        assert!(f[0].message.contains("no longer observed"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn let_else_and_match_bindings_resolve() {
+        let src = "
+struct S { a: OrderedMutex<u32>, b: OrderedMutex<u32> }
+fn build() -> S {
+    S { a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0) }
+}
+fn f(s: &S) {
+    let Some(mut gb) = lock_or_warn(&s.b, \"b\") else { return };
+    let ga = s.a.lock();
+}
+";
+        let (f, _) = run(&[("rust/src/adios/sst/x.rs", src)]);
+        let mut r = rules_of(&f);
+        r.sort();
+        assert_eq!(r, ["lock-cycle", "lock-order"]);
+    }
+}

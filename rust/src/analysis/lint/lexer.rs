@@ -16,6 +16,10 @@
 #[derive(Clone, Debug, PartialEq)]
 pub struct Token {
     pub line: u32,
+    /// Byte offset of the token's first byte in the source text.
+    /// Strictly increasing across the token stream, which the
+    /// concurrency pass relies on to order items within a file.
+    pub pos: usize,
     pub kind: TokKind,
 }
 
@@ -151,14 +155,15 @@ pub fn lex(src: &str) -> Lexed {
                 i = j;
             }
             b'"' => {
+                let pos = i;
                 i = skip_string(b, i, &mut line, &mut line_start);
-                out.tokens.push(Token { line, kind: TokKind::Str });
+                out.tokens.push(Token { line, pos, kind: TokKind::Str });
             }
             b'\'' => {
                 // Lifetime or char literal.
                 let (next, kind) =
                     lex_quote(b, i, &mut line, &mut line_start);
-                out.tokens.push(Token { line, kind });
+                out.tokens.push(Token { line, pos: i, kind });
                 i = next;
             }
             _ if c == b'r' || c == b'b' => {
@@ -166,7 +171,11 @@ pub fn lex(src: &str) -> Lexed {
                 if let Some(next) =
                     try_prefixed_string(b, i, &mut line, &mut line_start)
                 {
-                    out.tokens.push(Token { line, kind: TokKind::Str });
+                    out.tokens.push(Token {
+                        line,
+                        pos: i,
+                        kind: TokKind::Str,
+                    });
                     i = next;
                 } else {
                     i = lex_ident(src, b, i, line, &mut out.tokens);
@@ -203,6 +212,7 @@ pub fn lex(src: &str) -> Lexed {
                 }
                 out.tokens.push(Token {
                     line,
+                    pos: start,
                     kind: TokKind::Num(src[start..j].to_string()),
                 });
                 i = j;
@@ -211,6 +221,7 @@ pub fn lex(src: &str) -> Lexed {
                 if c.is_ascii() {
                     out.tokens.push(Token {
                         line,
+                        pos: i,
                         kind: TokKind::Punct(c as char),
                     });
                     i += 1;
@@ -243,6 +254,7 @@ fn lex_ident(
     }
     tokens.push(Token {
         line,
+        pos: start,
         kind: TokKind::Ident(src[start..j].to_string()),
     });
     j
@@ -392,7 +404,11 @@ mod tests {
         let l = lex("let x = 1;\nfoo.bar();\n");
         assert_eq!(
             l.tokens[0],
-            Token { line: 1, kind: TokKind::Ident("let".into()) }
+            Token {
+                line: 1,
+                pos: 0,
+                kind: TokKind::Ident("let".into()),
+            }
         );
         let bar = l
             .tokens
@@ -400,6 +416,21 @@ mod tests {
             .find(|t| t.is_ident("bar"))
             .expect("bar lexed");
         assert_eq!(bar.line, 2);
+        assert_eq!(bar.pos, 15);
+    }
+
+    #[test]
+    fn byte_offsets_are_strictly_monotone() {
+        let src = "fn f<'a>(x: &'a str) { let s = \"q\"; a[0] = 'x'; }";
+        let l = lex(src);
+        let mut last = None;
+        for t in &l.tokens {
+            assert!(t.pos < src.len());
+            if let Some(p) = last {
+                assert!(t.pos > p, "offsets regressed: {} -> {}", p, t.pos);
+            }
+            last = Some(t.pos);
+        }
     }
 
     #[test]

@@ -36,6 +36,16 @@
 //! code), and the wire/BP format fingerprint must match the committed
 //! manifest (`format-fingerprint`, see [`fingerprint`]).
 //!
+//! **Interprocedural concurrency** (see [`concurrency`]): a crate-wide
+//! pass resolves every `OrderedMutex`/`OrderedCondvar` to its
+//! registered lock class, tracks live guards through call edges, and
+//! builds the lock-order graph. Rank inversions (`lock-order`), calls
+//! that may transitively acquire out of order while a guard is held
+//! (`lock-across-call`), deadlock cycles (`lock-cycle`), `Condvar`
+//! waits with the wrong guard class (`condvar-class`), classless locks
+//! in lock zones (`unregistered-lock`), and drift against the blessed
+//! `tools/lint/lock.graph.json` (`lock-graph`) are findings.
+//!
 //! ## Waiver grammar
 //!
 //! A finding is waived by an inline comment directive on the same line,
@@ -52,6 +62,7 @@
 //! committed budget in `tools/lint/waivers.ledger`; the budget can only
 //! shrink (see [`waivers`]).
 
+pub mod concurrency;
 pub mod fingerprint;
 pub mod lexer;
 pub mod rules;
@@ -76,6 +87,12 @@ pub const RULES: &[&str] = &[
     "performgets-discipline",
     "allow-escape",
     "format-fingerprint",
+    "lock-order",
+    "lock-cycle",
+    "lock-across-call",
+    "condvar-class",
+    "unregistered-lock",
+    "lock-graph",
 ];
 
 /// Panic-freedom zones, as paths relative to the repository root.
@@ -87,7 +104,9 @@ pub const HARDENED_ZONES: &[&str] = &[
     "rust/src/adios/bp.rs",
     "rust/src/adios/sst/",
     "rust/src/adios/multiplex.rs",
+    "rust/src/adios/transport.rs",
     "rust/src/pipeline/",
+    "rust/src/util/sync.rs",
 ];
 
 /// Is `rel` (repo-relative, `/`-separated) inside a hardened zone?
@@ -114,6 +133,9 @@ pub struct Finding {
     pub message: String,
     /// The waiver reason when an inline directive covers this finding.
     pub waived: Option<String>,
+    /// Enclosing `fn` name, when known — part of the stable finding ID
+    /// so CI artifact diffs don't churn on unrelated line shifts.
+    pub symbol: Option<String>,
 }
 
 impl Finding {
@@ -123,7 +145,19 @@ impl Finding {
         line: u32,
         message: String,
     ) -> Finding {
-        Finding { rule, file: file.to_string(), line, message, waived: None }
+        Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            message,
+            waived: None,
+            symbol: None,
+        }
+    }
+
+    pub fn with_symbol(mut self, symbol: Option<String>) -> Finding {
+        self.symbol = symbol;
+        self
     }
 }
 
@@ -286,15 +320,38 @@ impl Report {
     }
 
     /// Machine-readable report (consumed by the CI artifact).
+    ///
+    /// Each finding carries a stable `id` built from rule, file, and
+    /// enclosing symbol — NOT the line number — with a per-key ordinal
+    /// to disambiguate repeats. Unrelated edits that only shift lines
+    /// leave the IDs unchanged, so CI artifact diffs across PRs show
+    /// real churn only.
     pub fn to_json(&self) -> Json {
+        let mut ordinals: BTreeMap<String, usize> = BTreeMap::new();
         let findings = self
             .findings
             .iter()
             .map(|f| {
+                let key = format!(
+                    "{}@{}::{}",
+                    f.rule,
+                    f.file,
+                    f.symbol.as_deref().unwrap_or("-")
+                );
+                let k = ordinals.entry(key.clone()).or_insert(0);
+                *k += 1;
                 let mut o = BTreeMap::new();
+                o.insert("id".into(), Json::Str(format!("{key}#{k}")));
                 o.insert("rule".into(), Json::Str(f.rule.into()));
                 o.insert("file".into(), Json::Str(f.file.clone()));
                 o.insert("line".into(), Json::Num(f.line as f64));
+                o.insert(
+                    "symbol".into(),
+                    match &f.symbol {
+                        Some(s) => Json::Str(s.clone()),
+                        None => Json::Null,
+                    },
+                );
                 o.insert("message".into(), Json::Str(f.message.clone()));
                 o.insert(
                     "waived".into(),
@@ -339,6 +396,9 @@ pub struct LintOptions {
     pub manifest: Option<PathBuf>,
     /// Waiver-budget ledger; `None` skips budget enforcement.
     pub ledger: Option<PathBuf>,
+    /// Blessed lock-order graph; `None` skips the drift check (the
+    /// concurrency pass itself always runs).
+    pub lock_graph: Option<PathBuf>,
 }
 
 impl LintOptions {
@@ -348,6 +408,7 @@ impl LintOptions {
         LintOptions {
             manifest: Some(root.join("tools/lint/format.fingerprint.json")),
             ledger: Some(root.join("tools/lint/waivers.ledger")),
+            lock_graph: Some(root.join("tools/lint/lock.graph.json")),
             root,
         }
     }
@@ -361,13 +422,35 @@ pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
     let mut sf = SourceFile::parse(path, src);
     let mut findings = Vec::new();
     rules::check_all(&sf, &mut findings);
+    annotate_symbols(&sf, &mut findings);
     apply_waivers(&mut sf, &mut findings);
     findings
 }
 
+/// Attach the innermost enclosing `fn` name to every finding of `sf`
+/// that doesn't carry one yet (line-level findings only).
+fn annotate_symbols(sf: &SourceFile, findings: &mut [Finding]) {
+    let spans = concurrency::fn_spans(sf);
+    for f in findings.iter_mut() {
+        if f.symbol.is_some() || f.line == 0 || f.file != sf.path {
+            continue;
+        }
+        let mut best: Option<&(String, u32, u32)> = None;
+        for s in &spans {
+            if s.1 <= f.line && f.line <= s.2 {
+                // Innermost wins: later/greater start line is deeper.
+                if best.map(|b| s.1 >= b.1).unwrap_or(true) {
+                    best = Some(s);
+                }
+            }
+        }
+        f.symbol = best.map(|s| s.0.clone());
+    }
+}
+
 fn apply_waivers(sf: &mut SourceFile, findings: &mut Vec<Finding>) {
     for f in findings.iter_mut() {
-        if f.waived.is_some() {
+        if f.waived.is_some() || f.file != sf.path {
             continue;
         }
         if let Some(a) = sf
@@ -424,25 +507,48 @@ fn collect_sources(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
     Ok(())
 }
 
-/// Run the full lint over the repository at `opts.root`.
-pub fn run(opts: &LintOptions) -> Result<Report> {
+/// Parse every `.rs` source under `rust/src/` and `tools/` into
+/// [`SourceFile`]s (repo-relative `/`-separated paths).
+fn parse_sources(root: &Path) -> Result<Vec<SourceFile>> {
     let mut files = Vec::new();
     for sub in ["rust/src", "tools"] {
-        let dir = opts.root.join(sub);
+        let dir = root.join(sub);
         if dir.is_dir() {
             collect_sources(&dir, &mut files)?;
         }
     }
-    let mut findings = Vec::new();
+    let mut sources = Vec::with_capacity(files.len());
     for path in &files {
         let rel = path
-            .strip_prefix(&opts.root)
+            .strip_prefix(root)
             .unwrap_or(path)
             .to_string_lossy()
             .replace('\\', "/");
         let src = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        findings.extend(lint_source(&rel, &src));
+        sources.push(SourceFile::parse(&rel, &src));
+    }
+    Ok(sources)
+}
+
+/// Run the full lint over the repository at `opts.root`: per-file
+/// rules, then the crate-wide concurrency pass, then the manifest
+/// checks and waiver/budget accounting.
+pub fn run(opts: &LintOptions) -> Result<Report> {
+    let mut sources = parse_sources(&opts.root)?;
+    let mut findings = Vec::new();
+    for sf in &sources {
+        rules::check_all(sf, &mut findings);
+    }
+    let graph = concurrency::analyze(&sources, &mut findings);
+    if let Some(lock_graph) = &opts.lock_graph {
+        concurrency::check_graph(lock_graph, &graph, &mut findings)?;
+    }
+    for sf in &sources {
+        annotate_symbols(sf, &mut findings);
+    }
+    for sf in sources.iter_mut() {
+        apply_waivers(sf, &mut findings);
     }
     if let Some(manifest) = &opts.manifest {
         fingerprint::check(&opts.root, manifest, &mut findings)?;
@@ -454,7 +560,21 @@ pub fn run(opts: &LintOptions) -> Result<Report> {
         (a.file.as_str(), a.line, a.rule)
             .cmp(&(b.file.as_str(), b.line, b.rule))
     });
-    Ok(Report { findings, files_scanned: files.len() })
+    Ok(Report { findings, files_scanned: sources.len() })
+}
+
+/// Recompute the crate's lock-order graph and write it as the blessed
+/// manifest (the `--bless` path). Findings from the analysis itself are
+/// discarded here — `run` reports them; blessing only records the
+/// observed graph.
+pub fn bless_lock_graph(opts: &LintOptions) -> Result<String> {
+    let sources = parse_sources(&opts.root)?;
+    let mut sink = Vec::new();
+    let graph = concurrency::analyze(&sources, &mut sink);
+    let manifest = opts.lock_graph.clone().unwrap_or_else(|| {
+        opts.root.join("tools/lint/lock.graph.json")
+    });
+    concurrency::write_graph(&manifest, &graph)
 }
 
 #[cfg(test)]

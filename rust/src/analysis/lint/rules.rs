@@ -201,7 +201,7 @@ struct LiveGuard {
 
 /// Normalize a run of expression tokens to `ident.ident...` (drops
 /// `&`, `mut`, `*`, `::`).
-fn expr_string(toks: &[&Token]) -> String {
+pub(super) fn expr_string(toks: &[&Token]) -> String {
     toks.iter()
         .filter_map(|t| t.ident())
         .filter(|s| *s != "mut")
@@ -211,7 +211,7 @@ fn expr_string(toks: &[&Token]) -> String {
 
 /// Walk back from the `.` of `.lock(` over the receiver chain
 /// (`self.shared.lock()` → start index of `self`, "self.shared").
-fn lock_receiver(t: &[Token], dot: usize) -> (usize, String) {
+pub(super) fn lock_receiver(t: &[Token], dot: usize) -> (usize, String) {
     let mut k = dot;
     loop {
         if k == 0 {
@@ -239,7 +239,7 @@ fn lock_receiver(t: &[Token], dot: usize) -> (usize, String) {
 
 /// First argument of `lock_or_poisoned(...)` as a normalized
 /// expression; `open` is the index of the `(`.
-fn first_arg_expr(t: &[Token], open: usize) -> String {
+pub(super) fn first_arg_expr(t: &[Token], open: usize) -> String {
     let mut depth = 0usize;
     let mut arg: Vec<&Token> = Vec::new();
     for token in t.iter().skip(open) {

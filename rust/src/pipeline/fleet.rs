@@ -65,7 +65,7 @@
 //! seconds and the max/mean imbalance that bounds fleet speedup.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
@@ -76,7 +76,7 @@ use crate::distribution::{
     verify_complete, Assignment, ChunkTable, ReaderLayout, Strategy,
 };
 use crate::openpmd::chunk::Chunk;
-use crate::util::sync::lock_or_poisoned;
+use crate::util::sync::{classes, OrderedMutex};
 
 use super::metrics::FleetReport;
 use super::pipe::{
@@ -151,7 +151,7 @@ pub(crate) struct SharedPlanner {
     strategy: Arc<dyn Strategy>,
     layout: ReaderLayout,
     readers: usize,
-    plans: Mutex<BTreeMap<(u64, String), PlanEntry>>,
+    plans: OrderedMutex<BTreeMap<(u64, String), PlanEntry>>,
 }
 
 impl SharedPlanner {
@@ -164,13 +164,18 @@ impl SharedPlanner {
             strategy,
             layout,
             readers,
-            plans: Mutex::new(BTreeMap::new()),
+            plans: OrderedMutex::new(
+                &classes::FLEET_PLANNER,
+                BTreeMap::new(),
+            ),
         }
     }
 
     /// Worker `rank`'s slices of `var` in `step`: compute the step
     /// plan on first arrival, reuse it afterwards, prune on last use.
-    fn slices(
+    /// (Named apart from the lock-free `Assignment::slices` it calls
+    /// under its own guard.)
+    fn take_slices(
         &self,
         rank: usize,
         step: u64,
@@ -179,7 +184,7 @@ impl SharedPlanner {
     ) -> Result<Vec<Chunk>> {
         use std::collections::btree_map::Entry;
         let key = (step, var.name.clone());
-        let mut plans = lock_or_poisoned(&self.plans, "fleet planner")?;
+        let mut plans = self.plans.lock()?;
         let entry = match plans.entry(key.clone()) {
             Entry::Occupied(entry) => entry.into_mut(),
             Entry::Vacant(slot) => {
@@ -236,7 +241,7 @@ impl StepPlan for FleetPlan {
         var: &VarInfo,
         table: &ChunkTable,
     ) -> Result<Vec<Chunk>> {
-        self.shared.slices(self.rank, step, var, table)
+        self.shared.take_slices(self.rank, step, var, table)
     }
 }
 
@@ -453,9 +458,9 @@ mod tests {
         let layout = ReaderLayout::local(2).unwrap();
         let planner = SharedPlanner::new(Arc::new(RoundRobin), layout);
         let (v, t) = (var(), table());
-        let s0 = planner.slices(0, 7, &v, &t).unwrap();
+        let s0 = planner.take_slices(0, 7, &v, &t).unwrap();
         assert_eq!(planner.cached(), 1, "entry must persist for rank 1");
-        let s1 = planner.slices(1, 7, &v, &t).unwrap();
+        let s1 = planner.take_slices(1, 7, &v, &t).unwrap();
         assert_eq!(planner.cached(), 0, "entry must be pruned after all \
                                          ranks took their share");
         // Disjoint + complete union.
@@ -474,8 +479,8 @@ mod tests {
         let planner =
             SharedPlanner::new(Arc::new(LoadBalanced), layout.clone());
         let (v, t) = (var(), table());
-        let s1 = planner.slices(1, 0, &v, &t).unwrap();
-        let s0 = planner.slices(0, 0, &v, &t).unwrap();
+        let s1 = planner.take_slices(1, 0, &v, &t).unwrap();
+        let s0 = planner.take_slices(0, 0, &v, &t).unwrap();
         let direct = LoadBalanced.distribute(&t, &layout);
         let want = |r: usize| -> Vec<Chunk> {
             direct.slices(r).iter().map(|s| s.chunk.clone()).collect()

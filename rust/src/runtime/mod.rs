@@ -16,11 +16,12 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::util::json::{parse, Json};
+use crate::util::sync::{classes, OrderedMutex};
 
 /// Shape metadata of one artifact entry point (from meta.json).
 #[derive(Clone, Debug, PartialEq)]
@@ -66,7 +67,7 @@ pub struct Exec {
     pub meta: EntryMeta,
     exe: xla::PjRtLoadedExecutable,
     /// PJRT executables are not re-entrant per instance; serialize calls.
-    lock: Mutex<()>,
+    lock: OrderedMutex<()>,
 }
 
 impl Exec {
@@ -95,10 +96,7 @@ impl Exec {
                 self.meta.inputs[i].iter().map(|&d| d as i64).collect();
             literals.push(xla::Literal::vec1(data).reshape(&dims)?);
         }
-        let _guard = crate::util::sync::lock_or_poisoned(
-            &self.lock,
-            "pjrt executable",
-        )?;
+        let _guard = self.lock.lock()?;
         let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
             .to_literal_sync()?;
         drop(_guard);
@@ -182,7 +180,7 @@ impl Runtime {
                 Arc::new(Exec {
                     meta: EntryMeta::from_json(name, entry)?,
                     exe,
-                    lock: Mutex::new(()),
+                    lock: OrderedMutex::new(&classes::RUNTIME_EXEC, ()),
                 }),
             );
         }

@@ -15,6 +15,17 @@
 //! `pallas-lint` (the `lock-unwrap` rule) gates new `.lock().unwrap()`
 //! sites crate-wide; this module is the sanctioned replacement.
 
+//! The ordered half — [`LockClass`], [`OrderedMutex`],
+//! [`OrderedCondvar`] — is the runtime side of the `pallas-lint`
+//! concurrency pass: every long-lived `Mutex`/`Condvar` in the crate is
+//! registered under a named class in [`classes`], the static analysis
+//! builds the crate's lock-order graph over those classes
+//! (`tools/lint/lock.graph.json`), and debug builds assert the same
+//! order at runtime via a thread-local held-lock stack plus a
+//! wait-timeout deadlock watchdog. Release builds compile the wrappers
+//! down to the plain poison-typed lock above.
+
+use std::ops::{Deref, DerefMut};
 use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
 use std::time::Duration;
 
@@ -64,6 +75,302 @@ pub fn wait_timeout_or_poisoned<'a, T>(
         .map_err(|_| PoisonedLock { what })
 }
 
+/// A named lock class with a total acquisition rank. A thread may only
+/// acquire a lock whose rank is strictly greater than every lock it
+/// already holds, which makes lock-order inversion (and therefore
+/// deadlock between classes) impossible by construction. The static
+/// analysis and the debug-build runtime checker share this registry:
+/// `pallas-lint` reads the class/rank table straight out of
+/// [`classes`], so the blessed `tools/lint/lock.graph.json` and the
+/// runtime assertions can never drift apart.
+#[derive(Debug)]
+pub struct LockClass {
+    /// Stable name used in lint findings and the blessed lock graph.
+    pub name: &'static str,
+    /// Acquisition rank; higher ranks are acquired later.
+    pub rank: u32,
+}
+
+/// The crate-wide lock-class registry. One entry per long-lived
+/// `Mutex`/`Condvar`; ranks are spaced by 10 so a future class can
+/// slot between two existing ones without renumbering the world.
+///
+/// `pallas-lint` parses this module (`static NAME: LockClass =
+/// LockClass { name: …, rank: N };`) to learn the class table, then
+/// maps every `OrderedMutex::new(&classes::X, …)` construction site to
+/// the field or static that owns it. Adding a lock means adding a line
+/// here — an unregistered `Mutex` in a lock zone is a finding.
+pub mod classes {
+    use super::LockClass;
+
+    /// `adios::transport` in-proc listener registry (name → acceptor).
+    pub static INPROC_REGISTRY: LockClass =
+        LockClass { name: "inproc-registry", rank: 10 };
+    /// `pipeline::fleet` shared per-step chunk-plan cache.
+    pub static FLEET_PLANNER: LockClass =
+        LockClass { name: "fleet-planner", rank: 20 };
+    /// `runtime` PJRT executable serialization (not re-entrant).
+    pub static RUNTIME_EXEC: LockClass =
+        LockClass { name: "runtime-exec", rank: 30 };
+    /// SST writer-group first-contact accept/reject decisions.
+    pub static SST_GROUP_DECISIONS: LockClass =
+        LockClass { name: "sst-group-decisions", rank: 40 };
+    /// SST writer service-thread join registry.
+    pub static SST_SERVICE_THREADS: LockClass =
+        LockClass { name: "sst-service-threads", rank: 50 };
+    /// SST writer shared state (reader registry + staged steps).
+    pub static SST_WRITER_SHARED: LockClass =
+        LockClass { name: "sst-writer-shared", rank: 60 };
+    /// SST per-reader connection transmit half. Above
+    /// [`SST_WRITER_SHARED`]: the backlog-replay critical section in
+    /// `serve_reader` sends under the registration lock.
+    pub static SST_PEER_TX: LockClass =
+        LockClass { name: "sst-peer-tx", rank: 70 };
+}
+
+/// Debug-build held-lock bookkeeping: a thread-local stack of the lock
+/// classes this thread currently holds, in acquisition order.
+#[cfg(debug_assertions)]
+mod held {
+    use super::LockClass;
+    use std::cell::RefCell;
+
+    thread_local! {
+        static HELD: RefCell<Vec<&'static LockClass>> =
+            const { RefCell::new(Vec::new()) };
+    }
+
+    /// Assert that acquiring `class` now respects the rank order.
+    pub(super) fn check(class: &'static LockClass) {
+        HELD.with(|h| {
+            let h = h.borrow();
+            if let Some(top) = h.last() {
+                assert!(
+                    class.rank > top.rank,
+                    "lock-order violation: acquiring `{}` (rank {}) \
+                     while holding `{}` (rank {}); held stack: {:?}",
+                    class.name,
+                    class.rank,
+                    top.name,
+                    top.rank,
+                    names(&h),
+                );
+            }
+        });
+    }
+
+    pub(super) fn push(class: &'static LockClass) {
+        HELD.with(|h| h.borrow_mut().push(class));
+    }
+
+    /// Remove the most recent entry of `class`. Guards may drop out of
+    /// acquisition order (a guard stored in a binding can outlive one
+    /// acquired later), so this is not strict LIFO.
+    pub(super) fn pop(class: &'static LockClass) {
+        HELD.with(|h| {
+            let mut h = h.borrow_mut();
+            if let Some(idx) =
+                h.iter().rposition(|c| std::ptr::eq(*c, class))
+            {
+                h.remove(idx);
+            }
+        });
+    }
+
+    /// Names of the held classes, innermost last, for diagnostics.
+    pub(super) fn names(held: &[&'static LockClass]) -> Vec<&'static str> {
+        held.iter().map(|c| c.name).collect()
+    }
+
+    pub(super) fn snapshot() -> Vec<&'static str> {
+        HELD.with(|h| names(&h.borrow()))
+    }
+}
+
+/// Debug-build bookkeeping token carried inside [`OrderedGuard`]; pops
+/// the thread-local held stack when dropped. A zero-sized no-op in
+/// release builds.
+struct HeldEntry {
+    #[cfg(debug_assertions)]
+    class: &'static LockClass,
+}
+
+impl HeldEntry {
+    fn acquired(class: &'static LockClass) -> Self {
+        #[cfg(not(debug_assertions))]
+        let _ = class;
+        #[cfg(debug_assertions)]
+        held::push(class);
+        HeldEntry {
+            #[cfg(debug_assertions)]
+            class,
+        }
+    }
+}
+
+impl Drop for HeldEntry {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        held::pop(self.class);
+    }
+}
+
+/// How long the debug-build watchdog waits on a contended lock before
+/// declaring the process deadlocked and panicking with the held-stack
+/// diagnostics. Generous enough for slow CI machines; a real inversion
+/// deadlock never resolves, so any finite bound catches it.
+#[cfg(debug_assertions)]
+const WATCHDOG: Duration = Duration::from_secs(30);
+
+/// A [`Mutex`] bound to a [`LockClass`]. `lock()` propagates poison as
+/// the same typed [`PoisonedLock`] error as [`lock_or_poisoned`]
+/// (the class name supplies the `what`); under `debug_assertions` it
+/// additionally asserts the rank order against the thread's held-lock
+/// stack and runs a deadlock watchdog while waiting.
+pub struct OrderedMutex<T> {
+    class: &'static LockClass,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    pub fn new(class: &'static LockClass, value: T) -> Self {
+        OrderedMutex { class, inner: Mutex::new(value) }
+    }
+
+    pub fn class(&self) -> &'static LockClass {
+        self.class
+    }
+
+    pub fn lock(&self) -> Result<OrderedGuard<'_, T>, PoisonedLock> {
+        let guard = self.acquire()?;
+        Ok(OrderedGuard {
+            held: HeldEntry::acquired(self.class),
+            guard,
+        })
+    }
+
+    #[cfg(not(debug_assertions))]
+    fn acquire(&self) -> Result<MutexGuard<'_, T>, PoisonedLock> {
+        self.inner
+            .lock()
+            .map_err(|_| PoisonedLock { what: self.class.name })
+    }
+
+    /// Debug path: order check up front (a violation is a violation
+    /// even when the lock happens to be free), then a watchdog loop so
+    /// a genuine deadlock surfaces as a diagnostic panic instead of a
+    /// silent hang.
+    #[cfg(debug_assertions)]
+    fn acquire(&self) -> Result<MutexGuard<'_, T>, PoisonedLock> {
+        use std::sync::TryLockError;
+        use std::time::Instant;
+
+        held::check(self.class);
+        let deadline = Instant::now() + WATCHDOG;
+        loop {
+            match self.inner.try_lock() {
+                Ok(g) => return Ok(g),
+                Err(TryLockError::Poisoned(_)) => {
+                    return Err(PoisonedLock { what: self.class.name })
+                }
+                Err(TryLockError::WouldBlock) => {}
+            }
+            assert!(
+                Instant::now() < deadline,
+                "deadlock watchdog: waited {:?} for `{}` (rank {}); \
+                 this thread holds {:?}",
+                WATCHDOG,
+                self.class.name,
+                self.class.rank,
+                held::snapshot(),
+            );
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+}
+
+/// Guard returned by [`OrderedMutex::lock`]. Derefs to the protected
+/// value; dropping it releases the lock and (in debug builds) pops the
+/// thread-local held stack.
+pub struct OrderedGuard<'a, T> {
+    // Declared before `guard` so the held-stack entry is retired
+    // first on drop; both happen on the owning thread, so the order
+    // is unobservable to other threads.
+    held: HeldEntry,
+    guard: MutexGuard<'a, T>,
+}
+
+impl<T> Deref for OrderedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> DerefMut for OrderedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+/// A [`Condvar`] bound to the [`LockClass`] of the mutex it pairs
+/// with. Waiting with a guard of any other class is a bug (the wait
+/// would release the wrong lock); debug builds assert the pairing,
+/// and the static `condvar-class` rule checks it at lint time.
+pub struct OrderedCondvar {
+    class: &'static LockClass,
+    cv: Condvar,
+}
+
+impl OrderedCondvar {
+    pub fn new(class: &'static LockClass) -> Self {
+        OrderedCondvar { class, cv: Condvar::new() }
+    }
+
+    pub fn class(&self) -> &'static LockClass {
+        self.class
+    }
+
+    pub fn notify_one(&self) {
+        self.cv.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.cv.notify_all();
+    }
+
+    /// [`Condvar::wait_timeout`] over an [`OrderedGuard`], with typed
+    /// poison propagation. The held-stack entry is kept across the
+    /// wait: the thread is blocked and acquires nothing while parked,
+    /// and on wake it holds the same lock again.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: OrderedGuard<'a, T>,
+        timeout: Duration,
+    ) -> Result<(OrderedGuard<'a, T>, WaitTimeoutResult), PoisonedLock>
+    {
+        #[cfg(debug_assertions)]
+        self.check_class(&guard);
+        let OrderedGuard { held, guard } = guard;
+        let (guard, res) = self
+            .cv
+            .wait_timeout(guard, timeout)
+            .map_err(|_| PoisonedLock { what: self.class.name })?;
+        Ok((OrderedGuard { held, guard }, res))
+    }
+
+    #[cfg(debug_assertions)]
+    fn check_class<T>(&self, guard: &OrderedGuard<'_, T>) {
+        assert!(
+            std::ptr::eq(self.class, guard.held.class),
+            "condvar-class violation: waiting on condvar of class \
+             `{}` with a guard of class `{}`",
+            self.class.name,
+            guard.held.class.name,
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +417,98 @@ mod tests {
         .unwrap();
         assert!(res.timed_out());
         drop(g);
+    }
+
+    #[test]
+    fn ordered_mutex_locks_and_derefs() {
+        let m = OrderedMutex::new(&classes::INPROC_REGISTRY, 7);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 8);
+        assert_eq!(m.class().name, "inproc-registry");
+    }
+
+    #[test]
+    fn ordered_mutex_allows_increasing_ranks() {
+        let lo = OrderedMutex::new(&classes::INPROC_REGISTRY, ());
+        let hi = OrderedMutex::new(&classes::FLEET_PLANNER, ());
+        let a = lo.lock().unwrap();
+        let b = hi.lock().unwrap();
+        drop(b);
+        drop(a);
+        // Sequential re-acquisition at a lower rank is fine once the
+        // higher guard is gone.
+        let b = hi.lock().unwrap();
+        drop(b);
+        let a = lo.lock().unwrap();
+        drop(a);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock-order violation")]
+    fn ordered_mutex_panics_on_inversion_in_debug() {
+        let lo = OrderedMutex::new(&classes::INPROC_REGISTRY, ());
+        let hi = OrderedMutex::new(&classes::FLEET_PLANNER, ());
+        let _b = hi.lock().unwrap();
+        let _a = lo.lock().unwrap();
+    }
+
+    #[test]
+    fn ordered_mutex_reports_poison_typed() {
+        let m = Arc::new(OrderedMutex::new(&classes::RUNTIME_EXEC, 0));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let err = m.lock().unwrap_err();
+        assert_eq!(err, PoisonedLock { what: "runtime-exec" });
+    }
+
+    #[test]
+    fn ordered_condvar_wait_returns_same_class_guard() {
+        let m = OrderedMutex::new(&classes::SST_WRITER_SHARED, 0u32);
+        let cv = OrderedCondvar::new(&classes::SST_WRITER_SHARED);
+        let g = m.lock().unwrap();
+        let (g, res) =
+            cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+        assert!(res.timed_out());
+        assert_eq!(*g, 0);
+        drop(g);
+        // The held stack unwound: a low-rank lock is acquirable again.
+        let lo = OrderedMutex::new(&classes::INPROC_REGISTRY, ());
+        drop(lo.lock().unwrap());
+        cv.notify_all();
+        cv.notify_one();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "condvar-class violation")]
+    fn ordered_condvar_panics_on_wrong_class_in_debug() {
+        let m = OrderedMutex::new(&classes::SST_GROUP_DECISIONS, ());
+        let cv = OrderedCondvar::new(&classes::SST_WRITER_SHARED);
+        let g = m.lock().unwrap();
+        let _ = cv.wait_timeout(g, Duration::from_millis(1));
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn watchdog_sees_cross_thread_contention_resolve() {
+        // Not a deadlock: the other thread releases quickly, so the
+        // watchdog loop exits on its try_lock path.
+        let m = Arc::new(OrderedMutex::new(&classes::SST_PEER_TX, 0));
+        let m2 = m.clone();
+        let t = std::thread::spawn(move || {
+            let mut g = m2.lock().unwrap();
+            *g += 1;
+            std::thread::sleep(Duration::from_millis(20));
+        });
+        std::thread::sleep(Duration::from_millis(5));
+        let g = m.lock().unwrap();
+        assert_eq!(*g, 1);
+        drop(g);
+        t.join().unwrap();
     }
 }

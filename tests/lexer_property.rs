@@ -1,0 +1,140 @@
+//! Property tests for the lint lexer.
+//!
+//! The lexer's contract (see `analysis::lint::lexer`) is: never
+//! panic, degrade by skipping bytes it does not recognize, and emit
+//! tokens whose byte offsets are strictly increasing (the concurrency
+//! pass orders items within a file by `Token::pos`). A deterministic
+//! LCG assembles "token soup" from fragments chosen to hit the nasty
+//! lexer states — raw strings with varying hash counts, nested block
+//! comments, the lifetime-vs-char-literal ambiguity, unterminated
+//! literals, multi-byte UTF-8 — and every soup must uphold the
+//! contract. Deterministic seeds keep failures reproducible.
+
+use openpmd_stream::analysis::lint::lexer;
+
+/// Minimal deterministic generator (Knuth MMIX constants); no
+/// external crates, stable across runs.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn pick<'a>(&mut self, items: &[&'a str]) -> &'a str {
+        items[(self.next() as usize) % items.len()]
+    }
+}
+
+/// Fragments biased toward lexer edge cases. Several are deliberately
+/// ill-formed (unterminated string, lone quote, stray backslash):
+/// the lexer must absorb them without panicking.
+const PIECES: &[&str] = &[
+    "fn", "let", "struct", "unsafe", "ident_a", "x9", "_",
+    "0x1f", "3.5", "1u64", "0b10", "12_000", "9.",
+    "'a", "'static", "'x'", "'\\n'", "'\\''",
+    "\"plain\"", "\"esc\\\"aped\"", "\"\\u{41}\"", "\"multi\nline\"",
+    "r\"raw\"", "r#\"one hash\"#", "r##\"two \"# hashes\"##",
+    "b\"bytes\"", "b'\\0'", "br#\"raw bytes\"#",
+    "// line comment\n", "//\n", "/* block */",
+    "/* nested /* deeper */ still */",
+    "{", "}", "(", ")", "[", "]", ";", ":", "::", ".", ",",
+    "->", "=>", "&", "|", "#", "!", "=", "<", ">", "?",
+    " ", "\t", "\n", "\r\n",
+    "émile", "日本語", "→",
+    "\"unterminated", "r#\"never closed", "/* never closed",
+    "'", "\\",
+];
+
+fn soup(seed: u64) -> String {
+    let mut rng = Lcg(seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1));
+    let n = 40 + (rng.next() % 160) as usize;
+    let mut src = String::new();
+    for _ in 0..n {
+        src.push_str(rng.pick(PIECES));
+        if rng.next() % 4 == 0 {
+            src.push(' ');
+        }
+    }
+    src
+}
+
+/// The core contract over one input: lexing terminates without
+/// panicking, offsets are in-bounds, on char boundaries, and strictly
+/// increasing, and line numbers start at 1 and never decrease.
+fn check_contract(src: &str, what: &str) {
+    let lexed = lexer::lex(src);
+    let mut prev: Option<usize> = None;
+    let mut prev_line = 1u32;
+    for t in &lexed.tokens {
+        assert!(
+            t.pos < src.len(),
+            "{what}: token pos {} out of bounds ({} bytes)",
+            t.pos,
+            src.len()
+        );
+        assert!(
+            src.is_char_boundary(t.pos),
+            "{what}: token pos {} splits a UTF-8 sequence",
+            t.pos
+        );
+        if let Some(p) = prev {
+            assert!(
+                t.pos > p,
+                "{what}: byte offsets not strictly increasing \
+                 ({p} then {})",
+                t.pos
+            );
+        }
+        prev = Some(t.pos);
+        assert!(t.line >= 1, "{what}: zero line number");
+        assert!(
+            t.line >= prev_line,
+            "{what}: line numbers went backwards ({prev_line} then {})",
+            t.line
+        );
+        prev_line = t.line;
+    }
+    for c in &lexed.comments {
+        assert!(c.line >= 1, "{what}: zero comment line");
+    }
+}
+
+#[test]
+fn token_soup_never_panics_and_offsets_are_monotone() {
+    for seed in 0..128u64 {
+        let src = soup(seed);
+        check_contract(&src, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn every_individual_piece_upholds_the_contract() {
+    for (i, p) in PIECES.iter().enumerate() {
+        check_contract(p, &format!("piece {i} ({p:?})"));
+        // And doubled, so terminator/start interactions are covered.
+        let doubled = format!("{p}{p}");
+        check_contract(&doubled, &format!("doubled piece {i}"));
+    }
+}
+
+#[test]
+fn fixture_corpus_lexes_cleanly() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures");
+    let mut n = 0;
+    for entry in std::fs::read_dir(&dir).expect("fixture dir") {
+        let path = entry.expect("dir entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("rs") {
+            continue;
+        }
+        let src = std::fs::read_to_string(&path).expect("fixture");
+        check_contract(&src, &path.display().to_string());
+        n += 1;
+    }
+    assert!(n >= 9, "expected the fixture corpus, found {n} files");
+}

@@ -1,0 +1,139 @@
+//! Fixture corpus for the interprocedural concurrency pass.
+//!
+//! Each fixture under `tests/lint_fixtures/` is a source snippet with
+//! a known-good or known-bad locking shape (see the README there).
+//! The fixtures are parsed under a *virtual* lock-zone path and run
+//! through `concurrency::analyze` together with `registry.rs` (parsed
+//! as `rust/src/util/sync.rs`, where the pass expects the lock-class
+//! table). Positives assert the expected rule fires; negatives assert
+//! the pass stays silent — regressions in either direction fail here
+//! before they reach the repo-wide gate in `tests/lint_clean.rs`.
+
+use std::path::PathBuf;
+
+use openpmd_stream::analysis::lint::concurrency::{analyze, LockGraph};
+use openpmd_stream::analysis::lint::{Finding, SourceFile};
+
+fn fixture(name: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// Analyze one fixture beside the registry fixture, both under
+/// virtual paths: the registry where the pass looks for the class
+/// table, the case inside a lock zone.
+fn analyze_fixture(name: &str) -> (Vec<Finding>, LockGraph) {
+    let sources = vec![
+        SourceFile::parse("rust/src/util/sync.rs", &fixture("registry.rs")),
+        SourceFile::parse("rust/src/adios/sst/fixture.rs", &fixture(name)),
+    ];
+    let mut findings = Vec::new();
+    let graph = analyze(&sources, &mut findings);
+    (findings, graph)
+}
+
+/// Sorted rule names of all findings.
+fn rules(findings: &[Finding]) -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = findings.iter().map(|f| f.rule).collect();
+    v.sort_unstable();
+    v
+}
+
+fn edge_kind<'g>(
+    graph: &'g LockGraph,
+    from: &str,
+    to: &str,
+) -> Option<&'g str> {
+    graph
+        .edges
+        .get(&(from.to_string(), to.to_string()))
+        .map(|e| e.kind.as_str())
+}
+
+#[test]
+fn registry_fixture_parses_standalone() {
+    let sources = vec![SourceFile::parse(
+        "rust/src/util/sync.rs",
+        &fixture("registry.rs"),
+    )];
+    let mut findings = Vec::new();
+    let graph = analyze(&sources, &mut findings);
+    assert_eq!(rules(&findings), Vec::<&str>::new());
+    assert_eq!(graph.classes.len(), 3);
+    assert_eq!(graph.classes.get("ALPHA"), Some(&10));
+    assert_eq!(graph.classes.get("BETA"), Some(&20));
+    assert_eq!(graph.classes.get("GAMMA"), Some(&30));
+    assert!(graph.edges.is_empty());
+}
+
+#[test]
+fn inversion_cycle_flagged() {
+    let (findings, graph) = analyze_fixture("inversion_cycle.rs");
+    let r = rules(&findings);
+    assert!(r.contains(&"lock-order"), "{r:?}");
+    assert!(r.contains(&"lock-cycle"), "{r:?}");
+    assert_eq!(edge_kind(&graph, "ALPHA", "BETA"), Some("direct"));
+    assert_eq!(edge_kind(&graph, "BETA", "ALPHA"), Some("direct"));
+}
+
+#[test]
+fn inversion_consistent_order_clean() {
+    let (findings, graph) = analyze_fixture("inversion_ok.rs");
+    assert_eq!(rules(&findings), Vec::<&str>::new());
+    assert_eq!(graph.edges.len(), 1);
+    assert_eq!(edge_kind(&graph, "ALPHA", "BETA"), Some("direct"));
+}
+
+#[test]
+fn guard_across_call_flagged() {
+    let (findings, graph) = analyze_fixture("guard_across_call.rs");
+    let r = rules(&findings);
+    assert!(r.contains(&"lock-across-call"), "{r:?}");
+    assert_eq!(edge_kind(&graph, "BETA", "ALPHA"), Some("call"));
+    let f = findings.iter().find(|f| f.rule == "lock-across-call").unwrap();
+    assert!(
+        f.message.contains("helper") || f.message.contains("ALPHA"),
+        "{}",
+        f.message
+    );
+}
+
+#[test]
+fn guard_across_higher_rank_call_clean() {
+    let (findings, graph) = analyze_fixture("guard_across_call_ok.rs");
+    assert_eq!(rules(&findings), Vec::<&str>::new());
+    assert_eq!(graph.edges.len(), 1);
+    assert_eq!(edge_kind(&graph, "ALPHA", "BETA"), Some("call"));
+}
+
+#[test]
+fn condvar_wrong_class_flagged() {
+    let (findings, _) = analyze_fixture("condvar_wrong_class.rs");
+    assert_eq!(rules(&findings), ["condvar-class"]);
+    assert!(
+        findings[0].message.contains("wrong lock"),
+        "{}",
+        findings[0].message
+    );
+}
+
+#[test]
+fn condvar_matching_class_clean() {
+    let (findings, _) = analyze_fixture("condvar_ok.rs");
+    assert_eq!(rules(&findings), Vec::<&str>::new());
+}
+
+#[test]
+fn unregistered_raw_mutex_flagged() {
+    let (findings, _) = analyze_fixture("unregistered_lock.rs");
+    assert_eq!(rules(&findings), ["unregistered-lock", "unregistered-lock"]);
+}
+
+#[test]
+fn registered_ordered_mutex_clean() {
+    let (findings, _) = analyze_fixture("registered_lock.rs");
+    assert_eq!(rules(&findings), Vec::<&str>::new());
+}

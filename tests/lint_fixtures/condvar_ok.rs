@@ -1,0 +1,19 @@
+// Negative: the guard passed to the wait belongs to the same class
+// the condvar was registered with, and nothing else is held across
+// the wait — the sanctioned shape.
+struct S {
+    b: OrderedMutex<u32>,
+    cv: OrderedCondvar,
+}
+
+fn build() -> S {
+    S {
+        b: OrderedMutex::new(&classes::BETA, 0),
+        cv: OrderedCondvar::new(&classes::BETA),
+    }
+}
+
+fn fine(s: &S) {
+    let gb = s.b.lock();
+    let r = s.cv.wait_timeout(gb, timeout);
+}

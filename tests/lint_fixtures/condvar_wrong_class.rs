@@ -1,0 +1,21 @@
+// Positive: the condvar is registered under BETA but the wait hands
+// it a guard of the ALPHA mutex — the wakeup protocol and the guarded
+// state disagree, so the wait is a `condvar-class` finding.
+struct S {
+    a: OrderedMutex<u32>,
+    b: OrderedMutex<u32>,
+    cv: OrderedCondvar,
+}
+
+fn build() -> S {
+    S {
+        a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0),
+        cv: OrderedCondvar::new(&classes::BETA),
+    }
+}
+
+fn wrong(s: &S) {
+    let ga = s.a.lock();
+    let r = s.cv.wait_timeout(ga, timeout);
+}

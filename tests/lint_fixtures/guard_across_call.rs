@@ -1,0 +1,25 @@
+// Positive: `helper` acquires ALPHA (rank 10); `caller` invokes it
+// while holding BETA (rank 20). The interprocedural may-acquire set
+// of `helper` contains a class at or below the held rank, so the call
+// is a `lock-across-call` finding (and the implied BETA->ALPHA edge
+// inverts the rank order).
+struct S {
+    a: OrderedMutex<u32>,
+    b: OrderedMutex<u32>,
+}
+
+fn build() -> S {
+    S {
+        a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0),
+    }
+}
+
+fn helper(s: &S) {
+    let ga = s.a.lock();
+}
+
+fn caller(s: &S) {
+    let gb = s.b.lock();
+    helper(s);
+}

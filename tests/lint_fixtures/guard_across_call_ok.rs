@@ -1,0 +1,23 @@
+// Negative: the callee acquires a strictly higher rank than anything
+// the caller holds, which is the sanctioned nesting direction. The
+// graph records an ALPHA->BETA `call` edge and nothing is flagged.
+struct S {
+    a: OrderedMutex<u32>,
+    b: OrderedMutex<u32>,
+}
+
+fn build() -> S {
+    S {
+        a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0),
+    }
+}
+
+fn helper(s: &S) {
+    let gb = s.b.lock();
+}
+
+fn caller(s: &S) {
+    let ga = s.a.lock();
+    helper(s);
+}

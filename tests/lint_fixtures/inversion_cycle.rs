@@ -1,0 +1,25 @@
+// Positive: two functions acquire ALPHA (rank 10) and BETA (rank 20)
+// in opposite orders — the classic deadlock inversion. The
+// rank-decreasing acquisition in `backward` is a `lock-order`
+// finding, and the resulting A->B->A edge pair is a `lock-cycle`.
+struct S {
+    a: OrderedMutex<u32>,
+    b: OrderedMutex<u32>,
+}
+
+fn build() -> S {
+    S {
+        a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0),
+    }
+}
+
+fn forward(s: &S) {
+    let ga = s.a.lock();
+    let gb = s.b.lock();
+}
+
+fn backward(s: &S) {
+    let gb = s.b.lock();
+    let ga = s.a.lock();
+}

@@ -1,0 +1,23 @@
+// Negative: both functions take ALPHA before BETA, matching the rank
+// order. The graph gets a single ALPHA->BETA edge and no findings.
+struct S {
+    a: OrderedMutex<u32>,
+    b: OrderedMutex<u32>,
+}
+
+fn build() -> S {
+    S {
+        a: OrderedMutex::new(&classes::ALPHA, 0),
+        b: OrderedMutex::new(&classes::BETA, 0),
+    }
+}
+
+fn forward(s: &S) {
+    let ga = s.a.lock();
+    let gb = s.b.lock();
+}
+
+fn also_forward(s: &S) {
+    let ga = s.a.lock();
+    let gb = s.b.lock();
+}

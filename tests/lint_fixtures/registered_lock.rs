@@ -1,0 +1,6 @@
+// Negative: the same shape through the ordered wrapper with a
+// registered class resolves cleanly and produces no findings.
+fn f() {
+    let m = OrderedMutex::new(&classes::ALPHA, 0);
+    let g = m.lock();
+}

@@ -1,0 +1,16 @@
+// Lock-class registry fixture, parsed under the virtual path
+// `rust/src/util/sync.rs`. The grammar must match what
+// `concurrency::class_defs` extracts from the real registry:
+// `static NAME: LockClass = LockClass { .., rank: N };`.
+pub struct LockClass {
+    pub name: &'static str,
+    pub rank: u32,
+}
+
+pub mod classes {
+    use super::LockClass;
+
+    pub static ALPHA: LockClass = LockClass { name: "alpha", rank: 10 };
+    pub static BETA: LockClass = LockClass { name: "beta", rank: 20 };
+    pub static GAMMA: LockClass = LockClass { name: "gamma", rank: 30 };
+}

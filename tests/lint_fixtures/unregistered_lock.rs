@@ -1,0 +1,8 @@
+// Positive: a raw `std::sync::Mutex` inside a lock zone. Both the
+// construction site and the unresolvable `.lock()` acquisition are
+// `unregistered-lock` findings — zone code must use `OrderedMutex`
+// with a class from `util::sync::classes`.
+fn f() {
+    let m = Mutex::new(0);
+    let g = m.lock();
+}

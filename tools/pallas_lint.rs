@@ -2,33 +2,53 @@
 //!
 //! Scans `rust/src/` and `tools/` with the hand-rolled lexer-level
 //! rules in `openpmd_stream::analysis::lint` (panic-freedom zones,
-//! lock discipline, engine-contract conformance, format-fingerprint
-//! hygiene), prints `file:line` findings, optionally writes the
-//! machine-readable JSON report CI uploads as an artifact, and exits
-//! nonzero on any unwaived finding:
+//! lock discipline, the interprocedural concurrency pass,
+//! engine-contract conformance, format-fingerprint hygiene), prints
+//! `file:line` findings, optionally writes the machine-readable JSON
+//! report CI uploads as an artifact, and exits nonzero on any unwaived
+//! finding:
 //!
 //! ```text
-//! pallas-lint [--root DIR] [--json FILE] [--bless]
+//! pallas-lint [--root DIR] [--json FILE] [--bless] [--changed]
+//!             [--since REV]
 //! ```
 //!
 //! `--bless` regenerates `tools/lint/format.fingerprint.json` — and
 //! refuses when a serialized layout changed while its version string
-//! (`MAGIC` / `WIRE_FORMAT`) did not.
+//! (`MAGIC` / `WIRE_FORMAT`) did not — and `tools/lint/lock.graph.json`
+//! from the current lock-order graph.
+//!
+//! `--changed` restricts the *reported* findings (and the exit status)
+//! to files that differ from the merge base with `main`/`master`, plus
+//! untracked files; `--since REV` picks the base explicitly. Repo-wide
+//! findings (`waiver-ledger`, `format-fingerprint`, `lock-graph`) are
+//! always kept: a ledger or manifest drift must fail even a
+//! one-file diff. The analysis itself still runs over the whole crate
+//! — the concurrency pass is interprocedural, so a "changed-only"
+//! scan would miss cross-file lock edges.
 //!
 //! Exit status: 0 clean (waived-only), 1 unwaived finding(s),
 //! 2 usage/IO error.
 
-use std::path::PathBuf;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
 
 use openpmd_stream::analysis::lint;
 use openpmd_stream::util::cli::{render_help, Args, OptSpec};
+
+/// Rules whose findings describe repo-wide state, not a single source
+/// file — never hidden by `--changed`.
+const REPO_WIDE_RULES: &[&str] =
+    &["waiver-ledger", "format-fingerprint", "lock-graph"];
 
 fn help() -> String {
     render_help(
         "pallas-lint",
         "dependency-free static-analysis gate (panic-freedom, lock \
-         discipline, engine contract, format fingerprint)",
-        "pallas-lint [--root DIR] [--json FILE] [--bless]",
+         discipline, lock-order graph, engine contract, format \
+         fingerprint)",
+        "pallas-lint [--root DIR] [--json FILE] [--bless] [--changed] \
+         [--since REV]",
         &[
             OptSpec {
                 name: "root",
@@ -46,7 +66,22 @@ fn help() -> String {
                 name: "bless",
                 value_name: None,
                 default: None,
-                help: "regenerate the format-fingerprint manifest",
+                help: "regenerate the format-fingerprint and \
+                       lock-graph manifests",
+            },
+            OptSpec {
+                name: "changed",
+                value_name: None,
+                default: None,
+                help: "report only findings in files changed since \
+                       the merge base with main/master (plus \
+                       repo-wide findings)",
+            },
+            OptSpec {
+                name: "since",
+                value_name: Some("REV"),
+                default: None,
+                help: "like --changed, with an explicit base revision",
             },
             OptSpec {
                 name: "help",
@@ -58,14 +93,65 @@ fn help() -> String {
     )
 }
 
+/// Run `git -C root args..`, returning trimmed stdout.
+fn git(root: &Path, args: &[&str]) -> Result<String, String> {
+    let out = std::process::Command::new("git")
+        .arg("-C")
+        .arg(root)
+        .args(args)
+        .output()
+        .map_err(|e| format!("running git: {e}"))?;
+    if !out.status.success() {
+        return Err(format!(
+            "git {} failed: {}",
+            args.join(" "),
+            String::from_utf8_lossy(&out.stderr).trim()
+        ));
+    }
+    Ok(String::from_utf8_lossy(&out.stdout).trim().to_string())
+}
+
+/// Repo-relative paths (as the lint reports them) that differ from
+/// `base` (or from the merge base with main/master), plus untracked
+/// files.
+fn changed_files(
+    root: &Path,
+    since: Option<&str>,
+) -> Result<BTreeSet<String>, String> {
+    let base = match since {
+        Some(rev) => rev.to_string(),
+        None => git(root, &["merge-base", "HEAD", "main"])
+            .or_else(|_| git(root, &["merge-base", "HEAD", "master"]))
+            .map_err(|e| {
+                format!(
+                    "--changed: no merge base with main or master \
+                     (pass --since REV): {e}"
+                )
+            })?,
+    };
+    let mut files = BTreeSet::new();
+    for list in [
+        git(root, &["diff", "--name-only", &base, "--"])?,
+        git(root, &["ls-files", "--others", "--exclude-standard"])?,
+    ] {
+        files.extend(
+            list.lines()
+                .map(str::trim)
+                .filter(|l| !l.is_empty())
+                .map(str::to_string),
+        );
+    }
+    Ok(files)
+}
+
 fn run() -> Result<bool, String> {
     let args = Args::from_env(false).map_err(|e| e.to_string())?;
     if args.flag("help") {
         print!("{}", help());
         return Ok(true);
     }
-    args.reject_unknown(&["root", "json", "bless", "help"])
-        .map_err(|e| e.to_string())?;
+    let known = ["root", "json", "bless", "changed", "since", "help"];
+    args.reject_unknown(&known).map_err(|e| e.to_string())?;
     let root = PathBuf::from(args.get_or("root", "."));
     if !root.join("Cargo.toml").is_file() {
         return Err(format!(
@@ -81,19 +167,31 @@ fn run() -> Result<bool, String> {
             .manifest
             .as_deref()
             .expect("LintOptions::at always sets a manifest path");
-        let msg = lint::fingerprint::bless(&root, manifest)
-            .map_err(|e| format!("{e:#}"))?;
-        println!("{msg}");
+        let fp = lint::fingerprint::bless(&root, manifest);
+        println!("{}", fp.map_err(|e| format!("{e:#}"))?);
+        let lg = lint::bless_lock_graph(&opts);
+        println!("{}", lg.map_err(|e| format!("{e:#}"))?);
     }
 
-    let report = lint::run(&opts).map_err(|e| format!("{e:#}"))?;
+    let mut report = lint::run(&opts).map_err(|e| format!("{e:#}"))?;
+
+    // --changed / --since: the full-crate analysis already ran (the
+    // concurrency pass needs every file); only the report is narrowed.
+    let mut hidden = 0usize;
+    if args.flag("changed") || args.get("since").is_some() {
+        let changed = changed_files(&root, args.get("since"))?;
+        let before = report.findings.len();
+        report.findings.retain(|f| {
+            REPO_WIDE_RULES.contains(&f.rule) || changed.contains(&f.file)
+        });
+        hidden = before - report.findings.len();
+    }
 
     if let Some(json_path) = args.get("json") {
         let mut body = report.to_json().to_string_pretty();
         body.push('\n');
-        std::fs::write(json_path, body).map_err(|e| {
-            format!("writing {json_path}: {e}")
-        })?;
+        std::fs::write(json_path, body)
+            .map_err(|e| format!("writing {json_path}: {e}"))?;
     }
 
     for f in &report.findings {
@@ -109,7 +207,7 @@ fn run() -> Result<bool, String> {
         }
     }
     let unwaived = report.unwaived_count();
-    println!(
+    print!(
         "pallas-lint: {} file(s), {} finding(s) ({} waived, {} \
          unwaived)",
         report.files_scanned,
@@ -117,6 +215,10 @@ fn run() -> Result<bool, String> {
         report.waived_count(),
         unwaived,
     );
+    if hidden > 0 {
+        print!(", {hidden} in unchanged files not shown");
+    }
+    println!();
     Ok(unwaived == 0)
 }
 
