@@ -4,7 +4,7 @@
 //! exchange where Next-Fit sent ~2x the ideal volume to one reader).
 
 use openpmd_stream::bench::fig8::{simulate, Fig8Params};
-use openpmd_stream::bench::{smoke_mode, Table};
+use openpmd_stream::bench::{smoke_mode, BenchJson, Table};
 use openpmd_stream::pipeline::metrics::OpKind;
 use openpmd_stream::util::cli::Args;
 use openpmd_stream::util::stats::boxplot;
@@ -53,6 +53,29 @@ fn main() {
     }
     print!("{}", t.render());
     t.save_csv("fig9_loadtimes").ok();
+
+    // Machine-readable document for the CI perf-regression gate: the
+    // fixed-seed 64-node rep-0 medians for both strategies, identical
+    // in smoke and full sweeps. The committed baseline is a
+    // conservative ceiling (paper: medians ~0.9 s), so the gate only
+    // trips on a blow-up, not on simulator tuning.
+    let mut bj = BenchJson::new("fig9");
+    for (name, key) in [("hostname", "hostname_median_load_s"),
+                        ("hyperslabs", "hyperslabs_median_load_s")] {
+        let run = simulate(&Fig8Params {
+            nodes: 64,
+            strategy: name.into(),
+            steps: 4,
+            seed: 4000,
+            ..Default::default()
+        });
+        let b = boxplot(&run.load_metrics.durations(OpKind::Load));
+        bj.gauge(key, b.median, false);
+        bj.info(&format!("{name}_q3_load_s"), b.q3);
+    }
+    if let Ok(p) = bj.save() {
+        println!("\nbench json: {}", p.display());
+    }
 
     // The binpacking worst case: scan seeds until a reader receives
     // ~double the ideal amount in some exchange (paper: observed once at

@@ -1,0 +1,98 @@
+//! Overhead gate for the observability layer: with tracing *disabled*
+//! (the production default), a hot loop annotated with spans and
+//! counters must cost within 3% of the identical loop without them.
+//!
+//! The workload per iteration is a 4 KiB copy + checksum — sized like a
+//! small wire frame, large enough that the disabled-span constant cost
+//! (one atomic load + two counter adds) sits far below the gate, small
+//! enough that a regression to "always allocate the span record" would
+//! blow straight through it. Rounds of the two variants interleave so
+//! clock-frequency drift hits both equally, and each variant scores its
+//! *minimum* round (noise only ever adds time).
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use openpmd_stream::bench::{smoke_mode, BenchJson};
+use openpmd_stream::obs::metrics::counter;
+use openpmd_stream::obs::trace;
+use openpmd_stream::util::cli::Args;
+
+const BUF: usize = 4096;
+
+/// The common payload: copy the frame and fold a checksum over it.
+fn workload(src: &[u8], dst: &mut [u8]) -> u64 {
+    dst.copy_from_slice(src);
+    let mut sum = 0u64;
+    for chunk in dst.chunks_exact(8) {
+        sum = sum
+            .wrapping_mul(0x100_0000_01b3)
+            .wrapping_add(u64::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    sum
+}
+
+fn main() {
+    let args = Args::from_env(false).unwrap_or_default();
+    let smoke = smoke_mode(&args, "MICRO_OBS_SMOKE");
+    let (rounds, iters) = if smoke { (5, 20_000u64) } else { (9, 200_000u64) };
+
+    assert!(
+        !trace::enabled(),
+        "micro_obs measures the *disabled* path; tracing must be off"
+    );
+
+    let src = vec![0xa5u8; BUF];
+    let mut dst = vec![0u8; BUF];
+    // Interned once, like every production hot path does.
+    let ops = counter("obs.bench_ops");
+    let bytes = counter("obs.bench_bytes");
+
+    let mut base_min = f64::INFINITY;
+    let mut inst_min = f64::INFINITY;
+    for _ in 0..rounds {
+        // Baseline round: workload only.
+        let t = Instant::now();
+        for _ in 0..iters {
+            black_box(workload(black_box(&src), &mut dst));
+        }
+        base_min = base_min.min(t.elapsed().as_secs_f64());
+
+        // Instrumented round: same workload under a (disabled) span,
+        // with the same counter traffic the wire layer generates.
+        let t = Instant::now();
+        for _ in 0..iters {
+            let mut sp = trace::span("obs.bench_op").with("buf", BUF);
+            let sum = black_box(workload(black_box(&src), &mut dst));
+            ops.inc();
+            bytes.add(BUF as u64);
+            sp.set("sum", sum & 0xff);
+        }
+        inst_min = inst_min.min(t.elapsed().as_secs_f64());
+    }
+
+    let base_ns = base_min * 1e9 / iters as f64;
+    let inst_ns = inst_min * 1e9 / iters as f64;
+    let ratio = inst_ns / base_ns;
+    println!(
+        "micro_obs: baseline {base_ns:.1} ns/op, instrumented \
+         {inst_ns:.1} ns/op, ratio {ratio:.4} ({rounds} rounds x \
+         {iters} iters, min-of-rounds)"
+    );
+
+    let mut bj = BenchJson::new("obs");
+    bj.gauge("overhead_ratio", ratio, false);
+    bj.info("baseline_ns_per_op", base_ns);
+    bj.info("instrumented_ns_per_op", inst_ns);
+    if let Ok(p) = bj.save() {
+        println!("bench json: {}", p.display());
+    }
+
+    assert!(
+        ratio <= 1.03,
+        "disabled-tracing overhead {:.2}% exceeds the 3% gate \
+         (baseline {base_ns:.1} ns/op, instrumented {inst_ns:.1} ns/op)",
+        (ratio - 1.0) * 100.0
+    );
+    println!("micro_obs: disabled-tracing overhead gate (<=3%) passed");
+}

@@ -28,6 +28,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
+use once_cell::sync::Lazy;
 
 use super::engine::{
     Bytes, Engine, GetHandle, GetQueue, Mode, PutQueue, StepStatus,
@@ -36,8 +37,19 @@ use super::engine::{
 use super::ops::{self, OpChain, OpsReport};
 use super::region;
 use super::wire::{Reader as WireReader, StepMeta, VarMeta};
+use crate::obs::metrics::{counter, Counter};
+use crate::obs::trace;
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::Attribute;
+
+static BP_PUT_CHUNKS: Lazy<&'static Counter> =
+    Lazy::new(|| counter("bp.put_chunks"));
+static BP_PUT_BYTES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("bp.put_bytes"));
+static BP_GET_SWEEPS: Lazy<&'static Counter> =
+    Lazy::new(|| counter("bp.get_sweeps"));
+static BP_GET_BYTES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("bp.get_bytes"));
 
 // BP02: variable metadata carries an operator chain and payload records
 // of operated variables are stored operator-framed (compressed on disk).
@@ -215,6 +227,11 @@ impl Engine for BpWriter {
         if pending.is_empty() {
             return Ok(());
         }
+        let mut sp = trace::span("bp.perform_puts")
+            .with("step", self.step)
+            .with("chunks", pending.len());
+        let mut put_bytes = 0u64;
+        BP_PUT_CHUNKS.add(pending.len() as u64);
         let (meta, payloads) = self
             .current
             .as_mut()
@@ -242,8 +259,11 @@ impl Engine for BpWriter {
                     chunks: vec![info],
                 }),
             }
+            put_bytes += data.len() as u64;
             payloads.push((p.var.name().to_string(), p.chunk, data));
         }
+        BP_PUT_BYTES.add(put_bytes);
+        sp.set("bytes", put_bytes);
         Ok(())
     }
 
@@ -288,6 +308,7 @@ impl Engine for BpWriter {
 
     fn end_step(&mut self) -> Result<()> {
         self.perform_puts()?;
+        let mut sp = trace::span("bp.write_sweep").with("step", self.step);
         let (meta, payloads) = self
             .current
             .take()
@@ -321,6 +342,7 @@ impl Engine for BpWriter {
             written += rec.len() as u64 + data.len() as u64;
         }
         self.file.flush()?;
+        sp.set("bytes", written);
         self.bytes_written += written;
         self.step += 1;
         Ok(())
@@ -613,16 +635,24 @@ impl Engine for BpReader {
                 .unwrap_or(u64::MAX)
         };
         pending.sort_by_key(first_offset);
+        let mut sp = trace::span("bp.get_sweep").with("gets", pending.len());
+        let mut got_bytes = 0u64;
         let mut failure = None;
         for g in &pending {
             match self.fetch(&g.var, &g.selection) {
-                Ok(data) => self.gets.complete(g.handle, data),
+                Ok(data) => {
+                    got_bytes += data.len() as u64;
+                    self.gets.complete(g.handle, data);
+                }
                 Err(e) => {
                     failure = Some(e);
                     break;
                 }
             }
         }
+        BP_GET_SWEEPS.inc();
+        BP_GET_BYTES.add(got_bytes);
+        sp.set("bytes", got_bytes);
         if let Some(e) = failure {
             // Mid-sweep IO failure (truncated/corrupt file): poison the
             // whole drained batch so take_get reports this error, not
@@ -703,6 +733,7 @@ impl BpReader {
         for (chunk, file_offset, len) in &records {
             if chunk == selection {
                 self.file.seek(SeekFrom::Start(*file_offset))?;
+                self.ops_stats.allocations += 1;
                 let mut data = Vec::with_capacity(*len as usize);
                 let read = (&mut self.file)
                     .take(*len)
@@ -719,6 +750,7 @@ impl BpReader {
             }
         }
 
+        self.ops_stats.allocations += 1;
         let mut out = vec![0u8; selection.num_elements() as usize * elem];
         let mut covered = 0u64;
         for (chunk, file_offset, len) in records {
@@ -726,6 +758,7 @@ impl BpReader {
                 continue;
             }
             self.file.seek(SeekFrom::Start(file_offset))?;
+            self.ops_stats.allocations += 1;
             let mut data = Vec::with_capacity(len as usize);
             let read =
                 (&mut self.file).take(len).read_to_end(&mut data)?;

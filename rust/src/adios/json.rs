@@ -11,6 +11,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
+use once_cell::sync::Lazy;
 
 use super::engine::{
     Bytes, Engine, GetHandle, GetQueue, Mode, PutQueue, StepStatus,
@@ -18,11 +19,22 @@ use super::engine::{
 };
 use super::ops::{self, OpChain, OpsReport};
 use super::region;
+use crate::obs::metrics::{counter, Counter};
+use crate::obs::trace;
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::types::Datatype;
 use crate::openpmd::Attribute;
 use crate::util::bytes::{b64_decode, b64_encode};
 use crate::util::json::{parse, Json};
+
+static JSON_PUT_CHUNKS: Lazy<&'static Counter> =
+    Lazy::new(|| counter("json.put_chunks"));
+static JSON_PUT_BYTES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("json.put_bytes"));
+static JSON_GET_SWEEPS: Lazy<&'static Counter> =
+    Lazy::new(|| counter("json.get_sweeps"));
+static JSON_GET_BYTES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("json.get_bytes"));
 
 /// Encode a payload as a JSON number array for its dtype.
 fn data_to_json(dtype: Datatype, data: &[u8]) -> Json {
@@ -210,6 +222,11 @@ impl Engine for JsonWriter {
         if pending.is_empty() {
             return Ok(());
         }
+        let mut sp = trace::span("json.perform_puts")
+            .with("step", self.step)
+            .with("chunks", pending.len());
+        let mut put_bytes = 0u64;
+        JSON_PUT_CHUNKS.add(pending.len() as u64);
         let (_, vars) = self
             .current
             .as_mut()
@@ -220,11 +237,14 @@ impl Engine for JsonWriter {
             // deferred core, like every other backend.
             let data = ops::encode_put(&p.var, &p.chunk, p.data,
                                        &mut self.ops_stats)?;
+            put_bytes += data.len() as u64;
             vars.entry(p.var.name().to_string())
                 .or_insert_with(|| (p.var.clone(), Vec::new()))
                 .1
                 .push((p.chunk, data));
         }
+        JSON_PUT_BYTES.add(put_bytes);
+        sp.set("bytes", put_bytes);
         Ok(())
     }
 
@@ -540,16 +560,29 @@ impl Engine for JsonReader {
 
     fn perform_gets(&mut self) -> Result<()> {
         let pending = self.gets.drain_pending();
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let mut sp = trace::span("json.get_sweep")
+            .with("step", self.step)
+            .with("gets", pending.len());
+        let mut got_bytes = 0u64;
         let mut failure = None;
         for g in &pending {
             match self.fetch(&g.var, &g.selection) {
-                Ok(data) => self.gets.complete(g.handle, data),
+                Ok(data) => {
+                    got_bytes += data.len() as u64;
+                    self.gets.complete(g.handle, data);
+                }
                 Err(e) => {
                     failure = Some(e);
                     break;
                 }
             }
         }
+        JSON_GET_SWEEPS.inc();
+        JSON_GET_BYTES.add(got_bytes);
+        sp.set("bytes", got_bytes);
         if let Some(e) = failure {
             // Poison the whole drained batch so take_get reports this
             // error, not "unknown handle".

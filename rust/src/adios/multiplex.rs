@@ -56,6 +56,7 @@ use super::engine::{
 };
 use super::ops::OpsReport;
 use super::region;
+use crate::obs::trace;
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::Attribute;
 
@@ -229,6 +230,10 @@ impl Engine for MultiplexReader {
         if self.view.is_some() {
             bail!("begin_step while a step is open");
         }
+        // The alignment barrier: span duration is the cost of polling
+        // every unresolved child plus (on the Ok path) the view merge.
+        let mut sp = trace::span("multiplex.align")
+            .with("children", self.children.len());
         // Poll every child that has not resolved this round yet
         // (children holding an Open or Dropped verdict from an earlier
         // NotReady round are parked).
@@ -251,6 +256,7 @@ impl Engine for MultiplexReader {
             // Children with a verdict stay parked; the next poll only
             // touches the stragglers — the barrier must not resolve
             // an ordinal some child has not yet seen.
+            sp.set("status", "not_ready");
             return Ok(StepStatus::NotReady);
         }
         if self.children.iter().any(|c| c.step == ChildStep::Dropped) {
@@ -283,6 +289,7 @@ impl Engine for MultiplexReader {
                 }
             }
             self.discarded += 1;
+            sp.set("status", "discarded");
             return Ok(StepStatus::Discarded);
         }
         let ended = self
@@ -291,6 +298,7 @@ impl Engine for MultiplexReader {
             .filter(|c| c.step == ChildStep::Ended)
             .count();
         if ended == self.children.len() {
+            sp.set("status", "end_of_stream");
             return Ok(StepStatus::EndOfStream);
         }
         if ended > 0 {
@@ -310,6 +318,7 @@ impl Engine for MultiplexReader {
         }
         // All Open: the barrier holds, merge the step.
         self.view = Some(self.build_view()?);
+        sp.set("status", "ok");
         Ok(StepStatus::Ok)
     }
 
@@ -437,6 +446,8 @@ impl Engine for MultiplexReader {
         if self.view.is_none() {
             bail!("perform_gets outside step");
         }
+        let _sp = trace::span("multiplex.perform_gets")
+            .with("gets", batch.len());
         // One batched perform per involved child — each backend keeps
         // its own batching (one wire request per writer over SST, one
         // file sweep over BP).

@@ -494,6 +494,11 @@ pub struct OpsReport {
     pub raw_bytes_out: u64,
     pub encode_ns: u64,
     pub decode_ns: u64,
+    /// Heap buffers allocated on the data path (codec output buffers,
+    /// reader reassembly buffers). Steady-state pipelines should see
+    /// this stop growing once passthrough/identity paths are in effect;
+    /// `benches/micro_runtime.rs` asserts exactly that.
+    pub allocations: u64,
 }
 
 impl OpsReport {
@@ -506,6 +511,7 @@ impl OpsReport {
         self.raw_bytes_out += o.raw_bytes_out;
         self.encode_ns += o.encode_ns;
         self.decode_ns += o.decode_ns;
+        self.allocations += o.allocations;
     }
 
     pub fn is_empty(&self) -> bool {
@@ -563,6 +569,7 @@ pub fn encode_bytes(
     report.chunks_encoded += 1;
     report.raw_bytes_in += raw.len() as u64;
     report.encoded_bytes_out += framed.len() as u64;
+    report.allocations += 1;
     Ok(Arc::new(framed))
 }
 
@@ -582,6 +589,7 @@ pub fn decode_bytes(
     report.chunks_decoded += 1;
     report.encoded_bytes_in += framed.len() as u64;
     report.raw_bytes_out += raw.len() as u64;
+    report.allocations += 1;
     Ok(Arc::new(raw))
 }
 

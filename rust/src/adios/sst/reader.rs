@@ -13,6 +13,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
+use once_cell::sync::Lazy;
 
 use crate::adios::engine::{
     Bytes, DeferredGet, Engine, GetHandle, GetQueue, Mode, StepStatus,
@@ -22,10 +23,17 @@ use crate::adios::ops::{self, OpChain, OpsReport};
 use crate::adios::region;
 use crate::adios::transport::{self, Conn, Recv};
 use crate::adios::wire::{GetItem, GetReply, Msg, StepMeta};
+use crate::obs::metrics::{counter, Counter};
+use crate::obs::trace;
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::Attribute;
 
 use super::SstStats;
+
+static GET_BATCHES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("sst.get_batches"));
+static GET_BYTES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("sst.get_bytes"));
 
 /// Options for opening a reader.
 #[derive(Clone)]
@@ -466,6 +474,9 @@ impl SstReader {
     /// The body of [`Engine::perform_gets`] for one drained batch; on
     /// error the caller poisons every handle in `pending`.
     fn perform_batch(&mut self, pending: &[DeferredGet]) -> Result<()> {
+        // Span covers the full round trip: plan, pipelined requests,
+        // replies, reassembly. The reader holds no locks here.
+        let mut sp = trace::span("sst.get_batch").with("gets", pending.len());
         // Merge each requested variable's chunk table ONCE per batch
         // instead of once per deferred get: a fleet worker batches one
         // slice set per variable per step, and with N writers x many
@@ -550,6 +561,8 @@ impl SstReader {
 
         // Send one batched request per writer (pipelined: all requests
         // go out before any reply is awaited).
+        sp.set("step", step);
+        sp.set("writers", per_writer.len());
         let mut sent: Vec<(usize, u64, Vec<Part>)> = Vec::new();
         for (writer_rank, parts) in per_writer {
             let widx = self
@@ -582,6 +595,8 @@ impl SstReader {
         let mut passthrough: Vec<Option<Bytes>> = vec![None; pending.len()];
         let mut buffers: Vec<Option<Vec<u8>>> = Vec::new();
         buffers.resize_with(pending.len(), || None);
+        let mut batch_bytes = 0u64;
+        let mut reassembly_allocs = 0u64;
         for (widx, req_id, parts) in sent {
             let replies = self.recv_batch_reply(widx, req_id)?;
             self.stats.data_messages += 1;
@@ -597,6 +612,7 @@ impl SstReader {
                 let data = match reply {
                     GetReply::Data(d) => {
                         self.stats.bytes_got += d.len() as u64;
+                        batch_bytes += d.len() as u64;
                         d
                     }
                     GetReply::Encoded(d) => {
@@ -605,6 +621,7 @@ impl SstReader {
                         // raw size must match what this part's
                         // selection needs.
                         self.stats.bytes_got += d.len() as u64;
+                        batch_bytes += d.len() as u64;
                         let (dtype, chain) = &coding[part.get_idx];
                         ops::decode_get(chain, *dtype, &part.sel, &d,
                                         &mut self.ops_stats)
@@ -626,6 +643,7 @@ impl SstReader {
                     continue;
                 }
                 let buf = buffers[part.get_idx].get_or_insert_with(|| {
+                    reassembly_allocs += 1;
                     vec![
                         0u8;
                         g.selection.num_elements() as usize
@@ -647,6 +665,10 @@ impl SstReader {
             };
             self.gets.complete(g.handle, data);
         }
+        self.ops_stats.allocations += reassembly_allocs;
+        GET_BATCHES.inc();
+        GET_BYTES.add(batch_bytes);
+        sp.set("bytes", batch_bytes);
         Ok(())
     }
 }

@@ -15,7 +15,10 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
+use once_cell::sync::Lazy;
 
+use crate::obs::metrics::{counter, Counter};
+use crate::obs::trace;
 use crate::util::sync::{
     classes, OrderedCondvar, OrderedGuard, OrderedMutex,
 };
@@ -32,6 +35,18 @@ use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::Attribute;
 
 use super::{QueueConfig, QueueFullPolicy, SstStats, StagedStep};
+
+// Interned obs handles (registry lock touched once, at first deref).
+static PUT_BYTES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("sst.put_bytes"));
+static STAGED_BYTES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("sst.staged_bytes"));
+static ANNOUNCES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("sst.announce_msgs"));
+static SERVE_BATCHES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("sst.serve_batches"));
+static SERVE_BYTES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("sst.serve_bytes"));
 
 /// Options for opening a writer.
 #[derive(Clone)]
@@ -365,6 +380,13 @@ fn serve_reader(
                 }
                 match rx.recv_timeout(Duration::from_millis(100)) {
                     Ok(Recv::Msg(Msg::GetBatch { req_id, step, items })) => {
+                        // Span opened before any lock: it covers the
+                        // whole request turnaround (lock waits, codec
+                        // work, the reply send) in one event.
+                        let mut sp = trace::span("sst.serve_batch")
+                            .with("step", step)
+                            .with("reader", peer.rank)
+                            .with("items", items.len());
                         // Grab the staged step's Arc under the lock, but
                         // serve (extract/decode/re-encode — potentially
                         // CPU-bound codec work) OUTSIDE it, so concurrent
@@ -406,6 +428,9 @@ fn serve_reader(
                                 ),
                             }
                         }
+                        SERVE_BATCHES.inc();
+                        SERVE_BYTES.add(served_bytes);
+                        sp.set("bytes", served_bytes);
                         {
                             let Some(mut sh) = lock_or_warn(&shared)
                             else {
@@ -650,11 +675,15 @@ impl Engine for SstWriter {
         if pending.is_empty() {
             return Ok(());
         }
+        let mut sp = trace::span("sst.perform_puts")
+            .with("step", self.next_step)
+            .with("chunks", pending.len());
         let staged = self
             .current
             .as_mut()
             .ok_or_else(|| anyhow::anyhow!("perform_puts outside step"))?;
         let mut put_bytes = 0u64;
+        let mut staged_bytes = 0u64;
         let mut local_ops = OpsReport::default();
         for p in pending {
             // Operated chunks are staged encoded: the chain runs once
@@ -672,6 +701,7 @@ impl Engine for SstWriter {
                 self.opts.hostname.clone(),
             )
             .with_encoded_bytes(data.len() as u64);
+            staged_bytes += data.len() as u64;
             match staged
                 .meta
                 .vars
@@ -693,6 +723,10 @@ impl Engine for SstWriter {
                 .or_default()
                 .push((p.chunk, data));
         }
+        PUT_BYTES.add(put_bytes);
+        STAGED_BYTES.add(staged_bytes);
+        sp.set("bytes", put_bytes);
+        sp.set("staged_bytes", staged_bytes);
         let mut sh = self.shared.lock()?;
         sh.stats.bytes_put += put_bytes;
         sh.ops.absorb(local_ops);
@@ -770,6 +804,10 @@ impl Engine for SstWriter {
             .cloned()
             .collect();
         drop(sh);
+        let _sp = trace::span("sst.announce")
+            .with("step", step)
+            .with("readers", peers.len());
+        ANNOUNCES.add(peers.len() as u64);
         for r in peers {
             let ok = match r.tx.lock() {
                 Ok(mut tx) => tx

@@ -25,7 +25,20 @@ use anyhow::{bail, Context, Result};
 use once_cell::sync::Lazy;
 
 use super::wire::{decode_msg, encode_msg, GetReply, Msg};
+use crate::obs::metrics::{counter, Counter};
 use crate::util::sync::{classes, OrderedMutex};
+
+// Frame counters are observation-only: the wire layout is untouched.
+// Frames count on both transports; byte counters only on TCP, where
+// bytes actually cross a socket (inproc hands `Arc`s over, no copy).
+static FRAMES_SENT: Lazy<&'static Counter> =
+    Lazy::new(|| counter("wire.frames_sent"));
+static FRAMES_RECV: Lazy<&'static Counter> =
+    Lazy::new(|| counter("wire.frames_recv"));
+static WIRE_BYTES_SENT: Lazy<&'static Counter> =
+    Lazy::new(|| counter("wire.bytes_sent"));
+static WIRE_BYTES_RECV: Lazy<&'static Counter> =
+    Lazy::new(|| counter("wire.bytes_recv"));
 
 /// Receive outcome for the non-blocking path.
 pub enum Recv {
@@ -101,19 +114,27 @@ impl Conn for InProcConn {
     fn send(&mut self, msg: Msg) -> Result<()> {
         self.tx
             .send(msg)
-            .map_err(|_| anyhow::anyhow!("inproc peer {} gone", self.peer))
+            .map_err(|_| anyhow::anyhow!("inproc peer {} gone", self.peer))?;
+        FRAMES_SENT.inc();
+        Ok(())
     }
 
     fn recv(&mut self) -> Result<Recv> {
         match self.rx.recv() {
-            Ok(m) => Ok(Recv::Msg(m)),
+            Ok(m) => {
+                FRAMES_RECV.inc();
+                Ok(Recv::Msg(m))
+            }
             Err(_) => Ok(Recv::Closed),
         }
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> Result<Recv> {
         match self.rx.recv_timeout(timeout) {
-            Ok(m) => Ok(Recv::Msg(m)),
+            Ok(m) => {
+                FRAMES_RECV.inc();
+                Ok(Recv::Msg(m))
+            }
             Err(RecvTimeoutError::Timeout) => Ok(Recv::TimedOut),
             Err(RecvTimeoutError::Disconnected) => Ok(Recv::Closed),
         }
@@ -140,7 +161,9 @@ impl ConnTx for InProcTx {
     fn send(&mut self, msg: Msg) -> Result<()> {
         self.tx
             .send(msg)
-            .map_err(|_| anyhow::anyhow!("inproc peer {} gone", self.peer))
+            .map_err(|_| anyhow::anyhow!("inproc peer {} gone", self.peer))?;
+        FRAMES_SENT.inc();
+        Ok(())
     }
 }
 
@@ -151,14 +174,20 @@ struct InProcRx {
 impl ConnRx for InProcRx {
     fn recv(&mut self) -> Result<Recv> {
         match self.rx.recv() {
-            Ok(m) => Ok(Recv::Msg(m)),
+            Ok(m) => {
+                FRAMES_RECV.inc();
+                Ok(Recv::Msg(m))
+            }
             Err(_) => Ok(Recv::Closed),
         }
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> Result<Recv> {
         match self.rx.recv_timeout(timeout) {
-            Ok(m) => Ok(Recv::Msg(m)),
+            Ok(m) => {
+                FRAMES_RECV.inc();
+                Ok(Recv::Msg(m))
+            }
             Err(RecvTimeoutError::Timeout) => Ok(Recv::TimedOut),
             Err(RecvTimeoutError::Disconnected) => Ok(Recv::Closed),
         }
@@ -350,12 +379,16 @@ fn tcp_write_frame(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
         if !coalesced.is_empty() {
             stream.write_all(&coalesced)?;
         }
+        FRAMES_SENT.inc();
+        WIRE_BYTES_SENT.add(8 + body_len);
         return Ok(());
     }
     let body = encode_msg(msg);
     let len = (body.len() as u64).to_le_bytes();
     stream.write_all(&len)?;
     stream.write_all(&body)?;
+    FRAMES_SENT.inc();
+    WIRE_BYTES_SENT.add(8 + body.len() as u64);
     Ok(())
 }
 
@@ -447,6 +480,8 @@ fn tcp_read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Recv> {
         if consumed != len as u64 {
             bail!("batch reply length mismatch: {consumed} vs {len}");
         }
+        FRAMES_RECV.inc();
+        WIRE_BYTES_RECV.add(8 + len as u64);
         return Ok(Recv::Msg(Msg::GetBatchReply { req_id, items }));
     }
     buf.clear();
@@ -454,7 +489,10 @@ fn tcp_read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Recv> {
     buf.push(tag);
     buf.resize(len, 0);
     stream.read_exact(&mut buf[1..])?;
-    Ok(Recv::Msg(decode_msg(buf)?))
+    let msg = decode_msg(buf)?;
+    FRAMES_RECV.inc();
+    WIRE_BYTES_RECV.add(8 + len as u64);
+    Ok(Recv::Msg(msg))
 }
 
 impl Conn for TcpConn {

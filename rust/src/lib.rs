@@ -105,6 +105,15 @@
 //!   PIConGPU-like Kelvin–Helmholtz particle producer and a GAPD-like
 //!   SAXS diffraction consumer, both executing AOT-lowered JAX/Pallas
 //!   artifacts through [`runtime`] (PJRT); python never runs at runtime.
+//! * [`obs`] — the unified observability layer: scoped tracing spans
+//!   (per-thread buffers, central collector, Chrome-trace/Perfetto and
+//!   JSON-lines exporters with `pid`/`tid` mapped to fleet rank and
+//!   pipeline stage) plus a process-wide registry of counters, gauges
+//!   and log-bucketed histograms, threaded through the engine perform
+//!   paths, the SST announce/serve loops, the wire layer, the staged
+//!   pipe and the fleet. Surfaced on `produce`/`pipe` via `--trace`,
+//!   `--metrics` and `--metrics-interval`; near-zero cost when
+//!   disabled (gated by `benches/micro_obs.rs`).
 //! * [`util`], [`config`], [`testing`], [`bench`] — support substrates
 //!   built from scratch (no network access in this environment): CLI
 //!   parsing, statistics, deterministic RNG, a TOML-subset config
@@ -129,6 +138,7 @@ pub mod bench;
 pub mod cluster;
 pub mod config;
 pub mod distribution;
+pub mod obs;
 pub mod openpmd;
 pub mod pipeline;
 pub mod producer;

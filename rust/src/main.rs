@@ -29,13 +29,14 @@ use openpmd_stream::adios::ops::OpChain;
 use openpmd_stream::analysis::SaxsAnalyzer;
 use openpmd_stream::bench::Table;
 use openpmd_stream::distribution::{by_name, Strategy};
+use openpmd_stream::obs;
 use openpmd_stream::pipeline::ops_summary;
 use openpmd_stream::cluster::systems;
 use openpmd_stream::openpmd::chunk::Chunk;
 use openpmd_stream::openpmd::series::{self, Series};
 use openpmd_stream::openpmd::validate;
 use openpmd_stream::pipeline::fleet::{run_fleet, FleetOptions};
-use openpmd_stream::pipeline::pipe::{run, PipeOptions};
+use openpmd_stream::pipeline::pipe::{run, MetricsSink, PipeOptions};
 use openpmd_stream::producer::KhProducer;
 use openpmd_stream::runtime::Runtime;
 use openpmd_stream::util::bytes::fmt_bytes;
@@ -130,8 +131,58 @@ fn help() -> String {
             OptSpec { name: "csv", value_name: Some("PATH"),
                       default: Some("scatter.csv"),
                       help: "scatter-plot output (analyze)" },
+            OptSpec { name: "trace", value_name: Some("PATH"),
+                      default: None,
+                      help: "pipe/produce: record per-step spans and \
+                             write a Chrome trace-event file on exit \
+                             (load in Perfetto; a .jsonl path writes \
+                             JSON lines instead)" },
+            OptSpec { name: "metrics", value_name: Some("PATH"),
+                      default: None,
+                      help: "pipe/produce: append JSON-line counter \
+                             snapshots to PATH while running" },
+            OptSpec { name: "metrics-interval", value_name: Some("N"),
+                      default: Some("1"),
+                      help: "steps between --metrics lines" },
         ],
     )
+}
+
+/// Parse the observability flags shared by `pipe` and `produce`:
+/// `--trace` switches the tracing layer on (near-zero cost when off)
+/// and names the export file; `--metrics [--metrics-interval N]`
+/// builds the periodic counter-snapshot sink.
+fn obs_from_args(
+    args: &Args,
+) -> Result<(Option<std::path::PathBuf>, Option<MetricsSink>)> {
+    let trace_path = args.get("trace").map(std::path::PathBuf::from);
+    if trace_path.is_some() {
+        obs::trace::enable();
+    }
+    let every: u64 = args.get_parse_or("metrics-interval", 1)?;
+    if every == 0 {
+        bail!("--metrics-interval must be >= 1");
+    }
+    let sink = args.get("metrics").map(|p| MetricsSink {
+        path: std::path::PathBuf::from(p),
+        every,
+    });
+    Ok((trace_path, sink))
+}
+
+/// Drain the span collector into `path`: a Chrome trace-event document
+/// (Perfetto-loadable), or JSON lines when the path ends in `.jsonl`.
+fn write_trace_file(path: &std::path::Path) -> Result<()> {
+    if path.extension().and_then(|e| e.to_str()) == Some("jsonl") {
+        let dumps = obs::trace::drain();
+        std::fs::write(path, obs::export::trace_json_lines(&dumps))
+            .with_context(|| format!("writing {}", path.display()))?;
+    } else {
+        obs::export::write_chrome_trace(path)
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    eprintln!("trace written to {}", path.display());
+    Ok(())
 }
 
 fn parse_operators(args: &Args) -> Result<Option<OpChain>> {
@@ -159,7 +210,8 @@ fn open_pipe_input(input: &str, rank: usize) -> Result<Box<dyn Engine>> {
 fn cmd_pipe(args: &Args) -> Result<()> {
     args.reject_unknown(&["in", "out", "engine", "steps",
                           "pipeline-depth", "operators", "readers",
-                          "strategy"])?;
+                          "strategy", "trace", "metrics",
+                          "metrics-interval"])?;
     let input = args.get("in").context("--in required")?;
     let output = args.get("out").context("--out required")?;
     let readers: usize = args.get_parse_or("readers", 1)?;
@@ -170,6 +222,7 @@ fn cmd_pipe(args: &Args) -> Result<()> {
     let depth: usize = args.get_parse_or("pipeline-depth", 0)?;
     let max_steps = args.get_parse::<u64>("steps")?;
     let operators = parse_operators(args)?;
+    let (trace_path, metrics_sink) = obs_from_args(args)?;
     let strategy: Arc<dyn Strategy> =
         Arc::from(by_name(args.get_or("strategy", "roundrobin"))?);
 
@@ -196,6 +249,7 @@ fn cmd_pipe(args: &Args) -> Result<()> {
         opts.depth = depth;
         opts.operators = operators;
         opts.strategy = strategy;
+        opts.metrics_sink = metrics_sink;
         let report = run(reader.as_mut(), writer.as_mut(), opts)?;
         println!(
             "piped {} steps ({} dropped), {} in, {} out, {} chunks",
@@ -218,6 +272,9 @@ fn cmd_pipe(args: &Args) -> Result<()> {
                 o.hidden_seconds(),
                 100.0 * o.overlap_efficiency()
             );
+        }
+        if let Some(p) = &trace_path {
+            write_trace_file(p)?;
         }
         return Ok(());
     }
@@ -255,12 +312,37 @@ fn cmd_pipe(args: &Args) -> Result<()> {
     let index = series::write_shard_index(output, readers,
                                           report.steps())?;
     println!("shard index: {}", index.display());
+    // Fleet workers write their own shards concurrently, so per-step
+    // metric lines would interleave; the fleet emits one final
+    // whole-process snapshot instead.
+    if let Some(sink) = &metrics_sink {
+        let line = obs::export::metrics_line(
+            None, &obs::metrics::snapshot_metrics());
+        std::fs::write(&sink.path, format!("{line}\n"))
+            .with_context(|| format!("writing {}", sink.path.display()))?;
+    }
+    if let Some(p) = &trace_path {
+        write_trace_file(p)?;
+    }
+    Ok(())
+}
+
+/// Append one metrics line (create the file on first use).
+fn append_metrics_line(path: &std::path::Path, line: &str) -> Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    writeln!(f, "{line}")?;
     Ok(())
 }
 
 fn cmd_produce(args: &Args) -> Result<()> {
     args.reject_unknown(&["out", "engine", "steps", "particles",
-                          "no-runtime", "period", "operators"])?;
+                          "no-runtime", "period", "operators",
+                          "trace", "metrics", "metrics-interval"])?;
     let out = args.get("out").context("--out required")?;
     let steps: u64 = args.get_parse_or("steps", 10)?;
     let period: u64 = args.get_parse_or("period", 10)?;
@@ -292,9 +374,16 @@ fn cmd_produce(args: &Args) -> Result<()> {
         })?),
         other => bail!("unknown engine {other}"),
     };
+    let (trace_path, metrics_sink) = obs_from_args(args)?;
+    obs::trace::set_thread_identity(0, "produce");
+    let metrics_base = metrics_sink.as_ref().map(|s| {
+        let _ = std::fs::write(&s.path, "");
+        obs::metrics::snapshot_metrics()
+    });
     let mut series = Series::new("openpmd-stream", "openpmd-stream produce");
     let t0 = std::time::Instant::now();
     for out_step in 0..steps {
+        let _sp = obs::trace::span("produce.step").with("step", out_step);
         for _ in 0..period {
             producer.step()?;
         }
@@ -305,9 +394,28 @@ fn cmd_produce(args: &Args) -> Result<()> {
             producer.steps_taken(),
             t0.elapsed().as_secs_f64()
         );
+        if let (Some(sink), Some(base)) = (&metrics_sink, &metrics_base) {
+            if (out_step + 1) % sink.every == 0 {
+                let snap = obs::metrics::snapshot_metrics().delta(base);
+                append_metrics_line(
+                    &sink.path,
+                    &obs::export::metrics_line(Some(out_step), &snap),
+                )?;
+            }
+        }
     }
     let ops_report = engine.ops_report();
     engine.close()?;
+    if let (Some(sink), Some(base)) = (&metrics_sink, &metrics_base) {
+        let snap = obs::metrics::snapshot_metrics().delta(base);
+        append_metrics_line(
+            &sink.path,
+            &obs::export::metrics_line(None, &snap),
+        )?;
+    }
+    if let Some(p) = &trace_path {
+        write_trace_file(p)?;
+    }
     println!(
         "produced {steps} iterations of {n} particles ({} each)",
         fmt_bytes(n as u64 * 7 * 4)

@@ -1,0 +1,329 @@
+//! Exporters: Chrome trace-event JSON and JSON lines.
+//!
+//! [`chrome_trace`] renders a collector drain as a Chrome trace-event
+//! document (`{"traceEvents": [...]}`), directly loadable in
+//! Perfetto / `chrome://tracing`. Every span becomes one complete
+//! (`"ph": "X"`) event — balanced begin/end by construction — and the
+//! `pid`/`tid` axes carry the pipeline topology:
+//!
+//! * `pid` = fleet rank (threads that declared one via
+//!   [`crate::obs::trace::set_thread_identity`]; rank 0 otherwise),
+//!   labelled by a
+//!   `process_name` metadata event, so an M-rank fleet renders as M
+//!   process lanes;
+//! * `tid` = thread registration sequence, labelled with the stage
+//!   name (or OS thread name) via `thread_name` metadata, so staged
+//!   fetch/store overlap is visible as parallel tracks.
+//!
+//! [`trace_json_lines`] renders the same drain as one JSON object per
+//! line (grep/jq-friendly); [`metrics_line`] renders a metric
+//! [`Snapshot`] as a single line for the pipe's periodic
+//! `--metrics <path>` emission.
+
+use std::collections::BTreeMap;
+
+use crate::obs::metrics::Snapshot;
+use crate::obs::trace::{Event, FieldValue, ThreadDump};
+use crate::util::json::Json;
+
+fn field_json(v: &FieldValue) -> Json {
+    match v {
+        FieldValue::U64(n) => Json::Num(*n as f64),
+        FieldValue::F64(x) => Json::Num(*x),
+        FieldValue::Str(s) => Json::Str(s.clone()),
+    }
+}
+
+fn args_json(fields: &[(&'static str, FieldValue)]) -> Json {
+    Json::Obj(
+        fields
+            .iter()
+            .map(|(k, v)| (k.to_string(), field_json(v)))
+            .collect(),
+    )
+}
+
+fn meta_event(name: &str, pid: u64, tid: u64, label: &str) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".into(), Json::Str(name.into()));
+    o.insert("ph".into(), Json::Str("M".into()));
+    o.insert("pid".into(), Json::Num(pid as f64));
+    o.insert("tid".into(), Json::Num(tid as f64));
+    let mut args = BTreeMap::new();
+    args.insert("name".into(), Json::Str(label.into()));
+    o.insert("args".into(), Json::Obj(args));
+    Json::Obj(o)
+}
+
+fn span_event(pid: u64, tid: u64, e: &Event) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".into(), Json::Str(e.name.into()));
+    o.insert("ph".into(), Json::Str("X".into()));
+    o.insert("pid".into(), Json::Num(pid as f64));
+    o.insert("tid".into(), Json::Num(tid as f64));
+    o.insert("ts".into(), Json::Num(e.start_us as f64));
+    o.insert("dur".into(), Json::Num(e.dur_us as f64));
+    if !e.fields.is_empty() {
+        o.insert("args".into(), args_json(&e.fields));
+    }
+    Json::Obj(o)
+}
+
+/// Label for a dump's process lane and thread track.
+fn lane(dump: &ThreadDump) -> (u64, String, String) {
+    let pid = dump.rank.unwrap_or(0) as u64;
+    let process = match dump.rank {
+        Some(r) => format!("rank {r}"),
+        None => "rank 0".to_string(),
+    };
+    let thread = match &dump.stage {
+        Some(s) => s.clone(),
+        None => dump.thread_name.clone(),
+    };
+    (pid, process, thread)
+}
+
+/// Render a collector drain as a Chrome trace-event document.
+pub fn chrome_trace(dumps: &[ThreadDump]) -> Json {
+    let mut events = Vec::new();
+    let mut named_pids: BTreeMap<u64, String> = BTreeMap::new();
+    for d in dumps {
+        if d.events.is_empty() {
+            continue;
+        }
+        let (pid, process, thread) = lane(d);
+        named_pids.entry(pid).or_insert(process);
+        events.push(meta_event("thread_name", pid, d.tid, &thread));
+        for e in &d.events {
+            events.push(span_event(pid, d.tid, e));
+        }
+    }
+    let mut all = Vec::with_capacity(events.len() + named_pids.len());
+    for (pid, label) in &named_pids {
+        all.push(meta_event("process_name", *pid, 0, label));
+    }
+    all.extend(events);
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".into(), Json::Arr(all));
+    doc.insert(
+        "displayTimeUnit".into(),
+        Json::Str("ms".into()),
+    );
+    Json::Obj(doc)
+}
+
+/// Render a collector drain as JSON lines: one object per span, with
+/// the owning lane's rank/stage denormalized onto every line.
+pub fn trace_json_lines(dumps: &[ThreadDump]) -> String {
+    let mut out = String::new();
+    for d in dumps {
+        let (pid, _, thread) = lane(d);
+        for e in &d.events {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), Json::Str(e.name.into()));
+            o.insert("rank".into(), Json::Num(pid as f64));
+            o.insert("stage".into(), Json::Str(thread.clone()));
+            o.insert("tid".into(), Json::Num(d.tid as f64));
+            o.insert("ts_us".into(), Json::Num(e.start_us as f64));
+            o.insert("dur_us".into(), Json::Num(e.dur_us as f64));
+            if !e.fields.is_empty() {
+                o.insert("args".into(), args_json(&e.fields));
+            }
+            out.push_str(&Json::Obj(o).to_string());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Render a metric snapshot as one JSON line, tagged with the pipe
+/// step it was taken at (`step: null` for the final summary line).
+pub fn metrics_line(step: Option<u64>, snap: &Snapshot) -> String {
+    let mut o = BTreeMap::new();
+    o.insert(
+        "step".into(),
+        match step {
+            Some(s) => Json::Num(s as f64),
+            None => Json::Null,
+        },
+    );
+    o.insert(
+        "counters".into(),
+        Json::Obj(
+            snap.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        ),
+    );
+    o.insert(
+        "gauges".into(),
+        Json::Obj(
+            snap.gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        ),
+    );
+    o.insert(
+        "histograms".into(),
+        Json::Obj(
+            snap.hists
+                .iter()
+                .map(|(k, h)| {
+                    let mut ho = BTreeMap::new();
+                    ho.insert(
+                        "count".into(),
+                        Json::Num(h.count as f64),
+                    );
+                    ho.insert("sum".into(), Json::Num(h.sum as f64));
+                    ho.insert(
+                        "mean".into(),
+                        Json::Num(h.mean()),
+                    );
+                    ho.insert(
+                        "max_bound".into(),
+                        Json::Num(h.max_bound() as f64),
+                    );
+                    (k.clone(), Json::Obj(ho))
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(o).to_string()
+}
+
+/// Drain the collector and write a Chrome-trace file.
+pub fn write_chrome_trace(
+    path: &std::path::Path,
+) -> std::io::Result<()> {
+    let dumps = crate::obs::trace::drain();
+    std::fs::write(path, chrome_trace(&dumps).to_string_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::HistSnapshot;
+
+    /// A hand-built drain: rank-1 fetch stage with a nested pair,
+    /// plus an anonymous main thread — exercises both lane mappings.
+    fn fixture() -> Vec<ThreadDump> {
+        vec![
+            ThreadDump {
+                tid: 1,
+                thread_name: "main".into(),
+                rank: None,
+                stage: None,
+                events: vec![Event {
+                    name: "pipe.step",
+                    start_us: 0,
+                    dur_us: 300,
+                    fields: vec![("step", FieldValue::U64(0))],
+                }],
+                dropped: 0,
+            },
+            ThreadDump {
+                tid: 2,
+                thread_name: "fleet-r1".into(),
+                rank: Some(1),
+                stage: Some("fetch".into()),
+                events: vec![
+                    Event {
+                        name: "sst.get_batch",
+                        start_us: 120,
+                        dur_us: 80,
+                        fields: vec![
+                            ("bytes", FieldValue::U64(4096)),
+                            ("writers", FieldValue::U64(2)),
+                        ],
+                    },
+                    Event {
+                        name: "pipe.fetch",
+                        start_us: 100,
+                        dur_us: 150,
+                        fields: vec![],
+                    },
+                ],
+                dropped: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_golden() {
+        let doc = chrome_trace(&fixture());
+        let expect = concat!(
+            r#"{"displayTimeUnit":"ms","traceEvents":["#,
+            r#"{"args":{"name":"rank 0"},"name":"process_name","#,
+            r#""ph":"M","pid":0,"tid":0},"#,
+            r#"{"args":{"name":"rank 1"},"name":"process_name","#,
+            r#""ph":"M","pid":1,"tid":0},"#,
+            r#"{"args":{"name":"main"},"name":"thread_name","#,
+            r#""ph":"M","pid":0,"tid":1},"#,
+            r#"{"args":{"step":0},"dur":300,"name":"pipe.step","#,
+            r#""ph":"X","pid":0,"tid":1,"ts":0},"#,
+            r#"{"args":{"name":"fetch"},"name":"thread_name","#,
+            r#""ph":"M","pid":1,"tid":2},"#,
+            r#"{"args":{"bytes":4096,"writers":2},"dur":80,"#,
+            r#""name":"sst.get_batch","ph":"X","pid":1,"tid":2,"#,
+            r#""ts":120},"#,
+            r#"{"dur":150,"name":"pipe.fetch","ph":"X","pid":1,"#,
+            r#""tid":2,"ts":100}]}"#,
+        );
+        assert_eq!(doc.to_string(), expect);
+        // And it survives a parse round trip.
+        let back = crate::util::json::parse(&doc.to_string()).unwrap();
+        assert_eq!(
+            back.get("traceEvents").unwrap().as_arr().unwrap().len(),
+            7
+        );
+    }
+
+    #[test]
+    fn json_lines_golden() {
+        let lines = trace_json_lines(&fixture());
+        let expect = concat!(
+            r#"{"args":{"step":0},"dur_us":300,"name":"pipe.step","#,
+            r#""rank":0,"stage":"main","tid":1,"ts_us":0}"#,
+            "\n",
+            r#"{"args":{"bytes":4096,"writers":2},"dur_us":80,"#,
+            r#""name":"sst.get_batch","rank":1,"stage":"fetch","#,
+            r#""tid":2,"ts_us":120}"#,
+            "\n",
+            r#"{"dur_us":150,"name":"pipe.fetch","rank":1,"#,
+            r#""stage":"fetch","tid":2,"ts_us":100}"#,
+            "\n",
+        );
+        assert_eq!(lines, expect);
+        for line in lines.lines() {
+            crate::util::json::parse(line).unwrap();
+        }
+    }
+
+    #[test]
+    fn metrics_line_golden() {
+        let mut snap = Snapshot::default();
+        snap.counters.insert("wire.frames_sent".into(), 12);
+        snap.gauges.insert("staged.queue_depth".into(), 3);
+        snap.hists.insert(
+            "pipe.backoff_us".into(),
+            HistSnapshot {
+                buckets: vec![0, 0, 1],
+                sum: 2,
+                count: 1,
+            },
+        );
+        let line = metrics_line(Some(4), &snap);
+        let expect = concat!(
+            r#"{"counters":{"wire.frames_sent":12},"#,
+            r#""gauges":{"staged.queue_depth":3},"#,
+            r#""histograms":{"pipe.backoff_us":{"count":1,"#,
+            r#""max_bound":4,"mean":2,"sum":2}},"step":4}"#,
+        );
+        assert_eq!(line, expect);
+        let no_step = metrics_line(None, &Snapshot::default());
+        assert!(no_step.starts_with(r#"{"counters":{}"#));
+        assert!(no_step.contains(r#""step":null"#));
+    }
+}

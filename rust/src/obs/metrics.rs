@@ -1,0 +1,345 @@
+//! Process-wide registry of named counters, gauges and log-bucketed
+//! histograms.
+//!
+//! Metrics are always on: an increment is one relaxed atomic add, so
+//! report structs can read them without a "metrics enabled" mode.
+//! Handles are interned — [`counter`]/[`gauge`]/[`histogram`] return
+//! the same `&'static` instance for the same name — and call sites
+//! cache the handle in a `Lazy` static so the registry lock is taken
+//! once per site, never per increment:
+//!
+//! ```ignore
+//! static FRAMES: Lazy<&'static Counter> =
+//!     Lazy::new(|| metrics::counter("wire.frames_sent"));
+//! FRAMES.add(1);
+//! ```
+//!
+//! [`snapshot_metrics`] captures every registered instrument at once;
+//! [`Snapshot::delta`] subtracts an earlier snapshot, which is how
+//! per-run numbers are derived from process-wide totals (tests and
+//! the pipe's `--metrics-interval` emission both rely on it).
+//!
+//! Histograms are log₂-bucketed: bucket `i` counts samples in
+//! `[2^(i-1), 2^i)` (bucket 0 counts zeros), with exact `sum` and
+//! `count` alongside — enough for the backoff/lock-wait/latency
+//! distributions the exporters print without storing samples.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use once_cell::sync::Lazy;
+
+use crate::util::sync::{classes, OrderedMutex};
+
+/// Number of log₂ buckets; covers the full `u64` sample range.
+pub const HIST_BUCKETS: usize = 65;
+
+/// A monotonically increasing counter.
+pub struct Counter {
+    name: &'static str,
+    v: AtomicU64,
+}
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// A last-value-wins gauge (queue depths, current step).
+pub struct Gauge {
+    name: &'static str,
+    v: AtomicU64,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// A log₂-bucketed histogram with exact sum and count.
+pub struct Histogram {
+    name: &'static str,
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    #[inline]
+    pub fn record(&self, sample: u64) {
+        let idx = (64 - sample.leading_zeros()) as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(sample, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub sum: u64,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper edge of the highest non-empty bucket (a cheap max bound).
+    pub fn max_bound(&self) -> u64 {
+        match self.buckets.iter().rposition(|&c| c > 0) {
+            Some(0) | None => 0,
+            Some(i) if i >= 64 => u64::MAX,
+            Some(i) => 1u64 << i,
+        }
+    }
+
+    fn delta(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .zip(earlier.buckets.iter().chain(std::iter::repeat(&0)))
+                .map(|(now, then)| now.saturating_sub(*then))
+                .collect(),
+            sum: self.sum.saturating_sub(earlier.sum),
+            count: self.count.saturating_sub(earlier.count),
+        }
+    }
+}
+
+/// The interned-instrument registry. One map per instrument kind,
+/// each under the obs lock class; entries are leaked to `'static` so
+/// handles can live in `Lazy` statics at call sites.
+struct Registry {
+    counters: OrderedMutex<BTreeMap<&'static str, &'static Counter>>,
+    gauges: OrderedMutex<BTreeMap<&'static str, &'static Gauge>>,
+    hists: OrderedMutex<BTreeMap<&'static str, &'static Histogram>>,
+}
+
+static REGISTRY: Lazy<Registry> = Lazy::new(|| Registry {
+    counters: OrderedMutex::new(&classes::OBS, BTreeMap::new()),
+    gauges: OrderedMutex::new(&classes::OBS, BTreeMap::new()),
+    hists: OrderedMutex::new(&classes::OBS, BTreeMap::new()),
+});
+
+/// Intern the counter named `name`.
+pub fn counter(name: &'static str) -> &'static Counter {
+    let fallback: fn(&'static str) -> &'static Counter = |name| {
+        Box::leak(Box::new(Counter { name, v: AtomicU64::new(0) }))
+    };
+    match REGISTRY.counters.lock() {
+        Ok(mut m) => *m
+            .entry(name)
+            .or_insert_with(|| fallback(name)),
+        // Poisoned registry: hand out an unregistered instrument so
+        // the caller keeps working (it just won't export).
+        Err(_) => fallback(name),
+    }
+}
+
+/// Intern the gauge named `name`.
+pub fn gauge(name: &'static str) -> &'static Gauge {
+    let fallback: fn(&'static str) -> &'static Gauge = |name| {
+        Box::leak(Box::new(Gauge { name, v: AtomicU64::new(0) }))
+    };
+    match REGISTRY.gauges.lock() {
+        Ok(mut m) => *m
+            .entry(name)
+            .or_insert_with(|| fallback(name)),
+        Err(_) => fallback(name),
+    }
+}
+
+/// Intern the histogram named `name`.
+pub fn histogram(name: &'static str) -> &'static Histogram {
+    let fallback: fn(&'static str) -> &'static Histogram = |name| {
+        Box::leak(Box::new(Histogram {
+            name,
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }))
+    };
+    match REGISTRY.hists.lock() {
+        Ok(mut m) => *m
+            .entry(name)
+            .or_insert_with(|| fallback(name)),
+        Err(_) => fallback(name),
+    }
+}
+
+/// Point-in-time copy of every registered instrument.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl Snapshot {
+    /// Counter value, defaulting to zero for unregistered names.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// This snapshot minus an `earlier` one: counters and histogram
+    /// contents subtract (saturating), gauges keep the later value.
+    pub fn delta(&self, earlier: &Snapshot) -> Snapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| {
+                let then = earlier.counters.get(k).copied().unwrap_or(0);
+                (k.clone(), v.saturating_sub(then))
+            })
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .map(|(k, h)| {
+                let then = earlier.hists.get(k);
+                let d = match then {
+                    Some(t) => h.delta(t),
+                    None => h.clone(),
+                };
+                (k.clone(), d)
+            })
+            .collect();
+        Snapshot { counters, gauges: self.gauges.clone(), hists }
+    }
+}
+
+/// Capture every registered instrument. The three registry maps are
+/// locked one at a time (same class, never nested). (Named uniquely —
+/// not `snapshot` — so the lint concurrency pass's name-based call
+/// linking cannot confuse it with `util::sync`'s debug helper.)
+pub fn snapshot_metrics() -> Snapshot {
+    let mut snap = Snapshot::default();
+    if let Ok(m) = REGISTRY.counters.lock() {
+        snap.counters = m
+            .iter()
+            .map(|(k, c)| (k.to_string(), c.get()))
+            .collect();
+    }
+    if let Ok(m) = REGISTRY.gauges.lock() {
+        snap.gauges =
+            m.iter().map(|(k, g)| (k.to_string(), g.get())).collect();
+    }
+    if let Ok(m) = REGISTRY.hists.lock() {
+        snap.hists = m
+            .iter()
+            .map(|(k, h)| (k.to_string(), h.snapshot()))
+            .collect();
+    }
+    snap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; tests use names unique to this
+    // module and delta-based assertions so parallel suites can't
+    // interfere.
+
+    #[test]
+    fn counters_intern_and_accumulate() {
+        let a = counter("test_metrics.counter_a");
+        let b = counter("test_metrics.counter_a");
+        assert!(std::ptr::eq(a, b), "same name -> same instrument");
+        let before = a.get();
+        a.inc();
+        a.add(9);
+        assert_eq!(a.get(), before + 10);
+        assert_eq!(a.name(), "test_metrics.counter_a");
+    }
+
+    #[test]
+    fn gauges_hold_last_value() {
+        let g = gauge("test_metrics.gauge_a");
+        g.set(42);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2() {
+        let h = histogram("test_metrics.hist_a");
+        let before = h.snapshot();
+        h.record(0); // bucket 0
+        h.record(1); // bucket 1
+        h.record(2); // bucket 2
+        h.record(3); // bucket 2
+        h.record(1024); // bucket 11
+        let d = h.snapshot().delta(&before);
+        assert_eq!(d.count, 5);
+        assert_eq!(d.sum, 1030);
+        assert_eq!(d.buckets[0], 1);
+        assert_eq!(d.buckets[1], 1);
+        assert_eq!(d.buckets[2], 2);
+        assert_eq!(d.buckets[11], 1);
+        assert!((d.mean() - 206.0).abs() < 1e-9);
+        assert_eq!(d.max_bound(), 2048);
+    }
+
+    #[test]
+    fn snapshot_delta_subtracts() {
+        let c = counter("test_metrics.delta_c");
+        let h = histogram("test_metrics.delta_h");
+        let before = snapshot_metrics();
+        c.add(3);
+        h.record(5);
+        let d = snapshot_metrics().delta(&before);
+        assert_eq!(d.counter("test_metrics.delta_c"), 3);
+        assert_eq!(d.hists["test_metrics.delta_h"].count, 1);
+        assert_eq!(d.counter("test_metrics.never_registered"), 0);
+    }
+}

@@ -1,0 +1,56 @@
+//! Unified observability: tracing spans + a process-wide metric
+//! registry + exporters, threaded through every hot path of the
+//! pipeline (engine perform paths, SST announce/serve, wire frames,
+//! staged fetch/store, fleet workers, the multiplex barrier).
+//!
+//! Three submodules, all dependency-free:
+//!
+//! * [`trace`] — scoped [`trace::Span`]s with monotonic timestamps and
+//!   structured key/value fields. Records land in per-thread bounded
+//!   buffers registered with a central collector; nothing is written
+//!   until a drain. Tracing is **off by default** and the disabled
+//!   record path is a single relaxed atomic load, so instrumentation
+//!   can stay compiled into release hot paths (gated by
+//!   `benches/micro_obs.rs`).
+//! * [`metrics`] — named counters, gauges and log-bucketed histograms
+//!   interned in one process-wide registry. Increments are lock-free
+//!   atomics and always on; call sites cache the interned handle in a
+//!   `Lazy` static so the registry lock is touched once per site.
+//! * [`export`] — serialization of a trace drain and a metric snapshot
+//!   to JSON lines and to the Chrome trace-event format
+//!   (`chrome://tracing` / Perfetto), with span `pid`/`tid` mapped to
+//!   fleet rank / pipeline stage via [`trace::set_thread_identity`].
+//!
+//! Metric names are dotted `subsystem.quantity[_unit]` strings —
+//! `wire.frames_sent`, `engine.put_bytes`, `pipe.backoff_us` — see
+//! the "Tracing & metrics" section of `tools/README.md` for the full
+//! scheme and the Perfetto workflow.
+//!
+//! Lock discipline: the collector's directory and each per-thread
+//! buffer use [`crate::util::sync::OrderedMutex`] under
+//! [`crate::util::sync::classes::OBS`], the highest-ranked class in
+//! the registry, so recording is legal while *any* other lock is
+//! held. Obs code never acquires another class while holding an obs
+//! lock and never nests two obs locks.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{snapshot_metrics, Counter, Gauge, Histogram, Snapshot};
+pub use trace::{span, Span};
+
+/// Tests that toggle the global tracing switch or drain the global
+/// collector must not interleave; they serialize on this guard.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::sync::{Mutex, MutexGuard};
+
+    use once_cell::sync::Lazy;
+
+    static GUARD: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+
+    pub fn serialize() -> MutexGuard<'static, ()> {
+        GUARD.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}

@@ -69,14 +69,22 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
+use once_cell::sync::Lazy;
 
 use crate::adios::engine::{Engine, VarInfo};
 use crate::adios::ops::OpChain;
 use crate::distribution::{
     verify_complete, Assignment, ChunkTable, ReaderLayout, Strategy,
 };
+use crate::obs::metrics::{counter, Counter};
+use crate::obs::trace;
 use crate::openpmd::chunk::Chunk;
 use crate::util::sync::{classes, OrderedMutex};
+
+/// Step+variable assignments actually computed (as opposed to reused
+/// from the shared cache by later-arriving ranks).
+static PLANS_COMPUTED: Lazy<&'static Counter> =
+    Lazy::new(|| counter("fleet.plans_computed"));
 
 use super::metrics::FleetReport;
 use super::pipe::{
@@ -183,6 +191,11 @@ impl SharedPlanner {
         table: &ChunkTable,
     ) -> Result<Vec<Chunk>> {
         use std::collections::btree_map::Entry;
+        // Span opened BEFORE the planner lock, so contention on the
+        // shared plan cache is visible as span time.
+        let mut sp = trace::span("fleet.plan")
+            .with("step", step)
+            .with("rank", rank);
         let key = (step, var.name.clone());
         let mut plans = self.plans.lock()?;
         let entry = match plans.entry(key.clone()) {
@@ -202,6 +215,7 @@ impl SharedPlanner {
                 }
                 #[cfg(not(debug_assertions))]
                 let _ = verify_complete; // referenced in debug only
+                PLANS_COMPUTED.inc();
                 slot.insert(PlanEntry {
                     assignment: Arc::new(assignment),
                     taken: 0,
@@ -218,6 +232,7 @@ impl SharedPlanner {
         if entry.taken >= self.readers {
             plans.remove(&key);
         }
+        sp.set("chunks", slices.len());
         Ok(slices)
     }
 
@@ -257,6 +272,9 @@ fn run_worker(
     opts: &PipeOptions,
     plan: &mut dyn StepPlan,
 ) -> Result<PipeReport> {
+    // This worker's lane in the exported trace ("fleet-r<rank>" as a
+    // process, one combined fetch+store track).
+    trace::set_thread_identity(opts.rank, "worker");
     let mut report = PipeReport::default();
     let wall = Instant::now();
     let mut poller = StepPoller::new(opts.idle_timeout);
@@ -334,6 +352,7 @@ pub fn run_fleet(
             idle_timeout: opts.idle_timeout,
             depth: opts.depth,
             operators: opts.operators.clone(),
+            metrics_sink: None,
         })
         .collect();
 
@@ -358,8 +377,11 @@ pub fn run_fleet(
                         let mut plan =
                             FleetPlan { shared: planner, rank };
                         if wopts.depth > 0 {
-                            // Staged read-ahead per worker: the
-                            // worker's budget moves to the fetch
+                            // Staged read-ahead per worker: this
+                            // thread becomes the store side (the
+                            // fetch thread labels itself).
+                            trace::set_thread_identity(rank, "store");
+                            // The worker's budget moves to the fetch
                             // side so the fleet still stops on a
                             // common input prefix.
                             run_staged_with_plan(

@@ -36,16 +36,30 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+use once_cell::sync::Lazy;
 
 use crate::adios::engine::{
     Bytes, Engine, GetHandle, StepStatus, VarDecl, VarInfo,
 };
 use crate::adios::ops::{OpChain, OpsReport};
 use crate::distribution::{ChunkTable, ReaderLayout, Strategy};
+use crate::obs::metrics::{counter, histogram, Counter, Histogram};
+use crate::obs::trace;
 use crate::openpmd::chunk::Chunk;
 use crate::openpmd::Attribute;
 
 use super::metrics::{OpKind, OverlapReport, PerceivedThroughput};
+
+// Interned obs handles; the closures run once at first deref, so the
+// registry lock is touched once per site and never inside the loop.
+static STEPS_FORWARDED: Lazy<&'static Counter> =
+    Lazy::new(|| counter("pipe.steps_forwarded"));
+static STEPS_DROPPED: Lazy<&'static Counter> =
+    Lazy::new(|| counter("pipe.steps_dropped"));
+static NOTREADY_POLLS: Lazy<&'static Counter> =
+    Lazy::new(|| counter("pipe.notready_polls"));
+static BACKOFF_US: Lazy<&'static Histogram> =
+    Lazy::new(|| histogram("pipe.backoff_us"));
 
 /// Pipe configuration.
 pub struct PipeOptions {
@@ -79,6 +93,20 @@ pub struct PipeOptions {
     /// on the output (the pipe as a transcoder — e.g. raw SST in,
     /// `shuffle|rle` BP out).
     pub operators: Option<OpChain>,
+    /// Periodic metric emission (the CLI's `--metrics` /
+    /// `--metrics-interval`): JSON lines of registry deltas since the
+    /// pipe started, one per interval plus a final summary line.
+    pub metrics_sink: Option<MetricsSink>,
+}
+
+/// Where and how often the pipe emits metric snapshots.
+#[derive(Clone, Debug)]
+pub struct MetricsSink {
+    /// JSON-lines output file (truncated at pipe start).
+    pub path: std::path::PathBuf,
+    /// Emit a line every N forwarded steps (`0` = only the final
+    /// summary line, which is always written).
+    pub every: u64,
 }
 
 impl PipeOptions {
@@ -95,7 +123,61 @@ impl PipeOptions {
             idle_timeout: Duration::from_secs(60),
             depth: 0,
             operators: None,
+            metrics_sink: None,
         }
+    }
+}
+
+/// Writes [`MetricsSink`] lines: registry deltas relative to the
+/// baseline taken when the pipe started, so process-global counters
+/// read as per-run numbers. File IO is best-effort — a full disk
+/// degrades the metrics file, never the pipe.
+pub(crate) struct MetricsEmitter {
+    sink: MetricsSink,
+    base: crate::obs::metrics::Snapshot,
+}
+
+impl MetricsEmitter {
+    /// Baseline the registry and truncate the sink file. (Named
+    /// uniquely — not `new` — because the lint pass links call edges
+    /// by bare name and this constructor may acquire the obs class.)
+    pub(crate) fn for_sink(sink: Option<&MetricsSink>)
+        -> Option<MetricsEmitter>
+    {
+        let sink = sink?.clone();
+        let _ = std::fs::write(&sink.path, "");
+        Some(MetricsEmitter {
+            sink,
+            base: crate::obs::snapshot_metrics(),
+        })
+    }
+
+    fn append_line(&self, line: &str) {
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.sink.path)
+        {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+
+    /// Called after each forwarded step; emits on interval boundaries.
+    pub(crate) fn emit_step_line(&self, steps: u64) {
+        if self.sink.every == 0 || steps % self.sink.every != 0 {
+            return;
+        }
+        let d = crate::obs::snapshot_metrics().delta(&self.base);
+        self.append_line(&crate::obs::export::metrics_line(
+            Some(steps),
+            &d,
+        ));
+    }
+
+    /// The final `step: null` summary line.
+    pub(crate) fn emit_final_line(&self) {
+        let d = crate::obs::snapshot_metrics().delta(&self.base);
+        self.append_line(&crate::obs::export::metrics_line(None, &d));
     }
 }
 
@@ -180,6 +262,8 @@ impl StepPoller {
         if self.idle_since.elapsed() > self.idle_timeout {
             bail!("pipe idle for {:?}, giving up", self.idle_timeout);
         }
+        NOTREADY_POLLS.inc();
+        BACKOFF_US.record(self.backoff.next.as_micros() as u64);
         self.backoff.wait();
         Ok(())
     }
@@ -310,6 +394,7 @@ pub(crate) fn load_open_step(
     plan: &mut dyn StepPlan,
     step: u64,
 ) -> Result<StepPayload> {
+    let mut sp = trace::span("pipe.fetch").with("step", step);
     let attributes: Vec<(String, Attribute)> = input
         .attribute_names()
         .into_iter()
@@ -365,6 +450,7 @@ pub(crate) fn load_open_step(
         vars.push((decl, chunks));
     }
     let load_seconds = started.elapsed().as_secs_f64().max(1e-9);
+    sp.set("bytes", bytes);
     input.end_step()?;
     Ok(StepPayload {
         step,
@@ -419,6 +505,9 @@ pub(crate) fn store_into_open_step(
     output: &mut dyn Engine,
     payload: &StepPayload,
 ) -> Result<f64> {
+    let _sp = trace::span("pipe.store")
+        .with("step", payload.step)
+        .with("bytes", payload.bytes);
     for (name, value) in &payload.attributes {
         output.put_attribute(name, value.clone())?;
     }
@@ -486,6 +575,7 @@ pub(crate) fn account_store(
     report.bytes_out += payload.bytes;
     report.chunks += payload.chunk_count() as u64;
     report.steps += 1;
+    STEPS_FORWARDED.inc();
 }
 
 /// The staged store stage's unit of work: offer one read-ahead payload
@@ -503,6 +593,7 @@ pub(crate) fn forward_payload(
         }
         Stored::Discarded => {
             report.dropped_steps += 1;
+            STEPS_DROPPED.inc();
         }
     }
     Ok(())
@@ -554,6 +645,7 @@ pub(crate) fn run_pipe_with_plan(
     let mut report = PipeReport::default();
     let wall = Instant::now();
     let mut poller = StepPoller::new(opts.idle_timeout);
+    let emitter = MetricsEmitter::for_sink(opts.metrics_sink.as_ref());
 
     loop {
         if let Some(max) = opts.max_steps {
@@ -582,16 +674,22 @@ pub(crate) fn run_pipe_with_plan(
             StepStatus::Discarded => {
                 input.end_step()?;
                 report.dropped_steps += 1;
+                STEPS_DROPPED.inc();
                 poller.activity();
                 continue;
             }
             other => bail!("output engine refused step: {other:?}"),
         }
         let fetch_index = report.steps + report.dropped_steps;
+        let _step_span =
+            trace::span("pipe.step").with("step", fetch_index);
         let payload = load_open_step(input, opts, plan, fetch_index)?;
         account_load(&mut report, &payload, opts.rank);
         let seconds = store_into_open_step(output, &payload)?;
         account_store(&mut report, &payload, seconds, opts.rank);
+        if let Some(e) = &emitter {
+            e.emit_step_line(report.steps);
+        }
         // Activity is stamped after the step was fully handled: a
         // step whose load+store exceeds the idle timeout must not
         // trip a spurious "idle" abort on the next poll.
@@ -603,6 +701,9 @@ pub(crate) fn run_pipe_with_plan(
     report.overlap.steps = report.steps;
     report.ops.absorb(input.ops_report());
     report.ops.absorb(output.ops_report());
+    if let Some(e) = &emitter {
+        e.emit_final_line();
+    }
     Ok(report)
 }
 

@@ -62,14 +62,27 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::Instant;
 
 use anyhow::Result;
+use once_cell::sync::Lazy;
 
 use crate::adios::engine::Engine;
 use crate::adios::ops::OpsReport;
+use crate::obs::metrics::{counter, gauge, Counter, Gauge};
+use crate::obs::trace;
 
 use super::pipe::{
-    fetch_step, forward_payload, Fetched, LocalPlan, PipeOptions,
-    PipeReport, StepPayload, StepPlan, StepPoller,
+    fetch_step, forward_payload, Fetched, LocalPlan, MetricsEmitter,
+    PipeOptions, PipeReport, StepPayload, StepPlan, StepPoller,
 };
+
+// Read-ahead queue accounting: depth is the difference of two
+// monotonic counters, so both stages can stamp it without sharing
+// state beyond the interned handles.
+static ENQUEUED: Lazy<&'static Counter> =
+    Lazy::new(|| counter("staged.steps_enqueued"));
+static DEQUEUED: Lazy<&'static Counter> =
+    Lazy::new(|| counter("staged.steps_dequeued"));
+static QUEUE_DEPTH: Lazy<&'static Gauge> =
+    Lazy::new(|| gauge("staged.queue_depth"));
 
 /// Which stage enforces `max_steps` — the one knob distinguishing a
 /// solo staged pipe from a staged fleet worker.
@@ -133,8 +146,19 @@ pub(crate) fn run_staged_with_plan(
                 // with the verdict.
                 (r, input.ops_report())
             });
-            let store_result =
-                store_loop(output, rx, &mut report, store_max, rank);
+            let emitter =
+                MetricsEmitter::for_sink(opts.metrics_sink.as_ref());
+            let store_result = store_loop(
+                output,
+                rx,
+                &mut report,
+                store_max,
+                rank,
+                emitter.as_ref(),
+            );
+            if let Some(e) = &emitter {
+                e.emit_final_line();
+            }
             // `store_loop` consumed (and dropped) the receiver, so a
             // fetch stage blocked on a full queue fails its send
             // immediately; the stop flag interrupts one that is polling
@@ -182,6 +206,8 @@ fn fetch_loop(
     stop: &AtomicBool,
     max_data_steps: Option<u64>,
 ) -> Result<()> {
+    // The dedicated fetch thread's lane in the exported trace.
+    trace::set_thread_identity(opts.rank, "fetch");
     let mut poller = StepPoller::new(opts.idle_timeout);
     // Input-step ordinal, the shared-plan key: advances for EVERY
     // consumed input step — discarded ones included — so staged fleet
@@ -208,12 +234,23 @@ fn fetch_loop(
             Ok(Fetched::Step(payload)) => {
                 ordinal += 1;
                 fetched += 1;
-                if tx.send(payload).is_err() {
+                // A long span here IS the backpressure signal: time
+                // blocked handing off to a full queue.
+                let send_failed = {
+                    let _sp = trace::span("staged.enqueue")
+                        .with("step", payload.step);
+                    tx.send(payload).is_err()
+                };
+                if send_failed {
                     // Store stage hung up (its failure, or max_steps
                     // reached): stop fetching; the store side owns the
                     // verdict.
                     break Ok(());
                 }
+                ENQUEUED.inc();
+                QUEUE_DEPTH.set(
+                    ENQUEUED.get().saturating_sub(DEQUEUED.get()),
+                );
                 // Stamp activity AFTER the hand-off: time spent
                 // blocked on a full queue is backpressure, not
                 // idleness, and must not eat into the idle budget.
@@ -251,6 +288,7 @@ fn store_loop(
     report: &mut PipeReport,
     max_steps: Option<u64>,
     rank: usize,
+    emitter: Option<&MetricsEmitter>,
 ) -> Result<bool> {
     loop {
         if let Some(max) = max_steps {
@@ -258,12 +296,22 @@ fn store_loop(
                 return Ok(true);
             }
         }
-        let payload = match rx.recv() {
-            Ok(p) => p,
-            // Fetch stage done (end of stream or its own error, which
-            // the caller surfaces after joining it).
-            Err(_) => return Ok(false),
+        let payload = {
+            // Time the store stage starves waiting for the fetch side.
+            let _sp = trace::span("staged.dequeue");
+            match rx.recv() {
+                Ok(p) => p,
+                // Fetch stage done (end of stream or its own error,
+                // which the caller surfaces after joining it).
+                Err(_) => return Ok(false),
+            }
         };
+        DEQUEUED.inc();
+        QUEUE_DEPTH
+            .set(ENQUEUED.get().saturating_sub(DEQUEUED.get()));
         forward_payload(output, &payload, report, rank)?;
+        if let Some(e) = emitter {
+            e.emit_step_line(report.steps);
+        }
     }
 }

@@ -126,6 +126,15 @@ pub mod classes {
     /// `serve_reader` sends under the registration lock.
     pub static SST_PEER_TX: LockClass =
         LockClass { name: "sst-peer-tx", rank: 70 };
+    /// `obs` trace-collector state (thread-buffer directory and the
+    /// per-thread event buffers). Deliberately the HIGHEST rank in the
+    /// registry: instrumentation records from inside any subsystem, so
+    /// this class must be acquirable while every other lock is held —
+    /// which under the strictly-increasing-rank rule means it sorts
+    /// last. Obs code never acquires any other class while holding it,
+    /// and never nests two obs locks (the drain clones the directory,
+    /// drops the guard, then visits buffers one at a time).
+    pub static OBS: LockClass = LockClass { name: "obs", rank: 80 };
 }
 
 /// Debug-build held-lock bookkeeping: a thread-local stack of the lock

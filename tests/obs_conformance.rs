@@ -1,0 +1,143 @@
+//! Observability conformance: the tracing layer must be a pure
+//! observer. Enabling it cannot change a single output byte of a pipe
+//! run, the drained spans must render as a well-formed balanced Chrome
+//! trace, and the counter registry must attribute the run's traffic to
+//! the backends that actually moved it.
+
+use std::path::PathBuf;
+
+use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
+use openpmd_stream::obs::metrics::snapshot_metrics;
+use openpmd_stream::obs::{export, trace};
+use openpmd_stream::pipeline::pipe::{run, PipeOptions};
+use openpmd_stream::testing::fixtures;
+use openpmd_stream::util::json;
+
+const EXTENT: u64 = 16;
+const CHUNKS: u64 = 4;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("opmd-obs-{name}-{}", std::process::id()))
+}
+
+fn pipe_once(src: &PathBuf, dst: &PathBuf) {
+    let mut input = BpReader::open(src).unwrap();
+    let mut output = BpWriter::create(dst, WriterCtx::default()).unwrap();
+    run(&mut input, &mut output, PipeOptions::solo()).unwrap();
+}
+
+/// The whole enable/disable lifecycle lives in ONE test: the trace
+/// switch is process-global, so splitting it across `#[test]` fns
+/// would race under the parallel test harness.
+#[test]
+fn tracing_is_a_pure_observer_and_exports_well_formed() {
+    let steps = 4u64;
+    let src = tmp("src.bp");
+    fixtures::write_chunked_bp(&src, steps, EXTENT, CHUNKS);
+
+    // Reference run, tracing off (the default).
+    assert!(!trace::enabled());
+    let d_off = tmp("off.bp");
+    pipe_once(&src, &d_off);
+
+    // Instrumented run: identical inputs, tracing on.
+    trace::drain(); // discard anything earlier tests of this binary left
+    trace::enable();
+    let d_on = tmp("on.bp");
+    pipe_once(&src, &d_on);
+    trace::disable();
+    let dumps = trace::drain();
+
+    // 1. Byte-identical output: tracing observed, never altered.
+    let want = std::fs::read(&d_off).unwrap();
+    let got = std::fs::read(&d_on).unwrap();
+    assert_eq!(want, got, "tracing changed the pipe's output bytes");
+
+    // 2. The drain actually saw the run: per-step pipe spans with
+    //    sane self-consistent timestamps.
+    let events: Vec<_> =
+        dumps.iter().flat_map(|d| d.events.iter()).collect();
+    assert!(!events.is_empty(), "enabled run recorded no spans");
+    let pipe_steps =
+        events.iter().filter(|e| e.name == "pipe.step").count() as u64;
+    // `>=`, not `==`: the sibling counter test may pipe concurrently
+    // while the global switch is on, and its spans land here too.
+    assert!(pipe_steps >= steps,
+            "expected >= {steps} pipe.step spans, saw {pipe_steps}");
+    for e in &events {
+        assert!(e.start_us.checked_add(e.dur_us).is_some(),
+                "span {} has degenerate timing", e.name);
+    }
+    let dropped: u64 = dumps.iter().map(|d| d.dropped).sum();
+    assert_eq!(dropped, 0, "tiny run must not overflow span buffers");
+
+    // 3. Chrome export is well-formed: parseable JSON, balanced by
+    //    construction (every span is one complete "ph":"X" event), and
+    //    it round-trips through our own parser.
+    let doc = export::chrome_trace(&dumps);
+    let parsed = json::parse(&doc.to_string()).unwrap();
+    let tev = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut span_events = 0;
+    for ev in tev {
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        assert!(ph == "X" || ph == "M", "unexpected phase {ph:?}");
+        assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+        if ph == "X" {
+            span_events += 1;
+            assert!(ev.get("ts").is_some() && ev.get("dur").is_some(),
+                    "complete event missing ts/dur");
+        }
+    }
+    assert_eq!(span_events, events.len(), "chrome export lost spans");
+
+    // 4. The JSON-lines export parses line by line.
+    let lines = export::trace_json_lines(&dumps);
+    assert_eq!(lines.lines().count(), events.len());
+    for line in lines.lines() {
+        let o = json::parse(line).unwrap();
+        assert!(o.get("name").is_some() && o.get("dur_us").is_some(),
+                "bad trace line: {line}");
+    }
+
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&d_off).ok();
+    std::fs::remove_file(&d_on).ok();
+}
+
+/// Counters run unconditionally (no enable switch), so this test is
+/// safe against the global trace flag: a BP->BP pipe must show up in
+/// the bp.* counters, and the snapshot delta must isolate this run
+/// even with other tests of this binary running concurrently... which
+/// it cannot quite (counters are process-wide), so assert growth, not
+/// exact values.
+#[test]
+fn pipe_run_advances_backend_counters_and_metrics_line_parses() {
+    let src = tmp("ctr-src.bp");
+    fixtures::write_chunked_bp(&src, 3, EXTENT, CHUNKS);
+    let dst = tmp("ctr-dst.bp");
+
+    let before = snapshot_metrics();
+    pipe_once(&src, &dst);
+    let after = snapshot_metrics();
+    let delta = after.delta(&before);
+
+    assert!(delta.counter("bp.get_sweeps") >= 3,
+            "reader sweeps not counted");
+    assert!(delta.counter("bp.put_chunks") >= 3 * CHUNKS,
+            "writer chunks not counted");
+    assert!(delta.counter("bp.put_bytes") >= 3 * EXTENT * 4,
+            "writer bytes not counted");
+    assert!(delta.counter("bp.get_bytes") >= 3 * EXTENT * 4,
+            "reader bytes not counted");
+
+    // The periodic --metrics emission must be one parseable JSON line.
+    let line = export::metrics_line(Some(2), &delta);
+    assert!(!line.contains('\n'));
+    let o = json::parse(&line).unwrap();
+    assert_eq!(o.get("step").unwrap().as_u64(), Some(2));
+    assert!(o.get("counters").is_some(), "line lacks counters: {line}");
+
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&dst).ok();
+}

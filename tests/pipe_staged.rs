@@ -55,6 +55,7 @@ fn two_round_robin_instances_forward_disjoint_complete_union() {
             idle_timeout: Duration::from_secs(10),
             depth: 0,
             operators: None,
+            metrics_sink: None,
         };
         let report = run_pipe(&mut input, &mut output, opts).unwrap();
         assert_eq!(report.steps, steps);
