@@ -1,0 +1,218 @@
+//! **fig_serve**: writer-side cost vs subscriber fan-out N through
+//! the serve daemon — the encode-once / serve-N-times claim, measured.
+//!
+//! Each cell pumps the same chunked BP fixture through a
+//! [`ServeDaemon`] (inproc, `Block` lag policy, a `shuffle|rle`
+//! operator chain so staging does real codec work) while N pipe
+//! subscribers drain the served stream into counting sinks. The sweep
+//! reports upstream ingress, staged encode counts, total egress and
+//! the pump wall time per N.
+//!
+//! Acceptance bar (asserted): ingress bytes and staged operator
+//! encodes are IDENTICAL across every N — the daemon encodes each
+//! step exactly once no matter how wide the fan-out — and total
+//! egress is exactly N-fold (every subscriber receives every staged
+//! frame, as `Arc` clones of one buffer).
+//!
+//! Emits `bench-results/BENCH_serve.json` (shared [`BenchJson`]
+//! format): the flatness ratios are gated by the CI `bench-compare`
+//! step; absolute throughput is recorded ungated. `--smoke` (or
+//! `FIGS_SMOKE=1`) shrinks sizes and the sweep.
+
+use std::time::{Duration, Instant};
+
+use openpmd_stream::adios::engine::Engine;
+use openpmd_stream::adios::ops::OpChain;
+use openpmd_stream::adios::spec::{ReaderSlot, SourceSpec};
+use openpmd_stream::bench::{smoke_mode, BenchJson, Table};
+use openpmd_stream::pipeline::pipe::{run_pipe, PipeOptions};
+use openpmd_stream::pipeline::serve::{
+    LagPolicy, ServeDaemon, ServeOptions, ServeReport,
+};
+use openpmd_stream::testing::engines::CountingSink;
+use openpmd_stream::testing::fixtures;
+use openpmd_stream::util::bytes::{fmt_bytes, fmt_rate};
+use openpmd_stream::util::cli::Args;
+
+/// Run one fan-out cell: fixture -> daemon -> `subs` pipe
+/// subscribers. Returns the daemon's report plus the pump wall time.
+fn serve_cell(
+    case: &str,
+    subs: usize,
+    steps: u64,
+    extent: u64,
+) -> (ServeReport, f64) {
+    let src = std::env::temp_dir().join(format!(
+        "opmd-figserve-{case}-{}.bp",
+        std::process::id()
+    ));
+    fixtures::write_chunked_bp(&src, steps, extent, 4);
+    let mut upstream = SourceSpec::parse(src.to_str().unwrap())
+        .expect("source spec")
+        .open(ReaderSlot::solo())
+        .expect("open upstream");
+    let mut daemon = ServeDaemon::start(ServeOptions {
+        listen: format!("fig-serve-{case}-{}", std::process::id()),
+        transport: "inproc".into(),
+        cache_steps: 8,
+        lag: LagPolicy::Block,
+        operators: Some(OpChain::parse("shuffle|rle").unwrap()),
+        ..Default::default()
+    })
+    .expect("start daemon");
+    let addr = daemon.address();
+
+    let mut drains = Vec::with_capacity(subs);
+    for _ in 0..subs {
+        let spec = format!("serve+{addr}");
+        drains.push(std::thread::spawn(move || {
+            let mut reader = SourceSpec::parse(&spec)
+                .expect("subscriber spec")
+                .open(ReaderSlot::solo())
+                .expect("open subscriber");
+            let mut sink = CountingSink::new();
+            let mut popts = PipeOptions::solo();
+            popts.idle_timeout = Duration::from_secs(30);
+            run_pipe(reader.as_mut(), &mut sink, popts)
+                .expect("subscriber pipe");
+        }));
+    }
+    // Every subscriber registers before the pump starts, so all cells
+    // announce all steps to all subscribers (Block never sheds) and
+    // the egress comparison below is exact, not statistical.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while daemon.subscribers() < subs {
+        assert!(
+            Instant::now() < deadline,
+            "{case}: only {}/{subs} subscribers registered",
+            daemon.subscribers()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let wall = Instant::now();
+    let report = daemon.pump(upstream.as_mut()).expect("pump");
+    let wall = wall.elapsed().as_secs_f64().max(1e-9);
+    upstream.close().expect("close upstream");
+    for d in drains {
+        d.join().expect("subscriber thread");
+    }
+    std::fs::remove_file(&src).ok();
+    (report, wall)
+}
+
+fn main() {
+    let args = Args::from_env(false).unwrap_or_default();
+    let smoke = smoke_mode(&args, "FIGS_SMOKE");
+    let steps: u64 = if smoke { 4 } else { 8 };
+    let extent: u64 = if smoke { 1 << 12 } else { 1 << 16 };
+    let sweep: &[usize] = if smoke { &[1, 2, 8] } else { &[1, 4, 16, 64] };
+
+    let mut t = Table::new(
+        "fig_serve: BP fixture -> serve daemon -> N subscribers \
+         (shuffle|rle staging, inproc, Block lag policy)",
+        &["N", "steps", "ingress", "encodes", "egress",
+          "egress/ingress", "pump wall", "egress rate"],
+    );
+    let mut json = BenchJson::new("serve");
+
+    // (ingress bytes, staged encodes, egress bytes) at N = 1: the
+    // flatness reference every wider cell is compared against.
+    let mut n1: Option<(u64, u64, u64)> = None;
+    let mut nmax_cell = (0u64, 0u64, 0u64, 1usize, 1e-9f64);
+    for &subs in sweep {
+        let (report, wall) =
+            serve_cell(&format!("n{subs}"), subs, steps, extent);
+        assert_eq!(report.steps_in, steps, "N={subs}: daemon lost steps");
+        assert_eq!(
+            report.subscribers.len(),
+            subs,
+            "N={subs}: subscriber accounting is off"
+        );
+        for s in &report.subscribers {
+            assert_eq!(
+                s.announced_steps, steps,
+                "N={subs}: rank {} missed announces", s.rank
+            );
+            assert_eq!(
+                s.dropped_steps, 0,
+                "N={subs}: rank {} lost steps under Block", s.rank
+            );
+        }
+        let encodes = report.ops.chunks_encoded;
+        match n1 {
+            None => n1 = Some((report.bytes_in, encodes,
+                               report.egress_bytes)),
+            Some((b1, e1, g1)) => {
+                // ACCEPTANCE: writer-side cost is flat in N —
+                // identical upstream reads, identical staging encodes;
+                // only egress scales, and exactly N-fold.
+                assert_eq!(
+                    report.bytes_in, b1,
+                    "N={subs}: ingress bytes grew with fan-out"
+                );
+                assert_eq!(
+                    encodes, e1,
+                    "N={subs}: staging re-encoded for extra subscribers"
+                );
+                assert_eq!(
+                    report.egress_bytes,
+                    subs as u64 * g1,
+                    "N={subs}: egress is not exactly N-fold"
+                );
+            }
+        }
+        nmax_cell = (report.bytes_in, encodes, report.egress_bytes,
+                     subs, wall);
+        t.row(vec![
+            subs.to_string(),
+            report.steps_in.to_string(),
+            fmt_bytes(report.bytes_in),
+            encodes.to_string(),
+            fmt_bytes(report.egress_bytes),
+            format!(
+                "{:.2}x",
+                report.egress_bytes as f64
+                    / report.bytes_in.max(1) as f64
+            ),
+            format!("{wall:.3}s"),
+            fmt_rate(report.egress_bytes as f64 / wall),
+        ]);
+        if subs == 1 {
+            json.info("n1_pump_bytes_per_s",
+                      report.bytes_in as f64 / wall);
+        }
+    }
+
+    print!("{}", t.render());
+    t.save_csv("fig_serve").ok();
+
+    let (b1, e1, g1) = n1.expect("sweep ran at least one cell");
+    let (bn, en, gn, nmax, wall_n) = nmax_cell;
+    json.gauge(
+        "ingress_bytes_ratio_nmax_over_n1",
+        bn as f64 / b1.max(1) as f64,
+        false,
+    );
+    json.gauge(
+        "staging_encodes_ratio_nmax_over_n1",
+        en as f64 / e1.max(1) as f64,
+        false,
+    );
+    json.gauge(
+        "egress_per_sub_ratio_nmax_over_n1",
+        (gn as f64 / nmax as f64) / g1.max(1) as f64,
+        false,
+    );
+    json.info("nmax_egress_bytes_per_s", gn as f64 / wall_n);
+    match json.save() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => println!("\nBENCH_serve.json not written: {e}"),
+    }
+    println!(
+        "acceptance: ingress {} and {} staged encodes identical across \
+         N in {sweep:?}; egress exactly N-fold — OK",
+        fmt_bytes(b1),
+        e1
+    );
+}

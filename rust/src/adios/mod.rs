@@ -19,6 +19,10 @@
 //!   step-aligned with a discard-consistent barrier, tables merged
 //!   with per-child provenance, gets routed to the owning child and
 //!   batched one perform per child per step.
+//! * [`spec`] — the typed endpoint grammar ([`SourceSpec`] /
+//!   [`SinkSpec`]) every CLI mode resolves `--in`/`--out` through:
+//!   parse ↔ Display round-tripping specs, typed rejection of
+//!   degenerate forms, and explicit rank-awareness.
 //!
 //! Cross-cutting, [`ops`] is the per-variable *operator* layer (ADIOS2's
 //! `AddOperation`): compression/precision-reduction chains declared per
@@ -36,6 +40,7 @@ pub mod json;
 pub mod multiplex;
 pub mod ops;
 pub mod region;
+pub mod spec;
 pub mod sst;
 pub mod transport;
 pub mod wire;
@@ -46,3 +51,4 @@ pub use engine::{
 };
 pub use multiplex::MultiplexReader;
 pub use ops::{OpChain, Operator, OpsError, OpsReport};
+pub use spec::{ReaderSlot, SinkSpec, SourceSpec, SpecError};

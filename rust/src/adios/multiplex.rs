@@ -36,13 +36,13 @@
 //!   selection that exactly matches one child chunk is handed through
 //!   zero-copy).
 //!
-//! [`open_merge`] builds a multiplexer over concrete series sources
-//! (BP files, JSON step directories, nested `*.index.json` shard
-//! families), and [`open_source`] resolves every input spec the pipe
-//! accepts (`sst+addr,...`, `shards:<index.json>`, `merge:a,b,...`, or
-//! a bare BP/JSON path) — "one engine" as the universal interface to
-//! any composition of sources, replacing the pipe CLI's former
-//! SST-or-BP-only input handling.
+//! Input-spec resolution lives in [`super::spec`]: parse any spec the
+//! pipe accepts (`sst+addr,...`, `serve+addr`, `shards:<index.json>`,
+//! `merge:a,b,...`, or a bare BP/JSON path) into a typed
+//! [`super::spec::SourceSpec`] and open it — "one engine" as the
+//! universal interface to any composition of sources. The former free
+//! functions [`open_merge`] / [`open_source`] / [`open_series_source`]
+//! remain as deprecated shims for one release.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
@@ -585,27 +585,24 @@ fn assemble(
 /// Open one concrete series source for multiplexing: a `*.index.json`
 /// path nests a whole shard family, a directory is a JSON step series,
 /// anything else a BP file.
+#[deprecated(
+    since = "0.10.0",
+    note = "use adios::spec::open_series_path (or \
+            SourceSpec::Series.open); this shim is removed next release"
+)]
 pub fn open_series_source(path: impl AsRef<Path>) -> Result<Box<dyn Engine>> {
-    let path = path.as_ref();
-    let name = path
-        .file_name()
-        .and_then(|n| n.to_str())
-        .unwrap_or_default();
-    if name.ends_with(".index.json") {
-        return Ok(Box::new(
-            crate::openpmd::series::open_shard_family(path)?,
-        ));
-    }
-    if path.is_dir() {
-        return Ok(Box::new(super::json::JsonReader::open(path)?));
-    }
-    Ok(Box::new(super::bp::BpReader::open(path)?))
+    super::spec::open_series_path(path)
 }
 
 /// Open a `merge:a,b,...` composition: every source becomes one child
 /// of a [`MultiplexReader`]. Sources may mix backends freely (bp +
 /// json + nested shard families) — the merged stream is one logical
 /// series either way.
+#[deprecated(
+    since = "0.10.0",
+    note = "parse a merge: spec with adios::spec::SourceSpec and open \
+            it; this shim is removed next release"
+)]
 pub fn open_merge(sources: &[String]) -> Result<MultiplexReader> {
     if sources.is_empty() {
         bail!("merge needs at least one source");
@@ -613,7 +610,7 @@ pub fn open_merge(sources: &[String]) -> Result<MultiplexReader> {
     let mut children = Vec::with_capacity(sources.len());
     for source in sources {
         children.push(
-            open_series_source(source)
+            super::spec::open_series_path(source)
                 .with_context(|| format!("opening merge source {source}"))?,
         );
     }
@@ -621,60 +618,24 @@ pub fn open_merge(sources: &[String]) -> Result<MultiplexReader> {
 }
 
 /// Resolve a pipe *input spec* to an engine — the universal entry the
-/// CLI and tests share:
+/// CLI and tests formerly shared, now a thin shim over the typed
+/// [`super::spec::SourceSpec`] grammar.
 ///
-/// * `sst+ADDR[,ADDR...]` — subscribe to every listed SST writer rank
-///   (all addresses on one transport);
-/// * `shards:<out>.index.json` — reassemble a fleet's shard family;
-/// * `merge:a,b,...` — multiplex arbitrary series sources;
-/// * a directory — JSON step series;
-/// * anything else — a BP file.
-///
-/// `rank` names the consuming worker's rank within a reader fleet (it
-/// parameterizes the SST subscription; file-backed sources open one
-/// independent reader per worker).
+/// `rank` names the consuming worker's rank within a reader fleet. It
+/// is honored only by rank-aware (streaming) specs — see
+/// [`super::spec::SourceSpec::rank_aware`]; the typed API makes that
+/// contract explicit where this signature silently dropped it. The
+/// shim validates the rank against an unbounded fleet width
+/// (`rank + 1`), preserving the old accept-anything behavior.
+#[deprecated(
+    since = "0.10.0",
+    note = "use adios::spec::SourceSpec::parse(..)?.open(slot); this \
+            shim is removed next release"
+)]
 pub fn open_source(spec: &str, rank: usize) -> Result<Box<dyn Engine>> {
-    use super::engine::EngineKind;
-    use super::sst::{SstReader, SstReaderOptions};
-    if let Some(addrs) = spec.strip_prefix("sst+") {
-        let writers: Vec<String> =
-            addrs.split(',').map(|a| a.trim().to_string()).collect();
-        // One transport per reader connection set: every writer
-        // address must agree, or the non-matching ones would be dialed
-        // over the wrong transport and fail opaquely.
-        let tcp_count =
-            writers.iter().filter(|a| a.starts_with("tcp://")).count();
-        let transport = if tcp_count == writers.len() {
-            "tcp".to_string()
-        } else if tcp_count == 0 {
-            "inproc".to_string()
-        } else {
-            bail!(
-                "mixed SST transports in input: {tcp_count} of {} \
-                 writer address(es) are tcp:// — use one transport \
-                 for all writers",
-                writers.len()
-            );
-        };
-        return Ok(Box::new(SstReader::open(SstReaderOptions {
-            writers,
-            transport,
-            rank,
-            ..Default::default()
-        })?));
-    }
-    if spec.starts_with("shards:") || spec.starts_with("merge:") {
-        return match EngineKind::parse(spec)? {
-            EngineKind::Shards { index } => Ok(Box::new(
-                crate::openpmd::series::open_shard_family(&index)?,
-            )),
-            EngineKind::Merge { sources } => {
-                Ok(Box::new(open_merge(&sources)?))
-            }
-            other => bail!("{other} is not an input spec"),
-        };
-    }
-    open_series_source(spec)
+    use super::spec::{ReaderSlot, SourceSpec};
+    let parsed = SourceSpec::parse(spec)?;
+    parsed.open(ReaderSlot::of(rank, rank + 1)?)
 }
 
 #[cfg(test)]
@@ -798,6 +759,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // the shim must stay covered until removal
     fn mixed_backend_merge_bp_plus_json() {
         let a = tmp("mixed-a.bp");
         let d = tmp("mixed-json");

@@ -1,0 +1,652 @@
+//! Typed endpoint specs: the unified grammar behind `--in` / `--out`.
+//!
+//! Every CLI mode (`pipe`, `produce`, the fleet path, and the `serve`
+//! daemon) resolves its endpoints through ONE constructor pair instead
+//! of ad-hoc string matching scattered across `main.rs` and
+//! [`super::multiplex`]:
+//!
+//! * [`SourceSpec::parse`] — input specs: `sst+ADDR[,ADDR...]`,
+//!   `serve+ADDR` (subscribe to a fan-out daemon), `shards:<index>`,
+//!   `merge:a,b,...` (children typed and validated, nesting rejected),
+//!   or a bare series path (BP file, JSON step directory, or a
+//!   `*.index.json` shard family).
+//! * [`SinkSpec::parse`] — output specs: `bp:PATH` (or a bare path),
+//!   `json:PATH`, `sst+ADDR` (stage steps for SST subscribers), and
+//!   `serve+ADDR` (the fan-out daemon's downstream listen endpoint,
+//!   consumed by the `serve` subcommand).
+//!
+//! Both types round-trip: `parse(display(x)) == x` for every
+//! parse-constructed value, so specs can be logged, stored in shard
+//! indexes, and replayed verbatim. Degenerate specs (`merge:` inside
+//! `merge:`, a stream inside a merge, mixed SST transports, empty
+//! lists, unknown sink engines) are typed [`SpecError`]s at *parse*
+//! time, not opaque failures at open time.
+//!
+//! **Rank-awareness is explicit.** The legacy
+//! [`super::multiplex::open_source`] accepted a `rank` it silently
+//! ignored for every non-SST spec. [`SourceSpec::open`] instead takes
+//! a [`ReaderSlot`] (rank within a fleet of N readers, validated at
+//! construction) and documents the contract via
+//! [`SourceSpec::rank_aware`]: only the streaming specs (`sst+`,
+//! `serve+`) transmit the rank (in the SST `Hello` handshake, where
+//! the writer uses it for per-peer diagnostics and topology-aware
+//! distribution); file-backed specs open one *independent* reader per
+//! slot and ignore the rank by design — each fleet worker re-reads the
+//! shared table and keeps only its assigned slices.
+
+use std::fmt;
+
+use anyhow::{Context, Result};
+
+use super::engine::Engine;
+use super::multiplex::MultiplexReader;
+use super::sst::{
+    SstReader, SstReaderOptions, SstWriter, SstWriterOptions,
+};
+
+/// A malformed or degenerate endpoint spec. Every variant names the
+/// exact grammar rule violated, so CLI errors read as documentation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpecError {
+    /// The spec string (or one list element) was empty.
+    Empty { what: &'static str },
+    /// `sst+` writer lists must use one transport for all addresses.
+    MixedTransports { tcp: usize, total: usize },
+    /// `serve+` names exactly one daemon endpoint, never a list.
+    ServeIsOneEndpoint { got: usize },
+    /// `shards:` without an index path.
+    MissingShardIndex,
+    /// `merge:` inside `merge:` — flatten the source list instead.
+    NestedMerge,
+    /// A streaming child (`sst+`/`serve+`) inside `merge:`: merge
+    /// children must be replayable series sources, because the
+    /// alignment barrier may park a child's step across polls.
+    StreamInMerge { child: String },
+    /// Unknown `--engine` name for a sink.
+    UnknownSinkEngine { engine: String },
+    /// A reader slot with `rank >= readers` (or zero readers).
+    BadSlot { rank: usize, readers: usize },
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::Empty { what } => {
+                write!(f, "empty {what} in endpoint spec")
+            }
+            SpecError::MixedTransports { tcp, total } => write!(
+                f,
+                "mixed SST transports: {tcp} of {total} writer \
+                 address(es) are tcp:// — use one transport for all \
+                 writers"
+            ),
+            SpecError::ServeIsOneEndpoint { got } => write!(
+                f,
+                "serve+ names exactly one daemon endpoint, got {got} \
+                 comma-separated addresses"
+            ),
+            SpecError::MissingShardIndex => write!(
+                f,
+                "shards spec needs an index path \
+                 (shards:<out>.index.json)"
+            ),
+            SpecError::NestedMerge => write!(
+                f,
+                "merge: inside merge: — flatten the source list into \
+                 one merge:a,b,... spec"
+            ),
+            SpecError::StreamInMerge { child } => write!(
+                f,
+                "merge child {child:?} is a streaming endpoint; merge \
+                 children must be series sources (BP, JSON dir, or a \
+                 shard index)"
+            ),
+            SpecError::UnknownSinkEngine { engine } => {
+                write!(f, "unknown output engine {engine:?}")
+            }
+            SpecError::BadSlot { rank, readers } => write!(
+                f,
+                "reader slot rank {rank} out of range for {readers} \
+                 reader(s)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// This consumer's position within a fleet of `readers` parallel
+/// readers. Validated at construction so `SourceSpec::open` cannot be
+/// handed an out-of-range rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReaderSlot {
+    rank: usize,
+    readers: usize,
+}
+
+impl ReaderSlot {
+    /// The single-reader slot (rank 0 of 1).
+    pub fn solo() -> ReaderSlot {
+        ReaderSlot { rank: 0, readers: 1 }
+    }
+
+    /// Slot `rank` of `readers`; rejects `rank >= readers`.
+    pub fn of(rank: usize, readers: usize)
+        -> Result<ReaderSlot, SpecError>
+    {
+        if readers == 0 || rank >= readers {
+            return Err(SpecError::BadSlot { rank, readers });
+        }
+        Ok(ReaderSlot { rank, readers })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn readers(&self) -> usize {
+        self.readers
+    }
+}
+
+/// One transport shared by a connection set, derived from the address
+/// forms themselves (`tcp://…` ⇒ tcp, anything else ⇒ inproc) so a
+/// spec needs no side-channel transport flag and Display stays the
+/// exact inverse of parse.
+fn transport_of(addrs: &[String]) -> Result<&'static str, SpecError> {
+    let tcp = addrs.iter().filter(|a| a.starts_with("tcp://")).count();
+    if tcp == addrs.len() {
+        Ok("tcp")
+    } else if tcp == 0 {
+        Ok("inproc")
+    } else {
+        Err(SpecError::MixedTransports { tcp, total: addrs.len() })
+    }
+}
+
+/// A typed pipe/serve *input* endpoint. See the module docs for the
+/// grammar; construct with [`SourceSpec::parse`], open with
+/// [`SourceSpec::open`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SourceSpec {
+    /// Subscribe to every listed SST writer rank (`sst+ADDR[,ADDR...]`,
+    /// all addresses on one transport).
+    Sst { writers: Vec<String> },
+    /// Subscribe to a `serve` fan-out daemon (`serve+ADDR`). Wire- and
+    /// engine-compatible with [`SourceSpec::Sst`] over one address; the
+    /// distinct form documents intent and lets tooling tell a daemon
+    /// subscription from a direct producer subscription.
+    Serve { addr: String },
+    /// Reassemble a fleet's shard family via its merged index
+    /// (`shards:<out>.index.json`) as ONE logical series.
+    Shards { index: String },
+    /// Multiplex series sources (`merge:a,b,...`); children are
+    /// restricted to [`SourceSpec::Series`] / [`SourceSpec::Shards`].
+    Merge { children: Vec<SourceSpec> },
+    /// A concrete series path: a `*.index.json` shard family, a JSON
+    /// step directory, or a BP file.
+    Series { path: String },
+}
+
+impl SourceSpec {
+    /// Parse an input spec (see the module docs for the grammar).
+    pub fn parse(spec: &str) -> Result<SourceSpec, SpecError> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err(SpecError::Empty { what: "input spec" });
+        }
+        if let Some(rest) = spec.strip_prefix("sst+") {
+            let writers: Vec<String> =
+                rest.split(',').map(|a| a.trim().to_string()).collect();
+            if writers.iter().any(|a| a.is_empty()) {
+                return Err(SpecError::Empty {
+                    what: "sst+ writer address",
+                });
+            }
+            transport_of(&writers)?;
+            return Ok(SourceSpec::Sst { writers });
+        }
+        if let Some(rest) = spec.strip_prefix("serve+") {
+            let addrs: Vec<&str> =
+                rest.split(',').map(|a| a.trim()).collect();
+            if addrs.len() != 1 {
+                return Err(SpecError::ServeIsOneEndpoint {
+                    got: addrs.len(),
+                });
+            }
+            if addrs[0].is_empty() {
+                return Err(SpecError::Empty {
+                    what: "serve+ daemon address",
+                });
+            }
+            return Ok(SourceSpec::Serve { addr: addrs[0].to_string() });
+        }
+        if let Some(index) = spec.strip_prefix("shards:") {
+            if index.trim().is_empty() {
+                return Err(SpecError::MissingShardIndex);
+            }
+            return Ok(SourceSpec::Shards {
+                index: index.trim().to_string(),
+            });
+        }
+        if let Some(rest) = spec.strip_prefix("merge:") {
+            let mut children = Vec::new();
+            for part in rest.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    return Err(SpecError::Empty {
+                        what: "merge source",
+                    });
+                }
+                let child = SourceSpec::parse(part)?;
+                match &child {
+                    SourceSpec::Merge { .. } => {
+                        return Err(SpecError::NestedMerge);
+                    }
+                    SourceSpec::Sst { .. }
+                    | SourceSpec::Serve { .. } => {
+                        return Err(SpecError::StreamInMerge {
+                            child: part.to_string(),
+                        });
+                    }
+                    SourceSpec::Shards { .. }
+                    | SourceSpec::Series { .. } => {}
+                }
+                children.push(child);
+            }
+            if children.is_empty() {
+                return Err(SpecError::Empty { what: "merge list" });
+            }
+            return Ok(SourceSpec::Merge { children });
+        }
+        Ok(SourceSpec::Series { path: spec.to_string() })
+    }
+
+    /// Whether this spec *transmits* the [`ReaderSlot`] rank. Only the
+    /// streaming specs do (the rank rides in the SST `Hello`
+    /// handshake); file-backed specs open an independent reader per
+    /// slot and ignore the rank **by contract** — the fleet's shared
+    /// plan, not the source, partitions the work.
+    pub fn rank_aware(&self) -> bool {
+        matches!(self,
+                 SourceSpec::Sst { .. } | SourceSpec::Serve { .. })
+    }
+
+    /// Open this source as a read engine for `slot`.
+    pub fn open(&self, slot: ReaderSlot) -> Result<Box<dyn Engine>> {
+        match self {
+            SourceSpec::Sst { writers } => {
+                let transport = transport_of(writers)?;
+                Ok(Box::new(SstReader::open(SstReaderOptions {
+                    writers: writers.clone(),
+                    transport: transport.into(),
+                    rank: slot.rank,
+                    ..Default::default()
+                })?))
+            }
+            SourceSpec::Serve { addr } => {
+                let writers = vec![addr.clone()];
+                let transport = transport_of(&writers)?;
+                Ok(Box::new(SstReader::open(SstReaderOptions {
+                    writers,
+                    transport: transport.into(),
+                    rank: slot.rank,
+                    ..Default::default()
+                })?))
+            }
+            SourceSpec::Shards { index } => Ok(Box::new(
+                crate::openpmd::series::open_shard_family(index)?,
+            )),
+            SourceSpec::Merge { children } => {
+                let mut names = Vec::with_capacity(children.len());
+                let mut engines = Vec::with_capacity(children.len());
+                for child in children {
+                    let name = child.to_string();
+                    engines.push(child.open(slot).with_context(|| {
+                        format!("opening merge source {name}")
+                    })?);
+                    names.push(name);
+                }
+                Ok(Box::new(MultiplexReader::over_named(
+                    names, engines,
+                )?))
+            }
+            SourceSpec::Series { path } => open_series_path(path),
+        }
+    }
+}
+
+impl fmt::Display for SourceSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SourceSpec::Sst { writers } => {
+                write!(f, "sst+{}", writers.join(","))
+            }
+            SourceSpec::Serve { addr } => write!(f, "serve+{addr}"),
+            SourceSpec::Shards { index } => write!(f, "shards:{index}"),
+            SourceSpec::Merge { children } => {
+                write!(f, "merge:")?;
+                for (i, child) in children.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{child}")?;
+                }
+                Ok(())
+            }
+            SourceSpec::Series { path } => write!(f, "{path}"),
+        }
+    }
+}
+
+/// Open one concrete series path: a `*.index.json` shard family, a
+/// directory (JSON step series), anything else a BP file. The open
+/// half of [`SourceSpec::Series`], shared with the shard-family opener
+/// (whose children recurse through the same resolution).
+pub fn open_series_path(
+    path: impl AsRef<std::path::Path>,
+) -> Result<Box<dyn Engine>> {
+    let path = path.as_ref();
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or_default();
+    if name.ends_with(".index.json") {
+        return Ok(Box::new(
+            crate::openpmd::series::open_shard_family(path)?,
+        ));
+    }
+    if path.is_dir() {
+        return Ok(Box::new(super::json::JsonReader::open(path)?));
+    }
+    Ok(Box::new(super::bp::BpReader::open(path)?))
+}
+
+/// A typed *output* endpoint. Construct with [`SinkSpec::parse`] (or
+/// [`SinkSpec::from_parts`] for the legacy `--engine KIND --out PATH`
+/// flag pair), open with [`SinkSpec::open_writer`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SinkSpec {
+    /// BP file (`bp:PATH`, or a bare path).
+    Bp { path: String },
+    /// JSON step directory (`json:PATH`).
+    Json { path: String },
+    /// SST staging stream listening on `listen` (`sst+ADDR`;
+    /// `tcp://host:port` addresses select the TCP transport).
+    Sst { listen: String },
+    /// A `serve` fan-out daemon's downstream listen endpoint
+    /// (`serve+ADDR`). Not directly openable as a write engine — the
+    /// `serve` subcommand consumes it (the daemon is a subscriber hub,
+    /// not a step writer).
+    Serve { listen: String },
+}
+
+impl SinkSpec {
+    /// Parse an output spec (see the module docs for the grammar). A
+    /// bare path is a BP file, matching the CLI's historic default.
+    pub fn parse(spec: &str) -> Result<SinkSpec, SpecError> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err(SpecError::Empty { what: "output spec" });
+        }
+        if let Some(listen) = spec.strip_prefix("sst+") {
+            if listen.is_empty() {
+                return Err(SpecError::Empty {
+                    what: "sst+ listen address",
+                });
+            }
+            return Ok(SinkSpec::Sst { listen: listen.to_string() });
+        }
+        if let Some(listen) = spec.strip_prefix("serve+") {
+            if listen.is_empty() {
+                return Err(SpecError::Empty {
+                    what: "serve+ listen address",
+                });
+            }
+            return Ok(SinkSpec::Serve { listen: listen.to_string() });
+        }
+        if let Some(path) = spec.strip_prefix("bp:") {
+            if path.is_empty() {
+                return Err(SpecError::Empty { what: "bp: path" });
+            }
+            return Ok(SinkSpec::Bp { path: path.to_string() });
+        }
+        if let Some(path) = spec.strip_prefix("json:") {
+            if path.is_empty() {
+                return Err(SpecError::Empty { what: "json: path" });
+            }
+            return Ok(SinkSpec::Json { path: path.to_string() });
+        }
+        Ok(SinkSpec::Bp { path: spec.to_string() })
+    }
+
+    /// Resolve the legacy `--engine KIND --out VALUE` flag pair into a
+    /// typed sink. `sst:tcp` normalizes the listen address to the
+    /// `tcp://` form so the resulting spec round-trips through
+    /// [`SinkSpec::parse`].
+    pub fn from_parts(engine: &str, out: &str)
+        -> Result<SinkSpec, SpecError>
+    {
+        if out.trim().is_empty() {
+            return Err(SpecError::Empty { what: "output spec" });
+        }
+        match engine {
+            "bp" => Ok(SinkSpec::Bp { path: out.to_string() }),
+            "json" => Ok(SinkSpec::Json { path: out.to_string() }),
+            "sst" => Ok(SinkSpec::Sst { listen: out.to_string() }),
+            "sst:tcp" => {
+                let listen = if out.starts_with("tcp://") {
+                    out.to_string()
+                } else {
+                    format!("tcp://{out}")
+                };
+                Ok(SinkSpec::Sst { listen })
+            }
+            "serve" => Ok(SinkSpec::Serve { listen: out.to_string() }),
+            other => Err(SpecError::UnknownSinkEngine {
+                engine: other.to_string(),
+            }),
+        }
+    }
+
+    /// The transport the listen address selects (`tcp://…` ⇒ tcp,
+    /// anything else ⇒ inproc). Meaningful for the streaming sinks;
+    /// file sinks report inproc vacuously.
+    pub fn transport(&self) -> &'static str {
+        let listen = match self {
+            SinkSpec::Sst { listen } | SinkSpec::Serve { listen } => {
+                listen
+            }
+            SinkSpec::Bp { .. } | SinkSpec::Json { .. } => return "inproc",
+        };
+        if listen.starts_with("tcp://") {
+            "tcp"
+        } else {
+            "inproc"
+        }
+    }
+
+    /// Open this sink as a write engine for `slot`. File sinks shard
+    /// the path per slot (`out.r<i>ofM.bp` for `readers > 1`, the
+    /// fleet convention); the SST sink supports only solo slots (a
+    /// sharded staging output would need per-shard addresses);
+    /// [`SinkSpec::Serve`] is not a write engine — run the `serve`
+    /// subcommand instead.
+    pub fn open_writer(&self, slot: ReaderSlot)
+        -> Result<Box<dyn Engine>>
+    {
+        use super::bp::{BpWriter, WriterCtx};
+        use super::json::JsonWriter;
+        match self {
+            SinkSpec::Bp { path } => {
+                let shard = crate::openpmd::series::shard_path(
+                    path, slot.rank, slot.readers,
+                );
+                Ok(Box::new(BpWriter::create(&shard, WriterCtx {
+                    rank: slot.rank,
+                    hostname: "localhost".into(),
+                })?))
+            }
+            SinkSpec::Json { path } => {
+                let shard = crate::openpmd::series::shard_path(
+                    path, slot.rank, slot.readers,
+                );
+                Ok(Box::new(JsonWriter::create(
+                    &shard, slot.rank, "localhost",
+                )?))
+            }
+            SinkSpec::Sst { listen } => {
+                if slot.readers > 1 {
+                    anyhow::bail!(
+                        "sst+ output cannot shard across {} pipe \
+                         workers — run one pipe per staging stream",
+                        slot.readers
+                    );
+                }
+                Ok(Box::new(SstWriter::open(SstWriterOptions {
+                    listen: listen.clone(),
+                    transport: self.transport().into(),
+                    rank: slot.rank,
+                    ..Default::default()
+                })?))
+            }
+            SinkSpec::Serve { .. } => anyhow::bail!(
+                "{self} is a serve daemon endpoint, not a write \
+                 engine — use the serve subcommand"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for SinkSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SinkSpec::Bp { path } => write!(f, "bp:{path}"),
+            SinkSpec::Json { path } => write!(f, "json:{path}"),
+            SinkSpec::Sst { listen } => write!(f, "sst+{listen}"),
+            SinkSpec::Serve { listen } => write!(f, "serve+{listen}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(s: &str) -> SourceSpec {
+        SourceSpec::parse(s).unwrap()
+    }
+
+    #[test]
+    fn source_grammar_resolves_every_form() {
+        assert_eq!(src("sst+a,b"), SourceSpec::Sst {
+            writers: vec!["a".into(), "b".into()],
+        });
+        assert_eq!(src("serve+tcp://h:9"), SourceSpec::Serve {
+            addr: "tcp://h:9".into(),
+        });
+        assert_eq!(src("shards:out.index.json"), SourceSpec::Shards {
+            index: "out.index.json".into(),
+        });
+        assert_eq!(src("merge:a.bp,shards:x.index.json"),
+                   SourceSpec::Merge {
+                       children: vec![
+                           SourceSpec::Series { path: "a.bp".into() },
+                           SourceSpec::Shards {
+                               index: "x.index.json".into(),
+                           },
+                       ],
+                   });
+        assert_eq!(src("plain.bp"),
+                   SourceSpec::Series { path: "plain.bp".into() });
+    }
+
+    #[test]
+    fn degenerate_sources_are_typed_errors() {
+        assert_eq!(SourceSpec::parse(""),
+                   Err(SpecError::Empty { what: "input spec" }));
+        assert_eq!(SourceSpec::parse("sst+a,"),
+                   Err(SpecError::Empty {
+                       what: "sst+ writer address",
+                   }));
+        assert_eq!(SourceSpec::parse("sst+tcp://h:1,inprocname"),
+                   Err(SpecError::MixedTransports { tcp: 1, total: 2 }));
+        assert_eq!(SourceSpec::parse("serve+a,b"),
+                   Err(SpecError::ServeIsOneEndpoint { got: 2 }));
+        assert_eq!(SourceSpec::parse("shards:"),
+                   Err(SpecError::MissingShardIndex));
+        assert_eq!(SourceSpec::parse("merge:a,merge:b,c"),
+                   Err(SpecError::NestedMerge));
+        assert_eq!(SourceSpec::parse("merge:a,sst+b"),
+                   Err(SpecError::StreamInMerge {
+                       child: "sst+b".into(),
+                   }));
+    }
+
+    #[test]
+    fn sink_grammar_and_legacy_flag_pair_agree() {
+        assert_eq!(SinkSpec::parse("out.bp").unwrap(),
+                   SinkSpec::Bp { path: "out.bp".into() });
+        assert_eq!(SinkSpec::parse("bp:out.bp").unwrap(),
+                   SinkSpec::Bp { path: "out.bp".into() });
+        assert_eq!(SinkSpec::parse("json:dir").unwrap(),
+                   SinkSpec::Json { path: "dir".into() });
+        assert_eq!(SinkSpec::parse("sst+tcp://h:1").unwrap(),
+                   SinkSpec::Sst { listen: "tcp://h:1".into() });
+        assert_eq!(SinkSpec::from_parts("sst:tcp", "h:1").unwrap(),
+                   SinkSpec::Sst { listen: "tcp://h:1".into() });
+        assert_eq!(SinkSpec::from_parts("json", "dir").unwrap(),
+                   SinkSpec::Json { path: "dir".into() });
+        assert_eq!(SinkSpec::from_parts("flac", "x"),
+                   Err(SpecError::UnknownSinkEngine {
+                       engine: "flac".into(),
+                   }));
+        assert_eq!(SinkSpec::parse("serve+hub").unwrap().transport(),
+                   "inproc");
+        assert_eq!(SinkSpec::parse("sst+tcp://h:1")
+                       .unwrap()
+                       .transport(),
+                   "tcp");
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for s in [
+            "sst+a,b",
+            "sst+tcp://h:1,tcp://h:2",
+            "serve+tcp://h:9",
+            "shards:out.index.json",
+            "merge:a.bp,shards:x.index.json,dir",
+            "plain.bp",
+        ] {
+            let spec = src(s);
+            assert_eq!(SourceSpec::parse(&spec.to_string()).unwrap(),
+                       spec);
+        }
+        for s in ["bp:out.bp", "json:dir", "sst+addr", "serve+hub"] {
+            let spec = SinkSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s);
+            assert_eq!(SinkSpec::parse(&spec.to_string()).unwrap(),
+                       spec);
+        }
+    }
+
+    #[test]
+    fn slots_validate_rank_against_width() {
+        assert!(ReaderSlot::of(0, 1).is_ok());
+        assert!(ReaderSlot::of(3, 4).is_ok());
+        assert_eq!(ReaderSlot::of(4, 4),
+                   Err(SpecError::BadSlot { rank: 4, readers: 4 }));
+        assert_eq!(ReaderSlot::of(0, 0),
+                   Err(SpecError::BadSlot { rank: 0, readers: 0 }));
+    }
+
+    #[test]
+    fn only_streaming_specs_are_rank_aware() {
+        assert!(src("sst+a").rank_aware());
+        assert!(src("serve+a").rank_aware());
+        assert!(!src("shards:x.index.json").rank_aware());
+        assert!(!src("merge:a,b").rank_aware());
+        assert!(!src("plain.bp").rank_aware());
+    }
+}

@@ -29,6 +29,7 @@ mod writer;
 
 pub use reader::{SstReader, SstReaderOptions};
 pub use writer::{SstWriter, SstWriterOptions, WriterGroup};
+pub(crate) use writer::serve_request;
 
 use std::collections::BTreeMap;
 

@@ -499,7 +499,12 @@ fn serve_reader(
 /// selection decodes the overlapping chunks, assembles raw bytes, and
 /// re-encodes for the wire; readers that did not advertise the chain's
 /// codecs get decoded raw bytes instead.
-fn serve_request(
+///
+/// `pub(crate)`: the `pipeline::serve` fan-out daemon answers its
+/// subscribers' `GetBatch` requests through this same resolution, so
+/// direct SST subscription and daemon subscription stay byte-identical
+/// by construction.
+pub(crate) fn serve_request(
     staged: &StagedStep,
     var: &str,
     sel: &Chunk,

@@ -148,7 +148,8 @@ pub mod util;
 
 pub use adios::{
     Engine, EngineKind, GetHandle, Mode, OpChain, OpsError, OpsReport,
-    StepStatus, VarDecl, VarHandle,
+    ReaderSlot, SinkSpec, SourceSpec, SpecError, StepStatus, VarDecl,
+    VarHandle,
 };
 pub use distribution::{Assignment, ChunkTable, Strategy};
 pub use openpmd::Series;

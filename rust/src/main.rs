@@ -4,39 +4,43 @@
 //!
 //! * `pipe`      — run the `openpmd-pipe` adaptor (the paper's §4.1
 //!                 tool): any engine in, any engine out.
+//! * `serve`     — run the streaming fan-out daemon: subscribe once to
+//!                 any input spec, stage each step's encoded chunks in
+//!                 a bounded cache, and serve N dynamically joining
+//!                 SST subscribers.
 //! * `produce`   — run the Kelvin–Helmholtz producer, writing openPMD
 //!                 steps to a BP file, JSON dir or SST stream.
-//! * `analyze`   — run the SAXS consumer over a BP file.
-//! * `validate`  — check a BP file for openPMD conformance.
-//! * `info`      — dump variables/attributes/chunks of a BP file.
+//! * `analyze`   — run the SAXS consumer over any input spec.
+//! * `validate`  — check a series for openPMD conformance.
+//! * `info`      — dump variables/attributes/chunks of a series.
 //! * `systems`   — print the Table 1 system comparison.
+//!
+//! Every mode resolves its endpoints through the typed spec grammar
+//! ([`SourceSpec`] / [`SinkSpec`]) — `main.rs` contains no engine
+//! string matching of its own, and the shared pipeline knobs parse
+//! once through [`CommonOptions::from_args`].
 //!
 //! The end-to-end streaming setups live in `examples/` (multi-threaded
 //! in one process so they are runnable without a job scheduler); this
 //! binary provides the single-role building blocks that `examples/`
 //! compose, usable across real processes via the TCP transport.
 
-use std::sync::Arc;
-
 use anyhow::{bail, Context, Result};
 
-use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
 use openpmd_stream::adios::engine::{cast, Engine, StepStatus};
-use openpmd_stream::adios::json::JsonWriter;
-use openpmd_stream::adios::multiplex;
-use openpmd_stream::adios::sst::{SstWriter, SstWriterOptions};
 use openpmd_stream::adios::ops::OpChain;
+use openpmd_stream::adios::spec::{ReaderSlot, SinkSpec, SourceSpec};
 use openpmd_stream::analysis::SaxsAnalyzer;
 use openpmd_stream::bench::Table;
-use openpmd_stream::distribution::{by_name, Strategy};
 use openpmd_stream::obs;
-use openpmd_stream::pipeline::ops_summary;
 use openpmd_stream::cluster::systems;
 use openpmd_stream::openpmd::chunk::Chunk;
 use openpmd_stream::openpmd::series::{self, Series};
 use openpmd_stream::openpmd::validate;
-use openpmd_stream::pipeline::fleet::{run_fleet, FleetOptions};
-use openpmd_stream::pipeline::pipe::{run, MetricsSink, PipeOptions};
+use openpmd_stream::pipeline::fleet::run_fleet;
+use openpmd_stream::pipeline::pipe::{run, MetricsSink};
+use openpmd_stream::pipeline::serve::{LagPolicy, ServeDaemon};
+use openpmd_stream::pipeline::{ops_summary, CommonOptions};
 use openpmd_stream::producer::KhProducer;
 use openpmd_stream::runtime::Runtime;
 use openpmd_stream::util::bytes::fmt_bytes;
@@ -53,6 +57,7 @@ fn main() {
     };
     let result = match args.subcommand.as_deref() {
         Some("pipe") => cmd_pipe(&args),
+        Some("serve") => cmd_serve(&args),
         Some("produce") => cmd_produce(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("validate") => cmd_validate(&args),
@@ -77,21 +82,32 @@ fn help() -> String {
     render_help(
         "openpmd-stream",
         "streaming data pipelines with openPMD + ADIOS2 (paper reproduction)",
-        "openpmd-stream <pipe|produce|analyze|validate|info|systems> [OPTIONS]",
+        "openpmd-stream <pipe|serve|produce|analyze|validate|info|systems> \
+         [OPTIONS]",
         &[
             OptSpec { name: "in", value_name: Some("SPEC"),
                       default: None,
                       help: "input: a BP file, a JSON step directory, \
                              sst+ADDR[,ADDR...] (subscribe to N SST \
-                             writers), shards:<out>.index.json \
-                             (reassemble a reader fleet's shard family \
-                             as ONE logical series), or \
-                             merge:a,b,... (multiplex arbitrary \
-                             sources, backends mixed freely)" },
-            OptSpec { name: "out", value_name: Some("PATH"),
-                      default: None, help: "output (BP file, JSON dir, or SST listen addr)" },
+                             writers), serve+ADDR (subscribe to a \
+                             serve fan-out daemon), \
+                             shards:<out>.index.json (reassemble a \
+                             reader fleet's shard family as ONE \
+                             logical series), or merge:a,b,... \
+                             (multiplex series sources, backends mixed \
+                             freely)" },
+            OptSpec { name: "out", value_name: Some("SPEC"),
+                      default: None,
+                      help: "output: bp:PATH (or a bare path), \
+                             json:PATH, sst+ADDR (stage steps for SST \
+                             subscribers; tcp://host:port selects \
+                             TCP), or serve+ADDR (the serve daemon's \
+                             downstream listen endpoint)" },
             OptSpec { name: "engine", value_name: Some("bp|json|sst[:tcp]"),
-                      default: Some("bp"), help: "output engine kind" },
+                      default: None,
+                      help: "legacy output engine kind paired with a \
+                             plain --out path; prefer the typed --out \
+                             spec prefixes" },
             OptSpec { name: "steps", value_name: Some("N"),
                       default: Some("10"), help: "steps to produce/process" },
             OptSpec { name: "pipeline-depth", value_name: Some("N"),
@@ -117,9 +133,21 @@ fn help() -> String {
                       default: None,
                       help: "per-variable operator chain, e.g. \
                              shuffle|rle or zfp:14|shuffle|rle \
-                             (produce: applied to every record; pipe: \
-                             re-encode forwarded variables with this \
-                             chain)" },
+                             (produce: applied to every record; \
+                             pipe/serve: re-encode forwarded variables \
+                             with this chain)" },
+            OptSpec { name: "cache-steps", value_name: Some("K"),
+                      default: Some("4"),
+                      help: "serve: staged steps kept addressable (the \
+                             fan-out cache depth; late joiners start \
+                             at the cache tail)" },
+            OptSpec { name: "lag-policy", value_name: Some("drop|block"),
+                      default: Some("drop"),
+                      help: "serve: slow-subscriber policy at cache \
+                             eviction — drop evicts anyway (laggards \
+                             skip the step), block backpressures the \
+                             upstream until every subscriber finished \
+                             it" },
             OptSpec { name: "period", value_name: Some("N"),
                       default: Some("10"), help: "sim steps between outputs" },
             OptSpec { name: "particles", value_name: Some("N"),
@@ -133,14 +161,14 @@ fn help() -> String {
                       help: "scatter-plot output (analyze)" },
             OptSpec { name: "trace", value_name: Some("PATH"),
                       default: None,
-                      help: "pipe/produce: record per-step spans and \
-                             write a Chrome trace-event file on exit \
-                             (load in Perfetto; a .jsonl path writes \
-                             JSON lines instead)" },
+                      help: "pipe/serve/produce: record per-step spans \
+                             and write a Chrome trace-event file on \
+                             exit (load in Perfetto; a .jsonl path \
+                             writes JSON lines instead)" },
             OptSpec { name: "metrics", value_name: Some("PATH"),
                       default: None,
-                      help: "pipe/produce: append JSON-line counter \
-                             snapshots to PATH while running" },
+                      help: "pipe/serve/produce: append JSON-line \
+                             counter snapshots to PATH while running" },
             OptSpec { name: "metrics-interval", value_name: Some("N"),
                       default: Some("1"),
                       help: "steps between --metrics lines" },
@@ -148,10 +176,10 @@ fn help() -> String {
     )
 }
 
-/// Parse the observability flags shared by `pipe` and `produce`:
-/// `--trace` switches the tracing layer on (near-zero cost when off)
-/// and names the export file; `--metrics [--metrics-interval N]`
-/// builds the periodic counter-snapshot sink.
+/// Parse the observability flags shared by `pipe`, `serve` and
+/// `produce`: `--trace` switches the tracing layer on (near-zero cost
+/// when off) and names the export file; `--metrics
+/// [--metrics-interval N]` builds the periodic counter-snapshot sink.
 fn obs_from_args(
     args: &Args,
 ) -> Result<(Option<std::path::PathBuf>, Option<MetricsSink>)> {
@@ -194,17 +222,15 @@ fn parse_operators(args: &Args) -> Result<Option<OpChain>> {
     }
 }
 
-/// Open one pipe input via the universal spec resolver
-/// ([`multiplex::open_source`]): `sst+ADDR[,ADDR...]` subscribes to
-/// every listed writer rank (the fleet's N side);
-/// `shards:<out>.index.json` reassembles a fleet's shard family as one
-/// logical series; `merge:a,b,...` multiplexes arbitrary sources
-/// (backends mixed freely); a directory is a JSON series; anything
-/// else a BP file. `rank` is the consuming worker's rank within the
-/// fleet.
-fn open_pipe_input(input: &str, rank: usize) -> Result<Box<dyn Engine>> {
-    multiplex::open_source(input, rank)
-        .with_context(|| format!("opening pipe input {input:?}"))
+/// Resolve `--out` (and the legacy `--engine` pairing) into a typed
+/// sink: an explicit `--engine KIND` interprets `--out` as a plain
+/// path/address the historic way; otherwise `--out` is a full
+/// [`SinkSpec`] (where a bare path still means a BP file).
+fn sink_from_args(args: &Args, out: &str) -> Result<SinkSpec> {
+    Ok(match args.get("engine") {
+        Some(kind) => SinkSpec::from_parts(kind, out)?,
+        None => SinkSpec::parse(out)?,
+    })
 }
 
 fn cmd_pipe(args: &Args) -> Result<()> {
@@ -215,42 +241,21 @@ fn cmd_pipe(args: &Args) -> Result<()> {
     let input = args.get("in").context("--in required")?;
     let output = args.get("out").context("--out required")?;
     let readers: usize = args.get_parse_or("readers", 1)?;
-    if readers == 0 {
-        bail!("--readers must be >= 1");
-    }
-    let engine = args.get_or("engine", "bp");
-    let depth: usize = args.get_parse_or("pipeline-depth", 0)?;
-    let max_steps = args.get_parse::<u64>("steps")?;
-    let operators = parse_operators(args)?;
     let (trace_path, metrics_sink) = obs_from_args(args)?;
-    let strategy: Arc<dyn Strategy> =
-        Arc::from(by_name(args.get_or("strategy", "roundrobin"))?);
-
-    let make_output = |rank: usize| -> Result<Box<dyn Engine>> {
-        let shard = series::shard_path(output, rank, readers);
-        Ok(match engine {
-            "bp" => Box::new(BpWriter::create(&shard, WriterCtx {
-                rank,
-                hostname: "localhost".into(),
-            })?),
-            "json" => Box::new(JsonWriter::create(&shard, rank,
-                                                  "localhost")?),
-            other => {
-                bail!("pipe output engine must be bp|json, got {other}")
-            }
-        })
-    };
+    let source = SourceSpec::parse(input)?;
+    let sink = sink_from_args(args, output)?;
+    let common = CommonOptions::from_args(args)?.metrics(metrics_sink);
 
     if readers == 1 {
-        let mut reader = open_pipe_input(input, 0)?;
-        let mut writer = make_output(0)?;
-        let mut opts = PipeOptions::solo();
-        opts.max_steps = max_steps;
-        opts.depth = depth;
-        opts.operators = operators;
-        opts.strategy = strategy;
-        opts.metrics_sink = metrics_sink;
-        let report = run(reader.as_mut(), writer.as_mut(), opts)?;
+        let slot = ReaderSlot::solo();
+        let mut reader = source
+            .open(slot)
+            .with_context(|| format!("opening pipe input {source}"))?;
+        let mut writer = sink
+            .open_writer(slot)
+            .with_context(|| format!("opening pipe output {sink}"))?;
+        let depth = common.depth;
+        let report = run(reader.as_mut(), writer.as_mut(), common.pipe())?;
         println!(
             "piped {} steps ({} dropped), {} in, {} out, {} chunks",
             report.steps,
@@ -286,14 +291,15 @@ fn cmd_pipe(args: &Args) -> Result<()> {
     let mut inputs = Vec::with_capacity(readers);
     let mut outputs = Vec::with_capacity(readers);
     for rank in 0..readers {
-        inputs.push(open_pipe_input(input, rank)?);
-        outputs.push(make_output(rank)?);
+        let slot = ReaderSlot::of(rank, readers)?;
+        inputs.push(source.open(slot).with_context(|| {
+            format!("opening pipe input {source} for rank {rank}")
+        })?);
+        outputs.push(sink.open_writer(slot).with_context(|| {
+            format!("opening pipe output {sink} for rank {rank}")
+        })?);
     }
-    let mut fopts = FleetOptions::local(readers, strategy)?;
-    fopts.max_steps = max_steps;
-    fopts.operators = operators;
-    fopts.depth = depth;
-    let report = run_fleet(inputs, outputs, fopts)?;
+    let report = run_fleet(inputs, outputs, common.fleet(readers)?)?;
     println!("{}", report.summary());
     for r in &report.per_rank {
         println!(
@@ -315,11 +321,68 @@ fn cmd_pipe(args: &Args) -> Result<()> {
     // Fleet workers write their own shards concurrently, so per-step
     // metric lines would interleave; the fleet emits one final
     // whole-process snapshot instead.
-    if let Some(sink) = &metrics_sink {
+    if let Some(sink) = &common.metrics_sink {
         let line = obs::export::metrics_line(
             None, &obs::metrics::snapshot_metrics());
         std::fs::write(&sink.path, format!("{line}\n"))
             .with_context(|| format!("writing {}", sink.path.display()))?;
+    }
+    if let Some(p) = &trace_path {
+        write_trace_file(p)?;
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.reject_unknown(&["in", "out", "steps", "cache-steps",
+                          "lag-policy", "operators", "trace",
+                          "metrics", "metrics-interval"])?;
+    let input = args.get("in").context("--in required")?;
+    let output = args
+        .get("out")
+        .context("--out required (serve+ADDR listen endpoint)")?;
+    let cache_steps: usize = args.get_parse_or("cache-steps", 4)?;
+    let lag = LagPolicy::parse(args.get_or("lag-policy", "drop"))?;
+    let (trace_path, metrics_sink) = obs_from_args(args)?;
+    let sink = SinkSpec::parse(output)?;
+    let SinkSpec::Serve { listen } = &sink else {
+        bail!(
+            "serve needs a serve+ADDR --out endpoint to listen on, \
+             got {sink}"
+        );
+    };
+    let source = SourceSpec::parse(input)?;
+    let mut upstream = source
+        .open(ReaderSlot::solo())
+        .with_context(|| format!("opening serve input {source}"))?;
+    let opts = CommonOptions::from_args(args)?
+        .metrics(metrics_sink)
+        .serve(
+            listen.clone(),
+            sink.transport().to_string(),
+            cache_steps,
+            lag,
+        );
+    obs::trace::set_thread_identity(opts.rank, "serve");
+    let mut daemon = ServeDaemon::start(opts)?;
+    println!(
+        "serving {source} on {} (cache {cache_steps} steps, lag {lag})",
+        daemon.address()
+    );
+    let report = daemon.pump(upstream.as_mut())?;
+    upstream.close()?;
+    println!("{}", report.summary());
+    if !report.ops.is_empty() {
+        println!("{}", ops_summary(&report.ops));
+    }
+    for s in &report.subscribers {
+        println!(
+            "  subscriber {}: {} steps announced, {} dropped, {} out",
+            s.rank,
+            s.announced_steps,
+            s.dropped_steps,
+            fmt_bytes(s.egress_bytes)
+        );
     }
     if let Some(p) = &trace_path {
         write_trace_file(p)?;
@@ -359,21 +422,10 @@ fn cmd_produce(args: &Args) -> Result<()> {
     if let Some(chain) = parse_operators(args)? {
         producer.set_operators(chain);
     }
-    let engine_kind = args.get_or("engine", "bp");
-    let mut engine: Box<dyn Engine> = match engine_kind {
-        "bp" => Box::new(BpWriter::create(out, WriterCtx::default())?),
-        "json" => Box::new(JsonWriter::create(out, 0, "localhost")?),
-        "sst" | "sst:tcp" => Box::new(SstWriter::open(SstWriterOptions {
-            listen: out.to_string(),
-            transport: if engine_kind.ends_with("tcp") {
-                "tcp".into()
-            } else {
-                "inproc".into()
-            },
-            ..Default::default()
-        })?),
-        other => bail!("unknown engine {other}"),
-    };
+    let sink = sink_from_args(args, out)?;
+    let mut engine: Box<dyn Engine> = sink
+        .open_writer(ReaderSlot::solo())
+        .with_context(|| format!("opening produce output {sink}"))?;
     let (trace_path, metrics_sink) = obs_from_args(args)?;
     obs::trace::set_thread_identity(0, "produce");
     let metrics_base = metrics_sink.as_ref().map(|s| {
@@ -436,7 +488,10 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     } else {
         Some(Runtime::load_default()?)
     };
-    let mut reader = BpReader::open(input)?;
+    let source = SourceSpec::parse(input)?;
+    let mut reader = source
+        .open(ReaderSlot::solo())
+        .with_context(|| format!("opening analyze input {source}"))?;
     let mut analyzer = SaxsAnalyzer::new(q_max, runtime.as_ref())?;
     let max_steps = args.get_parse::<u64>("steps")?.unwrap_or(u64::MAX);
     let mut steps = 0;
@@ -490,11 +545,14 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 fn cmd_validate(args: &Args) -> Result<()> {
     args.reject_unknown(&["in"])?;
     let input = args.get("in").context("--in required")?;
-    let mut reader = BpReader::open(input)?;
+    let source = SourceSpec::parse(input)?;
+    let mut reader = source
+        .open(ReaderSlot::solo())
+        .with_context(|| format!("opening validate input {source}"))?;
     let mut all_ok = true;
     let mut steps = 0;
     loop {
-        let (status, parsed) = Series::read_iteration(&mut reader)?;
+        let (status, parsed) = Series::read_iteration(reader.as_mut())?;
         if status != StepStatus::Ok {
             break;
         }
@@ -520,7 +578,10 @@ fn cmd_validate(args: &Args) -> Result<()> {
 fn cmd_info(args: &Args) -> Result<()> {
     args.reject_unknown(&["in"])?;
     let input = args.get("in").context("--in required")?;
-    let mut reader = BpReader::open(input)?;
+    let source = SourceSpec::parse(input)?;
+    let mut reader = source
+        .open(ReaderSlot::solo())
+        .with_context(|| format!("opening info input {source}"))?;
     let mut step = 0;
     while reader.begin_step()? == StepStatus::Ok {
         println!("step {step}:");

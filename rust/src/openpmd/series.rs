@@ -686,7 +686,7 @@ pub fn open_shard_family(
             ));
         }
         children.push(
-            crate::adios::multiplex::open_series_source(&path)
+            crate::adios::spec::open_series_path(&path)
                 .with_context(|| format!("opening shard {name}"))?,
         );
         names.push(name.clone());

@@ -56,16 +56,30 @@
 //! other input and stages chain arbitrarily
 //! (produce → fleet → reassemble → pipe/analyze/fleet ...), the
 //! paper's loose-coupling vision end to end.
+//!
+//! **The fan-out daemon** ([`serve`], [`run_serve`]) is the third
+//! execution mode: subscribe once to any input spec, stage each step's
+//! operator-encoded chunks in a bounded step cache, and serve them to
+//! N dynamically joining SST subscribers — encode once, serve N times
+//! as `Arc` clones of one staged buffer, so producer-side cost stays
+//! flat in N (`benches/fig_serve.rs` sweeps the subscriber count).
 
 pub mod fleet;
 pub mod metrics;
+pub mod options;
 pub mod pipe;
+pub mod serve;
 pub mod staged;
 
 pub use fleet::{run_fleet, FleetOptions};
+pub use options::CommonOptions;
 pub use metrics::{
     ops_summary, FleetReport, OpKind, OpsReport, OverlapReport,
     PerceivedThroughput, RankReport, ThroughputReport,
 };
 pub use pipe::{run, run_pipe, PipeOptions, PipeReport, StepPlan};
+pub use serve::{
+    run_serve, LagPolicy, ServeDaemon, ServeOptions, ServeReport,
+    SubscriberReport,
+};
 pub use staged::run_staged;

@@ -1,0 +1,193 @@
+//! One builder behind every execution mode's option struct.
+//!
+//! `pipe`, the reader fleet, and the `serve` daemon share most of
+//! their knobs (step budget, read-ahead depth, idle timeout, operator
+//! override, distribution strategy, metrics sink) but historically
+//! each CLI path copied them field-by-field into its own struct —
+//! three hand-rolled translations that drifted independently.
+//! [`CommonOptions`] is the single translation: `main.rs` parses the
+//! shared flag table into it once ([`CommonOptions::from_args`]) and
+//! each mode derives its concrete options from the same value
+//! ([`pipe`](CommonOptions::pipe), [`fleet`](CommonOptions::fleet),
+//! [`serve`](CommonOptions::serve)). Mode-specific knobs (fleet
+//! width, serve cache depth / lag policy / listen endpoint) stay
+//! arguments of the derivation, so they cannot be set on the wrong
+//! mode.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::adios::ops::OpChain;
+use crate::distribution::{by_name, Strategy};
+use crate::util::cli::Args;
+
+use super::fleet::FleetOptions;
+use super::pipe::{MetricsSink, PipeOptions};
+use super::serve::{LagPolicy, ServeOptions};
+
+/// The knobs shared by every execution mode, with the same defaults
+/// as [`PipeOptions::solo`]. Build with [`CommonOptions::new`] plus
+/// the chainable setters, or parse the CLI's shared flag subset with
+/// [`CommonOptions::from_args`].
+#[derive(Clone)]
+pub struct CommonOptions {
+    /// Step budget (None = until end of stream). Each mode applies
+    /// its own counting rule — see the target structs.
+    pub max_steps: Option<u64>,
+    /// Staged read-ahead depth (`--pipeline-depth`); the serve daemon
+    /// has no store stage to overlap, so it ignores this.
+    pub depth: usize,
+    /// Give up when the upstream stays silent this long.
+    pub idle_timeout: Duration,
+    /// Operator-chain override (None = forward announced chains).
+    pub operators: Option<OpChain>,
+    /// Chunk-distribution strategy (fleet and parallel-pipe plans).
+    pub strategy: Arc<dyn Strategy>,
+    /// Periodic JSON-lines metric emission.
+    pub metrics_sink: Option<MetricsSink>,
+}
+
+impl Default for CommonOptions {
+    fn default() -> Self {
+        CommonOptions::new()
+    }
+}
+
+impl CommonOptions {
+    pub fn new() -> CommonOptions {
+        CommonOptions {
+            max_steps: None,
+            depth: 0,
+            idle_timeout: Duration::from_secs(60),
+            operators: None,
+            strategy: Arc::new(crate::distribution::RoundRobin),
+            metrics_sink: None,
+        }
+    }
+
+    /// Parse the shared flag subset (`--steps`, `--pipeline-depth`,
+    /// `--operators`, `--strategy`) from one parsed argument list —
+    /// the single place CLI strings become typed pipeline options.
+    pub fn from_args(args: &Args) -> Result<CommonOptions> {
+        let mut c = CommonOptions::new();
+        c.max_steps = args.get_parse::<u64>("steps")?;
+        c.depth = args.get_parse_or("pipeline-depth", 0)?;
+        c.operators = match args.get("operators") {
+            None => None,
+            Some(spec) => Some(OpChain::parse(spec).map_err(|e| {
+                anyhow::anyhow!("--operators: {e}")
+            })?),
+        };
+        c.strategy =
+            Arc::from(by_name(args.get_or("strategy", "roundrobin"))?);
+        Ok(c)
+    }
+
+    pub fn max_steps(mut self, n: Option<u64>) -> Self {
+        self.max_steps = n;
+        self
+    }
+
+    pub fn depth(mut self, depth: usize) -> Self {
+        self.depth = depth;
+        self
+    }
+
+    pub fn idle_timeout(mut self, t: Duration) -> Self {
+        self.idle_timeout = t;
+        self
+    }
+
+    pub fn operators(mut self, ops: Option<OpChain>) -> Self {
+        self.operators = ops;
+        self
+    }
+
+    pub fn strategy(mut self, strategy: Arc<dyn Strategy>) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn metrics(mut self, sink: Option<MetricsSink>) -> Self {
+        self.metrics_sink = sink;
+        self
+    }
+
+    /// Solo serial/staged pipe options.
+    pub fn pipe(&self) -> PipeOptions {
+        let mut p = PipeOptions::solo();
+        p.max_steps = self.max_steps;
+        p.depth = self.depth;
+        p.idle_timeout = self.idle_timeout;
+        p.operators = self.operators.clone();
+        p.strategy = Arc::clone(&self.strategy);
+        p.metrics_sink = self.metrics_sink.clone();
+        p
+    }
+
+    /// Reader-fleet options for `readers` local workers.
+    /// (The fleet emits one final metrics snapshot itself — per-step
+    /// lines would interleave across workers — so the sink stays with
+    /// the caller.)
+    pub fn fleet(&self, readers: usize) -> Result<FleetOptions> {
+        let mut f =
+            FleetOptions::local(readers, Arc::clone(&self.strategy))?;
+        f.max_steps = self.max_steps;
+        f.depth = self.depth;
+        f.idle_timeout = self.idle_timeout;
+        f.operators = self.operators.clone();
+        Ok(f)
+    }
+
+    /// Fan-out daemon options listening on `listen` over `transport`.
+    pub fn serve(
+        &self,
+        listen: String,
+        transport: String,
+        cache_steps: usize,
+        lag: LagPolicy,
+    ) -> ServeOptions {
+        let mut s = ServeOptions::default();
+        s.listen = listen;
+        s.transport = transport;
+        s.cache_steps = cache_steps;
+        s.lag = lag;
+        s.max_steps = self.max_steps;
+        s.idle_timeout = self.idle_timeout;
+        s.operators = self.operators.clone();
+        s.metrics_sink = self.metrics_sink.clone();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_builder_feeds_all_three_modes() {
+        let common = CommonOptions::new()
+            .max_steps(Some(7))
+            .depth(2)
+            .idle_timeout(Duration::from_secs(3));
+        let p = common.pipe();
+        assert_eq!(p.max_steps, Some(7));
+        assert_eq!(p.depth, 2);
+        assert_eq!(p.idle_timeout, Duration::from_secs(3));
+        let f = common.fleet(4).unwrap();
+        assert_eq!(f.max_steps, Some(7));
+        assert_eq!(f.depth, 2);
+        let s = common.serve(
+            "hub".into(),
+            "inproc".into(),
+            8,
+            LagPolicy::Block,
+        );
+        assert_eq!(s.max_steps, Some(7));
+        assert_eq!(s.cache_steps, 8);
+        assert_eq!(s.lag, LagPolicy::Block);
+        assert_eq!(s.idle_timeout, Duration::from_secs(3));
+    }
+}

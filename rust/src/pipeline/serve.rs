@@ -1,0 +1,1179 @@
+//! serve — the streaming fan-out daemon (S12): subscribe once,
+//! serve N.
+//!
+//! The third CLI mode. A pipe couples one upstream to one downstream;
+//! attaching N analyses to one producer either multiplies the
+//! producer's cost (N direct SST subscriptions mean N announce/fetch
+//! cycles against its staging queue) or is impossible for file inputs
+//! already being consumed. `serve` sits in between:
+//!
+//! ```text
+//!   producer ──(any SourceSpec)──▶ serve ──▶ SST client 1
+//!                                       ├──▶ SST client 2
+//!                                       └──▶ ... client N
+//! ```
+//!
+//! * **Subscribe once.** The daemon consumes its upstream through the
+//!   same [`fetch_step`] path as the pipe — any input spec works
+//!   (`sst+tcp://…`, `shards:`, `merge:`, bp, json).
+//! * **Encode once, serve N times.** Each fetched step is staged as a
+//!   [`StagedStep`] with its operator chains applied exactly once
+//!   ([`serve_encode_step`]); every subscriber's `GetBatch` is then
+//!   answered from the shared staged frames through the same
+//!   [`serve_request`] resolution the SST writer uses, so a chunk
+//!   travels to N subscribers as N `Arc` clones of ONE buffer over
+//!   the in-process transport. Writer-side work is independent of N.
+//! * **Step cache.** The last `cache_steps` staged steps stay
+//!   addressable. A late joiner starts at the cache tail (it is
+//!   announced every step still cached); a slow subscriber is handled
+//!   per [`LagPolicy`] — the per-subscriber generalization of the
+//!   pipe's upstream `Discarded` accounting.
+//!
+//! Locking: the hub (cache + subscriber registry) and each
+//! subscriber's outbox are disjoint by construction — announces are
+//! queued as step *numbers* into per-subscriber outboxes and resolved
+//! against the cache at send time by the owning sender thread, so the
+//! two locks are never held together and no blocking call runs under
+//! either. The lock classes ([`classes::SERVE_HUB`],
+//! [`classes::SERVE_SUBSCRIBER`], [`classes::SERVE_SERVICE_THREADS`])
+//! therefore add zero edges to the lock-order graph.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+use once_cell::sync::Lazy;
+
+use crate::adios::engine::{Bytes, Engine};
+use crate::adios::ops::{self, OpChain, OpCtx, OpsReport};
+use crate::adios::sst::{serve_request, StagedStep};
+use crate::adios::transport::{self, Conn, ConnRx, ConnTx, Recv};
+use crate::adios::wire::{GetReply, Msg, VarMeta};
+use crate::obs::metrics::{counter, gauge, Counter, Gauge};
+use crate::obs::trace;
+use crate::openpmd::chunk::WrittenChunkInfo;
+use crate::util::sync::{
+    classes, OrderedCondvar, OrderedGuard, OrderedMutex,
+};
+
+use super::pipe::{
+    fetch_step, Fetched, LocalPlan, MetricsEmitter, MetricsSink,
+    PipeOptions, StepPayload, StepPoller,
+};
+
+static INGRESS_STEPS: Lazy<&'static Counter> =
+    Lazy::new(|| counter("serve.ingress_steps"));
+static INGRESS_BYTES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("serve.ingress_bytes"));
+static ENCODE_OPS: Lazy<&'static Counter> =
+    Lazy::new(|| counter("serve.encode_ops"));
+static EGRESS_BYTES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("serve.egress_bytes"));
+static EGRESS_BATCHES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("serve.egress_batches"));
+static ANNOUNCES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("serve.announce_msgs"));
+static SUB_DROPS: Lazy<&'static Counter> =
+    Lazy::new(|| counter("serve.sub_dropped_steps"));
+static SUBSCRIBERS: Lazy<&'static Gauge> =
+    Lazy::new(|| gauge("serve.subscribers"));
+
+/// What to do when evicting the oldest cached step would drop it from
+/// under a subscriber still behind it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LagPolicy {
+    /// Evict anyway: the laggard simply never sees that step (its
+    /// queued announce resolves to a cache miss and is counted in
+    /// [`SubscriberReport::dropped_steps`]). A subscriber stalled
+    /// *mid-fetch* on the evictee gets [`ServeOptions::stall_grace`]
+    /// to finish, then is disconnected. The producer is never
+    /// blocked — the serve-side analog of SST's `Discard`.
+    DropOldest,
+    /// Apply backpressure: hold the publish until every live
+    /// subscriber has finished (`StepDone`) the evictee. With no
+    /// subscriber ever connected this blocks until the first one
+    /// joins — same contract as SST's `Block` with no reader.
+    Block,
+}
+
+impl LagPolicy {
+    pub fn parse(s: &str) -> Result<LagPolicy> {
+        match s {
+            "drop" | "drop-oldest" => Ok(LagPolicy::DropOldest),
+            "block" => Ok(LagPolicy::Block),
+            other => bail!(
+                "unknown lag policy {other:?} (expected drop | block)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for LagPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LagPolicy::DropOldest => write!(f, "drop"),
+            LagPolicy::Block => write!(f, "block"),
+        }
+    }
+}
+
+/// Configuration for [`ServeDaemon`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Listen hint handed to the transport (e.g. `"127.0.0.1:0"` for
+    /// tcp, a name for inproc). The bound address is reported by
+    /// [`ServeDaemon::address`].
+    pub listen: String,
+    /// Transport name (`"tcp"` or `"inproc"`).
+    pub transport: String,
+    /// How many staged steps stay addressable (the cache depth K).
+    /// Must be at least 1.
+    pub cache_steps: usize,
+    /// Slow-subscriber policy at eviction time.
+    pub lag: LagPolicy,
+    /// Stop after this many upstream steps (None = until end of
+    /// stream).
+    pub max_steps: Option<u64>,
+    /// Give up if the upstream produces nothing for this long.
+    pub idle_timeout: Duration,
+    /// Override the operator chain applied to staged chunks (None =
+    /// keep each variable's own chain).
+    pub operators: Option<OpChain>,
+    /// Optional JSON-lines metrics sink (same format as the pipe's).
+    pub metrics_sink: Option<MetricsSink>,
+    /// Rank announced to subscribers in `HelloAck`.
+    pub rank: usize,
+    /// Hostname announced to subscribers and stamped on chunk info.
+    pub hostname: String,
+    /// How long `pump` waits at end of stream for subscribers to
+    /// drain their remaining announces before tearing down — and,
+    /// when none ever connected, for a first subscriber to dial in
+    /// (a finite file upstream pumps in milliseconds; without the
+    /// grace window no consumer could ever reach it).
+    pub close_linger: Duration,
+    /// [`LagPolicy::DropOldest`] only: how long an eviction waits for
+    /// a subscriber stalled mid-fetch on the evictee before
+    /// disconnecting it.
+    pub stall_grace: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            listen: String::new(),
+            transport: "tcp".into(),
+            cache_steps: 4,
+            lag: LagPolicy::DropOldest,
+            max_steps: None,
+            idle_timeout: Duration::from_secs(60),
+            operators: None,
+            metrics_sink: None,
+            rank: 0,
+            hostname: "localhost".into(),
+            close_linger: Duration::from_secs(10),
+            stall_grace: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Per-subscriber accounting in the final [`ServeReport`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SubscriberReport {
+    pub rank: usize,
+    /// Steps announced to this subscriber.
+    pub announced_steps: u64,
+    /// Queued steps evicted before this subscriber was ready for
+    /// them (its share of cache-pressure loss).
+    pub dropped_steps: u64,
+    /// Payload bytes served to this subscriber.
+    pub egress_bytes: u64,
+}
+
+/// What the daemon did.
+#[derive(Debug, Default)]
+pub struct ServeReport {
+    /// Steps consumed from the upstream and staged.
+    pub steps_in: u64,
+    /// Upstream steps the *source* discarded before us.
+    pub steps_discarded_upstream: u64,
+    /// Staged steps evicted from the cache.
+    pub steps_evicted: u64,
+    /// Raw payload bytes fetched from the upstream.
+    pub bytes_in: u64,
+    /// Payload bytes served to all subscribers combined.
+    pub egress_bytes: u64,
+    /// Every subscriber that ever connected, in join order.
+    pub subscribers: Vec<SubscriberReport>,
+    /// Operator work: staging encodes plus per-request re-encodes.
+    pub ops: OpsReport,
+    pub wall_seconds: f64,
+}
+
+impl ServeReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "served {} steps ({} bytes in) to {} subscriber(s), \
+             {} bytes out, {} evicted, {:.2}s",
+            self.steps_in,
+            self.bytes_in,
+            self.subscribers.len(),
+            self.egress_bytes,
+            self.steps_evicted,
+            self.wall_seconds,
+        )
+    }
+}
+
+/// Outbound work queued for one subscriber, drained by its sender
+/// thread. Announces are step *numbers* in an ordered set: the sender
+/// pops the minimum, so delivery is in step order no matter how
+/// enqueues interleave, and the backlog snapshot taken at
+/// registration can race with concurrent publishes without
+/// duplicating or reordering anything.
+#[derive(Default)]
+struct Outbox {
+    /// Ready wire replies (FIFO, sent before any announce).
+    replies: VecDeque<Msg>,
+    /// Steps to announce, resolved against the cache at send time.
+    announces: BTreeSet<u64>,
+    /// End of stream: send `CloseStream` once everything drains.
+    closing: bool,
+    /// Set once registration has seeded the cache backlog; the
+    /// sender must not announce before this.
+    primed: bool,
+}
+
+/// One connected subscriber. The sender thread owns the connection's
+/// tx half exclusively; the receiver thread owns the rx half; all
+/// shared coordination is the outbox plus lock-free atomics.
+struct Subscriber {
+    rank: usize,
+    codecs: Vec<String>,
+    out: OrderedMutex<Outbox>,
+    out_cv: OrderedCondvar,
+    /// Step currently announced but not yet `StepDone`d, stored as
+    /// `step + 1` (0 = none). Pins that step against eviction checks.
+    inflight: AtomicU64,
+    /// High-water `StepDone` mark, stored as `step + 1` (0 = none).
+    done: AtomicU64,
+    /// Cleared when either thread loses the connection.
+    alive: AtomicBool,
+    /// Set once `CloseStream` was delivered (clean drain).
+    finished: AtomicBool,
+    announced: AtomicU64,
+    dropped: AtomicU64,
+    egress: AtomicU64,
+}
+
+/// Shared hub state: the step cache plus the subscriber registry.
+#[derive(Default)]
+struct HubState {
+    cache: BTreeMap<u64, Arc<StagedStep>>,
+    peers: Vec<Arc<Subscriber>>,
+    /// Operator work done on behalf of subscribers (per-request
+    /// decode/re-encode inside [`serve_request`]).
+    ops: OpsReport,
+    steps_evicted: u64,
+    /// Whether any subscriber ever connected ([`LagPolicy::Block`]
+    /// with zero subscribers waits for the first join, but drains
+    /// freely once everyone left).
+    ever_had_subscriber: bool,
+    /// Upstream exhausted: new joiners get `closing` outboxes.
+    closed: bool,
+}
+
+struct Hub {
+    state: OrderedMutex<HubState>,
+    /// Signaled on `StepDone`, subscriber death, and drain progress.
+    hub_cv: OrderedCondvar,
+}
+
+/// The fan-out daemon: accept loop + per-subscriber thread pairs
+/// around a shared step cache. Construct with [`ServeDaemon::start`],
+/// feed with [`ServeDaemon::pump`].
+pub struct ServeDaemon {
+    opts: ServeOptions,
+    address: String,
+    hub: Arc<Hub>,
+    accept_thread: Option<JoinHandle<()>>,
+    serve_threads: Arc<OrderedMutex<Vec<JoinHandle<()>>>>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Service-thread lock helper, same contract as the SST writer's:
+/// threads with no `Result` channel back to the daemon log the
+/// poison and bow out instead of re-panicking. (The name is the
+/// lint's sanctioned acquisition-helper idiom.)
+fn lock_or_warn<T>(m: &OrderedMutex<T>) -> Option<OrderedGuard<'_, T>> {
+    match m.lock() {
+        Ok(g) => Some(g),
+        Err(e) => {
+            crate::warn_log!("serve", "{e}; stopping service thread");
+            None
+        }
+    }
+}
+
+impl ServeDaemon {
+    /// Bind the listener and start the accept loop. No upstream IO
+    /// happens until [`pump`](ServeDaemon::pump).
+    pub fn start(opts: ServeOptions) -> Result<ServeDaemon> {
+        if opts.cache_steps == 0 {
+            bail!("serve cache must hold at least one step");
+        }
+        let tp = transport::by_name(&opts.transport)?;
+        let mut listener = tp.listen(&opts.listen)?;
+        let address = listener.address();
+        let hub = Arc::new(Hub {
+            state: OrderedMutex::new(
+                &classes::SERVE_HUB,
+                HubState::default(),
+            ),
+            hub_cv: OrderedCondvar::new(&classes::SERVE_HUB),
+        });
+        let serve_threads = Arc::new(OrderedMutex::new(
+            &classes::SERVE_SERVICE_THREADS,
+            Vec::new(),
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let hub = Arc::clone(&hub);
+            let serve_threads = Arc::clone(&serve_threads);
+            let stop = Arc::clone(&stop);
+            let rank = opts.rank;
+            let hostname = opts.hostname.clone();
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || {
+                    trace::set_thread_identity(rank, "serve-accept");
+                    while !stop.load(Ordering::Relaxed) {
+                        match listener
+                            .accept_timeout(Duration::from_millis(50))
+                        {
+                            Ok(Some(conn)) => {
+                                if let Err(e) = serve_register_subscriber(
+                                    conn, &hub, &serve_threads, &stop,
+                                    rank, &hostname,
+                                ) {
+                                    crate::warn_log!(
+                                        "serve",
+                                        "subscriber handshake failed: {e:#}"
+                                    );
+                                }
+                            }
+                            Ok(None) => {}
+                            Err(e) => {
+                                crate::warn_log!(
+                                    "serve",
+                                    "accept error: {e:#}; \
+                                     no longer accepting subscribers"
+                                );
+                                break;
+                            }
+                        }
+                    }
+                })?
+        };
+        Ok(ServeDaemon {
+            opts,
+            address,
+            hub,
+            accept_thread: Some(accept_thread),
+            serve_threads,
+            stop,
+        })
+    }
+
+    /// The bound listen address (resolved port for tcp); subscribers
+    /// dial this with an ordinary `sst+<transport>://` source spec.
+    pub fn address(&self) -> String {
+        self.address.clone()
+    }
+
+    /// How many subscribers are currently registered and live — lets
+    /// a launcher (or a conformance test) wait for an expected fan-out
+    /// before pumping a finite upstream through.
+    pub fn subscribers(&self) -> usize {
+        match self.hub.state.lock() {
+            Ok(st) => st
+                .peers
+                .iter()
+                .filter(|p| p.alive.load(Ordering::Relaxed))
+                .count(),
+            Err(_) => 0,
+        }
+    }
+
+    /// Consume the upstream to exhaustion (or `max_steps`), staging
+    /// and fanning out every step, then drain subscribers and tear
+    /// the daemon down. The upstream is subscribed to exactly once
+    /// regardless of how many subscribers connect.
+    pub fn pump(&mut self, input: &mut dyn Engine) -> Result<ServeReport> {
+        let started = Instant::now();
+        let popts = serve_pipe_options(&self.opts);
+        let mut plan = LocalPlan::new(&popts);
+        let emitter =
+            MetricsEmitter::for_sink(self.opts.metrics_sink.as_ref());
+        let mut poller = StepPoller::new(self.opts.idle_timeout);
+        let mut report = ServeReport::default();
+        let mut step = 0u64;
+        loop {
+            if let Some(max) = self.opts.max_steps {
+                if report.steps_in >= max {
+                    break;
+                }
+            }
+            match fetch_step(input, &popts, &mut plan, step)? {
+                Fetched::Step(payload) => {
+                    let mut sp =
+                        trace::span("serve.ingest").with("step", step);
+                    let (staged, local_ops) = serve_encode_step(
+                        &payload,
+                        self.opts.rank,
+                        &self.opts.hostname,
+                    )?;
+                    sp.set("bytes", payload.bytes);
+                    INGRESS_STEPS.inc();
+                    INGRESS_BYTES.add(payload.bytes);
+                    report.steps_in += 1;
+                    report.bytes_in += payload.bytes;
+                    report.ops.absorb(local_ops);
+                    serve_publish_step(
+                        &self.hub,
+                        &self.opts,
+                        step,
+                        Arc::new(staged),
+                    )?;
+                    step += 1;
+                    poller.activity();
+                    if let Some(e) = &emitter {
+                        e.emit_step_line(report.steps_in);
+                    }
+                }
+                Fetched::NotReady => poller.not_ready()?,
+                Fetched::Discarded => {
+                    report.steps_discarded_upstream += 1;
+                    poller.activity();
+                }
+                Fetched::EndOfStream => break,
+            }
+        }
+        self.serve_drain(&mut report)?;
+        if let Some(e) = &emitter {
+            e.emit_final_line();
+        }
+        report.wall_seconds = started.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// End of stream: flag every outbox `closing`, linger while
+    /// subscribers drain, then stop and join all threads and collect
+    /// the per-subscriber accounting.
+    fn serve_drain(&mut self, report: &mut ServeReport) -> Result<()> {
+        let peers: Vec<Arc<Subscriber>> = {
+            let mut st = self.hub.state.lock()?;
+            st.closed = true;
+            st.peers.clone()
+        };
+        for p in &peers {
+            let mut out = p.out.lock()?;
+            out.closing = true;
+            drop(out);
+            p.out_cv.notify_all();
+        }
+        let deadline = Instant::now() + self.opts.close_linger;
+        loop {
+            let st = self.hub.state.lock()?;
+            // Same linger contract as the SST writer's close: wait for
+            // connected subscribers to drain, AND give a first
+            // subscriber the whole window to show up when none ever
+            // connected — a daemon serving a finite (file) upstream
+            // would otherwise tear down before any consumer could
+            // dial it. Late registrations replay the full cache.
+            let pending = st.peers.iter().any(|p| {
+                p.alive.load(Ordering::Relaxed)
+                    && !p.finished.load(Ordering::Relaxed)
+            }) || !st.ever_had_subscriber;
+            if !pending {
+                break;
+            }
+            if Instant::now() > deadline {
+                crate::warn_log!(
+                    "serve",
+                    "close linger expired with {}; tearing down",
+                    if st.ever_had_subscriber {
+                        "subscribers still draining"
+                    } else {
+                        "no subscriber ever connecting"
+                    }
+                );
+                break;
+            }
+            let (guard, _) = self
+                .hub
+                .hub_cv
+                .wait_timeout(st, Duration::from_millis(50))?;
+            drop(guard);
+        }
+        self.serve_halt();
+        let mut st = self.hub.state.lock()?;
+        report.ops.absorb(st.ops);
+        report.steps_evicted = st.steps_evicted;
+        for p in &st.peers {
+            let egress = p.egress.load(Ordering::Relaxed);
+            report.egress_bytes += egress;
+            report.subscribers.push(SubscriberReport {
+                rank: p.rank,
+                announced_steps: p.announced.load(Ordering::Relaxed),
+                dropped_steps: p.dropped.load(Ordering::Relaxed),
+                egress_bytes: egress,
+            });
+        }
+        st.peers.clear();
+        st.cache.clear();
+        Ok(())
+    }
+
+    /// Stop and join every thread. Idempotent.
+    fn serve_halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // Swap the handles out under the registry lock, join outside
+        // it.
+        let mut drained: Vec<JoinHandle<()>> = Vec::new();
+        match self.serve_threads.lock() {
+            Ok(mut g) => std::mem::swap(&mut drained, &mut *g),
+            Err(e) => {
+                crate::warn_log!("serve", "{e}; leaking service threads");
+            }
+        }
+        for t in drained {
+            let _ = t.join();
+        }
+        SUBSCRIBERS.set(0);
+    }
+}
+
+impl Drop for ServeDaemon {
+    fn drop(&mut self) {
+        self.serve_halt();
+    }
+}
+
+/// Open `input` once and serve it to any number of SST subscribers
+/// on `opts.listen` until the upstream is exhausted. The one-call
+/// form of [`ServeDaemon::start`] + [`ServeDaemon::pump`].
+pub fn run_serve(
+    input: &mut dyn Engine,
+    opts: ServeOptions,
+) -> Result<ServeReport> {
+    let mut daemon = ServeDaemon::start(opts)?;
+    let report = daemon.pump(input)?;
+    input.close()?;
+    Ok(report)
+}
+
+/// The upstream fetch reuses the pipe's solo path: one instance,
+/// forward everything, with serve's idle/operator knobs applied.
+fn serve_pipe_options(opts: &ServeOptions) -> PipeOptions {
+    let mut p = PipeOptions::solo();
+    p.idle_timeout = opts.idle_timeout;
+    p.operators = opts.operators.clone();
+    p
+}
+
+/// Stage one fetched step: apply each variable's operator chain
+/// exactly once and build the announce metadata, mirroring what
+/// `SstWriter::perform_puts` does at put time so [`serve_request`]
+/// resolves subscriber selections identically. Identity chains pass
+/// the payload `Arc` through untouched — staging N subscribers deep
+/// still holds ONE copy of the bytes.
+fn serve_encode_step(
+    payload: &StepPayload,
+    rank: usize,
+    hostname: &str,
+) -> Result<(StagedStep, OpsReport)> {
+    let mut staged = StagedStep::default();
+    let mut report = OpsReport::default();
+    for (name, value) in &payload.attributes {
+        staged.meta.attributes.insert(name.clone(), value.clone());
+    }
+    for (decl, chunks) in &payload.vars {
+        let mut infos = Vec::with_capacity(chunks.len());
+        let mut data = Vec::with_capacity(chunks.len());
+        for (chunk, raw) in chunks {
+            let framed: Bytes = if decl.ops.is_identity() {
+                Arc::clone(raw)
+            } else {
+                ENCODE_OPS.inc();
+                let octx = OpCtx {
+                    dtype: decl.dtype,
+                    extent: &chunk.extent,
+                };
+                ops::encode_bytes(
+                    &decl.ops,
+                    &octx,
+                    raw.as_slice(),
+                    &mut report,
+                )
+                .map_err(|e| {
+                    anyhow::anyhow!(
+                        "{}: operator encode: {e}",
+                        decl.name
+                    )
+                })?
+            };
+            infos.push(
+                WrittenChunkInfo::new(
+                    chunk.clone(),
+                    rank,
+                    hostname.to_string(),
+                )
+                .with_encoded_bytes(framed.len() as u64),
+            );
+            data.push((chunk.clone(), framed));
+        }
+        // Declared-but-empty variables keep their VarMeta entry, so a
+        // subscriber sees the same variable registry a direct pipe
+        // consumer would.
+        staged.meta.vars.push(VarMeta {
+            name: decl.name.clone(),
+            dtype: decl.dtype,
+            shape: decl.shape.clone(),
+            ops: decl.ops.clone(),
+            chunks: infos,
+        });
+        staged.data.insert(decl.name.clone(), data);
+    }
+    Ok((staged, report))
+}
+
+/// Insert a staged step into the cache, evict per the lag policy, and
+/// queue its announce at every live subscriber. The hub lock is
+/// dropped before any outbox lock is taken — the two classes never
+/// nest.
+fn serve_publish_step(
+    hub: &Hub,
+    opts: &ServeOptions,
+    step: u64,
+    staged: Arc<StagedStep>,
+) -> Result<()> {
+    let peers: Vec<Arc<Subscriber>> = {
+        let mut st = hub.state.lock()?;
+        st.cache.insert(step, staged);
+        while st.cache.len() > opts.cache_steps {
+            let Some(&oldest) = st.cache.keys().next() else {
+                break;
+            };
+            st = serve_wait_evictable(hub, st, opts, oldest)?;
+            st.cache.remove(&oldest);
+            st.steps_evicted += 1;
+        }
+        st.peers
+            .iter()
+            .filter(|p| p.alive.load(Ordering::Relaxed))
+            .cloned()
+            .collect()
+    };
+    for p in &peers {
+        let mut out = p.out.lock()?;
+        out.announces.insert(step);
+        drop(out);
+        p.out_cv.notify_all();
+    }
+    Ok(())
+}
+
+/// Hold the hub lock (parking on the hub condvar) until `oldest` may
+/// be evicted under the configured lag policy.
+fn serve_wait_evictable<'a>(
+    hub: &'a Hub,
+    mut st: OrderedGuard<'a, HubState>,
+    opts: &ServeOptions,
+    oldest: u64,
+) -> Result<OrderedGuard<'a, HubState>, crate::util::sync::PoisonedLock>
+{
+    let grace_deadline = Instant::now() + opts.stall_grace;
+    loop {
+        let evictable = {
+            let live: Vec<&Arc<Subscriber>> = st
+                .peers
+                .iter()
+                .filter(|p| p.alive.load(Ordering::Relaxed))
+                .collect();
+            match opts.lag {
+                LagPolicy::Block => {
+                    if live.is_empty() {
+                        // Block with no subscriber: wait for the
+                        // first join unless everyone already came
+                        // and went.
+                        st.ever_had_subscriber
+                    } else {
+                        live.iter().all(|p| {
+                            p.done.load(Ordering::Relaxed) > oldest
+                        })
+                    }
+                }
+                LagPolicy::DropOldest => {
+                    let pinned: Vec<&Arc<Subscriber>> = live
+                        .iter()
+                        .filter(|p| {
+                            p.inflight.load(Ordering::Relaxed)
+                                == oldest + 1
+                        })
+                        .copied()
+                        .collect();
+                    if pinned.is_empty() {
+                        true
+                    } else if Instant::now() > grace_deadline {
+                        // Stalled mid-fetch past the grace window:
+                        // a dead-slow subscriber must not pin the
+                        // cache (and thus the producer) forever.
+                        for p in &pinned {
+                            crate::warn_log!(
+                                "serve",
+                                "subscriber {} stalled on step \
+                                 {oldest} past stall grace; \
+                                 disconnecting it",
+                                p.rank
+                            );
+                            p.alive.store(false, Ordering::Relaxed);
+                            p.out_cv.notify_all();
+                        }
+                        true
+                    } else {
+                        false
+                    }
+                }
+            }
+        };
+        if evictable {
+            return Ok(st);
+        }
+        let (guard, _) =
+            hub.hub_cv.wait_timeout(st, Duration::from_millis(100))?;
+        st = guard;
+    }
+}
+
+/// Accept-thread half of a subscription: handshake, register with
+/// the hub, seed the cache backlog (late joiners start at the cache
+/// tail), and spawn the sender/receiver pair.
+fn serve_register_subscriber(
+    mut conn: Box<dyn Conn>,
+    hub: &Arc<Hub>,
+    serve_threads: &Arc<OrderedMutex<Vec<JoinHandle<()>>>>,
+    stop: &Arc<AtomicBool>,
+    daemon_rank: usize,
+    hostname: &str,
+) -> Result<()> {
+    let (sub_rank, codecs) =
+        match conn.recv_timeout(Duration::from_secs(10))? {
+            Recv::Msg(Msg::Hello { reader_rank, codecs, .. }) => {
+                (reader_rank, codecs)
+            }
+            Recv::Msg(_) => bail!("expected Hello as first message"),
+            Recv::TimedOut => bail!("subscriber handshake timed out"),
+            Recv::Closed => bail!("subscriber closed before Hello"),
+        };
+    conn.send(Msg::HelloAck {
+        writer_rank: daemon_rank,
+        hostname: hostname.to_string(),
+    })?;
+    let (tx, rx) = conn.split()?;
+    let sub = Arc::new(Subscriber {
+        rank: sub_rank,
+        codecs,
+        out: OrderedMutex::new(
+            &classes::SERVE_SUBSCRIBER,
+            Outbox::default(),
+        ),
+        out_cv: OrderedCondvar::new(&classes::SERVE_SUBSCRIBER),
+        inflight: AtomicU64::new(0),
+        done: AtomicU64::new(0),
+        alive: AtomicBool::new(true),
+        finished: AtomicBool::new(false),
+        announced: AtomicU64::new(0),
+        dropped: AtomicU64::new(0),
+        egress: AtomicU64::new(0),
+    });
+
+    // Register and snapshot the backlog in ONE hub section (a step
+    // published in between would reach neither the snapshot nor the
+    // registered peer), but seed the outbox OUTSIDE it: the ordered
+    // announce set plus the `primed` latch make enqueue interleaving
+    // harmless, and hub/outbox locks are never held together.
+    let (backlog, closed, live) = {
+        let mut st = hub.state.lock()?;
+        st.peers.push(Arc::clone(&sub));
+        st.ever_had_subscriber = true;
+        let live = st
+            .peers
+            .iter()
+            .filter(|p| p.alive.load(Ordering::Relaxed))
+            .count();
+        (
+            st.cache.keys().copied().collect::<Vec<u64>>(),
+            st.closed,
+            live,
+        )
+    };
+    SUBSCRIBERS.set(live as u64);
+    {
+        let mut out = sub.out.lock()?;
+        out.announces.extend(backlog);
+        out.closing = closed;
+        out.primed = true;
+    }
+    sub.out_cv.notify_all();
+    hub.hub_cv.notify_all();
+
+    let tx_handle = {
+        let sub = Arc::clone(&sub);
+        let hub = Arc::clone(hub);
+        let stop = Arc::clone(stop);
+        std::thread::Builder::new()
+            .name(format!("serve-tx-r{sub_rank}"))
+            .spawn(move || {
+                trace::set_thread_identity(sub.rank, "serve-tx");
+                serve_sender_loop(&sub, &hub, tx, &stop);
+            })?
+    };
+    let rx_handle = {
+        let sub = Arc::clone(&sub);
+        let hub = Arc::clone(hub);
+        let stop = Arc::clone(stop);
+        std::thread::Builder::new()
+            .name(format!("serve-rx-r{sub_rank}"))
+            .spawn(move || {
+                trace::set_thread_identity(sub.rank, "serve-rx");
+                let mut rx = rx;
+                serve_receiver_loop(&sub, &hub, rx.as_mut(), &stop);
+                let live = {
+                    let Some(st) = lock_or_warn(&hub.state) else {
+                        return;
+                    };
+                    st.peers
+                        .iter()
+                        .filter(|p| p.alive.load(Ordering::Relaxed))
+                        .count()
+                };
+                SUBSCRIBERS.set(live as u64);
+            })?
+    };
+    let mut t = serve_threads.lock()?;
+    t.push(tx_handle);
+    t.push(rx_handle);
+    Ok(())
+}
+
+/// What the sender thread decided to do next, computed under the
+/// outbox lock and executed after it is released.
+enum SenderWork {
+    Reply(Msg),
+    Announce(u64),
+    Close,
+    Idle,
+    Quit,
+}
+
+fn serve_sender_decide(sub: &Subscriber) -> SenderWork {
+    let Some(mut out) = lock_or_warn(&sub.out) else {
+        return SenderWork::Quit;
+    };
+    if let Some(m) = out.replies.pop_front() {
+        return SenderWork::Reply(m);
+    }
+    // One announce in flight at a time, in step order: the SST
+    // reader protocol finishes a step (`StepDone`) before the next
+    // announce matters, and the single pin keeps eviction exact.
+    if out.primed && sub.inflight.load(Ordering::Relaxed) == 0 {
+        if let Some(&s) = out.announces.iter().next() {
+            out.announces.remove(&s);
+            return SenderWork::Announce(s);
+        }
+        if out.closing {
+            return SenderWork::Close;
+        }
+    }
+    // Nothing to do: park briefly (bounded, so stop/death flags are
+    // rechecked even if a notify is missed).
+    match sub.out_cv.wait_timeout(out, Duration::from_millis(50)) {
+        Ok((guard, _)) => drop(guard),
+        Err(e) => {
+            crate::warn_log!("serve", "{e}; shutting down sender");
+            return SenderWork::Quit;
+        }
+    }
+    SenderWork::Idle
+}
+
+/// Owns the connection's tx half: drains the outbox, resolving each
+/// queued announce against the cache at send time. Every `send` runs
+/// with no lock held.
+fn serve_sender_loop(
+    sub: &Arc<Subscriber>,
+    hub: &Arc<Hub>,
+    mut tx: Box<dyn ConnTx>,
+    stop: &Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::Relaxed)
+        && sub.alive.load(Ordering::Relaxed)
+    {
+        match serve_sender_decide(sub) {
+            SenderWork::Reply(msg) => {
+                if tx.send(msg).is_err() {
+                    break;
+                }
+            }
+            SenderWork::Announce(step) => {
+                // Resolve against the cache and pin in the SAME hub
+                // section eviction scans under: the step is either
+                // already gone (this subscriber's drop — the per-peer
+                // generalization of the pipe's Discarded accounting)
+                // or safely pinned until StepDone.
+                let staged = {
+                    let Some(st) = lock_or_warn(&hub.state) else {
+                        break;
+                    };
+                    match st.cache.get(&step) {
+                        Some(s) => {
+                            sub.inflight
+                                .store(step + 1, Ordering::Relaxed);
+                            Some(Arc::clone(s))
+                        }
+                        None => None,
+                    }
+                };
+                match staged {
+                    Some(staged) => {
+                        let _sp = trace::span("serve.announce")
+                            .with("step", step)
+                            .with("subscriber", sub.rank);
+                        ANNOUNCES.inc();
+                        sub.announced.fetch_add(1, Ordering::Relaxed);
+                        if tx
+                            .send(Msg::StepAnnounce {
+                                step,
+                                meta: staged.meta.clone(),
+                            })
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    None => {
+                        SUB_DROPS.inc();
+                        sub.dropped.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            SenderWork::Close => {
+                let _ = tx.send(Msg::CloseStream);
+                sub.finished.store(true, Ordering::Relaxed);
+                hub.hub_cv.notify_all();
+                break;
+            }
+            SenderWork::Idle => {}
+            SenderWork::Quit => break,
+        }
+    }
+    sub.alive.store(false, Ordering::Relaxed);
+    hub.hub_cv.notify_all();
+    sub.out_cv.notify_all();
+}
+
+/// Owns the connection's rx half: answers `GetBatch` from the staged
+/// cache via [`serve_request`] (outside all locks) and turns
+/// `StepDone` into pin release + drain progress.
+fn serve_receiver_loop(
+    sub: &Arc<Subscriber>,
+    hub: &Arc<Hub>,
+    rx: &mut dyn ConnRx,
+    stop: &Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::Relaxed)
+        && sub.alive.load(Ordering::Relaxed)
+    {
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(Recv::Msg(Msg::GetBatch { req_id, step, items })) => {
+                let mut sp = trace::span("serve.batch")
+                    .with("step", step)
+                    .with("subscriber", sub.rank)
+                    .with("items", items.len());
+                let staged = {
+                    let Some(st) = lock_or_warn(&hub.state) else {
+                        break;
+                    };
+                    st.cache.get(&step).cloned()
+                };
+                let mut local_ops = OpsReport::default();
+                let mut served = 0u64;
+                let mut replies = Vec::with_capacity(items.len());
+                for item in &items {
+                    let reply = match &staged {
+                        Some(staged) => serve_request(
+                            staged,
+                            &item.var,
+                            &item.sel,
+                            &sub.codecs,
+                            &mut local_ops,
+                        ),
+                        None => Err(anyhow::anyhow!(
+                            "step {step} not cached (evicted?)"
+                        )),
+                    };
+                    match reply {
+                        Ok(r) => {
+                            served += match &r {
+                                GetReply::Data(d) => d.len() as u64,
+                                GetReply::Encoded(d) => {
+                                    d.len() as u64
+                                }
+                                GetReply::Error(_) => 0,
+                            };
+                            replies.push(r);
+                        }
+                        Err(e) => replies
+                            .push(GetReply::Error(format!("{e:#}"))),
+                    }
+                }
+                EGRESS_BATCHES.inc();
+                EGRESS_BYTES.add(served);
+                sp.set("bytes", served);
+                sub.egress.fetch_add(served, Ordering::Relaxed);
+                if !local_ops.is_empty() {
+                    let Some(mut st) = lock_or_warn(&hub.state)
+                    else {
+                        break;
+                    };
+                    st.ops.absorb(local_ops);
+                }
+                let Some(mut out) = lock_or_warn(&sub.out) else {
+                    break;
+                };
+                out.replies
+                    .push_back(Msg::GetBatchReply { req_id, items: replies });
+                drop(out);
+                sub.out_cv.notify_all();
+            }
+            Ok(Recv::Msg(Msg::StepDone { step })) => {
+                let _ = sub.inflight.compare_exchange(
+                    step + 1,
+                    0,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                );
+                sub.done.fetch_max(step + 1, Ordering::Relaxed);
+                hub.hub_cv.notify_all();
+                sub.out_cv.notify_all();
+            }
+            Ok(Recv::Msg(Msg::ReaderBye)) | Ok(Recv::Closed) => break,
+            Ok(Recv::TimedOut) => {}
+            Ok(Recv::Msg(other)) => {
+                crate::warn_log!(
+                    "serve",
+                    "unexpected message from subscriber {}: {other:?}",
+                    sub.rank
+                );
+            }
+            Err(e) => {
+                crate::warn_log!(
+                    "serve",
+                    "subscriber {} receive error: {e:#}",
+                    sub.rank
+                );
+                break;
+            }
+        }
+    }
+    sub.alive.store(false, Ordering::Relaxed);
+    hub.hub_cv.notify_all();
+    sub.out_cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::engine::VarDecl;
+    use crate::openpmd::chunk::Chunk;
+    use crate::openpmd::types::Datatype;
+
+    fn test_hub() -> Hub {
+        Hub {
+            state: OrderedMutex::new(
+                &classes::SERVE_HUB,
+                HubState::default(),
+            ),
+            hub_cv: OrderedCondvar::new(&classes::SERVE_HUB),
+        }
+    }
+
+    #[test]
+    fn lag_policy_parses_and_displays() {
+        assert_eq!(LagPolicy::parse("drop").unwrap(),
+                   LagPolicy::DropOldest);
+        assert_eq!(LagPolicy::parse("drop-oldest").unwrap(),
+                   LagPolicy::DropOldest);
+        assert_eq!(LagPolicy::parse("block").unwrap(),
+                   LagPolicy::Block);
+        assert!(LagPolicy::parse("nope").is_err());
+        assert_eq!(LagPolicy::DropOldest.to_string(), "drop");
+        assert_eq!(LagPolicy::Block.to_string(), "block");
+    }
+
+    /// DropOldest with no subscribers: the cache is a pure ring of
+    /// depth K; older steps are evicted and counted.
+    #[test]
+    fn publish_evicts_beyond_cache_depth() {
+        let hub = test_hub();
+        let opts = ServeOptions {
+            cache_steps: 2,
+            ..ServeOptions::default()
+        };
+        for step in 0..5u64 {
+            serve_publish_step(
+                &hub,
+                &opts,
+                step,
+                Arc::new(StagedStep::default()),
+            )
+            .unwrap();
+        }
+        let st = hub.state.lock().unwrap();
+        assert_eq!(st.steps_evicted, 3);
+        let kept: Vec<u64> = st.cache.keys().copied().collect();
+        assert_eq!(kept, vec![3, 4]);
+    }
+
+    /// Identity chains stage the payload Arc itself — no copy — and
+    /// stamp the announced encoded size.
+    #[test]
+    fn encode_step_is_zero_copy_for_identity_chains() {
+        let raw: Bytes = Arc::new(vec![1u8, 2, 3, 4]);
+        let decl = VarDecl::new("/data/x", Datatype::U8, vec![4]);
+        let payload = StepPayload {
+            step: 0,
+            attributes: vec![],
+            vars: vec![(
+                decl,
+                vec![(Chunk::whole(vec![4]), Arc::clone(&raw))],
+            )],
+            bytes: 4,
+            load_seconds: 0.0,
+        };
+        let (staged, report) =
+            serve_encode_step(&payload, 0, "h").unwrap();
+        assert_eq!(report.chunks_encoded, 0, "identity must not encode");
+        let data = staged.data.get("/data/x").unwrap();
+        assert!(Arc::ptr_eq(&data[0].1, &raw), "must stage the same Arc");
+        let vm = &staged.meta.vars[0];
+        assert_eq!(vm.chunks[0].encoded_bytes, Some(4));
+    }
+}

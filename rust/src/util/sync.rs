@@ -118,6 +118,22 @@ pub mod classes {
     /// SST writer service-thread join registry.
     pub static SST_SERVICE_THREADS: LockClass =
         LockClass { name: "sst-service-threads", rank: 50 };
+    /// `pipeline::serve` daemon service-thread join registry (accept
+    /// loop + per-subscriber sender/receiver pairs).
+    pub static SERVE_SERVICE_THREADS: LockClass =
+        LockClass { name: "serve-service-threads", rank: 52 };
+    /// `pipeline::serve` hub state: the shared step cache (last K
+    /// staged steps) + subscriber registry. Never held across a
+    /// blocking send — announces are queued into per-subscriber
+    /// outboxes and sent by the owning sender thread.
+    pub static SERVE_HUB: LockClass =
+        LockClass { name: "serve-hub", rank: 54 };
+    /// `pipeline::serve` per-subscriber outbox (queued announces +
+    /// batch replies). Disjoint from [`SERVE_HUB`] by construction:
+    /// hub and outbox are never held together, so fan-out adds no
+    /// lock-order edges.
+    pub static SERVE_SUBSCRIBER: LockClass =
+        LockClass { name: "serve-subscriber", rank: 56 };
     /// SST writer shared state (reader registry + staged steps).
     pub static SST_WRITER_SHARED: LockClass =
         LockClass { name: "sst-writer-shared", rank: 60 };

@@ -16,7 +16,7 @@
 use std::path::{Path, PathBuf};
 
 use openpmd_stream::adios::engine::{Engine, StepStatus};
-use openpmd_stream::adios::multiplex;
+use openpmd_stream::adios::spec::{ReaderSlot, SourceSpec};
 use openpmd_stream::openpmd::chunk::Chunk;
 use openpmd_stream::testing::fleet_conformance::{
     assert_reassembly_matches, compare_step_payloads,
@@ -127,7 +127,10 @@ fn mixed_backend_merge_pipes_as_one_series() {
         bp_half.display(),
         json_half.display()
     );
-    let mut input = multiplex::open_source(&spec, 0).unwrap();
+    let mut input = SourceSpec::parse(&spec)
+        .unwrap()
+        .open(ReaderSlot::solo())
+        .unwrap();
     let dst = tmp("merge-out.bp");
     let mut output = BpWriter::create(&dst, WriterCtx::default()).unwrap();
     let report = run_pipe(input.as_mut(), &mut output,

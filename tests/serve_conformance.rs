@@ -1,0 +1,239 @@
+//! Serve-daemon conformance: for any upstream, `produce → serve →
+//! pipe` must land byte-identical BP output to the direct
+//! `produce → pipe` — at every fan-out width (1/2/4 subscribers) and
+//! for a late joiner that connects mid-stream and replays the cache
+//! tail. This is the PR's acceptance bar for the fan-out mode: the
+//! daemon is a transparent step multiplier, never a transform.
+//!
+//! Everything resolves through the typed spec layer (`SourceSpec` /
+//! `SinkSpec`), exercising the same path the CLI's `serve` and `pipe`
+//! subcommands take.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use openpmd_stream::adios::engine::{cast, Engine, StepStatus, VarDecl};
+use openpmd_stream::adios::spec::{ReaderSlot, SinkSpec, SourceSpec};
+use openpmd_stream::adios::sst::{
+    QueueConfig, QueueFullPolicy, SstWriter, SstWriterOptions,
+};
+use openpmd_stream::openpmd::chunk::Chunk;
+use openpmd_stream::openpmd::types::Datatype;
+use openpmd_stream::openpmd::Attribute;
+use openpmd_stream::pipeline::pipe::{run, PipeOptions};
+use openpmd_stream::pipeline::serve::{
+    LagPolicy, ServeDaemon, ServeOptions,
+};
+use openpmd_stream::testing::fixtures;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("opmd-serveconf-{name}-{}", std::process::id()))
+}
+
+/// Pipe `input_spec` into a fresh BP file at `out` (via the typed
+/// spec layer, exactly like `cmd_pipe`) and return the file's bytes.
+fn pipe_to_bp(input_spec: &str, out: &PathBuf) -> Vec<u8> {
+    let mut input = SourceSpec::parse(input_spec)
+        .unwrap()
+        .open(ReaderSlot::solo())
+        .unwrap();
+    let mut output = SinkSpec::parse(out.to_str().unwrap())
+        .unwrap()
+        .open_writer(ReaderSlot::solo())
+        .unwrap();
+    run(input.as_mut(), output.as_mut(), PipeOptions::solo()).unwrap();
+    std::fs::read(out).unwrap()
+}
+
+fn wait_for_subscribers(daemon: &ServeDaemon, n: usize) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while daemon.subscribers() < n {
+        assert!(
+            Instant::now() < deadline,
+            "only {}/{n} subscribers registered in time",
+            daemon.subscribers()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn serve_opts(tag: &str, cache_steps: usize) -> ServeOptions {
+    ServeOptions {
+        listen: format!("serve-conf-{tag}-{}", std::process::id()),
+        transport: "inproc".into(),
+        cache_steps,
+        lag: LagPolicy::Block,
+        ..Default::default()
+    }
+}
+
+/// N subscribers join before the pump starts; each pipes the served
+/// stream to its own BP file. Every output must equal the direct
+/// pipe's, and the daemon must account one full announce per
+/// subscriber with zero drops (Block policy never sheds).
+fn fan_out_matches_direct(tag: &str, subs: usize) {
+    const STEPS: u64 = 5;
+    let src = tmp(&format!("{tag}-src.bp"));
+    fixtures::write_chunked_bp(&src, STEPS, 16, 4);
+    let base = tmp(&format!("{tag}-base.bp"));
+    let want = pipe_to_bp(src.to_str().unwrap(), &base);
+
+    let mut upstream = SourceSpec::parse(src.to_str().unwrap())
+        .unwrap()
+        .open(ReaderSlot::solo())
+        .unwrap();
+    let mut daemon = ServeDaemon::start(serve_opts(tag, 16)).unwrap();
+    let addr = daemon.address();
+
+    let mut joins = Vec::new();
+    for i in 0..subs {
+        let spec = format!("serve+{addr}");
+        let out = tmp(&format!("{tag}-sub{i}.bp"));
+        joins.push(std::thread::spawn(move || {
+            (out.clone(), pipe_to_bp(&spec, &out))
+        }));
+    }
+    wait_for_subscribers(&daemon, subs);
+
+    let report = daemon.pump(upstream.as_mut()).unwrap();
+    upstream.close().unwrap();
+    assert_eq!(report.steps_in, STEPS);
+    assert_eq!(report.subscribers.len(), subs);
+    for s in &report.subscribers {
+        assert_eq!(s.announced_steps, STEPS);
+        assert_eq!(s.dropped_steps, 0);
+    }
+
+    for j in joins {
+        let (out, got) = j.join().unwrap();
+        assert!(
+            got == want,
+            "{} diverged from the direct pipe's output",
+            out.display()
+        );
+    }
+}
+
+#[test]
+fn one_subscriber_matches_direct_pipe() {
+    fan_out_matches_direct("fan1", 1);
+}
+
+#[test]
+fn two_subscribers_match_direct_pipe() {
+    fan_out_matches_direct("fan2", 2);
+}
+
+#[test]
+fn four_subscribers_match_direct_pipe() {
+    fan_out_matches_direct("fan4", 4);
+}
+
+/// A deterministic SST producer that sleeps `pace` between steps, so
+/// a test can land a subscriber mid-stream. Identical data each call:
+/// two runs give byte-identical downstream BP output.
+fn paced_sst_producer(
+    tag: &str,
+    steps: u64,
+    pace: Duration,
+) -> (String, std::thread::JoinHandle<()>) {
+    let mut writer = SstWriter::open(SstWriterOptions {
+        listen: format!("serve-conf-{tag}-up-{}", std::process::id()),
+        transport: "inproc".into(),
+        rank: 0,
+        hostname: "producer".into(),
+        // Block (not the Discard default): shedding steps here would
+        // make the two legs diverge for reasons unrelated to serve.
+        queue: QueueConfig { policy: QueueFullPolicy::Block, limit: 4 },
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = writer.address();
+    let handle = std::thread::spawn(move || {
+        let var = VarDecl::new("/data/x", Datatype::F32, vec![32]);
+        for step in 0..steps {
+            assert_eq!(writer.begin_step().unwrap(), StepStatus::Ok);
+            writer
+                .put_attribute("/data/time", Attribute::F64(step as f64))
+                .unwrap();
+            let xs: Vec<f32> =
+                (0..32).map(|i| (step * 32 + i) as f32).collect();
+            writer
+                .put(&var, Chunk::whole(vec![32]), cast::f32_to_bytes(&xs))
+                .unwrap();
+            writer.end_step().unwrap();
+            std::thread::sleep(pace);
+        }
+        writer.close().unwrap();
+    });
+    (addr, handle)
+}
+
+/// A subscriber that joins mid-stream must replay the cache tail and
+/// still produce byte-identical output: with `LagPolicy::Block` and
+/// `cache_steps >= steps` the whole stream stays addressable, so
+/// lateness costs latency, never data.
+#[test]
+fn late_joiner_catches_up_from_the_cache_tail() {
+    const STEPS: u64 = 6;
+
+    // Direct leg: same producer, no pacing, straight through a pipe.
+    let (up_addr, producer) =
+        paced_sst_producer("late-base", STEPS, Duration::ZERO);
+    let base = tmp("late-base.bp");
+    let want = pipe_to_bp(&format!("sst+{up_addr}"), &base);
+    producer.join().unwrap();
+
+    // Served leg: paced producer so the pump outlives the joiner's
+    // delay, one early subscriber, one joining ~2-3 steps in.
+    let (up_addr, producer) = paced_sst_producer(
+        "late-serve",
+        STEPS,
+        Duration::from_millis(120),
+    );
+    let mut upstream = SourceSpec::parse(&format!("sst+{up_addr}"))
+        .unwrap()
+        .open(ReaderSlot::solo())
+        .unwrap();
+    let mut daemon =
+        ServeDaemon::start(serve_opts("late", STEPS as usize + 2))
+            .unwrap();
+    let addr = daemon.address();
+
+    let early_spec = format!("serve+{addr}");
+    let early_out = tmp("late-sub-early.bp");
+    let early_dst = early_out.clone();
+    let early =
+        std::thread::spawn(move || pipe_to_bp(&early_spec, &early_dst));
+    wait_for_subscribers(&daemon, 1);
+
+    let late_spec = format!("serve+{addr}");
+    let late_out = tmp("late-sub-late.bp");
+    let late_dst = late_out.clone();
+    let late = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(300));
+        pipe_to_bp(&late_spec, &late_dst)
+    });
+
+    let report = daemon.pump(upstream.as_mut()).unwrap();
+    upstream.close().unwrap();
+    producer.join().unwrap();
+
+    assert_eq!(report.steps_in, STEPS);
+    assert_eq!(report.subscribers.len(), 2);
+    for s in &report.subscribers {
+        assert_eq!(s.announced_steps, STEPS);
+        assert_eq!(s.dropped_steps, 0);
+    }
+    assert!(
+        early.join().unwrap() == want,
+        "{} diverged from the direct pipe's output",
+        early_out.display()
+    );
+    assert!(
+        late.join().unwrap() == want,
+        "{} diverged from the direct pipe's output",
+        late_out.display()
+    );
+}
