@@ -1,0 +1,141 @@
+//! Allocation-path micro-bench: A/B of the buffer pool on the BP read
+//! hot path (the reassembly-heavy shape the pool exists for).
+//!
+//! The workload is a chunked BP sweep — every step's whole-variable get
+//! takes the multi-record slow path: one zeroed assembly buffer plus
+//! one scratch fetch per chunk, with each payload handed back via
+//! `pool::reclaim_bytes` at end of step, exactly like the pipe's serial
+//! loop. Pooled and pool-bypassed rounds interleave (clock drift hits
+//! both equally) and each variant scores its minimum round.
+//!
+//! Emits `bench-results/BENCH_alloc.json`; the gated `pooled_speedup`
+//! metric (bypassed time / pooled time, higher is better) is diffed
+//! against `bench/baseline/BENCH_alloc.json` by the bench-compare CI
+//! step, which fails the job if pooling regresses to materially slower
+//! than plain allocation.
+
+use std::hint::black_box;
+use std::path::Path;
+use std::time::Instant;
+
+use openpmd_stream::adios::bp::BpReader;
+use openpmd_stream::adios::engine::{Engine, StepStatus};
+use openpmd_stream::bench::{smoke_mode, BenchJson};
+use openpmd_stream::obs::metrics::snapshot_metrics;
+use openpmd_stream::openpmd::chunk::Chunk;
+use openpmd_stream::testing::fixtures;
+use openpmd_stream::util::cli::Args;
+use openpmd_stream::util::pool;
+
+/// 64 Ki f32 elements = 256 KiB per step, split into 8 chunks of
+/// 32 KiB — big enough that allocator traffic is measurable, small
+/// enough for a smoke run.
+const EXTENT: u64 = 1 << 16;
+const CHUNKS: u64 = 8;
+
+/// One full-file sweep: per step, a whole-variable get (multi-chunk
+/// reassembly) whose payload is reclaimed at end of step. Returns
+/// (seconds, data-path allocations, steps).
+fn sweep(path: &Path) -> (f64, u64, u64) {
+    let mut r = BpReader::open(path).unwrap();
+    let t = Instant::now();
+    let mut steps = 0u64;
+    while r.begin_step().unwrap() == StepStatus::Ok {
+        let data = r
+            .get("/data/x", Chunk::whole(vec![EXTENT]))
+            .unwrap();
+        black_box(&data[..]);
+        pool::reclaim_bytes(data);
+        r.end_step().unwrap();
+        steps += 1;
+    }
+    let secs = t.elapsed().as_secs_f64();
+    let allocs = r.ops_report().allocations;
+    r.close().ok();
+    (secs, allocs, steps)
+}
+
+fn main() {
+    let args = Args::from_env(false).unwrap_or_default();
+    let smoke = smoke_mode(&args, "MICRO_ALLOC_SMOKE");
+    let (rounds, steps) = if smoke { (3, 8u64) } else { (7, 48u64) };
+
+    let dir = std::env::temp_dir().join("openpmd-stream-bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("micro-allocab-{}.bp", std::process::id()));
+    fixtures::write_chunked_bp(&path, steps, EXTENT, CHUNKS);
+
+    // Warm the shelves so the pooled variant measures steady state,
+    // not first-touch misses.
+    pool::set_pooling_enabled(true);
+    let _ = sweep(&path);
+
+    let before = snapshot_metrics();
+    let mut pooled_min = f64::INFINITY;
+    let mut bypass_min = f64::INFINITY;
+    let mut pooled_allocs = 0u64;
+    let mut bypass_allocs = 0u64;
+    for _ in 0..rounds {
+        pool::set_pooling_enabled(true);
+        let (secs, allocs, n) = sweep(&path);
+        assert_eq!(n, steps);
+        pooled_min = pooled_min.min(secs);
+        pooled_allocs = allocs;
+
+        pool::set_pooling_enabled(false);
+        let (secs, allocs, n) = sweep(&path);
+        assert_eq!(n, steps);
+        bypass_min = bypass_min.min(secs);
+        bypass_allocs = allocs;
+    }
+    pool::set_pooling_enabled(true);
+    let delta = snapshot_metrics().delta(&before);
+
+    let pooled_us = pooled_min * 1e6 / steps as f64;
+    let bypass_us = bypass_min * 1e6 / steps as f64;
+    let speedup = bypass_min / pooled_min;
+    let pooled_per_step = pooled_allocs as f64 / steps as f64;
+    let bypass_per_step = bypass_allocs as f64 / steps as f64;
+    let hits = delta.counter("pool.hits");
+    let misses = delta.counter("pool.misses");
+    let hit_ratio = if hits + misses > 0 {
+        hits as f64 / (hits + misses) as f64
+    } else {
+        0.0
+    };
+
+    println!(
+        "micro_alloc: pooled {pooled_us:.1} us/step \
+         ({pooled_per_step:.1} alloc/step), bypassed {bypass_us:.1} \
+         us/step ({bypass_per_step:.1} alloc/step), speedup \
+         {speedup:.3}x ({rounds} rounds x {steps} steps, \
+         min-of-rounds; {hits} pool hits / {misses} misses)"
+    );
+
+    // A warmed pool must serve the sweep without fresh allocations;
+    // the bypassed run allocates per chunk per step. This is the
+    // "O(1) steady-state allocations" contract, asserted where the
+    // numbers are produced.
+    assert_eq!(
+        pooled_allocs, 0,
+        "warmed pooled sweep still allocated {pooled_allocs} times"
+    );
+    assert!(
+        bypass_per_step >= CHUNKS as f64,
+        "bypassed sweep should allocate per chunk per step, got \
+         {bypass_per_step:.1}/step"
+    );
+
+    let mut bj = BenchJson::new("alloc");
+    bj.gauge("pooled_speedup", speedup, true);
+    bj.info("pooled_us_per_step", pooled_us);
+    bj.info("bypassed_us_per_step", bypass_us);
+    bj.info("pooled_allocs_per_step", pooled_per_step);
+    bj.info("bypassed_allocs_per_step", bypass_per_step);
+    bj.info("pool_hit_ratio", hit_ratio);
+    if let Ok(p) = bj.save() {
+        println!("bench json: {}", p.display());
+    }
+
+    std::fs::remove_file(&path).ok();
+}

@@ -24,61 +24,96 @@ fn main() {
 
     // Steady-state allocation audit (OpsReport.allocations): drive a
     // small BP write/read cycle and assert the data path's per-step
-    // allocation count stops changing after the first step — a growing
-    // per-step count would mean a buffer that should be reused (or a
-    // passthrough that should be zero-copy) regressed into a fresh
-    // allocation. Runs before the PJRT gate so it holds even where
-    // artifacts are absent.
+    // fresh-allocation count (a) stops changing after the first step
+    // and (b) is independent of how many chunks a step carries — the
+    // buffer pool's O(1) contract. A growing per-step count means a
+    // buffer that should recycle regressed into a fresh allocation; a
+    // chunk-count-dependent one means per-chunk scratch stopped going
+    // through the pool. Runs before the PJRT gate so it holds even
+    // where artifacts are absent.
     {
         use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
         use openpmd_stream::adios::engine::{cast, Engine, StepStatus,
                                             VarDecl};
         use openpmd_stream::openpmd::chunk::Chunk;
         use openpmd_stream::openpmd::types::Datatype;
+        use openpmd_stream::util::pool;
+
+        /// Write a `chunks`-chunk-per-step BP file, sweep it with
+        /// end-of-step payload reclaim (the pipe's discipline), assert
+        /// the per-step allocation deltas go steady after warmup, and
+        /// return the steady value.
+        fn steady_allocs(dir: &std::path::Path, chunks: u64) -> u64 {
+            let extent = 1024u64;
+            let steps = 6u64;
+            let per = extent / chunks;
+            let path = dir.join(format!("micro-alloc-{chunks}-{}.bp",
+                                        std::process::id()));
+            {
+                let mut w =
+                    BpWriter::create(&path, WriterCtx::default())
+                        .unwrap();
+                let var =
+                    VarDecl::new("/data/x", Datatype::F32, vec![extent]);
+                for _ in 0..steps {
+                    assert_eq!(w.begin_step().unwrap(), StepStatus::Ok);
+                    for c in 0..chunks {
+                        let off = c * per;
+                        let xs: Vec<f32> =
+                            (0..per).map(|i| (off + i) as f32).collect();
+                        w.put(&var, Chunk::new(vec![off], vec![per]),
+                              cast::f32_to_bytes(&xs))
+                            .unwrap();
+                    }
+                    w.end_step().unwrap();
+                }
+                w.close().unwrap();
+            }
+            let mut r = BpReader::open(&path).unwrap();
+            let mut per_step = Vec::new();
+            let mut last = 0u64;
+            while r.begin_step().unwrap() == StepStatus::Ok {
+                let data = r
+                    .get("/data/x", Chunk::new(vec![0], vec![extent]))
+                    .unwrap();
+                pool::reclaim_bytes(data);
+                r.end_step().unwrap();
+                let now = r.ops_report().allocations;
+                per_step.push(now - last);
+                last = now;
+            }
+            assert_eq!(per_step.len() as u64, steps);
+            let tail = &per_step[1..];
+            assert!(
+                tail.iter().all(|&d| d == tail[0]),
+                "per-step data-path allocations must be steady in \
+                 steady state (chunks={chunks}), got {per_step:?}"
+            );
+            std::fs::remove_file(&path).ok();
+            tail[0]
+        }
 
         let dir = std::env::temp_dir().join("openpmd-stream-bench");
         std::fs::create_dir_all(&dir).unwrap();
-        let path =
-            dir.join(format!("micro-alloc-{}.bp", std::process::id()));
-        let steps = 6u64;
-        {
-            let mut w =
-                BpWriter::create(&path, WriterCtx::default()).unwrap();
-            let var = VarDecl::new("/data/x", Datatype::F32, vec![1024]);
-            let xs: Vec<f32> = (0..1024).map(|i| i as f32).collect();
-            for _ in 0..steps {
-                assert_eq!(w.begin_step().unwrap(), StepStatus::Ok);
-                w.put(&var, Chunk::new(vec![0], vec![1024]),
-                      cast::f32_to_bytes(&xs))
-                    .unwrap();
-                w.end_step().unwrap();
-            }
-            w.close().unwrap();
+        let single = steady_allocs(&dir, 1);
+        let multi = steady_allocs(&dir, 4);
+        if pool::pooling_enabled() {
+            assert_eq!(
+                single, multi,
+                "steady-state allocations/step must be independent of \
+                 chunk count: 1 chunk -> {single}, 4 chunks -> {multi}"
+            );
+            println!(
+                "allocation audit: {single} allocation(s)/step, steady \
+                 and chunk-count independent"
+            );
+        } else {
+            println!(
+                "allocation audit: steady at {single} (1 chunk) / \
+                 {multi} (4 chunks) per step; pool disabled, \
+                 chunk-independence not asserted"
+            );
         }
-        let mut r = BpReader::open(&path).unwrap();
-        let mut per_step = Vec::new();
-        let mut last = 0u64;
-        while r.begin_step().unwrap() == StepStatus::Ok {
-            let _ = r.get("/data/x", Chunk::new(vec![0], vec![1024]))
-                .unwrap();
-            r.end_step().unwrap();
-            let now = r.ops_report().allocations;
-            per_step.push(now - last);
-            last = now;
-        }
-        assert_eq!(per_step.len() as u64, steps);
-        let tail = &per_step[1..];
-        assert!(
-            tail.iter().all(|&d| d == tail[0]),
-            "per-step data-path allocations must be steady in steady \
-             state, got {per_step:?}"
-        );
-        println!(
-            "allocation audit: {} allocation(s)/step, steady across \
-             {steps} steps",
-            tail[0]
-        );
-        std::fs::remove_file(&path).ok();
     }
 
     let rt = match Runtime::load_default() {

@@ -41,6 +41,7 @@ use crate::obs::metrics::{counter, Counter};
 use crate::obs::trace;
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
 use crate::openpmd::Attribute;
+use crate::util::pool;
 
 static BP_PUT_CHUNKS: Lazy<&'static Counter> =
     Lazy::new(|| counter("bp.put_chunks"));
@@ -733,8 +734,8 @@ impl BpReader {
         for (chunk, file_offset, len) in &records {
             if chunk == selection {
                 self.file.seek(SeekFrom::Start(*file_offset))?;
-                self.ops_stats.allocations += 1;
-                let mut data = Vec::with_capacity(*len as usize);
+                let mut data = pool::acquire_buf(*len as usize);
+                self.ops_stats.allocations += data.fresh() as u64;
                 let read = (&mut self.file)
                     .take(*len)
                     .read_to_end(&mut data)?;
@@ -742,31 +743,34 @@ impl BpReader {
                     bail!("short read for {var:?}");
                 }
                 if chain.is_identity() {
-                    return Ok(Arc::new(data));
+                    return Ok(Arc::new(data.detach()));
                 }
+                // `data` is scratch here: it recycles on drop, even
+                // when the decode errors out.
                 return ops::decode_get(&chain, dtype, chunk, &data,
                                        &mut self.ops_stats)
                     .map_err(|e| anyhow::anyhow!("{var}: {e}"));
             }
         }
 
-        self.ops_stats.allocations += 1;
-        let mut out = vec![0u8; selection.num_elements() as usize * elem];
+        let mut out =
+            pool::acquire_zeroed(selection.num_elements() as usize * elem);
+        self.ops_stats.allocations += out.fresh() as u64;
         let mut covered = 0u64;
         for (chunk, file_offset, len) in records {
             if chunk.intersect(selection).is_none() {
                 continue;
             }
             self.file.seek(SeekFrom::Start(file_offset))?;
-            self.ops_stats.allocations += 1;
-            let mut data = Vec::with_capacity(len as usize);
+            let mut data = pool::acquire_buf(len as usize);
+            self.ops_stats.allocations += data.fresh() as u64;
             let read =
                 (&mut self.file).take(len).read_to_end(&mut data)?;
             if read as u64 != len {
                 bail!("short read for {var:?}");
             }
             let raw: Bytes = if chain.is_identity() {
-                Arc::new(data)
+                Arc::new(data.detach())
             } else {
                 ops::decode_get(&chain, dtype, &chunk, &data,
                                 &mut self.ops_stats)
@@ -774,6 +778,9 @@ impl BpReader {
             };
             covered += region::copy_region(&chunk, &raw, selection,
                                            &mut out, elem);
+            // Record scratch is dead after the copy: send the buffer
+            // straight back to the pool for the next record.
+            pool::reclaim_bytes(raw);
         }
         if covered < selection.num_elements() {
             bail!(
@@ -782,7 +789,7 @@ impl BpReader {
                 selection.num_elements()
             );
         }
-        Ok(Arc::new(out))
+        Ok(Arc::new(out.detach()))
     }
 }
 

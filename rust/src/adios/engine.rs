@@ -443,10 +443,13 @@ impl PutQueue {
     {
         self.check_handle(var)?;
         let len = var.chunk_bytes(&chunk)?;
+        // Pool-recycled staging: the buffer's capacity comes back via
+        // reclaim once the downstream payload retires.
+        let staging = crate::util::pool::acquire_zeroed(len).detach();
         self.pending.push(PendingPut {
             var: var.clone(),
             chunk,
-            data: PutPayload::Owned(vec![0u8; len]),
+            data: PutPayload::Owned(staging),
         });
         match &mut self.pending.last_mut().unwrap().data {
             PutPayload::Owned(buf) => Ok(buf.as_mut_slice()),

@@ -382,6 +382,21 @@ pub fn encode_payload(
     ctx: &OpCtx,
     raw: &[u8],
 ) -> Result<Vec<u8>, OpsError> {
+    Ok(encode_framed(chain, ctx, raw)?.0)
+}
+
+/// [`encode_payload`] with allocation accounting: the frame buffer is
+/// checked out of [`util::pool`](crate::util::pool) and codec
+/// intermediates are recycled back into it. Returns the frame plus the
+/// number of fresh heap allocations performed (codec outputs + frame
+/// pool misses) — what `OpsReport.allocations` charges, so the metric
+/// goes flat once the pool warms on identity-free steady state.
+pub(crate) fn encode_framed(
+    chain: &OpChain,
+    ctx: &OpCtx,
+    raw: &[u8],
+) -> Result<(Vec<u8>, u64), OpsError> {
+    let mut fresh = 0u64;
     let mut cur: Option<Vec<u8>> = None;
     for spec in chain.specs() {
         let op = spec.operator();
@@ -389,17 +404,27 @@ pub fn encode_payload(
             Some(v) => op.apply(v, ctx)?,
             None => op.apply(raw, ctx)?,
         };
+        // Codecs allocate their own outputs; the retired predecessor's
+        // capacity goes back to the pool for the frame below.
+        fresh += 1;
+        if let Some(prev) = cur.take() {
+            crate::util::pool::recycle_vec(prev);
+        }
         cur = Some(next);
     }
-    let encoded = match cur {
+    let encoded: &[u8] = match &cur {
         Some(v) => v,
-        None => raw.to_vec(),
+        None => raw,
     };
-    let mut out = Vec::with_capacity(FRAME_HEAD + encoded.len());
+    let mut out = crate::util::pool::acquire_buf(FRAME_HEAD + encoded.len());
+    fresh += out.fresh() as u64;
     out.extend_from_slice(&(raw.len() as u64).to_le_bytes());
     out.extend_from_slice(&(encoded.len() as u64).to_le_bytes());
-    out.extend_from_slice(&encoded);
-    Ok(out)
+    out.extend_from_slice(encoded);
+    if let Some(last) = cur.take() {
+        crate::util::pool::recycle_vec(last);
+    }
+    Ok((out.detach(), fresh))
 }
 
 /// Validate an operator frame and reverse the chain. `expect_len` is
@@ -413,6 +438,17 @@ pub fn decode_payload(
     framed: &[u8],
     expect_len: usize,
 ) -> Result<Vec<u8>, OpsError> {
+    Ok(decode_framed(chain, ctx, framed, expect_len)?.0)
+}
+
+/// [`decode_payload`] with allocation accounting; see
+/// [`encode_framed`] for the counting convention.
+pub(crate) fn decode_framed(
+    chain: &OpChain,
+    ctx: &OpCtx,
+    framed: &[u8],
+    expect_len: usize,
+) -> Result<(Vec<u8>, u64), OpsError> {
     if framed.len() < FRAME_HEAD {
         return Err(OpsError::Corrupt(format!(
             "frame of {} bytes is shorter than its {FRAME_HEAD}-byte \
@@ -450,6 +486,7 @@ pub fn decode_payload(
         }
     }
     let cap = expect_len.saturating_mul(2) + 1024;
+    let mut fresh = 0u64;
     let mut cur: Option<Vec<u8>> = None;
     for (i, spec) in specs.iter().enumerate().rev() {
         let op = spec.operator();
@@ -457,19 +494,30 @@ pub fn decode_payload(
             Some(v) => op.reverse(v, ctx, known[i], cap)?,
             None => op.reverse(body, ctx, known[i], cap)?,
         };
+        fresh += 1;
+        if let Some(prev) = cur.take() {
+            crate::util::pool::recycle_vec(prev);
+        }
         cur = Some(next);
     }
     let out = match cur {
         Some(v) => v,
-        None => body.to_vec(),
+        None => {
+            let mut o = crate::util::pool::acquire_buf(body.len());
+            fresh += o.fresh() as u64;
+            o.extend_from_slice(body);
+            o.detach()
+        }
     };
     if out.len() != expect_len {
+        let got = out.len();
+        crate::util::pool::recycle_vec(out);
         return Err(OpsError::LengthMismatch {
             expected: expect_len,
-            got: out.len(),
+            got,
         });
     }
-    Ok(out)
+    Ok((out, fresh))
 }
 
 // ---------------------------------------------------------------------
@@ -564,12 +612,12 @@ pub fn encode_bytes(
     report: &mut OpsReport,
 ) -> Result<Bytes, OpsError> {
     let started = Instant::now();
-    let framed = encode_payload(chain, ctx, raw)?;
+    let (framed, allocs) = encode_framed(chain, ctx, raw)?;
     report.encode_ns += started.elapsed().as_nanos() as u64;
     report.chunks_encoded += 1;
     report.raw_bytes_in += raw.len() as u64;
     report.encoded_bytes_out += framed.len() as u64;
-    report.allocations += 1;
+    report.allocations += allocs;
     Ok(Arc::new(framed))
 }
 
@@ -584,12 +632,12 @@ pub fn decode_bytes(
     report: &mut OpsReport,
 ) -> Result<Bytes, OpsError> {
     let started = Instant::now();
-    let raw = decode_payload(chain, ctx, framed, expect_len)?;
+    let (raw, allocs) = decode_framed(chain, ctx, framed, expect_len)?;
     report.decode_ns += started.elapsed().as_nanos() as u64;
     report.chunks_decoded += 1;
     report.encoded_bytes_in += framed.len() as u64;
     report.raw_bytes_out += raw.len() as u64;
-    report.allocations += 1;
+    report.allocations += allocs;
     Ok(Arc::new(raw))
 }
 

@@ -94,10 +94,12 @@ pub fn extract(
 ) -> Vec<u8> {
     assert!(src_chunk.contains(selection),
             "extract: {selection:?} not contained in {src_chunk:?}");
-    let mut out = vec![0u8; selection.num_elements() as usize * elem];
+    let mut out = crate::util::pool::acquire_zeroed(
+        selection.num_elements() as usize * elem,
+    );
     let copied = copy_region(src_chunk, src, selection, &mut out, elem);
     debug_assert_eq!(copied, selection.num_elements());
-    out
+    out.detach()
 }
 
 #[cfg(test)]

@@ -26,7 +26,9 @@ use crate::adios::wire::{GetItem, GetReply, Msg, StepMeta};
 use crate::obs::metrics::{counter, Counter};
 use crate::obs::trace;
 use crate::openpmd::chunk::{Chunk, WrittenChunkInfo};
+use crate::openpmd::types::Datatype;
 use crate::openpmd::Attribute;
+use crate::util::pool;
 
 use super::SstStats;
 
@@ -96,9 +98,65 @@ pub struct SstReader {
     gets: GetQueue,
     /// Decode-side operator accounting.
     ops_stats: OpsReport,
+    /// Reusable `perform_batch` plan scratch, cleared between batches.
+    plan: PlanScratch,
     /// Steps skipped during announce reconciliation (writers discarded
     /// non-collectively).
     pub steps_skipped: u64,
+}
+
+/// One merged per-variable chunk table in the batch plan.
+struct PlanVar {
+    name: String,
+    elem: usize,
+    dtype: Datatype,
+    ops: OpChain,
+    chunks: Vec<WrittenChunkInfo>,
+}
+
+/// Reusable plan scratch: `perform_batch` used to rebuild a
+/// `BTreeMap<String, VarTable>` — fresh `String` keys, chain clones and
+/// chunk-table vectors — on every batch. These slots persist on the
+/// reader with their capacity intact and are cleared between batches,
+/// so a steady-state batch's merge phase stops allocating once a batch
+/// has seen the step's variable set. Lookups are a linear scan: a batch
+/// references a handful of variables, far below BTreeMap break-even.
+#[derive(Default)]
+struct PlanScratch {
+    vars: Vec<PlanVar>,
+    /// Slots in use this batch; `vars[live..]` is retained capacity.
+    live: usize,
+}
+
+impl PlanScratch {
+    fn reset(&mut self) {
+        self.live = 0;
+    }
+
+    fn find(&self, name: &str) -> Option<usize> {
+        self.vars[..self.live].iter().position(|v| v.name == name)
+    }
+
+    /// Claim a cleared slot for `name`, reusing a retired slot's
+    /// allocations when one exists.
+    fn open_slot(&mut self, name: &str) -> &mut PlanVar {
+        if self.live == self.vars.len() {
+            self.vars.push(PlanVar {
+                name: String::new(),
+                elem: 0,
+                dtype: Datatype::U8,
+                ops: OpChain::default(),
+                chunks: Vec::new(),
+            });
+        }
+        let live = self.live;
+        self.live += 1;
+        let slot = &mut self.vars[live];
+        slot.name.clear();
+        slot.name.push_str(name);
+        slot.chunks.clear();
+        slot
+    }
 }
 
 impl SstReader {
@@ -142,6 +200,7 @@ impl SstReader {
             next_req_id: 1,
             gets: GetQueue::default(),
             ops_stats: OpsReport::default(),
+            plan: PlanScratch::default(),
             steps_skipped: 0,
         })
     }
@@ -481,13 +540,9 @@ impl SstReader {
         // instead of once per deferred get: a fleet worker batches one
         // slice set per variable per step, and with N writers x many
         // slices the repeated metadata sweep was the plan-phase cost.
-        struct VarTable {
-            elem: usize,
-            dtype: crate::openpmd::types::Datatype,
-            ops: OpChain,
-            chunks: Vec<WrittenChunkInfo>,
-        }
-        let mut vars: BTreeMap<String, VarTable> = BTreeMap::new();
+        // The merge writes into `self.plan`, reusable scratch that
+        // keeps its allocations across batches.
+        self.plan.reset();
         let step;
         {
             let cur = self.current.as_ref().ok_or_else(|| {
@@ -495,29 +550,30 @@ impl SstReader {
             })?;
             step = cur.step;
             for g in pending {
-                if vars.contains_key(&g.var) {
+                if self.plan.find(&g.var).is_some() {
                     continue;
                 }
-                let mut found: Option<VarTable> = None;
+                let mut claimed = false;
                 for meta in &cur.metas {
                     for v in &meta.vars {
                         if v.name != g.var {
                             continue;
                         }
-                        let t = found.get_or_insert_with(|| VarTable {
-                            elem: v.dtype.size(),
-                            dtype: v.dtype,
-                            ops: v.ops.clone(),
-                            chunks: Vec::new(),
-                        });
-                        t.chunks.extend(v.chunks.iter().cloned());
+                        if !claimed {
+                            claimed = true;
+                            let slot = self.plan.open_slot(&g.var);
+                            slot.elem = v.dtype.size();
+                            slot.dtype = v.dtype;
+                            slot.ops.clone_from(&v.ops);
+                        }
+                        let li = self.plan.live - 1;
+                        self.plan.vars[li]
+                            .chunks
+                            .extend(v.chunks.iter().cloned());
                     }
                 }
-                match found {
-                    Some(t) => {
-                        vars.insert(g.var.clone(), t);
-                    }
-                    None => bail!("unknown variable {:?}", g.var),
+                if !claimed {
+                    bail!("unknown variable {:?}", g.var);
                 }
             }
         }
@@ -529,13 +585,14 @@ impl SstReader {
             sel: Chunk,
         }
         let mut per_writer: BTreeMap<usize, Vec<Part>> = BTreeMap::new();
-        let mut elem = Vec::with_capacity(pending.len());
-        let mut coding = Vec::with_capacity(pending.len());
+        let mut vt_idx = Vec::with_capacity(pending.len());
         let mut part_count = vec![0usize; pending.len()];
         for (gi, g) in pending.iter().enumerate() {
-            let vt = &vars[&g.var];
-            elem.push(vt.elem);
-            coding.push((vt.dtype, vt.ops.clone()));
+            let vi = self.plan.find(&g.var).ok_or_else(|| {
+                anyhow::anyhow!("unknown variable {:?}", g.var)
+            })?;
+            vt_idx.push(vi);
+            let vt = &self.plan.vars[vi];
             let mut covered = 0u64;
             for info in &vt.chunks {
                 if let Some(inter) = info.chunk.intersect(&g.selection) {
@@ -593,7 +650,7 @@ impl SstReader {
         // part IS its selection passes the writer's Arc through
         // untouched (zero-copy on inproc).
         let mut passthrough: Vec<Option<Bytes>> = vec![None; pending.len()];
-        let mut buffers: Vec<Option<Vec<u8>>> = Vec::new();
+        let mut buffers: Vec<Option<pool::PooledBuf>> = Vec::new();
         buffers.resize_with(pending.len(), || None);
         let mut batch_bytes = 0u64;
         let mut reassembly_allocs = 0u64;
@@ -622,13 +679,17 @@ impl SstReader {
                         // selection needs.
                         self.stats.bytes_got += d.len() as u64;
                         batch_bytes += d.len() as u64;
-                        let (dtype, chain) = &coding[part.get_idx];
-                        ops::decode_get(chain, *dtype, &part.sel, &d,
-                                        &mut self.ops_stats)
+                        let pv = &self.plan.vars[vt_idx[part.get_idx]];
+                        let raw = ops::decode_get(&pv.ops, pv.dtype,
+                                                  &part.sel, &d,
+                                                  &mut self.ops_stats)
                             .map_err(|e| anyhow::anyhow!(
                                 "writer {}: {e}",
                                 self.writers[widx].writer_rank
-                            ))?
+                            ))?;
+                        // The framed wire buffer is dead once decoded.
+                        pool::reclaim_bytes(d);
+                        raw
                     }
                     GetReply::Error(e) => bail!(
                         "writer {} failed request: {e}",
@@ -642,26 +703,32 @@ impl SstReader {
                     passthrough[part.get_idx] = Some(data);
                     continue;
                 }
-                let buf = buffers[part.get_idx].get_or_insert_with(|| {
-                    reassembly_allocs += 1;
-                    vec![
-                        0u8;
-                        g.selection.num_elements() as usize
-                            * elem[part.get_idx]
-                    ]
-                });
-                let copied = region::copy_region(
-                    &part.sel, &data, &g.selection, buf,
-                    elem[part.get_idx],
-                );
-                debug_assert_eq!(copied, part.sel.num_elements());
+                let elem = self.plan.vars[vt_idx[part.get_idx]].elem;
+                if buffers[part.get_idx].is_none() {
+                    let b = pool::acquire_zeroed(
+                        g.selection.num_elements() as usize * elem,
+                    );
+                    reassembly_allocs += b.fresh() as u64;
+                    buffers[part.get_idx] = Some(b);
+                }
+                if let Some(buf) = buffers[part.get_idx].as_mut() {
+                    let copied = region::copy_region(
+                        &part.sel, &data, &g.selection, buf, elem,
+                    );
+                    debug_assert_eq!(copied, part.sel.num_elements());
+                }
+                // The part's wire payload is dead after the copy.
+                pool::reclaim_bytes(data);
             }
         }
 
         for (gi, g) in pending.iter().enumerate() {
             let data = match passthrough[gi].take() {
                 Some(d) => d,
-                None => Arc::new(buffers[gi].take().unwrap_or_default()),
+                None => match buffers[gi].take() {
+                    Some(b) => Arc::new(b.detach()),
+                    None => Arc::new(Vec::new()),
+                },
             };
             self.gets.complete(g.handle, data);
         }

@@ -19,6 +19,7 @@ use once_cell::sync::Lazy;
 
 use crate::obs::metrics::{counter, Counter};
 use crate::obs::trace;
+use crate::util::pool;
 use crate::util::sync::{
     classes, OrderedCondvar, OrderedGuard, OrderedMutex,
 };
@@ -530,7 +531,9 @@ pub(crate) fn serve_request(
                 return Ok(GetReply::Data(data.clone()));
             }
         }
-        let mut out = vec![0u8; sel.num_elements() as usize * elem];
+        let mut out =
+            pool::acquire_zeroed(sel.num_elements() as usize * elem);
+        ops_stats.allocations += out.fresh() as u64;
         let mut covered = 0u64;
         for (chunk, data) in chunks {
             covered +=
@@ -545,7 +548,7 @@ pub(crate) fn serve_request(
                 sel.num_elements()
             );
         }
-        return Ok(GetReply::Data(Arc::new(out)));
+        return Ok(GetReply::Data(Arc::new(out.detach())));
     }
 
     let peer_ok = vm.ops.supported_by(peer_codecs);
@@ -558,7 +561,9 @@ pub(crate) fn serve_request(
         }
     }
     // Assemble the selection raw from decoded chunks.
-    let mut out = vec![0u8; sel.num_elements() as usize * elem];
+    let mut out =
+        pool::acquire_zeroed(sel.num_elements() as usize * elem);
+    ops_stats.allocations += out.fresh() as u64;
     let mut covered = 0u64;
     for (chunk, data) in chunks {
         if chunk.intersect(sel).is_none() {
@@ -568,6 +573,8 @@ pub(crate) fn serve_request(
                                   ops_stats)
             .map_err(|e| anyhow::anyhow!("{var}: {e}"))?;
         covered += region::copy_region(chunk, &raw, sel, &mut out, elem);
+        // Decode scratch is chunk-local: recycle it for the next one.
+        pool::reclaim_bytes(raw);
     }
     if covered < sel.num_elements() {
         bail!(
@@ -586,7 +593,7 @@ pub(crate) fn serve_request(
             )?;
         Ok(GetReply::Encoded(framed))
     } else {
-        Ok(GetReply::Data(Arc::new(out)))
+        Ok(GetReply::Data(Arc::new(out.detach())))
     }
 }
 

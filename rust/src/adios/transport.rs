@@ -26,6 +26,7 @@ use once_cell::sync::Lazy;
 
 use super::wire::{decode_msg, encode_msg, GetReply, Msg};
 use crate::obs::metrics::{counter, Counter};
+use crate::util::pool;
 use crate::util::sync::{classes, OrderedMutex};
 
 // Frame counters are observation-only: the wire layout is untouched.
@@ -346,7 +347,9 @@ fn tcp_write_frame(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
         // otherwise emit a tiny segment per 9-byte item header); only
         // large payloads are streamed directly from their Arc.
         const STREAM_THRESHOLD: usize = 64 << 10;
-        let mut coalesced = Vec::with_capacity(256);
+        // Pool-recycled scratch: the coalescing buffer returns its
+        // capacity when this frame is flushed (drop at return).
+        let mut coalesced = pool::acquire_buf(256);
         coalesced.extend_from_slice(&body_len.to_le_bytes());
         coalesced.push(5); // GetBatchReply tag
         coalesced.extend_from_slice(&req_id.to_le_bytes());
@@ -389,6 +392,7 @@ fn tcp_write_frame(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
     stream.write_all(&body)?;
     FRAMES_SENT.inc();
     WIRE_BYTES_SENT.add(8 + body.len() as u64);
+    pool::recycle_vec(body);
     Ok(())
 }
 
@@ -453,13 +457,16 @@ fn tcp_read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Recv> {
                 bail!("batch reply overruns its frame");
             }
             if flag == 1 || flag == 2 {
-                let mut data = Vec::with_capacity(item_len);
+                // Recycled payload buffer; on the short-read and error
+                // returns below it goes back to the pool on drop.
+                let mut data = pool::acquire_buf(item_len);
                 let read = (&mut *stream)
                     .take(item_len as u64)
                     .read_to_end(&mut data)?;
                 if read != item_len {
                     return Ok(Recv::Closed);
                 }
+                let data = data.detach();
                 items.push(if flag == 1 {
                     GetReply::Data(Arc::new(data))
                 } else {

@@ -300,7 +300,10 @@ impl StepMeta {
 
 /// Encode a message body (without the outer length frame).
 pub fn encode_msg(msg: &Msg) -> Vec<u8> {
-    let mut out = Vec::with_capacity(64);
+    // Pool-backed scratch: TCP senders recycle the returned frame
+    // after the write, so steady-state control traffic allocates
+    // nothing. The wire layout is unchanged.
+    let mut out = crate::util::pool::acquire_buf(64).detach();
     out.push(msg.tag());
     match msg {
         Msg::Hello { reader_rank, hostname, codecs } => {

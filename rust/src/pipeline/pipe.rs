@@ -362,6 +362,19 @@ impl StepPayload {
     }
 }
 
+/// Return a retired payload's chunk buffers to `util::pool` — the
+/// step's end of life in the serial loop, the staged store side, and
+/// serve's cache eviction. A chunk still shared with a downstream
+/// holder (SST staging, serve cache, a subscriber) is skipped by the
+/// reclaim's refcount check and reclaimed by whoever drops it last.
+pub(crate) fn reclaim_payload(payload: StepPayload) {
+    for (_, chunks) in payload.vars {
+        for (_, data) in chunks {
+            crate::util::pool::reclaim_bytes(data);
+        }
+    }
+}
+
 /// Outcome of probing the input for its next step (no data movement).
 pub(crate) enum StepAvailability {
     /// A step is open on the input; follow with [`load_open_step`].
@@ -687,6 +700,7 @@ pub(crate) fn run_pipe_with_plan(
         account_load(&mut report, &payload, opts.rank);
         let seconds = store_into_open_step(output, &payload)?;
         account_store(&mut report, &payload, seconds, opts.rank);
+        reclaim_payload(payload);
         if let Some(e) = &emitter {
             e.emit_step_line(report.steps);
         }

@@ -55,6 +55,7 @@ use crate::adios::wire::{GetReply, Msg, VarMeta};
 use crate::obs::metrics::{counter, gauge, Counter, Gauge};
 use crate::obs::trace;
 use crate::openpmd::chunk::WrittenChunkInfo;
+use crate::util::pool;
 use crate::util::sync::{
     classes, OrderedCondvar, OrderedGuard, OrderedMutex,
 };
@@ -664,6 +665,10 @@ fn serve_publish_step(
     step: u64,
     staged: Arc<StagedStep>,
 ) -> Result<()> {
+    // Evictees are only collected under the hub lock; their buffers go
+    // back to the pool after the guard drops so no hub -> buf-pool lock
+    // edge ever exists.
+    let mut evicted: Vec<Arc<StagedStep>> = Vec::new();
     let peers: Vec<Arc<Subscriber>> = {
         let mut st = hub.state.lock()?;
         st.cache.insert(step, staged);
@@ -672,7 +677,9 @@ fn serve_publish_step(
                 break;
             };
             st = serve_wait_evictable(hub, st, opts, oldest)?;
-            st.cache.remove(&oldest);
+            if let Some(ss) = st.cache.remove(&oldest) {
+                evicted.push(ss);
+            }
             st.steps_evicted += 1;
         }
         st.peers
@@ -681,6 +688,20 @@ fn serve_publish_step(
             .cloned()
             .collect()
     };
+    for ss in evicted {
+        // An eviction is the step's end of life on the serve side. If
+        // no subscriber still holds a pinned reference, the chunk
+        // payloads are uniquely ours and recycle through the buffer
+        // pool; otherwise `try_unwrap` declines and the last reader
+        // frees them normally.
+        if let Ok(ss) = Arc::try_unwrap(ss) {
+            for (_, chunks) in ss.data {
+                for (_, bytes) in chunks {
+                    pool::reclaim_bytes(bytes);
+                }
+            }
+        }
+    }
     for p in &peers {
         let mut out = p.out.lock()?;
         out.announces.insert(step);

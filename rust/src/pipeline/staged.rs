@@ -70,8 +70,9 @@ use crate::obs::metrics::{counter, gauge, Counter, Gauge};
 use crate::obs::trace;
 
 use super::pipe::{
-    fetch_step, forward_payload, Fetched, LocalPlan, MetricsEmitter,
-    PipeOptions, PipeReport, StepPayload, StepPlan, StepPoller,
+    fetch_step, forward_payload, reclaim_payload, Fetched, LocalPlan,
+    MetricsEmitter, PipeOptions, PipeReport, StepPayload, StepPlan,
+    StepPoller,
 };
 
 // Read-ahead queue accounting: depth is the difference of two
@@ -310,6 +311,11 @@ fn store_loop(
         QUEUE_DEPTH
             .set(ENQUEUED.get().saturating_sub(DEQUEUED.get()));
         forward_payload(output, &payload, report, rank)?;
+        // The store side is this payload's end of life: hand every
+        // uniquely-owned chunk back to the buffer pool so steady-state
+        // staged runs stop allocating (chunks the output still shares
+        // are skipped by the refcount check inside).
+        reclaim_payload(payload);
         if let Some(e) = emitter {
             e.emit_step_line(report.steps);
         }

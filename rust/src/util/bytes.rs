@@ -112,6 +112,12 @@ fn b64_value(c: u8) -> Result<u32, String> {
 }
 
 /// Decode standard padded base64.
+///
+/// The output length is computed exactly from the input length and the
+/// trailing padding, so the whole decode is a single buffer-pool
+/// checkout with zero growth reallocations — these payloads sit on the
+/// JSON engine's get path, where the old `len / 4 * 3` upper bound
+/// wasted a fresh allocation per chunk.
 pub fn b64_decode(s: &str) -> Result<Vec<u8>, String> {
     let bytes = s.as_bytes();
     if bytes.len() % 4 != 0 {
@@ -119,7 +125,17 @@ pub fn b64_decode(s: &str) -> Result<Vec<u8>, String> {
             "base64 length {} is not a multiple of 4", bytes.len()
         ));
     }
-    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    if bytes.is_empty() {
+        return Ok(Vec::new());
+    }
+    let pad = bytes
+        .iter()
+        .rev()
+        .take_while(|&&c| c == b'=')
+        .take(2)
+        .count();
+    let exact_len = bytes.len() / 4 * 3 - pad;
+    let mut out = crate::util::pool::acquire_buf(exact_len);
     for (gi, group) in bytes.chunks_exact(4).enumerate() {
         let last = gi == bytes.len() / 4 - 1;
         let pad = group.iter().rev().take_while(|&&c| c == b'=').count();
@@ -139,7 +155,8 @@ pub fn b64_decode(s: &str) -> Result<Vec<u8>, String> {
             out.push(n as u8);
         }
     }
-    Ok(out)
+    debug_assert_eq!(out.len(), exact_len);
+    Ok(out.detach())
 }
 
 #[cfg(test)]

@@ -6,6 +6,7 @@ pub mod bytes;
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod sync;

@@ -1,0 +1,509 @@
+//! Reusable buffer pool for the streaming hot path.
+//!
+//! Every hop in the pipeline — wire decode, operator encode/decode,
+//! BP fetch, SST reassembly, serve staging — needs a scratch or output
+//! `Vec<u8>` per chunk per step. Allocating those fresh each time makes
+//! the allocator the steady-state bottleneck once the data path outruns
+//! the filesystem. This module keeps a bounded, size-classed stash of
+//! retired buffers and hands them back out, so a warmed-up pipe step
+//! performs O(1) heap allocations regardless of chunk count.
+//!
+//! Design constraints, in order:
+//!
+//! - **Dependency-free and unwind-safe.** Capacity returns to the pool
+//!   via [`PooledBuf`]'s `Drop`, so early returns, `?` propagation and
+//!   panics all shelve the buffer instead of leaking pool budget.
+//! - **Lock-graph leaf.** The shelves live behind one [`OrderedMutex`]
+//!   under the dedicated `BUF_POOL` class. Nothing is ever called while
+//!   that guard is held — counters are lock-free atomics bumped after
+//!   the guard drops — so the pool adds zero lock-order edges.
+//! - **Bounded.** Retained bytes never exceed the budget
+//!   (`OPMD_POOL_BUDGET`, default 256 MiB); over-budget returns are
+//!   simply freed and counted as `pool.trimmed_bytes`.
+//! - **Bypassable.** `set_pooling_enabled(false)` (or
+//!   `OPMD_POOL_DISABLE=1`) turns every acquire into a plain allocation
+//!   and every return into a plain free, for A/B benchmarking
+//!   (`benches/micro_alloc.rs`) and byte-identity conformance tests.
+//!
+//! Observability: `pool.hits`, `pool.misses`, `pool.recycled_bytes`,
+//! `pool.trimmed_bytes` counters and the `pool.retained_bytes` gauge,
+//! all registered in [`obs::metrics`](crate::obs::metrics).
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use once_cell::sync::Lazy;
+
+use crate::obs::metrics::{counter, gauge, Counter, Gauge};
+use crate::util::sync::{classes, OrderedMutex};
+
+/// Smallest size class: buffers below this round up to 1 KiB.
+const MIN_SHIFT: u32 = 10;
+/// Largest size class: 64 MiB. Bigger requests are served exact-sized
+/// and never retained (one stray huge buffer would evict everything).
+const MAX_SHIFT: u32 = 26;
+/// Number of power-of-two size classes (1 KiB ..= 64 MiB inclusive).
+const NUM_CLASSES: usize = (MAX_SHIFT - MIN_SHIFT + 1) as usize;
+
+/// Default retained-bytes budget when `OPMD_POOL_BUDGET` is unset.
+const DEFAULT_BUDGET: usize = 256 << 20;
+
+static POOL_HITS: Lazy<&'static Counter> =
+    Lazy::new(|| counter("pool.hits"));
+static POOL_MISSES: Lazy<&'static Counter> =
+    Lazy::new(|| counter("pool.misses"));
+static POOL_RECYCLED: Lazy<&'static Counter> =
+    Lazy::new(|| counter("pool.recycled_bytes"));
+static POOL_TRIMMED: Lazy<&'static Counter> =
+    Lazy::new(|| counter("pool.trimmed_bytes"));
+static POOL_RETAINED: Lazy<&'static Gauge> =
+    Lazy::new(|| gauge("pool.retained_bytes"));
+
+/// Size-classed free lists. Each entry stores the buffer alongside its
+/// capacity at shelving time so the guard scope never needs to call
+/// `Vec::capacity` — the critical section is pop/push + arithmetic
+/// only, with no method calls that could grow the lock graph.
+struct Shelves {
+    classes: [Vec<(usize, Vec<u8>)>; NUM_CLASSES],
+    retained: usize,
+}
+
+fn empty_shelves() -> Shelves {
+    Shelves {
+        classes: std::array::from_fn(|_| Vec::new()),
+        retained: 0,
+    }
+}
+
+/// A thread-safe, size-classed pool of reusable `Vec<u8>` buffers with
+/// a bounded retained-bytes budget. One process-wide instance lives
+/// behind the module-level free functions ([`acquire_buf`],
+/// [`recycle_vec`], …); tests construct standalone pools with tight
+/// budgets. The enable switch is per-instance, so a standalone test
+/// pool can be toggled without perturbing the global one.
+pub struct BufferPool {
+    shelves: OrderedMutex<Shelves>,
+    budget: usize,
+    enabled: AtomicBool,
+}
+
+/// Map a requested minimum capacity to its size-class index, or `None`
+/// when the request exceeds the largest retained class.
+fn class_index(min: usize) -> Option<usize> {
+    if min > (1usize << MAX_SHIFT) {
+        return None;
+    }
+    let needed = min.max(1).next_power_of_two();
+    let shift = needed.trailing_zeros().max(MIN_SHIFT);
+    Some((shift - MIN_SHIFT) as usize)
+}
+
+/// Capacity (bytes) of size class `ci`.
+fn class_bytes(ci: usize) -> usize {
+    1usize << (ci as u32 + MIN_SHIFT)
+}
+
+impl BufferPool {
+    /// A pool that will retain at most `budget` bytes of free capacity.
+    pub fn new(budget: usize) -> Self {
+        BufferPool {
+            shelves: OrderedMutex::new(&classes::BUF_POOL, empty_shelves()),
+            budget,
+            enabled: AtomicBool::new(true),
+        }
+    }
+
+    fn from_env() -> Self {
+        let budget = std::env::var("OPMD_POOL_BUDGET")
+            .ok()
+            .and_then(|s| crate::util::bytes::parse_bytes(&s).ok())
+            .map(|b| b as usize)
+            .unwrap_or(DEFAULT_BUDGET);
+        let pool = BufferPool::new(budget);
+        if std::env::var("OPMD_POOL_DISABLE").is_ok_and(|v| v != "0") {
+            pool.enabled.store(false, Ordering::Relaxed);
+        }
+        pool
+    }
+
+    /// Flip this pool's enable switch. Disabled means checkout = plain
+    /// allocation and stash = plain free; already-shelved capacity
+    /// stays until [`purge`](BufferPool::purge)d.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether this pool currently recycles.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Check out an empty buffer with at least `min` bytes of capacity.
+    /// Pool hit when a shelved buffer of the right class exists; a miss
+    /// allocates fresh at the full class size so capacities stay
+    /// uniform across recycles.
+    ///
+    /// Note: the returned handle recycles into the **process-wide**
+    /// pool on drop. Standalone pools (tests) see capacity come back
+    /// only through explicit [`detach`](PooledBuf::detach) +
+    /// [`stash_vec`](BufferPool::stash_vec).
+    pub fn checkout(&self, min: usize) -> PooledBuf {
+        if !self.enabled() {
+            return PooledBuf {
+                buf: Vec::with_capacity(min),
+                recycle: false,
+                fresh: true,
+            };
+        }
+        let Some(ci) = class_index(min) else {
+            // Oversize: exact allocation, never shelved.
+            POOL_MISSES.inc();
+            return PooledBuf {
+                buf: Vec::with_capacity(min),
+                recycle: false,
+                fresh: true,
+            };
+        };
+        let mut popped: Option<Vec<u8>> = None;
+        let mut retained = None;
+        if let Ok(mut sh) = self.shelves.lock() {
+            if let Some((cap, v)) = sh.classes[ci].pop() {
+                sh.retained -= cap;
+                popped = Some(v);
+            }
+            retained = Some(sh.retained);
+        }
+        // Guard is dead: counters and allocation happen lock-free.
+        if let Some(r) = retained {
+            POOL_RETAINED.set(r as u64);
+        }
+        match popped {
+            Some(buf) => {
+                POOL_HITS.inc();
+                PooledBuf { buf, recycle: true, fresh: false }
+            }
+            None => {
+                POOL_MISSES.inc();
+                PooledBuf {
+                    buf: Vec::with_capacity(class_bytes(ci)),
+                    recycle: true,
+                    fresh: true,
+                }
+            }
+        }
+    }
+
+    /// Check out a buffer of exactly `len` zeroed bytes — the pooled
+    /// equivalent of `vec![0u8; len]`, for region-assembly scratch
+    /// where uncovered holes must read as zero.
+    pub fn checkout_zeroed(&self, len: usize) -> PooledBuf {
+        let mut b = self.checkout(len);
+        b.buf.clear();
+        b.buf.resize(len, 0);
+        b
+    }
+
+    /// Return a retired buffer's capacity to the pool. Contents are
+    /// cleared; capacity beyond the budget (or outside the retained
+    /// size classes) is freed and counted as trimmed.
+    pub fn stash_vec(&self, mut v: Vec<u8>) {
+        let cap = v.capacity();
+        if cap == 0 {
+            return;
+        }
+        if !self.enabled() {
+            return; // dropped: plain free
+        }
+        v.clear();
+        // Shelve under the largest class the capacity fully covers, so
+        // a future hit always honours its class's capacity promise.
+        let ci = match class_index(cap) {
+            Some(ci) if cap >= class_bytes(ci) => Some(ci),
+            Some(ci) if ci > 0 => Some(ci - 1),
+            _ => None,
+        };
+        let mut kept = false;
+        let mut retained = None;
+        if let Some(ci) = ci {
+            if let Ok(mut sh) = self.shelves.lock() {
+                if sh.retained + cap <= self.budget {
+                    sh.classes[ci].push((cap, v));
+                    sh.retained += cap;
+                    kept = true;
+                }
+                retained = Some(sh.retained);
+            }
+        }
+        // Guard is dead. A buffer that wasn't shelved (over budget,
+        // poisoned lock, or no covering class) frees here, lock-free.
+        if let Some(r) = retained {
+            POOL_RETAINED.set(r as u64);
+        }
+        if kept {
+            POOL_RECYCLED.add(cap as u64);
+        } else {
+            POOL_TRIMMED.add(cap as u64);
+        }
+    }
+
+    /// Free capacity currently shelved, in bytes.
+    pub fn retained_bytes(&self) -> usize {
+        match self.shelves.lock() {
+            Ok(sh) => sh.retained,
+            Err(_) => 0,
+        }
+    }
+
+    /// The retained-bytes ceiling this pool was built with.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Drop every shelved buffer (tests; also lets a bench phase start
+    /// cold). The freed buffers deallocate outside the guard.
+    pub fn purge(&self) {
+        let mut freed = empty_shelves();
+        if let Ok(mut sh) = self.shelves.lock() {
+            std::mem::swap(&mut *sh, &mut freed);
+        }
+        drop(freed);
+        POOL_RETAINED.set(0);
+    }
+}
+
+/// The process-wide pool all hot-path call sites share.
+static GLOBAL: Lazy<BufferPool> = Lazy::new(BufferPool::from_env);
+
+/// RAII handle to a checked-out buffer. Derefs to `Vec<u8>`; on drop
+/// the capacity returns to the process-wide pool — including when the
+/// drop happens on an error-return or panic-unwind path — unless
+/// [`detach`](PooledBuf::detach)ed first.
+pub struct PooledBuf {
+    buf: Vec<u8>,
+    recycle: bool,
+    fresh: bool,
+}
+
+impl PooledBuf {
+    /// Whether this checkout had to allocate (pool miss). Hot-path
+    /// callers charge `OpsReport.allocations` with this, so the metric
+    /// counts real heap allocations and goes flat once the pool warms.
+    pub fn fresh(&self) -> bool {
+        self.fresh
+    }
+
+    /// Surrender the buffer to the caller. The capacity leaves the
+    /// pool's custody — typically to become a long-lived payload
+    /// (`Arc<Vec<u8>>`) that [`reclaim_bytes`] returns later, at the
+    /// payload's end of life.
+    pub fn detach(mut self) -> Vec<u8> {
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl Deref for PooledBuf {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if self.recycle && self.buf.capacity() > 0 {
+            GLOBAL.stash_vec(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+/// Check out an empty buffer (≥ `min` capacity) from the global pool.
+pub fn acquire_buf(min: usize) -> PooledBuf {
+    GLOBAL.checkout(min)
+}
+
+/// Check out `len` zeroed bytes from the global pool.
+pub fn acquire_zeroed(len: usize) -> PooledBuf {
+    GLOBAL.checkout_zeroed(len)
+}
+
+/// Return a plain `Vec`'s capacity to the global pool (for buffers
+/// that were detached, or never pool-managed in the first place).
+pub fn recycle_vec(v: Vec<u8>) {
+    GLOBAL.stash_vec(v);
+}
+
+/// Try to reclaim a payload's buffer at its end of life. Succeeds only
+/// when this is the last `Arc` reference — a still-staged or
+/// still-cached payload is left alone.
+pub fn reclaim_bytes(b: Arc<Vec<u8>>) {
+    if let Ok(v) = Arc::try_unwrap(b) {
+        GLOBAL.stash_vec(v);
+    }
+}
+
+/// Flip the process-wide pooling switch (A/B benchmarking and
+/// conformance tests).
+pub fn set_pooling_enabled(on: bool) {
+    GLOBAL.set_enabled(on);
+}
+
+/// Whether the process-wide pool currently recycles.
+pub fn pooling_enabled() -> bool {
+    GLOBAL.enabled()
+}
+
+/// Free capacity currently shelved in the global pool.
+pub fn retained_bytes() -> usize {
+    GLOBAL.retained_bytes()
+}
+
+/// The global pool's retained-bytes ceiling.
+pub fn pool_budget() -> usize {
+    GLOBAL.budget_bytes()
+}
+
+/// Drop everything shelved in the global pool.
+pub fn purge() {
+    GLOBAL.purge()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_rounding_covers_requests() {
+        assert_eq!(class_index(0), Some(0));
+        assert_eq!(class_index(1), Some(0));
+        assert_eq!(class_index(1024), Some(0));
+        assert_eq!(class_index(1025), Some(1));
+        assert_eq!(class_index(64 << 20), Some(NUM_CLASSES - 1));
+        assert_eq!(class_index((64 << 20) + 1), None);
+        for min in [1usize, 512, 4096, 70_000, 1 << 20] {
+            let ci = class_index(min).unwrap();
+            assert!(class_bytes(ci) >= min, "class too small for {min}");
+        }
+    }
+
+    #[test]
+    fn capacity_recycles_through_the_pool() {
+        let pool = BufferPool::new(1 << 20);
+        let mut a = pool.checkout(4096);
+        assert!(a.fresh());
+        assert!(a.capacity() >= 4096);
+        a.extend_from_slice(&[7u8; 100]);
+        let v = a.detach();
+        pool.stash_vec(v);
+        let b = pool.checkout(4096);
+        assert!(!b.fresh(), "second checkout should hit the shelf");
+        assert!(b.is_empty(), "recycled buffer must come back cleared");
+        assert!(b.capacity() >= 4096);
+    }
+
+    #[test]
+    fn zeroed_checkout_is_actually_zero() {
+        let pool = BufferPool::new(1 << 20);
+        // Dirty a buffer, return it, and make sure the zeroed path
+        // scrubs the recycled contents.
+        let mut v = Vec::with_capacity(2048);
+        v.extend_from_slice(&[0xAAu8; 2048]);
+        pool.stash_vec(v);
+        let z = pool.checkout_zeroed(2048);
+        assert_eq!(z.len(), 2048);
+        assert!(z.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn budget_bounds_retained_bytes() {
+        let budget = 8 << 10; // two 4 KiB buffers
+        let pool = BufferPool::new(budget);
+        for _ in 0..10 {
+            pool.stash_vec(Vec::with_capacity(4096));
+        }
+        assert_eq!(pool.retained_bytes(), 8 << 10);
+        assert!(pool.retained_bytes() <= pool.budget_bytes());
+    }
+
+    #[test]
+    fn oversize_and_undersize_are_never_retained() {
+        let pool = BufferPool::new(usize::MAX >> 1);
+        // Above the largest class: freed, not shelved.
+        pool.stash_vec(Vec::with_capacity((64 << 20) + 4096));
+        // Below the smallest class: can't honour class 0's promise.
+        pool.stash_vec(Vec::with_capacity(16));
+        assert_eq!(pool.retained_bytes(), 0);
+        // Oversize checkout is exact-sized and marked non-recycling.
+        let big = pool.checkout((64 << 20) + 1);
+        assert!(big.fresh());
+        assert!(!big.recycle);
+    }
+
+    #[test]
+    fn detach_surrenders_capacity() {
+        let pool = BufferPool::new(1 << 20);
+        let mut a = pool.checkout(1024);
+        a.extend_from_slice(b"payload");
+        let v = a.detach();
+        assert_eq!(&v[..], b"payload");
+        // Nothing was shelved by the detach itself.
+        assert_eq!(pool.retained_bytes(), 0);
+    }
+
+    #[test]
+    fn disabled_pool_is_a_plain_allocator() {
+        let pool = BufferPool::new(1 << 20);
+        pool.set_enabled(false);
+        let a = pool.checkout(4096);
+        assert!(a.fresh());
+        pool.stash_vec(Vec::with_capacity(4096));
+        assert_eq!(pool.retained_bytes(), 0);
+        pool.set_enabled(true);
+        drop(a);
+    }
+
+    #[test]
+    fn purge_empties_the_shelves() {
+        let pool = BufferPool::new(1 << 20);
+        pool.stash_vec(Vec::with_capacity(4096));
+        assert!(pool.retained_bytes() > 0);
+        pool.purge();
+        assert_eq!(pool.retained_bytes(), 0);
+        assert!(pool.checkout(4096).fresh());
+    }
+
+    #[test]
+    fn reclaim_skips_shared_payloads() {
+        let shared: Arc<Vec<u8>> = Arc::new(vec![1u8; 2048]);
+        let clone = Arc::clone(&shared);
+        reclaim_bytes(shared); // refcount 2: must not touch it
+        assert_eq!(clone.len(), 2048);
+    }
+
+    #[test]
+    fn concurrent_checkout_stash_smoke() {
+        let pool = Arc::new(BufferPool::new(4 << 20));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let p = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200usize {
+                    let mut b = p.checkout(1024 + (i % 7) * 512);
+                    b.push((t + i) as u8);
+                    let v = b.detach();
+                    p.stash_vec(v);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(pool.retained_bytes() <= pool.budget_bytes());
+    }
+}

@@ -142,6 +142,15 @@ pub mod classes {
     /// `serve_reader` sends under the registration lock.
     pub static SST_PEER_TX: LockClass =
         LockClass { name: "sst-peer-tx", rank: 70 };
+    /// `util::pool` buffer-pool shelves. A leaf in the lock graph: pool
+    /// code never acquires any other class while holding it (counters
+    /// are lock-free atomics updated after the guard drops), and its
+    /// rank sits above every data-path class so a buffer can be
+    /// checked out or shelved while any engine/transport lock is held.
+    /// Only [`OBS`] ranks higher, keeping first-use counter interning
+    /// legal even from inside pool callers.
+    pub static BUF_POOL: LockClass =
+        LockClass { name: "buf-pool", rank: 75 };
     /// `obs` trace-collector state (thread-buffer directory and the
     /// per-thread event buffers). Deliberately the HIGHEST rank in the
     /// registry: instrumentation records from inside any subsystem, so

@@ -1,0 +1,243 @@
+//! Buffer-pool conformance: pooling is a pure allocator optimization.
+//! Enabling it cannot change a single output byte on any backend, and
+//! error/unwind paths must hand buffers back instead of leaking pool
+//! budget.
+//!
+//! The pooling switch is process-global, so the whole on/off lifecycle
+//! lives in ONE `#[test]` (the `tests/obs_conformance.rs` pattern):
+//! splitting it across test fns would race under the parallel harness.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use openpmd_stream::adios::bp::{BpReader, BpWriter, WriterCtx};
+use openpmd_stream::adios::engine::{cast, Engine, StepStatus, VarDecl};
+use openpmd_stream::adios::json::JsonWriter;
+use openpmd_stream::adios::ops::OpChain;
+use openpmd_stream::adios::sst::{
+    QueueConfig, QueueFullPolicy, SstReader, SstReaderOptions, SstWriter,
+    SstWriterOptions,
+};
+use openpmd_stream::openpmd::chunk::Chunk;
+use openpmd_stream::openpmd::types::Datatype;
+use openpmd_stream::pipeline::pipe::{run, PipeOptions};
+use openpmd_stream::testing::engines::InjectedEngine;
+use openpmd_stream::testing::fixtures;
+use openpmd_stream::util::pool;
+
+const EXTENT: u64 = 16;
+const CHUNKS: u64 = 4;
+const STEPS: u64 = 4;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("opmd-pool-{name}-{}", std::process::id()))
+}
+
+fn pipe_bp(src: &PathBuf, dst: &PathBuf) {
+    let mut input = BpReader::open(src).unwrap();
+    let mut output = BpWriter::create(dst, WriterCtx {
+        rank: 0,
+        hostname: "pool".into(),
+    })
+    .unwrap();
+    run(&mut input, &mut output, PipeOptions::solo()).unwrap();
+}
+
+fn pipe_json(src: &PathBuf, dst: &PathBuf) {
+    let mut input = BpReader::open(src).unwrap();
+    let mut output = JsonWriter::create(dst, 0, "pool").unwrap();
+    run(&mut input, &mut output, PipeOptions::solo()).unwrap();
+}
+
+/// Read every file of a flat directory (the JSON engine's
+/// `step-N.json` layout) for byte-level comparison.
+fn dir_bytes(dir: &PathBuf) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let entry = entry.unwrap();
+        out.insert(
+            entry.file_name().to_string_lossy().into_owned(),
+            std::fs::read(entry.path()).unwrap(),
+        );
+    }
+    out
+}
+
+/// SST writer -> reader roundtrip over `transport` with an operator
+/// chain (so codec encode/decode scratch is exercised); returns every
+/// byte the reader got, in step order.
+fn sst_roundtrip(transport: &str, tag: &str) -> Vec<u8> {
+    let chain = OpChain::parse("shuffle|rle").unwrap();
+    let mut writer = SstWriter::open(SstWriterOptions {
+        listen: if transport == "inproc" {
+            format!("pool-{tag}-{transport}-{}", std::process::id())
+        } else {
+            String::new()
+        },
+        transport: transport.into(),
+        rank: 0,
+        hostname: "pool".into(),
+        queue: QueueConfig { policy: QueueFullPolicy::Block, limit: 8 },
+        ..Default::default()
+    })
+    .unwrap();
+    let decl = VarDecl::new("/data/x", Datatype::F32, vec![EXTENT])
+        .with_ops(chain);
+    let h = writer.define_variable(&decl).unwrap();
+    let per_chunk = EXTENT / CHUNKS;
+    for s in 0..2u64 {
+        assert_eq!(writer.begin_step().unwrap(), StepStatus::Ok);
+        for c in 0..CHUNKS {
+            let off = c * per_chunk;
+            let xs: Vec<f32> = (0..per_chunk)
+                .map(|i| (s * 100 + off + i) as f32)
+                .collect();
+            writer
+                .put_deferred(&h,
+                              Chunk::new(vec![off], vec![per_chunk]),
+                              cast::f32_to_bytes(&xs))
+                .unwrap();
+        }
+        writer.end_step().unwrap();
+    }
+    let addr = writer.address();
+    let mut reader = SstReader::open(SstReaderOptions {
+        writers: vec![addr],
+        transport: transport.into(),
+        rank: 0,
+        hostname: "pool".into(),
+        begin_step_timeout: Duration::from_secs(30),
+        codecs: None,
+    })
+    .unwrap();
+    let close_thread = std::thread::spawn(move || writer.close());
+    let mut out = Vec::new();
+    loop {
+        match reader.begin_step().unwrap() {
+            StepStatus::Ok => {
+                let whole = reader
+                    .get("/data/x", Chunk::whole(vec![EXTENT]))
+                    .unwrap();
+                out.extend_from_slice(&whole);
+                reader.end_step().unwrap();
+            }
+            StepStatus::NotReady => {
+                std::thread::sleep(Duration::from_millis(2))
+            }
+            StepStatus::EndOfStream => break,
+            other => panic!("unexpected step status {other:?}"),
+        }
+    }
+    reader.close().unwrap();
+    close_thread.join().unwrap().unwrap();
+    out
+}
+
+#[test]
+fn pooling_is_invisible_in_output_and_bounded_under_errors() {
+    let src = tmp("src.bp");
+    fixtures::write_chunked_bp(&src, STEPS, EXTENT, CHUNKS);
+
+    // ----------------------------------------------------------------
+    // 1. Byte identity, all four backends: a pooled run and a
+    //    pool-bypassed run of the same input produce identical bytes.
+    // ----------------------------------------------------------------
+    assert!(pool::pooling_enabled(), "pool must default to on");
+
+    let bp_on = tmp("bp-on.bp");
+    let bp_off = tmp("bp-off.bp");
+    let json_on = tmp("json-on");
+    let json_off = tmp("json-off");
+    std::fs::remove_dir_all(&json_on).ok();
+    std::fs::remove_dir_all(&json_off).ok();
+
+    pipe_bp(&src, &bp_on);
+    pipe_json(&src, &json_on);
+    let sst_inproc_on = sst_roundtrip("inproc", "on");
+    let sst_tcp_on = sst_roundtrip("tcp", "on");
+
+    pool::set_pooling_enabled(false);
+    pipe_bp(&src, &bp_off);
+    pipe_json(&src, &json_off);
+    let sst_inproc_off = sst_roundtrip("inproc", "off");
+    let sst_tcp_off = sst_roundtrip("tcp", "off");
+    pool::set_pooling_enabled(true);
+
+    assert_eq!(std::fs::read(&bp_on).unwrap(),
+               std::fs::read(&bp_off).unwrap(),
+               "pooling changed BP output bytes");
+    assert_eq!(dir_bytes(&json_on), dir_bytes(&json_off),
+               "pooling changed JSON output bytes");
+    assert_eq!(sst_inproc_on, sst_inproc_off,
+               "pooling changed SST/inproc roundtrip bytes");
+    assert_eq!(sst_tcp_on, sst_tcp_off,
+               "pooling changed SST/tcp roundtrip bytes");
+    // And the streamed bytes match the fixture formula regardless.
+    let xs = cast::bytes_to_f32(&sst_inproc_on).unwrap();
+    assert_eq!(xs.len(), 2 * EXTENT as usize);
+    for (g, &x) in xs.iter().enumerate() {
+        let (s, i) = (g as u64 / EXTENT, g as u64 % EXTENT);
+        assert_eq!(x, (s * 100 + i) as f32);
+    }
+
+    // ----------------------------------------------------------------
+    // 2. Error paths do not leak pool budget.
+    //
+    // 2a. perform_gets failure: a BP file whose final payload is
+    //     truncated passes begin_step (the index seeks past EOF) and
+    //     then fails the actual payload read — after the fetch scratch
+    //     was already checked out. The RAII handle must shelve it.
+    // ----------------------------------------------------------------
+    let trunc = tmp("trunc.bp");
+    let whole = std::fs::read(&src).unwrap();
+    std::fs::write(&trunc, &whole[..whole.len() - 9]).unwrap();
+    for _ in 0..20 {
+        let mut r = BpReader::open(&trunc).unwrap();
+        let mut saw_error = false;
+        loop {
+            match r.begin_step() {
+                Ok(StepStatus::Ok) => {
+                    match r.get("/data/x", Chunk::whole(vec![EXTENT])) {
+                        Ok(_) => r.end_step().unwrap(),
+                        Err(_) => {
+                            saw_error = true;
+                            break;
+                        }
+                    }
+                }
+                _ => break,
+            }
+        }
+        assert!(saw_error, "truncated BP read should fail a get");
+        assert!(pool::retained_bytes() <= pool::pool_budget(),
+                "retained bytes exceeded budget on the error path");
+    }
+
+    // 2b. Store-side failure mid-pipe (InjectedEngine): the pipe run
+    //     unwinds with payload buffers in flight; repeated failing runs
+    //     must keep retained bytes bounded, not ratchet upward.
+    for i in 0..10 {
+        let dst = tmp(&format!("fail-{i}.bp"));
+        let mut input = BpReader::open(&src).unwrap();
+        let inner = BpWriter::create(&dst, WriterCtx {
+            rank: 0,
+            hostname: "pool".into(),
+        })
+        .unwrap();
+        let mut output = InjectedEngine::failing(inner, 1);
+        let err = run(&mut input, &mut output, PipeOptions::solo());
+        assert!(err.is_err(), "injected store fault must surface");
+        assert!(pool::retained_bytes() <= pool::pool_budget(),
+                "retained bytes exceeded budget under injected faults");
+        std::fs::remove_file(&dst).ok();
+    }
+
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&trunc).ok();
+    std::fs::remove_file(&bp_on).ok();
+    std::fs::remove_file(&bp_off).ok();
+    std::fs::remove_dir_all(&json_on).ok();
+    std::fs::remove_dir_all(&json_off).ok();
+}
